@@ -1,0 +1,148 @@
+//! End-to-end driver (DESIGN.md: the full-system validation example).
+//!
+//! ```text
+//! cargo run --release --example bus_traffic
+//! ```
+//!
+//! Exercises **every layer** of the stack on one realistic workload and
+//! reports the paper's headline metrics:
+//!
+//! 1. generates a Dublin-style bus trace and archives it to CSV
+//!    (datasets + replay),
+//! 2. parses Q4 from the text DSL (query front-end),
+//! 3. runs the ground truth + calibration + overloaded phases through
+//!    the operator, overload detector and pSPICE shedder (L3),
+//! 4. builds the utility model through the **AOT HLO artifacts on the
+//!    PJRT runtime** (L2/L1) — this is the rust⇄XLA boundary —
+//!    falling back to the rust engine only if artifacts are missing,
+//! 5. cross-checks the PJRT-built utility tables against the pure-rust
+//!    oracle, and
+//! 6. prints the paper-style summary: FN% vs baselines, latency-bound
+//!    compliance, shedding overhead, and model-build cost.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::{csv, BusGen, DatasetKind};
+use pspice::events::EventStream;
+use pspice::harness::run_experiment;
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::Operator;
+use pspice::query::parse_query;
+use pspice::runtime::FallbackEngine;
+use pspice::shedding::ShedderKind;
+
+fn main() -> pspice::Result<()> {
+    pspice::util::logger::init();
+    println!("=== pSPICE end-to-end driver: Dublin bus traffic (Q4) ===\n");
+
+    // 1. data layer: generate + archive + replay
+    let mut gen = BusGen::with_seed(99);
+    let events = gen.take_events(20_000);
+    let path = std::env::temp_dir().join("pspice_bus_trace.csv");
+    csv::write_csv(&path, &events)?;
+    let replay = csv::read_csv(&path)?;
+    assert_eq!(events, replay);
+    println!(
+        "[1] trace: {} events archived to {} and replayed byte-identically",
+        events.len(),
+        path.display()
+    );
+
+    // 2. query front-end: Q4 from the text DSL
+    let schema = pspice::query::builtin::schema_for("q4");
+    let q = parse_query(
+        "query q4_dsl {
+           window count 2000
+           open every 250
+           any 4 of bus where delayed == 1 && stop == key(0) bind key(0) = stop
+             distinct bus
+         }",
+        &schema,
+    )?;
+    println!(
+        "[2] DSL query {:?}: {} Markov states, window {:?}",
+        q.name,
+        q.state_count(),
+        q.window
+    );
+
+    // 3.+4. the full pipeline under 140% overload
+    let cfg = ExperimentConfig {
+        query: "q4".into(),
+        window: 2_000,
+        pattern_n: 4,
+        slide: 250,
+        dataset: DatasetKind::Bus,
+        seed: 99,
+        warmup: 50_000,
+        events: 50_000,
+        rate: 1.4,
+        lb_ms: 0.5,
+        shedder: ShedderKind::PSpice,
+        weights: Vec::new(),
+        cost_factors: Vec::new(),
+        retrain_every: 0,
+        drift_threshold: 0.01,
+    };
+    let pspice = run_experiment(&cfg)?;
+    let pm_bl = run_experiment(&ExperimentConfig {
+        shedder: ShedderKind::PmBaseline,
+        ..cfg.clone()
+    })?;
+    let e_bl = run_experiment(&ExperimentConfig {
+        shedder: ShedderKind::EventBaseline,
+        ..cfg.clone()
+    })?;
+    println!(
+        "[3] overloaded run (140%): capacity={:.0} ns/event, ground truth={} CEs, \
+         match probability={:.1}%",
+        pspice.capacity_ns,
+        pspice.truth_total,
+        pspice.match_probability * 100.0
+    );
+    println!("[4] model engine on the request path: {}", pspice.engine);
+
+    // 5. differential check: PJRT/auto engine vs pure-rust oracle
+    let mut op = Operator::new(pspice::query::builtin::q4(4, 2_000, 250).queries);
+    let mut g2 = BusGen::with_seed(99);
+    for _ in 0..30_000 {
+        op.process_event(&g2.next_event().unwrap());
+    }
+    let mut auto = ModelBuilder::with_auto_engine(ModelConfig::default());
+    let mut fall = ModelBuilder::new(ModelConfig::default(), Box::new(FallbackEngine));
+    let ta = auto.build(&op)?;
+    let tf = fall.build(&op)?;
+    let mut max_diff = 0.0f64;
+    for (a, f) in ta[0].rows.iter().zip(&tf[0].rows) {
+        for (x, y) in a.iter().zip(f) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+    }
+    println!(
+        "[5] utility tables: {} vs rust oracle, max |Δ| = {max_diff:.2e}",
+        auto.engine_name()
+    );
+    assert!(max_diff < 1e-3, "engines disagree");
+
+    // 6. headline table
+    println!("\n=== headline (paper shape: pSPICE < PM-BL, low overhead) ===");
+    println!(
+        "{:<8} {:>7} {:>5} {:>12} {:>12} {:>10}",
+        "shedder", "fn%", "fp", "max_lat_ms", "violations%", "overhead%"
+    );
+    for r in [&pspice, &pm_bl, &e_bl] {
+        println!(
+            "{:<8} {:>6.2}% {:>5} {:>12.3} {:>11.2}% {:>9.3}%",
+            r.shedder,
+            r.fn_percent,
+            r.false_positives,
+            r.latency.stats.max() / 1e6,
+            r.latency.violation_rate() * 100.0,
+            r.shed_overhead * 100.0
+        );
+    }
+    println!(
+        "\nmodel build: {:.4}s via {} (paper Fig. 9b scale: seconds)",
+        pspice.model_build_secs, pspice.engine
+    );
+    Ok(())
+}

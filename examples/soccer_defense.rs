@@ -1,0 +1,67 @@
+//! Soccer defense analytics (the paper's Q3 scenario, DEBS'13-style
+//! RTLS data).
+//!
+//! ```text
+//! cargo run --release --example soccer_defense
+//! ```
+//!
+//! Q3 detects `seq(STR; any(n, DF…))`: a striker takes possession and
+//! `n` distinct opposing players close in within a 1.5 s time window.
+//! The example sweeps the pattern size `n` (which controls the match
+//! probability, exactly like the paper's Fig. 5c sweep) and compares
+//! pSPICE against both baselines at 120% overload.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_experiment;
+use pspice::shedding::ShedderKind;
+
+fn main() -> pspice::Result<()> {
+    pspice::util::logger::init();
+    println!("soccer defense monitor (Q3), 120% overload, LB=0.5ms\n");
+    println!(
+        "{:>3} | {:>7} | {:>16} | {:>16} | {:>16}",
+        "n", "match_p", "pspice fn%", "pm-bl fn%", "e-bl fn%"
+    );
+    for n in [6, 4, 3, 2] {
+        let mut line = format!("{n:>3} | ");
+        let mut mp = 0.0;
+        for (i, shedder) in [
+            ShedderKind::PSpice,
+            ShedderKind::PmBaseline,
+            ShedderKind::EventBaseline,
+        ]
+        .iter()
+        .enumerate()
+        {
+            let cfg = ExperimentConfig {
+                query: "q3".into(),
+                window: 1_500, // ms
+                pattern_n: n,
+                slide: 500,
+                dataset: DatasetKind::Soccer,
+                seed: 23,
+                warmup: 60_000,
+                events: 60_000,
+                rate: 1.2,
+                lb_ms: 0.5,
+                shedder: *shedder,
+                weights: Vec::new(),
+                cost_factors: Vec::new(),
+            retrain_every: 0,
+            drift_threshold: 0.01,
+            };
+            let r = run_experiment(&cfg)?;
+            mp = r.match_probability;
+            if i == 0 {
+                line = format!("{n:>3} | {:>6.2}% | ", mp * 100.0);
+            }
+            line.push_str(&format!("{:>15.2}% | ", r.fn_percent));
+        }
+        println!("{}", line.trim_end_matches(" | "));
+        let _ = mp;
+    }
+    println!("\nsmaller patterns complete more often (higher match probability),");
+    println!("which squeezes every shedder — but informed PM dropping degrades least.");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts for rust.
+
+Emits one artifact per shape variant plus a manifest the rust runtime
+uses to pick the smallest variant that fits the live query set
+(``rust/src/runtime/artifacts.rs``).  Interchange format is HLO text —
+NOT a serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import build_tables
+
+# (batch B, states m, bins N).  m=16 covers Q1 (11 states) and Q3/Q4 up
+# to n=14; m=32 covers Q2 (15 states) with batch room for multi-query
+# sweeps; the small variant keeps single-pattern model builds cheap.
+VARIANTS = [
+    (2, 8, 128),
+    (4, 16, 256),
+    (4, 16, 512),
+    (8, 32, 512),
+]
+
+MANIFEST = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch: int, m: int, nbins: int) -> str:
+    t = jax.ShapeDtypeStruct((batch, m, m), jnp.float32)
+    r = jax.ShapeDtypeStruct((batch, m), jnp.float32)
+    lowered = jax.jit(
+        lambda tt, rr: build_tables(tt, rr, nbins)
+    ).lower(t, r)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(batch: int, m: int, nbins: int) -> str:
+    return f"utility_B{batch}_M{m}_N{nbins}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=None,
+        help="comma list like 2x8x128,4x16x256 (default: built-ins)",
+    )
+    args = ap.parse_args()
+
+    variants = VARIANTS
+    if args.variants:
+        variants = [
+            tuple(int(x) for x in v.split("x"))
+            for v in args.variants.split(",")
+        ]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for batch, m, nbins in variants:
+        text = lower_variant(batch, m, nbins)
+        name = artifact_name(batch, m, nbins)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{batch} {m} {nbins} {name}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, MANIFEST), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest ({len(manifest_lines)} variants)")
+
+
+if __name__ == "__main__":
+    main()

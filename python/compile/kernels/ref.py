@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracle for the L1 kernel and the L2 scan.
+
+Everything here is the mathematically obvious formulation; the Pallas
+kernel (`step.py`) and the fused scan (`model.py`) must agree with these
+to float tolerance.  The rust fallback engine
+(``rust/src/runtime/fallback.rs``) implements the same recurrences and is
+differentially tested against the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["markov_step_ref", "build_tables_ref", "completion_via_power"]
+
+
+def markov_step_ref(t, r, c, tau):
+    """Reference for kernels.step.markov_step (batched einsum form)."""
+    c_next = jnp.einsum("bij,bj->bi", t, c)
+    tau_next = r + jnp.einsum("bij,bj->bi", t, tau)
+    return c_next, tau_next
+
+
+def build_tables_ref(t, r, nbins):
+    """Reference for model.build_tables: plain python loop, stacked rows.
+
+    Row ``j`` (0-based) of the outputs corresponds to ``j+1`` bins
+    remaining in the window.
+    """
+    batch, m = r.shape
+    c = jnp.zeros((batch, m), jnp.float32).at[:, m - 1].set(1.0)
+    tau = jnp.zeros((batch, m), jnp.float32)
+    c_rows, tau_rows = [], []
+    for _ in range(nbins):
+        c, tau = markov_step_ref(t, r, c, tau)
+        c_rows.append(c)
+        tau_rows.append(tau)
+    return jnp.stack(c_rows), jnp.stack(tau_rows)
+
+
+def completion_via_power(t_single, nsteps):
+    """Completion probability by direct matrix power: ``T^j(:, m-1)``.
+
+    Independent check of paper Eq. 3 for a single pattern: returns an
+    ``(nsteps, m)`` array whose row ``j`` is ``T^(j+1)[:, m-1]``.
+    """
+    m = t_single.shape[0]
+    acc = jnp.eye(m, dtype=jnp.float32)
+    rows = []
+    for _ in range(nsteps):
+        acc = acc @ t_single
+        rows.append(acc[:, m - 1])
+    return jnp.stack(rows)

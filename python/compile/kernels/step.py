@@ -1,0 +1,87 @@
+"""L1 — Pallas kernel: fused Markov model-builder step.
+
+This is the compute hot-spot of the pSPICE model builder (paper §III-C).
+One step advances, for a *batch* of patterns, the coupled recurrences
+
+    c'   = T @ c          -- completion probability   (paper Eq. 3)
+    tau' = r + T @ tau    -- Markov-reward value iteration (Bellman step)
+
+where, per pattern ``b``:
+
+* ``T[b]``   is the (bin-composed) ``m x m`` state-transition matrix,
+* ``r[b]``   is the expected per-bin reward (processing time) per state,
+* ``c[b]``   is the completion-probability vector given ``j`` bins remain,
+* ``tau[b]`` is the expected remaining processing time per state.
+
+The kernel fuses both matvecs and the reward add into one pass so ``T`` is
+read exactly once per step.  The grid iterates over the batch dimension;
+each grid step keeps the full ``m x m`` tile of ``T`` and both carry
+vectors resident in VMEM (see DESIGN.md §Hardware-Adaptation for the TPU
+mapping and VMEM/MXU estimate).
+
+``interpret=True`` is mandatory here: the artifacts are executed by the
+CPU PJRT client from rust, which cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["markov_step"]
+
+
+def _step_kernel(t_ref, r_ref, c_ref, tau_ref, c_out_ref, tau_out_ref):
+    """Fused step body for one pattern of the batch.
+
+    Refs are blocked to a single batch element: ``t_ref`` is ``(1, m, m)``,
+    the vector refs are ``(1, m)``.
+    """
+    t = t_ref[0]
+    c = c_ref[0]
+    tau = tau_ref[0]
+    # Single read of T feeds both matvecs; jnp.dot maps onto the MXU on a
+    # real TPU (f32 here; bf16-able, see DESIGN.md).
+    c_out_ref[0, :] = jnp.dot(t, c, preferred_element_type=jnp.float32)
+    tau_out_ref[0, :] = r_ref[0] + jnp.dot(
+        t, tau, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def markov_step(t, r, c, tau):
+    """Advance the batched model-builder recurrence by one bin.
+
+    Args:
+      t:   ``(B, m, m)`` float32 — per-pattern transition matrices.
+      r:   ``(B, m)``    float32 — per-pattern expected bin reward.
+      c:   ``(B, m)``    float32 — completion-probability carry.
+      tau: ``(B, m)``    float32 — remaining-processing-time carry.
+
+    Returns:
+      ``(c', tau')`` with the same shapes as ``c`` / ``tau``.
+    """
+    batch, m = c.shape
+    assert t.shape == (batch, m, m), (t.shape, (batch, m, m))
+    assert r.shape == (batch, m)
+
+    vec = pl.BlockSpec((1, m), lambda b: (b, 0))
+    return pl.pallas_call(
+        _step_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, m, m), lambda b: (b, 0, 0)),
+            vec,
+            vec,
+            vec,
+        ],
+        out_specs=[vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, m), jnp.float32),
+            jax.ShapeDtypeStruct((batch, m), jnp.float32),
+        ],
+        interpret=True,
+    )(t, r, c, tau)

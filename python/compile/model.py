@@ -1,0 +1,68 @@
+"""L2 — the pSPICE model-builder compute graph (JAX, build-time only).
+
+``build_tables`` is the paper's model builder math (§III-C) as one fused
+``lax.scan`` whose body is the L1 Pallas kernel:
+
+* completion probability  ``C[j] = T^(j+1) . e_m``           (Eq. 3),
+* remaining processing time ``TAU[j]`` via Markov-reward value iteration
+  (Bellman backup, §III-C-2),
+
+for a *batch* of patterns at once, one row per remaining-events *bin*.
+The rust coordinator composes the learned one-event chain ``(T, r)`` into
+a per-bin chain ``(T_bs, r_bs)`` (exact, by Chapman-Kolmogorov doubling)
+before invoking the compiled artifact, and assembles the utility table
+``UT = w_q * scale(C) / scale(TAU)`` from the outputs (§III-C-3).
+
+This module is lowered once by ``aot.py`` to HLO text; python never runs
+on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.step import markov_step
+
+__all__ = ["build_tables", "initial_carry"]
+
+
+def initial_carry(batch, m):
+    """Boundary conditions of the recurrences.
+
+    ``c_0 = e_m`` (a PM already in the final state has completed with
+    probability 1) and ``tau_0 = 0`` (no events left => no work left).
+    """
+    c0 = jnp.zeros((batch, m), jnp.float32).at[:, m - 1].set(1.0)
+    tau0 = jnp.zeros((batch, m), jnp.float32)
+    return c0, tau0
+
+
+@functools.partial(jax.jit, static_argnames=("nbins",))
+def build_tables(t, r, nbins):
+    """Scan the fused kernel ``nbins`` times, stacking every bin row.
+
+    Args:
+      t:     ``(B, m, m)`` float32 — per-bin transition matrices (already
+             composed for the bin size by the caller).
+      r:     ``(B, m)``    float32 — per-bin expected reward per state.
+      nbins: static int — number of bins (= ceil(ws / bs)).
+
+    Returns:
+      ``(C, TAU)`` of shape ``(nbins, B, m)``; row ``j`` corresponds to
+      ``j+1`` bins remaining in the window.
+    """
+    batch, m = r.shape
+    c0, tau0 = initial_carry(batch, m)
+
+    def body(carry, _):
+        c, tau = carry
+        c2, tau2 = markov_step(t, r, c, tau)
+        return (c2, tau2), (c2, tau2)
+
+    (_, _), (c_rows, tau_rows) = jax.lax.scan(
+        body, (c0, tau0), xs=None, length=nbins
+    )
+    return c_rows, tau_rows

@@ -1,0 +1,102 @@
+"""L1 correctness: Pallas fused step vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and transition-matrix structure; every case
+asserts allclose against ``ref.markov_step_ref``.  This is the CORE
+correctness signal for the kernel that ends up inside the AOT artifact.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import markov_step_ref
+from compile.kernels.step import markov_step
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def random_chain(rng, batch, m, absorbing=True):
+    """Random row-stochastic matrices (optionally absorbing final state)."""
+    t = rng.gamma(1.0, 1.0, size=(batch, m, m)).astype(np.float32)
+    t /= t.sum(axis=2, keepdims=True)
+    if absorbing:
+        t[:, m - 1, :] = 0.0
+        t[:, m - 1, m - 1] = 1.0
+    return t
+
+
+@st.composite
+def step_case(draw):
+    batch = draw(st.integers(min_value=1, max_value=8))
+    m = draw(st.integers(min_value=2, max_value=32))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return batch, m, seed
+
+
+@hypothesis.given(step_case())
+def test_step_matches_ref(case):
+    batch, m, seed = case
+    rng = np.random.default_rng(seed)
+    t = random_chain(rng, batch, m)
+    r = rng.uniform(0.0, 5.0, size=(batch, m)).astype(np.float32)
+    c = rng.uniform(0.0, 1.0, size=(batch, m)).astype(np.float32)
+    tau = rng.uniform(0.0, 10.0, size=(batch, m)).astype(np.float32)
+
+    c_k, tau_k = markov_step(jnp.array(t), jnp.array(r), jnp.array(c), jnp.array(tau))
+    c_r, tau_r = markov_step_ref(jnp.array(t), jnp.array(r), jnp.array(c), jnp.array(tau))
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tau_k), np.asarray(tau_r), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("batch,m", [(1, 2), (2, 8), (4, 16), (8, 32), (3, 5)])
+def test_step_shapes(batch, m):
+    rng = np.random.default_rng(7)
+    t = random_chain(rng, batch, m)
+    r = np.ones((batch, m), np.float32)
+    c = np.zeros((batch, m), np.float32)
+    c[:, m - 1] = 1.0
+    tau = np.zeros((batch, m), np.float32)
+    c2, tau2 = markov_step(jnp.array(t), jnp.array(r), jnp.array(c), jnp.array(tau))
+    assert c2.shape == (batch, m)
+    assert tau2.shape == (batch, m)
+    # absorbing final state: completion prob from final state stays 1
+    np.testing.assert_allclose(np.asarray(c2)[:, m - 1], 1.0, rtol=1e-6)
+
+
+def test_step_identity_chain():
+    """T = I: c never changes, tau accumulates exactly r per step."""
+    batch, m = 2, 4
+    t = np.broadcast_to(np.eye(m, dtype=np.float32), (batch, m, m)).copy()
+    r = np.full((batch, m), 0.25, np.float32)
+    c = np.zeros((batch, m), np.float32)
+    c[:, m - 1] = 1.0
+    tau = np.zeros((batch, m), np.float32)
+    for step in range(1, 5):
+        c, tau = markov_step(jnp.array(t), jnp.array(r), jnp.array(c), jnp.array(tau))
+    np.testing.assert_allclose(np.asarray(tau), 4 * 0.25, rtol=1e-6)
+    expect = np.zeros((batch, m), np.float32)
+    expect[:, m - 1] = 1.0
+    np.testing.assert_allclose(np.asarray(c), expect, rtol=1e-6)
+
+
+def test_step_deterministic_advance():
+    """Deterministic chain s_i -> s_{i+1}: completion prob is a shift."""
+    m = 4
+    t = np.zeros((1, m, m), np.float32)
+    for i in range(m - 1):
+        t[0, i, i + 1] = 1.0
+    t[0, m - 1, m - 1] = 1.0
+    r = np.zeros((1, m), np.float32)
+    c = np.zeros((1, m), np.float32)
+    c[0, m - 1] = 1.0
+    tau = np.zeros((1, m), np.float32)
+    # after j steps, states within j hops of the end have completed
+    c1, _ = markov_step(jnp.array(t), jnp.array(r), jnp.array(c), jnp.array(tau))
+    np.testing.assert_allclose(np.asarray(c1)[0], [0, 0, 1, 1], atol=1e-6)
+    c2, _ = markov_step(jnp.array(t), jnp.array(r), c1, jnp.array(tau))
+    np.testing.assert_allclose(np.asarray(c2)[0], [0, 1, 1, 1], atol=1e-6)

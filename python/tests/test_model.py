@@ -1,0 +1,90 @@
+"""L2 correctness: fused scan vs oracle + analytic Markov facts."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import (
+    build_tables_ref,
+    completion_via_power,
+)
+from compile.model import build_tables, initial_carry
+from .test_kernel import random_chain
+
+hypothesis.settings.register_profile(
+    "ci-model", deadline=None, max_examples=15, derandomize=True
+)
+hypothesis.settings.load_profile("ci-model")
+
+
+@st.composite
+def scan_case(draw):
+    batch = draw(st.integers(min_value=1, max_value=4))
+    m = draw(st.integers(min_value=2, max_value=16))
+    nbins = draw(st.integers(min_value=1, max_value=24))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return batch, m, nbins, seed
+
+
+@hypothesis.given(scan_case())
+def test_scan_matches_ref(case):
+    batch, m, nbins, seed = case
+    rng = np.random.default_rng(seed)
+    t = jnp.array(random_chain(rng, batch, m))
+    r = jnp.array(rng.uniform(0.1, 2.0, size=(batch, m)).astype(np.float32))
+    c_s, tau_s = build_tables(t, r, nbins)
+    c_r, tau_r = build_tables_ref(t, r, nbins)
+    np.testing.assert_allclose(np.asarray(c_s), np.asarray(c_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tau_s), np.asarray(tau_r), rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(scan_case())
+def test_completion_equals_matrix_power(case):
+    """Paper Eq. 3: C[j, b, i] == (T_b)^(j+1) [i, m-1]."""
+    batch, m, nbins, seed = case
+    rng = np.random.default_rng(seed)
+    t = jnp.array(random_chain(rng, batch, m))
+    r = jnp.zeros((batch, m), jnp.float32)
+    c_s, _ = build_tables(t, r, nbins)
+    for b in range(batch):
+        power = completion_via_power(t[b], nbins)
+        np.testing.assert_allclose(
+            np.asarray(c_s)[:, b, :], np.asarray(power), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_completion_monotone_in_remaining_events():
+    """More remaining events can only raise absorbing-completion prob."""
+    rng = np.random.default_rng(123)
+    t = jnp.array(random_chain(rng, 3, 8))
+    r = jnp.ones((3, 8), jnp.float32)
+    c_s, _ = build_tables(t, r, 64)
+    c = np.asarray(c_s)
+    assert (np.diff(c, axis=0) >= -1e-6).all()
+
+
+def test_tau_zero_reward_is_zero():
+    rng = np.random.default_rng(5)
+    t = jnp.array(random_chain(rng, 2, 6))
+    r = jnp.zeros((2, 6), jnp.float32)
+    _, tau = build_tables(t, r, 32)
+    np.testing.assert_allclose(np.asarray(tau), 0.0, atol=1e-7)
+
+
+def test_initial_carry():
+    c0, tau0 = initial_carry(3, 5)
+    expect = np.zeros((3, 5), np.float32)
+    expect[:, 4] = 1.0
+    np.testing.assert_allclose(np.asarray(c0), expect)
+    np.testing.assert_allclose(np.asarray(tau0), 0.0)
+
+
+def test_absorbing_row_probabilities_bounded():
+    rng = np.random.default_rng(42)
+    t = jnp.array(random_chain(rng, 2, 10))
+    r = jnp.ones((2, 10), jnp.float32)
+    c_s, tau_s = build_tables(t, r, 50)
+    c = np.asarray(c_s)
+    assert (c >= -1e-6).all() and (c <= 1 + 1e-5).all()
+    assert (np.asarray(tau_s) >= -1e-6).all()

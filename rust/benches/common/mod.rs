@@ -1,0 +1,73 @@
+//! Tiny bench harness (criterion is not in the offline crate set):
+//! warm-up + repeated timed runs, reporting mean ± stddev and
+//! throughput.  Used by every `harness = false` bench target.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+pub struct BenchResult {
+    /// label
+    pub name: String,
+    /// mean seconds per iteration
+    pub mean_s: f64,
+    /// stddev of seconds per iteration
+    pub stddev_s: f64,
+    /// items processed per iteration (for throughput)
+    pub items: u64,
+}
+
+impl BenchResult {
+    /// Human line, criterion-ish.
+    pub fn report(&self) {
+        let per_item = if self.items > 0 {
+            format!(
+                "  {:>12.1} ns/item  {:>12.2} Mitems/s",
+                self.mean_s * 1e9 / self.items as f64,
+                self.items as f64 / self.mean_s / 1e6
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "{:<44} {:>10.3} ms ± {:>8.3} ms{}",
+            self.name,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            per_item
+        );
+    }
+}
+
+/// Run `f` (which processes `items` items) `reps` times after `warmup`
+/// unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, items: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        items,
+    };
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

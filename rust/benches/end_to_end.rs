@@ -1,0 +1,52 @@
+//! End-to-end wall-clock bench: the full three-phase experiment
+//! (Figures 5/6 cells) at a reduced-but-realistic scale, one cell per
+//! query family and shedder — the number `make figures` amortizes.
+
+mod common;
+
+use common::bench;
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_experiment;
+use pspice::shedding::ShedderKind;
+
+fn cell(query: &str, dataset: DatasetKind, window: u64, n: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        query: query.into(),
+        window,
+        pattern_n: n,
+        slide: 500,
+        dataset,
+        seed: 1,
+        warmup: 30_000,
+        events: 30_000,
+        rate: 1.2,
+        lb_ms: 0.5,
+        shedder: ShedderKind::PSpice,
+        weights: Vec::new(),
+        cost_factors: Vec::new(),
+        retrain_every: 0,
+        drift_threshold: 0.01,
+    }
+}
+
+fn main() {
+    println!("== end_to_end (one Fig-5 cell per family) ==");
+    let cells = [
+        cell("q1", DatasetKind::Stock, 5_000, 0),
+        cell("q2", DatasetKind::Stock, 7_500, 0),
+        cell("q3", DatasetKind::Soccer, 1_500, 4),
+        cell("q4", DatasetKind::Bus, 2_000, 4),
+    ];
+    for cfg in &cells {
+        for shedder in [ShedderKind::PSpice, ShedderKind::PmBaseline, ShedderKind::EventBaseline] {
+            let mut c = cfg.clone();
+            c.shedder = shedder;
+            let label = format!("{}.{:?}", c.query, shedder);
+            bench(&label, 0, 3, (c.warmup + c.events) * 2, || {
+                let r = run_experiment(&c).expect("experiment");
+                assert!(r.truth_total > 0);
+            });
+        }
+    }
+}

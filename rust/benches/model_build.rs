@@ -1,0 +1,49 @@
+//! Fig. 9b bench — wall-clock model-build time vs window size, for both
+//! engines (AOT/PJRT artifact vs rust fallback).  The paper reports
+//! 1 s → 2.4 s over ws = 6K → 32K on 2010 hardware; the *shape*
+//! (monotone growth with ws = more value-iteration steps) is the claim.
+
+mod common;
+
+use common::bench;
+use pspice::datasets::StockGen;
+use pspice::events::EventStream;
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::Operator;
+use pspice::query::builtin::q1;
+use pspice::runtime::{ArtifactManifest, FallbackEngine, PjrtEngine};
+
+fn trained_op(ws: u64) -> Operator {
+    let mut op = Operator::new(q1(ws).queries);
+    let mut g = StockGen::with_seed(3);
+    // enough events to populate transitions without over-long runs
+    for _ in 0..30_000 {
+        op.process_event(&g.next_event().unwrap());
+    }
+    op
+}
+
+fn main() {
+    println!("== model_build (Fig. 9b wall-clock) ==");
+    let have_pjrt = PjrtEngine::load(&ArtifactManifest::default_dir()).is_ok();
+    for &ws in &[6_000u64, 10_000, 16_000, 18_000, 24_000, 32_000] {
+        let op = trained_op(ws);
+        let cfg = ModelConfig {
+            eta: 1,
+            max_bins: 512,
+            use_tau: true,
+        };
+        if have_pjrt {
+            let engine = PjrtEngine::load(&ArtifactManifest::default_dir()).unwrap();
+            let mut mb = ModelBuilder::new(cfg.clone(), Box::new(engine));
+            mb.build(&op).unwrap(); // compile once outside the timing
+            bench(&format!("model_build.pjrt(ws={ws})"), 1, 10, 0, || {
+                mb.build(&op).unwrap();
+            });
+        }
+        let mut mb = ModelBuilder::new(cfg, Box::new(FallbackEngine));
+        bench(&format!("model_build.fallback(ws={ws})"), 1, 10, 0, || {
+            mb.build(&op).unwrap();
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! Operator hot-path benches: wall-clock events/s of the match loop at
+//! different PM populations (the L3 request path the paper's `f(n_pm)`
+//! regression models), plus the per-component costs.
+
+mod common;
+
+use common::{bench, black_box};
+use pspice::datasets::{BusGen, StockGen};
+use pspice::events::EventStream;
+use pspice::operator::Operator;
+use pspice::query::builtin::{q1, q4};
+
+fn main() {
+    println!("== operator_throughput ==");
+
+    // q1: many windows, 11-state sequences over quotes
+    for &ws in &[1_000u64, 5_000, 10_000] {
+        let mut op = Operator::new(q1(ws).queries);
+        let mut g = StockGen::with_seed(1);
+        for _ in 0..3 * ws {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let batch: Vec<_> = g.take_events(5_000);
+        let pms = op.pm_count();
+        bench(
+            &format!("q1.process_event(ws={ws}, pms={pms})"),
+            1,
+            10,
+            batch.len() as u64,
+            || {
+                let mut op2 = op.clone();
+                let mut checks = 0u64;
+                for e in &batch {
+                    checks += op2.process_event(e).checks;
+                }
+                black_box(checks);
+            },
+        );
+    }
+
+    // q4: fewer windows, any-operator with key correlation
+    let mut op = Operator::new(q4(6, 20_000, 100).queries);
+    let mut g = BusGen::with_seed(2);
+    for _ in 0..40_000 {
+        op.process_event(&g.next_event().unwrap());
+    }
+    let batch: Vec<_> = g.take_events(5_000);
+    let pms = op.pm_count();
+    bench(
+        &format!("q4.process_event(pms={pms})"),
+        1,
+        10,
+        batch.len() as u64,
+        || {
+            let mut op2 = op.clone();
+            for e in &batch {
+                black_box(op2.process_event(e).checks);
+            }
+        },
+    );
+
+    // observation capture on/off delta
+    let mut op_obs = op.clone();
+    op_obs.obs.enabled = false;
+    bench(
+        &format!("q4.process_event(no-obs, pms={pms})"),
+        1,
+        10,
+        batch.len() as u64,
+        || {
+            let mut op2 = op_obs.clone();
+            for e in &batch {
+                black_box(op2.process_event(e).checks);
+            }
+        },
+    );
+
+    // bookkeeping-only path (E-BL dropped events)
+    bench(
+        &format!("q4.process_bookkeeping(pms={pms})"),
+        1,
+        10,
+        batch.len() as u64,
+        || {
+            let mut op2 = op.clone();
+            for e in &batch {
+                black_box(op2.process_bookkeeping(e).opened);
+            }
+        },
+    );
+
+    // dataset generation itself
+    bench("stockgen.next_event", 1, 10, 100_000, || {
+        let mut g = StockGen::with_seed(9);
+        for _ in 0..100_000 {
+            black_box(g.next_event());
+        }
+    });
+}

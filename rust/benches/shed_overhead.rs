@@ -1,0 +1,134 @@
+//! Fig. 9a bench — wall-clock cost of the shedding primitives at
+//! realistic PM populations, for all three strategies, plus the
+//! sort-vs-select ablation the paper's complexity analysis motivates
+//! (paper budgets O(n log n); our selection is O(n)).
+
+mod common;
+
+use std::collections::HashSet;
+
+use common::{bench, black_box};
+use pspice::datasets::BusGen;
+use pspice::events::EventStream;
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::Operator;
+use pspice::query::builtin::q4;
+use pspice::runtime::FallbackEngine;
+use pspice::shedding::{OverloadDetector, PSpiceShedder};
+use pspice::util::Rng;
+
+fn operator_with_pms(target_pms: usize) -> Operator {
+    // big windows + small slide grow the PM population; the event cap
+    // bounds setup time (q4's PM population saturates at
+    // #windows × (#stops + 1), so very large targets are best-effort)
+    let mut op = Operator::new(q4(8, 40_000, 50).queries);
+    let mut g = BusGen::with_seed(1);
+    let mut budget = 2_000_000u64;
+    while op.pm_count() < target_pms && budget > 0 {
+        op.process_event(&g.next_event().unwrap());
+        budget -= 1;
+    }
+    op
+}
+
+fn main() {
+    println!("== shed_overhead (Fig. 9a wall-clock) ==");
+    for &n in &[1_000usize, 10_000, 40_000] {
+        let op = operator_with_pms(n);
+        let n = op.pm_count(); // actual population (saturation-aware)
+        let mut mb = ModelBuilder::new(
+            ModelConfig {
+                eta: 1,
+                max_bins: 128,
+                use_tau: true,
+            },
+            Box::new(FallbackEngine),
+        );
+        let tables = mb.build(&op).unwrap();
+        let rho = n / 10;
+
+        // pSPICE drop: enumerate + utility + select + remove
+        bench(
+            &format!("pspice.drop_lowest(n={n}, rho={rho})"),
+            3,
+            20,
+            n as u64,
+            || {
+                let mut op2 = op.clone();
+                let det = OverloadDetector::new(f64::MAX, 0.0);
+                let mut shed = PSpiceShedder::new(det, tables.clone());
+                black_box(shed.drop_lowest(&mut op2, rho));
+            },
+        );
+
+        // PM-BL random drop
+        bench(
+            &format!("pm_bl.drop_random(n={n}, rho={rho})"),
+            3,
+            20,
+            n as u64,
+            || {
+                let mut op2 = op.clone();
+                let mut rng = Rng::seeded(7);
+                black_box(op2.drop_random(rho, &mut rng));
+            },
+        );
+
+        // ablation: full sort (the paper's O(n log n)) vs our selection
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        let utils: Vec<(f64, u64)> = refs
+            .iter()
+            .map(|r| (tables[r.query].lookup(r.state, r.remaining), r.pm_id))
+            .collect();
+        bench(&format!("ablation.full_sort(n={n})"), 3, 20, n as u64, || {
+            let mut v = utils.clone();
+            v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            black_box(&v);
+        });
+        bench(
+            &format!("ablation.select_nth(n={n}, rho={rho})"),
+            3,
+            20,
+            n as u64,
+            || {
+                let mut v = utils.clone();
+                if rho < v.len() {
+                    v.select_nth_unstable_by(rho - 1, |a, b| {
+                        a.0.partial_cmp(&b.0).unwrap()
+                    });
+                }
+                black_box(&v);
+            },
+        );
+
+        // utility lookup alone (the O(1) claim)
+        bench(
+            &format!("pspice.utility_lookup(n={n})"),
+            3,
+            50,
+            n as u64,
+            || {
+                let mut acc = 0.0;
+                for r in &refs {
+                    acc += tables[r.query].lookup(r.state, r.remaining);
+                }
+                black_box(acc);
+            },
+        );
+
+        // drop by id set (operator-side removal)
+        let victims: HashSet<u64> = refs.iter().take(rho).map(|r| r.pm_id).collect();
+        bench(
+            &format!("operator.drop_pms(n={n}, rho={rho})"),
+            3,
+            20,
+            n as u64,
+            || {
+                let mut op2 = op.clone();
+                black_box(op2.drop_pms(&victims));
+            },
+        );
+        println!();
+    }
+}

@@ -1,0 +1,268 @@
+//! Command-line interface for the `pspice` binary (hand-rolled; the
+//! offline crate set has no `clap` — see DESIGN.md §3).
+//!
+//! ```text
+//! pspice run --config <file.toml> [--shedder S] [--rate R]
+//! pspice run --query q1 --window 5000 --shedder pspice --rate 1.4
+//! pspice fig5 --query q1 [--scale 0.2]     # and fig6/fig7/fig8/fig9a/fig9b
+//! pspice gen-data --dataset stock --events 100000 --out trace.csv
+//! pspice calibrate --query q1              # capacity + regression report
+//! ```
+
+use std::collections::HashMap;
+
+use crate::config::ExperimentConfig;
+use crate::harness::figures::{self, FigureOpts};
+
+/// Parsed `--key value` flags (+ positional subcommand).
+pub struct Flags {
+    /// subcommand
+    pub cmd: String,
+    values: HashMap<String, String>,
+}
+
+impl Flags {
+    /// Parse raw args (after the binary name).
+    pub fn parse(args: &[String]) -> crate::Result<Flags> {
+        anyhow::ensure!(!args.is_empty(), "{}", usage());
+        let cmd = args[0].clone();
+        let mut values = HashMap::new();
+        let mut i = 1;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {:?}", args[i]))?;
+            anyhow::ensure!(i + 1 < args.len(), "--{key} needs a value");
+            values.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        }
+        Ok(Flags { cmd, values })
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Parsed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+}
+
+/// CLI usage text.
+pub fn usage() -> &'static str {
+    "usage: pspice <command> [--flag value ...]\n\
+     commands:\n\
+       run        run one experiment (--config file | --query q1..q4) \n\
+                  [--shedder none|pspice|pspice--|pm-bl|e-bl] [--rate 1.2]\n\
+                  [--window N] [--pattern-n N] [--events N] [--warmup N]\n\
+                  [--lb-ms F] [--seed N]\n\
+       fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
+       fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
+       fig7       [--scale F]                       latency-bound trace\n\
+       fig8       [--scale F]                       pSPICE vs pSPICE--\n\
+       fig9a      [--scale F]                       shedding overhead\n\
+       fig9b      [--scale F]                       model build overhead\n\
+       calibrate  --query q1..q4                    capacity + regressions\n\
+       gen-data   --dataset stock|soccer|bus --events N --out file.csv\n\
+       query-dsl  --file query.dsl --query q1..q4   parse a DSL query"
+}
+
+fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(q) = flags.get("query") {
+        cfg.query = q.to_string();
+        // pick the dataset that matches the query family
+        cfg.dataset = match q {
+            "q1" | "q2" | "q1+q2" => crate::datasets::DatasetKind::Stock,
+            "q3" => crate::datasets::DatasetKind::Soccer,
+            "q4" => crate::datasets::DatasetKind::Bus,
+            _ => cfg.dataset,
+        };
+        if q == "q3" {
+            cfg.window = 1_500;
+        }
+        if q == "q4" {
+            cfg.window = 2_000;
+        }
+    }
+    cfg.window = flags.get_parse("window", cfg.window)?;
+    cfg.pattern_n = flags.get_parse("pattern-n", cfg.pattern_n)?;
+    cfg.slide = flags.get_parse("slide", cfg.slide)?;
+    cfg.seed = flags.get_parse("seed", cfg.seed)?;
+    cfg.events = flags.get_parse("events", cfg.events)?;
+    cfg.warmup = flags.get_parse("warmup", cfg.warmup)?;
+    cfg.rate = flags.get_parse("rate", cfg.rate)?;
+    cfg.lb_ms = flags.get_parse("lb-ms", cfg.lb_ms)?;
+    if let Some(s) = flags.get("shedder") {
+        cfg.shedder = s.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn figure_opts(flags: &Flags) -> crate::Result<FigureOpts> {
+    Ok(FigureOpts {
+        scale: flags.get_parse("scale", 1.0)?,
+        out_dir: flags
+            .get("out-dir")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("results")),
+    })
+}
+
+/// Entry point used by `main`.
+pub fn run(args: Vec<String>) -> crate::Result<()> {
+    let flags = Flags::parse(&args)?;
+    match flags.cmd.as_str() {
+        "run" => {
+            let cfg = cfg_from_flags(&flags)?;
+            let r = crate::harness::run_experiment(&cfg)?;
+            println!("experiment: query={} shedder={}", r.query, r.shedder);
+            println!("  engine            : {}", r.engine);
+            println!("  capacity          : {:.0} ns/event", r.capacity_ns);
+            println!("  match probability : {:.1}%", r.match_probability * 100.0);
+            println!("  ground truth CEs  : {}", r.truth_total);
+            println!("  false negatives   : {:.2}%", r.fn_percent);
+            println!("  false positives   : {}", r.false_positives);
+            println!(
+                "  dropped           : {} PMs, {} events",
+                r.dropped_pms, r.dropped_events
+            );
+            println!(
+                "  latency           : mean={:.3}ms max={:.3}ms violations={:.2}%",
+                r.latency.stats.mean() / 1e6,
+                r.latency.stats.max() / 1e6,
+                r.latency.violation_rate() * 100.0
+            );
+            println!("  shed overhead     : {:.3}%", r.shed_overhead * 100.0);
+            println!("  model build       : {:.4}s", r.model_build_secs);
+            Ok(())
+        }
+        "fig5" => figures::fig5(
+            flags.get("query").unwrap_or("q1"),
+            &figure_opts(&flags)?,
+        ),
+        "fig6" => figures::fig6(
+            flags.get("query").unwrap_or("q1"),
+            &figure_opts(&flags)?,
+        ),
+        "fig7" => figures::fig7(&figure_opts(&flags)?),
+        "fig8" => figures::fig8(&figure_opts(&flags)?),
+        "fig9a" => figures::fig9a(&figure_opts(&flags)?),
+        "fig9b" => figures::fig9b(&figure_opts(&flags)?),
+        "calibrate" => {
+            let cfg = cfg_from_flags(&flags)?;
+            let (queries, _) = crate::harness::experiment::build_queries(&cfg)?;
+            let trace = crate::harness::experiment::build_trace(&cfg);
+            let mut op = crate::operator::Operator::new(queries);
+            let mut cost = 0.0;
+            for e in &trace {
+                cost += op.process_event(e).cost_ns;
+            }
+            println!(
+                "query={} events={} capacity={:.0} ns/event peak_pms={} match_p={:.2}%",
+                cfg.query,
+                trace.len(),
+                cost / trace.len() as f64,
+                op.pm_count(),
+                op.match_probability() * 100.0
+            );
+            Ok(())
+        }
+        "gen-data" => {
+            let dataset: crate::datasets::DatasetKind =
+                flags.get("dataset").unwrap_or("stock").parse()?;
+            let events: usize = flags.get_parse("events", 100_000usize)?;
+            let out = flags
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("gen-data needs --out"))?;
+            let seed: u64 = flags.get_parse("seed", 42u64)?;
+            use crate::events::EventStream;
+            let evs = match dataset {
+                crate::datasets::DatasetKind::Stock => {
+                    crate::datasets::StockGen::with_seed(seed).take_events(events)
+                }
+                crate::datasets::DatasetKind::Soccer => {
+                    crate::datasets::SoccerGen::with_seed(seed).take_events(events)
+                }
+                crate::datasets::DatasetKind::Bus => {
+                    crate::datasets::BusGen::with_seed(seed).take_events(events)
+                }
+            };
+            crate::datasets::csv::write_csv(std::path::Path::new(out), &evs)?;
+            println!("wrote {} events to {out}", evs.len());
+            Ok(())
+        }
+        "query-dsl" => {
+            let file = flags
+                .get("file")
+                .ok_or_else(|| anyhow::anyhow!("query-dsl needs --file"))?;
+            let schema_of = flags.get("query").unwrap_or("q1");
+            let schema = crate::query::builtin::schema_for(schema_of);
+            let text = std::fs::read_to_string(file)?;
+            let q = crate::query::parse_query(&text, &schema)?;
+            println!("parsed query {:?}: {} states, window {:?}", q.name, q.state_count(), q.window);
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let f = Flags::parse(&s(&["run", "--query", "q3", "--rate", "1.6"])).unwrap();
+        assert_eq!(f.cmd, "run");
+        assert_eq!(f.get("query"), Some("q3"));
+        assert_eq!(f.get_parse("rate", 0.0).unwrap(), 1.6);
+        assert_eq!(f.get_parse("missing", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(Flags::parse(&s(&[])).is_err());
+        assert!(Flags::parse(&s(&["run", "query", "q1"])).is_err());
+        assert!(Flags::parse(&s(&["run", "--query"])).is_err());
+    }
+
+    #[test]
+    fn cfg_from_flags_applies_query_defaults() {
+        let f = Flags::parse(&s(&["run", "--query", "q3"])).unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.dataset, crate::datasets::DatasetKind::Soccer);
+        assert_eq!(cfg.window, 1_500);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_works() {
+        run(s(&["help"])).unwrap();
+    }
+}

@@ -1,0 +1,182 @@
+//! Experiment configuration: a TOML-subset parser (offline stand-in for
+//! `serde`+`toml`, which are not in the vendored crate set) plus the
+//! typed [`ExperimentConfig`] the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! number, boolean and flat-array values, `#` comments.
+
+pub mod toml_lite;
+
+pub use toml_lite::{TomlDoc, TomlValue};
+
+use crate::datasets::DatasetKind;
+use crate::shedding::ShedderKind;
+
+/// Fully resolved experiment configuration (see `examples/configs/`).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// built-in query name: q1..q4
+    pub query: String,
+    /// window size (events for q1/q2/q4, ms for q3)
+    pub window: u64,
+    /// pattern size n (q3/q4 only)
+    pub pattern_n: usize,
+    /// slide for q4
+    pub slide: u64,
+    /// dataset
+    pub dataset: DatasetKind,
+    /// dataset seed
+    pub seed: u64,
+    /// total events to stream (excluding warm-up)
+    pub events: u64,
+    /// warm-up events (model + regression calibration)
+    pub warmup: u64,
+    /// input rate as a multiple of measured capacity (1.2 = 120%)
+    pub rate: f64,
+    /// latency bound LB in virtual ms
+    pub lb_ms: f64,
+    /// shedding strategy
+    pub shedder: ShedderKind,
+    /// per-query weights override (empty = all 1.0)
+    pub weights: Vec<f64>,
+    /// per-query check-cost factors (Fig. 8's τ ratios; empty = 1.0)
+    pub cost_factors: Vec<f64>,
+    /// check transition-matrix drift every this many events during the
+    /// measurement phase and rebuild the model when it exceeds
+    /// `drift_threshold` (paper §III-D); 0 disables retraining
+    pub retrain_every: u64,
+    /// MSE threshold for drift-triggered retraining
+    pub drift_threshold: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            query: "q1".into(),
+            window: 5_000,
+            pattern_n: 4,
+            slide: 500,
+            dataset: DatasetKind::Stock,
+            seed: 42,
+            events: 200_000,
+            warmup: 100_000,
+            rate: 1.2,
+            lb_ms: 1.0,
+            shedder: ShedderKind::PSpice,
+            weights: Vec::new(),
+            cost_factors: Vec::new(),
+            retrain_every: 0,
+            drift_threshold: 0.01,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-subset text (section `[experiment]`, all keys
+    /// optional).
+    pub fn from_toml(text: &str) -> crate::Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        let section = "experiment";
+        if let Some(v) = doc.get_str(section, "query") {
+            cfg.query = v.to_string();
+        }
+        if let Some(v) = doc.get_num(section, "window") {
+            cfg.window = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "pattern_n") {
+            cfg.pattern_n = v as usize;
+        }
+        if let Some(v) = doc.get_num(section, "slide") {
+            cfg.slide = v as u64;
+        }
+        if let Some(v) = doc.get_str(section, "dataset") {
+            cfg.dataset = v.parse()?;
+        }
+        if let Some(v) = doc.get_num(section, "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "events") {
+            cfg.events = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "warmup") {
+            cfg.warmup = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "rate") {
+            cfg.rate = v;
+        }
+        if let Some(v) = doc.get_num(section, "lb_ms") {
+            cfg.lb_ms = v;
+        }
+        if let Some(v) = doc.get_str(section, "shedder") {
+            cfg.shedder = v.parse()?;
+        }
+        if let Some(v) = doc.get_array(section, "weights") {
+            cfg.weights = v;
+        }
+        if let Some(v) = doc.get_array(section, "cost_factors") {
+            cfg.cost_factors = v;
+        }
+        if let Some(v) = doc.get_num(section, "retrain_every") {
+            cfg.retrain_every = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "drift_threshold") {
+            cfg.drift_threshold = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            # pSPICE experiment
+            [experiment]
+            query = "q3"
+            window = 1500
+            pattern_n = 5
+            dataset = "soccer"
+            seed = 7
+            events = 50000
+            warmup = 20000
+            rate = 1.4
+            lb_ms = 1.0
+            shedder = "pm-bl"
+            weights = [1.0, 2.0]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.query, "q3");
+        assert_eq!(cfg.pattern_n, 5);
+        assert_eq!(cfg.dataset, DatasetKind::Soccer);
+        assert_eq!(cfg.shedder, ShedderKind::PmBaseline);
+        assert_eq!(cfg.weights, vec![1.0, 2.0]);
+        assert!((cfg.rate - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = ExperimentConfig::from_toml("[experiment]\nquery = \"q2\"\n").unwrap();
+        assert_eq!(cfg.query, "q2");
+        assert_eq!(cfg.rate, 1.2);
+        assert_eq!(cfg.shedder, ShedderKind::PSpice);
+    }
+
+    #[test]
+    fn rejects_bad_shedder() {
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\nshedder = \"magic\"\n").is_err()
+        );
+    }
+}

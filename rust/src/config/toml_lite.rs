@@ -1,0 +1,167 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: quoted strings, numbers, booleans, flat numeric arrays.
+
+use std::collections::HashMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// quoted string
+    Str(String),
+    /// number (all numerics are f64)
+    Num(f64),
+    /// boolean
+    Bool(bool),
+    /// flat numeric array
+    Array(Vec<f64>),
+}
+
+/// A parsed document: `(section, key) -> value`.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    values: HashMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // only strip comments outside quotes (strings here never
+                // contain '#' in our configs; keep it simple but safe)
+                Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => &raw[..pos],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                anyhow::ensure!(
+                    line.ends_with(']'),
+                    "line {}: bad section header {line:?}",
+                    no + 1
+                );
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("line {}: expected key = value, got {line:?}", no + 1)
+            })?;
+            let key = key.trim().to_string();
+            let value = Self::parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", no + 1))?;
+            doc.values.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    fn parse_value(s: &str) -> crate::Result<TomlValue> {
+        if let Some(inner) = s.strip_prefix('"') {
+            let inner = inner
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow::anyhow!("unterminated string {s:?}"))?;
+            return Ok(TomlValue::Str(inner.to_string()));
+        }
+        if s == "true" {
+            return Ok(TomlValue::Bool(true));
+        }
+        if s == "false" {
+            return Ok(TomlValue::Bool(false));
+        }
+        if let Some(inner) = s.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("unterminated array {s:?}"))?;
+            let items: Result<Vec<f64>, _> = inner
+                .split(',')
+                .map(str::trim)
+                .filter(|x| !x.is_empty())
+                .map(str::parse::<f64>)
+                .collect();
+            return Ok(TomlValue::Array(items?));
+        }
+        Ok(TomlValue::Num(s.parse::<f64>()?))
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// String value.
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value.
+    pub fn get_num(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array value.
+    pub fn get_array(&self, section: &str, key: &str) -> Option<Vec<f64>> {
+        match self.get(section, key) {
+            Some(TomlValue::Array(a)) => Some(a.clone()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = TomlDoc::parse(
+            r#"
+            [a]
+            s = "hello"   # comment
+            n = 3.5
+            b = true
+            arr = [1, 2, 3.5]
+            [b]
+            n = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_num("a", "n"), Some(3.5));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_array("a", "arr"), Some(vec![1.0, 2.0, 3.5]));
+        assert_eq!(doc.get_num("b", "n"), Some(7.0));
+        assert_eq!(doc.get("a", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("[a\n").is_err());
+        assert!(TomlDoc::parse("[a]\njust a line\n").is_err());
+        assert!(TomlDoc::parse("[a]\nx = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("[a]\nx = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("[a]\nx = notanumber\n").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_lines_ok() {
+        let doc = TomlDoc::parse("# top comment\n\n[s]\nk = 1\n").unwrap();
+        assert_eq!(doc.get_num("s", "k"), Some(1.0));
+    }
+}

@@ -1,0 +1,212 @@
+//! Dublin-like synthetic public-bus trace (stands in for the paper's
+//! 911-bus PLBT dataset).
+//!
+//! Schema: one event type `bus` with attributes
+//! `[bus, stop, delayed, delay_min]`.
+//!
+//! Buses cycle through per-route stop sequences.  Delays are *bursty and
+//! stop-correlated*: each stop carries a congestion level that random
+//! incidents push up and time decays, so several buses get delayed at the
+//! same stop in close succession — exactly the situation Q4's
+//! `any(n, B…)` same-stop pattern detects.
+
+use crate::events::{Event, EventStream, Schema};
+use crate::util::Rng;
+
+/// `bus` attribute slots.
+pub const A_BUS: usize = 0;
+/// stop id slot
+pub const A_STOP: usize = 1;
+/// delayed flag slot (1.0 = delayed)
+pub const A_DELAYED: usize = 2;
+/// delay magnitude slot (minutes)
+pub const A_DELAY_MIN: usize = 3;
+
+/// Configuration for [`BusGen`].
+#[derive(Debug, Clone)]
+pub struct BusConfig {
+    /// Fleet size (paper: 911).
+    pub buses: usize,
+    /// Number of distinct stops in the network.
+    pub stops: usize,
+    /// Stops per route.
+    pub route_len: usize,
+    /// Probability per event that some stop has a new incident.
+    pub incident_p: f64,
+    /// Congestion decay factor per event.
+    pub decay: f64,
+    /// Milliseconds between consecutive bus reports.
+    pub tick_ms: u64,
+}
+
+impl Default for BusConfig {
+    fn default() -> Self {
+        BusConfig {
+            buses: 911,
+            stops: 120,
+            route_len: 16,
+            incident_p: 0.003,
+            decay: 0.9998,
+            tick_ms: 3,
+        }
+    }
+}
+
+/// Seeded Dublin-like bus trace generator.
+#[derive(Debug, Clone)]
+pub struct BusGen {
+    schema: Schema,
+    cfg: BusConfig,
+    rng: Rng,
+    /// per-bus route (list of stop ids) and position on it
+    routes: Vec<Vec<u32>>,
+    route_pos: Vec<usize>,
+    /// per-stop congestion in [0, 1)
+    congestion: Vec<f64>,
+    /// zipf-ish incident propensity per stop (city-center hotspots)
+    hotspot: Vec<f64>,
+    seq: u64,
+    ts_ms: u64,
+}
+
+impl BusGen {
+    /// New generator with the given seed and config.
+    pub fn new(seed: u64, cfg: BusConfig) -> Self {
+        let mut schema = Schema::new();
+        schema.add_type("bus", &["bus", "stop", "delayed", "delay_min"]);
+        let mut rng = Rng::seeded(seed);
+        let routes = (0..cfg.buses)
+            .map(|_| {
+                (0..cfg.route_len)
+                    .map(|_| rng.below(cfg.stops as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        let route_pos = (0..cfg.buses)
+            .map(|_| rng.index(cfg.route_len))
+            .collect();
+        let mut hotspot: Vec<f64> = (0..cfg.stops)
+            .map(|r| 1.0 / ((r + 1) as f64).powf(1.1))
+            .collect();
+        rng.shuffle(&mut hotspot);
+        BusGen {
+            schema,
+            congestion: vec![0.0; cfg.stops],
+            hotspot,
+            routes,
+            route_pos,
+            cfg,
+            rng,
+            seq: 0,
+            ts_ms: 0,
+        }
+    }
+
+    /// Default-config generator.
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(seed, BusConfig::default())
+    }
+}
+
+impl EventStream for BusGen {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_event(&mut self) -> Option<Event> {
+        // world: incidents spike congestion at a random stop, all decay
+        if self.rng.chance(self.cfg.incident_p) {
+            let s = self.rng.weighted_index(&self.hotspot);
+            self.congestion[s] = (self.congestion[s] + self.rng.range_f64(0.4, 0.9)).min(0.95);
+        }
+        for c in &mut self.congestion {
+            *c *= self.cfg.decay;
+        }
+        // a random bus reports at its next stop
+        let bus = self.rng.index(self.cfg.buses);
+        self.route_pos[bus] = (self.route_pos[bus] + 1) % self.cfg.route_len;
+        let stop = self.routes[bus][self.route_pos[bus]];
+        let p_delay = 0.01 + self.congestion[stop as usize];
+        let delayed = self.rng.chance(p_delay.min(0.97));
+        let delay_min = if delayed {
+            self.rng.range_f64(2.0, 25.0)
+        } else {
+            0.0
+        };
+        let e = Event::new(
+            self.seq,
+            self.ts_ms,
+            0,
+            &[
+                bus as f64,
+                stop as f64,
+                if delayed { 1.0 } else { 0.0 },
+                delay_min,
+            ],
+        );
+        self.seq += 1;
+        self.ts_ms += self.cfg.tick_ms;
+        Some(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = BusGen::with_seed(1);
+        let mut b = BusGen::with_seed(1);
+        for _ in 0..500 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+
+    #[test]
+    fn attrs_in_range() {
+        let mut g = BusGen::with_seed(2);
+        for e in g.take_events(10_000) {
+            assert!(e.attr_id(A_BUS) < 911);
+            assert!(e.attr_id(A_STOP) < 120);
+            let d = e.attr(A_DELAYED);
+            assert!(d == 0.0 || d == 1.0);
+            if d == 0.0 {
+                assert_eq!(e.attr(A_DELAY_MIN), 0.0);
+            } else {
+                assert!(e.attr(A_DELAY_MIN) >= 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn delays_are_stop_correlated() {
+        // delayed events should cluster on stops far above the uniform rate
+        let mut g = BusGen::with_seed(3);
+        let evs = g.take_events(150_000);
+        let mut per_stop = vec![0usize; 120];
+        let mut total = 0usize;
+        for e in &evs {
+            if e.attr(A_DELAYED) == 1.0 {
+                per_stop[e.attr_id(A_STOP) as usize] += 1;
+                total += 1;
+            }
+        }
+        assert!(total > 500, "delays occur: {total}");
+        let max = *per_stop.iter().max().unwrap();
+        let uniform = total as f64 / 120.0;
+        assert!(
+            max as f64 > 3.0 * uniform,
+            "bursts concentrate: max={max} uniform={uniform:.1}"
+        );
+    }
+
+    #[test]
+    fn baseline_delay_rate_reasonable() {
+        let mut g = BusGen::with_seed(4);
+        let evs = g.take_events(50_000);
+        let delayed = evs.iter().filter(|e| e.attr(A_DELAYED) == 1.0).count();
+        let frac = delayed as f64 / evs.len() as f64;
+        assert!((0.01..0.5).contains(&frac), "frac={frac}");
+    }
+}

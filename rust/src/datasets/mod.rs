@@ -1,0 +1,46 @@
+//! Synthetic dataset generators standing in for the paper's three
+//! real-world traces, plus CSV replay/export.
+//!
+//! The paper evaluates on (1) NYSE intraday quotes, (2) the DEBS'13 RTLS
+//! soccer positions, and (3) the Dublin public-bus trace.  None of these
+//! are redistributable here, so each generator synthesizes a seeded,
+//! deterministic stream with the *structure the queries consume* (see
+//! DESIGN.md §3 for the substitution argument):
+//!
+//! * [`stock`] — 500 symbols, geometric random-walk quotes, zipf-ish
+//!   symbol frequencies, rising/falling flags (Q1, Q2),
+//! * [`soccer`] — 2×11 players + ball, possession and proximity events
+//!   (Q3),
+//! * [`bus`] — 911 buses over a stop graph with bursty delays (Q4).
+
+pub mod bus;
+pub mod csv;
+pub mod soccer;
+pub mod stock;
+
+pub use bus::BusGen;
+pub use soccer::SoccerGen;
+pub use stock::StockGen;
+
+/// Which built-in dataset to generate (CLI/config selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// NYSE-like stock quotes.
+    Stock,
+    /// RTLS-like soccer positions.
+    Soccer,
+    /// Dublin-like bus trace.
+    Bus,
+}
+
+impl std::str::FromStr for DatasetKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "stock" | "nyse" => Ok(DatasetKind::Stock),
+            "soccer" | "rtls" => Ok(DatasetKind::Soccer),
+            "bus" | "plbt" => Ok(DatasetKind::Bus),
+            other => anyhow::bail!("unknown dataset {other:?}"),
+        }
+    }
+}

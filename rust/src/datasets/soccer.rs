@@ -1,0 +1,290 @@
+//! RTLS-like synthetic soccer stream (stands in for the DEBS'13 grand
+//! challenge data: players, balls and referees with position sensors).
+//!
+//! Schema: two event types —
+//!
+//! * `poss`  `[player, team, x, y]` — a striker takes ball possession
+//!   (opens Q3's windows),
+//! * `pos`   `[player, team, x, y, ball_dist]` — a player position sample
+//!   with its distance to the current ball possessor.
+//!
+//! The kinematic model keeps 2×11 players doing noisy pursuit around the
+//! pitch; possession alternates between the two designated strikers (one
+//! per team, as in the paper's Q3 setup) with occasional turnovers, and
+//! defenders of the *other* team drift toward the possessor, so
+//! "defend" situations (`ball_dist < radius`) occur at a tunable rate.
+
+use crate::events::{Event, EventStream, Schema};
+use crate::util::Rng;
+
+/// Players per team.
+pub const TEAM_SIZE: usize = 11;
+/// `pos` attribute slots.
+pub const A_PLAYER: usize = 0;
+/// team slot (0 or 1)
+pub const A_TEAM: usize = 1;
+/// x slot (m)
+pub const A_X: usize = 2;
+/// y slot (m)
+pub const A_Y: usize = 3;
+/// distance (m) to current ball possessor, `pos` only
+pub const A_BALL_DIST: usize = 4;
+
+/// Configuration for [`SoccerGen`].
+#[derive(Debug, Clone)]
+pub struct SoccerConfig {
+    /// Sensor sampling interval per player (ms of source time between
+    /// consecutive `pos` events overall).
+    pub tick_ms: u64,
+    /// Probability per tick that possession changes to the other striker.
+    pub turnover_p: f64,
+    /// How strongly opposing defenders are pulled toward the possessor.
+    pub pursuit_gain: f64,
+    /// Marking stand-off distance (m): defenders stop pressing once
+    /// this close, so only jitter takes them inside the defend radius.
+    pub standoff_m: f64,
+    /// Position noise (m per tick).
+    pub jitter: f64,
+    /// Re-announce possession (a `poss` event) every this many full
+    /// player sweeps — the RTLS ball sensor reports continuously, and
+    /// each report opens a Q3 window like the paper's "each incoming
+    /// striker event".
+    pub heartbeat_sweeps: u32,
+}
+
+impl Default for SoccerConfig {
+    fn default() -> Self {
+        SoccerConfig {
+            tick_ms: 1,
+            turnover_p: 0.002,
+            pursuit_gain: 0.035,
+            standoff_m: 9.0,
+            jitter: 0.8,
+            heartbeat_sweeps: 2,
+        }
+    }
+}
+
+/// Seeded RTLS-like generator.
+#[derive(Debug, Clone)]
+pub struct SoccerGen {
+    schema: Schema,
+    cfg: SoccerConfig,
+    rng: Rng,
+    /// player positions, index = team*TEAM_SIZE + number
+    px: Vec<f64>,
+    py: Vec<f64>,
+    /// striker player index per team
+    strikers: [usize; 2],
+    /// current possessing striker (player index)
+    possessor: usize,
+    seq: u64,
+    ts_ms: u64,
+    /// round-robin cursor over players for `pos` emission
+    cursor: usize,
+    /// sweeps since the last possession heartbeat
+    sweeps_since_poss: u32,
+    /// emit a `poss` event on the next call (possession just changed)
+    pending_poss: bool,
+}
+
+impl SoccerGen {
+    /// New generator with the given seed and config.
+    pub fn new(seed: u64, cfg: SoccerConfig) -> Self {
+        let mut schema = Schema::new();
+        schema.add_type("poss", &["player", "team", "x", "y"]);
+        schema.add_type("pos", &["player", "team", "x", "y", "ball_dist"]);
+        let mut rng = Rng::seeded(seed);
+        let n = 2 * TEAM_SIZE;
+        let px = (0..n).map(|_| rng.range_f64(0.0, 105.0)).collect();
+        let py = (0..n).map(|_| rng.range_f64(0.0, 68.0)).collect();
+        let strikers = [9, TEAM_SIZE + 9]; // "number 9" of each team
+        SoccerGen {
+            schema,
+            cfg,
+            rng,
+            px,
+            py,
+            strikers,
+            possessor: 9,
+            seq: 0,
+            ts_ms: 0,
+            cursor: 0,
+            sweeps_since_poss: 0,
+            pending_poss: true, // first event announces initial possession
+        }
+    }
+
+    /// Default-config generator.
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(seed, SoccerConfig::default())
+    }
+
+    /// Type id of `poss` events.
+    pub fn poss_type(&self) -> u16 {
+        0
+    }
+
+    /// Type id of `pos` events.
+    pub fn pos_type(&self) -> u16 {
+        1
+    }
+
+    fn team_of(player: usize) -> usize {
+        player / TEAM_SIZE
+    }
+
+    fn advance_world(&mut self) {
+        // possession turnover?
+        if self.rng.chance(self.cfg.turnover_p) {
+            let cur_team = Self::team_of(self.possessor);
+            self.possessor = self.strikers[1 - cur_team];
+            self.pending_poss = true;
+        }
+        // move every player: defenders of the non-possessing team pursue,
+        // everyone else drifts
+        let (bx, by) = (self.px[self.possessor], self.py[self.possessor]);
+        let poss_team = Self::team_of(self.possessor);
+        for p in 0..self.px.len() {
+            let dx = bx - self.px[p];
+            let dy = by - self.py[p];
+            let dist = (dx * dx + dy * dy).sqrt().max(1e-6);
+            // opposing players mark the possessor: press toward the
+            // stand-off ring from outside, back off from inside — an
+            // OU-like hover around `standoff_m`, so the defend radius
+            // (< standoff) is only crossed by jitter excursions
+            let marking = Self::team_of(p) != poss_team && p != self.possessor;
+            let (gx, gy) = if marking {
+                let pull = (dist - self.cfg.standoff_m) / dist;
+                (pull * dx, pull * dy)
+            } else {
+                (0.0, 0.0)
+            };
+            self.px[p] += self.cfg.pursuit_gain * gx
+                + self.rng.normal_with(0.0, self.cfg.jitter);
+            self.py[p] += self.cfg.pursuit_gain * gy
+                + self.rng.normal_with(0.0, self.cfg.jitter);
+            self.px[p] = self.px[p].clamp(0.0, 105.0);
+            self.py[p] = self.py[p].clamp(0.0, 68.0);
+        }
+    }
+}
+
+impl EventStream for SoccerGen {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_event(&mut self) -> Option<Event> {
+        if self.pending_poss {
+            self.pending_poss = false;
+            let p = self.possessor;
+            let e = Event::new(
+                self.seq,
+                self.ts_ms,
+                0,
+                &[
+                    p as f64,
+                    Self::team_of(p) as f64,
+                    self.px[p],
+                    self.py[p],
+                ],
+            );
+            self.seq += 1;
+            return Some(e);
+        }
+        // one world step per full player sweep
+        if self.cursor == 0 {
+            self.advance_world();
+            self.sweeps_since_poss += 1;
+            if self.sweeps_since_poss >= self.cfg.heartbeat_sweeps {
+                self.sweeps_since_poss = 0;
+                self.pending_poss = true;
+            }
+            if self.pending_poss {
+                return self.next_event();
+            }
+        }
+        let p = self.cursor;
+        self.cursor = (self.cursor + 1) % self.px.len();
+        let (bx, by) = (self.px[self.possessor], self.py[self.possessor]);
+        let d = ((self.px[p] - bx).powi(2) + (self.py[p] - by).powi(2)).sqrt();
+        let e = Event::new(
+            self.seq,
+            self.ts_ms,
+            1,
+            &[
+                p as f64,
+                Self::team_of(p) as f64,
+                self.px[p],
+                self.py[p],
+                d,
+            ],
+        );
+        self.seq += 1;
+        self.ts_ms += self.cfg.tick_ms;
+        Some(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = SoccerGen::with_seed(1);
+        let mut b = SoccerGen::with_seed(1);
+        for _ in 0..500 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+
+    #[test]
+    fn first_event_is_possession() {
+        let mut g = SoccerGen::with_seed(2);
+        let e = g.next_event().unwrap();
+        assert_eq!(e.etype, 0);
+        assert_eq!(e.attr_id(A_PLAYER), 9);
+    }
+
+    #[test]
+    fn positions_stay_on_pitch() {
+        let mut g = SoccerGen::with_seed(3);
+        for e in g.take_events(20_000) {
+            if e.etype == 1 {
+                assert!((0.0..=105.0).contains(&e.attr(A_X)));
+                assert!((0.0..=68.0).contains(&e.attr(A_Y)));
+                assert!(e.attr(A_BALL_DIST) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn possession_changes_over_time() {
+        let mut g = SoccerGen::with_seed(4);
+        let poss: Vec<i64> = g
+            .take_events(200_000)
+            .iter()
+            .filter(|e| e.etype == 0)
+            .map(|e| e.attr_id(A_PLAYER))
+            .collect();
+        assert!(poss.len() > 3, "turnovers happen: {}", poss.len());
+        assert!(poss.contains(&9) && poss.contains(&(TEAM_SIZE as i64 + 9)));
+    }
+
+    #[test]
+    fn defenders_get_close() {
+        let mut g = SoccerGen::with_seed(5);
+        let close = g
+            .take_events(100_000)
+            .iter()
+            .filter(|e| {
+                e.etype == 1
+                    && e.attr(A_BALL_DIST) < 3.0
+                    && e.attr_id(A_TEAM) != 0
+            })
+            .count();
+        assert!(close > 10, "pursuit creates defend events: {close}");
+    }
+}

@@ -1,0 +1,176 @@
+//! NYSE-like synthetic quote stream (stands in for the paper's Google
+//! Finance intraday data: 500 symbols over two months).
+//!
+//! Schema: one event type `quote` with attributes
+//! `[symbol, price, rising]` where `rising` is 1.0 if the quote is above
+//! the symbol's previous quote (the RE/FE flags of Q1/Q2).
+//!
+//! Symbols trade at zipf-ish frequencies (a few heavy leaders, a long
+//! tail) and prices follow independent geometric random walks, so rising
+//! and falling runs occur with realistic persistence but no global trend.
+
+use crate::events::{Event, EventStream, Schema};
+use crate::util::Rng;
+
+/// Event-type name used by this generator.
+pub const QUOTE: &str = "quote";
+/// Attribute slots of `quote`.
+pub const A_SYMBOL: usize = 0;
+/// price slot
+pub const A_PRICE: usize = 1;
+/// rising-flag slot (1.0 = rising vs previous quote of the symbol)
+pub const A_RISING: usize = 2;
+/// percent price move vs the symbol's previous quote
+pub const A_MOVE: usize = 3;
+
+/// Configuration for [`StockGen`].
+#[derive(Debug, Clone)]
+pub struct StockConfig {
+    /// Number of distinct symbols (paper: 500).
+    pub symbols: usize,
+    /// Per-step volatility of the log-price random walk.
+    pub volatility: f64,
+    /// Zipf exponent for symbol trade frequency.
+    pub zipf_s: f64,
+    /// Milliseconds between consecutive quotes (source time).
+    pub tick_ms: u64,
+}
+
+impl Default for StockConfig {
+    fn default() -> Self {
+        StockConfig {
+            symbols: 500,
+            volatility: 0.004,
+            zipf_s: 1.05,
+            tick_ms: 2,
+        }
+    }
+}
+
+/// Seeded NYSE-like quote generator.
+#[derive(Debug, Clone)]
+pub struct StockGen {
+    schema: Schema,
+    cfg: StockConfig,
+    rng: Rng,
+    prices: Vec<f64>,
+    weights: Vec<f64>,
+    seq: u64,
+    ts_ms: u64,
+}
+
+impl StockGen {
+    /// New generator with the given seed and config.
+    pub fn new(seed: u64, cfg: StockConfig) -> Self {
+        let mut schema = Schema::new();
+        schema.add_type(QUOTE, &["symbol", "price", "rising", "move"]);
+        let mut rng = Rng::seeded(seed);
+        let prices = (0..cfg.symbols)
+            .map(|_| rng.range_f64(20.0, 400.0))
+            .collect();
+        let weights = (0..cfg.symbols)
+            .map(|r| 1.0 / ((r + 1) as f64).powf(cfg.zipf_s))
+            .collect();
+        StockGen {
+            schema,
+            cfg,
+            rng,
+            prices,
+            weights,
+            seq: 0,
+            ts_ms: 0,
+        }
+    }
+
+    /// Default-config generator.
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(seed, StockConfig::default())
+    }
+}
+
+impl EventStream for StockGen {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    fn next_event(&mut self) -> Option<Event> {
+        let sym = self.rng.weighted_index(&self.weights);
+        let old = self.prices[sym];
+        // geometric random walk step
+        let step = self.rng.normal_with(0.0, self.cfg.volatility);
+        let new = (old * step.exp()).clamp(1.0, 10_000.0);
+        self.prices[sym] = new;
+        let rising = if new > old { 1.0 } else { 0.0 };
+        let move_pct = 100.0 * (new - old) / old;
+        let e = Event::new(
+            self.seq,
+            self.ts_ms,
+            0,
+            &[sym as f64, new, rising, move_pct],
+        );
+        self.seq += 1;
+        self.ts_ms += self.cfg.tick_ms;
+        Some(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = StockGen::with_seed(1);
+        let mut b = StockGen::with_seed(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+
+    #[test]
+    fn rising_flag_tracks_price() {
+        let mut g = StockGen::with_seed(2);
+        let mut last: std::collections::HashMap<i64, f64> = Default::default();
+        for _ in 0..5_000 {
+            let e = g.next_event().unwrap();
+            let sym = e.attr_id(A_SYMBOL);
+            let price = e.attr(A_PRICE);
+            if let Some(&prev) = last.get(&sym) {
+                let rising = e.attr(A_RISING) == 1.0;
+                assert_eq!(rising, price > prev, "flag must match walk");
+            }
+            last.insert(sym, price);
+        }
+    }
+
+    #[test]
+    fn leaders_trade_more() {
+        let mut g = StockGen::with_seed(3);
+        let mut counts = vec![0usize; 500];
+        for _ in 0..50_000 {
+            counts[g.next_event().unwrap().attr_id(A_SYMBOL) as usize] += 1;
+        }
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[490..].iter().sum();
+        assert!(head > tail * 5, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn seq_and_time_monotone() {
+        let mut g = StockGen::with_seed(4);
+        let evs = g.take_events(1000);
+        assert!(evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+        assert!(evs.windows(2).all(|w| w[0].ts_ms <= w[1].ts_ms));
+    }
+
+    #[test]
+    fn rising_roughly_balanced() {
+        let mut g = StockGen::with_seed(5);
+        let n = 20_000;
+        let rising = (0..n)
+            .filter(|_| g.next_event().unwrap().attr(A_RISING) == 1.0)
+            .count();
+        let frac = rising as f64 / n as f64;
+        assert!((0.4..0.6).contains(&frac), "frac={frac}");
+    }
+}

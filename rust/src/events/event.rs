@@ -1,0 +1,81 @@
+//! The primitive event: a fixed-size, `Copy`-able record so the operator
+//! hot path never allocates per event.
+
+/// Dense event-type id (per schema).
+pub type EventType = u16;
+
+/// Maximum number of attributes an event can carry.  Chosen to cover the
+/// widest built-in schema (soccer positions) with room to spare.
+pub const MAX_ATTRS: usize = 6;
+
+/// A primitive event.  Attribute meaning is defined by the stream's
+/// [`super::Schema`]; identifiers (symbol, bus id, stop id, player id) are
+/// stored as exactly-representable small integers in `f64` slots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Global sequence number (total order over the stream).
+    pub seq: u64,
+    /// Event timestamp in milliseconds (source time).
+    pub ts_ms: u64,
+    /// Event type id within the schema.
+    pub etype: EventType,
+    /// Attribute values, `attrs[..schema.attr_count(etype)]` are valid.
+    pub attrs: [f64; MAX_ATTRS],
+}
+
+impl Event {
+    /// Build an event; unspecified attribute slots are zero.
+    pub fn new(seq: u64, ts_ms: u64, etype: EventType, attrs: &[f64]) -> Self {
+        assert!(attrs.len() <= MAX_ATTRS, "too many attributes");
+        let mut a = [0.0; MAX_ATTRS];
+        a[..attrs.len()].copy_from_slice(attrs);
+        Event {
+            seq,
+            ts_ms,
+            etype,
+            attrs: a,
+        }
+    }
+
+    /// Attribute by slot index.
+    #[inline]
+    pub fn attr(&self, slot: usize) -> f64 {
+        self.attrs[slot]
+    }
+
+    /// Attribute interpreted as an integer id.
+    #[inline]
+    pub fn attr_id(&self, slot: usize) -> i64 {
+        self.attrs[slot] as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let e = Event::new(7, 1000, 2, &[3.0, 1.5]);
+        assert_eq!(e.seq, 7);
+        assert_eq!(e.etype, 2);
+        assert_eq!(e.attr(0), 3.0);
+        assert_eq!(e.attr_id(0), 3);
+        assert_eq!(e.attr(1), 1.5);
+        assert_eq!(e.attr(5), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many attributes")]
+    fn too_many_attrs_panics() {
+        Event::new(0, 0, 0, &[0.0; MAX_ATTRS + 1]);
+    }
+
+    #[test]
+    fn event_is_copy_and_small() {
+        // hot-path contract: events are copied into windows without heap work
+        fn takes_copy<T: Copy>(_t: T) {}
+        takes_copy(Event::new(0, 0, 0, &[]));
+        assert!(std::mem::size_of::<Event>() <= 72);
+    }
+}

@@ -1,0 +1,9 @@
+//! Primitive events, schemas, and the stream abstraction.
+
+pub mod event;
+pub mod schema;
+pub mod stream;
+
+pub use event::{Event, EventType, MAX_ATTRS};
+pub use schema::Schema;
+pub use stream::{EventStream, VecStream};

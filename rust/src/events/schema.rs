@@ -1,0 +1,91 @@
+//! Schemas: name ↔ slot mapping for event types and their attributes.
+//!
+//! A schema is shared by a dataset generator, the query DSL (which refers
+//! to attributes by name) and the NFA compiler (which resolves names to
+//! slots once, so predicate evaluation is pure index arithmetic).
+
+use std::collections::HashMap;
+
+use super::event::EventType;
+
+/// Event-type and attribute naming for one stream.
+#[derive(Debug, Default, Clone)]
+pub struct Schema {
+    type_by_name: HashMap<String, EventType>,
+    type_names: Vec<String>,
+    /// attribute names per event type, slot order
+    attrs: Vec<Vec<String>>,
+}
+
+impl Schema {
+    /// Empty schema.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an event type with its attribute names (slot order).
+    /// Returns the dense type id.
+    pub fn add_type(&mut self, name: &str, attr_names: &[&str]) -> EventType {
+        assert!(
+            !self.type_by_name.contains_key(name),
+            "duplicate event type {name}"
+        );
+        assert!(attr_names.len() <= super::event::MAX_ATTRS);
+        let id = self.type_names.len() as EventType;
+        self.type_names.push(name.to_string());
+        self.type_by_name.insert(name.to_string(), id);
+        self.attrs
+            .push(attr_names.iter().map(|s| s.to_string()).collect());
+        id
+    }
+
+    /// Type id by name.
+    pub fn type_id(&self, name: &str) -> Option<EventType> {
+        self.type_by_name.get(name).copied()
+    }
+
+    /// Type name by id.
+    pub fn type_name(&self, id: EventType) -> &str {
+        &self.type_names[id as usize]
+    }
+
+    /// Attribute slot for `(type, attr name)`.
+    pub fn attr_slot(&self, etype: EventType, attr: &str) -> Option<usize> {
+        self.attrs[etype as usize].iter().position(|a| a == attr)
+    }
+
+    /// Attribute names of a type.
+    pub fn attr_names(&self, etype: EventType) -> &[String] {
+        &self.attrs[etype as usize]
+    }
+
+    /// Number of registered types.
+    pub fn type_count(&self) -> usize {
+        self.type_names.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_resolve() {
+        let mut s = Schema::new();
+        let q = s.add_type("quote", &["symbol", "price", "rising"]);
+        assert_eq!(s.type_id("quote"), Some(q));
+        assert_eq!(s.type_name(q), "quote");
+        assert_eq!(s.attr_slot(q, "price"), Some(1));
+        assert_eq!(s.attr_slot(q, "nope"), None);
+        assert_eq!(s.type_count(), 1);
+        assert_eq!(s.attr_names(q).len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate event type")]
+    fn duplicate_type_panics() {
+        let mut s = Schema::new();
+        s.add_type("a", &[]);
+        s.add_type("a", &[]);
+    }
+}

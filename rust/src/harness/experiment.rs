@@ -1,0 +1,367 @@
+//! The three-phase experiment runner (paper §IV-A/§IV-B).
+//!
+//! 1. **Ground truth** — a fresh operator processes the entire trace
+//!    without shedding or throttling; its complex events are the truth
+//!    set and its mean per-event cost is the operator's capacity.
+//! 2. **Calibrate + train** — a second operator streams the warm-up
+//!    prefix below capacity ("we first stream events at event input
+//!    rates which are less or equal to the maximum operator throughput
+//!    until the model is built"): the latency regressions `f`/`g` are
+//!    fitted and the Markov model is built through the model engine
+//!    (AOT/PJRT or rust fallback).
+//! 3. **Overloaded measurement** — the remaining events arrive at
+//!    `rate × capacity` in virtual time; the shedder keeps the latency
+//!    bound; completions are compared against the truth set.
+
+use crate::config::ExperimentConfig;
+use crate::datasets::{BusGen, DatasetKind, SoccerGen, StockGen};
+use crate::events::{Event, EventStream};
+use crate::metrics::{LatencyTracker, QorAccounting};
+use crate::model::{ModelBuilder, ModelConfig};
+use crate::operator::Operator;
+use crate::query::builtin;
+use crate::query::Query;
+use crate::shedding::{
+    EventBaselineShedder, NoShedder, OverloadDetector, PSpiceShedder,
+    PmBaselineShedder, Shedder, ShedderKind,
+};
+use crate::sim::{RateSource, SimClock};
+
+/// Everything a figure driver needs from one run.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// configuration echo
+    pub query: String,
+    /// shedder used
+    pub shedder: &'static str,
+    /// weighted FN percentage vs ground truth
+    pub fn_percent: f64,
+    /// detected-but-not-true complex events (must be 0 for PM shedding)
+    pub false_positives: usize,
+    /// ground-truth complex events in scope
+    pub truth_total: usize,
+    /// ground-truth match probability (completions / PMs created)
+    pub match_probability: f64,
+    /// measured capacity (mean ns per event at steady state)
+    pub capacity_ns: f64,
+    /// latency trace of the measurement phase
+    pub latency: LatencyTracker,
+    /// shed time / operator busy time during measurement
+    pub shed_overhead: f64,
+    /// PMs dropped during measurement
+    pub dropped_pms: u64,
+    /// events dropped during measurement (E-BL)
+    pub dropped_events: u64,
+    /// model build wall-clock seconds (phase 2)
+    pub model_build_secs: f64,
+    /// model engine used ("pjrt-aot" or "rust-fallback")
+    pub engine: &'static str,
+    /// peak live PM count seen during measurement
+    pub peak_pms: usize,
+    /// drift-triggered model rebuilds during measurement (§III-D)
+    pub retrains: u32,
+}
+
+/// Build the query set + the E-BL key slot for a configuration.
+pub fn build_queries(cfg: &ExperimentConfig) -> crate::Result<(Vec<Query>, usize)> {
+    let (mut queries, key_slot) = match cfg.query.as_str() {
+        "q1" => (builtin::q1(cfg.window).queries, crate::datasets::stock::A_SYMBOL),
+        "q2" => (builtin::q2(cfg.window).queries, crate::datasets::stock::A_SYMBOL),
+        "q3" => (
+            builtin::q3(cfg.pattern_n, cfg.window).queries,
+            crate::datasets::soccer::A_PLAYER,
+        ),
+        "q4" => (
+            builtin::q4(cfg.pattern_n, cfg.window, cfg.slide).queries,
+            crate::datasets::bus::A_BUS,
+        ),
+        "q1+q2" => {
+            let mut qs = builtin::q1(cfg.window).queries;
+            qs.extend(builtin::q2(cfg.window).queries);
+            (qs, crate::datasets::stock::A_SYMBOL)
+        }
+        other => anyhow::bail!("unknown query {other:?}"),
+    };
+    if !cfg.weights.is_empty() {
+        anyhow::ensure!(
+            cfg.weights.len() == queries.len(),
+            "{} weights for {} queries",
+            cfg.weights.len(),
+            queries.len()
+        );
+        for (q, &w) in queries.iter_mut().zip(&cfg.weights) {
+            q.weight = w;
+        }
+    }
+    Ok((queries, key_slot))
+}
+
+/// Generate the full event trace for a configuration.
+pub fn build_trace(cfg: &ExperimentConfig) -> Vec<Event> {
+    let total = (cfg.warmup + cfg.events) as usize;
+    match cfg.dataset {
+        DatasetKind::Stock => StockGen::with_seed(cfg.seed).take_events(total),
+        DatasetKind::Soccer => SoccerGen::with_seed(cfg.seed).take_events(total),
+        DatasetKind::Bus => BusGen::with_seed(cfg.seed).take_events(total),
+    }
+}
+
+fn apply_cost_factors(op: &mut Operator, cfg: &ExperimentConfig) {
+    if cfg.cost_factors.is_empty() {
+        return;
+    }
+    assert_eq!(
+        cfg.cost_factors.len(),
+        op.cost.check_factor.len(),
+        "cost_factors must match query count"
+    );
+    op.cost.check_factor.clone_from(&cfg.cost_factors);
+}
+
+/// Phase 1: ground truth + capacity.  Returns (truth accounting shell,
+/// capacity ns/event, match probability).
+fn ground_truth(
+    cfg: &ExperimentConfig,
+    queries: &[Query],
+    trace: &[Event],
+) -> (QorAccounting, f64, f64) {
+    let mut op = Operator::new(queries.to_vec());
+    apply_cost_factors(&mut op, cfg);
+    op.obs.enabled = false; // no model learning on the truth run
+    let weights: Vec<f64> = queries.iter().map(|q| q.weight).collect();
+    let mut qor = QorAccounting::new(weights, cfg.warmup);
+    let mut cost_sum = 0.0;
+    let mut cost_n = 0u64;
+    let skip = trace.len() / 10; // settle before measuring capacity
+    for (i, e) in trace.iter().enumerate() {
+        let out = op.process_event(e);
+        for ce in &out.completions {
+            qor.add_truth(ce);
+        }
+        if i >= skip {
+            cost_sum += out.cost_ns;
+            cost_n += 1;
+        }
+    }
+    let capacity = cost_sum / cost_n.max(1) as f64;
+    (qor, capacity, op.match_probability())
+}
+
+/// Run one full experiment.
+pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
+    let (queries, key_slot) = build_queries(cfg)?;
+    let trace = build_trace(cfg);
+    let lb_ns = cfg.lb_ms * 1e6;
+
+    // ---- phase 1: ground truth ------------------------------------
+    let (mut qor, capacity_ns, match_probability) =
+        ground_truth(cfg, &queries, &trace);
+
+    // ---- phase 2: calibrate + train --------------------------------
+    let mut op = Operator::new(queries.clone());
+    apply_cost_factors(&mut op, cfg);
+    let mut detector = OverloadDetector::new(lb_ns, 0.02 * lb_ns);
+    let warmup = cfg.warmup as usize;
+    for e in &trace[..warmup.min(trace.len())] {
+        let n_before = op.pm_count();
+        let out = op.process_event(e);
+        for ce in &out.completions {
+            qor.add_detected(ce); // warm-up completions are out of scope anyway
+        }
+        detector.observe_processing(n_before, out.cost_ns);
+    }
+    anyhow::ensure!(detector.fit(), "latency regression needs more warm-up");
+    // seed g() with the cost model's shed cost shape
+    for n in [100usize, 1_000, 5_000, 20_000, 50_000] {
+        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+    }
+    detector.fit();
+
+    let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
+    let tables = builder.build(&op)?;
+    let model_build_secs = builder.last_build_secs;
+    let engine = builder.engine_name();
+    // keep capturing observations only if drift-triggered retraining is
+    // on (§III-D); otherwise stop paying for capture
+    let retraining = cfg.retrain_every > 0;
+    op.obs.enabled = retraining;
+    let mut drift = retraining
+        .then(|| crate::model::DriftDetector::snapshot(&op.obs, cfg.drift_threshold));
+
+    let mut shedder: Box<dyn Shedder> = match cfg.shedder {
+        ShedderKind::None => Box::new(NoShedder),
+        ShedderKind::PSpice => Box::new(PSpiceShedder::new(detector.clone(), tables)),
+        ShedderKind::PSpiceMinus => {
+            let mut b = ModelBuilder::with_auto_engine(ModelConfig {
+                use_tau: false,
+                ..ModelConfig::default()
+            });
+            // rebuild tables without the processing-time term
+            op.obs.enabled = true;
+            let t = b.build(&op)?;
+            op.obs.enabled = false;
+            Box::new(PSpiceShedder::new(detector.clone(), t))
+        }
+        ShedderKind::PmBaseline => {
+            Box::new(PmBaselineShedder::new(detector.clone(), cfg.seed ^ 0xBE11))
+        }
+        ShedderKind::EventBaseline => Box::new(EventBaselineShedder::new(
+            detector.clone(),
+            key_slot,
+            &op.queries,
+            cfg.seed ^ 0xEB1,
+        )),
+    };
+
+    // ---- phase 3: overloaded measurement ---------------------------
+    let mut clock = SimClock::new();
+    let source = RateSource::from_capacity(capacity_ns, cfg.rate, 0.0);
+    let mut latency = LatencyTracker::new(lb_ns, (cfg.events / 2_000).max(1));
+    let mut shed_ns = 0.0;
+    let mut busy_ns = 0.0;
+    let mut dropped_pms = 0u64;
+    let mut dropped_events = 0u64;
+    let mut peak_pms = 0usize;
+    let mut retrains = 0u32;
+
+    for (i, e) in trace[warmup.min(trace.len())..].iter().enumerate() {
+        let arrival = source.arrival_ns(i as u64);
+        let l_q = clock.begin_service(arrival);
+        let rep = shedder.on_event(e, l_q, &mut op);
+        clock.advance(rep.cost_ns);
+        shed_ns += rep.cost_ns;
+        busy_ns += rep.cost_ns;
+        dropped_pms += rep.dropped_pms as u64;
+        let out = if rep.dropped_event {
+            dropped_events += 1;
+            op.process_bookkeeping(e)
+        } else {
+            op.process_event(e)
+        };
+        clock.advance(out.cost_ns);
+        busy_ns += out.cost_ns;
+        for ce in &out.completions {
+            qor.add_detected(ce);
+        }
+        latency.record(clock.now_ns(), clock.now_ns() - arrival);
+        peak_pms = peak_pms.max(op.pm_count());
+        // §III-D: periodic drift check -> rebuild the model.  Building
+        // the candidate matrix is cheap (counts -> probabilities); the
+        // full table rebuild runs only on actual drift.
+        if retraining && (i as u64 + 1) % cfg.retrain_every == 0 {
+            if let Some(d) = &drift {
+                let (_mse, drifted) = d.check(&op.obs);
+                if drifted {
+                    let fresh = builder.build(&op)?;
+                    shedder.update_tables(fresh);
+                    drift = Some(crate::model::DriftDetector::snapshot(
+                        &op.obs,
+                        cfg.drift_threshold,
+                    ));
+                    retrains += 1;
+                }
+            }
+        }
+    }
+
+    Ok(ExperimentResult {
+        query: cfg.query.clone(),
+        shedder: shedder.name(),
+        fn_percent: qor.fn_percent(),
+        false_positives: qor.false_positives(),
+        truth_total: qor.truth_total(),
+        match_probability,
+        capacity_ns,
+        latency,
+        shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
+        dropped_pms,
+        dropped_events,
+        model_build_secs,
+        engine,
+        peak_pms,
+        retrains,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            query: "q4".into(),
+            window: 2_000,
+            pattern_n: 4,
+            slide: 250,
+            dataset: DatasetKind::Bus,
+            seed: 3,
+            events: 20_000,
+            warmup: 20_000,
+            rate: 1.4,
+            lb_ms: 0.05,
+            shedder: ShedderKind::PSpice,
+            weights: Vec::new(),
+            cost_factors: Vec::new(),
+            retrain_every: 0,
+            drift_threshold: 0.01,
+        }
+    }
+
+    #[test]
+    fn pspice_run_end_to_end() {
+        let res = run_experiment(&tiny_cfg()).unwrap();
+        assert!(res.truth_total > 0, "ground truth has complex events");
+        assert!((0.0..=100.0).contains(&res.fn_percent));
+        assert_eq!(res.false_positives, 0, "white-box shedding never lies");
+        assert!(res.capacity_ns > 0.0);
+        assert!(res.match_probability > 0.0 && res.match_probability < 1.0);
+    }
+
+    #[test]
+    fn no_shedding_misses_nothing_without_overload() {
+        let mut cfg = tiny_cfg();
+        cfg.shedder = ShedderKind::None;
+        cfg.rate = 0.5; // under capacity
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.fn_percent, 0.0);
+        assert_eq!(res.dropped_pms, 0);
+    }
+
+    #[test]
+    fn overload_without_shedding_violates_bound() {
+        let mut cfg = tiny_cfg();
+        cfg.shedder = ShedderKind::None;
+        cfg.rate = 1.5;
+        let res = run_experiment(&cfg).unwrap();
+        // queue grows unboundedly: the bound must blow through
+        assert!(res.latency.violation_rate() > 0.3, "rate={}", res.latency.violation_rate());
+    }
+
+    #[test]
+    fn pspice_holds_the_bound_under_overload() {
+        let res = run_experiment(&tiny_cfg()).unwrap();
+        assert!(
+            res.latency.violation_rate() < 0.05,
+            "violations={} max={}ns",
+            res.latency.violation_rate(),
+            res.latency.stats.max()
+        );
+        assert!(res.dropped_pms > 0, "overload forces drops");
+    }
+
+    #[test]
+    fn pm_baseline_drops_more_quality() {
+        let pspice = run_experiment(&tiny_cfg()).unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.shedder = ShedderKind::PmBaseline;
+        let pmbl = run_experiment(&cfg).unwrap();
+        assert_eq!(pmbl.false_positives, 0);
+        // the headline claim, on a small workload: informed ≤ random
+        assert!(
+            pspice.fn_percent <= pmbl.fn_percent + 5.0,
+            "pspice={:.1}% pm-bl={:.1}%",
+            pspice.fn_percent,
+            pmbl.fn_percent
+        );
+    }
+}

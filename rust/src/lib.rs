@@ -1,0 +1,64 @@
+//! # pSPICE — Partial Match Shedding for Complex Event Processing
+//!
+//! A from-scratch reproduction of *"pSPICE: Partial Match Shedding for
+//! Complex Event Processing"* (Slo, Bhowmik, Flaig, Rothermel, 2020) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the CEP coordinator: event streams, windows,
+//!   NFA pattern matching, the multi-query operator, the pSPICE load shedder
+//!   and overload detector (paper Algorithms 1 & 2), both baselines
+//!   (PM-BL, E-BL), dataset generators, a discrete-event load simulation and
+//!   the full experiment harness for the paper's Figures 5–9.
+//! * **Layer 2 (JAX, build-time)** — the model-builder compute graph
+//!   (Markov-chain completion probability + Markov-reward value iteration),
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (Pallas, build-time)** — the fused batched recurrence step
+//!   kernel inside that graph.
+//!
+//! The rust binary is self-contained once `make artifacts` has produced the
+//! HLO artifacts; python never runs on the request path.  A pure-rust
+//! fallback model engine ([`runtime::fallback`]) allows artifact-less
+//! operation and differential testing of the AOT path.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`events`] | primitive events, schemas, stream abstraction |
+//! | [`datasets`] | synthetic NYSE / RTLS-soccer / Dublin-bus generators + CSV |
+//! | [`query`] | pattern AST, Tesla-like DSL parser, built-in Q1–Q4 |
+//! | [`nfa`] | pattern → state machine compilation, partial matches |
+//! | [`windows`] | count/time/slide window policies and manager |
+//! | [`operator`] | the CEP operator: match loop, observations, cost model |
+//! | [`shedding`] | pSPICE / PM-BL / E-BL shedders + overload detector |
+//! | [`model`] | observation stats → Markov model → utility tables |
+//! | [`runtime`] | PJRT artifact loading/execution + rust fallback |
+//! | [`sim`] | virtual-time source/queue for deterministic overload runs |
+//! | [`metrics`] | latency, throughput, QoR (FN/FP) accounting |
+//! | [`harness`] | experiment runner + Figure 5–9 drivers |
+//! | [`linalg`] | dense matrices, regression, Markov oracle |
+//! | [`config`] | TOML-subset experiment configuration |
+//! | [`cli`] | argument parsing for the `pspice` binary |
+//! | [`util`] | RNG, interner, running stats, logging |
+//! | [`testing`] | minimal property-testing support (offline proptest stand-in) |
+
+pub mod cli;
+pub mod config;
+pub mod datasets;
+pub mod events;
+pub mod harness;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod nfa;
+pub mod operator;
+pub mod query;
+pub mod runtime;
+pub mod shedding;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod windows;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,237 @@
+//! Pure-rust Markov-chain / Markov-reward oracle.
+//!
+//! Mirrors the L2 JAX graph (`python/compile/model.py`) exactly:
+//!
+//! * completion probability `c_j = T · c_{j-1}`, `c_0 = e_m` (paper Eq. 3 —
+//!   `c_j(i) == T^j(i, m)` for an absorbing final state),
+//! * remaining processing time `τ_j = r + T · τ_{j-1}`, `τ_0 = 0`
+//!   (value-iteration / Bellman backup for the Markov reward process).
+//!
+//! Used (a) as the fallback model engine when no AOT artifact is present,
+//! (b) to differentially validate the PJRT path, and (c) by the bin
+//! composition below which turns the learned one-event chain into a
+//! per-bin chain (exact by Chapman–Kolmogorov).
+
+use super::matrix::Mat;
+
+/// Result of running the recurrence for `nbins` bins: row `j` (0-based)
+/// holds the values when `j+1` bins remain in the window.
+#[derive(Debug, Clone)]
+pub struct MarkovTables {
+    /// Completion probabilities, `nbins` rows × `m` states.
+    pub completion: Vec<Vec<f64>>,
+    /// Expected remaining processing time, `nbins` rows × `m` states.
+    pub remaining_time: Vec<Vec<f64>>,
+}
+
+/// Advance the fused recurrence once (rust twin of the Pallas kernel).
+pub fn step(t: &Mat, r: &[f64], c: &[f64], tau: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let c2 = t.matvec(c);
+    let mut tau2 = t.matvec(tau);
+    for (x, &ri) in tau2.iter_mut().zip(r) {
+        *x += ri;
+    }
+    (c2, tau2)
+}
+
+/// Run the full recurrence for `nbins` bins (rust twin of
+/// `model.build_tables` for a single pattern).
+pub fn build_tables(t: &Mat, r: &[f64], nbins: usize) -> MarkovTables {
+    let m = t.rows();
+    assert_eq!(t.cols(), m);
+    assert_eq!(r.len(), m);
+    let mut c = vec![0.0; m];
+    c[m - 1] = 1.0;
+    let mut tau = vec![0.0; m];
+    let mut completion = Vec::with_capacity(nbins);
+    let mut remaining_time = Vec::with_capacity(nbins);
+    for _ in 0..nbins {
+        let (c2, tau2) = step(t, r, &c, &tau);
+        c = c2;
+        tau = tau2;
+        completion.push(c.clone());
+        remaining_time.push(tau.clone());
+    }
+    MarkovTables {
+        completion,
+        remaining_time,
+    }
+}
+
+/// Compose the one-event chain `(T, r)` into the `bs`-event chain
+/// `(T_bs, r_bs)` by binary decomposition of `bs`.
+///
+/// Chain composition is associative with
+/// `(T_a, r_a) ∘ (T_b, r_b) = (T_a·T_b, r_a + T_a·r_b)`; the completion
+/// and reward recurrences over the composed chain equal `bs` steps of the
+/// original chain *exactly* (Chapman–Kolmogorov), which is what makes the
+/// paper's binning + interpolation sound.
+pub fn compose_bin(t: &Mat, r: &[f64], bs: u64) -> (Mat, Vec<f64>) {
+    assert!(bs >= 1, "bin size must be >= 1");
+    let m = t.rows();
+    // accumulator starts as the identity chain (0 steps)
+    let mut acc_t = Mat::eye(m);
+    let mut acc_r = vec![0.0; m];
+    let mut base_t = t.clone();
+    let mut base_r = r.to_vec();
+    let mut k = bs;
+    while k > 0 {
+        if k & 1 == 1 {
+            // acc = acc ∘ base
+            let new_r: Vec<f64> = acc_t
+                .matvec(&base_r)
+                .iter()
+                .zip(&acc_r)
+                .map(|(x, y)| x + y)
+                .collect();
+            acc_t = acc_t.matmul(&base_t);
+            acc_r = new_r;
+        }
+        k >>= 1;
+        if k > 0 {
+            // base = base ∘ base
+            let new_r: Vec<f64> = base_t
+                .matvec(&base_r)
+                .iter()
+                .zip(&base_r)
+                .map(|(x, y)| x + y)
+                .collect();
+            base_t = base_t.matmul(&base_t);
+            base_r = new_r;
+        }
+    }
+    (acc_t, acc_r)
+}
+
+/// Make the final state of a learned transition matrix absorbing and
+/// renormalize rows; guards against sparse observation counts.
+pub fn absorbing_normalize(t: &mut Mat) {
+    let m = t.rows();
+    for i in 0..m {
+        if i == m - 1 {
+            for j in 0..m {
+                t[(i, j)] = if j == m - 1 { 1.0 } else { 0.0 };
+            }
+            continue;
+        }
+        let s: f64 = t.row(i).iter().sum();
+        if s <= 0.0 {
+            // never observed: stay put with certainty
+            for j in 0..m {
+                t[(i, j)] = if j == i { 1.0 } else { 0.0 };
+            }
+        } else {
+            for j in 0..m {
+                t[(i, j)] /= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> (Mat, Vec<f64>) {
+        // s1 -(0.3)-> s2, stay 0.7; s2 -(0.5)-> s3(final), stay 0.5
+        let t = Mat::from_rows(
+            3,
+            3,
+            &[0.7, 0.3, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0, 1.0],
+        );
+        let r = vec![1.0, 2.0, 0.0];
+        (t, r)
+    }
+
+    #[test]
+    fn completion_equals_matrix_power() {
+        let (t, r) = chain3();
+        let tables = build_tables(&t, &r, 16);
+        for j in 0..16 {
+            let p = t.pow(j as u64 + 1);
+            for i in 0..3 {
+                assert!(
+                    (tables.completion[j][i] - p[(i, 2)]).abs() < 1e-12,
+                    "j={j} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn completion_monotone_in_bins() {
+        let (t, r) = chain3();
+        let tables = build_tables(&t, &r, 64);
+        for j in 1..64 {
+            for i in 0..3 {
+                assert!(tables.completion[j][i] + 1e-12 >= tables.completion[j - 1][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_absorbing_state_is_zero() {
+        let (t, r) = chain3();
+        let tables = build_tables(&t, &r, 32);
+        for row in &tables.remaining_time {
+            assert!(row[2].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn compose_bin_equals_stepped() {
+        let (t, r) = chain3();
+        for bs in [1u64, 2, 3, 7, 16, 33] {
+            let (tb, rb) = compose_bin(&t, &r, bs);
+            // completion via composed chain, 1 step == bs steps of original
+            let direct = build_tables(&t, &r, bs as usize);
+            let via_bin = build_tables(&tb, &rb, 1);
+            for i in 0..3 {
+                assert!(
+                    (via_bin.completion[0][i] - direct.completion[bs as usize - 1][i])
+                        .abs()
+                        < 1e-10,
+                    "bs={bs}"
+                );
+                assert!(
+                    (via_bin.remaining_time[0][i]
+                        - direct.remaining_time[bs as usize - 1][i])
+                        .abs()
+                        < 1e-10,
+                    "bs={bs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compose_bin_power_matches_matrix_power() {
+        let (t, r) = chain3();
+        let (tb, _) = compose_bin(&t, &r, 12);
+        assert!(tb.max_abs_diff(&t.pow(12)) < 1e-12);
+    }
+
+    #[test]
+    fn absorbing_normalize_fixes_rows() {
+        let mut t = Mat::from_rows(3, 3, &[2.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.2, 0.2, 0.2]);
+        absorbing_normalize(&mut t);
+        assert!(t.is_row_stochastic(1e-12));
+        assert_eq!(t[(1, 1)], 1.0); // unobserved row -> stay put
+        assert_eq!(t[(2, 2)], 1.0); // final row forced absorbing
+        assert!((t[(0, 0)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_chain_reward_accumulates() {
+        // deterministic advance s1->s2->s3(final), unit cost per event
+        let t = Mat::from_rows(3, 3, &[0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        let r = vec![1.0, 1.0, 0.0];
+        let tables = build_tables(&t, &r, 5);
+        // from s1 with >=2 events left: pays 1 (s1) + 1 (s2) = 2 then absorbs
+        assert!((tables.remaining_time[4][0] - 2.0).abs() < 1e-12);
+        assert!((tables.remaining_time[4][1] - 1.0).abs() < 1e-12);
+        // completion: needs 2 events from s1
+        assert_eq!(tables.completion[0][0], 0.0);
+        assert_eq!(tables.completion[1][0], 1.0);
+    }
+}

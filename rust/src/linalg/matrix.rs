@@ -1,0 +1,215 @@
+//! Small dense row-major matrix over `f64`.
+//!
+//! Sized for pattern state machines (m ≤ a few dozen states); clarity over
+//! BLAS-level tuning, except `matmul` which is written loop-ordered (i,k,j)
+//! so the inner loop is a contiguous axpy.
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let src = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += a * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `self * v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    /// `self^k` by repeated squaring (square matrices only).
+    pub fn pow(&self, mut k: u64) -> Mat {
+        assert_eq!(self.rows, self.cols, "pow needs square matrix");
+        let mut base = self.clone();
+        let mut acc = Mat::eye(self.rows);
+        while k > 0 {
+            if k & 1 == 1 {
+                acc = acc.matmul(&base);
+            }
+            base = base.matmul(&base);
+            k >>= 1;
+        }
+        acc
+    }
+
+    /// Mean squared difference between two same-shape matrices — the
+    /// paper's §III-D drift measure between old and new transition
+    /// matrices.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Max absolute entry difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// True if every row sums to 1 within `eps` (row-stochastic check).
+    pub fn is_row_stochastic(&self, eps: f64) -> bool {
+        (0..self.rows).all(|i| {
+            let s: f64 = self.row(i).iter().sum();
+            (s - 1.0).abs() <= eps && self.row(i).iter().all(|&x| x >= -eps)
+        })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Mat::from_rows(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, -1.0]);
+        assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(Mat::eye(2).matmul(&a), a);
+        assert_eq!(a.matmul(&Mat::eye(2)), a);
+    }
+
+    #[test]
+    fn pow_matches_repeated_matmul() {
+        let a = Mat::from_rows(2, 2, &[0.5, 0.5, 0.25, 0.75]);
+        let mut direct = Mat::eye(2);
+        for _ in 0..9 {
+            direct = direct.matmul(&a);
+        }
+        let fast = a.pow(9);
+        assert!(fast.max_abs_diff(&direct) < 1e-12);
+        assert!(a.pow(0).max_abs_diff(&Mat::eye(2)) < 1e-15);
+    }
+
+    #[test]
+    fn stochastic_check() {
+        let t = Mat::from_rows(2, 2, &[0.3, 0.7, 0.0, 1.0]);
+        assert!(t.is_row_stochastic(1e-12));
+        let bad = Mat::from_rows(2, 2, &[0.3, 0.6, 0.0, 1.0]);
+        assert!(!bad.is_row_stochastic(1e-12));
+    }
+
+    #[test]
+    fn mse_and_max_diff() {
+        let a = Mat::from_rows(1, 2, &[1.0, 2.0]);
+        let b = Mat::from_rows(1, 2, &[1.5, 2.0]);
+        assert!((a.mse(&b) - 0.125).abs() < 1e-15);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-15);
+    }
+}

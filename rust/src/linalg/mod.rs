@@ -1,0 +1,16 @@
+//! Dense linear algebra for the model builder and overload detector:
+//!
+//! * [`matrix`] — a small row-major `f64` matrix with the operations the
+//!   Markov machinery needs (matmul, matvec, power, norms),
+//! * [`regression`] — least-squares fits used for the paper's latency
+//!   functions `l_p = f(n_pm)` and `l_s = g(n_pm)` (§III-E),
+//! * [`markov`] — the pure-rust Markov-chain / Markov-reward oracle that
+//!   mirrors the L2 JAX graph (used for tests, differential validation of
+//!   the AOT artifacts, and artifact-less operation).
+
+pub mod markov;
+pub mod matrix;
+pub mod regression;
+
+pub use matrix::Mat;
+pub use regression::{fit_latency_model, LatencyModel, RegressionKind};

@@ -1,0 +1,234 @@
+//! Least-squares regression for the overload detector's latency models
+//! (paper §III-E):
+//!
+//! * `l_p = f(n_pm)` — event processing latency vs. number of live PMs,
+//! * `l_s = g(n_pm)` — shedding latency vs. number of live PMs.
+//!
+//! The paper "appl[ies] several regression models … and use[s] a
+//! regression model that results in lower error".  We fit three candidate
+//! bases — linear, quadratic, and `n·log₂(n)` (the sort inside the
+//! shedder) — and keep the one with the lowest residual sum of squares.
+//! All models are constrained to be monotone-invertible on the fitted
+//! range so `f⁻¹` (Alg. 1 line 7) is well-defined.
+
+/// Candidate regression basis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegressionKind {
+    /// `a + b·n`
+    Linear,
+    /// `a + b·n + c·n²`
+    Quadratic,
+    /// `a + b·n·log2(n+1)`
+    NLogN,
+}
+
+/// A fitted latency model `latency = h(n_pm)` with a numeric inverse.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Chosen basis.
+    pub kind: RegressionKind,
+    /// Coefficients, meaning depends on `kind`.
+    pub coef: Vec<f64>,
+    /// Residual sum of squares on the training data.
+    pub rss: f64,
+    /// Largest `n` seen during fitting (inverse search upper bound).
+    pub n_max: f64,
+}
+
+impl LatencyModel {
+    /// Predicted latency for `n` partial matches.
+    pub fn predict(&self, n: f64) -> f64 {
+        let n = n.max(0.0);
+        match self.kind {
+            RegressionKind::Linear => self.coef[0] + self.coef[1] * n,
+            RegressionKind::Quadratic => {
+                self.coef[0] + self.coef[1] * n + self.coef[2] * n * n
+            }
+            RegressionKind::NLogN => self.coef[0] + self.coef[1] * n * (n + 1.0).log2(),
+        }
+        .max(0.0)
+    }
+
+    /// Inverse: the largest PM count whose predicted latency is ≤
+    /// `latency` (Alg. 1 line 7, `n'_pm = f⁻¹(l'_p)`).  Monotone bisection
+    /// over `[0, 4·n_max]`.
+    pub fn inverse(&self, latency: f64) -> f64 {
+        if latency <= self.predict(0.0) {
+            return 0.0;
+        }
+        let (mut lo, mut hi) = (0.0f64, (self.n_max * 4.0).max(16.0));
+        if self.predict(hi) <= latency {
+            return hi;
+        }
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if self.predict(mid) <= latency {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Solve the normal equations `(XᵀX) β = Xᵀy` for a small design matrix
+/// via Gaussian elimination with partial pivoting.  Returns `None` if the
+/// system is singular (degenerate data).
+fn solve_normal(xtx: &mut [Vec<f64>], xty: &mut [f64]) -> Option<Vec<f64>> {
+    let k = xty.len();
+    for col in 0..k {
+        // pivot
+        let piv = (col..k).max_by(|&a, &b| {
+            xtx[a][col]
+                .abs()
+                .partial_cmp(&xtx[b][col].abs())
+                .unwrap()
+        })?;
+        if xtx[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        xtx.swap(col, piv);
+        xty.swap(col, piv);
+        for row in 0..k {
+            if row == col {
+                continue;
+            }
+            let factor = xtx[row][col] / xtx[col][col];
+            for c in col..k {
+                xtx[row][c] -= factor * xtx[col][c];
+            }
+            xty[row] -= factor * xty[col];
+        }
+    }
+    Some((0..k).map(|i| xty[i] / xtx[i][i]).collect())
+}
+
+fn fit_basis(
+    kind: RegressionKind,
+    xs: &[f64],
+    ys: &[f64],
+) -> Option<LatencyModel> {
+    let feats: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|&n| match kind {
+            RegressionKind::Linear => vec![1.0, n],
+            RegressionKind::Quadratic => vec![1.0, n, n * n],
+            RegressionKind::NLogN => vec![1.0, n * (n + 1.0).log2()],
+        })
+        .collect();
+    let k = feats[0].len();
+    let mut xtx = vec![vec![0.0; k]; k];
+    let mut xty = vec![0.0; k];
+    for (f, &y) in feats.iter().zip(ys) {
+        for i in 0..k {
+            for j in 0..k {
+                xtx[i][j] += f[i] * f[j];
+            }
+            xty[i] += f[i] * y;
+        }
+    }
+    let coef = solve_normal(&mut xtx, &mut xty)?;
+    // Reject non-monotone fits (negative slope / dominant negative curvature):
+    // the detector needs an invertible f.
+    let slope_ok = match kind {
+        RegressionKind::Linear | RegressionKind::NLogN => coef[1] > 0.0,
+        RegressionKind::Quadratic => {
+            coef[1] >= 0.0 && coef[2] >= 0.0 && (coef[1] > 0.0 || coef[2] > 0.0)
+        }
+    };
+    if !slope_ok {
+        return None;
+    }
+    let n_max = xs.iter().copied().fold(0.0, f64::max);
+    let mut model = LatencyModel {
+        kind,
+        coef,
+        rss: 0.0,
+        n_max,
+    };
+    model.rss = xs
+        .iter()
+        .zip(ys)
+        .map(|(&n, &y)| {
+            let e = model.predict(n) - y;
+            e * e
+        })
+        .sum();
+    Some(model)
+}
+
+/// Fit all candidate bases to `(n_pm, latency)` samples and return the
+/// lowest-RSS monotone model.  Needs ≥ 4 samples.
+pub fn fit_latency_model(xs: &[f64], ys: &[f64]) -> Option<LatencyModel> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 4 {
+        return None;
+    }
+    [
+        RegressionKind::Linear,
+        RegressionKind::Quadratic,
+        RegressionKind::NLogN,
+    ]
+    .into_iter()
+    .filter_map(|k| fit_basis(k, xs, ys))
+    .min_by(|a, b| a.rss.partial_cmp(&b.rss).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_linear() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|n| 3.0 + 0.5 * n).collect();
+        let m = fit_latency_model(&xs, &ys).unwrap();
+        assert!((m.predict(200.0) - 103.0).abs() < 1e-6, "{m:?}");
+    }
+
+    #[test]
+    fn recovers_quadratic() {
+        let xs: Vec<f64> = (1..60).map(|i| i as f64 * 5.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|n| 1.0 + 0.1 * n + 0.01 * n * n).collect();
+        let m = fit_latency_model(&xs, &ys).unwrap();
+        assert_eq!(m.kind, RegressionKind::Quadratic);
+        assert!((m.predict(100.0) - (1.0 + 10.0 + 100.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn inverse_round_trips() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 * 20.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|n| 2.0 + 0.25 * n).collect();
+        let m = fit_latency_model(&xs, &ys).unwrap();
+        for &n in &[0.0, 17.0, 500.0, 1999.0] {
+            let lat = m.predict(n);
+            let back = m.inverse(lat);
+            assert!((back - n).abs() < 0.1, "n={n} back={back}");
+        }
+    }
+
+    #[test]
+    fn inverse_clamps_below() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|n| 5.0 + n).collect();
+        let m = fit_latency_model(&xs, &ys).unwrap();
+        assert_eq!(m.inverse(1.0), 0.0); // below intercept → drop to zero PMs
+    }
+
+    #[test]
+    fn too_few_samples_is_none() {
+        assert!(fit_latency_model(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn noisy_nlogn_picks_nlogn() {
+        let xs: Vec<f64> = (1..200).map(|i| i as f64 * 50.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&n| 10.0 + 0.02 * n * (n + 1.0).log2())
+            .collect();
+        let m = fit_latency_model(&xs, &ys).unwrap();
+        assert_eq!(m.kind, RegressionKind::NLogN);
+    }
+}

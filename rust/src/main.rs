@@ -1,0 +1,8 @@
+//! `pspice` binary: CLI entrypoint (see [`pspice::cli`]).
+fn main() {
+    pspice::util::logger::init();
+    if let Err(e) = pspice::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Event-latency tracking (paper Fig. 7): per-event `l_e` samples in
+//! virtual time, bound-violation accounting, and a down-sampled trace
+//! for plotting.
+
+use crate::util::OnlineStats;
+
+/// Tracks event latencies against a bound.
+#[derive(Debug, Clone)]
+pub struct LatencyTracker {
+    /// the latency bound LB (ns)
+    pub lb_ns: f64,
+    /// all-sample statistics
+    pub stats: OnlineStats,
+    /// number of samples above LB
+    pub violations: u64,
+    /// down-sampled (virtual time ns, latency ns) trace
+    pub trace: Vec<(f64, f64)>,
+    /// keep every k-th sample in the trace
+    stride: u64,
+    seen: u64,
+}
+
+impl LatencyTracker {
+    /// Tracker with a plotting stride (keep every `stride`-th sample).
+    pub fn new(lb_ns: f64, stride: u64) -> Self {
+        LatencyTracker {
+            lb_ns,
+            stats: OnlineStats::new(),
+            violations: 0,
+            trace: Vec::new(),
+            stride: stride.max(1),
+            seen: 0,
+        }
+    }
+
+    /// Record one event latency at virtual time `now_ns`.
+    #[inline]
+    pub fn record(&mut self, now_ns: f64, l_e_ns: f64) {
+        self.stats.push(l_e_ns);
+        if l_e_ns > self.lb_ns {
+            self.violations += 1;
+        }
+        if self.seen % self.stride == 0 {
+            self.trace.push((now_ns, l_e_ns));
+        }
+        self.seen += 1;
+    }
+
+    /// Fraction of events that violated the bound.
+    pub fn violation_rate(&self) -> f64 {
+        if self.stats.count() == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.stats.count() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_violations() {
+        let mut t = LatencyTracker::new(100.0, 1);
+        t.record(0.0, 50.0);
+        t.record(1.0, 150.0);
+        t.record(2.0, 99.0);
+        assert_eq!(t.violations, 1);
+        assert!((t.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.trace.len(), 3);
+    }
+
+    #[test]
+    fn stride_downsamples_trace() {
+        let mut t = LatencyTracker::new(100.0, 10);
+        for i in 0..100 {
+            t.record(i as f64, 1.0);
+        }
+        assert_eq!(t.trace.len(), 10);
+        assert_eq!(t.stats.count(), 100);
+    }
+}

@@ -1,0 +1,8 @@
+//! Measurement: event latency, QoR (false negatives/positives against
+//! ground truth), and throughput accounting.
+
+pub mod latency;
+pub mod qor;
+
+pub use latency::LatencyTracker;
+pub use qor::{CeKey, QorAccounting};

@@ -1,0 +1,197 @@
+//! QoR accounting (paper §II-B): weighted false negatives against the
+//! ground-truth run, `FN_Q = Σ w_q · FN_q`, reported as the percentage
+//! of ground-truth complex events missed.  Also counts false positives
+//! (which must be zero for the white-box shedders).
+
+use std::collections::HashSet;
+
+use crate::operator::ComplexEvent;
+
+/// Shedding-invariant identity of a complex event: the completing
+/// event's sequence number is excluded (different shedding decisions
+/// may complete the same logical match on a different event).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CeKey {
+    /// query index
+    pub query: usize,
+    /// window identity
+    pub window_open_seq: u64,
+    /// bound correlation keys
+    pub key_bits: u64,
+}
+
+impl From<&ComplexEvent> for CeKey {
+    fn from(ce: &ComplexEvent) -> Self {
+        CeKey {
+            query: ce.query,
+            window_open_seq: ce.window_open_seq,
+            key_bits: ce.key_bits,
+        }
+    }
+}
+
+/// Ground-truth vs. detected comparison.
+#[derive(Debug, Clone)]
+pub struct QorAccounting {
+    /// per-query weights `w_q`
+    pub weights: Vec<f64>,
+    /// ground-truth complex events
+    pub truth: HashSet<CeKey>,
+    /// detected complex events
+    pub detected: HashSet<CeKey>,
+    /// only count events whose window opened at/after this seq
+    /// (excludes the calibration warm-up region)
+    pub from_seq: u64,
+}
+
+impl QorAccounting {
+    /// Accounting over queries with the given weights.
+    pub fn new(weights: Vec<f64>, from_seq: u64) -> Self {
+        QorAccounting {
+            weights,
+            truth: HashSet::new(),
+            detected: HashSet::new(),
+            from_seq,
+        }
+    }
+
+    fn in_scope(&self, k: &CeKey) -> bool {
+        k.window_open_seq >= self.from_seq
+    }
+
+    /// Add a ground-truth complex event.
+    pub fn add_truth(&mut self, ce: &ComplexEvent) {
+        let k = CeKey::from(ce);
+        if self.in_scope(&k) {
+            self.truth.insert(k);
+        }
+    }
+
+    /// Add a detected complex event.
+    pub fn add_detected(&mut self, ce: &ComplexEvent) {
+        let k = CeKey::from(ce);
+        if self.in_scope(&k) {
+            self.detected.insert(k);
+        }
+    }
+
+    /// Per-query false-negative counts.
+    pub fn fn_by_query(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.weights.len()];
+        for k in &self.truth {
+            if !self.detected.contains(k) {
+                out[k.query] += 1;
+            }
+        }
+        out
+    }
+
+    /// Per-query ground-truth counts.
+    pub fn truth_by_query(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.weights.len()];
+        for k in &self.truth {
+            out[k.query] += 1;
+        }
+        out
+    }
+
+    /// Weighted false-negative percentage:
+    /// `100 · Σ w_q FN_q / Σ w_q GT_q`.
+    pub fn fn_percent(&self) -> f64 {
+        let fns = self.fn_by_query();
+        let gts = self.truth_by_query();
+        let num: f64 = fns
+            .iter()
+            .zip(&self.weights)
+            .map(|(&f, &w)| w * f as f64)
+            .sum();
+        let den: f64 = gts
+            .iter()
+            .zip(&self.weights)
+            .map(|(&g, &w)| w * g as f64)
+            .sum();
+        if den == 0.0 {
+            0.0
+        } else {
+            100.0 * num / den
+        }
+    }
+
+    /// Detected events not present in the ground truth (must be empty
+    /// for PM shedding).
+    pub fn false_positives(&self) -> usize {
+        self.detected.difference(&self.truth).count()
+    }
+
+    /// Match probability of the ground truth run: completed PMs over
+    /// all PMs (computed by the harness from operator counters; stored
+    /// here for reports).
+    pub fn truth_total(&self) -> usize {
+        self.truth.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ce(query: usize, w: u64, k: u64) -> ComplexEvent {
+        ComplexEvent {
+            query,
+            window_open_seq: w,
+            key_bits: k,
+            completed_seq: w + 100,
+        }
+    }
+
+    #[test]
+    fn fn_percent_counts_misses() {
+        let mut q = QorAccounting::new(vec![1.0], 0);
+        for i in 0..10 {
+            q.add_truth(&ce(0, i, 0));
+        }
+        for i in 0..7 {
+            q.add_detected(&ce(0, i, 0));
+        }
+        assert!((q.fn_percent() - 30.0).abs() < 1e-9);
+        assert_eq!(q.false_positives(), 0);
+    }
+
+    #[test]
+    fn weights_bias_fn_percent() {
+        let mut q = QorAccounting::new(vec![1.0, 3.0], 0);
+        q.add_truth(&ce(0, 1, 0));
+        q.add_truth(&ce(1, 2, 0));
+        // miss only the heavy query
+        q.add_detected(&ce(0, 1, 0));
+        // FN = (0·1 + 1·3) / (1 + 3) = 75%
+        assert!((q.fn_percent() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scope_excludes_warmup() {
+        let mut q = QorAccounting::new(vec![1.0], 1000);
+        q.add_truth(&ce(0, 500, 0)); // warm-up: ignored
+        q.add_truth(&ce(0, 1500, 0));
+        assert_eq!(q.truth_total(), 1);
+    }
+
+    #[test]
+    fn completing_seq_does_not_matter() {
+        let mut q = QorAccounting::new(vec![1.0], 0);
+        q.add_truth(&ComplexEvent {
+            query: 0,
+            window_open_seq: 5,
+            key_bits: 9,
+            completed_seq: 50,
+        });
+        q.add_detected(&ComplexEvent {
+            query: 0,
+            window_open_seq: 5,
+            key_bits: 9,
+            completed_seq: 80, // later completion, same logical event
+        });
+        assert_eq!(q.fn_percent(), 0.0);
+        assert_eq!(q.false_positives(), 0);
+    }
+}

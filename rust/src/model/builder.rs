@@ -1,0 +1,188 @@
+//! The model builder (paper Fig. 2 + §III-C): turns aggregated
+//! observations into per-query [`UtilityTable`]s.
+//!
+//! Pipeline per build:
+//!
+//! 1. per query: learn `T_q` (normalized transition counts, absorbing
+//!    final state) and the expected one-event reward `r_q`,
+//! 2. pick the bin size `bs = ceil(ws / max_bins)` and compose the
+//!    one-event chain into the per-bin chain (exact doubling —
+//!    [`crate::linalg::markov::compose_bin`]),
+//! 3. run the model engine (AOT artifact via PJRT, or rust fallback) to
+//!    get completion/remaining-time tables for all queries in ONE
+//!    batched call,
+//! 4. scale and combine into `UT_q` (Eq. 1).
+
+use crate::linalg::markov::compose_bin;
+use crate::operator::{ObservationHub, Operator};
+use crate::runtime::ModelEngine;
+
+use super::utility::UtilityTable;
+
+/// Model-builder configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Observations required before the first build (paper's η).
+    pub eta: u64,
+    /// Maximum number of bins per table (bounds memory; paper's
+    /// `ws/bs`).  The artifact variants cap this at 512.
+    pub max_bins: usize,
+    /// Include remaining processing time in the utility (false =
+    /// the paper's pSPICE-- ablation).
+    pub use_tau: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            eta: 50_000,
+            max_bins: 256,
+            use_tau: true,
+        }
+    }
+}
+
+/// The model builder.
+pub struct ModelBuilder {
+    /// configuration
+    pub cfg: ModelConfig,
+    engine: Box<dyn ModelEngine>,
+    /// wall-clock time of the last build (for Fig. 9b)
+    pub last_build_secs: f64,
+}
+
+impl ModelBuilder {
+    /// Builder using the given engine.
+    pub fn new(cfg: ModelConfig, engine: Box<dyn ModelEngine>) -> Self {
+        ModelBuilder {
+            cfg,
+            engine,
+            last_build_secs: 0.0,
+        }
+    }
+
+    /// Builder with the best available engine (PJRT if artifacts exist).
+    pub fn with_auto_engine(cfg: ModelConfig) -> Self {
+        Self::new(cfg, crate::runtime::auto_engine())
+    }
+
+    /// Engine name (for logs / EXPERIMENTS.md).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Enough observations to build? (η per §III-C)
+    pub fn ready(&self, hub: &ObservationHub) -> bool {
+        hub.total() >= self.cfg.eta
+    }
+
+    /// Expected window size in events for each query of an operator
+    /// (count windows exact; time windows via the operator's rate
+    /// estimate).
+    pub fn expected_ws(op: &Operator) -> Vec<u64> {
+        op.queries
+            .iter()
+            .map(|cq| match cq.query.window {
+                crate::query::WindowSpec::Count(ws) => ws,
+                crate::query::WindowSpec::TimeMs(ms) => {
+                    (ms as f64 * op.events_per_ms()).ceil().max(1.0) as u64
+                }
+            })
+            .collect()
+    }
+
+    /// Build utility tables for every query of `op` from its current
+    /// observation counts.
+    pub fn build(&mut self, op: &Operator) -> crate::Result<Vec<UtilityTable>> {
+        let start = std::time::Instant::now();
+        let ws = Self::expected_ws(op);
+        // one shared bin count so all queries batch into one engine call
+        let max_ws = *ws.iter().max().expect("at least one query");
+        let bs = (max_ws as f64 / self.cfg.max_bins as f64).ceil().max(1.0) as u64;
+        let nbins = (max_ws as f64 / bs as f64).ceil() as usize;
+
+        let chains: Vec<_> = op
+            .obs
+            .queries
+            .iter()
+            .map(|qs| {
+                let t = qs.transition_matrix();
+                let r = qs.expected_reward();
+                compose_bin(&t, &r, bs)
+            })
+            .collect();
+        let tables = self.engine.build_tables(&chains, nbins)?;
+        let out = tables
+            .iter()
+            .zip(&op.queries)
+            .map(|(tab, cq)| {
+                UtilityTable::from_tables(tab, cq.query.weight, bs, self.cfg.use_tau)
+            })
+            .collect();
+        self.last_build_secs = start.elapsed().as_secs_f64();
+        log::debug!(
+            "model build: {} queries, bs={bs}, nbins={nbins}, {:.3}s via {}",
+            op.queries.len(),
+            self.last_build_secs,
+            self.engine.name()
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::BusGen;
+    use crate::events::EventStream;
+    use crate::query::builtin::q4;
+    use crate::runtime::FallbackEngine;
+
+    fn trained_operator() -> Operator {
+        let mut op = Operator::new(q4(4, 2000, 400).queries);
+        let mut g = BusGen::with_seed(1);
+        for _ in 0..30_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        op
+    }
+
+    #[test]
+    fn builds_tables_with_fallback() {
+        let op = trained_operator();
+        let mut mb = ModelBuilder::new(
+            ModelConfig {
+                eta: 1000,
+                max_bins: 64,
+                use_tau: true,
+            },
+            Box::new(FallbackEngine),
+        );
+        assert!(mb.ready(&op.obs));
+        let tables = mb.build(&op).unwrap();
+        assert_eq!(tables.len(), 1);
+        let ut = &tables[0];
+        assert_eq!(ut.m, 5);
+        assert!(!ut.rows.is_empty());
+        // utilities are finite and non-negative
+        for row in &ut.rows {
+            for &u in row {
+                assert!(u.is_finite() && u >= 0.0);
+            }
+        }
+        assert!(mb.last_build_secs >= 0.0);
+    }
+
+    #[test]
+    fn expected_ws_count_windows() {
+        let op = trained_operator();
+        assert_eq!(ModelBuilder::expected_ws(&op), vec![2000]);
+    }
+
+    #[test]
+    fn not_ready_without_observations() {
+        let op = Operator::new(q4(4, 2000, 400).queries);
+        let mb = ModelBuilder::new(ModelConfig::default(), Box::new(FallbackEngine));
+        assert!(!mb.ready(&op.obs));
+    }
+}

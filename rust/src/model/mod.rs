@@ -1,0 +1,16 @@
+//! The pSPICE model: from aggregated observations to utility tables.
+//!
+//! * [`utility`] — the `UT_q` tables (paper §III-C-3): per-state,
+//!   per-remaining-events-bin utilities with O(1) interpolated lookup,
+//! * [`builder`] — the model builder (paper Fig. 2): learns `T_q` and
+//!   `R_q` from observations, composes per-bin chains, runs the model
+//!   engine (AOT/PJRT or rust fallback) and assembles the tables,
+//! * [`retrain`] — drift detection on the transition matrix (§III-D).
+
+pub mod builder;
+pub mod retrain;
+pub mod utility;
+
+pub use builder::{ModelBuilder, ModelConfig};
+pub use retrain::DriftDetector;
+pub use utility::UtilityTable;

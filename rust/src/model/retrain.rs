@@ -1,0 +1,88 @@
+//! Drift detection (paper §III-D): periodically rebuild a candidate
+//! transition matrix from fresh statistics and compare it against the
+//! matrix the live model was built from; retrain when the mean squared
+//! error exceeds a threshold.
+
+use crate::linalg::Mat;
+use crate::operator::ObservationHub;
+
+/// Per-query transition-matrix drift detector.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    /// MSE threshold above which the model is considered stale.
+    pub threshold: f64,
+    /// Matrices the current model was built from.
+    baseline: Vec<Mat>,
+}
+
+impl DriftDetector {
+    /// Snapshot the matrices a model was just built from.
+    pub fn snapshot(hub: &ObservationHub, threshold: f64) -> Self {
+        DriftDetector {
+            threshold,
+            baseline: hub
+                .queries
+                .iter()
+                .map(|q| q.transition_matrix())
+                .collect(),
+        }
+    }
+
+    /// Check current statistics against the baseline.  Returns the
+    /// maximum per-query MSE and whether it crossed the threshold.
+    pub fn check(&self, hub: &ObservationHub) -> (f64, bool) {
+        let max_mse = hub
+            .queries
+            .iter()
+            .zip(&self.baseline)
+            .map(|(q, base)| q.transition_matrix().mse(base))
+            .fold(0.0, f64::max);
+        (max_mse, max_mse > self.threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::QueryStats;
+
+    fn hub_with(counts: &[(u32, u32, u64)]) -> ObservationHub {
+        let mut hub = ObservationHub::new(&[3]);
+        for &(s, s2, n) in counts {
+            for _ in 0..n {
+                hub.queries[0].record(s, s2, 1.0);
+            }
+        }
+        hub
+    }
+
+    #[test]
+    fn no_drift_on_same_distribution() {
+        let hub = hub_with(&[(0, 0, 90), (0, 1, 10), (1, 2, 5), (1, 1, 5)]);
+        let det = DriftDetector::snapshot(&hub, 0.01);
+        let mut hub2 = hub.clone();
+        // double the counts: same distribution
+        for q in &mut hub2.queries {
+            for row in &mut q.counts {
+                for c in row.iter_mut() {
+                    *c *= 2;
+                }
+            }
+        }
+        let (mse, drift) = det.check(&hub2);
+        assert!(mse < 1e-12);
+        assert!(!drift);
+    }
+
+    #[test]
+    fn drift_on_changed_distribution() {
+        let hub = hub_with(&[(0, 0, 90), (0, 1, 10)]);
+        let det = DriftDetector::snapshot(&hub, 0.01);
+        // distribution flips: advances become dominant
+        let hub2 = hub_with(&[(0, 0, 10), (0, 1, 90)]);
+        let (mse, drift) = det.check(&hub2);
+        assert!(mse > 0.01, "mse={mse}");
+        assert!(drift);
+        let _ = QueryStats::new(2); // keep import used
+    }
+}

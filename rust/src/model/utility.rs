@@ -1,0 +1,177 @@
+//! Utility tables (paper §III-C-3).
+//!
+//! `UT_q` stores the utility of a PM of query `q` for every state and
+//! every remaining-events *bin*; the shedder reads it with an O(1)
+//! interpolated lookup (paper: "linear interpolation" between bin
+//! boundaries).
+//!
+//! Scaling: completion probability and remaining processing time have
+//! different units, so both are min–max normalized over the table
+//! before applying Eq. 1, exactly as §III-C-3 prescribes ("we bring the
+//! completion probabilities and processing times to the same scale").
+//! `U = w_q · P̂ / (τ̂ + ε)` with a small ε so zero-time states don't
+//! produce infinities.
+
+use crate::linalg::markov::MarkovTables;
+
+/// Normalization floor for the scaled processing time.
+const EPS: f64 = 1e-3;
+
+/// One query's utility table.
+#[derive(Debug, Clone)]
+pub struct UtilityTable {
+    /// states (incl. initial)
+    pub m: usize,
+    /// bin size in events
+    pub bs: u64,
+    /// `rows[j][s]` — utility at state `s` with `(j+1)·bs` events left
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl UtilityTable {
+    /// Assemble a table from raw Markov tables.
+    pub fn from_tables(tables: &MarkovTables, weight: f64, bs: u64, use_tau: bool) -> Self {
+        let nbins = tables.completion.len();
+        let m = tables.completion.first().map_or(0, |r| r.len());
+        // min-max over the whole table (not per row: cross-bin ordering
+        // matters — a PM with more remaining events IS worth more)
+        let (mut cmin, mut cmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut tmin, mut tmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for j in 0..nbins {
+            for s in 0..m {
+                let c = tables.completion[j][s];
+                let t = tables.remaining_time[j][s];
+                cmin = cmin.min(c);
+                cmax = cmax.max(c);
+                tmin = tmin.min(t);
+                tmax = tmax.max(t);
+            }
+        }
+        let cspan = (cmax - cmin).max(1e-12);
+        let tspan = (tmax - tmin).max(1e-12);
+        let rows = (0..nbins)
+            .map(|j| {
+                (0..m)
+                    .map(|s| {
+                        let p = (tables.completion[j][s] - cmin) / cspan;
+                        let tau = (tables.remaining_time[j][s] - tmin) / tspan;
+                        if use_tau {
+                            weight * p / (tau + EPS)
+                        } else {
+                            // pSPICE-- ablation: completion probability only
+                            weight * p
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        UtilityTable { m, bs, rows }
+    }
+
+    /// O(1) utility lookup for a PM at `state` with `remaining` events
+    /// left in its window, linearly interpolating between bins.
+    #[inline]
+    pub fn lookup(&self, state: u32, remaining: u64) -> f64 {
+        if remaining == 0 || self.rows.is_empty() {
+            // no events left: the PM cannot complete any more
+            return 0.0;
+        }
+        let s = state as usize;
+        debug_assert!(s < self.m);
+        // row j corresponds to (j+1)*bs remaining events
+        let x = remaining as f64 / self.bs as f64 - 1.0;
+        let last = self.rows.len() - 1;
+        if x <= 0.0 {
+            // below the first bin: interpolate toward utility 0 at R=0
+            let frac = remaining as f64 / self.bs as f64;
+            return self.rows[0][s] * frac;
+        }
+        let lo = (x.floor() as usize).min(last);
+        let hi = (lo + 1).min(last);
+        let frac = (x - lo as f64).clamp(0.0, 1.0);
+        self.rows[lo][s] * (1.0 - frac) + self.rows[hi][s] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::markov::build_tables;
+    use crate::linalg::Mat;
+
+    fn tables() -> MarkovTables {
+        let t = Mat::from_rows(3, 3, &[0.7, 0.3, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0, 1.0]);
+        build_tables(&t, &[1.0, 2.0, 0.0], 16)
+    }
+
+    #[test]
+    fn later_states_more_valuable() {
+        let ut = UtilityTable::from_tables(&tables(), 1.0, 10, true);
+        // with equal remaining events, a PM closer to completion has
+        // higher completion probability -> higher utility
+        for j in 0..16 {
+            assert!(ut.rows[j][1] >= ut.rows[j][0], "bin {j}");
+        }
+    }
+
+    #[test]
+    fn more_remaining_events_more_utility() {
+        let ut = UtilityTable::from_tables(&tables(), 1.0, 10, false);
+        for s in 0..2 {
+            for j in 1..16 {
+                assert!(
+                    ut.rows[j][s] + 1e-12 >= ut.rows[j - 1][s],
+                    "s={s} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_interpolates_between_bins() {
+        let ut = UtilityTable::from_tables(&tables(), 1.0, 10, true);
+        let at_bin0 = ut.lookup(0, 10); // exactly bin 0
+        let at_bin1 = ut.lookup(0, 20); // exactly bin 1
+        let mid = ut.lookup(0, 15);
+        assert!((mid - 0.5 * (at_bin0 + at_bin1)).abs() < 1e-9);
+        assert!((ut.lookup(0, 10) - ut.rows[0][0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_zero_remaining_is_zero() {
+        let ut = UtilityTable::from_tables(&tables(), 1.0, 10, true);
+        assert_eq!(ut.lookup(0, 0), 0.0);
+        assert_eq!(ut.lookup(1, 0), 0.0);
+        // below first bin shrinks toward zero
+        assert!(ut.lookup(1, 5) < ut.lookup(1, 10));
+    }
+
+    #[test]
+    fn lookup_clamps_above_table() {
+        let ut = UtilityTable::from_tables(&tables(), 1.0, 10, true);
+        let last = ut.rows.len() - 1;
+        assert!((ut.lookup(1, 10_000) - ut.rows[last][1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_scales_utility() {
+        let t = tables();
+        let u1 = UtilityTable::from_tables(&t, 1.0, 10, true);
+        let u3 = UtilityTable::from_tables(&t, 3.0, 10, true);
+        assert!((u3.lookup(1, 50) - 3.0 * u1.lookup(1, 50)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pspice_minus_minus_ignores_tau() {
+        // make a chain where state 0 has huge remaining time
+        let t = Mat::from_rows(3, 3, &[0.9, 0.1, 0.0, 0.0, 0.1, 0.9, 0.0, 0.0, 1.0]);
+        let tabs = build_tables(&t, &[100.0, 1.0, 0.0], 16);
+        let with_tau = UtilityTable::from_tables(&tabs, 1.0, 10, true);
+        let without = UtilityTable::from_tables(&tabs, 1.0, 10, false);
+        // pSPICE (with tau) must punish the expensive state 0 more than
+        // pSPICE-- does, relative to state 1
+        let ratio_with = with_tau.rows[10][0] / with_tau.rows[10][1].max(1e-12);
+        let ratio_without = without.rows[10][0] / without.rows[10][1].max(1e-12);
+        assert!(ratio_with < ratio_without);
+    }
+}

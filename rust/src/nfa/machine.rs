@@ -1,0 +1,304 @@
+//! Compilation of a [`Query`] into a flat state machine and the single
+//! hot-path transition function [`CompiledQuery::try_advance`].
+//!
+//! Every pattern shape flattens to: an ordered *head* of steps followed
+//! by an optional *any-group* `(n, spec, distinct_slot)`.  The PM state
+//! is the number of completed steps; state `m-1` is final.
+
+use crate::events::Event;
+use crate::query::{Pattern, Predicate, Query, StepSpec};
+
+use super::pm::PartialMatch;
+
+/// Outcome of offering one event to one PM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepResult {
+    /// Event did not match the PM's next step (skipped under
+    /// skip-till-next/any).
+    NoMatch,
+    /// PM advanced one state.
+    Advanced,
+    /// PM advanced into the final state: a complex event.
+    Completed,
+}
+
+/// An any-group tail.
+#[derive(Debug, Clone)]
+pub struct AnyGroup {
+    /// distinct matches required
+    pub n: usize,
+    /// the step each match must satisfy
+    pub spec: StepSpec,
+    /// slot whose values must be pairwise distinct
+    pub distinct_slot: usize,
+}
+
+/// A query compiled for the operator hot path.
+#[derive(Debug, Clone)]
+pub struct CompiledQuery {
+    /// the source query
+    pub query: Query,
+    /// ordered head steps
+    pub head: Vec<StepSpec>,
+    /// optional any-group tail
+    pub any: Option<AnyGroup>,
+    /// total Markov states (head + any + initial)
+    pub m: usize,
+    /// pure sequence with no key captures/correlations and ≤ 64 steps:
+    /// step matching is PM-independent, enabling the per-event bitmask
+    /// fast path ([`CompiledQuery::step_mask`]) — see EXPERIMENTS.md
+    /// §Perf for the measured effect.
+    pub key_free_seq: bool,
+}
+
+/// Evaluate one predicate against an event given the PM's keys.
+#[inline]
+pub fn eval_pred(p: &Predicate, e: &Event, pm: &PartialMatch) -> bool {
+    match p {
+        Predicate::AttrCmp { slot, op, value } => op.eval(e.attrs[*slot], *value),
+        Predicate::AttrIn { slot, values } => values.contains(&e.attrs[*slot]),
+        Predicate::KeyCmp { slot, op, key } => {
+            // an unbound key constrains nothing — the binding step itself
+            // defines the correlation anchor
+            !pm.has_key(*key) || op.eval(e.attrs[*slot], pm.keys[*key])
+        }
+    }
+}
+
+/// Does `e` satisfy `spec` for this PM (type + all predicates)?
+#[inline]
+pub fn matches_spec(spec: &StepSpec, e: &Event, pm: &PartialMatch) -> bool {
+    e.etype == spec.etype && spec.preds.iter().all(|p| eval_pred(p, e, pm))
+}
+
+impl CompiledQuery {
+    /// Compile a query.
+    pub fn compile(query: Query) -> Self {
+        let (head, any) = match query.pattern.clone() {
+            Pattern::Seq(steps) => (steps, None),
+            Pattern::Any {
+                n,
+                spec,
+                distinct_slot,
+            } => (
+                Vec::new(),
+                Some(AnyGroup {
+                    n,
+                    spec,
+                    distinct_slot,
+                }),
+            ),
+            Pattern::SeqAny {
+                head,
+                n,
+                spec,
+                distinct_slot,
+            } => (
+                head,
+                Some(AnyGroup {
+                    n,
+                    spec,
+                    distinct_slot,
+                }),
+            ),
+        };
+        let m = query.state_count();
+        let key_free_seq = any.is_none()
+            && head.len() <= 64
+            && head.iter().all(|s| {
+                s.bind_key.is_none()
+                    && s.preds
+                        .iter()
+                        .all(|p| !matches!(p, Predicate::KeyCmp { .. }))
+            });
+        CompiledQuery {
+            query,
+            head,
+            any,
+            m,
+            key_free_seq,
+        }
+    }
+
+    /// Per-event step-match bitmask for [`Self::key_free_seq`] queries:
+    /// bit `i` set ⇔ `e` satisfies step `i`.  A PM at state `s` advances
+    /// on this event iff bit `s` is set — PM-independent, so the whole
+    /// predicate evaluation happens once per event instead of once per
+    /// (PM, event) check.
+    #[inline]
+    pub fn step_mask(&self, e: &Event) -> u64 {
+        debug_assert!(self.key_free_seq);
+        static DUMMY: std::sync::OnceLock<PartialMatch> = std::sync::OnceLock::new();
+        let dummy = DUMMY.get_or_init(|| PartialMatch::seed(u64::MAX, 0));
+        let mut mask = 0u64;
+        for (i, spec) in self.head.iter().enumerate() {
+            if matches_spec(spec, e, dummy) {
+                mask |= 1 << i;
+            }
+        }
+        mask
+    }
+
+    /// Is `state` the final (accepting) state?
+    #[inline]
+    pub fn is_final(&self, state: u32) -> bool {
+        state as usize == self.m - 1
+    }
+
+    /// Offer event `e` to `pm`; advance it if the next step matches.
+    ///
+    /// Skip-till-next/any semantics: a non-matching event leaves the PM
+    /// untouched (`NoMatch`), it never kills it — windows closing is
+    /// what retires unfinished PMs.
+    #[inline]
+    pub fn try_advance(&self, pm: &mut PartialMatch, e: &Event) -> StepResult {
+        let s = pm.state as usize;
+        debug_assert!(s < self.m - 1, "PM already final");
+        if s < self.head.len() {
+            let spec = &self.head[s];
+            if !matches_spec(spec, e, pm) {
+                return StepResult::NoMatch;
+            }
+            if let Some((k, slot)) = spec.bind_key {
+                pm.bind_key(k, e.attrs[slot]);
+            }
+            pm.state += 1;
+        } else {
+            let group = self
+                .any
+                .as_ref()
+                .expect("state beyond head requires an any-group");
+            if !matches_spec(&group.spec, e, pm) {
+                return StepResult::NoMatch;
+            }
+            let id = e.attr_id(group.distinct_slot);
+            if pm.seen.contains(&id) {
+                return StepResult::NoMatch;
+            }
+            if let Some((k, slot)) = group.spec.bind_key {
+                pm.bind_key(k, e.attrs[slot]);
+            }
+            pm.seen.push(id);
+            pm.state += 1;
+        }
+        if self.is_final(pm.state) {
+            StepResult::Completed
+        } else {
+            StepResult::Advanced
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::bus;
+    use crate::query::builtin::{q1, q3, q4};
+
+    fn ev(etype: u16, attrs: &[f64]) -> Event {
+        Event::new(0, 0, etype, attrs)
+    }
+
+    #[test]
+    fn seq_advances_in_order_only() {
+        use crate::query::builtin::PATTERN_RANKS as R;
+        let cq = CompiledQuery::compile(q1(100).queries.remove(0));
+        let mut pm = PartialMatch::seed(0, 0);
+        let s0 = R[0] as f64;
+        let s1 = R[1] as f64;
+        // second pattern symbol rising first: not step 0 -> no match
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s1, 10.0, 1.0])), StepResult::NoMatch);
+        // first symbol falling: predicate fails
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s0, 10.0, 0.0])), StepResult::NoMatch);
+        // first symbol rising: advances
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s0, 10.0, 1.0])), StepResult::Advanced);
+        assert_eq!(pm.state, 1);
+        // now the second symbol rising advances
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s1, 10.0, 1.0])), StepResult::Advanced);
+    }
+
+    #[test]
+    fn seq_completes_at_last_step() {
+        use crate::query::builtin::PATTERN_RANKS as R;
+        let cq = CompiledQuery::compile(q1(100).queries.remove(0));
+        let mut pm = PartialMatch::seed(0, 0);
+        for sym in &R[..9] {
+            assert_eq!(
+                cq.try_advance(&mut pm, &ev(0, &[*sym as f64, 1.0, 1.0])),
+                StepResult::Advanced
+            );
+        }
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(0, &[R[9] as f64, 1.0, 1.0])),
+            StepResult::Completed
+        );
+        assert!(cq.is_final(pm.state));
+    }
+
+    #[test]
+    fn any_requires_distinct_and_same_key() {
+        let cq = CompiledQuery::compile(q4(3, 1000, 500).queries.remove(0));
+        let mut pm = PartialMatch::seed(0, 0);
+        let delayed = |busid: f64, stop: f64| ev(0, &[busid, stop, 1.0, 5.0]);
+        // first delayed bus binds stop 7
+        assert_eq!(cq.try_advance(&mut pm, &delayed(1.0, 7.0)), StepResult::Advanced);
+        assert_eq!(pm.keys[0], 7.0);
+        // same bus again: distinctness rejects
+        assert_eq!(cq.try_advance(&mut pm, &delayed(1.0, 7.0)), StepResult::NoMatch);
+        // different stop: key correlation rejects
+        assert_eq!(cq.try_advance(&mut pm, &delayed(2.0, 8.0)), StepResult::NoMatch);
+        // on-time bus at stop 7: predicate rejects
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(0, &[3.0, 7.0, 0.0, 0.0])),
+            StepResult::NoMatch
+        );
+        // two more distinct delayed buses at stop 7: completes
+        assert_eq!(cq.try_advance(&mut pm, &delayed(2.0, 7.0)), StepResult::Advanced);
+        assert_eq!(cq.try_advance(&mut pm, &delayed(3.0, 7.0)), StepResult::Completed);
+        assert_eq!(pm.seen, vec![1, 2, 3]);
+        let _ = bus::A_BUS;
+    }
+
+    #[test]
+    fn seq_any_head_binds_team() {
+        let cq = CompiledQuery::compile(q3(2, 1500).queries.remove(0));
+        let mut pm = PartialMatch::seed(0, 0);
+        // striker (player 9, team 0) takes possession
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(0, &[9.0, 0.0, 50.0, 30.0])),
+            StepResult::Advanced
+        );
+        assert_eq!(pm.keys[0], 0.0);
+        // own-team player close to ball: KeyCmp(team != 0) rejects
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(1, &[5.0, 0.0, 50.0, 30.0, 1.0])),
+            StepResult::NoMatch
+        );
+        // far-away opponent: distance rejects
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(1, &[15.0, 1.0, 10.0, 10.0, 40.0])),
+            StepResult::NoMatch
+        );
+        // two distinct close opponents: complete
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(1, &[15.0, 1.0, 50.0, 30.0, 2.0])),
+            StepResult::Advanced
+        );
+        assert_eq!(
+            cq.try_advance(&mut pm, &ev(1, &[16.0, 1.0, 50.0, 30.0, 2.5])),
+            StepResult::Completed
+        );
+    }
+
+    #[test]
+    fn repetition_sequence_counts_states() {
+        let cq = CompiledQuery::compile(crate::query::builtin::q2(100).queries.remove(0));
+        assert_eq!(cq.m, 15);
+        let mut pm = PartialMatch::seed(0, 0);
+        // RE1 twice in a row per the repetition pattern
+        let s0 = crate::query::builtin::PATTERN_RANKS[0] as f64;
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s0, 1.0, 1.0])), StepResult::Advanced);
+        assert_eq!(cq.try_advance(&mut pm, &ev(0, &[s0, 1.0, 1.0])), StepResult::Advanced);
+        assert_eq!(pm.state, 2);
+    }
+}

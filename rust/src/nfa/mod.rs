@@ -1,0 +1,7 @@
+//! Pattern state machines and partial matches.
+
+pub mod machine;
+pub mod pm;
+
+pub use machine::{CompiledQuery, StepResult};
+pub use pm::PartialMatch;

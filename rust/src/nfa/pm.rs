@@ -1,0 +1,108 @@
+//! The partial match (PM): a live instance of a pattern state machine
+//! inside one window — exactly the unit of state that pSPICE sheds.
+
+/// Maximum number of correlation keys a PM can carry.
+pub const MAX_KEYS: usize = 2;
+
+/// A partial match.  `state` counts completed steps, so `state == 0` is
+/// the paper's initial state `s_1` and `state == m-1` is the final state
+/// `s_m` (at which point the PM has become a complex event and is
+/// removed from the operator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialMatch {
+    /// Unique id (diagnostics only; identity for QoR accounting is
+    /// `(query, window, key-bits)`, which is shedding-invariant).
+    pub id: u64,
+    /// Current state, 0-based (0 = initial).
+    pub state: u32,
+    /// Captured correlation keys (see `StepSpec::bind_key`).
+    pub keys: [f64; MAX_KEYS],
+    /// Bitmask of which keys are bound.
+    pub keys_set: u8,
+    /// Distinct ids consumed by the any-group so far.
+    pub seen: Vec<i64>,
+    /// Sequence number of the event that opened the surrounding window
+    /// (for diagnostics and QoR identity).
+    pub opened_seq: u64,
+}
+
+impl PartialMatch {
+    /// Fresh PM at the initial state.
+    pub fn seed(id: u64, opened_seq: u64) -> Self {
+        PartialMatch {
+            id,
+            state: 0,
+            keys: [0.0; MAX_KEYS],
+            keys_set: 0,
+            seen: Vec::new(),
+            opened_seq,
+        }
+    }
+
+    /// Is key `k` bound?
+    #[inline]
+    pub fn has_key(&self, k: usize) -> bool {
+        self.keys_set & (1 << k) != 0
+    }
+
+    /// Bind key `k` (first binding wins; re-binding is a no-op so the
+    /// anchor step's capture is stable).
+    #[inline]
+    pub fn bind_key(&mut self, k: usize, v: f64) {
+        if !self.has_key(k) {
+            self.keys[k] = v;
+            self.keys_set |= 1 << k;
+        }
+    }
+
+    /// Stable identity bits of the bound keys (QoR identity component).
+    pub fn key_bits(&self) -> u64 {
+        // mix both key slots; unbound slots contribute 0
+        let a = if self.has_key(0) {
+            self.keys[0].to_bits()
+        } else {
+            0
+        };
+        let b = if self.has_key(1) {
+            self.keys[1].to_bits()
+        } else {
+            0
+        };
+        a ^ b.rotate_left(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_is_initial() {
+        let pm = PartialMatch::seed(1, 42);
+        assert_eq!(pm.state, 0);
+        assert_eq!(pm.opened_seq, 42);
+        assert!(!pm.has_key(0));
+        assert!(pm.seen.is_empty());
+    }
+
+    #[test]
+    fn key_binding_first_wins() {
+        let mut pm = PartialMatch::seed(0, 0);
+        pm.bind_key(0, 7.0);
+        pm.bind_key(0, 9.0);
+        assert_eq!(pm.keys[0], 7.0);
+        assert!(pm.has_key(0));
+        assert!(!pm.has_key(1));
+    }
+
+    #[test]
+    fn key_bits_distinguish_keys() {
+        let mut a = PartialMatch::seed(0, 0);
+        a.bind_key(0, 7.0);
+        let mut b = PartialMatch::seed(1, 0);
+        b.bind_key(0, 8.0);
+        assert_ne!(a.key_bits(), b.key_bits());
+        let unbound = PartialMatch::seed(2, 0);
+        assert_eq!(unbound.key_bits(), 0);
+    }
+}

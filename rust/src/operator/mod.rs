@@ -1,0 +1,12 @@
+//! The CEP operator: multi-query pattern matching over windows, with
+//! observation capture for the model builder and a virtual cost model
+//! for deterministic overload experiments.
+
+pub mod cost;
+pub mod observe;
+#[allow(clippy::module_inception)]
+pub mod operator;
+
+pub use cost::CostModel;
+pub use observe::{ObservationHub, QueryStats};
+pub use operator::{ComplexEvent, Operator, PmRef, ProcessOutcome};

@@ -1,0 +1,148 @@
+//! Observation capture (paper §III-C): per query, aggregated counts of
+//! state transitions `<q, s, s'>` and summed processing-time rewards
+//! `<q, s, s', t>` from which the model builder learns the transition
+//! matrix `T_q` and the reward function `R_q`.
+//!
+//! Counts are aggregated in place (O(m²) memory per query, no raw log),
+//! so observation capture adds O(1) work per (PM, event) check.
+
+use crate::linalg::Mat;
+
+/// Aggregated transition statistics for one query.
+#[derive(Debug, Clone)]
+pub struct QueryStats {
+    /// Markov state count (incl. initial).
+    pub m: usize,
+    /// `counts[s][s']` — observed one-event transitions.
+    pub counts: Vec<Vec<u64>>,
+    /// `reward_ns[s][s']` — summed processing time of those transitions.
+    pub reward_ns: Vec<Vec<f64>>,
+    /// Total observations.
+    pub total: u64,
+}
+
+impl QueryStats {
+    /// Empty stats for an `m`-state query.
+    pub fn new(m: usize) -> Self {
+        QueryStats {
+            m,
+            counts: vec![vec![0; m]; m],
+            reward_ns: vec![vec![0.0; m]; m],
+            total: 0,
+        }
+    }
+
+    /// Record one observation `<s, s', t_ns>`.
+    #[inline]
+    pub fn record(&mut self, s: u32, s2: u32, t_ns: f64) {
+        self.counts[s as usize][s2 as usize] += 1;
+        self.reward_ns[s as usize][s2 as usize] += t_ns;
+        self.total += 1;
+    }
+
+    /// Learned transition matrix (rows normalized; final state forced
+    /// absorbing; unobserved rows stay put).
+    pub fn transition_matrix(&self) -> Mat {
+        let mut t = Mat::zeros(self.m, self.m);
+        for s in 0..self.m {
+            for s2 in 0..self.m {
+                t[(s, s2)] = self.counts[s][s2] as f64;
+            }
+        }
+        crate::linalg::markov::absorbing_normalize(&mut t);
+        t
+    }
+
+    /// Learned expected one-event reward per state:
+    /// `r(s) = Σ_{s'} P(s,s') · avg t(s,s')`, which reduces to
+    /// (total reward out of s) / (total transitions out of s).
+    pub fn expected_reward(&self) -> Vec<f64> {
+        (0..self.m)
+            .map(|s| {
+                let n: u64 = self.counts[s].iter().sum();
+                if n == 0 || s == self.m - 1 {
+                    0.0
+                } else {
+                    let tot: f64 = self.reward_ns[s].iter().sum();
+                    tot / n as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Reset all counters (used at retraining boundaries).
+    pub fn reset(&mut self) {
+        for row in &mut self.counts {
+            row.fill(0);
+        }
+        for row in &mut self.reward_ns {
+            row.fill(0.0);
+        }
+        self.total = 0;
+    }
+}
+
+/// Statistics for all queries of an operator.
+#[derive(Debug, Clone)]
+pub struct ObservationHub {
+    /// per-query stats
+    pub queries: Vec<QueryStats>,
+    /// capture on/off (off on the ground-truth and measurement-free runs)
+    pub enabled: bool,
+}
+
+impl ObservationHub {
+    /// Hub for queries with the given state counts.
+    pub fn new(ms: &[usize]) -> Self {
+        ObservationHub {
+            queries: ms.iter().map(|&m| QueryStats::new(m)).collect(),
+            enabled: true,
+        }
+    }
+
+    /// Total observations across queries.
+    pub fn total(&self) -> u64 {
+        self.queries.iter().map(|q| q.total).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transition_matrix_normalizes() {
+        let mut qs = QueryStats::new(3);
+        // from state 0: 3 stays, 1 advance
+        for _ in 0..3 {
+            qs.record(0, 0, 10.0);
+        }
+        qs.record(0, 1, 30.0);
+        let t = qs.transition_matrix();
+        assert!((t[(0, 0)] - 0.75).abs() < 1e-12);
+        assert!((t[(0, 1)] - 0.25).abs() < 1e-12);
+        assert!(t.is_row_stochastic(1e-12));
+        // final row absorbing
+        assert_eq!(t[(2, 2)], 1.0);
+    }
+
+    #[test]
+    fn expected_reward_averages() {
+        let mut qs = QueryStats::new(3);
+        qs.record(0, 0, 10.0);
+        qs.record(0, 1, 30.0);
+        let r = qs.expected_reward();
+        assert!((r[0] - 20.0).abs() < 1e-12);
+        assert_eq!(r[1], 0.0); // unobserved
+        assert_eq!(r[2], 0.0); // final state
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut qs = QueryStats::new(2);
+        qs.record(0, 1, 5.0);
+        qs.reset();
+        assert_eq!(qs.total, 0);
+        assert_eq!(qs.counts[0][1], 0);
+    }
+}

@@ -1,0 +1,536 @@
+//! The multi-query CEP operator (paper §II-A): processes the totally
+//! ordered input stream event by event, matching every live PM in every
+//! open window, emitting complex events on completion, capturing
+//! observations for the model builder, and accounting virtual cost.
+//!
+//! The operator also exposes the two shedding primitives the paper's
+//! load shedder needs (Alg. 2): enumerate all PMs with their
+//! `(query, state, R_w)` coordinates, and drop a chosen set.
+
+use std::collections::HashSet;
+
+use crate::events::Event;
+use crate::nfa::{CompiledQuery, PartialMatch, StepResult};
+use crate::query::{OpenPolicy, Query};
+use crate::util::Rng;
+use crate::windows::QueryWindows;
+
+use super::cost::CostModel;
+use super::observe::ObservationHub;
+
+/// A detected complex event.  Identity `(query, window_open_seq,
+/// key_bits)` is stable across shedding decisions, which is what makes
+/// false-negative accounting well-defined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ComplexEvent {
+    /// Query index within the operator.
+    pub query: usize,
+    /// Opening sequence number of the window it completed in.
+    pub window_open_seq: u64,
+    /// Bound correlation keys of the completing PM.
+    pub key_bits: u64,
+    /// Sequence number of the completing event.
+    pub completed_seq: u64,
+}
+
+/// Result of processing one event.
+#[derive(Debug, Default, Clone)]
+pub struct ProcessOutcome {
+    /// Complex events detected while processing this event.
+    pub completions: Vec<ComplexEvent>,
+    /// Virtual processing cost of this event (ns).
+    pub cost_ns: f64,
+    /// Number of (PM, event) checks performed.
+    pub checks: u64,
+    /// Windows opened / closed by this event.
+    pub opened: usize,
+    /// Windows closed by this event.
+    pub closed: usize,
+}
+
+/// Coordinates of one PM for the shedder.
+#[derive(Debug, Clone, Copy)]
+pub struct PmRef {
+    /// query index
+    pub query: usize,
+    /// current state
+    pub state: u32,
+    /// expected remaining events in its window
+    pub remaining: u64,
+    /// unique PM id (used by [`Operator::drop_pms`])
+    pub pm_id: u64,
+}
+
+/// The CEP operator.
+#[derive(Clone)]
+pub struct Operator {
+    /// Compiled queries.
+    pub queries: Vec<CompiledQuery>,
+    /// Per-query open windows.
+    pub wins: Vec<QueryWindows>,
+    /// Cost model.
+    pub cost: CostModel,
+    /// Observation capture.
+    pub obs: ObservationHub,
+    next_pm_id: u64,
+    /// cached total PM count (kept incrementally)
+    n_pms: usize,
+    /// total PMs ever created (match-probability denominator)
+    pub pms_created: u64,
+    /// total complex events ever emitted (match-probability numerator)
+    pub completions_total: u64,
+    /// last processed position (for `R_w` of time windows)
+    last_seq: u64,
+    last_ts: u64,
+    /// EWMA of events per ms of source time (for time-window `R_w`)
+    events_per_ms: f64,
+    prev_ts: u64,
+}
+
+impl Operator {
+    /// Build an operator for a query set.
+    pub fn new(queries: Vec<Query>) -> Self {
+        let compiled: Vec<CompiledQuery> =
+            queries.into_iter().map(CompiledQuery::compile).collect();
+        let ms: Vec<usize> = compiled.iter().map(|c| c.m).collect();
+        let n = compiled.len();
+        Operator {
+            wins: (0..n).map(|_| QueryWindows::default()).collect(),
+            obs: ObservationHub::new(&ms),
+            cost: CostModel::with_queries(n),
+            queries: compiled,
+            next_pm_id: 0,
+            n_pms: 0,
+            pms_created: 0,
+            completions_total: 0,
+            last_seq: 0,
+            last_ts: 0,
+            events_per_ms: 1.0,
+            prev_ts: 0,
+        }
+    }
+
+    /// Current number of live partial matches (paper's `n_pm`).
+    #[inline]
+    pub fn pm_count(&self) -> usize {
+        self.n_pms
+    }
+
+    /// Current stream position `(seq, ts)`.
+    pub fn position(&self) -> (u64, u64) {
+        (self.last_seq, self.last_ts)
+    }
+
+    /// EWMA estimate of events per millisecond of source time.
+    pub fn events_per_ms(&self) -> f64 {
+        self.events_per_ms
+    }
+
+    /// Does this query's window multi-seed (slide-opened windows track
+    /// one PM per correlation key, e.g. Q4's per-stop PMs)?
+    #[inline]
+    fn multi_seed(cq: &CompiledQuery) -> bool {
+        matches!(cq.query.open, OpenPolicy::EveryK(_))
+    }
+
+    /// Process one event through every query and window.
+    pub fn process_event(&mut self, e: &Event) -> ProcessOutcome {
+        let mut out = ProcessOutcome {
+            cost_ns: self.cost.base_event_ns,
+            ..Default::default()
+        };
+        // rate estimate for time-window R_w
+        if e.ts_ms > self.prev_ts {
+            let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
+            self.events_per_ms = 0.999 * self.events_per_ms + 0.001 * inst;
+        }
+        self.prev_ts = e.ts_ms;
+        self.last_seq = e.seq;
+        self.last_ts = e.ts_ms;
+
+        // disjoint field borrows for the match loop
+        let Operator {
+            queries,
+            wins,
+            cost,
+            obs,
+            next_pm_id,
+            n_pms,
+            pms_created,
+            completions_total,
+            ..
+        } = self;
+        for (qi, cq) in queries.iter().enumerate() {
+            let spec = cq.query.window;
+            let qw = &mut wins[qi];
+            // 1. expire windows that ended before this event
+            let closed = qw.expire(spec, e.seq, e.ts_ms);
+            out.closed += closed.len();
+            for w in &closed {
+                *n_pms -= w.pms.len();
+            }
+            // 2. maybe open a new window (the opening event is processed
+            //    inside it, like the paper's bus example)
+            out.cost_ns += cost.open_check_ns;
+            if qw.should_open(cq, e) {
+                qw.open(e, next_pm_id);
+                *n_pms += 1;
+                *pms_created += 1;
+                out.opened += 1;
+            }
+            // 3. match against every PM of every open window
+            let check_ns = cost.check_ns(qi);
+            let multi_seed = Self::multi_seed(cq);
+            out.cost_ns += cost.per_window_ns * qw.windows.len() as f64;
+            // fast path for key-free sequences (Q1/Q2 shape): evaluate
+            // the step predicates ONCE per event, then each PM check is
+            // a bit test.  Virtual-cost and observation accounting are
+            // identical to the generic path (the modeled operator still
+            // checks every PM — only our wall-clock shrinks).
+            if cq.key_free_seq {
+                let mask = cq.step_mask(e);
+                let obs_on = obs.enabled;
+                let obs_q = &mut obs.queries[qi];
+                let final_state = (cq.m - 1) as u32;
+                for w in qw.windows.iter_mut() {
+                    let mut i = 0;
+                    while i < w.pms.len() {
+                        let pm = &mut w.pms[i];
+                        let s = pm.state;
+                        let advanced = mask & (1u64 << s) != 0;
+                        out.checks += 1;
+                        out.cost_ns += check_ns;
+                        if advanced {
+                            pm.state = s + 1;
+                        }
+                        if obs_on {
+                            obs_q.record(s, pm.state, check_ns);
+                        }
+                        if advanced && pm.state == final_state {
+                            *completions_total += 1;
+                            out.completions.push(ComplexEvent {
+                                query: qi,
+                                window_open_seq: w.open_seq,
+                                key_bits: pm.key_bits(),
+                                completed_seq: e.seq,
+                            });
+                            w.pms.swap_remove(i);
+                            *n_pms -= 1;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                continue;
+            }
+            for w in qw.windows.iter_mut() {
+                let mut new_seeds = 0usize;
+                let mut i = 0;
+                while i < w.pms.len() {
+                    let pm = &mut w.pms[i];
+                    let s_before = pm.state;
+                    let was_seed = s_before == 0;
+                    let r = cq.try_advance(pm, e);
+                    out.checks += 1;
+                    out.cost_ns += check_ns;
+                    // multi-seed key dedup: a seed that just bound an
+                    // already-claimed key must not advance (another PM
+                    // already tracks that correlation group)
+                    if multi_seed
+                        && was_seed
+                        && r != StepResult::NoMatch
+                        && w.claimed.contains(&pm.key_bits())
+                    {
+                        // revert: re-seed in place
+                        let id = pm.id;
+                        let opened = pm.opened_seq;
+                        *pm = PartialMatch::seed(id, opened);
+                        i += 1;
+                        continue;
+                    }
+                    if obs.enabled {
+                        let s_after = pm.state;
+                        obs.queries[qi].record(s_before, s_after, check_ns);
+                    }
+                    match r {
+                        StepResult::NoMatch => {
+                            i += 1;
+                        }
+                        StepResult::Advanced => {
+                            if multi_seed && was_seed {
+                                w.claimed.push(pm.key_bits());
+                                new_seeds += 1;
+                            }
+                            i += 1;
+                        }
+                        StepResult::Completed => {
+                            *completions_total += 1;
+                            out.completions.push(ComplexEvent {
+                                query: qi,
+                                window_open_seq: w.open_seq,
+                                key_bits: pm.key_bits(),
+                                completed_seq: e.seq,
+                            });
+                            if multi_seed && was_seed {
+                                // single-step any-group completed from seed
+                                w.claimed.push(pm.key_bits());
+                                new_seeds += 1;
+                            }
+                            w.pms.swap_remove(i);
+                            *n_pms -= 1;
+                        }
+                    }
+                }
+                for _ in 0..new_seeds {
+                    w.pms.push(PartialMatch::seed(*next_pm_id, w.open_seq));
+                    *next_pm_id += 1;
+                    *n_pms += 1;
+                    *pms_created += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Window bookkeeping only (expiry + opening), without PM matching.
+    ///
+    /// Used for events *dropped by a black-box shedder* (E-BL): per the
+    /// eSPICE/E-BL semantics, events are shed from *within* windows, so
+    /// window open/close predicates still see every event; only the
+    /// matching work is saved.
+    pub fn process_bookkeeping(&mut self, e: &Event) -> ProcessOutcome {
+        let mut out = ProcessOutcome {
+            cost_ns: self.cost.base_event_ns,
+            ..Default::default()
+        };
+        self.prev_ts = e.ts_ms;
+        self.last_seq = e.seq;
+        self.last_ts = e.ts_ms;
+        let Operator {
+            queries,
+            wins,
+            cost,
+            next_pm_id,
+            n_pms,
+            pms_created,
+            ..
+        } = self;
+        for (qi, cq) in queries.iter().enumerate() {
+            let qw = &mut wins[qi];
+            let closed = qw.expire(cq.query.window, e.seq, e.ts_ms);
+            out.closed += closed.len();
+            for w in &closed {
+                *n_pms -= w.pms.len();
+            }
+            out.cost_ns += cost.open_check_ns;
+            if qw.should_open(cq, e) {
+                qw.open(e, next_pm_id);
+                *n_pms += 1;
+                *pms_created += 1;
+                out.opened += 1;
+            }
+        }
+        out
+    }
+
+    /// Ratio of completed PMs to created PMs so far — the paper's
+    /// *match probability* (computed on the ground-truth run).
+    pub fn match_probability(&self) -> f64 {
+        if self.pms_created == 0 {
+            0.0
+        } else {
+            self.completions_total as f64 / self.pms_created as f64
+        }
+    }
+
+    /// Enumerate every live PM with its shedding coordinates.
+    pub fn pm_refs(&self, buf: &mut Vec<PmRef>) {
+        buf.clear();
+        for (qi, qw) in self.wins.iter().enumerate() {
+            let spec = self.queries[qi].query.window;
+            for w in &qw.windows {
+                let remaining = w.remaining_events(
+                    spec,
+                    self.last_seq,
+                    self.last_ts,
+                    self.events_per_ms,
+                );
+                for pm in &w.pms {
+                    buf.push(PmRef {
+                        query: qi,
+                        state: pm.state,
+                        remaining,
+                        pm_id: pm.id,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Drop the PMs whose ids are in `ids`.  Returns how many were
+    /// actually removed.
+    pub fn drop_pms(&mut self, ids: &HashSet<u64>) -> usize {
+        let mut dropped = 0;
+        for qw in &mut self.wins {
+            for w in &mut qw.windows {
+                let before = w.pms.len();
+                w.pms.retain(|pm| !ids.contains(&pm.id));
+                dropped += before - w.pms.len();
+            }
+        }
+        self.n_pms -= dropped;
+        dropped
+    }
+
+    /// Drop `rho` PMs uniformly at random (the PM-BL baseline).
+    pub fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
+        let mut refs = Vec::new();
+        self.pm_refs(&mut refs);
+        if refs.is_empty() || rho == 0 {
+            return 0;
+        }
+        let rho = rho.min(refs.len());
+        rng.shuffle(&mut refs);
+        let ids: HashSet<u64> = refs[..rho].iter().map(|r| r.pm_id).collect();
+        self.drop_pms(&ids)
+    }
+
+    /// Remove every PM and window (used between experiment phases).
+    pub fn reset_state(&mut self) {
+        for qw in &mut self.wins {
+            qw.windows.clear();
+        }
+        self.n_pms = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{BusGen, StockGen};
+    use crate::events::EventStream;
+    use crate::query::builtin::{q1, q4};
+
+    fn stock_op(ws: u64) -> Operator {
+        Operator::new(q1(ws).queries)
+    }
+
+    #[test]
+    fn windows_open_on_leaders_and_expire() {
+        let mut op = stock_op(100);
+        let mut g = StockGen::with_seed(1);
+        let mut opened = 0;
+        for _ in 0..5_000 {
+            let e = g.next_event().unwrap();
+            let out = op.process_event(&e);
+            opened += out.opened;
+        }
+        assert!(opened > 0, "leader quotes open windows");
+        // all windows currently open must be within ws of the tip
+        for qw in &op.wins {
+            for w in &qw.windows {
+                assert!(op.last_seq < w.open_seq + 100);
+            }
+        }
+        // pm count cache consistent
+        let direct: usize = op.wins.iter().map(|q| q.pm_count()).sum();
+        assert_eq!(direct, op.pm_count());
+    }
+
+    #[test]
+    fn q4_detects_same_stop_delays() {
+        // hand-crafted bus stream: 3 distinct buses delayed at stop 5
+        let mut op = Operator::new(q4(3, 1000, 500).queries);
+        let mk = |seq, busid: f64, stop: f64, delayed: f64| {
+            Event::new(seq, seq, 0, &[busid, stop, delayed, delayed * 5.0])
+        };
+        let mut completions = Vec::new();
+        // seq 0 opens a window (EveryK(500))
+        completions.extend(op.process_event(&mk(0, 1.0, 5.0, 1.0)).completions);
+        completions.extend(op.process_event(&mk(1, 2.0, 9.0, 1.0)).completions); // other stop
+        completions.extend(op.process_event(&mk(2, 2.0, 5.0, 1.0)).completions);
+        completions.extend(op.process_event(&mk(3, 2.0, 5.0, 1.0)).completions); // dup bus
+        completions.extend(op.process_event(&mk(4, 3.0, 5.0, 0.0)).completions); // on time
+        completions.extend(op.process_event(&mk(5, 3.0, 5.0, 1.0)).completions);
+        assert_eq!(completions.len(), 1, "exactly one stop-5 complex event");
+        assert_eq!(completions[0].query, 0);
+        assert_eq!(completions[0].window_open_seq, 0);
+        // the stop-9 PM is still live (multi-seed opened one for stop 9)
+        assert!(op.pm_count() >= 1);
+    }
+
+    #[test]
+    fn q4_multi_seed_does_not_duplicate_stop_groups() {
+        let mut op = Operator::new(q4(3, 1000, 500).queries);
+        let mk = |seq, busid: f64, stop: f64| {
+            Event::new(seq, seq, 0, &[busid, stop, 1.0, 5.0])
+        };
+        // five distinct buses delayed at stop 7: one completion at n=3,
+        // and the remaining buses must NOT form a second group counting
+        // bus 4,5 plus re-counting (they start a fresh group legally)
+        let mut completions = 0;
+        for (i, b) in [1.0, 2.0, 3.0, 4.0, 5.0].iter().enumerate() {
+            completions += op.process_event(&mk(i as u64, *b, 7.0)).completions.len();
+        }
+        assert_eq!(completions, 1, "claimed-key dedup prevents double groups");
+    }
+
+    #[test]
+    fn observations_flow_and_costs_accrue() {
+        let mut op = Operator::new(q4(4, 2000, 500).queries);
+        let mut g = BusGen::with_seed(2);
+        let mut cost = 0.0;
+        for _ in 0..10_000 {
+            let e = g.next_event().unwrap();
+            cost += op.process_event(&e).cost_ns;
+        }
+        assert!(op.obs.total() > 0, "observations captured");
+        assert!(cost > 0.0);
+        let t = op.obs.queries[0].transition_matrix();
+        assert!(t.is_row_stochastic(1e-9));
+    }
+
+    #[test]
+    fn drop_random_reduces_pm_count() {
+        let mut op = Operator::new(q4(6, 5000, 250).queries);
+        let mut g = BusGen::with_seed(3);
+        for _ in 0..20_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let before = op.pm_count();
+        assert!(before > 10, "need some PMs, got {before}");
+        let mut rng = Rng::seeded(1);
+        let dropped = op.drop_random(before / 2, &mut rng);
+        assert_eq!(dropped, before / 2);
+        assert_eq!(op.pm_count(), before - dropped);
+    }
+
+    #[test]
+    fn drop_pms_by_id_is_exact() {
+        let mut op = Operator::new(q1(500).queries);
+        let mut g = StockGen::with_seed(4);
+        for _ in 0..3_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        assert_eq!(refs.len(), op.pm_count());
+        let victim: HashSet<u64> = refs.iter().take(5).map(|r| r.pm_id).collect();
+        let dropped = op.drop_pms(&victim);
+        assert_eq!(dropped, victim.len().min(refs.len()));
+    }
+
+    #[test]
+    fn completions_without_shedding_are_deterministic() {
+        let run = || {
+            let mut op = Operator::new(q4(3, 3000, 300).queries);
+            let mut g = BusGen::with_seed(5);
+            let mut all = Vec::new();
+            for _ in 0..30_000 {
+                all.extend(op.process_event(&g.next_event().unwrap()).completions);
+            }
+            all
+        };
+        assert_eq!(run(), run());
+    }
+}

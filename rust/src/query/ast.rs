@@ -1,0 +1,237 @@
+//! Query AST: what a CEP pattern over one event stream looks like after
+//! name resolution (attribute names → slots, event-type names → ids).
+//!
+//! The operators cover the paper's evaluation set (§IV-A): *sequence*
+//! (Q1), *sequence with repetition* (Q2), *sequence with any* (Q3) and
+//! *any* (Q4), all under skip-till-next/any-match selection, over
+//! count- and time-based sliding windows with logical open predicates.
+
+use crate::events::EventType;
+
+/// Comparison operator in a predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+}
+
+impl CmpOp {
+    /// Apply the comparison.
+    #[inline]
+    pub fn eval(self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    }
+}
+
+/// A predicate over one event (and, optionally, the PM's captured keys).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Predicate {
+    /// `e.attrs[slot] op value`
+    AttrCmp {
+        /// attribute slot
+        slot: usize,
+        /// comparison
+        op: CmpOp,
+        /// constant
+        value: f64,
+    },
+    /// `e.attrs[slot] ∈ values`
+    AttrIn {
+        /// attribute slot
+        slot: usize,
+        /// allowed values
+        values: Vec<f64>,
+    },
+    /// `e.attrs[slot] op pm.keys[key]` — correlation with a captured key
+    /// (e.g. Q4's "same stop as the first delayed bus", Q3's "other
+    /// team than the striker").  Evaluates to **true** while the key is
+    /// still unbound (the binding step itself defines it).
+    KeyCmp {
+        /// attribute slot on the incoming event
+        slot: usize,
+        /// comparison
+        op: CmpOp,
+        /// PM key index (see [`StepSpec::bind_key`])
+        key: usize,
+    },
+}
+
+/// One step of a pattern: the event type it consumes, its predicates, and
+/// optional key capture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSpec {
+    /// Event type this step consumes.
+    pub etype: EventType,
+    /// All predicates must hold.
+    pub preds: Vec<Predicate>,
+    /// If set, capture `e.attrs[slot]` into `pm.keys[key]` when this step
+    /// matches: `(key, slot)`.
+    pub bind_key: Option<(usize, usize)>,
+}
+
+impl StepSpec {
+    /// Step with no predicates.
+    pub fn any_of_type(etype: EventType) -> Self {
+        StepSpec {
+            etype,
+            preds: Vec::new(),
+            bind_key: None,
+        }
+    }
+}
+
+/// Pattern shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    /// `seq(s1; s2; …; sk)` — ordered steps (repetition allowed by
+    /// repeating a spec, as in Q2).
+    Seq(Vec<StepSpec>),
+    /// `any(n, spec)` — n matches of `spec` with pairwise-distinct values
+    /// of `distinct_slot` (e.g. n distinct buses), in any order.
+    Any {
+        /// how many distinct matches complete the pattern
+        n: usize,
+        /// the step all matches must satisfy
+        spec: StepSpec,
+        /// slot whose value must be pairwise distinct
+        distinct_slot: usize,
+    },
+    /// `seq(head…; any(n, spec))` — Q3's shape: a head sequence followed
+    /// by an any-group.
+    SeqAny {
+        /// ordered head steps
+        head: Vec<StepSpec>,
+        /// any-group size
+        n: usize,
+        /// any-group step
+        spec: StepSpec,
+        /// distinctness slot for the any-group
+        distinct_slot: usize,
+    },
+}
+
+impl Pattern {
+    /// Number of Markov states m = (#steps to complete) + 1, including
+    /// the initial state (paper: `|S_q|`, e.g. 4 for `seq(A;B;C)`).
+    pub fn state_count(&self) -> usize {
+        match self {
+            Pattern::Seq(steps) => steps.len() + 1,
+            Pattern::Any { n, .. } => n + 1,
+            Pattern::SeqAny { head, n, .. } => head.len() + n + 1,
+        }
+    }
+}
+
+/// Window extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowSpec {
+    /// Count-based: the window spans `ws` events from its opening event.
+    Count(u64),
+    /// Time-based: the window spans `ws_ms` of source time.
+    TimeMs(u64),
+}
+
+/// When new windows open.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpenPolicy {
+    /// A new window opens on every event matching the predicate
+    /// (Q1/Q2: each leading-symbol event; Q3: each striker possession).
+    OnMatch(StepSpec),
+    /// A new window opens every `k` events (Q4: slide = 500).
+    EveryK(u64),
+}
+
+/// Event-selection strategy (paper §IV-A: skip-till-next/any-match).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// Skip-till-next-match: non-matching events are skipped; the first
+    /// matching event advances the PM (single state-machine instance).
+    SkipTillNext,
+    /// Skip-till-any-match: a matching event both advances a branch and
+    /// leaves the original PM open (bounded branching; see
+    /// [`crate::operator::CostModel`] for the branch cap).
+    SkipTillAny,
+}
+
+/// A complete, name-resolved query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// Display name (e.g. "q1").
+    pub name: String,
+    /// Importance weight `w_q` (paper §II-B).
+    pub weight: f64,
+    /// The pattern.
+    pub pattern: Pattern,
+    /// Window extent.
+    pub window: WindowSpec,
+    /// Window opening policy.
+    pub open: OpenPolicy,
+    /// Selection strategy.
+    pub selection: Selection,
+}
+
+impl Query {
+    /// Markov state count for this query (incl. initial state).
+    pub fn state_count(&self) -> usize {
+        self.pattern.state_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_ops() {
+        assert!(CmpOp::Eq.eval(1.0, 1.0));
+        assert!(CmpOp::Ne.eval(1.0, 2.0));
+        assert!(CmpOp::Lt.eval(1.0, 2.0));
+        assert!(CmpOp::Le.eval(2.0, 2.0));
+        assert!(CmpOp::Gt.eval(3.0, 2.0));
+        assert!(CmpOp::Ge.eval(2.0, 2.0));
+        assert!(!CmpOp::Lt.eval(2.0, 2.0));
+    }
+
+    #[test]
+    fn state_counts_match_paper() {
+        // paper's example: seq(A;B;C) has 4 states incl. initial
+        let s = StepSpec::any_of_type(0);
+        assert_eq!(Pattern::Seq(vec![s.clone(), s.clone(), s.clone()]).state_count(), 4);
+        assert_eq!(
+            Pattern::Any {
+                n: 3,
+                spec: s.clone(),
+                distinct_slot: 0
+            }
+            .state_count(),
+            4
+        );
+        assert_eq!(
+            Pattern::SeqAny {
+                head: vec![s.clone()],
+                n: 2,
+                spec: s,
+                distinct_slot: 0
+            }
+            .state_count(),
+            4
+        );
+    }
+}

@@ -1,0 +1,397 @@
+//! A small Tesla-like text DSL for defining queries, so examples and
+//! config files can ship patterns without recompiling.
+//!
+//! Grammar (whitespace-insensitive):
+//!
+//! ```text
+//! query q4 weight 1.0 {
+//!   window count 2000
+//!   open every 500
+//!   select skip-till-next
+//!   any 5 of bus where delayed == 1 && stop == key(0) bind key(0) = stop
+//!     distinct bus
+//! }
+//!
+//! query q1 weight 2.0 {
+//!   window count 5000
+//!   open on quote where symbol in [0,1,2,3]
+//!   seq (
+//!     quote where symbol == 0 && rising == 1 ;
+//!     quote where symbol == 1 && rising == 1
+//!   )
+//! }
+//! ```
+//!
+//! `seq (...; any N of <step> distinct <attr>)` gives the Q3 shape.
+//! Attribute names resolve against the stream's [`Schema`]; `key(i)`
+//! refers to PM correlation keys.
+
+use nom::{
+    branch::alt,
+    bytes::complete::{tag, take_while1},
+    character::complete::{char, multispace0},
+    combinator::{map, opt, recognize, value},
+    multi::{many0, separated_list1},
+    number::complete::double,
+    sequence::{delimited, pair, preceded, tuple},
+    IResult,
+};
+
+use crate::events::Schema;
+
+use super::ast::*;
+
+fn ident(i: &str) -> IResult<&str, &str> {
+    recognize(pair(
+        take_while1(|c: char| c.is_ascii_alphabetic() || c == '_'),
+        many0(take_while1(|c: char| {
+            c.is_ascii_alphanumeric() || c == '_' || c == '-'
+        })),
+    ))(i)
+}
+
+fn ws<'a, F, O>(inner: F) -> impl FnMut(&'a str) -> IResult<&'a str, O>
+where
+    F: FnMut(&'a str) -> IResult<&'a str, O>,
+{
+    delimited(multispace0, inner, multispace0)
+}
+
+fn cmp_op(i: &str) -> IResult<&str, CmpOp> {
+    alt((
+        value(CmpOp::Eq, tag("==")),
+        value(CmpOp::Ne, tag("!=")),
+        value(CmpOp::Le, tag("<=")),
+        value(CmpOp::Ge, tag(">=")),
+        value(CmpOp::Lt, tag("<")),
+        value(CmpOp::Gt, tag(">")),
+    ))(i)
+}
+
+/// right-hand side of a comparison: number or `key(i)`
+enum Rhs {
+    Const(f64),
+    Key(usize),
+}
+
+fn rhs(i: &str) -> IResult<&str, Rhs> {
+    alt((
+        map(
+            preceded(tag("key"), delimited(char('('), ws(double), char(')'))),
+            |k| Rhs::Key(k as usize),
+        ),
+        map(double, Rhs::Const),
+    ))(i)
+}
+
+/// one predicate: `attr op rhs` or `attr in [v, v, ...]`
+fn predicate<'a>(
+    i: &'a str,
+    schema: &Schema,
+    etype: u16,
+) -> IResult<&'a str, Predicate> {
+    let (i, attr) = ws(ident)(i)?;
+    let slot = match schema.attr_slot(etype, attr) {
+        Some(s) => s,
+        None => {
+            return Err(nom::Err::Failure(nom::error::Error::new(
+                i,
+                nom::error::ErrorKind::Verify,
+            )))
+        }
+    };
+    if let (i2, Some(_)) = opt(ws(tag("in")))(i)? {
+        let (i3, values) = delimited(
+            ws(char('[')),
+            separated_list1(ws(char(',')), double),
+            ws(char(']')),
+        )(i2)?;
+        return Ok((i3, Predicate::AttrIn { slot, values }));
+    }
+    let (i, op) = ws(cmp_op)(i)?;
+    let (i, r) = ws(|x| rhs(x))(i)?;
+    Ok((
+        i,
+        match r {
+            Rhs::Const(value) => Predicate::AttrCmp { slot, op, value },
+            Rhs::Key(key) => Predicate::KeyCmp { slot, op, key },
+        },
+    ))
+}
+
+/// a step: `etype [where p && p && ...] [bind key(i) = attr]`
+fn step<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, StepSpec> {
+    let (i, tname) = ws(ident)(i)?;
+    let etype = match schema.type_id(tname) {
+        Some(t) => t,
+        None => {
+            return Err(nom::Err::Failure(nom::error::Error::new(
+                i,
+                nom::error::ErrorKind::Verify,
+            )))
+        }
+    };
+    let (i, preds) = opt(preceded(
+        ws(tag("where")),
+        separated_list1(ws(tag("&&")), |x| predicate(x, schema, etype)),
+    ))(i)?;
+    let (i, bind) = opt(preceded(
+        ws(tag("bind")),
+        tuple((
+            preceded(tag("key"), delimited(char('('), ws(double), char(')'))),
+            preceded(ws(char('=')), ws(ident)),
+        )),
+    ))(i)?;
+    let bind_key = match bind {
+        None => None,
+        Some((k, attr)) => {
+            let slot = schema.attr_slot(etype, attr).ok_or_else(|| {
+                nom::Err::Failure(nom::error::Error::new(
+                    i,
+                    nom::error::ErrorKind::Verify,
+                ))
+            })?;
+            Some((k as usize, slot))
+        }
+    };
+    Ok((
+        i,
+        StepSpec {
+            etype,
+            preds: preds.unwrap_or_default(),
+            bind_key,
+        },
+    ))
+}
+
+/// `any N of <step> distinct <attr>`
+fn any_clause<'a>(
+    i: &'a str,
+    schema: &Schema,
+) -> IResult<&'a str, (usize, StepSpec, usize)> {
+    let (i, _) = ws(tag("any"))(i)?;
+    let (i, n) = ws(double)(i)?;
+    let (i, _) = ws(tag("of"))(i)?;
+    let (i, spec) = step(i, schema)?;
+    let (i, _) = ws(tag("distinct"))(i)?;
+    let (i, attr) = ws(ident)(i)?;
+    let slot = schema.attr_slot(spec.etype, attr).ok_or_else(|| {
+        nom::Err::Failure(nom::error::Error::new(i, nom::error::ErrorKind::Verify))
+    })?;
+    Ok((i, (n as usize, spec, slot)))
+}
+
+fn pattern<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, Pattern> {
+    // any-only pattern
+    if let Ok((i2, (n, spec, slot))) = any_clause(i, schema) {
+        return Ok((
+            i2,
+            Pattern::Any {
+                n,
+                spec,
+                distinct_slot: slot,
+            },
+        ));
+    }
+    // seq ( step ; step ; ... [; any n of step distinct attr] )
+    let (i, _) = ws(tag("seq"))(i)?;
+    let (mut i, _) = ws(char('('))(i)?;
+    let mut head = Vec::new();
+    let mut any_tail = None;
+    loop {
+        if let Ok((i2, a)) = any_clause(i, schema) {
+            any_tail = Some(a);
+            i = i2;
+        } else {
+            let (i2, s) = step(i, schema)?;
+            head.push(s);
+            i = i2;
+        }
+        let (i2, sep) = opt(ws(char(';')))(i)?;
+        i = i2;
+        if sep.is_none() {
+            break;
+        }
+    }
+    let (i, _) = ws(char(')'))(i)?;
+    let p = match any_tail {
+        Some((n, spec, distinct_slot)) => Pattern::SeqAny {
+            head,
+            n,
+            spec,
+            distinct_slot,
+        },
+        None => Pattern::Seq(head),
+    };
+    Ok((i, p))
+}
+
+fn window_spec(i: &str) -> IResult<&str, WindowSpec> {
+    let (i, _) = ws(tag("window"))(i)?;
+    alt((
+        map(preceded(ws(tag("count")), ws(double)), |n| {
+            WindowSpec::Count(n as u64)
+        }),
+        map(preceded(ws(tag("time_ms")), ws(double)), |n| {
+            WindowSpec::TimeMs(n as u64)
+        }),
+    ))(i)
+}
+
+fn open_policy<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, OpenPolicy> {
+    let (i, _) = ws(tag("open"))(i)?;
+    if let Ok((i2, k)) = preceded(ws(tag("every")), ws(double))(i) {
+        return Ok((i2, OpenPolicy::EveryK(k as u64)));
+    }
+    let (i, _) = ws(tag("on"))(i)?;
+    let (i, s) = step(i, schema)?;
+    Ok((i, OpenPolicy::OnMatch(s)))
+}
+
+fn selection(i: &str) -> IResult<&str, Selection> {
+    preceded(
+        ws(tag("select")),
+        alt((
+            value(Selection::SkipTillNext, ws(tag("skip-till-next"))),
+            value(Selection::SkipTillAny, ws(tag("skip-till-any"))),
+        )),
+    )(i)
+}
+
+/// Parse one `query <name> weight <w> { ... }` definition against a
+/// schema.  Returns the resolved [`Query`].
+pub fn parse_query(input: &str, schema: &Schema) -> crate::Result<Query> {
+    fn parse<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, Query> {
+        let i = i.trim();
+        let (i, _) = ws(tag("query"))(i)?;
+        let (i, name) = ws(ident)(i)?;
+        let (i, weight) = opt(preceded(ws(tag("weight")), ws(double)))(i)?;
+        let (i, _) = ws(char('{'))(i)?;
+        let (i, window) = window_spec(i)?;
+        let (i, open) = open_policy(i, schema)?;
+        let (i, sel) = opt(|x| selection(x))(i)?;
+        let (i, pat) = pattern(i, schema)?;
+        let (i, _) = ws(char('}'))(i)?;
+        Ok((
+            i,
+            Query {
+                name: name.to_string(),
+                weight: weight.unwrap_or(1.0),
+                pattern: pat,
+                window,
+                open,
+                selection: sel.unwrap_or(Selection::SkipTillNext),
+            },
+        ))
+    }
+    match parse(input, schema) {
+        Ok((rest, q)) => {
+            anyhow::ensure!(
+                rest.trim().is_empty(),
+                "trailing input after query: {rest:?}"
+            );
+            Ok(q)
+        }
+        Err(e) => anyhow::bail!("query parse error: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::builtin::schema_for;
+
+    #[test]
+    fn parses_seq_query() {
+        let schema = schema_for("q1");
+        let q = parse_query(
+            "query mini weight 2.0 {
+               window count 100
+               open on quote where symbol in [0, 1]
+               select skip-till-next
+               seq (
+                 quote where symbol == 0 && rising == 1 ;
+                 quote where symbol == 1 && rising == 1
+               )
+             }",
+            &schema,
+        )
+        .unwrap();
+        assert_eq!(q.name, "mini");
+        assert_eq!(q.weight, 2.0);
+        assert_eq!(q.state_count(), 3);
+        assert_eq!(q.window, WindowSpec::Count(100));
+        assert!(matches!(q.open, OpenPolicy::OnMatch(_)));
+    }
+
+    #[test]
+    fn parses_any_query_with_keys() {
+        let schema = schema_for("q4");
+        let q = parse_query(
+            "query busq {
+               window count 2000
+               open every 500
+               any 5 of bus where delayed == 1 && stop == key(0) bind key(0) = stop
+                 distinct bus
+             }",
+            &schema,
+        )
+        .unwrap();
+        assert_eq!(q.weight, 1.0);
+        match &q.pattern {
+            Pattern::Any {
+                n,
+                spec,
+                distinct_slot,
+            } => {
+                assert_eq!(*n, 5);
+                assert_eq!(*distinct_slot, crate::datasets::bus::A_BUS);
+                assert_eq!(spec.bind_key, Some((0, crate::datasets::bus::A_STOP)));
+                assert!(spec
+                    .preds
+                    .iter()
+                    .any(|p| matches!(p, Predicate::KeyCmp { .. })));
+            }
+            other => panic!("wrong pattern {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_seq_any_query() {
+        let schema = schema_for("q3");
+        let q = parse_query(
+            "query defend {
+               window time_ms 1500
+               open on poss where player in [9, 20] bind key(0) = team
+               seq (
+                 poss where player in [9, 20] bind key(0) = team ;
+                 any 3 of pos where ball_dist < 3.0 && team != key(0) distinct player
+               )
+             }",
+            &schema,
+        )
+        .unwrap();
+        assert_eq!(q.state_count(), 5);
+        assert!(matches!(q.pattern, Pattern::SeqAny { .. }));
+    }
+
+    #[test]
+    fn rejects_unknown_attribute() {
+        let schema = schema_for("q1");
+        let r = parse_query(
+            "query bad { window count 10 open every 5 seq ( quote where nope == 1 ) }",
+            &schema,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let schema = schema_for("q1");
+        let r = parse_query(
+            "query ok { window count 10 open every 5 seq ( quote ) } extra",
+            &schema,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Pattern queries: AST, a Tesla-like text DSL, and the paper's four
+//! built-in queries Q1–Q4.
+
+pub mod ast;
+pub mod builtin;
+pub mod dsl;
+
+pub use ast::{
+    CmpOp, OpenPolicy, Pattern, Predicate, Query, Selection, StepSpec, WindowSpec,
+};
+pub use builtin::{q1, q2, q3, q4, BuiltinQuery};
+pub use dsl::parse_query;

@@ -1,0 +1,260 @@
+//! Artifact manifest + shape padding.
+//!
+//! `python/compile/aot.py` emits a set of `(B, M, N)` shape variants and
+//! a `manifest.txt`.  At runtime we pick the smallest variant that fits
+//! the live query set and *pad* the problem into it:
+//!
+//! * **pattern padding** — unused batch slots get the identity chain
+//!   (absorbing everywhere, zero reward): their outputs are ignored;
+//! * **state padding** — an `m`-state chain embeds into `M ≥ m` states
+//!   by keeping states `0..m-1` in place, moving the final state to
+//!   index `M-1` (the artifact's absorbing slot, since the compiled
+//!   graph fixes `c_0 = e_{M-1}`), and making the `m-1..M-1` filler
+//!   states absorbing self-loops with zero reward.
+//!
+//! The embedding is exact: filler states are unreachable from live
+//! states, and the permutation is undone on read-back.  The
+//! `padding_soundness` integration test checks this against the rust
+//! oracle for every variant.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::linalg::Mat;
+
+/// One compiled shape variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Variant {
+    /// batch capacity (patterns)
+    pub batch: usize,
+    /// state capacity
+    pub m: usize,
+    /// bin capacity
+    pub nbins: usize,
+    /// artifact file name (relative to the manifest)
+    pub file: String,
+}
+
+impl Variant {
+    /// Total output elements — the cost proxy used to pick the smallest
+    /// fitting variant.
+    pub fn size(&self) -> usize {
+        2 * self.batch * self.m * self.nbins
+    }
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// directory holding the artifacts
+    pub dir: PathBuf,
+    /// available variants
+    pub variants: Vec<Variant>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut variants = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(parts.len() == 4, "manifest line {}: {line:?}", no + 1);
+            variants.push(Variant {
+                batch: parts[0].parse()?,
+                m: parts[1].parse()?,
+                nbins: parts[2].parse()?,
+                file: parts[3].to_string(),
+            });
+        }
+        anyhow::ensure!(!variants.is_empty(), "empty artifact manifest");
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    /// Default artifact directory: `$PSPICE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PSPICE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest variant fitting `batch` patterns × `m` states × `nbins`.
+    pub fn select(&self, batch: usize, m: usize, nbins: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.batch >= batch && v.m >= m && v.nbins >= nbins)
+            .min_by_key(|v| v.size())
+    }
+}
+
+/// State-index embedding for an `m`-state chain inside `cap` states:
+/// live non-final states keep their index, the final state moves to
+/// `cap-1`.
+#[inline]
+pub fn pad_index(i: usize, m: usize, cap: usize) -> usize {
+    if i == m - 1 {
+        cap - 1
+    } else {
+        i
+    }
+}
+
+/// Embed `(T, r)` (m states) into `cap`-state padded row-major f32
+/// buffers laid out for the artifact.
+pub fn pad_chain(t: &Mat, r: &[f64], cap: usize, t_out: &mut [f32], r_out: &mut [f32]) {
+    let m = t.rows();
+    assert!(cap >= m);
+    assert_eq!(t_out.len(), cap * cap);
+    assert_eq!(r_out.len(), cap);
+    t_out.fill(0.0);
+    r_out.fill(0.0);
+    // filler + final states: absorbing self-loops
+    for i in 0..cap {
+        t_out[i * cap + i] = 1.0;
+    }
+    for i in 0..m {
+        let pi = pad_index(i, m, cap);
+        if i < m - 1 {
+            t_out[pi * cap + pi] = 0.0; // live row fully rewritten below
+        }
+        for j in 0..m {
+            let pj = pad_index(j, m, cap);
+            if i < m - 1 {
+                t_out[pi * cap + pj] = t[(i, j)] as f32;
+            }
+        }
+        r_out[pi] = if i < m - 1 { r[i] as f32 } else { 0.0 };
+    }
+}
+
+/// The identity chain used for unused batch slots.
+pub fn identity_chain(cap: usize, t_out: &mut [f32], r_out: &mut [f32]) {
+    t_out.fill(0.0);
+    r_out.fill(0.0);
+    for i in 0..cap {
+        t_out[i * cap + i] = 1.0;
+    }
+}
+
+/// Undo the state permutation when reading a padded row back: value of
+/// original state `i` lives at padded index [`pad_index`]`(i)`.
+pub fn unpad_row(padded: &[f32], m: usize, cap: usize) -> Vec<f64> {
+    (0..m)
+        .map(|i| padded[pad_index(i, m, cap)] as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::markov;
+
+    #[test]
+    fn select_picks_smallest_fitting() {
+        let man = ArtifactManifest {
+            dir: PathBuf::from("."),
+            variants: vec![
+                Variant {
+                    batch: 2,
+                    m: 8,
+                    nbins: 128,
+                    file: "a".into(),
+                },
+                Variant {
+                    batch: 4,
+                    m: 16,
+                    nbins: 256,
+                    file: "b".into(),
+                },
+                Variant {
+                    batch: 8,
+                    m: 32,
+                    nbins: 512,
+                    file: "c".into(),
+                },
+            ],
+        };
+        assert_eq!(man.select(1, 5, 100).unwrap().file, "a");
+        assert_eq!(man.select(2, 11, 256).unwrap().file, "b");
+        assert_eq!(man.select(2, 15, 300).unwrap().file, "c");
+        assert!(man.select(9, 8, 10).is_none());
+        assert!(man.select(1, 40, 10).is_none());
+    }
+
+    #[test]
+    fn pad_chain_preserves_recurrence() {
+        // 3-state chain embedded in 8 states must produce identical
+        // completion/tau at the live indices
+        let t = Mat::from_rows(3, 3, &[0.6, 0.4, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0, 1.0]);
+        let r = vec![1.0, 3.0, 0.0];
+        let cap = 8;
+        let mut tp = vec![0.0f32; cap * cap];
+        let mut rp = vec![0.0f32; cap];
+        pad_chain(&t, &r, cap, &mut tp, &mut rp);
+        // run the rust oracle on the padded chain
+        let tpad = Mat::from_rows(
+            cap,
+            cap,
+            &tp.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        let rpad: Vec<f64> = rp.iter().map(|&x| x as f64).collect();
+        assert!(tpad.is_row_stochastic(1e-6));
+        let direct = markov::build_tables(&t, &r, 20);
+        let padded = markov::build_tables(&tpad, &rpad, 20);
+        for j in 0..20 {
+            for i in 0..3 {
+                let pi = pad_index(i, 3, cap);
+                assert!(
+                    (direct.completion[j][i] - padded.completion[j][pi]).abs() < 1e-6,
+                    "c mismatch j={j} i={i}"
+                );
+                assert!(
+                    (direct.remaining_time[j][i] - padded.remaining_time[j][pi]).abs()
+                        < 1e-6,
+                    "tau mismatch j={j} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpad_row_round_trips() {
+        let padded: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        // m=3 in cap=8: states 0,1 at 0,1; final at 7
+        assert_eq!(unpad_row(&padded, 3, 8), vec![0.0, 1.0, 7.0]);
+    }
+
+    #[test]
+    fn identity_chain_is_stochastic() {
+        let mut t = vec![0.0f32; 16];
+        let mut r = vec![1.0f32; 4];
+        identity_chain(4, &mut t, &mut r);
+        assert_eq!(r, vec![0.0; 4]);
+        let m = Mat::from_rows(4, 4, &t.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!(m.is_row_stochastic(1e-9));
+    }
+
+    #[test]
+    fn manifest_parses_real_format() {
+        let dir = std::env::temp_dir().join("pspice_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "2 8 128 utility_B2_M8_N128.hlo.txt\n4 16 256 utility_B4_M16_N256.hlo.txt\n",
+        )
+        .unwrap();
+        let man = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(man.variants.len(), 2);
+        assert_eq!(man.variants[1].m, 16);
+    }
+}

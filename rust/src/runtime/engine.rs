@@ -1,0 +1,53 @@
+//! The model-engine interface: per-bin Markov tables for a batch of
+//! patterns, from composed per-bin chains `(T_bs, r_bs)`.
+
+use crate::linalg::markov::MarkovTables;
+use crate::linalg::Mat;
+
+/// Tables for a batch of patterns (one [`MarkovTables`] per pattern).
+pub type BatchTables = Vec<MarkovTables>;
+
+/// Something that can run the L2 recurrence.
+pub trait ModelEngine {
+    /// Compute `nbins` rows of completion/remaining-time tables for each
+    /// pattern `(t[i], r[i])`.  Matrices may have different sizes.
+    fn build_tables(
+        &mut self,
+        chains: &[(Mat, Vec<f64>)],
+        nbins: usize,
+    ) -> crate::Result<BatchTables>;
+
+    /// Engine name for logs/EXPERIMENTS.md.
+    fn name(&self) -> &'static str;
+}
+
+/// Pick the best available engine: the PJRT/AOT path when artifacts are
+/// present and usable, otherwise the pure-rust fallback.
+pub fn auto_engine() -> Box<dyn ModelEngine> {
+    let dir = super::ArtifactManifest::default_dir();
+    match super::PjrtEngine::load(&dir) {
+        Ok(e) => {
+            log::info!("model engine: PJRT artifacts from {}", dir.display());
+            Box::new(e)
+        }
+        Err(err) => {
+            log::warn!("PJRT engine unavailable ({err:#}); using rust fallback");
+            Box::new(super::FallbackEngine)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_engine_always_returns_something() {
+        // in a checkout without artifacts this must still work
+        let mut e = auto_engine();
+        let t = Mat::from_rows(2, 2, &[0.5, 0.5, 0.0, 1.0]);
+        let out = e.build_tables(&[(t, vec![1.0, 0.0])], 4).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].completion.len(), 4);
+    }
+}

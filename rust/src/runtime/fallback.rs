@@ -1,0 +1,46 @@
+//! Pure-rust model engine: the exact recurrence the AOT artifact
+//! computes, looped per pattern.  Keeps the system fully functional
+//! without artifacts and provides the differential baseline for the
+//! PJRT path.
+
+use crate::linalg::markov;
+use crate::linalg::Mat;
+
+use super::engine::{BatchTables, ModelEngine};
+
+/// The rust twin of `python/compile/model.py::build_tables`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FallbackEngine;
+
+impl ModelEngine for FallbackEngine {
+    fn build_tables(
+        &mut self,
+        chains: &[(Mat, Vec<f64>)],
+        nbins: usize,
+    ) -> crate::Result<BatchTables> {
+        Ok(chains
+            .iter()
+            .map(|(t, r)| markov::build_tables(t, r, nbins))
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-fallback"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_oracle_by_construction() {
+        let t = Mat::from_rows(2, 2, &[0.9, 0.1, 0.0, 1.0]);
+        let r = vec![2.0, 0.0];
+        let mut e = FallbackEngine;
+        let out = e.build_tables(&[(t.clone(), r.clone())], 8).unwrap();
+        let direct = markov::build_tables(&t, &r, 8);
+        assert_eq!(out[0].completion, direct.completion);
+        assert_eq!(out[0].remaining_time, direct.remaining_time);
+    }
+}

@@ -1,0 +1,21 @@
+//! Model-engine runtime: executes the AOT-compiled L2/L1 utility
+//! computation from the rust request path.
+//!
+//! * [`artifacts`] — manifest parsing, shape-variant selection, and the
+//!   state-permuting pad/unpad that makes any `(B, m)` problem fit a
+//!   compiled `(B*, M, N)` artifact exactly (absorbing-identity padding),
+//! * [`pjrt`] — the PJRT CPU client wrapper: load HLO text once, compile
+//!   once per variant, execute per model build,
+//! * [`fallback`] — the pure-rust twin of the L2 graph (tests,
+//!   differential validation, artifact-less operation),
+//! * [`engine`] — the [`engine::ModelEngine`] trait + auto-selection.
+
+pub mod artifacts;
+pub mod engine;
+pub mod fallback;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, Variant};
+pub use engine::{auto_engine, BatchTables, ModelEngine};
+pub use fallback::FallbackEngine;
+pub use pjrt::PjrtEngine;

@@ -1,0 +1,159 @@
+//! PJRT engine: loads the AOT HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes the utility computation with padded
+//! inputs (see [`super::artifacts`] for the padding scheme).
+//!
+//! One compiled executable per shape variant, compiled lazily on first
+//! use and cached for the lifetime of the engine — compilation never
+//! happens on the per-build hot path after warm-up.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::linalg::markov::MarkovTables;
+use crate::linalg::Mat;
+
+use super::artifacts::{identity_chain, pad_chain, unpad_row, ArtifactManifest, Variant};
+use super::engine::{BatchTables, ModelEngine};
+
+/// The PJRT-backed model engine.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    /// compiled executables keyed by artifact file name
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create the engine from an artifact directory (reads the manifest,
+    /// creates the CPU client; compilation is lazy).
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, v: &Variant) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&v.file) {
+            let path = self.manifest.dir.join(&v.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", v.file))?;
+            log::info!("compiled artifact {} (B={} M={} N={})", v.file, v.batch, v.m, v.nbins);
+            self.compiled.insert(v.file.clone(), exe);
+        }
+        Ok(&self.compiled[&v.file])
+    }
+
+    /// Execute one batch against a specific variant.  `chains` length
+    /// must be ≤ `v.batch` and every matrix must fit `v.m`.
+    fn run_variant(
+        &mut self,
+        v: &Variant,
+        chains: &[(Mat, Vec<f64>)],
+        nbins: usize,
+    ) -> crate::Result<BatchTables> {
+        let (cap_b, cap_m, cap_n) = (v.batch, v.m, v.nbins);
+        // pack padded inputs
+        let mut t_buf = vec![0.0f32; cap_b * cap_m * cap_m];
+        let mut r_buf = vec![0.0f32; cap_b * cap_m];
+        for b in 0..cap_b {
+            let t_slot = &mut t_buf[b * cap_m * cap_m..(b + 1) * cap_m * cap_m];
+            let r_slot = &mut r_buf[b * cap_m..(b + 1) * cap_m];
+            match chains.get(b) {
+                Some((t, r)) => pad_chain(t, r, cap_m, t_slot, r_slot),
+                None => identity_chain(cap_m, t_slot, r_slot),
+            }
+        }
+        let t_lit = xla::Literal::vec1(&t_buf).reshape(&[
+            cap_b as i64,
+            cap_m as i64,
+            cap_m as i64,
+        ])?;
+        let r_lit = xla::Literal::vec1(&r_buf).reshape(&[cap_b as i64, cap_m as i64])?;
+
+        let v_file = v.clone();
+        let exe = self.executable(&v_file)?;
+        let result = exe.execute::<xla::Literal>(&[t_lit, r_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (C, TAU), each (N, B, M)
+        let (c_lit, tau_lit) = result.to_tuple2()?;
+        let c: Vec<f32> = c_lit.to_vec()?;
+        let tau: Vec<f32> = tau_lit.to_vec()?;
+        anyhow::ensure!(
+            c.len() == cap_n * cap_b * cap_m,
+            "unexpected artifact output size {} != {}",
+            c.len(),
+            cap_n * cap_b * cap_m
+        );
+
+        // unpack per pattern, truncating bins to the requested count
+        let mut out = Vec::with_capacity(chains.len());
+        for (b, (t, _)) in chains.iter().enumerate() {
+            let m = t.rows();
+            let mut completion = Vec::with_capacity(nbins);
+            let mut remaining_time = Vec::with_capacity(nbins);
+            for j in 0..nbins {
+                let base = j * cap_b * cap_m + b * cap_m;
+                completion.push(unpad_row(&c[base..base + cap_m], m, cap_m));
+                remaining_time.push(unpad_row(&tau[base..base + cap_m], m, cap_m));
+            }
+            out.push(MarkovTables {
+                completion,
+                remaining_time,
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl ModelEngine for PjrtEngine {
+    fn build_tables(
+        &mut self,
+        chains: &[(Mat, Vec<f64>)],
+        nbins: usize,
+    ) -> crate::Result<BatchTables> {
+        anyhow::ensure!(!chains.is_empty(), "no chains to build");
+        let max_m = chains.iter().map(|(t, _)| t.rows()).max().expect("nonempty");
+        let variant = self
+            .manifest
+            .select(chains.len(), max_m, nbins)
+            .with_context(|| {
+                format!(
+                    "no artifact variant fits B={} m={} nbins={nbins}",
+                    chains.len(),
+                    max_m
+                )
+            })?
+            .clone();
+        self.run_variant(&variant, chains, nbins)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-aot"
+    }
+}
+
+// NOTE: differential tests PJRT-vs-fallback live in
+// `rust/tests/hlo_differential.rs` (they need built artifacts).

@@ -1,0 +1,208 @@
+//! The overload detector (paper Algorithm 1 + §III-E).
+//!
+//! For every incoming event it estimates
+//!
+//! ```text
+//! l_e = l_q + f(n_pm)          (queueing + predicted processing latency)
+//! l_s = g(n_pm)                (predicted shedding latency)
+//! ```
+//!
+//! and, if `l_e + l_s + b_s > LB`, computes the PM budget that restores
+//! the bound: `ρ = n_pm − f⁻¹(LB − l_q − l_s)`.
+//!
+//! `f` and `g` are least-squares regressions (several bases, lowest
+//! error wins — [`crate::linalg::regression`]) over statistics gathered
+//! at run time, exactly as §III-E prescribes.
+
+use crate::linalg::{fit_latency_model, LatencyModel};
+
+/// Overload detector state.
+#[derive(Debug, Clone)]
+pub struct OverloadDetector {
+    /// Latency bound LB (virtual ns).
+    pub lb_ns: f64,
+    /// Safety buffer `b_s` (virtual ns) for hard bounds (§III-E Eq. 6).
+    pub safety_ns: f64,
+    /// fitted `l_p = f(n_pm)`
+    f: Option<LatencyModel>,
+    /// fitted `l_s = g(n_pm)`
+    g: Option<LatencyModel>,
+    f_n: Vec<f64>,
+    f_y: Vec<f64>,
+    g_n: Vec<f64>,
+    g_y: Vec<f64>,
+    /// max training samples kept per model (reservoir-ish: stride thin)
+    cap: usize,
+}
+
+impl OverloadDetector {
+    /// Detector for a latency bound (ns) with a safety buffer.
+    pub fn new(lb_ns: f64, safety_ns: f64) -> Self {
+        OverloadDetector {
+            lb_ns,
+            safety_ns,
+            f: None,
+            g: None,
+            f_n: Vec::new(),
+            f_y: Vec::new(),
+            g_n: Vec::new(),
+            g_y: Vec::new(),
+            cap: 4096,
+        }
+    }
+
+    fn push_capped(xs: &mut Vec<f64>, ys: &mut Vec<f64>, x: f64, y: f64, cap: usize) {
+        if xs.len() >= cap {
+            // thin by keeping every other sample (cheap, keeps range)
+            let mut keep = false;
+            xs.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            let mut keep = false;
+            ys.retain(|_| {
+                keep = !keep;
+                keep
+            });
+        }
+        xs.push(x);
+        ys.push(y);
+    }
+
+    /// Record an observed event-processing latency for `n_pm` live PMs.
+    pub fn observe_processing(&mut self, n_pm: usize, l_p_ns: f64) {
+        Self::push_capped(&mut self.f_n, &mut self.f_y, n_pm as f64, l_p_ns, self.cap);
+    }
+
+    /// Record an observed shedding latency for `n_pm` scanned PMs.
+    pub fn observe_shedding(&mut self, n_pm: usize, l_s_ns: f64) {
+        Self::push_capped(&mut self.g_n, &mut self.g_y, n_pm as f64, l_s_ns, self.cap);
+    }
+
+    /// (Re)fit both regressions.  Returns true when `f` is usable.
+    pub fn fit(&mut self) -> bool {
+        self.f = fit_latency_model(&self.f_n, &self.f_y);
+        self.g = fit_latency_model(&self.g_n, &self.g_y);
+        self.f.is_some()
+    }
+
+    /// Is the detector trained?
+    pub fn trained(&self) -> bool {
+        self.f.is_some()
+    }
+
+    /// Predicted event processing latency for `n_pm` PMs.
+    pub fn predict_lp(&self, n_pm: usize) -> f64 {
+        self.f.as_ref().map_or(0.0, |m| m.predict(n_pm as f64))
+    }
+
+    /// Predicted shedding latency for `n_pm` PMs.
+    pub fn predict_ls(&self, n_pm: usize) -> f64 {
+        self.g.as_ref().map_or(0.0, |m| m.predict(n_pm as f64))
+    }
+
+    /// Algorithm 1: given the event's queueing latency and the live PM
+    /// count, return `Some(ρ)` if shedding is needed.
+    pub fn check(&self, l_q_ns: f64, n_pm: usize) -> Option<usize> {
+        let f = self.f.as_ref()?;
+        let l_p = f.predict(n_pm as f64);
+        let l_s = self.predict_ls(n_pm);
+        let l_e = l_q_ns + l_p;
+        if l_e + l_s + self.safety_ns <= self.lb_ns {
+            return None;
+        }
+        // l_p' = LB - l_q - l_s  (Alg. 1 line 6)
+        let lp_target = self.lb_ns - l_q_ns - l_s - self.safety_ns;
+        let n_keep = if lp_target <= 0.0 {
+            0.0
+        } else {
+            f.inverse(lp_target)
+        };
+        let rho = (n_pm as f64 - n_keep).ceil().max(0.0) as usize;
+        if rho == 0 {
+            None
+        } else {
+            Some(rho.min(n_pm))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// detector trained on a perfectly linear world:
+    /// l_p = 100 + 10·n, l_s = 2·n
+    fn trained() -> OverloadDetector {
+        let mut d = OverloadDetector::new(10_000.0, 0.0);
+        for n in (0..200).map(|i| i * 10) {
+            d.observe_processing(n, 100.0 + 10.0 * n as f64);
+            d.observe_shedding(n, 2.0 * n as f64);
+        }
+        assert!(d.fit());
+        d
+    }
+
+    #[test]
+    fn no_overload_below_bound() {
+        let d = trained();
+        // l_q=0, n=100: l_e = 1100, l_s = 200 -> fine under 10000
+        assert_eq!(d.check(0.0, 100), None);
+    }
+
+    #[test]
+    fn rho_restores_bound_exactly() {
+        let d = trained();
+        // n=2000: l_p = 20100, overload. lp' = 10000 - 0 - ls(2000)=4000
+        // => target 6000 => n_keep = (6000-100)/10 = 590 => rho = 1410
+        let rho = d.check(0.0, 2000).expect("overloaded");
+        assert!((1405..=1415).contains(&rho), "rho={rho}");
+        // after dropping rho, the predicted latency is under the bound
+        let n_after = 2000 - rho;
+        assert!(d.predict_lp(n_after) + d.predict_ls(2000) <= 10_000.0 + 50.0);
+    }
+
+    #[test]
+    fn queueing_latency_tightens_budget() {
+        let d = trained();
+        let rho_idle = d.check(0.0, 2000).unwrap();
+        let rho_queued = d.check(5_000.0, 2000).unwrap();
+        assert!(rho_queued > rho_idle);
+    }
+
+    #[test]
+    fn rho_clamps_to_all_pms() {
+        let d = trained();
+        // queueing alone exceeds the bound: drop everything
+        let rho = d.check(20_000.0, 500).unwrap();
+        assert_eq!(rho, 500);
+    }
+
+    #[test]
+    fn safety_buffer_triggers_earlier() {
+        let mut strict = trained();
+        strict.safety_ns = 5_000.0;
+        // n=800: l_e = 8100 + l_s 1600 = 9700 < 10000 without buffer,
+        // but the 5000 buffer trips it
+        assert_eq!(trained().check(0.0, 700), None);
+        assert!(strict.check(0.0, 700).is_some());
+    }
+
+    #[test]
+    fn untrained_never_fires() {
+        let d = OverloadDetector::new(1000.0, 0.0);
+        assert_eq!(d.check(1e9, 10_000), None);
+        assert!(!d.trained());
+    }
+
+    #[test]
+    fn sample_thinning_keeps_fit_usable() {
+        let mut d = OverloadDetector::new(10_000.0, 0.0);
+        for n in 0..20_000 {
+            d.observe_processing(n, 100.0 + 10.0 * n as f64);
+        }
+        assert!(d.fit());
+        let err = (d.predict_lp(5_000) - 50_100.0).abs() / 50_100.0;
+        assert!(err < 0.05, "err={err}");
+    }
+}

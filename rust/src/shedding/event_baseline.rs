@@ -1,0 +1,218 @@
+//! E-BL (paper §IV-A): the black-box event-shedding baseline in the
+//! style of He et al. [15] with the weighted-sampling flavor of
+//! Aurora-style stream shedding [13].
+//!
+//! Events get a *type utility* proportional to how often their key
+//! value (stock symbol / player id / bus id) is referenced by the
+//! operator's patterns; within a utility class, victims are picked by
+//! uniform sampling.  A proportional controller adapts the drop
+//! fraction to keep the estimated event latency under LB.
+//!
+//! Because E-BL drops *events* (not PMs), it must drop in every window
+//! the event belongs to, which is what makes its overhead grow with
+//! window overlap (paper Fig. 9a) — modeled here by charging the drop
+//! decision per open window.
+
+use std::collections::HashMap;
+
+use crate::events::Event;
+use crate::nfa::machine::CompiledQuery;
+use crate::operator::Operator;
+use crate::query::Predicate;
+use crate::util::Rng;
+
+use super::detector::OverloadDetector;
+use super::{ShedReport, Shedder};
+
+/// The event-shedding baseline.
+pub struct EventBaselineShedder {
+    /// detector reused for the latency estimate (not for ρ)
+    pub detector: OverloadDetector,
+    /// attribute slot holding the event's key value (symbol/player/bus)
+    pub key_slot: usize,
+    /// utility per key value (occurrences in patterns)
+    utilities: HashMap<i64, f64>,
+    /// current drop fraction in [0, max_drop]
+    pub drop_p: f64,
+    /// controller gain
+    gain: f64,
+    /// hard cap on the drop fraction
+    max_drop: f64,
+    /// victim sampling
+    rng: Rng,
+    /// running mean of the inverse-utility weight (drop-rate normalizer)
+    mean_w: f64,
+    /// total events dropped (reporting)
+    pub total_dropped: u64,
+}
+
+impl EventBaselineShedder {
+    /// Build the per-key-value utilities from the operator's queries:
+    /// each reference to a concrete key value in a pattern raises that
+    /// value's utility (paper: "an event type receives a higher utility
+    /// proportional to its repetition in patterns and in windows").
+    pub fn new(detector: OverloadDetector, key_slot: usize, queries: &[CompiledQuery], seed: u64) -> Self {
+        let mut utilities: HashMap<i64, f64> = HashMap::new();
+        let mut bump = |preds: &[Predicate]| {
+            for p in preds {
+                match p {
+                    Predicate::AttrCmp { slot, value, .. } if *slot == key_slot => {
+                        *utilities.entry(*value as i64).or_insert(0.0) += 1.0;
+                    }
+                    Predicate::AttrIn { slot, values } if *slot == key_slot => {
+                        for v in values {
+                            *utilities.entry(*v as i64).or_insert(0.0) += 1.0;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        };
+        for cq in queries {
+            for s in &cq.head {
+                bump(&s.preds);
+            }
+            if let Some(g) = &cq.any {
+                bump(&g.spec.preds);
+            }
+        }
+        EventBaselineShedder {
+            detector,
+            key_slot,
+            utilities,
+            drop_p: 0.0,
+            gain: 0.5,
+            max_drop: 0.95,
+            rng: Rng::seeded(seed),
+            mean_w: 1.0,
+            total_dropped: 0,
+        }
+    }
+
+    /// Utility of an event's key value (0 for values no pattern uses).
+    #[inline]
+    pub fn event_utility(&self, e: &Event) -> f64 {
+        let key = e.attrs[self.key_slot] as i64;
+        self.utilities.get(&key).copied().unwrap_or(0.0)
+    }
+
+    /// Adapt the drop fraction from the current latency estimate.
+    fn adapt(&mut self, l_q_ns: f64, n_pm: usize) {
+        let lb = self.detector.lb_ns;
+        let l_e = l_q_ns + self.detector.predict_lp(n_pm);
+        // proportional control on the relative bound violation
+        let err = (l_e - lb) / lb;
+        self.drop_p = (self.drop_p + self.gain * err).clamp(0.0, self.max_drop);
+    }
+}
+
+impl Shedder for EventBaselineShedder {
+    fn name(&self) -> &'static str {
+        "e-bl"
+    }
+
+    fn on_event(&mut self, e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
+        if self.detector.trained() {
+            self.adapt(l_q_ns, op.pm_count());
+        }
+        if self.drop_p <= 0.0 {
+            return ShedReport::default();
+        }
+        // weighted sampling (paper: "uniform sampling ... from the same
+        // event type"): each type's drop probability is proportional to
+        // the inverse-square of its pattern utility, normalized by a
+        // running mean so the realized drop rate tracks `drop_p`.
+        let u = self.event_utility(e);
+        let w = 1.0 / (1.0 + u) / (1.0 + u);
+        self.mean_w = 0.999 * self.mean_w + 0.001 * w;
+        let p = (self.drop_p * w / self.mean_w.max(1e-6)).clamp(0.0, 1.0);
+        let dropped = self.rng.chance(p);
+        // the drop decision is made in EVERY window the event belongs
+        // to (black-box granularity — the paper's Fig. 9a overhead)
+        let open_windows: usize = op.wins.iter().map(|q| q.windows.len()).sum();
+        let cost_ns = op.cost.ebl_per_window_ns * open_windows.max(1) as f64;
+        if dropped {
+            self.total_dropped += 1;
+            ShedReport {
+                dropped_pms: 0,
+                dropped_event: true,
+                cost_ns,
+            }
+        } else {
+            ShedReport {
+                dropped_pms: 0,
+                dropped_event: false,
+                cost_ns: if self.drop_p > 0.0 { cost_ns } else { 0.0 },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::stock;
+    use crate::query::builtin::q1;
+
+    fn shedder() -> (Operator, EventBaselineShedder) {
+        let op = Operator::new(q1(1000).queries);
+        let det = OverloadDetector::new(1_000_000.0, 0.0);
+        let s = EventBaselineShedder::new(det, stock::A_SYMBOL, &op.queries, 3);
+        (op, s)
+    }
+
+    #[test]
+    fn pattern_symbols_have_utility() {
+        let (_, s) = shedder();
+        // the pattern ranks appear in Q1's rising+falling variants
+        for sym in crate::query::builtin::PATTERN_RANKS {
+            let e = Event::new(0, 0, 0, &[sym as f64, 1.0, 1.0]);
+            assert!(s.event_utility(&e) >= 2.0, "sym={sym}");
+        }
+        // symbol 400 appears nowhere
+        let e = Event::new(0, 0, 0, &[400.0, 1.0, 1.0]);
+        assert_eq!(s.event_utility(&e), 0.0);
+    }
+
+    #[test]
+    fn no_drops_without_pressure() {
+        let (mut op, mut s) = shedder();
+        let e = Event::new(0, 0, 0, &[400.0, 1.0, 1.0]);
+        let rep = s.on_event(&e, 0.0, &mut op);
+        assert!(!rep.dropped_event);
+        assert_eq!(s.drop_p, 0.0);
+    }
+
+    #[test]
+    fn controller_raises_drop_p_under_pressure() {
+        let (mut op, mut s) = shedder();
+        // train the detector on a steep linear model
+        for n in (0..100).map(|i| i * 100) {
+            s.detector.observe_processing(n, 1_000.0 * n as f64);
+        }
+        s.detector.fit();
+        // massive queueing latency: controller must react
+        for seq in 0..50 {
+            let e = Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]);
+            s.on_event(&e, 10_000_000.0, &mut op);
+        }
+        assert!(s.drop_p > 0.5, "drop_p={}", s.drop_p);
+        // and unused symbols get dropped much more often than pattern symbols
+        let mut dropped_junk = 0;
+        let mut dropped_pattern = 0;
+        for seq in 0..2000 {
+            let junk = Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]);
+            let pat = Event::new(seq, seq, 0, &[30.0, 1.0, 1.0]);
+            if s.on_event(&junk, 10_000_000.0, &mut op).dropped_event {
+                dropped_junk += 1;
+            }
+            if s.on_event(&pat, 10_000_000.0, &mut op).dropped_event {
+                dropped_pattern += 1;
+            }
+        }
+        assert!(
+            dropped_junk > dropped_pattern,
+            "junk={dropped_junk} pattern={dropped_pattern}"
+        );
+    }
+}

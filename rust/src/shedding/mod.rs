@@ -1,0 +1,87 @@
+//! Load shedding: the paper's contribution (pSPICE) plus the two
+//! baselines it is evaluated against and the overload detector
+//! (Algorithm 1) they all share.
+//!
+//! * [`detector`] — Alg. 1: latency-regression overload detection and
+//!   the drop amount ρ,
+//! * [`pspice`] — Alg. 2: utility-ordered PM shedding (the white-box
+//!   strategy),
+//! * [`pm_baseline`] — PM-BL: Bernoulli-random PM shedding,
+//! * [`event_baseline`] — E-BL: black-box input-event shedding in the
+//!   style of [15]/[13] (type-utility weighted sampling),
+//! * [`none`] — pass-through (ground truth / calibration runs).
+
+pub mod detector;
+pub mod event_baseline;
+pub mod none;
+pub mod pm_baseline;
+pub mod pspice;
+
+pub use detector::OverloadDetector;
+pub use event_baseline::EventBaselineShedder;
+pub use none::NoShedder;
+pub use pm_baseline::PmBaselineShedder;
+pub use pspice::PSpiceShedder;
+
+use crate::events::Event;
+use crate::operator::Operator;
+
+/// What a shedder did for one incoming event.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ShedReport {
+    /// PMs dropped from the operator state (white-box shedders).
+    pub dropped_pms: usize,
+    /// The incoming event itself was dropped (black-box shedders).
+    pub dropped_event: bool,
+    /// Virtual cost of the shedding work (ns) — the paper's `l_s`.
+    pub cost_ns: f64,
+}
+
+/// A load-shedding strategy.
+///
+/// `on_event` runs *before* the operator processes `e`, with the
+/// event's current queueing latency `l_q` (virtual ns).  White-box
+/// strategies mutate the operator state; black-box strategies may claim
+/// the event (`dropped_event`), in which case the operator never sees
+/// it (but window accounting still advances — dropped events exist in
+/// the stream).
+pub trait Shedder {
+    /// Strategy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Decide and perform shedding for one incoming event.
+    fn on_event(&mut self, e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport;
+
+    /// Install freshly built utility tables (model retraining, paper
+    /// §III-D).  Default: no-op — only utility-driven strategies care.
+    fn update_tables(&mut self, _tables: Vec<crate::model::UtilityTable>) {}
+}
+
+/// Which strategy to instantiate (CLI/config selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedderKind {
+    /// no shedding
+    None,
+    /// the paper's pSPICE
+    PSpice,
+    /// pSPICE-- (no processing-time term) — Fig. 8 ablation
+    PSpiceMinus,
+    /// random PM dropping
+    PmBaseline,
+    /// event dropping
+    EventBaseline,
+}
+
+impl std::str::FromStr for ShedderKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(ShedderKind::None),
+            "pspice" => Ok(ShedderKind::PSpice),
+            "pspice--" | "pspice-minus" => Ok(ShedderKind::PSpiceMinus),
+            "pm-bl" | "pmbl" => Ok(ShedderKind::PmBaseline),
+            "e-bl" | "ebl" => Ok(ShedderKind::EventBaseline),
+            other => anyhow::bail!("unknown shedder {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! The pass-through shedder: never drops anything.  Used for the
+//! ground-truth run and for calibration phases.
+
+use crate::events::Event;
+use crate::operator::Operator;
+
+use super::{ShedReport, Shedder};
+
+/// No-op shedding strategy.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoShedder;
+
+impl Shedder for NoShedder {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn on_event(&mut self, _e: &Event, _l_q_ns: f64, _op: &mut Operator) -> ShedReport {
+        ShedReport::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::builtin::q1;
+
+    #[test]
+    fn never_drops() {
+        let mut op = Operator::new(q1(100).queries);
+        let e = Event::new(0, 0, 0, &[0.0, 1.0, 1.0]);
+        let rep = NoShedder.on_event(&e, f64::MAX, &mut op);
+        assert_eq!(rep, ShedReport::default());
+    }
+}

@@ -1,0 +1,87 @@
+//! PM-BL (paper §IV-A): the random partial-match dropper — same
+//! overload detector and drop amount ρ as pSPICE, but victims are
+//! selected by a Bernoulli/uniform draw instead of by utility.
+
+use crate::events::Event;
+use crate::operator::Operator;
+use crate::util::Rng;
+
+use super::detector::OverloadDetector;
+use super::{ShedReport, Shedder};
+
+/// The random PM-shedding baseline.
+pub struct PmBaselineShedder {
+    /// shared overload detector
+    pub detector: OverloadDetector,
+    rng: Rng,
+    /// total PMs dropped (reporting)
+    pub total_dropped: u64,
+}
+
+impl PmBaselineShedder {
+    /// Baseline with its own RNG stream.
+    pub fn new(detector: OverloadDetector, seed: u64) -> Self {
+        PmBaselineShedder {
+            detector,
+            rng: Rng::seeded(seed),
+            total_dropped: 0,
+        }
+    }
+}
+
+impl Shedder for PmBaselineShedder {
+    fn name(&self) -> &'static str {
+        "pm-bl"
+    }
+
+    fn on_event(&mut self, _e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
+        let n_pm = op.pm_count();
+        let Some(rho) = self.detector.check(l_q_ns, n_pm) else {
+            return ShedReport::default();
+        };
+        let dropped = op.drop_random(rho, &mut self.rng);
+        self.total_dropped += dropped as u64;
+        // random selection still scans the PM population once but needs
+        // no utility lookups/selection: model only the drop cost plus a
+        // cheap scan (the paper notes PM-BL is slightly cheaper).
+        let cost_ns = op.cost.shed_drop_ns * dropped as f64
+            + 0.25 * op.cost.shed_scan_ns * n_pm as f64;
+        self.detector.observe_shedding(n_pm, cost_ns);
+        ShedReport {
+            dropped_pms: dropped,
+            dropped_event: false,
+            cost_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::BusGen;
+    use crate::events::EventStream;
+    use crate::query::builtin::q4;
+
+    #[test]
+    fn drops_when_detector_fires() {
+        let mut op = Operator::new(q4(6, 4000, 200).queries);
+        let mut g = BusGen::with_seed(9);
+        for _ in 0..40_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let mut det = OverloadDetector::new(1_000.0, 0.0);
+        // linear world where the current PM count is way over budget
+        for n in (0..100).map(|i| i * 50) {
+            det.observe_processing(n, 10.0 * n as f64);
+            det.observe_shedding(n, n as f64);
+        }
+        det.fit();
+        let mut shed = PmBaselineShedder::new(det, 1);
+        let before = op.pm_count();
+        let e = g.next_event().unwrap();
+        let rep = shed.on_event(&e, 0.0, &mut op);
+        assert!(rep.dropped_pms > 0);
+        assert_eq!(op.pm_count(), before - rep.dropped_pms);
+        assert!(rep.cost_ns > 0.0);
+    }
+}

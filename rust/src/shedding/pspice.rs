@@ -1,0 +1,181 @@
+//! pSPICE (paper Algorithm 2): drop the ρ lowest-utility partial
+//! matches, with utilities looked up in the precomputed tables.
+//!
+//! Selection uses `select_nth_unstable` (expected O(n)) instead of the
+//! paper's full sort (O(n log n)) — strictly better than the complexity
+//! the paper budgets for, and measured in `benches/shed_overhead.rs`.
+
+use std::collections::HashSet;
+
+use crate::events::Event;
+use crate::model::UtilityTable;
+use crate::operator::{Operator, PmRef};
+
+use super::detector::OverloadDetector;
+use super::{ShedReport, Shedder};
+
+/// The pSPICE load shedder.
+pub struct PSpiceShedder {
+    /// shared overload detector (Alg. 1)
+    pub detector: OverloadDetector,
+    /// per-query utility tables from the model builder
+    pub tables: Vec<UtilityTable>,
+    /// scratch buffer reused across calls (no hot-path allocation)
+    scratch: Vec<PmRef>,
+    /// keyed scratch for selection
+    keyed: Vec<(f64, u64)>,
+    /// total PMs dropped over the run (reporting)
+    pub total_dropped: u64,
+    /// total shed invocations
+    pub invocations: u64,
+}
+
+impl PSpiceShedder {
+    /// Shedder from a trained detector + tables.
+    pub fn new(detector: OverloadDetector, tables: Vec<UtilityTable>) -> Self {
+        PSpiceShedder {
+            detector,
+            tables,
+            scratch: Vec::new(),
+            keyed: Vec::new(),
+            total_dropped: 0,
+            invocations: 0,
+        }
+    }
+
+    /// Utility of one PM (O(1) table lookup).
+    #[inline]
+    pub fn utility(&self, r: &PmRef) -> f64 {
+        self.tables[r.query].lookup(r.state, r.remaining)
+    }
+
+    /// Algorithm 2: drop the `rho` lowest-utility PMs.  Returns
+    /// (scanned, dropped).
+    pub fn drop_lowest(&mut self, op: &mut Operator, rho: usize) -> (usize, usize) {
+        op.pm_refs(&mut self.scratch);
+        let n = self.scratch.len();
+        if n == 0 || rho == 0 {
+            return (n, 0);
+        }
+        let rho = rho.min(n);
+        self.keyed.clear();
+        self.keyed.reserve(n);
+        for r in &self.scratch {
+            self.keyed.push((self.tables[r.query].lookup(r.state, r.remaining), r.pm_id));
+        }
+        if rho < n {
+            self.keyed
+                .select_nth_unstable_by(rho - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        let ids: HashSet<u64> = self.keyed[..rho].iter().map(|&(_, id)| id).collect();
+        let dropped = op.drop_pms(&ids);
+        (n, dropped)
+    }
+}
+
+impl Shedder for PSpiceShedder {
+    fn name(&self) -> &'static str {
+        "pspice"
+    }
+
+    fn update_tables(&mut self, tables: Vec<crate::model::UtilityTable>) {
+        self.tables = tables;
+    }
+
+    fn on_event(&mut self, _e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
+        let n_pm = op.pm_count();
+        let Some(rho) = self.detector.check(l_q_ns, n_pm) else {
+            return ShedReport::default();
+        };
+        let (scanned, dropped) = self.drop_lowest(op, rho);
+        self.total_dropped += dropped as u64;
+        self.invocations += 1;
+        let cost_ns = op.cost.shed_ns(scanned, dropped);
+        self.detector.observe_shedding(scanned, cost_ns);
+        ShedReport {
+            dropped_pms: dropped,
+            dropped_event: false,
+            cost_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::BusGen;
+    use crate::events::EventStream;
+    use crate::model::{ModelBuilder, ModelConfig};
+    use crate::query::builtin::q4;
+    use crate::runtime::FallbackEngine;
+
+    fn setup() -> (Operator, PSpiceShedder) {
+        let mut op = Operator::new(q4(6, 4000, 200).queries);
+        let mut g = BusGen::with_seed(7);
+        for _ in 0..40_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let mut mb = ModelBuilder::new(
+            ModelConfig {
+                eta: 100,
+                max_bins: 64,
+                use_tau: true,
+            },
+            Box::new(FallbackEngine),
+        );
+        let tables = mb.build(&op).unwrap();
+        let det = OverloadDetector::new(1e9, 0.0);
+        (op, PSpiceShedder::new(det, tables))
+    }
+
+    #[test]
+    fn drops_exactly_rho() {
+        let (mut op, mut shed) = setup();
+        let before = op.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let (scanned, dropped) = shed.drop_lowest(&mut op, 10);
+        assert_eq!(scanned, before);
+        assert_eq!(dropped, 10);
+        assert_eq!(op.pm_count(), before - 10);
+    }
+
+    #[test]
+    fn drops_the_lowest_utilities() {
+        let (mut op, mut shed) = setup();
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        let mut utils: Vec<f64> = refs.iter().map(|r| shed.utility(r)).collect();
+        utils.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rho = 8;
+        let threshold = utils[rho - 1];
+        shed.drop_lowest(&mut op, rho);
+        // every survivor has utility >= the rho-th smallest
+        let mut after = Vec::new();
+        op.pm_refs(&mut after);
+        for r in &after {
+            assert!(
+                shed.utility(r) >= threshold - 1e-12,
+                "survivor below threshold"
+            );
+        }
+    }
+
+    #[test]
+    fn rho_larger_than_population_drops_all() {
+        let (mut op, mut shed) = setup();
+        let before = op.pm_count();
+        let (_, dropped) = shed.drop_lowest(&mut op, before + 1000);
+        assert_eq!(dropped, before);
+        assert_eq!(op.pm_count(), 0);
+    }
+
+    #[test]
+    fn untrained_detector_is_noop() {
+        let (mut op, mut shed) = setup();
+        let before = op.pm_count();
+        let e = Event::new(0, 0, 0, &[0.0, 0.0, 0.0, 0.0]);
+        let rep = shed.on_event(&e, 0.0, &mut op);
+        assert_eq!(rep, ShedReport::default());
+        assert_eq!(op.pm_count(), before);
+    }
+}

@@ -1,0 +1,76 @@
+//! The operator's virtual clock.
+
+/// Virtual clock (nanoseconds).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimClock {
+    now_ns: f64,
+}
+
+impl SimClock {
+    /// Clock at t=0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time (ns).
+    #[inline]
+    pub fn now_ns(&self) -> f64 {
+        self.now_ns
+    }
+
+    /// Advance by a cost.
+    #[inline]
+    pub fn advance(&mut self, cost_ns: f64) {
+        debug_assert!(cost_ns >= 0.0);
+        self.now_ns += cost_ns;
+    }
+
+    /// Begin serving an event that arrived at `arrival_ns`: the clock
+    /// jumps to the arrival if it is idle; returns the queueing latency
+    /// `l_q` (0 when the operator was idle).
+    #[inline]
+    pub fn begin_service(&mut self, arrival_ns: f64) -> f64 {
+        if self.now_ns < arrival_ns {
+            self.now_ns = arrival_ns;
+            0.0
+        } else {
+            self.now_ns - arrival_ns
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_operator_has_no_queueing() {
+        let mut c = SimClock::new();
+        assert_eq!(c.begin_service(100.0), 0.0);
+        assert_eq!(c.now_ns(), 100.0);
+    }
+
+    #[test]
+    fn busy_operator_queues() {
+        let mut c = SimClock::new();
+        c.begin_service(0.0);
+        c.advance(500.0); // processing took 500ns
+        let lq = c.begin_service(100.0); // event arrived at 100
+        assert_eq!(lq, 400.0);
+        assert_eq!(c.now_ns(), 500.0);
+    }
+
+    #[test]
+    fn queueing_accumulates_under_overload() {
+        // arrivals every 10ns, service 15ns: l_q grows linearly
+        let mut c = SimClock::new();
+        let mut last_lq = 0.0;
+        for i in 0..100 {
+            let lq = c.begin_service(i as f64 * 10.0);
+            assert!(lq >= last_lq);
+            last_lq = lq;
+            c.advance(15.0);
+        }
+        assert!((last_lq - 99.0 * 5.0).abs() < 1e-9);
+    }
+}

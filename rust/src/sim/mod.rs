@@ -1,0 +1,15 @@
+//! Virtual-time load simulation.
+//!
+//! The paper overloads a real single-threaded operator with wall-clock
+//! event rates.  We reproduce the same queueing dynamics in *virtual
+//! time*: events arrive on a deterministic schedule, the operator's
+//! clock advances by the cost model's per-event processing cost, and
+//! queueing latency is the gap between arrival and processing start.
+//! Deterministic, seed-stable, and orders of magnitude faster than
+//! wall-clock replay (DESIGN.md §3).
+
+pub mod clock;
+pub mod source;
+
+pub use clock::SimClock;
+pub use source::RateSource;

@@ -1,0 +1,136 @@
+//! Minimal property-testing support (offline stand-in for `proptest`,
+//! which is not in the vendored crate set — see DESIGN.md §3).
+//!
+//! Provides seeded case generation and a `forall` runner that reports
+//! the failing seed + case index so failures are reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image)
+//! use pspice::testing::{forall, Gen};
+//! forall(100, 42, |g| {
+//!     let x = g.int(0, 1000);
+//!     assert!(x >= 0);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Case generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// which case is running (for diagnostics)
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Usize in `[lo, hi]` inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Vector of generated values.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A random row-stochastic matrix with absorbing final state
+    /// (the shape every Markov property in this crate quantifies over).
+    pub fn stochastic_matrix(&mut self, m: usize) -> crate::linalg::Mat {
+        let mut t = crate::linalg::Mat::zeros(m, m);
+        for i in 0..m - 1 {
+            let mut row: Vec<f64> = (0..m).map(|_| self.f64(1e-3, 1.0)).collect();
+            let s: f64 = row.iter().sum();
+            for v in &mut row {
+                *v /= s;
+            }
+            for (j, v) in row.iter().enumerate() {
+                t[(i, j)] = *v;
+            }
+        }
+        t[(m - 1, m - 1)] = 1.0;
+        t
+    }
+
+    /// Fork an independent RNG (for building seeded components).
+    pub fn rng(&mut self) -> Rng {
+        self.rng.fork()
+    }
+}
+
+/// Run `cases` property cases with a base seed.  Panics (with seed and
+/// case number) on the first failing case.
+pub fn forall(cases: usize, seed: u64, mut body: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::seeded(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut g)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed: seed={seed} case={case}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, 1, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed_and_case() {
+        let mut first = Vec::new();
+        forall(5, 7, |g| first.push(g.int(0, 1_000_000)));
+        let mut second = Vec::new();
+        forall(5, 7, |g| second.push(g.int(0, 1_000_000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        forall(10, 3, |g| {
+            let x = g.int(0, 100);
+            assert!(x < 95, "x={x}");
+        });
+    }
+
+    #[test]
+    fn stochastic_matrix_is_stochastic() {
+        forall(20, 11, |g| {
+            let m = g.usize(2, 12);
+            let t = g.stochastic_matrix(m);
+            assert!(t.is_row_stochastic(1e-9));
+        });
+    }
+}

@@ -1,0 +1,75 @@
+//! String interner: maps names (symbols, stop ids, player names…) to dense
+//! `u32` ids so events carry integers, not heap strings, on the hot path.
+
+use std::collections::HashMap;
+
+/// Dense string ↔ id bidirectional map.
+#[derive(Debug, Default, Clone)]
+pub struct Interner {
+    by_name: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl Interner {
+    /// Empty interner.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`, returning its stable dense id.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Id for `name` if already interned.
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Name for `id` (panics on unknown id — ids come from `intern`).
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Number of interned strings.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True if nothing interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let mut i = Interner::new();
+        let a = i.intern("AAPL");
+        let b = i.intern("MSFT");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("AAPL"), a);
+        assert_eq!(i.name(a), "AAPL");
+        assert_eq!(i.get("MSFT"), Some(b));
+        assert_eq!(i.get("GOOG"), None);
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let mut i = Interner::new();
+        for k in 0..100 {
+            assert_eq!(i.intern(&format!("s{k}")), k);
+        }
+    }
+}

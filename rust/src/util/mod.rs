@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic RNG, string interning,
+//! running statistics and a tiny stderr logger.
+//!
+//! The offline crate cache ships no `rand`/`tracing`; these stand-ins are
+//! deliberately minimal and fully deterministic (seeded) so every
+//! experiment in the harness is reproducible bit-for-bit.
+
+pub mod interner;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+pub use interner::Interner;
+pub use rng::Rng;
+pub use stats::{OnlineStats, Summary};

@@ -1,0 +1,185 @@
+//! Per-query window bookkeeping.
+
+use std::collections::VecDeque;
+
+use crate::events::Event;
+use crate::nfa::{CompiledQuery, PartialMatch};
+use crate::query::{OpenPolicy, WindowSpec};
+
+/// One open window of one query.
+#[derive(Debug, Clone)]
+pub struct Window {
+    /// Sequence number of the opening event.
+    pub open_seq: u64,
+    /// Timestamp of the opening event (ms).
+    pub open_ts: u64,
+    /// Live partial matches.
+    pub pms: Vec<PartialMatch>,
+    /// Key-bit values already claimed by an advanced seed (multi-seed
+    /// windows only): prevents two PMs for the same correlation key.
+    pub claimed: Vec<u64>,
+}
+
+impl Window {
+    /// Remaining events before this window closes, given the current
+    /// position in the stream.  Count windows are exact; time windows
+    /// are estimated with `events_per_ms` (paper: `R_w` is "the expected
+    /// number of events left in the window").
+    pub fn remaining_events(
+        &self,
+        spec: WindowSpec,
+        cur_seq: u64,
+        cur_ts: u64,
+        events_per_ms: f64,
+    ) -> u64 {
+        match spec {
+            WindowSpec::Count(ws) => (self.open_seq + ws).saturating_sub(cur_seq),
+            WindowSpec::TimeMs(ms) => {
+                let left_ms = (self.open_ts + ms).saturating_sub(cur_ts);
+                (left_ms as f64 * events_per_ms).ceil() as u64
+            }
+        }
+    }
+}
+
+/// All open windows of one query, oldest first.
+#[derive(Debug, Default, Clone)]
+pub struct QueryWindows {
+    /// open windows, ordered by `open_seq`
+    pub windows: VecDeque<Window>,
+}
+
+impl QueryWindows {
+    /// Should a new window open on this event?
+    pub fn should_open(&self, cq: &CompiledQuery, e: &Event) -> bool {
+        match &cq.query.open {
+            OpenPolicy::OnMatch(spec) => {
+                // predicate evaluated against a keyless dummy PM
+                let dummy = PartialMatch::seed(u64::MAX, e.seq);
+                crate::nfa::machine::matches_spec(spec, e, &dummy)
+            }
+            OpenPolicy::EveryK(k) => e.seq % k == 0,
+        }
+    }
+
+    /// Open a window seeded with one initial-state PM.
+    pub fn open(&mut self, e: &Event, next_pm_id: &mut u64) -> &mut Window {
+        let mut w = Window {
+            open_seq: e.seq,
+            open_ts: e.ts_ms,
+            pms: Vec::with_capacity(4),
+            claimed: Vec::new(),
+        };
+        w.pms.push(PartialMatch::seed(*next_pm_id, e.seq));
+        *next_pm_id += 1;
+        self.windows.push_back(w);
+        self.windows.back_mut().expect("just pushed")
+    }
+
+    /// Close (and return) all windows that have expired at the given
+    /// stream position.  Windows are FIFO by `open_seq`, so expiry pops
+    /// from the front.
+    pub fn expire(&mut self, spec: WindowSpec, cur_seq: u64, cur_ts: u64) -> Vec<Window> {
+        let mut closed = Vec::new();
+        while let Some(front) = self.windows.front() {
+            let dead = match spec {
+                WindowSpec::Count(ws) => cur_seq >= front.open_seq + ws,
+                WindowSpec::TimeMs(ms) => cur_ts > front.open_ts + ms,
+            };
+            if dead {
+                closed.push(self.windows.pop_front().expect("front checked"));
+            } else {
+                break;
+            }
+        }
+        closed
+    }
+
+    /// Total PMs across all open windows.
+    pub fn pm_count(&self) -> usize {
+        self.windows.iter().map(|w| w.pms.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::builtin::{q1, q4};
+
+    fn quote(seq: u64, sym: f64) -> Event {
+        Event::new(seq, seq * 2, 0, &[sym, 100.0, 1.0])
+    }
+
+    #[test]
+    fn opens_on_leader_only() {
+        let cq = CompiledQuery::compile(q1(100).queries.remove(0));
+        let qw = QueryWindows::default();
+        assert!(qw.should_open(&cq, &quote(0, 0.0)));
+        assert!(qw.should_open(&cq, &quote(1, 3.0)));
+        assert!(!qw.should_open(&cq, &quote(2, 7.0))); // not a leader
+    }
+
+    #[test]
+    fn opens_every_k() {
+        let cq = CompiledQuery::compile(q4(3, 1000, 500).queries.remove(0));
+        let qw = QueryWindows::default();
+        let bus = |seq| Event::new(seq, seq, 0, &[1.0, 2.0, 0.0, 0.0]);
+        assert!(qw.should_open(&cq, &bus(0)));
+        assert!(!qw.should_open(&cq, &bus(499)));
+        assert!(qw.should_open(&cq, &bus(500)));
+    }
+
+    #[test]
+    fn count_expiry_is_exact() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(10, 0.0), &mut id);
+        // window [10, 10+50): last contained seq is 59
+        assert!(qw.expire(WindowSpec::Count(50), 59, 0).is_empty());
+        let closed = qw.expire(WindowSpec::Count(50), 60, 0);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].open_seq, 10);
+        assert!(qw.windows.is_empty());
+    }
+
+    #[test]
+    fn time_expiry() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(0, 0.0), &mut id); // open_ts = 0
+        assert!(qw.expire(WindowSpec::TimeMs(100), 5, 100).is_empty());
+        assert_eq!(qw.expire(WindowSpec::TimeMs(100), 6, 101).len(), 1);
+    }
+
+    #[test]
+    fn remaining_events_count_and_time() {
+        let w = Window {
+            open_seq: 100,
+            open_ts: 1000,
+            pms: Vec::new(),
+            claimed: Vec::new(),
+        };
+        assert_eq!(
+            w.remaining_events(WindowSpec::Count(50), 120, 0, 0.0),
+            30
+        );
+        assert_eq!(
+            w.remaining_events(WindowSpec::Count(50), 200, 0, 0.0),
+            0
+        );
+        // 500 ms left at 2 events/ms -> 1000 events
+        assert_eq!(
+            w.remaining_events(WindowSpec::TimeMs(1000), 0, 1500, 2.0),
+            1000
+        );
+    }
+
+    #[test]
+    fn pm_count_sums_windows() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(0, 0.0), &mut id);
+        qw.open(&quote(5, 1.0), &mut id);
+        assert_eq!(qw.pm_count(), 2);
+    }
+}

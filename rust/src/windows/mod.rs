@@ -1,0 +1,9 @@
+//! Windows: the stream partitions PMs live in (paper §II-A).
+//!
+//! Windows open by predicate (`OnMatch`) or by slide (`EveryK`), and
+//! close by count or source time.  Each window owns its PMs; closing a
+//! window retires all of them (they can no longer complete).
+
+pub mod manager;
+
+pub use manager::{QueryWindows, Window};

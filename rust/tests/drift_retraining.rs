@@ -1,0 +1,101 @@
+//! §III-D integration: drift-triggered model retraining end-to-end.
+//!
+//! The drift detector compares a freshly learned transition matrix
+//! against the one the live model was built from; when the input
+//! distribution shifts, the model must be rebuilt.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_experiment;
+use pspice::model::DriftDetector;
+use pspice::operator::{ObservationHub, Operator};
+use pspice::query::builtin::q4;
+use pspice::shedding::ShedderKind;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        query: "q4".into(),
+        window: 2_000,
+        pattern_n: 4,
+        slide: 250,
+        dataset: DatasetKind::Bus,
+        seed: 3,
+        warmup: 20_000,
+        events: 25_000,
+        rate: 1.4,
+        lb_ms: 0.05,
+        shedder: ShedderKind::PSpice,
+        weights: Vec::new(),
+        cost_factors: Vec::new(),
+        retrain_every: 0,
+        drift_threshold: 0.01,
+    }
+}
+
+#[test]
+fn retraining_disabled_by_default() {
+    let r = run_experiment(&base()).unwrap();
+    assert_eq!(r.retrains, 0);
+}
+
+#[test]
+fn stationary_stream_rarely_retrains() {
+    // the bus stream is stationary: with a sane threshold the detector
+    // should not thrash
+    let mut cfg = base();
+    cfg.retrain_every = 5_000;
+    cfg.drift_threshold = 0.02;
+    let r = run_experiment(&cfg).unwrap();
+    assert!(r.retrains <= 1, "stationary stream retrained {}x", r.retrains);
+    // and the run stays healthy
+    assert_eq!(r.false_positives, 0);
+    assert!(r.latency.violation_rate() < 0.05);
+}
+
+#[test]
+fn tight_threshold_forces_retrains_and_stays_correct() {
+    let mut cfg = base();
+    cfg.retrain_every = 2_000;
+    cfg.drift_threshold = 1e-9; // everything counts as drift
+    let r = run_experiment(&cfg).unwrap();
+    assert!(r.retrains >= 3, "retrains={}", r.retrains);
+    // retrained tables keep the shedder functional
+    assert_eq!(r.false_positives, 0);
+    assert!((0.0..=100.0).contains(&r.fn_percent));
+    assert!(r.latency.violation_rate() < 0.05);
+}
+
+#[test]
+fn drift_detector_fires_on_distribution_shift() {
+    // learn a model on one bus world, then observe a very different one
+    // (different seed => different hotspot stops & routes): the
+    // transition statistics must drift past a tight threshold
+    let mut op1 = Operator::new(q4(4, 2_000, 250).queries);
+    let mut g1 = pspice::datasets::BusGen::with_seed(1);
+    use pspice::events::EventStream;
+    for _ in 0..40_000 {
+        op1.process_event(&g1.next_event().unwrap());
+    }
+    let det = DriftDetector::snapshot(&op1.obs, 1e-5);
+
+    let mut shifted = Operator::new(q4(4, 2_000, 250).queries);
+    let mut cfg = pspice::datasets::bus::BusConfig::default();
+    cfg.incident_p *= 8.0; // much stormier city
+    let mut g2 = pspice::datasets::BusGen::new(99, cfg);
+    for _ in 0..40_000 {
+        shifted.process_event(&g2.next_event().unwrap());
+    }
+    let (mse, drifted) = det.check(&shifted.obs);
+    assert!(drifted, "mse={mse} must exceed 1e-5 after the shift");
+
+    // sanity: same distribution does NOT drift at a loose threshold
+    let mut op_same = Operator::new(q4(4, 2_000, 250).queries);
+    let mut g3 = pspice::datasets::BusGen::with_seed(1);
+    for _ in 0..40_000 {
+        op_same.process_event(&g3.next_event().unwrap());
+    }
+    let det_loose = DriftDetector::snapshot(&op1.obs, 0.005);
+    let (mse_same, drifted_same) = det_loose.check(&op_same.obs);
+    assert!(!drifted_same, "identical stream drifted: mse={mse_same}");
+    let _ = ObservationHub::new(&[2]);
+}

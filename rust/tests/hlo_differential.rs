@@ -1,0 +1,130 @@
+//! Differential validation of the AOT/PJRT path against the pure-rust
+//! oracle: the compiled artifact must reproduce the fallback engine's
+//! tables bit-close for random chains of every supported shape,
+//! including padded ones.
+//!
+//! Skips (with a loud message) when `artifacts/` has not been built —
+//! run `make artifacts` first.
+
+use pspice::linalg::Mat;
+use pspice::runtime::{ArtifactManifest, FallbackEngine, ModelEngine, PjrtEngine};
+use pspice::testing::{forall, Gen};
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = ArtifactManifest::default_dir();
+    match PjrtEngine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP hlo_differential: no artifacts ({err:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn random_chain(g: &mut Gen, m: usize) -> (Mat, Vec<f64>) {
+    let t = g.stochastic_matrix(m);
+    let mut r: Vec<f64> = (0..m).map(|_| g.f64(0.0, 5.0)).collect();
+    r[m - 1] = 0.0;
+    (t, r)
+}
+
+fn assert_tables_close(
+    a: &pspice::linalg::markov::MarkovTables,
+    b: &pspice::linalg::markov::MarkovTables,
+    tol: f64,
+    what: &str,
+) {
+    assert_eq!(a.completion.len(), b.completion.len(), "{what}: bins");
+    for j in 0..a.completion.len() {
+        for s in 0..a.completion[j].len() {
+            let (x, y) = (a.completion[j][s], b.completion[j][s]);
+            assert!((x - y).abs() <= tol, "{what}: c[{j}][{s}] {x} vs {y}");
+            let (x, y) = (a.remaining_time[j][s], b.remaining_time[j][s]);
+            // remaining time magnitudes grow with bins: relative tol
+            let scale = y.abs().max(1.0);
+            assert!(
+                (x - y).abs() <= tol * scale,
+                "{what}: tau[{j}][{s}] {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_oracle_over_random_chains() {
+    let Some(mut pjrt) = engine() else { return };
+    let mut fallback = FallbackEngine;
+    forall(12, 2024, |g| {
+        let batch = g.usize(1, 4);
+        let m = g.usize(2, 16);
+        let nbins = g.usize(1, 128);
+        let chains: Vec<_> = (0..batch).map(|_| random_chain(g, m)).collect();
+        let a = pjrt.build_tables(&chains, nbins).expect("pjrt");
+        let b = fallback.build_tables(&chains, nbins).expect("fallback");
+        for (i, (ta, tb)) in a.iter().zip(&b).enumerate() {
+            assert_tables_close(ta, tb, 2e-4, &format!("chain {i} (m={m}, nbins={nbins})"));
+        }
+    });
+}
+
+#[test]
+fn pjrt_handles_mixed_state_counts_in_one_batch() {
+    let Some(mut pjrt) = engine() else { return };
+    let mut fallback = FallbackEngine;
+    forall(6, 77, |g| {
+        // chains of different m in the same batch exercise per-chain padding
+        let chains: Vec<_> = [3usize, 5, 11, 2]
+            .iter()
+            .map(|&m| random_chain(g, m))
+            .collect();
+        let a = pjrt.build_tables(&chains, 64).expect("pjrt");
+        let b = fallback.build_tables(&chains, 64).expect("fallback");
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_tables_close(ta, tb, 2e-4, "mixed batch");
+        }
+    });
+}
+
+#[test]
+fn pjrt_uses_largest_variant_for_q2_sized_patterns() {
+    let Some(mut pjrt) = engine() else { return };
+    // m=15 (Q2) with 4 patterns and 512 bins needs the B8_M32_N512 variant
+    let mut g_holder = None;
+    forall(1, 5, |g| {
+        let chains: Vec<_> = (0..4).map(|_| random_chain(g, 15)).collect();
+        g_holder = Some(chains);
+    });
+    let chains = g_holder.unwrap();
+    let out = pjrt.build_tables(&chains, 512).expect("pjrt big variant");
+    assert_eq!(out.len(), 4);
+    assert_eq!(out[0].completion.len(), 512);
+    let mut fallback = FallbackEngine;
+    let b = fallback.build_tables(&chains, 512).unwrap();
+    assert_tables_close(&out[0], &b[0], 5e-4, "q2-sized");
+}
+
+#[test]
+fn pjrt_compiles_each_variant_once() {
+    let Some(mut pjrt) = engine() else { return };
+    let t = Mat::from_rows(2, 2, &[0.5, 0.5, 0.0, 1.0]);
+    let chain = vec![(t, vec![1.0, 0.0])];
+    pjrt.build_tables(&chain, 8).unwrap();
+    let after_first = pjrt.compiled_count();
+    for _ in 0..5 {
+        pjrt.build_tables(&chain, 8).unwrap();
+    }
+    assert_eq!(pjrt.compiled_count(), after_first, "executables are cached");
+}
+
+#[test]
+fn pjrt_rejects_oversized_problems() {
+    let Some(mut pjrt) = engine() else { return };
+    // m=64 exceeds every built variant
+    let m = 64;
+    let mut t = Mat::zeros(m, m);
+    for i in 0..m {
+        t[(i, i)] = 1.0;
+    }
+    let r = vec![0.0; m];
+    assert!(pjrt.build_tables(&[(t, r)], 8).is_err());
+}

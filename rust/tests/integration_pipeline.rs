@@ -1,0 +1,161 @@
+//! End-to-end integration: every built-in query family runs through the
+//! full three-phase experiment pipeline at a reduced scale, and the
+//! paper's qualitative claims hold.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_experiment;
+use pspice::shedding::ShedderKind;
+
+fn cfg(query: &str) -> ExperimentConfig {
+    let (dataset, window, pattern_n) = match query {
+        "q1" => (DatasetKind::Stock, 2_000, 0),
+        "q2" => (DatasetKind::Stock, 3_000, 0),
+        "q3" => (DatasetKind::Soccer, 1_500, 3),
+        "q4" => (DatasetKind::Bus, 2_000, 4),
+        _ => unreachable!(),
+    };
+    ExperimentConfig {
+        query: query.into(),
+        window,
+        pattern_n,
+        slide: 250,
+        dataset,
+        seed: 5,
+        warmup: 25_000,
+        events: 25_000,
+        rate: 1.3,
+        lb_ms: 0.5,
+        shedder: ShedderKind::PSpice,
+        weights: Vec::new(),
+        cost_factors: Vec::new(),
+        retrain_every: 0,
+        drift_threshold: 0.01,
+    }
+}
+
+#[test]
+fn all_query_families_run_end_to_end() {
+    for q in ["q1", "q2", "q3", "q4"] {
+        let r = run_experiment(&cfg(q)).unwrap_or_else(|e| panic!("{q}: {e:#}"));
+        assert!(r.truth_total > 0, "{q}: ground truth empty");
+        assert!(
+            (0.0..=100.0).contains(&r.fn_percent),
+            "{q}: fn={}",
+            r.fn_percent
+        );
+        assert_eq!(r.false_positives, 0, "{q}: PM shedding must not invent CEs");
+        assert!(r.capacity_ns > 0.0);
+        assert!(r.match_probability > 0.0, "{q}: mp=0");
+    }
+}
+
+#[test]
+fn white_box_shedders_never_produce_false_positives() {
+    for shedder in [ShedderKind::PSpice, ShedderKind::PSpiceMinus, ShedderKind::PmBaseline] {
+        let mut c = cfg("q4");
+        c.shedder = shedder;
+        c.rate = 1.8; // heavy shedding
+        let r = run_experiment(&c).unwrap();
+        assert_eq!(r.false_positives, 0, "{:?}", shedder);
+    }
+}
+
+#[test]
+fn event_shedding_also_sound_on_these_queries() {
+    // without negation operators, dropping events can only lose matches
+    let mut c = cfg("q1");
+    c.shedder = ShedderKind::EventBaseline;
+    c.rate = 1.6;
+    let r = run_experiment(&c).unwrap();
+    assert_eq!(r.false_positives, 0);
+    assert!(r.dropped_events > 0, "E-BL must actually shed events");
+}
+
+#[test]
+fn latency_bound_violated_without_but_held_with_shedding() {
+    let mut without = cfg("q1");
+    without.shedder = ShedderKind::None;
+    let r0 = run_experiment(&without).unwrap();
+    assert!(
+        r0.latency.violation_rate() > 0.2,
+        "30% overload must blow an unshedded queue (viol={})",
+        r0.latency.violation_rate()
+    );
+
+    let r1 = run_experiment(&cfg("q1")).unwrap();
+    assert!(
+        r1.latency.violation_rate() < 0.05,
+        "pSPICE holds LB (viol={}, max={}ms)",
+        r1.latency.violation_rate(),
+        r1.latency.stats.max() / 1e6
+    );
+}
+
+#[test]
+fn higher_rate_means_more_false_negatives() {
+    let lo = run_experiment(&cfg("q4")).unwrap();
+    let mut hot = cfg("q4");
+    hot.rate = 2.0;
+    let hi = run_experiment(&hot).unwrap();
+    assert!(
+        hi.fn_percent >= lo.fn_percent - 1.0,
+        "fn% should not shrink with overload: {:.1} -> {:.1}",
+        lo.fn_percent,
+        hi.fn_percent
+    );
+    // both overloads force drops (totals aren't comparable: heavier
+    // shedding leaves fewer live PMs to drop later)
+    assert!(hi.dropped_pms > 0 && lo.dropped_pms > 0);
+}
+
+#[test]
+fn pspice_beats_random_on_q1() {
+    let p = run_experiment(&cfg("q1")).unwrap();
+    let mut c = cfg("q1");
+    c.shedder = ShedderKind::PmBaseline;
+    let b = run_experiment(&c).unwrap();
+    assert!(
+        p.fn_percent <= b.fn_percent + 2.0,
+        "pspice {:.1}% vs pm-bl {:.1}%",
+        p.fn_percent,
+        b.fn_percent
+    );
+}
+
+#[test]
+fn results_are_deterministic() {
+    let a = run_experiment(&cfg("q4")).unwrap();
+    let b = run_experiment(&cfg("q4")).unwrap();
+    assert_eq!(a.fn_percent, b.fn_percent);
+    assert_eq!(a.dropped_pms, b.dropped_pms);
+    assert_eq!(a.truth_total, b.truth_total);
+}
+
+#[test]
+fn config_file_round_trip_drives_runner() {
+    let dir = std::env::temp_dir().join("pspice_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+        [experiment]
+        query = "q4"
+        window = 2000
+        pattern_n = 4
+        slide = 250
+        dataset = "bus"
+        seed = 5
+        warmup = 20000
+        events = 15000
+        rate = 1.3
+        lb_ms = 0.5
+        shedder = "pspice"
+        "#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(&path).unwrap();
+    let r = run_experiment(&cfg).unwrap();
+    assert!(r.truth_total > 0);
+}

@@ -1,0 +1,302 @@
+//! Property suites over the crate's core invariants (DESIGN.md §7),
+//! using the seeded mini property framework in `pspice::testing`.
+
+use std::collections::HashSet;
+
+use pspice::linalg::markov::{absorbing_normalize, build_tables, compose_bin};
+use pspice::linalg::{fit_latency_model, Mat};
+use pspice::model::UtilityTable;
+use pspice::operator::Operator;
+use pspice::query::builtin;
+use pspice::shedding::OverloadDetector;
+use pspice::testing::{forall, Gen};
+use pspice::util::Rng;
+use pspice::windows::QueryWindows;
+
+// ---------------------------------------------------------------- markov
+
+#[test]
+fn prop_completion_equals_matrix_power() {
+    // paper Eq. 3: c_j(i) == T^j (i, m-1)
+    forall(40, 101, |g| {
+        let m = g.usize(2, 10);
+        let t = g.stochastic_matrix(m);
+        let r = vec![1.0; m];
+        let nbins = g.usize(1, 30);
+        let tables = build_tables(&t, &r, nbins);
+        let j = g.usize(1, nbins);
+        let p = t.pow(j as u64);
+        for i in 0..m {
+            assert!(
+                (tables.completion[j - 1][i] - p[(i, m - 1)]).abs() < 1e-9,
+                "m={m} j={j} i={i}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_completion_monotone_and_bounded() {
+    forall(40, 102, |g| {
+        let m = g.usize(2, 12);
+        let t = g.stochastic_matrix(m);
+        let tables = build_tables(&t, &vec![0.5; m], 40);
+        for j in 0..40 {
+            for i in 0..m {
+                let c = tables.completion[j][i];
+                assert!((-1e-12..=1.0 + 1e-9).contains(&c));
+                if j > 0 {
+                    assert!(c + 1e-9 >= tables.completion[j - 1][i]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compose_bin_chapman_kolmogorov() {
+    // one composed step == bs raw steps, for random chains and bins
+    forall(30, 103, |g| {
+        let m = g.usize(2, 8);
+        let t = g.stochastic_matrix(m);
+        let mut r: Vec<f64> = (0..m).map(|_| g.f64(0.0, 3.0)).collect();
+        r[m - 1] = 0.0;
+        let bs = g.usize(1, 40) as u64;
+        let (tb, rb) = compose_bin(&t, &r, bs);
+        assert!(tb.is_row_stochastic(1e-9));
+        let direct = build_tables(&t, &r, bs as usize);
+        let binned = build_tables(&tb, &rb, 1);
+        for i in 0..m {
+            assert!(
+                (binned.completion[0][i] - direct.completion[bs as usize - 1][i]).abs()
+                    < 1e-8
+            );
+            assert!(
+                (binned.remaining_time[0][i]
+                    - direct.remaining_time[bs as usize - 1][i])
+                    .abs()
+                    < 1e-6
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_learned_matrices_are_stochastic() {
+    forall(25, 104, |g| {
+        let m = g.usize(2, 9);
+        let mut t = Mat::zeros(m, m);
+        // random raw counts, some rows empty
+        for i in 0..m {
+            if g.bool(0.8) {
+                for j in 0..m {
+                    t[(i, j)] = g.usize(0, 50) as f64;
+                }
+            }
+        }
+        absorbing_normalize(&mut t);
+        assert!(t.is_row_stochastic(1e-9));
+        assert_eq!(t[(m - 1, m - 1)], 1.0);
+    });
+}
+
+// ---------------------------------------------------------------- utility
+
+#[test]
+fn prop_utility_lookup_matches_rows_at_bin_boundaries() {
+    forall(25, 105, |g| {
+        let m = g.usize(2, 8);
+        let t = g.stochastic_matrix(m);
+        let tables = build_tables(&t, &vec![1.0; m], 32);
+        let bs = g.usize(1, 100) as u64;
+        let ut = UtilityTable::from_tables(&tables, 1.0, bs, true);
+        let j = g.usize(0, 31);
+        let s = g.usize(0, m - 1) as u32;
+        let looked = ut.lookup(s, (j as u64 + 1) * bs);
+        assert!(
+            (looked - ut.rows[j][s as usize]).abs() < 1e-9,
+            "bin boundary lookup must be exact"
+        );
+    });
+}
+
+#[test]
+fn prop_utility_nonnegative_finite() {
+    forall(25, 106, |g| {
+        let m = g.usize(2, 8);
+        let t = g.stochastic_matrix(m);
+        let mut r: Vec<f64> = (0..m).map(|_| g.f64(0.0, 10.0)).collect();
+        r[m - 1] = 0.0;
+        let tables = build_tables(&t, &r, 16);
+        let ut = UtilityTable::from_tables(&tables, g.f64(0.1, 5.0), 10, g.bool(0.5));
+        for row in &ut.rows {
+            for &u in row {
+                assert!(u.is_finite() && u >= 0.0);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------- detector
+
+#[test]
+fn prop_detector_rho_restores_bound() {
+    // for any linear latency world, the returned rho brings the
+    // predicted latency back under LB (Alg. 1 invariant, item 8)
+    forall(30, 107, |g| {
+        let a = g.f64(0.0, 500.0);
+        let b = g.f64(0.5, 20.0);
+        let lb = g.f64(5_000.0, 100_000.0);
+        let mut d = OverloadDetector::new(lb, 0.0);
+        for n in (0..100).map(|i| i * 20) {
+            d.observe_processing(n, a + b * n as f64);
+            d.observe_shedding(n, 0.1 * b * n as f64);
+        }
+        assert!(d.fit());
+        let n_pm = g.usize(10, 20_000);
+        let l_q = g.f64(0.0, lb * 0.5);
+        if let Some(rho) = d.check(l_q, n_pm) {
+            assert!(rho <= n_pm);
+            let kept = n_pm - rho;
+            if kept > 0 {
+                // interior solution: the bound is restored
+                let after = l_q + d.predict_lp(kept) + d.predict_ls(n_pm);
+                // allow the regression + ceil slack of one PM's latency
+                assert!(
+                    after <= lb + b * 2.0 + 1.0,
+                    "after={after} lb={lb} rho={rho} n={n_pm}"
+                );
+            } else {
+                // infeasible bound (queueing/shedding alone exceed LB):
+                // the detector must have asked for maximum effort
+                assert_eq!(rho, n_pm);
+                assert!(l_q + d.predict_lp(0) + d.predict_ls(n_pm) + 1.0 >= lb);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_regression_inverse_is_monotone() {
+    forall(20, 108, |g| {
+        let xs: Vec<f64> = (0..80).map(|i| i as f64 * g.f64(1.0, 30.0)).collect();
+        let a = g.f64(0.0, 100.0);
+        let b = g.f64(0.01, 5.0);
+        let c = g.f64(0.0, 0.01);
+        let ys: Vec<f64> = xs.iter().map(|&n| a + b * n + c * n * n).collect();
+        let m = fit_latency_model(&xs, &ys).expect("fit");
+        let l1 = g.f64(a, a + 1000.0);
+        let l2 = l1 + g.f64(1.0, 1000.0);
+        assert!(m.inverse(l1) <= m.inverse(l2) + 1e-6);
+    });
+}
+
+// ---------------------------------------------------------------- operator
+
+fn random_bus_operator(g: &mut Gen) -> (Operator, Rng) {
+    use pspice::events::EventStream;
+    let n = g.usize(2, 6);
+    let ws = g.usize(500, 4_000) as u64;
+    let slide = g.usize(100, 800) as u64;
+    let mut op = Operator::new(builtin::q4(n, ws, slide).queries);
+    let mut gen = pspice::datasets::BusGen::with_seed(g.usize(0, 1 << 30) as u64);
+    let events = g.usize(2_000, 15_000);
+    for _ in 0..events {
+        op.process_event(&gen.next_event().unwrap());
+    }
+    (op, g.rng())
+}
+
+#[test]
+fn prop_pm_count_cache_consistent() {
+    forall(10, 109, |g| {
+        let (op, _) = random_bus_operator(g);
+        let direct: usize = op.wins.iter().map(|q| q.pm_count()).sum();
+        assert_eq!(direct, op.pm_count());
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        assert_eq!(refs.len(), op.pm_count());
+    });
+}
+
+#[test]
+fn prop_windows_respect_extent() {
+    forall(10, 110, |g| {
+        let (op, _) = random_bus_operator(g);
+        let (seq, _) = op.position();
+        for (qi, qw) in op.wins.iter().enumerate() {
+            let ws = match op.queries[qi].query.window {
+                pspice::query::WindowSpec::Count(ws) => ws,
+                _ => unreachable!("q4 is count-windowed"),
+            };
+            for w in &qw.windows {
+                assert!(seq < w.open_seq + ws, "expired window still open");
+            }
+            // oldest-first ordering
+            let seqs: Vec<u64> = qw.windows.iter().map(|w| w.open_seq).collect();
+            assert!(seqs.windows(2).all(|p| p[0] < p[1]));
+        }
+    });
+}
+
+#[test]
+fn prop_random_drop_is_exact_and_conserving() {
+    forall(10, 111, |g| {
+        let (mut op, mut rng) = random_bus_operator(g);
+        let before = op.pm_count();
+        if before == 0 {
+            return;
+        }
+        let rho = g.usize(0, before);
+        let dropped = op.drop_random(rho, &mut rng);
+        assert_eq!(dropped, rho.min(before));
+        assert_eq!(op.pm_count(), before - dropped);
+    });
+}
+
+#[test]
+fn prop_drop_by_ids_removes_only_those() {
+    forall(10, 112, |g| {
+        let (mut op, _) = random_bus_operator(g);
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        if refs.is_empty() {
+            return;
+        }
+        let k = g.usize(1, refs.len());
+        let victims: HashSet<u64> = refs.iter().take(k).map(|r| r.pm_id).collect();
+        let before = op.pm_count();
+        let dropped = op.drop_pms(&victims);
+        assert_eq!(dropped, k);
+        let mut after = Vec::new();
+        op.pm_refs(&mut after);
+        assert_eq!(after.len(), before - k);
+        for r in &after {
+            assert!(!victims.contains(&r.pm_id));
+        }
+    });
+}
+
+// ---------------------------------------------------------------- windows
+
+#[test]
+fn prop_count_window_remaining_decreases() {
+    forall(20, 113, |g| {
+        use pspice::events::Event;
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        let open_seq = g.usize(0, 1000) as u64;
+        let e = Event::new(open_seq, open_seq, 0, &[0.0, 0.0, 1.0, 0.0]);
+        qw.open(&e, &mut id);
+        let ws = g.usize(10, 500) as u64;
+        let spec = pspice::query::WindowSpec::Count(ws);
+        let mut last = u64::MAX;
+        for step in 0..ws {
+            let cur = open_seq + step;
+            let rem = qw.windows[0].remaining_events(spec, cur, 0, 1.0);
+            assert!(rem <= last);
+            assert!(rem >= 1, "window not yet expired must have events left");
+            last = rem;
+        }
+    });
+}
