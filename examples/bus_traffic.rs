@@ -82,6 +82,8 @@ fn main() -> pspice::Result<()> {
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     };
     let pspice = run_experiment(&cfg)?;
     let pm_bl = run_experiment(&ExperimentConfig {

@@ -35,6 +35,8 @@ fn main() -> pspice::Result<()> {
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     };
 
     println!("pSPICE quickstart — Q4 (bus delays), 140% overload\n");

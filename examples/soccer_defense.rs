@@ -50,6 +50,8 @@ fn main() -> pspice::Result<()> {
                 cost_factors: Vec::new(),
             retrain_every: 0,
             drift_threshold: 0.01,
+            shards: 1,
+            batch: 256,
             };
             let r = run_experiment(&cfg)?;
             mp = r.match_probability;

@@ -27,6 +27,8 @@ fn cell(query: &str, dataset: DatasetKind, window: u64, n: usize) -> ExperimentC
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     }
 }
 

@@ -11,7 +11,7 @@ use pspice::events::EventStream;
 use pspice::model::{ModelBuilder, ModelConfig};
 use pspice::operator::Operator;
 use pspice::query::builtin::q1;
-use pspice::runtime::{ArtifactManifest, FallbackEngine, PjrtEngine};
+use pspice::runtime::FallbackEngine;
 
 fn trained_op(ws: u64) -> Operator {
     let mut op = Operator::new(q1(ws).queries);
@@ -23,9 +23,26 @@ fn trained_op(ws: u64) -> Operator {
     op
 }
 
+/// Bench the AOT/PJRT engine when the crate is built with `--features
+/// xla` and artifacts exist; a no-op otherwise.
+#[cfg(feature = "xla")]
+fn bench_pjrt(op: &Operator, cfg: &ModelConfig, ws: u64) {
+    use pspice::runtime::{ArtifactManifest, PjrtEngine};
+    let Ok(engine) = PjrtEngine::load(&ArtifactManifest::default_dir()) else {
+        return;
+    };
+    let mut mb = ModelBuilder::new(cfg.clone(), Box::new(engine));
+    mb.build(op).unwrap(); // compile once outside the timing
+    bench(&format!("model_build.pjrt(ws={ws})"), 1, 10, 0, || {
+        mb.build(op).unwrap();
+    });
+}
+
+#[cfg(not(feature = "xla"))]
+fn bench_pjrt(_op: &Operator, _cfg: &ModelConfig, _ws: u64) {}
+
 fn main() {
     println!("== model_build (Fig. 9b wall-clock) ==");
-    let have_pjrt = PjrtEngine::load(&ArtifactManifest::default_dir()).is_ok();
     for &ws in &[6_000u64, 10_000, 16_000, 18_000, 24_000, 32_000] {
         let op = trained_op(ws);
         let cfg = ModelConfig {
@@ -33,14 +50,7 @@ fn main() {
             max_bins: 512,
             use_tau: true,
         };
-        if have_pjrt {
-            let engine = PjrtEngine::load(&ArtifactManifest::default_dir()).unwrap();
-            let mut mb = ModelBuilder::new(cfg.clone(), Box::new(engine));
-            mb.build(&op).unwrap(); // compile once outside the timing
-            bench(&format!("model_build.pjrt(ws={ws})"), 1, 10, 0, || {
-                mb.build(&op).unwrap();
-            });
-        }
+        bench_pjrt(&op, &cfg, ws);
         let mut mb = ModelBuilder::new(cfg, Box::new(FallbackEngine));
         bench(&format!("model_build.fallback(ws={ws})"), 1, 10, 0, || {
             mb.build(&op).unwrap();

@@ -1,0 +1,81 @@
+//! Sharded-runtime scaling bench: wall-clock event throughput of the
+//! mixed Q1–Q4 workload at 1/2/4 shards, against the single-threaded
+//! operator reference.
+//!
+//! The acceptance target for the sharded runtime is ≥1.8× event
+//! throughput at 4 shards vs 1 shard on this workload; the bench prints
+//! an explicit PASS/FAIL line for it.
+
+mod common;
+
+use common::{bench, black_box};
+use pspice::datasets::{mixed_queries, mixed_trace};
+use pspice::metrics::Throughput;
+use pspice::operator::Operator;
+use pspice::runtime::ShardedOperator;
+
+fn main() {
+    println!("== sharded_throughput (mixed Q1-Q4) ==");
+    let queries = mixed_queries(4_000);
+    let trace = mixed_trace(200_000, 5);
+    let batch = 2_048;
+
+    // Every iteration builds a FRESH operator: replaying a trace whose
+    // seq/ts restart at 0 into a long-lived operator would leave its
+    // old windows unexpirable and accumulate state, so reps 2+ would
+    // measure a degenerate workload instead of the mixed Q1-Q4 one.
+
+    // single-threaded operator reference (no channel/merge overhead)
+    bench(
+        "operator.process_event(mixed)",
+        1,
+        3,
+        trace.len() as u64,
+        || {
+            let mut op = Operator::new(queries.clone());
+            op.obs.enabled = false;
+            for e in &trace {
+                black_box(op.process_event(e));
+            }
+        },
+    );
+
+    let mut meters: Vec<(usize, Throughput)> = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        let r = bench(
+            &format!("sharded.process_batch(shards={shards})"),
+            1,
+            3,
+            trace.len() as u64,
+            || {
+                let mut sop = ShardedOperator::new(queries.clone(), shards);
+                sop.set_obs_enabled(false);
+                for chunk in trace.chunks(batch) {
+                    black_box(sop.process_batch(chunk));
+                }
+            },
+        );
+        let mut t = Throughput::new();
+        t.record(trace.len() as u64, r.mean_s);
+        meters.push((shards, t));
+    }
+
+    let base = meters[0].1;
+    for (shards, t) in &meters[1..] {
+        println!(
+            "  speedup @{shards} shards vs 1: {:.2}x ({:.2} Mevents/s)",
+            t.speedup_over(&base),
+            t.events_per_sec() / 1e6
+        );
+    }
+    let four = meters
+        .iter()
+        .find(|(s, _)| *s == 4)
+        .expect("4-shard meter")
+        .1;
+    let speedup = four.speedup_over(&base);
+    println!(
+        "  target >=1.8x at 4 shards: {} ({speedup:.2}x)",
+        if speedup >= 1.8 { "PASS" } else { "FAIL" }
+    );
+}

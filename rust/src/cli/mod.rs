@@ -65,7 +65,7 @@ pub fn usage() -> &'static str {
        run        run one experiment (--config file | --query q1..q4) \n\
                   [--shedder none|pspice|pspice--|pm-bl|e-bl] [--rate 1.2]\n\
                   [--window N] [--pattern-n N] [--events N] [--warmup N]\n\
-                  [--lb-ms F] [--seed N]\n\
+                  [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
        fig7       [--scale F]                       latency-bound trace\n\
@@ -106,6 +106,10 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     cfg.warmup = flags.get_parse("warmup", cfg.warmup)?;
     cfg.rate = flags.get_parse("rate", cfg.rate)?;
     cfg.lb_ms = flags.get_parse("lb-ms", cfg.lb_ms)?;
+    cfg.shards = flags.get_parse("shards", cfg.shards)?;
+    cfg.batch = flags.get_parse("batch", cfg.batch)?;
+    anyhow::ensure!(cfg.shards >= 1, "--shards must be at least 1");
+    anyhow::ensure!(cfg.batch >= 1, "--batch must be at least 1");
     if let Some(s) = flags.get("shedder") {
         cfg.shedder = s.parse()?;
     }
@@ -129,7 +133,10 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
         "run" => {
             let cfg = cfg_from_flags(&flags)?;
             let r = crate::harness::run_experiment(&cfg)?;
-            println!("experiment: query={} shedder={}", r.query, r.shedder);
+            println!(
+                "experiment: query={} shedder={} shards={}",
+                r.query, r.shedder, r.shards
+            );
             println!("  engine            : {}", r.engine);
             println!("  capacity          : {:.0} ns/event", r.capacity_ns);
             println!("  match probability : {:.1}%", r.match_probability * 100.0);
@@ -148,6 +155,10 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
             );
             println!("  shed overhead     : {:.3}%", r.shed_overhead * 100.0);
             println!("  model build       : {:.4}s", r.model_build_secs);
+            println!(
+                "  wall throughput   : {:.0} events/s",
+                r.wall_events_per_sec
+            );
             Ok(())
         }
         "fig5" => figures::fig5(
@@ -254,6 +265,20 @@ mod tests {
         let cfg = cfg_from_flags(&f).unwrap();
         assert_eq!(cfg.dataset, crate::datasets::DatasetKind::Soccer);
         assert_eq!(cfg.window, 1_500);
+    }
+
+    #[test]
+    fn shards_and_batch_flags_parse() {
+        let f = Flags::parse(&s(&["run", "--shards", "4", "--batch", "128"])).unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.batch, 128);
+        // defaults stay single-threaded
+        let f = Flags::parse(&s(&["run", "--query", "q1"])).unwrap();
+        assert_eq!(cfg_from_flags(&f).unwrap().shards, 1);
+        // zero is rejected
+        let f = Flags::parse(&s(&["run", "--shards", "0"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
     }
 
     #[test]

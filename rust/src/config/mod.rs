@@ -47,6 +47,11 @@ pub struct ExperimentConfig {
     pub retrain_every: u64,
     /// MSE threshold for drift-triggered retraining
     pub drift_threshold: f64,
+    /// worker shards for the measurement phase (1 = the classic
+    /// single-threaded operator; >1 = the sharded runtime)
+    pub shards: usize,
+    /// events per dispatched batch in sharded mode
+    pub batch: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -67,6 +72,8 @@ impl Default for ExperimentConfig {
             cost_factors: Vec::new(),
             retrain_every: 0,
             drift_threshold: 0.01,
+            shards: 1,
+            batch: 256,
         }
     }
 }
@@ -123,6 +130,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_num(section, "drift_threshold") {
             cfg.drift_threshold = v;
         }
+        if let Some(v) = doc.get_num(section, "shards") {
+            cfg.shards = v as usize;
+        }
+        if let Some(v) = doc.get_num(section, "batch") {
+            cfg.batch = v as usize;
+        }
         Ok(cfg)
     }
 
@@ -171,6 +184,18 @@ mod tests {
         assert_eq!(cfg.query, "q2");
         assert_eq!(cfg.rate, 1.2);
         assert_eq!(cfg.shedder, ShedderKind::PSpice);
+        assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.batch, 256);
+    }
+
+    #[test]
+    fn shards_and_batch_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\nshards = 4\nbatch = 128\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.batch, 128);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! The mixed Q1–Q4 workload: all three synthetic streams interleaved
+//! into ONE totally ordered trace, with the event-type ids remapped
+//! into a merged type space so Q1/Q2 (quotes), Q3 (soccer) and Q4
+//! (buses) run side by side in one multi-query operator.
+//!
+//! This is the scaling workload for the sharded runtime: eight queries
+//! (Q1 rise/fall, Q2 rise/fall, Q3 at two pattern sizes, Q4 at two
+//! window geometries) whose work partitions cleanly across shards.
+//!
+//! Merged event-type space:
+//!
+//! | merged etype | source       | original |
+//! |---|---|---|
+//! | 0 | stock `quote`  | 0 |
+//! | 1 | soccer `poss`  | 0 |
+//! | 2 | soccer `pos`   | 1 |
+//! | 3 | bus `bus`      | 0 |
+
+use crate::events::{Event, EventStream};
+use crate::query::{builtin, OpenPolicy, Pattern, Query, StepSpec};
+
+use super::{BusGen, SoccerGen, StockGen};
+
+/// Merged etype of stock `quote` events.
+pub const STOCK_BASE: u16 = 0;
+/// Merged etype offset of soccer events (`poss` → 1, `pos` → 2).
+pub const SOCCER_BASE: u16 = 1;
+/// Merged etype of bus events.
+pub const BUS_BASE: u16 = 3;
+
+fn shift_step(s: &mut StepSpec, base: u16) {
+    s.etype += base;
+}
+
+/// Remap every event-type reference in a query by `base`.
+fn shift_query(q: &mut Query, base: u16) {
+    match &mut q.pattern {
+        Pattern::Seq(steps) => {
+            for s in steps {
+                shift_step(s, base);
+            }
+        }
+        Pattern::Any { spec, .. } => shift_step(spec, base),
+        Pattern::SeqAny { head, spec, .. } => {
+            for s in head {
+                shift_step(s, base);
+            }
+            shift_step(spec, base);
+        }
+    }
+    if let OpenPolicy::OnMatch(s) = &mut q.open {
+        shift_step(s, base);
+    }
+}
+
+/// The mixed Q1–Q4 query set (eight queries), resolved against the
+/// merged event-type space.  `ws_stock` sizes the Q1/Q2 count windows.
+pub fn mixed_queries(ws_stock: u64) -> Vec<Query> {
+    let mut out = Vec::new();
+    for mut q in builtin::q1(ws_stock).queries {
+        shift_query(&mut q, STOCK_BASE);
+        out.push(q);
+    }
+    for mut q in builtin::q2(ws_stock + ws_stock / 2).queries {
+        shift_query(&mut q, STOCK_BASE);
+        out.push(q);
+    }
+    for mut q in builtin::q3(4, 1_500).queries {
+        shift_query(&mut q, SOCCER_BASE);
+        out.push(q);
+    }
+    for mut q in builtin::q3(3, 1_000).queries {
+        shift_query(&mut q, SOCCER_BASE);
+        out.push(q);
+    }
+    for mut q in builtin::q4(4, 2_000, 250).queries {
+        shift_query(&mut q, BUS_BASE);
+        out.push(q);
+    }
+    for mut q in builtin::q4(5, 3_000, 400).queries {
+        shift_query(&mut q, BUS_BASE);
+        out.push(q);
+    }
+    out
+}
+
+/// A deterministic merged trace of `n` events: stock, soccer and bus
+/// events interleaved round-robin, with globally renumbered sequence
+/// numbers and a 1 ms merged tick (so Q3's time windows keep a stable
+/// event rate).
+pub fn mixed_trace(n: usize, seed: u64) -> Vec<Event> {
+    let mut stock = StockGen::with_seed(seed);
+    let mut soccer = SoccerGen::with_seed(seed ^ 0x50CC);
+    let mut bus = BusGen::with_seed(seed ^ 0xB005);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut e = match i % 3 {
+            0 => {
+                let mut e = stock.next_event().expect("stock stream is infinite");
+                e.etype += STOCK_BASE;
+                e
+            }
+            1 => {
+                let mut e = soccer.next_event().expect("soccer stream is infinite");
+                e.etype += SOCCER_BASE;
+                e
+            }
+            _ => {
+                let mut e = bus.next_event().expect("bus stream is infinite");
+                e.etype += BUS_BASE;
+                e
+            }
+        };
+        e.seq = i as u64;
+        e.ts_ms = i as u64;
+        out.push(e);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::Operator;
+
+    #[test]
+    fn query_families_use_disjoint_etypes() {
+        let queries = mixed_queries(4_000);
+        assert_eq!(queries.len(), 8);
+        let etypes_of = |q: &Query| -> Vec<u16> {
+            let mut out = Vec::new();
+            let mut push = |s: &StepSpec| out.push(s.etype);
+            match &q.pattern {
+                Pattern::Seq(steps) => steps.iter().for_each(&mut push),
+                Pattern::Any { spec, .. } => push(spec),
+                Pattern::SeqAny { head, spec, .. } => {
+                    head.iter().for_each(&mut push);
+                    push(spec);
+                }
+            }
+            out
+        };
+        // q1/q2 on quotes (0), q3 on soccer (1/2), q4 on buses (3)
+        for q in &queries[..4] {
+            assert!(etypes_of(q).iter().all(|&t| t == 0), "{}", q.name);
+        }
+        for q in &queries[4..6] {
+            assert!(etypes_of(q).iter().all(|&t| t == 1 || t == 2), "{}", q.name);
+        }
+        for q in &queries[6..] {
+            assert!(etypes_of(q).iter().all(|&t| t == 3), "{}", q.name);
+        }
+    }
+
+    #[test]
+    fn trace_is_ordered_and_typed() {
+        let trace = mixed_trace(3_000, 7);
+        assert_eq!(trace.len(), 3_000);
+        for (i, e) in trace.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert!(e.etype <= 3);
+        }
+        // all three families present
+        for t in [0u16, 1, 3] {
+            assert!(trace.iter().any(|e| e.etype == t), "missing family {t}");
+        }
+    }
+
+    #[test]
+    fn mixed_workload_runs_through_the_operator() {
+        let mut op = Operator::new(mixed_queries(2_000));
+        let trace = mixed_trace(12_000, 3);
+        let mut opened = 0;
+        for e in &trace {
+            opened += op.process_event(e).opened;
+        }
+        assert!(opened > 0, "windows must open on the mixed trace");
+        assert!(op.pm_count() > 0, "live PMs across the families");
+        // determinism
+        let mut op2 = Operator::new(mixed_queries(2_000));
+        for e in &mixed_trace(12_000, 3) {
+            op2.process_event(e);
+        }
+        assert_eq!(op.pm_count(), op2.pm_count());
+    }
+}

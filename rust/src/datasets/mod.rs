@@ -11,14 +11,18 @@
 //!   symbol frequencies, rising/falling flags (Q1, Q2),
 //! * [`soccer`] — 2×11 players + ball, possession and proximity events
 //!   (Q3),
-//! * [`bus`] — 911 buses over a stop graph with bursty delays (Q4).
+//! * [`bus`] — 911 buses over a stop graph with bursty delays (Q4),
+//! * [`mixed`] — all three streams interleaved into one trace with a
+//!   merged event-type space: the Q1–Q4 multi-query scaling workload.
 
 pub mod bus;
 pub mod csv;
+pub mod mixed;
 pub mod soccer;
 pub mod stock;
 
 pub use bus::BusGen;
+pub use mixed::{mixed_queries, mixed_trace};
 pub use soccer::SoccerGen;
 pub use stock::StockGen;
 

@@ -12,18 +12,29 @@
 //! 3. **Overloaded measurement** — the remaining events arrive at
 //!    `rate × capacity` in virtual time; the shedder keeps the latency
 //!    bound; completions are compared against the truth set.
+//!
+//! With `shards > 1` the measurement phase runs on the sharded operator
+//! runtime ([`crate::runtime::sharded`]): events are dispatched in
+//! micro-batches of `batch` events to every worker shard, the virtual
+//! clock advances by the slowest shard's batch cost (the parallel
+//! makespan), and the shedders use their shard-aware batch entry points
+//! (one global ρ, k-way-merged victims).  Completions are merged
+//! deterministically, so QoR accounting is identical to the
+//! single-threaded path.
 
 use crate::config::ExperimentConfig;
 use crate::datasets::{BusGen, DatasetKind, SoccerGen, StockGen};
 use crate::events::{Event, EventStream};
-use crate::metrics::{LatencyTracker, QorAccounting};
-use crate::model::{ModelBuilder, ModelConfig};
+use crate::metrics::{LatencyTracker, QorAccounting, Throughput};
+use crate::model::{ModelBuilder, ModelConfig, UtilityTable};
+use crate::nfa::CompiledQuery;
 use crate::operator::Operator;
 use crate::query::builtin;
 use crate::query::Query;
+use crate::runtime::ShardedOperator;
 use crate::shedding::{
     EventBaselineShedder, NoShedder, OverloadDetector, PSpiceShedder,
-    PmBaselineShedder, Shedder, ShedderKind,
+    PmBaselineShedder, ShedReport, Shedder, ShedderKind,
 };
 use crate::sim::{RateSource, SimClock};
 
@@ -34,6 +45,8 @@ pub struct ExperimentResult {
     pub query: String,
     /// shedder used
     pub shedder: &'static str,
+    /// worker shards used in the measurement phase
+    pub shards: usize,
     /// weighted FN percentage vs ground truth
     pub fn_percent: f64,
     /// detected-but-not-true complex events (must be 0 for PM shedding)
@@ -60,6 +73,8 @@ pub struct ExperimentResult {
     pub peak_pms: usize,
     /// drift-triggered model rebuilds during measurement (§III-D)
     pub retrains: u32,
+    /// wall-clock events/s of the measurement phase (not virtual time)
+    pub wall_events_per_sec: f64,
 }
 
 /// Build the query set + the E-BL key slot for a configuration.
@@ -147,6 +162,157 @@ fn ground_truth(
     (qor, capacity, op.match_probability())
 }
 
+/// Everything the measurement phase produces (both runtimes).
+struct Measurement {
+    latency: LatencyTracker,
+    shed_overhead: f64,
+    dropped_pms: u64,
+    dropped_events: u64,
+    peak_pms: usize,
+    retrains: u32,
+    shedder: &'static str,
+    /// worker shards that actually ran (the runtime caps the requested
+    /// count at the query count)
+    shards: usize,
+    wall_events_per_sec: f64,
+}
+
+/// Phase 3 on the sharded runtime.
+#[allow(clippy::too_many_arguments)]
+fn measure_sharded(
+    cfg: &ExperimentConfig,
+    queries: &[Query],
+    trace: &[Event],
+    warmup: usize,
+    capacity_ns: f64,
+    detector: &OverloadDetector,
+    tables: &[UtilityTable],
+    key_slot: usize,
+    qor: &mut QorAccounting,
+) -> crate::Result<Measurement> {
+    anyhow::ensure!(
+        cfg.retrain_every == 0,
+        "drift retraining is not yet supported with shards > 1"
+    );
+    let lb_ns = cfg.lb_ms * 1e6;
+    let batch = cfg.batch.max(1);
+    let mut sop = ShardedOperator::new(queries.to_vec(), cfg.shards);
+    if !cfg.cost_factors.is_empty() {
+        sop.set_cost_factors(&cfg.cost_factors);
+    }
+    sop.set_obs_enabled(false);
+
+    let mut pspice = None;
+    let mut pmbl = None;
+    let mut ebl = None;
+    match cfg.shedder {
+        ShedderKind::None => {}
+        ShedderKind::PSpice => {
+            sop.set_tables(tables);
+            pspice = Some(PSpiceShedder::new(detector.clone(), Vec::new()));
+        }
+        ShedderKind::PSpiceMinus => {
+            anyhow::bail!("pspice-- is not yet supported with shards > 1")
+        }
+        ShedderKind::PmBaseline => {
+            pmbl = Some(PmBaselineShedder::new(detector.clone(), cfg.seed ^ 0xBE11));
+        }
+        ShedderKind::EventBaseline => {
+            let compiled: Vec<CompiledQuery> = queries
+                .iter()
+                .cloned()
+                .map(CompiledQuery::compile)
+                .collect();
+            ebl = Some(EventBaselineShedder::new(
+                detector.clone(),
+                key_slot,
+                &compiled,
+                cfg.seed ^ 0xEB1,
+            ));
+        }
+    }
+
+    // prime the sharded state with the warm-up prefix (below capacity,
+    // no latency accounting; warm-up windows are out of QoR scope)
+    for chunk in trace[..warmup.min(trace.len())].chunks(batch) {
+        for ce in &sop.process_batch(chunk).completions {
+            qor.add_detected(ce);
+        }
+    }
+
+    let mut clock = SimClock::new();
+    let source = RateSource::from_capacity(capacity_ns, cfg.rate, 0.0);
+    let mut latency = LatencyTracker::new(lb_ns, (cfg.events / 2_000).max(1));
+    let mut shed_ns = 0.0;
+    let mut busy_ns = 0.0;
+    let mut dropped_pms = 0u64;
+    let mut dropped_events = 0u64;
+    let mut peak_pms = 0usize;
+    let measure = &trace[warmup.min(trace.len())..];
+    let wall_start = std::time::Instant::now();
+    let mut idx = 0u64;
+    for chunk in measure.chunks(batch) {
+        let first_arrival = source.arrival_ns(idx);
+        let last_arrival = source.arrival_ns(idx + chunk.len() as u64 - 1);
+        // micro-batching: the batch starts service once its last event
+        // has arrived (or later if the shards are still busy)
+        clock.begin_service(last_arrival);
+        let l_q = (clock.now_ns() - first_arrival).max(0.0);
+        let mut mask = None;
+        let rep = if let Some(p) = pspice.as_mut() {
+            p.on_batch(l_q, &mut sop)
+        } else if let Some(b) = pmbl.as_mut() {
+            b.on_batch(l_q, &mut sop)
+        } else if let Some(e) = ebl.as_mut() {
+            let (m, dropped, cost_ns) = e.decide_batch(l_q, &sop, chunk);
+            dropped_events += dropped;
+            mask = Some(m);
+            ShedReport {
+                dropped_pms: 0,
+                dropped_event: false,
+                cost_ns,
+            }
+        } else {
+            ShedReport::default()
+        };
+        clock.advance(rep.cost_ns);
+        shed_ns += rep.cost_ns;
+        busy_ns += rep.cost_ns;
+        dropped_pms += rep.dropped_pms as u64;
+        let out = match &mask {
+            Some(m) => sop.process_batch_masked(chunk, m),
+            None => sop.process_batch(chunk),
+        };
+        // the shards run in parallel: virtual time advances by the
+        // slowest shard's batch cost
+        clock.advance(out.cost_ns_max);
+        busy_ns += out.cost_ns_max;
+        for ce in &out.completions {
+            qor.add_detected(ce);
+        }
+        let end = clock.now_ns();
+        for j in 0..chunk.len() as u64 {
+            latency.record(end, end - source.arrival_ns(idx + j));
+        }
+        peak_pms = peak_pms.max(sop.pm_count());
+        idx += chunk.len() as u64;
+    }
+    let mut wall = Throughput::new();
+    wall.record(measure.len() as u64, wall_start.elapsed().as_secs_f64());
+
+    Ok(Measurement {
+        latency,
+        shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
+        dropped_pms,
+        dropped_events,
+        peak_pms,
+        retrains: 0,
+        shedder: cfg.shedder.name(),
+        shards: sop.n_shards(),
+        wall_events_per_sec: wall.events_per_sec(),
+    })
+}
+
 /// Run one full experiment.
 pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
     let (queries, key_slot) = build_queries(cfg)?;
@@ -181,6 +347,72 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
     let tables = builder.build(&op)?;
     let model_build_secs = builder.last_build_secs;
     let engine = builder.engine_name();
+
+    // ---- phase 3: measurement (sharded or single-threaded) ---------
+    let m = if cfg.shards > 1 {
+        measure_sharded(
+            cfg,
+            &queries,
+            &trace,
+            warmup,
+            capacity_ns,
+            &detector,
+            &tables,
+            key_slot,
+            &mut qor,
+        )?
+    } else {
+        measure_single(
+            cfg,
+            &trace,
+            capacity_ns,
+            op,
+            builder,
+            detector,
+            tables,
+            key_slot,
+            &mut qor,
+        )?
+    };
+
+    Ok(ExperimentResult {
+        query: cfg.query.clone(),
+        shedder: m.shedder,
+        shards: m.shards,
+        fn_percent: qor.fn_percent(),
+        false_positives: qor.false_positives(),
+        truth_total: qor.truth_total(),
+        match_probability,
+        capacity_ns,
+        latency: m.latency,
+        shed_overhead: m.shed_overhead,
+        dropped_pms: m.dropped_pms,
+        dropped_events: m.dropped_events,
+        model_build_secs,
+        engine,
+        peak_pms: m.peak_pms,
+        retrains: m.retrains,
+        wall_events_per_sec: m.wall_events_per_sec,
+    })
+}
+
+/// Phase 3 on the classic single-threaded operator (carried over from
+/// phase 2 with its calibrated state).
+#[allow(clippy::too_many_arguments)]
+fn measure_single(
+    cfg: &ExperimentConfig,
+    trace: &[Event],
+    capacity_ns: f64,
+    mut op: Operator,
+    mut builder: ModelBuilder,
+    detector: OverloadDetector,
+    tables: Vec<UtilityTable>,
+    key_slot: usize,
+    qor: &mut QorAccounting,
+) -> crate::Result<Measurement> {
+    let lb_ns = cfg.lb_ms * 1e6;
+    let warmup = cfg.warmup as usize;
+
     // keep capturing observations only if drift-triggered retraining is
     // on (§III-D); otherwise stop paying for capture
     let retraining = cfg.retrain_every > 0;
@@ -223,6 +455,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
     let mut dropped_events = 0u64;
     let mut peak_pms = 0usize;
     let mut retrains = 0u32;
+    let wall_start = std::time::Instant::now();
+    let measured = trace.len() - warmup.min(trace.len());
 
     for (i, e) in trace[warmup.min(trace.len())..].iter().enumerate() {
         let arrival = source.arrival_ns(i as u64);
@@ -263,23 +497,19 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
             }
         }
     }
+    let mut wall = Throughput::new();
+    wall.record(measured as u64, wall_start.elapsed().as_secs_f64());
 
-    Ok(ExperimentResult {
-        query: cfg.query.clone(),
-        shedder: shedder.name(),
-        fn_percent: qor.fn_percent(),
-        false_positives: qor.false_positives(),
-        truth_total: qor.truth_total(),
-        match_probability,
-        capacity_ns,
+    Ok(Measurement {
         latency,
         shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
         dropped_pms,
         dropped_events,
-        model_build_secs,
-        engine,
         peak_pms,
         retrains,
+        shedder: shedder.name(),
+        shards: 1,
+        wall_events_per_sec: wall.events_per_sec(),
     })
 }
 
@@ -304,6 +534,8 @@ mod tests {
             cost_factors: Vec::new(),
             retrain_every: 0,
             drift_threshold: 0.01,
+            shards: 1,
+            batch: 256,
         }
     }
 
@@ -363,5 +595,60 @@ mod tests {
             pspice.fn_percent,
             pmbl.fn_percent
         );
+    }
+
+    #[test]
+    fn sharded_runs_match_truth_without_overload() {
+        // with 2 shards at an under-capacity rate and no shedding, the
+        // sharded runtime must miss nothing and invent nothing
+        let mut cfg = tiny_cfg();
+        cfg.shedder = ShedderKind::None;
+        cfg.rate = 0.5;
+        cfg.shards = 2; // q4 is one query, but the runtime caps shards
+        cfg.batch = 64;
+        cfg.lb_ms = 2.0;
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.fn_percent, 0.0, "sharded run missed truth events");
+        assert_eq!(res.false_positives, 0);
+        // q4 is one query: the runtime caps the worker count and the
+        // result reports what actually ran, not what was requested
+        assert_eq!(res.shards, 1);
+    }
+
+    #[test]
+    fn sharding_absorbs_an_overload_one_worker_cannot() {
+        // rate 1.5× one core's capacity: unsharded+no-shedding violates
+        // the bound massively (see overload_without_shedding test); four
+        // shards on the two-query q1 workload keep the queue bounded
+        let mut cfg = tiny_cfg();
+        cfg.query = "q1".into();
+        cfg.dataset = DatasetKind::Stock;
+        cfg.window = 2_000;
+        cfg.shedder = ShedderKind::None;
+        cfg.rate = 1.5;
+        cfg.batch = 32;
+        cfg.lb_ms = 2.0;
+        cfg.shards = 2;
+        let sharded = run_experiment(&cfg).unwrap();
+        cfg.shards = 1;
+        let single = run_experiment(&cfg).unwrap();
+        assert!(
+            sharded.latency.violation_rate() < single.latency.violation_rate(),
+            "sharded={} single={}",
+            sharded.latency.violation_rate(),
+            single.latency.violation_rate()
+        );
+    }
+
+    #[test]
+    fn sharded_pspice_sheds_and_stays_sound() {
+        let mut cfg = tiny_cfg();
+        cfg.shards = 2;
+        cfg.batch = 32;
+        cfg.lb_ms = 0.5;
+        cfg.rate = 3.0; // overload even a 2-way split of one query
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.false_positives, 0, "PM shedding must not invent CEs");
+        assert!((0.0..=100.0).contains(&res.fn_percent));
     }
 }

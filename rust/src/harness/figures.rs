@@ -83,6 +83,8 @@ fn base_cfg(query: &str, opts: &FigureOpts) -> ExperimentConfig {
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     }
 }
 

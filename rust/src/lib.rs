@@ -5,10 +5,11 @@
 //! three-layer rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the CEP coordinator: event streams, windows,
-//!   NFA pattern matching, the multi-query operator, the pSPICE load shedder
-//!   and overload detector (paper Algorithms 1 & 2), both baselines
-//!   (PM-BL, E-BL), dataset generators, a discrete-event load simulation and
-//!   the full experiment harness for the paper's Figures 5–9.
+//!   NFA pattern matching, the multi-query operator (single-threaded or
+//!   sharded across worker threads — [`runtime::sharded`]), the pSPICE load
+//!   shedder and overload detector (paper Algorithms 1 & 2, shard-aware),
+//!   both baselines (PM-BL, E-BL), dataset generators, a discrete-event load
+//!   simulation and the full experiment harness for the paper's Figures 5–9.
 //! * **Layer 2 (JAX, build-time)** — the model-builder compute graph
 //!   (Markov-chain completion probability + Markov-reward value iteration),
 //!   AOT-lowered to HLO text artifacts.
@@ -25,16 +26,16 @@
 //! | module | role |
 //! |---|---|
 //! | [`events`] | primitive events, schemas, stream abstraction |
-//! | [`datasets`] | synthetic NYSE / RTLS-soccer / Dublin-bus generators + CSV |
+//! | [`datasets`] | synthetic NYSE / RTLS-soccer / Dublin-bus generators + CSV + the mixed Q1–Q4 workload |
 //! | [`query`] | pattern AST, Tesla-like DSL parser, built-in Q1–Q4 |
 //! | [`nfa`] | pattern → state machine compilation, partial matches |
 //! | [`windows`] | count/time/slide window policies and manager |
 //! | [`operator`] | the CEP operator: match loop, observations, cost model |
-//! | [`shedding`] | pSPICE / PM-BL / E-BL shedders + overload detector |
+//! | [`shedding`] | pSPICE / PM-BL / E-BL shedders + overload detector (single-threaded and shard-aware) |
 //! | [`model`] | observation stats → Markov model → utility tables |
-//! | [`runtime`] | PJRT artifact loading/execution + rust fallback |
+//! | [`runtime`] | model engines (PJRT/AOT behind the `xla` feature, rust fallback) + the sharded operator runtime |
 //! | [`sim`] | virtual-time source/queue for deterministic overload runs |
-//! | [`metrics`] | latency, throughput, QoR (FN/FP) accounting |
+//! | [`metrics`] | latency, wall-clock throughput, QoR (FN/FP) accounting |
 //! | [`harness`] | experiment runner + Figure 5–9 drivers |
 //! | [`linalg`] | dense matrices, regression, Markov oracle |
 //! | [`config`] | TOML-subset experiment configuration |

@@ -3,6 +3,8 @@
 
 pub mod latency;
 pub mod qor;
+pub mod throughput;
 
 pub use latency::LatencyTracker;
 pub use qor::{CeKey, QorAccounting};
+pub use throughput::Throughput;

@@ -1,0 +1,79 @@
+//! Wall-clock throughput accounting: events per second of real time
+//! (as opposed to the virtual-time latency tracking in [`super::latency`]).
+//! Used by the sharded-runtime benches and the experiment harness to
+//! report how fast the measurement phase actually ran.
+
+/// Accumulated (events, seconds) with derived rates.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Throughput {
+    events: u64,
+    secs: f64,
+}
+
+impl Throughput {
+    /// Empty meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a measured interval.
+    pub fn record(&mut self, events: u64, secs: f64) {
+        debug_assert!(secs >= 0.0);
+        self.events += events;
+        self.secs += secs;
+    }
+
+    /// Total events recorded.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Total seconds recorded.
+    pub fn secs(&self) -> f64 {
+        self.secs
+    }
+
+    /// Events per wall-clock second (0 before anything is recorded).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.events as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Speedup of this meter over a baseline meter.
+    pub fn speedup_over(&self, base: &Throughput) -> f64 {
+        let b = base.events_per_sec();
+        if b > 0.0 {
+            self.events_per_sec() / b
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_accumulate() {
+        let mut t = Throughput::new();
+        assert_eq!(t.events_per_sec(), 0.0);
+        t.record(1_000, 0.5);
+        t.record(1_000, 0.5);
+        assert_eq!(t.events(), 2_000);
+        assert!((t.events_per_sec() - 2_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_is_relative() {
+        let mut a = Throughput::new();
+        a.record(4_000, 1.0);
+        let mut b = Throughput::new();
+        b.record(1_000, 1.0);
+        assert!((a.speedup_over(&b) - 4.0).abs() < 1e-9);
+        assert_eq!(a.speedup_over(&Throughput::new()), 0.0);
+    }
+}

@@ -59,6 +59,11 @@ pub struct PmRef {
     pub remaining: u64,
     /// unique PM id (used by [`Operator::drop_pms`])
     pub pm_id: u64,
+    /// opening sequence number of the PM's window (sharding-invariant
+    /// identity, used for deterministic victim tie-breaking)
+    pub open_seq: u64,
+    /// bound correlation keys of the PM (identity component)
+    pub key_bits: u64,
 }
 
 /// The CEP operator.
@@ -241,7 +246,13 @@ impl Operator {
                         && r != StepResult::NoMatch
                         && w.claimed.contains(&pm.key_bits())
                     {
-                        // revert: re-seed in place
+                        // revert: re-seed in place.  The check still
+                        // happened and its cost was charged, so the
+                        // observation must be recorded as a self-loop —
+                        // skipping it biased the transition matrix.
+                        if obs.enabled {
+                            obs.queries[qi].record(s_before, s_before, check_ns);
+                        }
                         let id = pm.id;
                         let opened = pm.opened_seq;
                         *pm = PartialMatch::seed(id, opened);
@@ -303,6 +314,13 @@ impl Operator {
             cost_ns: self.cost.base_event_ns,
             ..Default::default()
         };
+        // rate estimate for time-window R_w — identical to
+        // `process_event`: dropped events still arrive, so the stream
+        // rate the utility lookups depend on must not go stale
+        if e.ts_ms > self.prev_ts {
+            let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
+            self.events_per_ms = 0.999 * self.events_per_ms + 0.001 * inst;
+        }
         self.prev_ts = e.ts_ms;
         self.last_seq = e.seq;
         self.last_ts = e.ts_ms;
@@ -361,6 +379,8 @@ impl Operator {
                         state: pm.state,
                         remaining,
                         pm_id: pm.id,
+                        open_seq: w.open_seq,
+                        key_bits: pm.key_bits(),
                     });
                 }
             }
@@ -518,6 +538,71 @@ mod tests {
         let victim: HashSet<u64> = refs.iter().take(5).map(|r| r.pm_id).collect();
         let dropped = op.drop_pms(&victim);
         assert_eq!(dropped, victim.len().min(refs.len()));
+    }
+
+    #[test]
+    fn bookkeeping_keeps_rate_estimate_in_step_with_processing() {
+        // regression: dropped (bookkept) events must update the
+        // events_per_ms EWMA exactly like processed events, or time
+        // window R_w estimates go stale under E-BL shedding
+        let mut processed = Operator::new(q1(500).queries);
+        let mut bookkept = Operator::new(q1(500).queries);
+        let mut g = StockGen::with_seed(11);
+        for _ in 0..5_000 {
+            let e = g.next_event().unwrap();
+            processed.process_event(&e);
+            bookkept.process_bookkeeping(&e);
+        }
+        assert!(
+            (processed.events_per_ms() - bookkept.events_per_ms()).abs() < 1e-12,
+            "rate estimates diverged: {} vs {}",
+            processed.events_per_ms(),
+            bookkept.events_per_ms()
+        );
+        // and both moved off the initial estimate
+        assert!((processed.events_per_ms() - 1.0).abs() > 1e-6);
+    }
+
+    #[test]
+    fn reverted_multi_seed_checks_are_observed_as_self_loops() {
+        // regression: the claimed-key revert path charged the check cost
+        // but skipped obs.record, biasing the transition matrix
+        let mut op = Operator::new(q4(3, 1000, 500).queries);
+        let mk = |seq, busid: f64, stop: f64| {
+            Event::new(seq, seq, 0, &[busid, stop, 1.0, 5.0])
+        };
+        let mut checks = 0;
+        // bus 1 claims stop 5; afterwards the fresh seed of the same
+        // window keeps re-binding stop 5 and reverting
+        for (i, b) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            checks += op.process_event(&mk(i as u64, *b, 5.0)).checks;
+        }
+        assert_eq!(
+            op.obs.total(),
+            checks,
+            "every charged check must be observed"
+        );
+        let t = op.obs.queries[0].transition_matrix();
+        assert!(t.is_row_stochastic(1e-9));
+        // self-loops at the initial state exist (the reverted checks)
+        assert!(op.obs.queries[0].counts[0][0] > 0);
+    }
+
+    #[test]
+    fn pm_refs_carry_window_identity() {
+        let mut op = Operator::new(q4(6, 5000, 250).queries);
+        let mut g = BusGen::with_seed(3);
+        for _ in 0..10_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        assert!(!refs.is_empty());
+        for r in &refs {
+            // the window the PM lives in must be open, i.e. opened in
+            // the last ws events
+            assert!(op.last_seq < r.open_seq + 5000);
+        }
     }
 
     #[test]

@@ -25,196 +25,274 @@
 //! `seq (...; any N of <step> distinct <attr>)` gives the Q3 shape.
 //! Attribute names resolve against the stream's [`Schema`]; `key(i)`
 //! refers to PM correlation keys.
-
-use nom::{
-    branch::alt,
-    bytes::complete::{tag, take_while1},
-    character::complete::{char, multispace0},
-    combinator::{map, opt, recognize, value},
-    multi::{many0, separated_list1},
-    number::complete::double,
-    sequence::{delimited, pair, preceded, tuple},
-    IResult,
-};
+//!
+//! The parser is a hand-rolled recursive descent over a cursor — like
+//! the rest of the offline stand-ins (`toml_lite`, `cli`), it avoids
+//! pulling a parser-combinator crate into the vendored set.
 
 use crate::events::Schema;
 
 use super::ast::*;
 
-fn ident(i: &str) -> IResult<&str, &str> {
-    recognize(pair(
-        take_while1(|c: char| c.is_ascii_alphabetic() || c == '_'),
-        many0(take_while1(|c: char| {
-            c.is_ascii_alphanumeric() || c == '_' || c == '-'
-        })),
-    ))(i)
+/// Cursor over the query text.
+struct Cursor<'a> {
+    src: &'a str,
+    pos: usize,
 }
 
-fn ws<'a, F, O>(inner: F) -> impl FnMut(&'a str) -> IResult<&'a str, O>
-where
-    F: FnMut(&'a str) -> IResult<&'a str, O>,
-{
-    delimited(multispace0, inner, multispace0)
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Self {
+        Cursor { src, pos: 0 }
+    }
+
+    fn rest(&self) -> &'a str {
+        &self.src[self.pos..]
+    }
+
+    fn skip_ws(&mut self) {
+        let rest = self.rest();
+        let trimmed = rest.trim_start();
+        self.pos += rest.len() - trimmed.len();
+    }
+
+    fn err(&self, what: &str) -> anyhow::Error {
+        let around: String = self.rest().chars().take(24).collect();
+        anyhow::anyhow!("expected {what} at ...{around:?}")
+    }
+
+    /// Eat a symbol token (no word-boundary requirement).
+    fn eat_sym(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.rest().starts_with(tok) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_sym(&mut self, tok: &str) -> crate::Result<()> {
+        if self.eat_sym(tok) {
+            Ok(())
+        } else {
+            Err(self.err(tok))
+        }
+    }
+
+    /// Eat an alphabetic keyword (must end at a word boundary).
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        self.skip_ws();
+        let rest = self.rest();
+        if !rest.starts_with(kw) {
+            return false;
+        }
+        let boundary = match rest[kw.len()..].chars().next() {
+            Some(c) => !(c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            None => true,
+        };
+        if boundary {
+            self.pos += kw.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> crate::Result<()> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.err(kw))
+        }
+    }
+
+    /// `[A-Za-z_][A-Za-z0-9_-]*`
+    fn ident(&mut self) -> crate::Result<&'a str> {
+        self.skip_ws();
+        let rest = self.rest();
+        let mut chars = rest.char_indices();
+        match chars.next() {
+            Some((_, c)) if c.is_ascii_alphabetic() || c == '_' => {}
+            _ => return Err(self.err("identifier")),
+        }
+        let mut end = rest.len();
+        for (i, c) in chars {
+            if !(c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                end = i;
+                break;
+            }
+        }
+        self.pos += end;
+        Ok(&rest[..end])
+    }
+
+    /// A float literal: `[+-]? digits [. digits] [eE [+-] digits]`.
+    fn number(&mut self) -> crate::Result<f64> {
+        self.skip_ws();
+        let rest = self.rest();
+        let bytes = rest.as_bytes();
+        let mut i = 0;
+        if i < bytes.len() && (bytes[i] == b'+' || bytes[i] == b'-') {
+            i += 1;
+        }
+        let int_start = i;
+        while i < bytes.len() && bytes[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i < bytes.len() && bytes[i] == b'.' {
+            i += 1;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+        if i == int_start {
+            return Err(self.err("number"));
+        }
+        if i < bytes.len() && (bytes[i] == b'e' || bytes[i] == b'E') {
+            let mut j = i + 1;
+            if j < bytes.len() && (bytes[j] == b'+' || bytes[j] == b'-') {
+                j += 1;
+            }
+            let exp_start = j;
+            while j < bytes.len() && bytes[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j > exp_start {
+                i = j;
+            }
+        }
+        let text = &rest[..i];
+        let v = text
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("bad number {text:?}: {e}"))?;
+        self.pos += i;
+        Ok(v)
+    }
 }
 
-fn cmp_op(i: &str) -> IResult<&str, CmpOp> {
-    alt((
-        value(CmpOp::Eq, tag("==")),
-        value(CmpOp::Ne, tag("!=")),
-        value(CmpOp::Le, tag("<=")),
-        value(CmpOp::Ge, tag(">=")),
-        value(CmpOp::Lt, tag("<")),
-        value(CmpOp::Gt, tag(">")),
-    ))(i)
+fn cmp_op(c: &mut Cursor) -> crate::Result<CmpOp> {
+    for (tok, op) in [
+        ("==", CmpOp::Eq),
+        ("!=", CmpOp::Ne),
+        ("<=", CmpOp::Le),
+        (">=", CmpOp::Ge),
+        ("<", CmpOp::Lt),
+        (">", CmpOp::Gt),
+    ] {
+        if c.eat_sym(tok) {
+            return Ok(op);
+        }
+    }
+    Err(c.err("comparison operator"))
 }
 
-/// right-hand side of a comparison: number or `key(i)`
-enum Rhs {
-    Const(f64),
-    Key(usize),
-}
-
-fn rhs(i: &str) -> IResult<&str, Rhs> {
-    alt((
-        map(
-            preceded(tag("key"), delimited(char('('), ws(double), char(')'))),
-            |k| Rhs::Key(k as usize),
-        ),
-        map(double, Rhs::Const),
-    ))(i)
+/// `key ( <i> )` — returns the key index if present.
+fn key_ref(c: &mut Cursor) -> crate::Result<Option<usize>> {
+    if !c.eat_kw("key") {
+        return Ok(None);
+    }
+    c.expect_sym("(")?;
+    let k = c.number()?;
+    c.expect_sym(")")?;
+    Ok(Some(k as usize))
 }
 
 /// one predicate: `attr op rhs` or `attr in [v, v, ...]`
-fn predicate<'a>(
-    i: &'a str,
-    schema: &Schema,
-    etype: u16,
-) -> IResult<&'a str, Predicate> {
-    let (i, attr) = ws(ident)(i)?;
-    let slot = match schema.attr_slot(etype, attr) {
-        Some(s) => s,
-        None => {
-            return Err(nom::Err::Failure(nom::error::Error::new(
-                i,
-                nom::error::ErrorKind::Verify,
-            )))
+fn predicate(c: &mut Cursor, schema: &Schema, etype: u16) -> crate::Result<Predicate> {
+    let attr = c.ident()?;
+    let slot = schema
+        .attr_slot(etype, attr)
+        .ok_or_else(|| anyhow::anyhow!("unknown attribute {attr:?} for this event type"))?;
+    if c.eat_kw("in") {
+        c.expect_sym("[")?;
+        let mut values = vec![c.number()?];
+        while c.eat_sym(",") {
+            values.push(c.number()?);
         }
-    };
-    if let (i2, Some(_)) = opt(ws(tag("in")))(i)? {
-        let (i3, values) = delimited(
-            ws(char('[')),
-            separated_list1(ws(char(',')), double),
-            ws(char(']')),
-        )(i2)?;
-        return Ok((i3, Predicate::AttrIn { slot, values }));
+        c.expect_sym("]")?;
+        return Ok(Predicate::AttrIn { slot, values });
     }
-    let (i, op) = ws(cmp_op)(i)?;
-    let (i, r) = ws(|x| rhs(x))(i)?;
-    Ok((
-        i,
-        match r {
-            Rhs::Const(value) => Predicate::AttrCmp { slot, op, value },
-            Rhs::Key(key) => Predicate::KeyCmp { slot, op, key },
-        },
-    ))
+    let op = cmp_op(c)?;
+    if let Some(key) = key_ref(c)? {
+        Ok(Predicate::KeyCmp { slot, op, key })
+    } else {
+        let value = c.number()?;
+        Ok(Predicate::AttrCmp { slot, op, value })
+    }
 }
 
 /// a step: `etype [where p && p && ...] [bind key(i) = attr]`
-fn step<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, StepSpec> {
-    let (i, tname) = ws(ident)(i)?;
-    let etype = match schema.type_id(tname) {
-        Some(t) => t,
-        None => {
-            return Err(nom::Err::Failure(nom::error::Error::new(
-                i,
-                nom::error::ErrorKind::Verify,
-            )))
+fn step(c: &mut Cursor, schema: &Schema) -> crate::Result<StepSpec> {
+    let tname = c.ident()?;
+    let etype = schema
+        .type_id(tname)
+        .ok_or_else(|| anyhow::anyhow!("unknown event type {tname:?}"))?;
+    let mut preds = Vec::new();
+    if c.eat_kw("where") {
+        preds.push(predicate(c, schema, etype)?);
+        while c.eat_sym("&&") {
+            preds.push(predicate(c, schema, etype)?);
         }
+    }
+    let bind_key = if c.eat_kw("bind") {
+        let key = key_ref(c)?
+            .ok_or_else(|| c.err("key(i) after bind"))?;
+        c.expect_sym("=")?;
+        let attr = c.ident()?;
+        let slot = schema
+            .attr_slot(etype, attr)
+            .ok_or_else(|| anyhow::anyhow!("unknown bind attribute {attr:?}"))?;
+        Some((key, slot))
+    } else {
+        None
     };
-    let (i, preds) = opt(preceded(
-        ws(tag("where")),
-        separated_list1(ws(tag("&&")), |x| predicate(x, schema, etype)),
-    ))(i)?;
-    let (i, bind) = opt(preceded(
-        ws(tag("bind")),
-        tuple((
-            preceded(tag("key"), delimited(char('('), ws(double), char(')'))),
-            preceded(ws(char('=')), ws(ident)),
-        )),
-    ))(i)?;
-    let bind_key = match bind {
-        None => None,
-        Some((k, attr)) => {
-            let slot = schema.attr_slot(etype, attr).ok_or_else(|| {
-                nom::Err::Failure(nom::error::Error::new(
-                    i,
-                    nom::error::ErrorKind::Verify,
-                ))
-            })?;
-            Some((k as usize, slot))
-        }
-    };
-    Ok((
-        i,
-        StepSpec {
-            etype,
-            preds: preds.unwrap_or_default(),
-            bind_key,
-        },
-    ))
+    Ok(StepSpec {
+        etype,
+        preds,
+        bind_key,
+    })
 }
 
-/// `any N of <step> distinct <attr>`
-fn any_clause<'a>(
-    i: &'a str,
-    schema: &Schema,
-) -> IResult<&'a str, (usize, StepSpec, usize)> {
-    let (i, _) = ws(tag("any"))(i)?;
-    let (i, n) = ws(double)(i)?;
-    let (i, _) = ws(tag("of"))(i)?;
-    let (i, spec) = step(i, schema)?;
-    let (i, _) = ws(tag("distinct"))(i)?;
-    let (i, attr) = ws(ident)(i)?;
-    let slot = schema.attr_slot(spec.etype, attr).ok_or_else(|| {
-        nom::Err::Failure(nom::error::Error::new(i, nom::error::ErrorKind::Verify))
-    })?;
-    Ok((i, (n as usize, spec, slot)))
+/// `any N of <step> distinct <attr>` (the `any` keyword is already consumed)
+fn any_clause(c: &mut Cursor, schema: &Schema) -> crate::Result<(usize, StepSpec, usize)> {
+    let n = c.number()?;
+    c.expect_kw("of")?;
+    let spec = step(c, schema)?;
+    c.expect_kw("distinct")?;
+    let attr = c.ident()?;
+    let slot = schema
+        .attr_slot(spec.etype, attr)
+        .ok_or_else(|| anyhow::anyhow!("unknown distinct attribute {attr:?}"))?;
+    Ok((n as usize, spec, slot))
 }
 
-fn pattern<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, Pattern> {
+fn pattern(c: &mut Cursor, schema: &Schema) -> crate::Result<Pattern> {
     // any-only pattern
-    if let Ok((i2, (n, spec, slot))) = any_clause(i, schema) {
-        return Ok((
-            i2,
-            Pattern::Any {
-                n,
-                spec,
-                distinct_slot: slot,
-            },
-        ));
+    if c.eat_kw("any") {
+        let (n, spec, distinct_slot) = any_clause(c, schema)?;
+        return Ok(Pattern::Any {
+            n,
+            spec,
+            distinct_slot,
+        });
     }
     // seq ( step ; step ; ... [; any n of step distinct attr] )
-    let (i, _) = ws(tag("seq"))(i)?;
-    let (mut i, _) = ws(char('('))(i)?;
+    c.expect_kw("seq")?;
+    c.expect_sym("(")?;
     let mut head = Vec::new();
     let mut any_tail = None;
     loop {
-        if let Ok((i2, a)) = any_clause(i, schema) {
-            any_tail = Some(a);
-            i = i2;
+        if c.eat_kw("any") {
+            any_tail = Some(any_clause(c, schema)?);
         } else {
-            let (i2, s) = step(i, schema)?;
-            head.push(s);
-            i = i2;
+            head.push(step(c, schema)?);
         }
-        let (i2, sep) = opt(ws(char(';')))(i)?;
-        i = i2;
-        if sep.is_none() {
+        if !c.eat_sym(";") {
             break;
         }
     }
-    let (i, _) = ws(char(')'))(i)?;
-    let p = match any_tail {
+    c.expect_sym(")")?;
+    Ok(match any_tail {
         Some((n, spec, distinct_slot)) => Pattern::SeqAny {
             head,
             n,
@@ -222,78 +300,75 @@ fn pattern<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, Pattern> {
             distinct_slot,
         },
         None => Pattern::Seq(head),
-    };
-    Ok((i, p))
+    })
 }
 
-fn window_spec(i: &str) -> IResult<&str, WindowSpec> {
-    let (i, _) = ws(tag("window"))(i)?;
-    alt((
-        map(preceded(ws(tag("count")), ws(double)), |n| {
-            WindowSpec::Count(n as u64)
-        }),
-        map(preceded(ws(tag("time_ms")), ws(double)), |n| {
-            WindowSpec::TimeMs(n as u64)
-        }),
-    ))(i)
-}
-
-fn open_policy<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, OpenPolicy> {
-    let (i, _) = ws(tag("open"))(i)?;
-    if let Ok((i2, k)) = preceded(ws(tag("every")), ws(double))(i) {
-        return Ok((i2, OpenPolicy::EveryK(k as u64)));
+fn window_spec(c: &mut Cursor) -> crate::Result<WindowSpec> {
+    c.expect_kw("window")?;
+    if c.eat_kw("count") {
+        Ok(WindowSpec::Count(c.number()? as u64))
+    } else if c.eat_kw("time_ms") {
+        Ok(WindowSpec::TimeMs(c.number()? as u64))
+    } else {
+        Err(c.err("count or time_ms"))
     }
-    let (i, _) = ws(tag("on"))(i)?;
-    let (i, s) = step(i, schema)?;
-    Ok((i, OpenPolicy::OnMatch(s)))
 }
 
-fn selection(i: &str) -> IResult<&str, Selection> {
-    preceded(
-        ws(tag("select")),
-        alt((
-            value(Selection::SkipTillNext, ws(tag("skip-till-next"))),
-            value(Selection::SkipTillAny, ws(tag("skip-till-any"))),
-        )),
-    )(i)
+fn open_policy(c: &mut Cursor, schema: &Schema) -> crate::Result<OpenPolicy> {
+    c.expect_kw("open")?;
+    if c.eat_kw("every") {
+        return Ok(OpenPolicy::EveryK(c.number()? as u64));
+    }
+    c.expect_kw("on")?;
+    Ok(OpenPolicy::OnMatch(step(c, schema)?))
+}
+
+fn selection(c: &mut Cursor) -> crate::Result<Selection> {
+    if c.eat_kw("skip-till-next") {
+        Ok(Selection::SkipTillNext)
+    } else if c.eat_kw("skip-till-any") {
+        Ok(Selection::SkipTillAny)
+    } else {
+        Err(c.err("skip-till-next or skip-till-any"))
+    }
+}
+
+fn query_body(c: &mut Cursor, schema: &Schema) -> crate::Result<Query> {
+    c.expect_kw("query")?;
+    let name = c.ident()?;
+    let weight = if c.eat_kw("weight") { c.number()? } else { 1.0 };
+    c.expect_sym("{")?;
+    let window = window_spec(c)?;
+    let open = open_policy(c, schema)?;
+    let sel = if c.eat_kw("select") {
+        selection(c)?
+    } else {
+        Selection::SkipTillNext
+    };
+    let pat = pattern(c, schema)?;
+    c.expect_sym("}")?;
+    Ok(Query {
+        name: name.to_string(),
+        weight,
+        pattern: pat,
+        window,
+        open,
+        selection: sel,
+    })
 }
 
 /// Parse one `query <name> weight <w> { ... }` definition against a
 /// schema.  Returns the resolved [`Query`].
 pub fn parse_query(input: &str, schema: &Schema) -> crate::Result<Query> {
-    fn parse<'a>(i: &'a str, schema: &Schema) -> IResult<&'a str, Query> {
-        let i = i.trim();
-        let (i, _) = ws(tag("query"))(i)?;
-        let (i, name) = ws(ident)(i)?;
-        let (i, weight) = opt(preceded(ws(tag("weight")), ws(double)))(i)?;
-        let (i, _) = ws(char('{'))(i)?;
-        let (i, window) = window_spec(i)?;
-        let (i, open) = open_policy(i, schema)?;
-        let (i, sel) = opt(|x| selection(x))(i)?;
-        let (i, pat) = pattern(i, schema)?;
-        let (i, _) = ws(char('}'))(i)?;
-        Ok((
-            i,
-            Query {
-                name: name.to_string(),
-                weight: weight.unwrap_or(1.0),
-                pattern: pat,
-                window,
-                open,
-                selection: sel.unwrap_or(Selection::SkipTillNext),
-            },
-        ))
-    }
-    match parse(input, schema) {
-        Ok((rest, q)) => {
-            anyhow::ensure!(
-                rest.trim().is_empty(),
-                "trailing input after query: {rest:?}"
-            );
-            Ok(q)
-        }
-        Err(e) => anyhow::bail!("query parse error: {e}"),
-    }
+    let mut c = Cursor::new(input);
+    let q = query_body(&mut c, schema)
+        .map_err(|e| anyhow::anyhow!("query parse error: {e:#}"))?;
+    anyhow::ensure!(
+        c.rest().trim().is_empty(),
+        "trailing input after query: {:?}",
+        c.rest().trim()
+    );
+    Ok(q)
 }
 
 #[cfg(test)]
@@ -393,5 +468,16 @@ mod tests {
             &schema,
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn selection_defaults_to_skip_till_next() {
+        let schema = schema_for("q1");
+        let q = parse_query(
+            "query s { window count 10 open every 5 seq ( quote ) }",
+            &schema,
+        )
+        .unwrap();
+        assert_eq!(q.selection, Selection::SkipTillNext);
     }
 }

@@ -22,7 +22,9 @@ pub trait ModelEngine {
 }
 
 /// Pick the best available engine: the PJRT/AOT path when artifacts are
-/// present and usable, otherwise the pure-rust fallback.
+/// present and usable (and the crate is built with the `xla` feature),
+/// otherwise the pure-rust fallback.
+#[cfg(feature = "xla")]
 pub fn auto_engine() -> Box<dyn ModelEngine> {
     let dir = super::ArtifactManifest::default_dir();
     match super::PjrtEngine::load(&dir) {
@@ -35,6 +37,12 @@ pub fn auto_engine() -> Box<dyn ModelEngine> {
             Box::new(super::FallbackEngine)
         }
     }
+}
+
+/// Without the `xla` feature the pure-rust fallback is the only engine.
+#[cfg(not(feature = "xla"))]
+pub fn auto_engine() -> Box<dyn ModelEngine> {
+    Box::new(super::FallbackEngine)
 }
 
 #[cfg(test)]

@@ -1,21 +1,30 @@
-//! Model-engine runtime: executes the AOT-compiled L2/L1 utility
-//! computation from the rust request path.
+//! Runtime: the model-engine execution path for the L2/L1 utility
+//! computation, plus the sharded multi-worker operator runtime.
 //!
 //! * [`artifacts`] — manifest parsing, shape-variant selection, and the
 //!   state-permuting pad/unpad that makes any `(B, m)` problem fit a
 //!   compiled `(B*, M, N)` artifact exactly (absorbing-identity padding),
-//! * [`pjrt`] — the PJRT CPU client wrapper: load HLO text once, compile
-//!   once per variant, execute per model build,
+//! * `pjrt` — the PJRT CPU client wrapper (load HLO text once, compile
+//!   once per variant, execute per model build); needs the `xla`
+//!   bindings, so it only compiles with the `xla` cargo feature,
 //! * [`fallback`] — the pure-rust twin of the L2 graph (tests,
 //!   differential validation, artifact-less operation),
-//! * [`engine`] — the [`engine::ModelEngine`] trait + auto-selection.
+//! * [`engine`] — the [`engine::ModelEngine`] trait + auto-selection,
+//! * [`sharded`] — the sharded operator runtime: queries partitioned
+//!   across worker threads, batched event dispatch over bounded
+//!   channels, deterministic completion merging, and globally-ordered
+//!   PM shedding (paper Alg. 2 semantics preserved across shards).
 
 pub mod artifacts;
 pub mod engine;
 pub mod fallback;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+pub mod sharded;
 
 pub use artifacts::{ArtifactManifest, Variant};
 pub use engine::{auto_engine, BatchTables, ModelEngine};
 pub use fallback::FallbackEngine;
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtEngine;
+pub use sharded::{ShardPlan, ShardedOperator};

@@ -1,0 +1,161 @@
+//! Deterministic merging: complex-event ordering across shards and the
+//! k-way merge that picks the globally lowest-utility shed victims from
+//! per-shard candidate lists (paper Alg. 2's "drop the ρ lowest-utility
+//! PMs", preserved across shards).
+
+use std::cmp::Ordering;
+
+use crate::operator::ComplexEvent;
+
+use super::worker::Candidate;
+
+/// Total order over shed candidates: utility first (NaN-safe total
+/// order, +NaN sorts above all numbers so poisoned PMs survive), then
+/// the sharding-invariant PM identity so 1-shard and N-shard runs pick
+/// identical victims even under utility ties.
+pub(super) fn cand_cmp(a: &Candidate, b: &Candidate) -> Ordering {
+    a.utility
+        .total_cmp(&b.utility)
+        .then_with(|| a.query.cmp(&b.query))
+        .then_with(|| a.open_seq.cmp(&b.open_seq))
+        .then_with(|| a.key_bits.cmp(&b.key_bits))
+        .then_with(|| a.state.cmp(&b.state))
+        .then_with(|| a.pm_id.cmp(&b.pm_id))
+}
+
+/// K-way merge over per-shard candidate lists (each sorted ascending by
+/// [`cand_cmp`]): selects the `rho` globally lowest candidates and
+/// returns, per shard, the (shard-local) PM ids to drop.
+pub(super) fn k_way_select(lists: &[Vec<Candidate>], rho: usize) -> Vec<Vec<u64>> {
+    let k = lists.len();
+    let mut cursor = vec![0usize; k];
+    let mut out = vec![Vec::new(); k];
+    let mut taken = 0;
+    while taken < rho {
+        let mut best: Option<usize> = None;
+        for s in 0..k {
+            if cursor[s] >= lists[s].len() {
+                continue;
+            }
+            best = match best {
+                None => Some(s),
+                Some(b) => {
+                    if cand_cmp(&lists[s][cursor[s]], &lists[b][cursor[b]])
+                        == Ordering::Less
+                    {
+                        Some(s)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        let Some(b) = best else { break };
+        out[b].push(lists[b][cursor[b]].pm_id);
+        cursor[b] += 1;
+        taken += 1;
+    }
+    out
+}
+
+/// Sort completions into the canonical deterministic order.  The key
+/// `(completed_seq, query, window_open_seq, key_bits)` reproduces the
+/// single-threaded operator's emission order: event order first, then
+/// query order, then window order within the event.
+pub fn sort_completions(ces: &mut [ComplexEvent]) {
+    ces.sort_unstable_by_key(|ce| {
+        (ce.completed_seq, ce.query, ce.window_open_seq, ce.key_bits)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(utility: f64, pm_id: u64, query: usize) -> Candidate {
+        Candidate {
+            utility,
+            pm_id,
+            query,
+            open_seq: 0,
+            key_bits: 0,
+            state: 0,
+        }
+    }
+
+    #[test]
+    fn k_way_select_picks_global_lowest() {
+        // shard 0: utilities 1, 5, 9 — shard 1: 2, 3, 4
+        let lists = vec![
+            vec![cand(1.0, 10, 0), cand(5.0, 11, 0), cand(9.0, 12, 0)],
+            vec![cand(2.0, 20, 1), cand(3.0, 21, 1), cand(4.0, 22, 1)],
+        ];
+        let v = k_way_select(&lists, 4);
+        assert_eq!(v[0], vec![10]);
+        assert_eq!(v[1], vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn k_way_select_handles_short_lists_and_overdraw() {
+        let lists = vec![vec![cand(1.0, 1, 0)], vec![]];
+        let v = k_way_select(&lists, 10);
+        assert_eq!(v[0], vec![1]);
+        assert!(v[1].is_empty());
+    }
+
+    #[test]
+    fn ties_break_on_identity_not_arrival() {
+        // equal utilities: the lower (query, open_seq, ...) identity wins
+        let a = Candidate {
+            utility: 1.0,
+            pm_id: 99,
+            query: 0,
+            open_seq: 5,
+            key_bits: 0,
+            state: 1,
+        };
+        let b = Candidate {
+            utility: 1.0,
+            pm_id: 1,
+            query: 0,
+            open_seq: 9,
+            key_bits: 0,
+            state: 1,
+        };
+        assert_eq!(cand_cmp(&a, &b), Ordering::Less);
+        // NaN sorts above every finite utility
+        let n = Candidate {
+            utility: f64::NAN,
+            ..a
+        };
+        assert_eq!(cand_cmp(&a, &n), Ordering::Less);
+    }
+
+    #[test]
+    fn sort_completions_is_canonical() {
+        let mut ces = vec![
+            ComplexEvent {
+                query: 1,
+                window_open_seq: 0,
+                key_bits: 0,
+                completed_seq: 7,
+            },
+            ComplexEvent {
+                query: 0,
+                window_open_seq: 3,
+                key_bits: 1,
+                completed_seq: 7,
+            },
+            ComplexEvent {
+                query: 0,
+                window_open_seq: 2,
+                key_bits: 0,
+                completed_seq: 5,
+            },
+        ];
+        sort_completions(&mut ces);
+        assert_eq!(ces[0].completed_seq, 5);
+        assert_eq!(ces[1].query, 0);
+        assert_eq!(ces[2].query, 1);
+    }
+}

@@ -1,0 +1,575 @@
+//! The sharded operator runtime: partitions the compiled query set
+//! across N worker shards, dispatches event batches to every shard over
+//! bounded channels, and merges completions deterministically so a
+//! sharded run emits the *identical* complex-event set as the
+//! single-threaded [`Operator`](crate::operator::Operator).
+//!
+//! ## Why sharding by query is exact
+//!
+//! The multi-query operator treats queries independently: each query
+//! owns its windows, PMs, observations and cost accounting, and every
+//! query sees every event.  Partitioning queries across shards therefore
+//! changes *where* each query's state lives, never *what* it computes —
+//! per-query state evolution is bit-identical to the unsharded run, and
+//! completions only need a deterministic merge by
+//! `(completed_seq, query, window_open_seq, key_bits)`.
+//!
+//! ## Shard-aware shedding (paper Alg. 2 across shards)
+//!
+//! The overload detector stays global: it sees the *total* `n_pm` and
+//! the batch latency, and computes one global drop amount ρ.  Victim
+//! selection preserves "drop the ρ globally lowest-utility PMs": every
+//! shard returns its ρ lowest-utility candidates (sorted, with a
+//! sharding-invariant tie-break), the coordinator k-way merges them,
+//! and each shard then drops exactly the ids chosen from its list.
+//! A 1-shard and an N-shard run with the same drop decisions select the
+//! same victims.
+
+pub(crate) mod merge;
+mod worker;
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::events::Event;
+use crate::model::UtilityTable;
+use crate::operator::{ComplexEvent, CostModel};
+use crate::query::Query;
+use crate::util::Rng;
+
+pub use merge::sort_completions;
+
+use worker::{Request, Response};
+
+/// How queries are assigned to shards.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// `assignments[s]` = global query indices owned by shard `s`
+    pub assignments: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Round-robin assignment of `n_queries` queries over at most
+    /// `n_shards` shards (never more shards than queries).
+    pub fn round_robin(n_queries: usize, n_shards: usize) -> Self {
+        let n = n_shards.max(1).min(n_queries.max(1));
+        let mut assignments = vec![Vec::new(); n];
+        for q in 0..n_queries {
+            assignments[q % n].push(q);
+        }
+        ShardPlan { assignments }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// `(shard, local index)` of a global query index.
+    pub fn locate(&self, query: usize) -> Option<(usize, usize)> {
+        for (s, qs) in self.assignments.iter().enumerate() {
+            if let Some(l) = qs.iter().position(|&g| g == query) {
+                return Some((s, l));
+            }
+        }
+        None
+    }
+}
+
+/// Merged outcome of one dispatched batch.
+#[derive(Debug, Default, Clone)]
+pub struct ShardedOutcome {
+    /// all shards' completions in canonical deterministic order
+    pub completions: Vec<ComplexEvent>,
+    /// slowest shard's virtual cost (the batch makespan under parallel
+    /// execution)
+    pub cost_ns_max: f64,
+    /// summed virtual cost over all shards (total work)
+    pub cost_ns_total: f64,
+    /// (PM, event) checks over all shards
+    pub checks: u64,
+    /// windows opened over all shards
+    pub opened: usize,
+    /// windows closed over all shards
+    pub closed: usize,
+}
+
+/// Outcome of one global shed pass.
+#[derive(Debug, Default, Clone)]
+pub struct ShedOutcome {
+    /// PMs scanned globally (the live population before the drop)
+    pub scanned: usize,
+    /// PMs dropped globally
+    pub dropped: usize,
+    /// per shard: (scanned, dropped)
+    pub per_shard: Vec<(usize, usize)>,
+}
+
+/// The sharded operator façade.  Owns one worker thread per shard; all
+/// methods are synchronous (requests are answered before they return),
+/// which keeps results deterministic and the channel protocol trivially
+/// deadlock-free.
+pub struct ShardedOperator {
+    plan: ShardPlan,
+    txs: Vec<SyncSender<Request>>,
+    rxs: Vec<Receiver<Response>>,
+    handles: Vec<JoinHandle<()>>,
+    n_queries: usize,
+    /// live PMs per shard (updated after every batch / drop)
+    pms: Vec<usize>,
+    /// PMs ever created per shard
+    created: Vec<u64>,
+    /// complex events ever emitted per shard
+    completed: Vec<u64>,
+    /// open windows across all shards (for E-BL's per-window drop cost)
+    open_windows: usize,
+    /// cost model used for coordinator-side shed-cost accounting (the
+    /// per-event processing cost is accounted inside each worker)
+    pub cost: CostModel,
+}
+
+impl ShardedOperator {
+    /// Spawn a sharded operator over `n_shards` worker threads.
+    pub fn new(queries: Vec<Query>, n_shards: usize) -> Self {
+        assert!(!queries.is_empty(), "sharded operator needs queries");
+        let n_queries = queries.len();
+        let plan = ShardPlan::round_robin(n_queries, n_shards);
+        let mut txs = Vec::with_capacity(plan.n_shards());
+        let mut rxs = Vec::with_capacity(plan.n_shards());
+        let mut handles = Vec::with_capacity(plan.n_shards());
+        for (s, assignment) in plan.assignments.iter().enumerate() {
+            let (req_tx, req_rx) = mpsc::sync_channel::<Request>(4);
+            let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+            let local: Vec<Query> =
+                assignment.iter().map(|&g| queries[g].clone()).collect();
+            let l2g = assignment.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pspice-shard-{s}"))
+                .spawn(move || worker::run(req_rx, resp_tx, local, l2g))
+                .expect("spawn shard worker");
+            txs.push(req_tx);
+            rxs.push(resp_rx);
+            handles.push(handle);
+        }
+        let n = plan.n_shards();
+        ShardedOperator {
+            plan,
+            txs,
+            rxs,
+            handles,
+            n_queries,
+            pms: vec![0; n],
+            created: vec![0; n],
+            completed: vec![0; n],
+            open_windows: 0,
+            cost: CostModel::with_queries(n_queries),
+        }
+    }
+
+    /// Number of worker shards.
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards()
+    }
+
+    /// Number of queries across all shards.
+    pub fn n_queries(&self) -> usize {
+        self.n_queries
+    }
+
+    /// The query→shard assignment.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Global live PM count (the paper's `n_pm`).
+    pub fn pm_count(&self) -> usize {
+        self.pms.iter().sum()
+    }
+
+    /// Live PM count per shard.
+    pub fn pm_counts(&self) -> &[usize] {
+        &self.pms
+    }
+
+    /// Global completed-over-created PM ratio (the paper's match
+    /// probability).
+    pub fn match_probability(&self) -> f64 {
+        let created: u64 = self.created.iter().sum();
+        if created == 0 {
+            0.0
+        } else {
+            self.completed.iter().sum::<u64>() as f64 / created as f64
+        }
+    }
+
+    fn recv(&self, shard: usize) -> Response {
+        self.rxs[shard]
+            .recv()
+            .expect("shard worker died (panicked?)")
+    }
+
+    fn send(&self, shard: usize, req: Request) {
+        self.txs[shard].send(req).expect("shard worker gone");
+    }
+
+    fn ack_all(&self) {
+        for s in 0..self.n_shards() {
+            match self.recv(s) {
+                Response::Ack => {}
+                _ => unreachable!("protocol violation: expected ack"),
+            }
+        }
+    }
+
+    fn dispatch(
+        &mut self,
+        events: &[Event],
+        mask: Option<Arc<Vec<bool>>>,
+    ) -> ShardedOutcome {
+        let mut out = ShardedOutcome::default();
+        if events.is_empty() {
+            return out;
+        }
+        let batch = Arc::new(events.to_vec());
+        for s in 0..self.n_shards() {
+            self.send(
+                s,
+                Request::Batch {
+                    events: Arc::clone(&batch),
+                    skip_match: mask.clone(),
+                },
+            );
+        }
+        for s in 0..self.n_shards() {
+            match self.recv(s) {
+                Response::Batch(b) => {
+                    out.cost_ns_max = out.cost_ns_max.max(b.cost_ns);
+                    out.cost_ns_total += b.cost_ns;
+                    out.checks += b.checks;
+                    out.opened += b.opened;
+                    out.closed += b.closed;
+                    self.pms[s] = b.n_pms;
+                    self.created[s] = b.pms_created;
+                    self.completed[s] = b.completions_total;
+                    out.completions.extend(b.completions);
+                }
+                _ => unreachable!("protocol violation: expected batch outcome"),
+            }
+        }
+        merge::sort_completions(&mut out.completions);
+        self.open_windows =
+            (self.open_windows + out.opened).saturating_sub(out.closed);
+        out
+    }
+
+    /// Open windows across all shards.
+    pub fn open_windows(&self) -> usize {
+        self.open_windows
+    }
+
+    /// Process a batch of events on every shard, merging completions
+    /// deterministically.
+    pub fn process_batch(&mut self, events: &[Event]) -> ShardedOutcome {
+        self.dispatch(events, None)
+    }
+
+    /// Like [`Self::process_batch`], but events whose `dropped` bit is
+    /// set get window bookkeeping only (black-box event-shedding
+    /// semantics: shed events still exist in the stream).
+    pub fn process_batch_masked(
+        &mut self,
+        events: &[Event],
+        dropped: &[bool],
+    ) -> ShardedOutcome {
+        assert_eq!(events.len(), dropped.len());
+        self.dispatch(events, Some(Arc::new(dropped.to_vec())))
+    }
+
+    /// Install utility tables (global query order); each shard receives
+    /// its own queries' tables.
+    pub fn set_tables(&mut self, tables: &[UtilityTable]) {
+        assert_eq!(tables.len(), self.n_queries, "one table per query");
+        for (s, assignment) in self.plan.assignments.iter().enumerate() {
+            let local: Vec<UtilityTable> =
+                assignment.iter().map(|&g| tables[g].clone()).collect();
+            self.txs[s].send(Request::SetTables(local)).expect("shard worker gone");
+        }
+        self.ack_all();
+    }
+
+    /// Apply per-query check-cost factors (global query order).
+    pub fn set_cost_factors(&mut self, factors: &[f64]) {
+        assert_eq!(factors.len(), self.n_queries, "one factor per query");
+        self.cost.check_factor = factors.to_vec();
+        for (s, assignment) in self.plan.assignments.iter().enumerate() {
+            let local: Vec<f64> = assignment.iter().map(|&g| factors[g]).collect();
+            self.txs[s].send(Request::SetCostFactors(local)).expect("shard worker gone");
+        }
+        self.ack_all();
+    }
+
+    /// Toggle observation capture on every shard.
+    pub fn set_obs_enabled(&mut self, enabled: bool) {
+        for s in 0..self.n_shards() {
+            self.send(s, Request::SetObsEnabled(enabled));
+        }
+        self.ack_all();
+    }
+
+    /// Drop the ρ globally lowest-utility PMs (paper Alg. 2, shard
+    /// aware): per-shard candidate lists are k-way merged so exactly the
+    /// globally lowest ρ are dropped, with deterministic tie-breaking.
+    pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
+        let scanned = self.pm_count();
+        let mut out = ShedOutcome {
+            scanned,
+            dropped: 0,
+            per_shard: self.pms.iter().map(|&p| (p, 0)).collect(),
+        };
+        if rho == 0 || scanned == 0 {
+            return out;
+        }
+        for s in 0..self.n_shards() {
+            self.send(s, Request::Candidates { rho });
+        }
+        let mut lists = Vec::with_capacity(self.n_shards());
+        for s in 0..self.n_shards() {
+            match self.recv(s) {
+                Response::Candidates(c) => lists.push(c),
+                _ => unreachable!("protocol violation: expected candidates"),
+            }
+        }
+        let victims = merge::k_way_select(&lists, rho);
+        for (s, ids) in victims.iter().enumerate() {
+            if !ids.is_empty() {
+                self.send(s, Request::DropByIds(ids.iter().copied().collect()));
+            }
+        }
+        for (s, ids) in victims.iter().enumerate() {
+            if ids.is_empty() {
+                continue;
+            }
+            match self.recv(s) {
+                Response::Dropped(d) => {
+                    debug_assert_eq!(d, ids.len(), "victim ids must be live");
+                    self.pms[s] -= d;
+                    out.per_shard[s].1 = d;
+                    out.dropped += d;
+                }
+                _ => unreachable!("protocol violation: expected drop count"),
+            }
+        }
+        out
+    }
+
+    /// Drop `rho` PMs uniformly at random across shards (PM-BL),
+    /// allocating the budget proportionally to shard populations
+    /// (largest-remainder rounding, deterministic).
+    pub fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
+        let total = self.pm_count();
+        if rho == 0 || total == 0 {
+            return 0;
+        }
+        let rho = rho.min(total);
+        let mut alloc: Vec<usize> =
+            self.pms.iter().map(|&c| rho * c / total).collect();
+        let mut remainders: Vec<(usize, usize)> = (0..alloc.len())
+            .map(|s| (rho * self.pms[s] % total, s))
+            .collect();
+        remainders.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut left = rho - alloc.iter().sum::<usize>();
+        for &(_, s) in &remainders {
+            if left == 0 {
+                break;
+            }
+            if alloc[s] < self.pms[s] {
+                alloc[s] += 1;
+                left -= 1;
+            }
+        }
+        // rounding can leave budget if some shards were capped; spill it
+        // to any shard with headroom (total capacity ≥ rho by the min
+        // above, so this terminates)
+        let mut s = 0;
+        while left > 0 {
+            if alloc[s] < self.pms[s] {
+                alloc[s] += 1;
+                left -= 1;
+            }
+            s = (s + 1) % alloc.len();
+        }
+        let mut dropped = 0;
+        for (s, &k) in alloc.iter().enumerate() {
+            if k > 0 {
+                self.send(
+                    s,
+                    Request::DropRandom {
+                        rho: k,
+                        seed: rng.next_u64(),
+                    },
+                );
+            }
+        }
+        for (s, &k) in alloc.iter().enumerate() {
+            if k == 0 {
+                continue;
+            }
+            match self.recv(s) {
+                Response::Dropped(d) => {
+                    self.pms[s] -= d;
+                    dropped += d;
+                }
+                _ => unreachable!("protocol violation: expected drop count"),
+            }
+        }
+        dropped
+    }
+
+    /// Remove every PM and window on every shard (between phases).
+    pub fn reset_state(&mut self) {
+        for s in 0..self.n_shards() {
+            self.send(s, Request::Reset);
+        }
+        self.ack_all();
+        self.pms.fill(0);
+        self.open_windows = 0;
+    }
+}
+
+impl Drop for ShardedOperator {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{BusGen, StockGen};
+    use crate::events::EventStream;
+    use crate::operator::Operator;
+    use crate::query::builtin::{q1, q4};
+
+    #[test]
+    fn round_robin_covers_all_queries_once() {
+        let plan = ShardPlan::round_robin(7, 3);
+        assert_eq!(plan.n_shards(), 3);
+        let mut seen: Vec<usize> =
+            plan.assignments.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+        // never more shards than queries
+        assert_eq!(ShardPlan::round_robin(2, 8).n_shards(), 2);
+        assert_eq!(ShardPlan::round_robin(5, 1).n_shards(), 1);
+        assert_eq!(plan.locate(4), Some((1, 1)));
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_completions_and_pm_count() {
+        let queries = q4(4, 2_000, 250).queries;
+        let events: Vec<_> = {
+            let mut g = BusGen::with_seed(21);
+            g.take_events(15_000)
+        };
+
+        let mut plain = Operator::new(queries.clone());
+        let mut expected = Vec::new();
+        for e in &events {
+            expected.extend(plain.process_event(e).completions);
+        }
+        sort_completions(&mut expected);
+
+        // q4 is a single query, so run the two-query q1 set too for a
+        // real multi-shard split below; here 1 shard must still match
+        let mut sharded = ShardedOperator::new(queries, 1);
+        let mut got = Vec::new();
+        for chunk in events.chunks(512) {
+            got.extend(sharded.process_batch(chunk).completions);
+        }
+        assert_eq!(got, expected);
+        assert_eq!(sharded.pm_count(), plain.pm_count());
+        assert!(
+            (sharded.match_probability() - plain.match_probability()).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn multi_shard_split_matches_unsharded_on_stock() {
+        let queries = q1(1_500).queries; // two queries -> two shards
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(22);
+            g.take_events(20_000)
+        };
+        let mut plain = Operator::new(queries.clone());
+        let mut expected = Vec::new();
+        for e in &events {
+            expected.extend(plain.process_event(e).completions);
+        }
+        sort_completions(&mut expected);
+
+        let mut sharded = ShardedOperator::new(queries, 2);
+        assert_eq!(sharded.n_shards(), 2);
+        let mut got = Vec::new();
+        for chunk in events.chunks(777) {
+            got.extend(sharded.process_batch(chunk).completions);
+        }
+        assert_eq!(got, expected);
+        assert_eq!(sharded.pm_count(), plain.pm_count());
+    }
+
+    #[test]
+    fn masked_batch_does_bookkeeping_only() {
+        let queries = q4(3, 1_000, 100).queries;
+        let events: Vec<_> = {
+            let mut g = BusGen::with_seed(5);
+            g.take_events(2_000)
+        };
+        let mask = vec![true; events.len()];
+        let mut sharded = ShardedOperator::new(queries, 1);
+        let out = sharded.process_batch_masked(&events, &mask);
+        assert!(out.completions.is_empty(), "shed events cannot match");
+        assert_eq!(out.checks, 0);
+        assert!(out.opened > 0, "windows still open on shed events");
+        assert!(sharded.pm_count() > 0, "window seeds still exist");
+    }
+
+    #[test]
+    fn drop_random_is_exact_across_shards() {
+        let queries = q1(2_000).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(10_000)
+        };
+        let mut sharded = ShardedOperator::new(queries, 2);
+        sharded.process_batch(&events);
+        let before = sharded.pm_count();
+        assert!(before > 10, "need PMs, got {before}");
+        let mut rng = Rng::seeded(3);
+        let dropped = sharded.drop_random(before / 2, &mut rng);
+        assert_eq!(dropped, before / 2);
+        assert_eq!(sharded.pm_count(), before - dropped);
+        // over-draw drops everything
+        let rest = sharded.pm_count();
+        assert_eq!(sharded.drop_random(rest + 100, &mut rng), rest);
+        assert_eq!(sharded.pm_count(), 0);
+    }
+
+    #[test]
+    fn reset_clears_all_shards() {
+        let queries = q1(2_000).queries;
+        let mut g = StockGen::with_seed(2);
+        let events = g.take_events(5_000);
+        let mut sharded = ShardedOperator::new(queries, 2);
+        sharded.process_batch(&events);
+        assert!(sharded.pm_count() > 0);
+        sharded.reset_state();
+        assert_eq!(sharded.pm_count(), 0);
+    }
+}

@@ -1,0 +1,196 @@
+//! The shard worker: a thread owning one [`Operator`] over a subset of
+//! the query set, driven by a small request/response protocol over
+//! bounded channels.
+//!
+//! Workers never talk to each other — all cross-shard coordination
+//! (completion merging, global victim selection) happens at the
+//! [`super::ShardedOperator`] façade, which is what keeps the protocol
+//! deadlock-free: every request gets exactly one response, and the
+//! coordinator always drains responses before sending the next round.
+
+use std::collections::HashSet;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::events::Event;
+use crate::model::UtilityTable;
+use crate::operator::{ComplexEvent, Operator, PmRef};
+use crate::query::Query;
+use crate::util::Rng;
+
+/// One shed candidate: a PM with its utility and its sharding-invariant
+/// identity (used for deterministic cross-shard tie-breaking).
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// looked-up utility
+    pub utility: f64,
+    /// shard-local PM id (only meaningful to the shard that sent it)
+    pub pm_id: u64,
+    /// global query index
+    pub query: usize,
+    /// opening sequence number of the PM's window
+    pub open_seq: u64,
+    /// bound correlation keys
+    pub key_bits: u64,
+    /// current state
+    pub state: u32,
+}
+
+/// Aggregated outcome of one batch on one shard.
+#[derive(Debug, Default, Clone)]
+pub struct BatchOutcome {
+    /// completions with *global* query indices, in processing order
+    pub completions: Vec<ComplexEvent>,
+    /// summed virtual cost of the batch on this shard (ns)
+    pub cost_ns: f64,
+    /// (PM, event) checks performed
+    pub checks: u64,
+    /// windows opened
+    pub opened: usize,
+    /// windows closed
+    pub closed: usize,
+    /// live PMs after the batch
+    pub n_pms: usize,
+    /// PMs ever created on this shard
+    pub pms_created: u64,
+    /// complex events ever emitted on this shard
+    pub completions_total: u64,
+}
+
+/// Coordinator → worker.
+pub(super) enum Request {
+    /// Process a batch; events with a true `skip_match` bit get window
+    /// bookkeeping only (black-box event shedding semantics).
+    Batch {
+        /// the shared batch
+        events: Arc<Vec<Event>>,
+        /// optional per-event "event was shed" mask
+        skip_match: Option<Arc<Vec<bool>>>,
+    },
+    /// Install utility tables, one per *local* query, local order.
+    SetTables(Vec<UtilityTable>),
+    /// Apply per-local-query check-cost factors.
+    SetCostFactors(Vec<f64>),
+    /// Toggle observation capture.
+    SetObsEnabled(bool),
+    /// Return the shard's `rho` lowest-utility PMs, sorted ascending.
+    Candidates {
+        /// global drop budget (upper bound on candidates needed)
+        rho: usize,
+    },
+    /// Drop the PMs with these (shard-local) ids.
+    DropByIds(HashSet<u64>),
+    /// Drop `rho` PMs uniformly at random with a seeded RNG.
+    DropRandom {
+        /// how many to drop
+        rho: usize,
+        /// RNG seed from the coordinator (keeps runs deterministic)
+        seed: u64,
+    },
+    /// Remove every PM and window.
+    Reset,
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Worker → coordinator.
+pub(super) enum Response {
+    /// outcome of a `Batch`
+    Batch(BatchOutcome),
+    /// sorted lowest-utility candidates
+    Candidates(Vec<Candidate>),
+    /// PMs actually dropped
+    Dropped(usize),
+    /// acknowledgement of a state-setting request
+    Ack,
+}
+
+/// The worker loop.  `local_to_global[i]` is the global index of the
+/// shard's `i`-th query.
+pub(super) fn run(
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+    queries: Vec<Query>,
+    local_to_global: Vec<usize>,
+) {
+    let mut op = Operator::new(queries);
+    let mut tables: Vec<UtilityTable> = Vec::new();
+    let mut refs: Vec<PmRef> = Vec::new();
+    while let Ok(req) = rx.recv() {
+        let resp = match req {
+            Request::Batch { events, skip_match } => {
+                let mut out = BatchOutcome::default();
+                for (i, e) in events.iter().enumerate() {
+                    let skip = skip_match.as_ref().is_some_and(|m| m[i]);
+                    let o = if skip {
+                        op.process_bookkeeping(e)
+                    } else {
+                        op.process_event(e)
+                    };
+                    out.cost_ns += o.cost_ns;
+                    out.checks += o.checks;
+                    out.opened += o.opened;
+                    out.closed += o.closed;
+                    for mut ce in o.completions {
+                        ce.query = local_to_global[ce.query];
+                        out.completions.push(ce);
+                    }
+                }
+                out.n_pms = op.pm_count();
+                out.pms_created = op.pms_created;
+                out.completions_total = op.completions_total;
+                Response::Batch(out)
+            }
+            Request::SetTables(t) => {
+                tables = t;
+                Response::Ack
+            }
+            Request::SetCostFactors(f) => {
+                op.cost.check_factor = f;
+                Response::Ack
+            }
+            Request::SetObsEnabled(enabled) => {
+                op.obs.enabled = enabled;
+                Response::Ack
+            }
+            Request::Candidates { rho } => {
+                op.pm_refs(&mut refs);
+                let mut cands: Vec<Candidate> = refs
+                    .iter()
+                    .map(|r| Candidate {
+                        utility: tables
+                            .get(r.query)
+                            .map_or(0.0, |t| t.lookup(r.state, r.remaining)),
+                        pm_id: r.pm_id,
+                        query: local_to_global[r.query],
+                        open_seq: r.open_seq,
+                        key_bits: r.key_bits,
+                        state: r.state,
+                    })
+                    .collect();
+                // O(n) partial selection of the rho lowest before the
+                // O(rho log rho) sort the k-way merge needs — matches
+                // the single-threaded shedder's select_nth approach
+                if rho > 0 && rho < cands.len() {
+                    cands.select_nth_unstable_by(rho - 1, super::merge::cand_cmp);
+                    cands.truncate(rho);
+                }
+                cands.sort_unstable_by(super::merge::cand_cmp);
+                Response::Candidates(cands)
+            }
+            Request::DropByIds(ids) => Response::Dropped(op.drop_pms(&ids)),
+            Request::DropRandom { rho, seed } => {
+                let mut rng = Rng::seeded(seed);
+                Response::Dropped(op.drop_random(rho, &mut rng))
+            }
+            Request::Reset => {
+                op.reset_state();
+                Response::Ack
+            }
+            Request::Shutdown => break,
+        };
+        if tx.send(resp).is_err() {
+            break; // coordinator gone
+        }
+    }
+}

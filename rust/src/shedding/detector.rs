@@ -104,19 +104,35 @@ impl OverloadDetector {
     /// Algorithm 1: given the event's queueing latency and the live PM
     /// count, return `Some(ρ)` if shedding is needed.
     pub fn check(&self, l_q_ns: f64, n_pm: usize) -> Option<usize> {
+        self.check_scaled(l_q_ns, n_pm, 1)
+    }
+
+    /// Shard-aware Algorithm 1: with `parallelism` worker shards the
+    /// matching and shedding work divide across workers, so the
+    /// *predicted* latencies scale by `1/parallelism` while the PM
+    /// budget (and the returned ρ) stays global.  `parallelism = 1` is
+    /// exactly the paper's single-threaded detector.
+    pub fn check_scaled(
+        &self,
+        l_q_ns: f64,
+        n_pm: usize,
+        parallelism: usize,
+    ) -> Option<usize> {
+        let k = parallelism.max(1) as f64;
         let f = self.f.as_ref()?;
-        let l_p = f.predict(n_pm as f64);
-        let l_s = self.predict_ls(n_pm);
+        let l_p = f.predict(n_pm as f64) / k;
+        let l_s = self.predict_ls(n_pm) / k;
         let l_e = l_q_ns + l_p;
         if l_e + l_s + self.safety_ns <= self.lb_ns {
             return None;
         }
-        // l_p' = LB - l_q - l_s  (Alg. 1 line 6)
+        // l_p' = LB - l_q - l_s  (Alg. 1 line 6); the per-worker budget
+        // maps back to a global PM count through the k-scaled inverse
         let lp_target = self.lb_ns - l_q_ns - l_s - self.safety_ns;
         let n_keep = if lp_target <= 0.0 {
             0.0
         } else {
-            f.inverse(lp_target)
+            f.inverse(lp_target * k)
         };
         let rho = (n_pm as f64 - n_keep).ceil().max(0.0) as usize;
         if rho == 0 {
@@ -186,6 +202,21 @@ mod tests {
         // but the 5000 buffer trips it
         assert_eq!(trained().check(0.0, 700), None);
         assert!(strict.check(0.0, 700).is_some());
+    }
+
+    #[test]
+    fn parallelism_relaxes_the_budget() {
+        let d = trained();
+        // n=2000 overloads one worker (l_p = 20100 > 10000) but not
+        // four: 20100/4 + 4000/4 = 6025 < 10000
+        assert!(d.check(0.0, 2000).is_some());
+        assert_eq!(d.check_scaled(0.0, 2000, 4), None);
+        // at higher load both fire, but the sharded rho is smaller
+        let rho1 = d.check(0.0, 5_000).unwrap();
+        let rho4 = d.check_scaled(0.0, 5_000, 4).unwrap();
+        assert!(rho4 < rho1, "rho4={rho4} rho1={rho1}");
+        // scale 1 is exactly the unscaled path
+        assert_eq!(d.check(0.0, 2000), d.check_scaled(0.0, 2000, 1));
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::events::Event;
 use crate::nfa::machine::CompiledQuery;
 use crate::operator::Operator;
 use crate::query::Predicate;
+use crate::runtime::ShardedOperator;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
@@ -103,6 +104,55 @@ impl EventBaselineShedder {
         // proportional control on the relative bound violation
         let err = (l_e - lb) / lb;
         self.drop_p = (self.drop_p + self.gain * err).clamp(0.0, self.max_drop);
+    }
+
+    /// Shard-aware E-BL: adapt once per batch from the global latency
+    /// estimate (predicted processing scaled by the shard count), then
+    /// sample a per-event drop mask for
+    /// [`ShardedOperator::process_batch_masked`].  Returns the mask,
+    /// the number of dropped events, and the virtual drop-decision cost
+    /// (per open window, parallel across shards — the paper's Fig. 9a
+    /// overhead shape survives sharding).
+    pub fn decide_batch(
+        &mut self,
+        l_q_ns: f64,
+        sop: &ShardedOperator,
+        events: &[Event],
+    ) -> (Vec<bool>, u64, f64) {
+        let n_shards = sop.n_shards() as f64;
+        if self.detector.trained() {
+            let lb = self.detector.lb_ns;
+            let l_e =
+                l_q_ns + self.detector.predict_lp(sop.pm_count()) / n_shards;
+            let err = (l_e - lb) / lb;
+            // one controller step covers the whole batch: scale the
+            // integration by the batch size to match the per-event
+            // controller's ramp, but clamp the per-decision movement —
+            // within a batch there is no feedback shrinking the error,
+            // so an unclamped step turns the controller bang-bang
+            let step = (self.gain * err * events.len() as f64).clamp(-0.1, 0.1);
+            self.drop_p = (self.drop_p + step).clamp(0.0, self.max_drop);
+        }
+        let mut mask = vec![false; events.len()];
+        if self.drop_p <= 0.0 {
+            return (mask, 0, 0.0);
+        }
+        let per_event_ns =
+            sop.cost.ebl_per_window_ns * sop.open_windows().max(1) as f64;
+        let mut dropped = 0u64;
+        for (i, e) in events.iter().enumerate() {
+            let u = self.event_utility(e);
+            let w = 1.0 / (1.0 + u) / (1.0 + u);
+            self.mean_w = 0.999 * self.mean_w + 0.001 * w;
+            let p = (self.drop_p * w / self.mean_w.max(1e-6)).clamp(0.0, 1.0);
+            if self.rng.chance(p) {
+                mask[i] = true;
+                dropped += 1;
+            }
+        }
+        self.total_dropped += dropped;
+        let cost_ns = per_event_ns * events.len() as f64 / n_shards;
+        (mask, dropped, cost_ns)
     }
 }
 

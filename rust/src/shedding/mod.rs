@@ -72,6 +72,21 @@ pub enum ShedderKind {
     EventBaseline,
 }
 
+impl ShedderKind {
+    /// Canonical strategy name — matches the `Shedder::name()` of the
+    /// strategy this kind instantiates, so sharded and single-threaded
+    /// runs report identically.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedderKind::None => "none",
+            ShedderKind::PSpice => "pspice",
+            ShedderKind::PSpiceMinus => "pspice--",
+            ShedderKind::PmBaseline => "pm-bl",
+            ShedderKind::EventBaseline => "e-bl",
+        }
+    }
+}
+
 impl std::str::FromStr for ShedderKind {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -82,6 +97,24 @@ impl std::str::FromStr for ShedderKind {
             "pm-bl" | "pmbl" => Ok(ShedderKind::PmBaseline),
             "e-bl" | "ebl" => Ok(ShedderKind::EventBaseline),
             other => anyhow::bail!("unknown shedder {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip_through_from_str() {
+        for kind in [
+            ShedderKind::None,
+            ShedderKind::PSpice,
+            ShedderKind::PSpiceMinus,
+            ShedderKind::PmBaseline,
+            ShedderKind::EventBaseline,
+        ] {
+            assert_eq!(kind.name().parse::<ShedderKind>().unwrap(), kind);
         }
     }
 }

@@ -4,6 +4,7 @@
 
 use crate::events::Event;
 use crate::operator::Operator;
+use crate::runtime::ShardedOperator;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
@@ -25,6 +26,29 @@ impl PmBaselineShedder {
             detector,
             rng: Rng::seeded(seed),
             total_dropped: 0,
+        }
+    }
+
+    /// Shard-aware PM-BL: same global ρ as pSPICE (detector latency
+    /// scaled by the shard count), victims drawn uniformly across
+    /// shards proportionally to their PM populations.
+    pub fn on_batch(&mut self, l_q_ns: f64, sop: &mut ShardedOperator) -> ShedReport {
+        let n_pm = sop.pm_count();
+        let Some(rho) = self.detector.check_scaled(l_q_ns, n_pm, sop.n_shards())
+        else {
+            return ShedReport::default();
+        };
+        let dropped = sop.drop_random(rho, &mut self.rng);
+        self.total_dropped += dropped as u64;
+        // the cheap scan parallelizes across shards
+        let cost_ns = (sop.cost.shed_drop_ns * dropped as f64
+            + 0.25 * sop.cost.shed_scan_ns * n_pm as f64)
+            / sop.n_shards() as f64;
+        self.detector.observe_shedding(n_pm, cost_ns);
+        ShedReport {
+            dropped_pms: dropped,
+            dropped_event: false,
+            cost_ns,
         }
     }
 }

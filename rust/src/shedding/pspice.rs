@@ -10,6 +10,7 @@ use std::collections::HashSet;
 use crate::events::Event;
 use crate::model::UtilityTable;
 use crate::operator::{Operator, PmRef};
+use crate::runtime::ShardedOperator;
 
 use super::detector::OverloadDetector;
 use super::{ShedReport, Shedder};
@@ -64,12 +65,47 @@ impl PSpiceShedder {
             self.keyed.push((self.tables[r.query].lookup(r.state, r.remaining), r.pm_id));
         }
         if rho < n {
+            // total_cmp, not partial_cmp().unwrap(): a NaN utility (e.g.
+            // from a degenerate table row) must not panic the hot path.
+            // total order puts +NaN above every number, so poisoned PMs
+            // are treated as high-utility and survive.
             self.keyed
-                .select_nth_unstable_by(rho - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+                .select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
         }
         let ids: HashSet<u64> = self.keyed[..rho].iter().map(|&(_, id)| id).collect();
         let dropped = op.drop_pms(&ids);
         (n, dropped)
+    }
+
+    /// Shard-aware Algorithm 2 for the sharded runtime: the detector
+    /// sees the *global* `n_pm` and the batch queueing latency (scaled
+    /// by the shard count), computes one global ρ, and the sharded
+    /// operator drops the ρ globally lowest-utility PMs via a k-way
+    /// merge over per-shard candidates.  Utility tables must have been
+    /// installed on the workers with
+    /// [`ShardedOperator::set_tables`].
+    pub fn on_batch(&mut self, l_q_ns: f64, sop: &mut ShardedOperator) -> ShedReport {
+        let n_pm = sop.pm_count();
+        let Some(rho) = self.detector.check_scaled(l_q_ns, n_pm, sop.n_shards())
+        else {
+            return ShedReport::default();
+        };
+        let shed = sop.shed_lowest(rho);
+        self.total_dropped += shed.dropped as u64;
+        self.invocations += 1;
+        // shards shed in parallel: the virtual cost is the slowest
+        // shard's scan + drop
+        let cost_ns = shed
+            .per_shard
+            .iter()
+            .map(|&(scanned, dropped)| sop.cost.shed_ns(scanned, dropped))
+            .fold(0.0f64, f64::max);
+        self.detector.observe_shedding(shed.scanned, cost_ns);
+        ShedReport {
+            dropped_pms: shed.dropped,
+            dropped_event: false,
+            cost_ns,
+        }
     }
 }
 
@@ -158,6 +194,35 @@ mod tests {
                 "survivor below threshold"
             );
         }
+    }
+
+    #[test]
+    fn nan_utilities_do_not_panic_selection() {
+        // regression: partial_cmp().unwrap() panicked when a utility
+        // table was poisoned with NaN; total_cmp must select anyway
+        let (mut op, mut shed) = setup();
+        for table in &mut shed.tables {
+            for row in &mut table.rows {
+                for (i, v) in row.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *v = f64::NAN;
+                    }
+                }
+            }
+        }
+        let before = op.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let rho = 10;
+        let (scanned, dropped) = shed.drop_lowest(&mut op, rho);
+        assert_eq!(scanned, before);
+        assert_eq!(dropped, rho, "exactly rho victims despite NaNs");
+        assert_eq!(op.pm_count(), before - rho);
+        // NaN-utility PMs sort above every real utility, so survivors
+        // may carry NaN but no finite-utility PM above the threshold
+        // was sacrificed for one
+        let mut after = Vec::new();
+        op.pm_refs(&mut after);
+        assert_eq!(after.len(), before - rho);
     }
 
     #[test]

@@ -29,6 +29,8 @@ fn base() -> ExperimentConfig {
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     }
 }
 

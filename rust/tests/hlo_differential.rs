@@ -4,7 +4,9 @@
 //! including padded ones.
 //!
 //! Skips (with a loud message) when `artifacts/` has not been built —
-//! run `make artifacts` first.
+//! run `make artifacts` first.  The whole suite needs the PJRT engine,
+//! which only exists with the `xla` cargo feature.
+#![cfg(feature = "xla")]
 
 use pspice::linalg::Mat;
 use pspice::runtime::{ArtifactManifest, FallbackEngine, ModelEngine, PjrtEngine};

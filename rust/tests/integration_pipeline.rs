@@ -31,6 +31,8 @@ fn cfg(query: &str) -> ExperimentConfig {
         cost_factors: Vec::new(),
         retrain_every: 0,
         drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
     }
 }
 

@@ -1,0 +1,236 @@
+//! Offline stand-in for the `log` facade crate: levels, the [`Log`]
+//! trait, a global logger slot, and the `error!`..`trace!` macros —
+//! exactly the surface `pspice::util::logger` and the engine modules
+//! use, nothing more.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::OnceLock;
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// error conditions
+    Error = 1,
+    /// warnings
+    Warn,
+    /// informational
+    Info,
+    /// debugging detail
+    Debug,
+    /// very verbose tracing
+    Trace,
+}
+
+/// Level filter: [`Level`] plus `Off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// disable all logging
+    Off = 0,
+    /// error and up
+    Error,
+    /// warn and up
+    Warn,
+    /// info and up
+    Info,
+    /// debug and up
+    Debug,
+    /// everything
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a log call site.
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's severity.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record.
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// Call-site metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    /// Severity shortcut.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// Target shortcut.
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The formatted message.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Sync + Send {
+    /// Would this logger accept a record with this metadata?
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    /// Handle one record.
+    fn log(&self, record: &Record);
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+    fn log(&self, _: &Record) {}
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+/// Install the global logger (first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, AtomicOrdering::Relaxed);
+}
+
+/// The global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(AtomicOrdering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// The installed logger (a no-op logger before `set_logger`).
+pub fn logger() -> &'static dyn Log {
+    match LOGGER.get() {
+        Some(l) => *l,
+        None => &NOP,
+    }
+}
+
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    logger().log(&record);
+}
+
+/// Log at an explicit level.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_log(lvl, module_path!(), format_args!($($arg)+));
+        }
+    }};
+}
+
+/// Log at `Error` level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at `Warn` level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at `Info` level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at `Debug` level.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at `Trace` level.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(!(Level::Trace <= LevelFilter::Info));
+        assert!(!(Level::Debug <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn macros_respect_max_level() {
+        // no logger installed: must not panic either way
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        trace!("filtered out {}", 2);
+    }
+}
