@@ -11,7 +11,9 @@
 //!    (datasets + replay),
 //! 2. parses Q4 from the text DSL (query front-end),
 //! 3. runs the ground truth + calibration + overloaded phases through
-//!    the operator, overload detector and pSPICE shedder (L3),
+//!    the `Pipeline`-backed harness (operator state, overload detector
+//!    and the batch-first pSPICE shedder — L3; see
+//!    `examples/quickstart.rs` for driving the builder API directly),
 //! 4. builds the utility model through the **AOT HLO artifacts on the
 //!    PJRT runtime** (L2/L1) — this is the rust⇄XLA boundary —
 //!    falling back to the rust engine only if artifacts are missing,
@@ -78,12 +80,7 @@ fn main() -> pspice::Result<()> {
         rate: 1.4,
         lb_ms: 0.5,
         shedder: ShedderKind::PSpice,
-        weights: Vec::new(),
-        cost_factors: Vec::new(),
-        retrain_every: 0,
-        drift_threshold: 0.01,
-        shards: 1,
-        batch: 256,
+        ..ExperimentConfig::default()
     };
     let pspice = run_experiment(&cfg)?;
     let pm_bl = run_experiment(&ExperimentConfig {

@@ -1,66 +1,119 @@
-//! Quickstart: the whole pSPICE pipeline on one small workload.
+//! Quickstart: the canonical walkthrough of the `Pipeline` builder
+//! API — calibrate once, then run any shedding strategy on any
+//! backend through one façade.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a synthetic Dublin-style bus trace, builds the ground
-//! truth, trains the Markov utility model (through the AOT/PJRT
-//! artifacts if `make artifacts` has run, otherwise the rust fallback),
-//! then overloads the operator at 140% of its measured capacity and
-//! shows pSPICE holding a latency bound while keeping the false
-//! negatives far below random shedding.
+//! Generates a synthetic Dublin-style bus trace, calibrates the
+//! overload detector and trains the Markov utility model (through the
+//! AOT/PJRT artifacts if `make artifacts` has run, otherwise the rust
+//! fallback), then overloads the operator at 140% of its measured
+//! capacity and shows pSPICE holding the latency bound while dropping
+//! far less quality than random PM shedding.  The last section embeds
+//! the same engine incrementally via `Pipeline::feed`.
 
-use pspice::config::ExperimentConfig;
-use pspice::datasets::DatasetKind;
-use pspice::harness::run_experiment;
-use pspice::shedding::ShedderKind;
+use pspice::datasets::{BusGen, DatasetKind};
+use pspice::events::EventStream;
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::Operator;
+use pspice::pipeline::Pipeline;
+use pspice::query::builtin::q4;
+use pspice::shedding::{OverloadDetector, ShedderKind};
+use pspice::sim::RateSource;
+
+const LB_MS: f64 = 0.5; // latency bound (virtual ms)
+const RATE: f64 = 1.4; // 140% of measured capacity
 
 fn main() -> pspice::Result<()> {
     pspice::util::logger::init();
-
-    let base = ExperimentConfig {
-        query: "q4".into(),       // any(n) over same-stop bus delays
-        window: 2_000,            // count window
-        pattern_n: 4,             // 4 distinct delayed buses
-        slide: 250,
-        dataset: DatasetKind::Bus,
-        seed: 7,
-        warmup: 40_000,
-        events: 40_000,
-        rate: 1.4,                // 140% of capacity
-        lb_ms: 0.5,               // latency bound (virtual ms)
-        shedder: ShedderKind::PSpice,
-        weights: Vec::new(),
-        cost_factors: Vec::new(),
-        retrain_every: 0,
-        drift_threshold: 0.01,
-        shards: 1,
-        batch: 256,
-    };
-
     println!("pSPICE quickstart — Q4 (bus delays), 140% overload\n");
-    for shedder in [ShedderKind::PSpice, ShedderKind::PmBaseline, ShedderKind::None] {
-        let cfg = ExperimentConfig {
-            shedder,
-            ..base.clone()
-        };
-        let r = run_experiment(&cfg)?;
+
+    // Q4: any(4) distinct delayed buses at the same stop, count
+    // window 2000, slide 250 — and a seeded synthetic trace
+    let queries = q4(4, 2_000, 250).queries;
+    let trace = BusGen::with_seed(7).take_events(80_000);
+    let (warm, measure) = trace.split_at(40_000);
+
+    // 1. calibrate: stream the warm-up below capacity on a plain
+    //    operator, fit the latency regressions f()/g() (paper Alg. 1),
+    //    and build the utility model from its observations
+    let lb_ns = LB_MS * 1e6;
+    let mut op = Operator::new(queries.clone());
+    let mut detector = OverloadDetector::new(lb_ns, 0.02 * lb_ns);
+    let mut capacity_ns = 0.0;
+    for e in warm {
+        let n_before = op.pm_count();
+        let out = op.process_event(e);
+        detector.observe_processing(n_before, out.cost_ns);
+        capacity_ns += out.cost_ns;
+    }
+    capacity_ns /= warm.len() as f64;
+    assert!(detector.fit(), "latency regression needs more warm-up");
+    for n in [100usize, 1_000, 5_000, 20_000] {
+        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+    }
+    detector.fit();
+    let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
+    let tables = builder.build(&op)?;
+    println!(
+        "calibrated: capacity={capacity_ns:.0} ns/event, model via {}\n",
+        builder.engine_name()
+    );
+
+    // 2. the builder façade: same calibration, three strategies —
+    //    swap `.shards(1)` for `.shards(4)` and nothing else changes
+    for kind in [ShedderKind::PSpice, ShedderKind::PmBaseline, ShedderKind::None] {
+        let mut pipe = Pipeline::builder()
+            .queries(queries.clone())
+            .shedder(kind)
+            .detector(detector.clone())
+            .tables(tables.clone())
+            .latency_bound_ms(LB_MS)
+            .shards(1)
+            .batch(256)
+            .seed(7)
+            .key_slot(DatasetKind::Bus.key_slot())
+            .arrivals(RateSource::from_capacity(capacity_ns, RATE, 0.0))
+            .source(measure.to_vec())
+            .build()?;
+        pipe.prime(warm);
+        let run = pipe.run_to_end()?;
         println!(
-            "{:<8} fn={:>5.1}%  fp={}  max_latency={:>8.3}ms  violations={:>6.2}%  \
-             dropped_pms={:<6} engine={}",
-            r.shedder,
-            r.fn_percent,
-            r.false_positives,
-            r.latency.stats.max() / 1e6,
-            r.latency.violation_rate() * 100.0,
-            r.dropped_pms,
-            r.engine,
+            "{:<8} dropped_pms={:<6} max_latency={:>8.3}ms  violations={:>6.2}%  \
+             overhead={:.3}%",
+            run.shedder,
+            run.totals.dropped_pms,
+            run.latency.stats.max() / 1e6,
+            run.latency.violation_rate() * 100.0,
+            run.shed_overhead * 100.0,
         );
     }
     println!(
-        "\npSPICE keeps the latency bound with fewer false negatives than \
-         random PM shedding; without shedding the bound is violated."
+        "\npSPICE keeps the latency bound with far fewer drops than random \
+         PM shedding; without shedding the bound is violated."
+    );
+
+    // 3. embedding: feed() event slices as they arrive instead of
+    //    handing the pipeline a whole trace
+    let mut pipe = Pipeline::builder()
+        .queries(queries)
+        .shedder(ShedderKind::PSpice)
+        .detector(detector)
+        .tables(tables)
+        .latency_bound_ms(LB_MS)
+        .arrivals(RateSource::from_capacity(capacity_ns, RATE, 0.0))
+        .build()?;
+    pipe.prime(warm);
+    let mut detected = 0usize;
+    for chunk in measure.chunks(1_000) {
+        detected += pipe.feed(chunk)?.len();
+    }
+    println!(
+        "\nincremental feed: {detected} complex events, {} PMs shed, {} PMs live",
+        pipe.totals().dropped_pms,
+        pipe.pm_count()
     );
     Ok(())
 }

@@ -38,7 +38,6 @@ fn main() -> pspice::Result<()> {
                 query: "q3".into(),
                 window: 1_500, // ms
                 pattern_n: n,
-                slide: 500,
                 dataset: DatasetKind::Soccer,
                 seed: 23,
                 warmup: 60_000,
@@ -46,12 +45,7 @@ fn main() -> pspice::Result<()> {
                 rate: 1.2,
                 lb_ms: 0.5,
                 shedder: *shedder,
-                weights: Vec::new(),
-                cost_factors: Vec::new(),
-            retrain_every: 0,
-            drift_threshold: 0.01,
-            shards: 1,
-            batch: 256,
+                ..ExperimentConfig::default()
             };
             let r = run_experiment(&cfg)?;
             mp = r.match_probability;

@@ -25,7 +25,6 @@ fn main() -> pspice::Result<()> {
             query: "q1+q2".into(),
             window: 6_000,
             pattern_n: 0,
-            slide: 500,
             dataset: DatasetKind::Stock,
             seed: 11,
             warmup: 50_000,
@@ -37,11 +36,7 @@ fn main() -> pspice::Result<()> {
             shedder: ShedderKind::PSpice,
             // [q1_rise, q1_fall, q2_rise, q2_fall]
             weights: vec![1.0, 1.0, 2.0, 2.0],
-            cost_factors: Vec::new(),
-            retrain_every: 0,
-            drift_threshold: 0.01,
-            shards: 1,
-            batch: 256,
+            ..ExperimentConfig::default()
         };
         let r = run_experiment(&cfg)?;
         println!(

@@ -14,7 +14,6 @@ use pspice::model::{ModelBuilder, ModelConfig};
 use pspice::operator::Operator;
 use pspice::query::builtin::q4;
 use pspice::runtime::FallbackEngine;
-use pspice::shedding::{OverloadDetector, PSpiceShedder};
 use pspice::util::Rng;
 
 fn operator_with_pms(target_pms: usize) -> Operator {
@@ -49,15 +48,14 @@ fn main() {
 
         // pSPICE drop: enumerate + utility + select + remove
         bench(
-            &format!("pspice.drop_lowest(n={n}, rho={rho})"),
+            &format!("operator.shed_lowest(n={n}, rho={rho})"),
             3,
             20,
             n as u64,
             || {
                 let mut op2 = op.clone();
-                let det = OverloadDetector::new(f64::MAX, 0.0);
-                let mut shed = PSpiceShedder::new(det, tables.clone());
-                black_box(shed.drop_lowest(&mut op2, rho));
+                op2.install_tables(&tables);
+                black_box(op2.shed_lowest(rho));
             },
         );
 

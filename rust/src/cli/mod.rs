@@ -66,6 +66,7 @@ pub fn usage() -> &'static str {
                   [--shedder none|pspice|pspice--|pm-bl|e-bl] [--rate 1.2]\n\
                   [--window N] [--pattern-n N] [--events N] [--warmup N]\n\
                   [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
+                  [--retrain-every N] [--drift-threshold F]\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
        fig7       [--scale F]                       latency-bound trace\n\
@@ -108,6 +109,8 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     cfg.lb_ms = flags.get_parse("lb-ms", cfg.lb_ms)?;
     cfg.shards = flags.get_parse("shards", cfg.shards)?;
     cfg.batch = flags.get_parse("batch", cfg.batch)?;
+    cfg.retrain_every = flags.get_parse("retrain-every", cfg.retrain_every)?;
+    cfg.drift_threshold = flags.get_parse("drift-threshold", cfg.drift_threshold)?;
     anyhow::ensure!(cfg.shards >= 1, "--shards must be at least 1");
     anyhow::ensure!(cfg.batch >= 1, "--batch must be at least 1");
     if let Some(s) = flags.get("shedder") {
@@ -154,7 +157,7 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 r.latency.violation_rate() * 100.0
             );
             println!("  shed overhead     : {:.3}%", r.shed_overhead * 100.0);
-            println!("  model build       : {:.4}s", r.model_build_secs);
+            println!("  model build       : {:.4}s ({} retrains)", r.model_build_secs, r.retrains);
             println!(
                 "  wall throughput   : {:.0} events/s",
                 r.wall_events_per_sec
@@ -175,7 +178,7 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
         "fig9b" => figures::fig9b(&figure_opts(&flags)?),
         "calibrate" => {
             let cfg = cfg_from_flags(&flags)?;
-            let (queries, _) = crate::harness::experiment::build_queries(&cfg)?;
+            let queries = crate::harness::experiment::build_queries(&cfg)?;
             let trace = crate::harness::experiment::build_trace(&cfg);
             let mut op = crate::operator::Operator::new(queries);
             let mut cost = 0.0;
@@ -279,6 +282,21 @@ mod tests {
         // zero is rejected
         let f = Flags::parse(&s(&["run", "--shards", "0"])).unwrap();
         assert!(cfg_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn retrain_flags_parse() {
+        let f = Flags::parse(&s(&[
+            "run",
+            "--retrain-every",
+            "5000",
+            "--drift-threshold",
+            "0.02",
+        ]))
+        .unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.retrain_every, 5_000);
+        assert!((cfg.drift_threshold - 0.02).abs() < 1e-12);
     }
 
     #[test]

@@ -37,6 +37,19 @@ pub enum DatasetKind {
     Bus,
 }
 
+impl DatasetKind {
+    /// Attribute slot holding the stream's correlation key (stock
+    /// symbol / player id / bus id) — the slot E-BL's type utilities
+    /// are keyed on.
+    pub fn key_slot(self) -> usize {
+        match self {
+            DatasetKind::Stock => stock::A_SYMBOL,
+            DatasetKind::Soccer => soccer::A_PLAYER,
+            DatasetKind::Bus => bus::A_BUS,
+        }
+    }
+}
+
 impl std::str::FromStr for DatasetKind {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self, Self::Err> {

@@ -13,30 +13,29 @@
 //!    `rate × capacity` in virtual time; the shedder keeps the latency
 //!    bound; completions are compared against the truth set.
 //!
-//! With `shards > 1` the measurement phase runs on the sharded operator
-//! runtime ([`crate::runtime::sharded`]): events are dispatched in
-//! micro-batches of `batch` events to every worker shard, the virtual
-//! clock advances by the slowest shard's batch cost (the parallel
-//! makespan), and the shedders use their shard-aware batch entry points
-//! (one global ρ, k-way-merged victims).  Completions are merged
-//! deterministically, so QoR accounting is identical to the
-//! single-threaded path.
+//! The measurement phase runs on a [`Pipeline`]: a single loop drives
+//! every strategy through the batch-first
+//! [`Shedder`](crate::shedding::Shedder) trait against the
+//! [`OperatorState`](crate::operator::OperatorState) abstraction.
+//! `shards = 1` uses the classic single-threaded operator with
+//! per-event dispatch; `shards > 1` dispatches micro-batches of
+//! `batch` events to the sharded worker runtime
+//! ([`crate::runtime::sharded`]), the virtual clock advancing by the
+//! slowest shard's batch cost (the parallel makespan).  Completions
+//! merge deterministically, so QoR accounting is identical across
+//! shard counts.
 
 use crate::config::ExperimentConfig;
 use crate::datasets::{BusGen, DatasetKind, SoccerGen, StockGen};
 use crate::events::{Event, EventStream};
-use crate::metrics::{LatencyTracker, QorAccounting, Throughput};
-use crate::model::{ModelBuilder, ModelConfig, UtilityTable};
-use crate::nfa::CompiledQuery;
+use crate::metrics::{LatencyTracker, QorAccounting};
+use crate::model::{ModelBuilder, ModelConfig};
 use crate::operator::Operator;
+use crate::pipeline::Pipeline;
 use crate::query::builtin;
 use crate::query::Query;
-use crate::runtime::ShardedOperator;
-use crate::shedding::{
-    EventBaselineShedder, NoShedder, OverloadDetector, PSpiceShedder,
-    PmBaselineShedder, ShedReport, Shedder, ShedderKind,
-};
-use crate::sim::{RateSource, SimClock};
+use crate::shedding::OverloadDetector;
+use crate::sim::RateSource;
 
 /// Everything a figure driver needs from one run.
 #[derive(Debug, Clone)]
@@ -77,23 +76,17 @@ pub struct ExperimentResult {
     pub wall_events_per_sec: f64,
 }
 
-/// Build the query set + the E-BL key slot for a configuration.
-pub fn build_queries(cfg: &ExperimentConfig) -> crate::Result<(Vec<Query>, usize)> {
-    let (mut queries, key_slot) = match cfg.query.as_str() {
-        "q1" => (builtin::q1(cfg.window).queries, crate::datasets::stock::A_SYMBOL),
-        "q2" => (builtin::q2(cfg.window).queries, crate::datasets::stock::A_SYMBOL),
-        "q3" => (
-            builtin::q3(cfg.pattern_n, cfg.window).queries,
-            crate::datasets::soccer::A_PLAYER,
-        ),
-        "q4" => (
-            builtin::q4(cfg.pattern_n, cfg.window, cfg.slide).queries,
-            crate::datasets::bus::A_BUS,
-        ),
+/// Build the query set for a configuration.
+pub fn build_queries(cfg: &ExperimentConfig) -> crate::Result<Vec<Query>> {
+    let mut queries = match cfg.query.as_str() {
+        "q1" => builtin::q1(cfg.window).queries,
+        "q2" => builtin::q2(cfg.window).queries,
+        "q3" => builtin::q3(cfg.pattern_n, cfg.window).queries,
+        "q4" => builtin::q4(cfg.pattern_n, cfg.window, cfg.slide).queries,
         "q1+q2" => {
             let mut qs = builtin::q1(cfg.window).queries;
             qs.extend(builtin::q2(cfg.window).queries);
-            (qs, crate::datasets::stock::A_SYMBOL)
+            qs
         }
         other => anyhow::bail!("unknown query {other:?}"),
     };
@@ -108,7 +101,7 @@ pub fn build_queries(cfg: &ExperimentConfig) -> crate::Result<(Vec<Query>, usize
             q.weight = w;
         }
     }
-    Ok((queries, key_slot))
+    Ok(queries)
 }
 
 /// Generate the full event trace for a configuration.
@@ -162,178 +155,22 @@ fn ground_truth(
     (qor, capacity, op.match_probability())
 }
 
-/// Everything the measurement phase produces (both runtimes).
-struct Measurement {
-    latency: LatencyTracker,
-    shed_overhead: f64,
-    dropped_pms: u64,
-    dropped_events: u64,
-    peak_pms: usize,
-    retrains: u32,
-    shedder: &'static str,
-    /// worker shards that actually ran (the runtime caps the requested
-    /// count at the query count)
-    shards: usize,
-    wall_events_per_sec: f64,
-}
-
-/// Phase 3 on the sharded runtime.
-#[allow(clippy::too_many_arguments)]
-fn measure_sharded(
+/// Phase 2: calibrate the overload detector on the warm-up prefix and
+/// build the utility model.  Returns the trained detector plus the
+/// calibrated operator (whose observations feed the model builder).
+fn calibrate(
     cfg: &ExperimentConfig,
     queries: &[Query],
     trace: &[Event],
-    warmup: usize,
-    capacity_ns: f64,
-    detector: &OverloadDetector,
-    tables: &[UtilityTable],
-    key_slot: usize,
-    qor: &mut QorAccounting,
-) -> crate::Result<Measurement> {
-    anyhow::ensure!(
-        cfg.retrain_every == 0,
-        "drift retraining is not yet supported with shards > 1"
-    );
+) -> crate::Result<(Operator, OverloadDetector)> {
     let lb_ns = cfg.lb_ms * 1e6;
-    let batch = cfg.batch.max(1);
-    let mut sop = ShardedOperator::new(queries.to_vec(), cfg.shards);
-    if !cfg.cost_factors.is_empty() {
-        sop.set_cost_factors(&cfg.cost_factors);
-    }
-    sop.set_obs_enabled(false);
-
-    let mut pspice = None;
-    let mut pmbl = None;
-    let mut ebl = None;
-    match cfg.shedder {
-        ShedderKind::None => {}
-        ShedderKind::PSpice => {
-            sop.set_tables(tables);
-            pspice = Some(PSpiceShedder::new(detector.clone(), Vec::new()));
-        }
-        ShedderKind::PSpiceMinus => {
-            anyhow::bail!("pspice-- is not yet supported with shards > 1")
-        }
-        ShedderKind::PmBaseline => {
-            pmbl = Some(PmBaselineShedder::new(detector.clone(), cfg.seed ^ 0xBE11));
-        }
-        ShedderKind::EventBaseline => {
-            let compiled: Vec<CompiledQuery> = queries
-                .iter()
-                .cloned()
-                .map(CompiledQuery::compile)
-                .collect();
-            ebl = Some(EventBaselineShedder::new(
-                detector.clone(),
-                key_slot,
-                &compiled,
-                cfg.seed ^ 0xEB1,
-            ));
-        }
-    }
-
-    // prime the sharded state with the warm-up prefix (below capacity,
-    // no latency accounting; warm-up windows are out of QoR scope)
-    for chunk in trace[..warmup.min(trace.len())].chunks(batch) {
-        for ce in &sop.process_batch(chunk).completions {
-            qor.add_detected(ce);
-        }
-    }
-
-    let mut clock = SimClock::new();
-    let source = RateSource::from_capacity(capacity_ns, cfg.rate, 0.0);
-    let mut latency = LatencyTracker::new(lb_ns, (cfg.events / 2_000).max(1));
-    let mut shed_ns = 0.0;
-    let mut busy_ns = 0.0;
-    let mut dropped_pms = 0u64;
-    let mut dropped_events = 0u64;
-    let mut peak_pms = 0usize;
-    let measure = &trace[warmup.min(trace.len())..];
-    let wall_start = std::time::Instant::now();
-    let mut idx = 0u64;
-    for chunk in measure.chunks(batch) {
-        let first_arrival = source.arrival_ns(idx);
-        let last_arrival = source.arrival_ns(idx + chunk.len() as u64 - 1);
-        // micro-batching: the batch starts service once its last event
-        // has arrived (or later if the shards are still busy)
-        clock.begin_service(last_arrival);
-        let l_q = (clock.now_ns() - first_arrival).max(0.0);
-        let mut mask = None;
-        let rep = if let Some(p) = pspice.as_mut() {
-            p.on_batch(l_q, &mut sop)
-        } else if let Some(b) = pmbl.as_mut() {
-            b.on_batch(l_q, &mut sop)
-        } else if let Some(e) = ebl.as_mut() {
-            let (m, dropped, cost_ns) = e.decide_batch(l_q, &sop, chunk);
-            dropped_events += dropped;
-            mask = Some(m);
-            ShedReport {
-                dropped_pms: 0,
-                dropped_event: false,
-                cost_ns,
-            }
-        } else {
-            ShedReport::default()
-        };
-        clock.advance(rep.cost_ns);
-        shed_ns += rep.cost_ns;
-        busy_ns += rep.cost_ns;
-        dropped_pms += rep.dropped_pms as u64;
-        let out = match &mask {
-            Some(m) => sop.process_batch_masked(chunk, m),
-            None => sop.process_batch(chunk),
-        };
-        // the shards run in parallel: virtual time advances by the
-        // slowest shard's batch cost
-        clock.advance(out.cost_ns_max);
-        busy_ns += out.cost_ns_max;
-        for ce in &out.completions {
-            qor.add_detected(ce);
-        }
-        let end = clock.now_ns();
-        for j in 0..chunk.len() as u64 {
-            latency.record(end, end - source.arrival_ns(idx + j));
-        }
-        peak_pms = peak_pms.max(sop.pm_count());
-        idx += chunk.len() as u64;
-    }
-    let mut wall = Throughput::new();
-    wall.record(measure.len() as u64, wall_start.elapsed().as_secs_f64());
-
-    Ok(Measurement {
-        latency,
-        shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
-        dropped_pms,
-        dropped_events,
-        peak_pms,
-        retrains: 0,
-        shedder: cfg.shedder.name(),
-        shards: sop.n_shards(),
-        wall_events_per_sec: wall.events_per_sec(),
-    })
-}
-
-/// Run one full experiment.
-pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
-    let (queries, key_slot) = build_queries(cfg)?;
-    let trace = build_trace(cfg);
-    let lb_ns = cfg.lb_ms * 1e6;
-
-    // ---- phase 1: ground truth ------------------------------------
-    let (mut qor, capacity_ns, match_probability) =
-        ground_truth(cfg, &queries, &trace);
-
-    // ---- phase 2: calibrate + train --------------------------------
-    let mut op = Operator::new(queries.clone());
+    let mut op = Operator::new(queries.to_vec());
     apply_cost_factors(&mut op, cfg);
     let mut detector = OverloadDetector::new(lb_ns, 0.02 * lb_ns);
-    let warmup = cfg.warmup as usize;
-    for e in &trace[..warmup.min(trace.len())] {
+    let warmup = (cfg.warmup as usize).min(trace.len());
+    for e in &trace[..warmup] {
         let n_before = op.pm_count();
         let out = op.process_event(e);
-        for ce in &out.completions {
-            qor.add_detected(ce); // warm-up completions are out of scope anyway
-        }
         detector.observe_processing(n_before, out.cost_ns);
     }
     anyhow::ensure!(detector.fit(), "latency regression needs more warm-up");
@@ -342,180 +179,96 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
         detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
     }
     detector.fit();
+    Ok((op, detector))
+}
 
+/// Run one full experiment: ground truth, calibration, then the
+/// [`Pipeline`]-driven overloaded measurement (any strategy, any shard
+/// count — one code path).
+pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
+    let queries = build_queries(cfg)?;
+    let trace = build_trace(cfg);
+    let warmup = (cfg.warmup as usize).min(trace.len());
+
+    // ---- phase 1: ground truth ------------------------------------
+    let (mut qor, capacity_ns, match_probability) =
+        ground_truth(cfg, &queries, &trace);
+
+    // ---- phase 2: calibrate + train --------------------------------
+    let (op, detector) = calibrate(cfg, &queries, &trace)?;
     let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
     let tables = builder.build(&op)?;
     let model_build_secs = builder.last_build_secs;
     let engine = builder.engine_name();
-
-    // ---- phase 3: measurement (sharded or single-threaded) ---------
-    let m = if cfg.shards > 1 {
-        measure_sharded(
-            cfg,
-            &queries,
-            &trace,
-            warmup,
-            capacity_ns,
-            &detector,
-            &tables,
-            key_slot,
-            &mut qor,
-        )?
+    // only utility-ranking strategies get tables installed on the
+    // state, and pSPICE--'s differ from the reporting build (no
+    // processing-time term)
+    let strategy_tables = if !cfg.shedder.needs_tables() {
+        Vec::new()
+    } else if !cfg.shedder.model_config().use_tau {
+        ModelBuilder::with_auto_engine(cfg.shedder.model_config()).build(&op)?
     } else {
-        measure_single(
-            cfg,
-            &trace,
-            capacity_ns,
-            op,
-            builder,
-            detector,
-            tables,
-            key_slot,
-            &mut qor,
-        )?
+        tables
     };
+    // The pipeline owns its state and re-primes it from the warm-up
+    // prefix below: one extra warm-up pass (~1/7 of the total work on
+    // the default config) buys a single measurement code path for
+    // every backend and byte-identical state to the calibrated
+    // operator (event processing is deterministic).
+    drop(op);
+
+    // ---- phase 3: measurement through the pipeline -----------------
+    let mut pipe = Pipeline::builder()
+        .queries(queries)
+        .shedder(cfg.shedder)
+        .detector(detector)
+        .tables(strategy_tables)
+        .latency_bound_ms(cfg.lb_ms)
+        .latency_stride((cfg.events / 2_000).max(1))
+        .shards(cfg.shards)
+        .batch(cfg.batch)
+        .seed(cfg.seed)
+        .key_slot(cfg.dataset.key_slot())
+        .cost_factors(cfg.cost_factors.clone())
+        .retrain(cfg.retrain_every, cfg.drift_threshold)
+        .arrivals(RateSource::from_capacity(capacity_ns, cfg.rate, 0.0))
+        .source(trace[warmup..].to_vec())
+        .build()?;
+    // warm-up prefix below capacity (no latency accounting; warm-up
+    // windows are out of QoR scope anyway)
+    for ce in pipe.prime(&trace[..warmup]) {
+        qor.add_detected(&ce);
+    }
+    let run = pipe.run_to_end()?;
+    for ce in &run.completions {
+        qor.add_detected(ce);
+    }
 
     Ok(ExperimentResult {
         query: cfg.query.clone(),
-        shedder: m.shedder,
-        shards: m.shards,
+        shedder: run.shedder,
+        shards: run.shards,
         fn_percent: qor.fn_percent(),
         false_positives: qor.false_positives(),
         truth_total: qor.truth_total(),
         match_probability,
         capacity_ns,
-        latency: m.latency,
-        shed_overhead: m.shed_overhead,
-        dropped_pms: m.dropped_pms,
-        dropped_events: m.dropped_events,
+        latency: run.latency,
+        shed_overhead: run.shed_overhead,
+        dropped_pms: run.totals.dropped_pms,
+        dropped_events: run.totals.dropped_events,
         model_build_secs,
         engine,
-        peak_pms: m.peak_pms,
-        retrains: m.retrains,
-        wall_events_per_sec: m.wall_events_per_sec,
-    })
-}
-
-/// Phase 3 on the classic single-threaded operator (carried over from
-/// phase 2 with its calibrated state).
-#[allow(clippy::too_many_arguments)]
-fn measure_single(
-    cfg: &ExperimentConfig,
-    trace: &[Event],
-    capacity_ns: f64,
-    mut op: Operator,
-    mut builder: ModelBuilder,
-    detector: OverloadDetector,
-    tables: Vec<UtilityTable>,
-    key_slot: usize,
-    qor: &mut QorAccounting,
-) -> crate::Result<Measurement> {
-    let lb_ns = cfg.lb_ms * 1e6;
-    let warmup = cfg.warmup as usize;
-
-    // keep capturing observations only if drift-triggered retraining is
-    // on (§III-D); otherwise stop paying for capture
-    let retraining = cfg.retrain_every > 0;
-    op.obs.enabled = retraining;
-    let mut drift = retraining
-        .then(|| crate::model::DriftDetector::snapshot(&op.obs, cfg.drift_threshold));
-
-    let mut shedder: Box<dyn Shedder> = match cfg.shedder {
-        ShedderKind::None => Box::new(NoShedder),
-        ShedderKind::PSpice => Box::new(PSpiceShedder::new(detector.clone(), tables)),
-        ShedderKind::PSpiceMinus => {
-            let mut b = ModelBuilder::with_auto_engine(ModelConfig {
-                use_tau: false,
-                ..ModelConfig::default()
-            });
-            // rebuild tables without the processing-time term
-            op.obs.enabled = true;
-            let t = b.build(&op)?;
-            op.obs.enabled = false;
-            Box::new(PSpiceShedder::new(detector.clone(), t))
-        }
-        ShedderKind::PmBaseline => {
-            Box::new(PmBaselineShedder::new(detector.clone(), cfg.seed ^ 0xBE11))
-        }
-        ShedderKind::EventBaseline => Box::new(EventBaselineShedder::new(
-            detector.clone(),
-            key_slot,
-            &op.queries,
-            cfg.seed ^ 0xEB1,
-        )),
-    };
-
-    // ---- phase 3: overloaded measurement ---------------------------
-    let mut clock = SimClock::new();
-    let source = RateSource::from_capacity(capacity_ns, cfg.rate, 0.0);
-    let mut latency = LatencyTracker::new(lb_ns, (cfg.events / 2_000).max(1));
-    let mut shed_ns = 0.0;
-    let mut busy_ns = 0.0;
-    let mut dropped_pms = 0u64;
-    let mut dropped_events = 0u64;
-    let mut peak_pms = 0usize;
-    let mut retrains = 0u32;
-    let wall_start = std::time::Instant::now();
-    let measured = trace.len() - warmup.min(trace.len());
-
-    for (i, e) in trace[warmup.min(trace.len())..].iter().enumerate() {
-        let arrival = source.arrival_ns(i as u64);
-        let l_q = clock.begin_service(arrival);
-        let rep = shedder.on_event(e, l_q, &mut op);
-        clock.advance(rep.cost_ns);
-        shed_ns += rep.cost_ns;
-        busy_ns += rep.cost_ns;
-        dropped_pms += rep.dropped_pms as u64;
-        let out = if rep.dropped_event {
-            dropped_events += 1;
-            op.process_bookkeeping(e)
-        } else {
-            op.process_event(e)
-        };
-        clock.advance(out.cost_ns);
-        busy_ns += out.cost_ns;
-        for ce in &out.completions {
-            qor.add_detected(ce);
-        }
-        latency.record(clock.now_ns(), clock.now_ns() - arrival);
-        peak_pms = peak_pms.max(op.pm_count());
-        // §III-D: periodic drift check -> rebuild the model.  Building
-        // the candidate matrix is cheap (counts -> probabilities); the
-        // full table rebuild runs only on actual drift.
-        if retraining && (i as u64 + 1) % cfg.retrain_every == 0 {
-            if let Some(d) = &drift {
-                let (_mse, drifted) = d.check(&op.obs);
-                if drifted {
-                    let fresh = builder.build(&op)?;
-                    shedder.update_tables(fresh);
-                    drift = Some(crate::model::DriftDetector::snapshot(
-                        &op.obs,
-                        cfg.drift_threshold,
-                    ));
-                    retrains += 1;
-                }
-            }
-        }
-    }
-    let mut wall = Throughput::new();
-    wall.record(measured as u64, wall_start.elapsed().as_secs_f64());
-
-    Ok(Measurement {
-        latency,
-        shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
-        dropped_pms,
-        dropped_events,
-        peak_pms,
-        retrains,
-        shedder: shedder.name(),
-        shards: 1,
-        wall_events_per_sec: wall.events_per_sec(),
+        peak_pms: run.peak_pms,
+        retrains: run.retrains,
+        wall_events_per_sec: run.wall_events_per_sec,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::shedding::ShedderKind;
 
     fn tiny_cfg() -> ExperimentConfig {
         ExperimentConfig {
@@ -649,6 +402,20 @@ mod tests {
         cfg.rate = 3.0; // overload even a 2-way split of one query
         let res = run_experiment(&cfg).unwrap();
         assert_eq!(res.false_positives, 0, "PM shedding must not invent CEs");
+        assert!((0.0..=100.0).contains(&res.fn_percent));
+    }
+
+    #[test]
+    fn sharded_pspice_minus_runs_too() {
+        // the redesign lifted the old "pspice-- needs shards == 1"
+        // restriction: the ablation's tables install like any others
+        let mut cfg = tiny_cfg();
+        cfg.shedder = ShedderKind::PSpiceMinus;
+        cfg.shards = 2;
+        cfg.batch = 64;
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.shedder, "pspice--");
+        assert_eq!(res.false_positives, 0);
         assert!((0.0..=100.0).contains(&res.fn_percent));
     }
 }

@@ -272,7 +272,7 @@ pub fn fig9b(opts: &FigureOpts) -> crate::Result<()> {
     for ws in [6_000u64, 10_000, 16_000, 18_000, 24_000, 32_000] {
         let mut cfg = base_cfg("q1", opts);
         cfg.window = ws;
-        let (queries, _) = super::experiment::build_queries(&cfg)?;
+        let queries = super::experiment::build_queries(&cfg)?;
         let trace = super::experiment::build_trace(&cfg);
         let mut op = Operator::new(queries);
         for e in &trace[..cfg.warmup as usize] {

@@ -1,8 +1,8 @@
 //! Experiment harness: the paper's evaluation pipeline.
 //!
 //! * [`experiment`] — the three-phase runner (ground truth → calibrate
-//!   + train → overloaded measurement) producing FN%/FP/latency/overhead
-//!   numbers for one configuration,
+//!   + train → overloaded measurement on a [`crate::pipeline::Pipeline`])
+//!   producing FN%/FP/latency/overhead numbers for one configuration,
 //! * [`figures`] — drivers that regenerate every figure of the paper's
 //!   evaluation section (Figs. 5–9) as printed tables + CSV files.
 

@@ -9,7 +9,8 @@
 //!   sharded across worker threads — [`runtime::sharded`]), the pSPICE load
 //!   shedder and overload detector (paper Algorithms 1 & 2, shard-aware),
 //!   both baselines (PM-BL, E-BL), dataset generators, a discrete-event load
-//!   simulation and the full experiment harness for the paper's Figures 5–9.
+//!   simulation, the [`pipeline`] builder façade tying them together, and the
+//!   full experiment harness for the paper's Figures 5–9.
 //! * **Layer 2 (JAX, build-time)** — the model-builder compute graph
 //!   (Markov-chain completion probability + Markov-reward value iteration),
 //!   AOT-lowered to HLO text artifacts.
@@ -30,13 +31,14 @@
 //! | [`query`] | pattern AST, Tesla-like DSL parser, built-in Q1–Q4 |
 //! | [`nfa`] | pattern → state machine compilation, partial matches |
 //! | [`windows`] | count/time/slide window policies and manager |
-//! | [`operator`] | the CEP operator: match loop, observations, cost model |
-//! | [`shedding`] | pSPICE / PM-BL / E-BL shedders + overload detector (single-threaded and shard-aware) |
+//! | [`operator`] | the CEP operator: match loop, observations, cost model, the [`operator::OperatorState`] abstraction |
+//! | [`shedding`] | batch-first [`shedding::Shedder`] strategies (pSPICE / PM-BL / E-BL) + overload detector + the [`shedding::ShedderKind::build`] factory |
 //! | [`model`] | observation stats → Markov model → utility tables |
 //! | [`runtime`] | model engines (PJRT/AOT behind the `xla` feature, rust fallback) + the sharded operator runtime |
+//! | [`pipeline`] | the engine façade: [`pipeline::PipelineBuilder`] → [`pipeline::Pipeline`] (`prime` / `feed` / `run_to_end`) over 1..N shards |
 //! | [`sim`] | virtual-time source/queue for deterministic overload runs |
 //! | [`metrics`] | latency, wall-clock throughput, QoR (FN/FP) accounting |
-//! | [`harness`] | experiment runner + Figure 5–9 drivers |
+//! | [`harness`] | experiment runner (built on [`pipeline`]) + Figure 5–9 drivers |
 //! | [`linalg`] | dense matrices, regression, Markov oracle |
 //! | [`config`] | TOML-subset experiment configuration |
 //! | [`cli`] | argument parsing for the `pspice` binary |
@@ -53,6 +55,7 @@ pub mod metrics;
 pub mod model;
 pub mod nfa;
 pub mod operator;
+pub mod pipeline;
 pub mod query;
 pub mod runtime;
 pub mod shedding;

@@ -4,7 +4,7 @@
 //! * `l_p = f(n_pm)` — event processing latency vs. number of live PMs,
 //! * `l_s = g(n_pm)` — shedding latency vs. number of live PMs.
 //!
-//! The paper "appl[ies] several regression models … and use[s] a
+//! The paper "appl\[ies\] several regression models … and use\[s\] a
 //! regression model that results in lower error".  We fit three candidate
 //! bases — linear, quadratic, and `n·log₂(n)` (the sort inside the
 //! shedder) — and keep the one with the lowest residual sum of squares.

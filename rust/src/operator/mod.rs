@@ -6,7 +6,9 @@ pub mod cost;
 pub mod observe;
 #[allow(clippy::module_inception)]
 pub mod operator;
+pub mod state;
 
 pub use cost::CostModel;
 pub use observe::{ObservationHub, QueryStats};
 pub use operator::{ComplexEvent, Operator, PmRef, ProcessOutcome};
+pub use state::{BatchResult, OperatorState, ShedOutcome};

@@ -10,6 +10,7 @@
 use std::collections::HashSet;
 
 use crate::events::Event;
+use crate::model::UtilityTable;
 use crate::nfa::{CompiledQuery, PartialMatch, StepResult};
 use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
@@ -17,6 +18,7 @@ use crate::windows::QueryWindows;
 
 use super::cost::CostModel;
 use super::observe::ObservationHub;
+use super::state::{BatchResult, OperatorState, ShedOutcome};
 
 /// A detected complex event.  Identity `(query, window_open_seq,
 /// key_bits)` is stable across shedding decisions, which is what makes
@@ -90,6 +92,13 @@ pub struct Operator {
     /// EWMA of events per ms of source time (for time-window `R_w`)
     events_per_ms: f64,
     prev_ts: u64,
+    /// per-query utility tables for [`Operator::shed_lowest`]
+    /// (installed via [`OperatorState::install_tables`]; may be empty,
+    /// in which case every PM scores utility 0)
+    tables: Vec<UtilityTable>,
+    /// scratch buffers reused across shed passes (no hot-path alloc)
+    shed_scratch: Vec<PmRef>,
+    shed_keyed: Vec<(f64, u64)>,
 }
 
 impl Operator {
@@ -112,6 +121,9 @@ impl Operator {
             last_ts: 0,
             events_per_ms: 1.0,
             prev_ts: 0,
+            tables: Vec::new(),
+            shed_scratch: Vec::new(),
+            shed_keyed: Vec::new(),
         }
     }
 
@@ -422,6 +434,134 @@ impl Operator {
         }
         self.n_pms = 0;
     }
+
+    /// Open windows across all queries.
+    pub fn open_windows(&self) -> usize {
+        self.wins.iter().map(|q| q.windows.len()).sum()
+    }
+
+    /// Install the utility tables [`Operator::shed_lowest`] ranks PMs
+    /// by (one table per query; model retraining replaces them).
+    pub fn install_tables(&mut self, tables: &[UtilityTable]) {
+        self.tables = tables.to_vec();
+    }
+
+    /// Paper Algorithm 2: drop the `rho` lowest-utility PMs, ranked by
+    /// the installed tables (a PM whose query has no table scores 0).
+    ///
+    /// Selection uses `select_nth_unstable` (expected O(n)) instead of
+    /// the paper's full sort (O(n log n)), with a NaN-safe total order:
+    /// a poisoned (NaN) utility sorts above every number, so such PMs
+    /// are treated as high-utility and survive.
+    pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
+        let mut scratch = std::mem::take(&mut self.shed_scratch);
+        let mut keyed = std::mem::take(&mut self.shed_keyed);
+        self.pm_refs(&mut scratch);
+        let n = scratch.len();
+        let mut out = ShedOutcome {
+            scanned: n,
+            dropped: 0,
+            per_shard: vec![(n, 0)],
+        };
+        if n > 0 && rho > 0 {
+            let rho = rho.min(n);
+            keyed.clear();
+            keyed.reserve(n);
+            for r in &scratch {
+                let u = self
+                    .tables
+                    .get(r.query)
+                    .map_or(0.0, |t| t.lookup(r.state, r.remaining));
+                keyed.push((u, r.pm_id));
+            }
+            if rho < n {
+                keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
+            }
+            let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+            out.dropped = self.drop_pms(&ids);
+            out.per_shard[0].1 = out.dropped;
+        }
+        self.shed_scratch = scratch;
+        self.shed_keyed = keyed;
+        out
+    }
+}
+
+impl OperatorState for Operator {
+    fn parallelism(&self) -> usize {
+        1
+    }
+
+    fn pm_count(&self) -> usize {
+        Operator::pm_count(self)
+    }
+
+    fn open_windows(&self) -> usize {
+        Operator::open_windows(self)
+    }
+
+    fn match_probability(&self) -> f64 {
+        Operator::match_probability(self)
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn pm_refs(&self, buf: &mut Vec<PmRef>) {
+        Operator::pm_refs(self, buf);
+    }
+
+    fn install_tables(&mut self, tables: &[UtilityTable]) {
+        Operator::install_tables(self, tables);
+    }
+
+    fn set_cost_factors(&mut self, factors: &[f64]) {
+        assert_eq!(
+            factors.len(),
+            self.cost.check_factor.len(),
+            "one factor per query"
+        );
+        self.cost.check_factor = factors.to_vec();
+    }
+
+    fn set_obs_enabled(&mut self, enabled: bool) {
+        self.obs.enabled = enabled;
+    }
+
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult {
+        if let Some(m) = shed_mask {
+            assert_eq!(events.len(), m.len(), "one mask bit per event");
+        }
+        let mut out = BatchResult::default();
+        for (i, e) in events.iter().enumerate() {
+            let shed = shed_mask.is_some_and(|m| m[i]);
+            let o = if shed {
+                self.process_bookkeeping(e)
+            } else {
+                self.process_event(e)
+            };
+            out.cost_ns_max += o.cost_ns;
+            out.cost_ns_total += o.cost_ns;
+            out.checks += o.checks;
+            out.opened += o.opened;
+            out.closed += o.closed;
+            out.completions.extend(o.completions);
+        }
+        out
+    }
+
+    fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
+        Operator::shed_lowest(self, rho)
+    }
+
+    fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
+        Operator::drop_random(self, rho, rng)
+    }
+
+    fn reset_state(&mut self) {
+        Operator::reset_state(self);
+    }
 }
 
 #[cfg(test)]
@@ -603,6 +743,114 @@ mod tests {
             // the last ws events
             assert!(op.last_seq < r.open_seq + 5000);
         }
+    }
+
+    fn tabled_operator() -> Operator {
+        use crate::model::{ModelBuilder, ModelConfig};
+        let mut op = Operator::new(q4(6, 4000, 200).queries);
+        let mut g = BusGen::with_seed(7);
+        for _ in 0..40_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let mut mb = ModelBuilder::new(
+            ModelConfig {
+                eta: 100,
+                max_bins: 64,
+                use_tau: true,
+            },
+            Box::new(crate::runtime::FallbackEngine),
+        );
+        let tables = mb.build(&op).unwrap();
+        op.install_tables(&tables);
+        op
+    }
+
+    fn utility(op: &Operator, r: &PmRef) -> f64 {
+        // mirror of shed_lowest's ranking, for assertions
+        op.tables[r.query].lookup(r.state, r.remaining)
+    }
+
+    #[test]
+    fn shed_lowest_drops_exactly_rho() {
+        let mut op = tabled_operator();
+        let before = op.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let out = op.shed_lowest(10);
+        assert_eq!(out.scanned, before);
+        assert_eq!(out.dropped, 10);
+        assert_eq!(out.per_shard, vec![(before, 10)]);
+        assert_eq!(op.pm_count(), before - 10);
+    }
+
+    #[test]
+    fn shed_lowest_drops_the_lowest_utilities() {
+        let mut op = tabled_operator();
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        let mut utils: Vec<f64> = refs.iter().map(|r| utility(&op, r)).collect();
+        utils.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rho = 8;
+        let threshold = utils[rho - 1];
+        op.shed_lowest(rho);
+        // every survivor has utility >= the rho-th smallest
+        let mut after = Vec::new();
+        op.pm_refs(&mut after);
+        for r in &after {
+            assert!(
+                utility(&op, r) >= threshold - 1e-12,
+                "survivor below threshold"
+            );
+        }
+    }
+
+    #[test]
+    fn shed_lowest_survives_nan_utilities() {
+        // regression: partial_cmp().unwrap() panicked when a utility
+        // table was poisoned with NaN; total_cmp must select anyway
+        let mut op = tabled_operator();
+        let mut tables = op.tables.clone();
+        for table in &mut tables {
+            for row in &mut table.rows {
+                for (i, v) in row.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *v = f64::NAN;
+                    }
+                }
+            }
+        }
+        op.install_tables(&tables);
+        let before = op.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let rho = 10;
+        let out = op.shed_lowest(rho);
+        assert_eq!(out.scanned, before);
+        assert_eq!(out.dropped, rho, "exactly rho victims despite NaNs");
+        assert_eq!(op.pm_count(), before - rho);
+    }
+
+    #[test]
+    fn shed_lowest_overdraw_drops_all() {
+        let mut op = tabled_operator();
+        let before = op.pm_count();
+        let out = op.shed_lowest(before + 1000);
+        assert_eq!(out.dropped, before);
+        assert_eq!(op.pm_count(), 0);
+    }
+
+    #[test]
+    fn shed_lowest_without_tables_still_drops() {
+        // no tables installed: every PM scores utility 0 and exactly
+        // rho of them are removed (deterministic tie-break by position)
+        let mut op = Operator::new(q4(6, 5000, 250).queries);
+        let mut g = BusGen::with_seed(3);
+        for _ in 0..20_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        let before = op.pm_count();
+        assert!(before > 10, "need PMs, got {before}");
+        let out = op.shed_lowest(before / 2);
+        assert_eq!(out.dropped, before / 2);
+        assert_eq!(op.pm_count(), before - out.dropped);
     }
 
     #[test]

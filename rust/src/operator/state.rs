@@ -1,0 +1,107 @@
+//! The [`OperatorState`] abstraction: one surface for everything a
+//! shedding strategy needs from the engine, implemented by both the
+//! single-threaded [`Operator`](super::Operator) and the sharded
+//! [`ShardedOperator`](crate::runtime::ShardedOperator).
+//!
+//! Before this trait existed, strategies were written twice: once
+//! against `Operator` (per-event) and once against `ShardedOperator`
+//! (per-batch, via ad-hoc inherent methods).  Now a strategy is written
+//! once against `&mut dyn OperatorState` and runs unchanged on 1..N
+//! worker shards; `parallelism()` is the only knob that differs (the
+//! overload detector scales its latency predictions by it).
+
+use crate::events::Event;
+use crate::model::UtilityTable;
+use crate::util::Rng;
+
+use super::cost::CostModel;
+use super::operator::{ComplexEvent, PmRef};
+
+/// Merged outcome of processing one event batch on an operator state
+/// (any shard count).  For the single-threaded operator the makespan
+/// equals the total; for N shards the makespan is the slowest shard's
+/// cost (the batch runs in parallel).
+#[derive(Debug, Default, Clone)]
+pub struct BatchResult {
+    /// completions in the canonical deterministic order
+    pub completions: Vec<ComplexEvent>,
+    /// virtual batch makespan (ns): what the clock advances by
+    pub cost_ns_max: f64,
+    /// summed virtual cost over all shards (total work, ns)
+    pub cost_ns_total: f64,
+    /// (PM, event) checks performed
+    pub checks: u64,
+    /// windows opened
+    pub opened: usize,
+    /// windows closed
+    pub closed: usize,
+}
+
+/// Outcome of one utility-ordered shed pass (paper Alg. 2).
+#[derive(Debug, Default, Clone)]
+pub struct ShedOutcome {
+    /// PMs scanned globally (the live population before the drop)
+    pub scanned: usize,
+    /// PMs dropped globally
+    pub dropped: usize,
+    /// per shard: (scanned, dropped) — used to cost the pass as the
+    /// slowest shard's scan + drop (shards shed in parallel)
+    pub per_shard: Vec<(usize, usize)>,
+}
+
+/// Everything a load-shedding strategy may ask of the engine,
+/// independent of how many worker shards back it.
+///
+/// Implementations: [`Operator`](super::Operator) (`parallelism() ==
+/// 1`) and [`ShardedOperator`](crate::runtime::ShardedOperator)
+/// (`parallelism() == n_shards()`).
+pub trait OperatorState {
+    /// Worker parallelism: 1 for the single-threaded operator, the
+    /// shard count for the sharded runtime.  Latency predictions scale
+    /// by `1/parallelism` (work divides across workers).
+    fn parallelism(&self) -> usize;
+
+    /// Global live PM count (the paper's `n_pm`).
+    fn pm_count(&self) -> usize;
+
+    /// Open windows across the whole state (E-BL's per-window cost).
+    fn open_windows(&self) -> usize;
+
+    /// Completed-over-created PM ratio (the paper's match probability).
+    fn match_probability(&self) -> f64;
+
+    /// The virtual cost model used for shed-cost accounting.
+    fn cost(&self) -> &CostModel;
+
+    /// Enumerate every live PM with its shedding coordinates into
+    /// `buf` (cleared first).  Note that `pm_id` is only unique within
+    /// one backend shard; `(query, open_seq, key_bits, state)` is the
+    /// sharding-invariant identity.
+    fn pm_refs(&self, buf: &mut Vec<PmRef>);
+
+    /// Install per-query utility tables (global query order), used by
+    /// [`Self::shed_lowest`] and refreshed on model retraining.
+    fn install_tables(&mut self, tables: &[UtilityTable]);
+
+    /// Apply per-query check-cost factors (global query order).
+    fn set_cost_factors(&mut self, factors: &[f64]);
+
+    /// Toggle observation capture.
+    fn set_obs_enabled(&mut self, enabled: bool);
+
+    /// Process a batch of events.  Events whose `shed_mask` bit is set
+    /// get window bookkeeping only (black-box event-shedding semantics:
+    /// shed events still exist in the stream).
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult;
+
+    /// Drop the `rho` globally lowest-utility PMs (paper Alg. 2) using
+    /// the installed tables; missing tables score a PM at utility 0.
+    fn shed_lowest(&mut self, rho: usize) -> ShedOutcome;
+
+    /// Drop `rho` PMs uniformly at random (the PM-BL baseline).
+    /// Returns how many were actually dropped.
+    fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize;
+
+    /// Remove every PM and window (between experiment phases).
+    fn reset_state(&mut self);
+}

@@ -1,0 +1,616 @@
+//! The engine façade: a fluent [`PipelineBuilder`] producing a
+//! [`Pipeline`] that owns the whole measurement machinery — operator
+//! state (single-threaded or sharded), shedding strategy, overload
+//! detector, virtual clock, latency accounting, and drift-triggered
+//! model retraining (paper §III-D).
+//!
+//! ```no_run
+//! use pspice::pipeline::Pipeline;
+//! use pspice::query::builtin::q4;
+//! use pspice::shedding::ShedderKind;
+//!
+//! let mut pipe = Pipeline::builder()
+//!     .queries(q4(4, 2_000, 250).queries)
+//!     .shedder(ShedderKind::PSpice)
+//!     .latency_bound_ms(0.5)
+//!     .shards(4)
+//!     .batch(256)
+//!     .build()
+//!     .unwrap();
+//! // … then pipe.prime(..), pipe.feed(..) or pipe.run_to_end()
+//! ```
+//!
+//! Two consumption styles:
+//!
+//! * **Batch** — give the builder the measurement trace via
+//!   [`PipelineBuilder::source`] and call [`Pipeline::run_to_end`];
+//!   this is what [`crate::harness::run_experiment`] does.
+//! * **Incremental** — call [`Pipeline::feed`] with event slices as
+//!   they become available (embedding the engine in a host system);
+//!   each call returns the complex events it detected.
+//!
+//! The single-threaded backend (`shards == 1`) dispatches batches of
+//! one event, which reproduces the classic per-event operator loop
+//! exactly; `shards > 1` dispatches `batch`-sized micro-batches to the
+//! sharded runtime.  Either way there is exactly one measurement loop.
+
+use std::time::Instant;
+
+use crate::events::Event;
+use crate::metrics::{LatencyTracker, Throughput};
+use crate::model::{DriftDetector, ModelBuilder, UtilityTable};
+use crate::operator::{ComplexEvent, Operator, OperatorState};
+use crate::query::Query;
+use crate::runtime::ShardedOperator;
+use crate::shedding::{OverloadDetector, ShedReport, Shedder, ShedderKind};
+use crate::sim::{RateSource, SimClock};
+
+/// The operator state behind a pipeline: the classic single-threaded
+/// operator, or the sharded multi-worker runtime.
+enum Backend {
+    /// one operator, per-event dispatch
+    Single(Operator),
+    /// query-partitioned worker shards, micro-batch dispatch
+    Sharded(ShardedOperator),
+}
+
+impl Backend {
+    fn state(&mut self) -> &mut dyn OperatorState {
+        match self {
+            Backend::Single(op) => op,
+            Backend::Sharded(sop) => sop,
+        }
+    }
+
+    fn state_ref(&self) -> &dyn OperatorState {
+        match self {
+            Backend::Single(op) => op,
+            Backend::Sharded(sop) => sop,
+        }
+    }
+}
+
+/// Fluent configuration for a [`Pipeline`].  Obtain via
+/// [`Pipeline::builder`]; every setter returns `self`.
+pub struct PipelineBuilder {
+    queries: Vec<Query>,
+    shedder: ShedderKind,
+    custom: Option<Box<dyn Shedder>>,
+    lb_ms: f64,
+    shards: usize,
+    batch: usize,
+    seed: u64,
+    key_slot: usize,
+    detector: Option<OverloadDetector>,
+    tables: Vec<UtilityTable>,
+    cost_factors: Vec<f64>,
+    arrivals: Option<RateSource>,
+    source: Option<Vec<Event>>,
+    retrain_every: u64,
+    drift_threshold: f64,
+    latency_stride: u64,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        PipelineBuilder {
+            queries: Vec::new(),
+            shedder: ShedderKind::None,
+            custom: None,
+            lb_ms: 1.0,
+            shards: 1,
+            batch: 256,
+            seed: 42,
+            key_slot: 0,
+            detector: None,
+            tables: Vec::new(),
+            cost_factors: Vec::new(),
+            arrivals: None,
+            source: None,
+            retrain_every: 0,
+            drift_threshold: 0.01,
+            latency_stride: 1,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    /// The query set the pipeline evaluates (required, non-empty).
+    pub fn queries(mut self, queries: Vec<Query>) -> Self {
+        self.queries = queries;
+        self
+    }
+
+    /// Shedding strategy selector (default: [`ShedderKind::None`]).
+    pub fn shedder(mut self, kind: ShedderKind) -> Self {
+        self.shedder = kind;
+        self
+    }
+
+    /// Plug a custom [`Shedder`] implementation (e.g. an hSPICE-style
+    /// strategy) instead of a built-in kind.  The pipeline still
+    /// installs [`PipelineBuilder::tables`] on the state, so custom
+    /// strategies may use [`OperatorState::shed_lowest`].  Custom
+    /// strategies report the closest built-in [`Shedder::kind`]
+    /// (usually [`ShedderKind::None`]) and may override
+    /// [`Shedder::name`]; the kind also selects the model
+    /// configuration used for drift retraining.
+    pub fn custom_shedder(mut self, shedder: Box<dyn Shedder>) -> Self {
+        self.custom = Some(shedder);
+        self
+    }
+
+    /// Latency bound LB in virtual milliseconds (default 1.0).
+    pub fn latency_bound_ms(mut self, lb_ms: f64) -> Self {
+        self.lb_ms = lb_ms;
+        self
+    }
+
+    /// Worker shards (default 1 = the classic single-threaded
+    /// operator; >1 = the sharded runtime, capped at the query count).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Events per dispatched micro-batch in sharded mode (default 256;
+    /// the single-threaded backend always dispatches per event).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Experiment seed feeding the per-strategy RNG schedule.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Attribute slot holding the correlation key (E-BL's type
+    /// utilities; see [`crate::datasets::DatasetKind::key_slot`]).
+    pub fn key_slot(mut self, slot: usize) -> Self {
+        self.key_slot = slot;
+        self
+    }
+
+    /// A calibrated overload detector (untrained by default — an
+    /// untrained detector never sheds).
+    pub fn detector(mut self, detector: OverloadDetector) -> Self {
+        self.detector = Some(detector);
+        self
+    }
+
+    /// Utility tables for white-box shedding (one per query, global
+    /// order); installed on the operator state when the strategy ranks
+    /// PMs by utility.
+    pub fn tables(mut self, tables: Vec<UtilityTable>) -> Self {
+        self.tables = tables;
+        self
+    }
+
+    /// Per-query check-cost factors (the paper's Fig. 8 τ ratios).
+    pub fn cost_factors(mut self, factors: Vec<f64>) -> Self {
+        self.cost_factors = factors;
+        self
+    }
+
+    /// Deterministic arrival schedule driving queueing latency.
+    /// Without one, events are treated as arriving the moment they are
+    /// fed (`l_q = 0`, no latency accounting) — the embedding mode.
+    pub fn arrivals(mut self, src: RateSource) -> Self {
+        self.arrivals = Some(src);
+        self
+    }
+
+    /// The measurement trace consumed by [`Pipeline::run_to_end`]
+    /// (incremental users call [`Pipeline::feed`] instead).
+    pub fn source(mut self, events: Vec<Event>) -> Self {
+        self.source = Some(events);
+        self
+    }
+
+    /// Drift-triggered model retraining (paper §III-D): check the
+    /// transition-matrix drift every `every` events and rebuild the
+    /// utility tables past `threshold` (0 disables; requires
+    /// `shards == 1`).
+    pub fn retrain(mut self, every: u64, threshold: f64) -> Self {
+        self.retrain_every = every;
+        self.drift_threshold = threshold;
+        self
+    }
+
+    /// Keep every `stride`-th latency sample in the plot trace.
+    pub fn latency_stride(mut self, stride: u64) -> Self {
+        self.latency_stride = stride;
+        self
+    }
+
+    /// Validate and assemble the [`Pipeline`].
+    pub fn build(self) -> crate::Result<Pipeline> {
+        anyhow::ensure!(!self.queries.is_empty(), "pipeline needs queries");
+        anyhow::ensure!(self.shards >= 1, "shards must be at least 1");
+        anyhow::ensure!(self.batch >= 1, "batch must be at least 1");
+        anyhow::ensure!(
+            self.retrain_every == 0 || self.shards == 1,
+            "drift retraining is not yet supported with shards > 1"
+        );
+        let lb_ns = self.lb_ms * 1e6;
+        let detector = self
+            .detector
+            .unwrap_or_else(|| OverloadDetector::new(lb_ns, 0.02 * lb_ns));
+        let shedder = match self.custom {
+            Some(s) => s,
+            None => self
+                .shedder
+                .build_with(&self.queries, &detector, self.key_slot, self.seed),
+        };
+        let mut backend = if self.shards > 1 {
+            Backend::Sharded(ShardedOperator::new(self.queries, self.shards))
+        } else {
+            Backend::Single(Operator::new(self.queries))
+        };
+        if !self.cost_factors.is_empty() {
+            backend.state().set_cost_factors(&self.cost_factors);
+        }
+        // install unconditionally: strategies that never call
+        // shed_lowest simply ignore the tables, and custom shedders
+        // get them regardless of which kind they report as
+        if !self.tables.is_empty() {
+            backend.state().install_tables(&self.tables);
+        }
+        // sharded workers never capture observations (retraining is
+        // single-threaded only); the single backend keeps capturing
+        // through prime() and flips to its measurement setting on the
+        // first feed()
+        if matches!(backend, Backend::Sharded(_)) {
+            backend.state().set_obs_enabled(false);
+        }
+        let dispatch = match &backend {
+            Backend::Single(_) => 1,
+            Backend::Sharded(_) => self.batch,
+        };
+        let model_builder = (self.retrain_every > 0)
+            .then(|| ModelBuilder::with_auto_engine(shedder.kind().model_config()));
+        Ok(Pipeline {
+            backend,
+            shedder,
+            clock: SimClock::new(),
+            arrivals: self.arrivals,
+            latency: LatencyTracker::new(lb_ns, self.latency_stride),
+            dispatch,
+            idx: 0,
+            totals: ShedReport::default(),
+            busy_ns: 0.0,
+            peak_pms: 0,
+            retrains: 0,
+            retrain_every: self.retrain_every,
+            drift_threshold: self.drift_threshold,
+            model_builder,
+            drift: None,
+            started: false,
+            wall: Throughput::new(),
+            source: self.source,
+        })
+    }
+}
+
+/// Summary of a pipeline run (plus every complex event it detected).
+#[derive(Debug, Clone)]
+pub struct PipelineRun {
+    /// complex events detected during the run, in detection order
+    pub completions: Vec<ComplexEvent>,
+    /// latency trace against the bound
+    pub latency: LatencyTracker,
+    /// shed time / operator busy time
+    pub shed_overhead: f64,
+    /// accumulated shed totals (PMs, events, cost)
+    pub totals: ShedReport,
+    /// peak live PM count seen
+    pub peak_pms: usize,
+    /// drift-triggered model rebuilds
+    pub retrains: u32,
+    /// strategy name
+    pub shedder: &'static str,
+    /// worker shards that actually ran (the runtime caps the requested
+    /// count at the query count)
+    pub shards: usize,
+    /// wall-clock events/s across all feeds (not virtual time)
+    pub wall_events_per_sec: f64,
+}
+
+/// The assembled engine: one measurement loop for every strategy and
+/// every backend.  See the [module docs](self) for the two consumption
+/// styles.
+pub struct Pipeline {
+    backend: Backend,
+    shedder: Box<dyn Shedder>,
+    clock: SimClock,
+    arrivals: Option<RateSource>,
+    latency: LatencyTracker,
+    /// events per dispatch unit (1 on the single-threaded backend)
+    dispatch: usize,
+    /// measurement events fed so far (arrival index)
+    idx: u64,
+    totals: ShedReport,
+    busy_ns: f64,
+    peak_pms: usize,
+    retrains: u32,
+    retrain_every: u64,
+    drift_threshold: f64,
+    model_builder: Option<ModelBuilder>,
+    drift: Option<DriftDetector>,
+    started: bool,
+    wall: Throughput,
+    source: Option<Vec<Event>>,
+}
+
+impl Pipeline {
+    /// Start configuring a pipeline.
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    /// Worker shards actually running (1 on the single-threaded
+    /// backend; the sharded runtime caps the request at the query
+    /// count).
+    pub fn shards(&self) -> usize {
+        match &self.backend {
+            Backend::Single(_) => 1,
+            Backend::Sharded(sop) => sop.n_shards(),
+        }
+    }
+
+    /// The operator state, for introspection or direct driving.
+    pub fn state(&mut self) -> &mut dyn OperatorState {
+        self.backend.state()
+    }
+
+    /// Global live PM count.
+    pub fn pm_count(&self) -> usize {
+        self.backend.state_ref().pm_count()
+    }
+
+    /// Accumulated shed totals so far.
+    pub fn totals(&self) -> ShedReport {
+        self.totals
+    }
+
+    /// Warm the operator state below capacity (no arrival schedule, no
+    /// latency accounting, no shedding): the calibration prefix of an
+    /// experiment, or historical state for an embedding.  Must be
+    /// called before the first [`Pipeline::feed`].  Returns the
+    /// complex events the warm-up detected.
+    pub fn prime(&mut self, events: &[Event]) -> Vec<ComplexEvent> {
+        assert!(!self.started, "prime() must run before feed()");
+        let mut ces = Vec::new();
+        for chunk in events.chunks(self.dispatch) {
+            ces.extend(self.backend.state().process_batch(chunk, None).completions);
+        }
+        ces
+    }
+
+    /// First-feed transition: freeze calibration-time observation
+    /// capture (unless retraining keeps consuming it) and snapshot the
+    /// drift baseline.
+    fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        if let Backend::Single(op) = &mut self.backend {
+            let retraining = self.retrain_every > 0;
+            op.obs.enabled = retraining;
+            if retraining {
+                self.drift = Some(DriftDetector::snapshot(&op.obs, self.drift_threshold));
+            }
+        }
+    }
+
+    /// §III-D: periodic drift check → rebuild the model.  Building the
+    /// candidate matrix is cheap (counts → probabilities); the full
+    /// table rebuild runs only on actual drift.
+    fn maybe_retrain(&mut self) -> crate::Result<()> {
+        if self.retrain_every == 0 || self.idx % self.retrain_every != 0 {
+            return Ok(());
+        }
+        let Backend::Single(op) = &mut self.backend else {
+            return Ok(());
+        };
+        let Some(d) = &self.drift else {
+            return Ok(());
+        };
+        let (_mse, drifted) = d.check(&op.obs);
+        if drifted {
+            let builder = self
+                .model_builder
+                .as_mut()
+                .expect("retraining always has a model builder");
+            let fresh = builder.build(op)?;
+            op.install_tables(&fresh);
+            self.drift = Some(DriftDetector::snapshot(&op.obs, self.drift_threshold));
+            self.retrains += 1;
+        }
+        Ok(())
+    }
+
+    /// Feed measurement events through the shed-then-process loop in
+    /// dispatch units, advancing the virtual clock by shed cost plus
+    /// the batch makespan.  Returns the complex events detected.
+    pub fn feed(&mut self, events: &[Event]) -> crate::Result<Vec<ComplexEvent>> {
+        self.start();
+        let wall_start = Instant::now();
+        let mut ces = Vec::new();
+        for chunk in events.chunks(self.dispatch) {
+            // the batch starts service once its last event has arrived
+            // (or later if the operator is still busy); l_q is measured
+            // from the batch's first arrival
+            let l_q = match &self.arrivals {
+                Some(src) => {
+                    let first = src.arrival_ns(self.idx);
+                    let last = src.arrival_ns(self.idx + chunk.len() as u64 - 1);
+                    self.clock.begin_service(last);
+                    (self.clock.now_ns() - first).max(0.0)
+                }
+                None => 0.0,
+            };
+            let rep = self.shedder.on_batch(chunk, l_q, self.backend.state());
+            self.clock.advance(rep.cost_ns);
+            self.busy_ns += rep.cost_ns;
+            self.totals += rep;
+            let mask = self.shedder.event_mask();
+            let out = self.backend.state().process_batch(chunk, mask);
+            // virtual time advances by the batch makespan (the slowest
+            // shard; on the single backend, the event's cost)
+            self.clock.advance(out.cost_ns_max);
+            self.busy_ns += out.cost_ns_max;
+            ces.extend(out.completions);
+            if let Some(src) = &self.arrivals {
+                let end = self.clock.now_ns();
+                for j in 0..chunk.len() as u64 {
+                    self.latency.record(end, end - src.arrival_ns(self.idx + j));
+                }
+            }
+            self.peak_pms = self.peak_pms.max(self.backend.state_ref().pm_count());
+            self.idx += chunk.len() as u64;
+            self.maybe_retrain()?;
+        }
+        self.wall
+            .record(events.len() as u64, wall_start.elapsed().as_secs_f64());
+        Ok(ces)
+    }
+
+    /// Drain the trace given to [`PipelineBuilder::source`] through
+    /// [`Pipeline::feed`] and summarize the run.
+    pub fn run_to_end(&mut self) -> crate::Result<PipelineRun> {
+        let trace = self
+            .source
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("run_to_end needs a .source(..) trace"))?;
+        let completions = self.feed(&trace)?;
+        Ok(self.summary(completions))
+    }
+
+    /// Summarize the run so far (for [`Pipeline::feed`]-style users;
+    /// `completions` become part of the summary).
+    pub fn summary(&self, completions: Vec<ComplexEvent>) -> PipelineRun {
+        PipelineRun {
+            completions,
+            latency: self.latency.clone(),
+            shed_overhead: if self.busy_ns > 0.0 {
+                self.totals.cost_ns / self.busy_ns
+            } else {
+                0.0
+            },
+            totals: self.totals,
+            peak_pms: self.peak_pms,
+            retrains: self.retrains,
+            shedder: self.shedder.name(),
+            shards: self.shards(),
+            wall_events_per_sec: self.wall.events_per_sec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::BusGen;
+    use crate::events::EventStream;
+    use crate::query::builtin::q4;
+
+    fn bus_queries() -> Vec<Query> {
+        q4(4, 2_000, 250).queries
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert!(Pipeline::builder().build().is_err(), "no queries");
+        assert!(Pipeline::builder()
+            .queries(bus_queries())
+            .shards(0)
+            .build()
+            .is_err());
+        assert!(Pipeline::builder()
+            .queries(bus_queries())
+            .batch(0)
+            .build()
+            .is_err());
+        assert!(Pipeline::builder()
+            .queries(bus_queries())
+            .shards(2)
+            .retrain(1_000, 0.01)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn feed_without_shedding_matches_plain_operator() {
+        let events = BusGen::with_seed(3).take_events(8_000);
+        let mut op = Operator::new(bus_queries());
+        let mut expected = Vec::new();
+        for e in &events {
+            expected.extend(op.process_event(e).completions);
+        }
+
+        let mut pipe = Pipeline::builder()
+            .queries(bus_queries())
+            .build()
+            .unwrap();
+        let mut got = pipe.prime(&events[..4_000]);
+        got.extend(pipe.feed(&events[4_000..]).unwrap());
+        assert_eq!(got, expected);
+        assert_eq!(pipe.pm_count(), op.pm_count());
+        assert_eq!(pipe.totals(), ShedReport::default());
+        assert_eq!(pipe.shards(), 1);
+    }
+
+    #[test]
+    fn sharded_feed_matches_single_feed() {
+        // two q4 copies so a 2-shard split actually distributes
+        let mut queries = bus_queries();
+        queries.extend(q4(3, 1_500, 300).queries);
+        let events = BusGen::with_seed(3).take_events(20_000);
+
+        let run = |shards: usize| {
+            let mut pipe = Pipeline::builder()
+                .queries(queries.clone())
+                .shards(shards)
+                .batch(512)
+                .build()
+                .unwrap();
+            let mut ces = pipe.prime(&events[..2_000]);
+            ces.extend(pipe.feed(&events[2_000..]).unwrap());
+            crate::runtime::sharded::sort_completions(&mut ces);
+            (ces, pipe.pm_count())
+        };
+        let (ces1, pms1) = run(1);
+        let (ces2, pms2) = run(2);
+        assert!(!ces1.is_empty(), "scenario must detect something");
+        assert_eq!(ces1, ces2);
+        assert_eq!(pms1, pms2);
+    }
+
+    #[test]
+    fn incremental_feed_equals_one_shot_feed() {
+        let events = BusGen::with_seed(5).take_events(6_000);
+        let mk = || {
+            Pipeline::builder()
+                .queries(bus_queries())
+                .arrivals(RateSource::from_capacity(1_000.0, 1.2, 0.0))
+                .build()
+                .unwrap()
+        };
+        let mut one = mk();
+        let a = one.feed(&events).unwrap();
+        let mut inc = mk();
+        let mut b = Vec::new();
+        for chunk in events.chunks(777) {
+            b.extend(inc.feed(chunk).unwrap());
+        }
+        assert_eq!(a, b);
+        assert_eq!(
+            one.summary(Vec::new()).latency.stats.count(),
+            inc.summary(Vec::new()).latency.stats.count()
+        );
+    }
+}

@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 
 use crate::events::Event;
 use crate::model::UtilityTable;
-use crate::operator::{ComplexEvent, CostModel};
+use crate::operator::{BatchResult, CostModel, OperatorState, PmRef, ShedOutcome};
 use crate::query::Query;
 use crate::util::Rng;
 
@@ -75,35 +75,6 @@ impl ShardPlan {
         }
         None
     }
-}
-
-/// Merged outcome of one dispatched batch.
-#[derive(Debug, Default, Clone)]
-pub struct ShardedOutcome {
-    /// all shards' completions in canonical deterministic order
-    pub completions: Vec<ComplexEvent>,
-    /// slowest shard's virtual cost (the batch makespan under parallel
-    /// execution)
-    pub cost_ns_max: f64,
-    /// summed virtual cost over all shards (total work)
-    pub cost_ns_total: f64,
-    /// (PM, event) checks over all shards
-    pub checks: u64,
-    /// windows opened over all shards
-    pub opened: usize,
-    /// windows closed over all shards
-    pub closed: usize,
-}
-
-/// Outcome of one global shed pass.
-#[derive(Debug, Default, Clone)]
-pub struct ShedOutcome {
-    /// PMs scanned globally (the live population before the drop)
-    pub scanned: usize,
-    /// PMs dropped globally
-    pub dropped: usize,
-    /// per shard: (scanned, dropped)
-    pub per_shard: Vec<(usize, usize)>,
 }
 
 /// The sharded operator façade.  Owns one worker thread per shard; all
@@ -226,8 +197,8 @@ impl ShardedOperator {
         &mut self,
         events: &[Event],
         mask: Option<Arc<Vec<bool>>>,
-    ) -> ShardedOutcome {
-        let mut out = ShardedOutcome::default();
+    ) -> BatchResult {
+        let mut out = BatchResult::default();
         if events.is_empty() {
             return out;
         }
@@ -270,7 +241,7 @@ impl ShardedOperator {
 
     /// Process a batch of events on every shard, merging completions
     /// deterministically.
-    pub fn process_batch(&mut self, events: &[Event]) -> ShardedOutcome {
+    pub fn process_batch(&mut self, events: &[Event]) -> BatchResult {
         self.dispatch(events, None)
     }
 
@@ -281,7 +252,7 @@ impl ShardedOperator {
         &mut self,
         events: &[Event],
         dropped: &[bool],
-    ) -> ShardedOutcome {
+    ) -> BatchResult {
         assert_eq!(events.len(), dropped.len());
         self.dispatch(events, Some(Arc::new(dropped.to_vec())))
     }
@@ -435,6 +406,79 @@ impl ShardedOperator {
         self.pms.fill(0);
         self.open_windows = 0;
     }
+
+    /// Enumerate every live PM across all shards (shard order, then
+    /// each shard's enumeration order).  Query indices are global;
+    /// `pm_id` is only unique within its shard.
+    pub fn pm_refs(&self, buf: &mut Vec<PmRef>) {
+        buf.clear();
+        for s in 0..self.n_shards() {
+            self.send(s, Request::PmRefs);
+        }
+        for s in 0..self.n_shards() {
+            match self.recv(s) {
+                Response::PmRefs(refs) => buf.extend(refs),
+                _ => unreachable!("protocol violation: expected pm refs"),
+            }
+        }
+    }
+}
+
+impl OperatorState for ShardedOperator {
+    fn parallelism(&self) -> usize {
+        self.n_shards()
+    }
+
+    fn pm_count(&self) -> usize {
+        ShardedOperator::pm_count(self)
+    }
+
+    fn open_windows(&self) -> usize {
+        ShardedOperator::open_windows(self)
+    }
+
+    fn match_probability(&self) -> f64 {
+        ShardedOperator::match_probability(self)
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn pm_refs(&self, buf: &mut Vec<PmRef>) {
+        ShardedOperator::pm_refs(self, buf);
+    }
+
+    fn install_tables(&mut self, tables: &[UtilityTable]) {
+        self.set_tables(tables);
+    }
+
+    fn set_cost_factors(&mut self, factors: &[f64]) {
+        ShardedOperator::set_cost_factors(self, factors);
+    }
+
+    fn set_obs_enabled(&mut self, enabled: bool) {
+        ShardedOperator::set_obs_enabled(self, enabled);
+    }
+
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult {
+        match shed_mask {
+            Some(m) => self.process_batch_masked(events, m),
+            None => self.dispatch(events, None),
+        }
+    }
+
+    fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
+        ShardedOperator::shed_lowest(self, rho)
+    }
+
+    fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
+        ShardedOperator::drop_random(self, rho, rng)
+    }
+
+    fn reset_state(&mut self) {
+        ShardedOperator::reset_state(self);
+    }
 }
 
 impl Drop for ShardedOperator {
@@ -559,6 +603,23 @@ mod tests {
         let rest = sharded.pm_count();
         assert_eq!(sharded.drop_random(rest + 100, &mut rng), rest);
         assert_eq!(sharded.pm_count(), 0);
+    }
+
+    #[test]
+    fn pm_refs_enumerates_across_shards() {
+        let queries = q1(2_000).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(10_000)
+        };
+        let mut sharded = ShardedOperator::new(queries, 2);
+        sharded.process_batch(&events);
+        let mut refs = Vec::new();
+        sharded.pm_refs(&mut refs);
+        assert_eq!(refs.len(), sharded.pm_count());
+        // query indices come back global, covering both shards
+        assert!(refs.iter().any(|r| r.query == 0));
+        assert!(refs.iter().any(|r| r.query == 1));
     }
 
     #[test]

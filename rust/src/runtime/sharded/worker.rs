@@ -78,6 +78,8 @@ pub(super) enum Request {
         /// global drop budget (upper bound on candidates needed)
         rho: usize,
     },
+    /// Enumerate every live PM (query indices remapped to global).
+    PmRefs,
     /// Drop the PMs with these (shard-local) ids.
     DropByIds(HashSet<u64>),
     /// Drop `rho` PMs uniformly at random with a seeded RNG.
@@ -99,6 +101,8 @@ pub(super) enum Response {
     Batch(BatchOutcome),
     /// sorted lowest-utility candidates
     Candidates(Vec<Candidate>),
+    /// every live PM with global query indices
+    PmRefs(Vec<PmRef>),
     /// PMs actually dropped
     Dropped(usize),
     /// acknowledgement of a state-setting request
@@ -177,6 +181,17 @@ pub(super) fn run(
                 }
                 cands.sort_unstable_by(super::merge::cand_cmp);
                 Response::Candidates(cands)
+            }
+            Request::PmRefs => {
+                op.pm_refs(&mut refs);
+                Response::PmRefs(
+                    refs.iter()
+                        .map(|r| PmRef {
+                            query: local_to_global[r.query],
+                            ..*r
+                        })
+                        .collect(),
+                )
             }
             Request::DropByIds(ids) => Response::Dropped(op.drop_pms(&ids)),
             Request::DropRandom { rho, seed } => {

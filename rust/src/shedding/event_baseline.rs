@@ -1,6 +1,6 @@
 //! E-BL (paper §IV-A): the black-box event-shedding baseline in the
-//! style of He et al. [15] with the weighted-sampling flavor of
-//! Aurora-style stream shedding [13].
+//! style of He et al. with the weighted-sampling flavor of Aurora-style
+//! stream shedding.
 //!
 //! Events get a *type utility* proportional to how often their key
 //! value (stock symbol / player id / bus id) is referenced by the
@@ -11,19 +11,20 @@
 //! Because E-BL drops *events* (not PMs), it must drop in every window
 //! the event belongs to, which is what makes its overhead grow with
 //! window overlap (paper Fig. 9a) — modeled here by charging the drop
-//! decision per open window.
+//! decision per open window.  Victims are reported through
+//! [`Shedder::event_mask`]: the operator state gives masked events
+//! window bookkeeping only.
 
 use std::collections::HashMap;
 
 use crate::events::Event;
 use crate::nfa::machine::CompiledQuery;
-use crate::operator::Operator;
+use crate::operator::OperatorState;
 use crate::query::Predicate;
-use crate::runtime::ShardedOperator;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
-use super::{ShedReport, Shedder};
+use super::{ShedReport, Shedder, ShedderKind};
 
 /// The event-shedding baseline.
 pub struct EventBaselineShedder {
@@ -43,6 +44,8 @@ pub struct EventBaselineShedder {
     rng: Rng,
     /// running mean of the inverse-utility weight (drop-rate normalizer)
     mean_w: f64,
+    /// per-event drop mask for the last batch (see `event_mask`)
+    mask: Vec<bool>,
     /// total events dropped (reporting)
     pub total_dropped: u64,
 }
@@ -52,7 +55,12 @@ impl EventBaselineShedder {
     /// each reference to a concrete key value in a pattern raises that
     /// value's utility (paper: "an event type receives a higher utility
     /// proportional to its repetition in patterns and in windows").
-    pub fn new(detector: OverloadDetector, key_slot: usize, queries: &[CompiledQuery], seed: u64) -> Self {
+    pub fn new(
+        detector: OverloadDetector,
+        key_slot: usize,
+        queries: &[CompiledQuery],
+        seed: u64,
+    ) -> Self {
         let mut utilities: HashMap<i64, f64> = HashMap::new();
         let mut bump = |preds: &[Predicate]| {
             for p in preds {
@@ -86,6 +94,7 @@ impl EventBaselineShedder {
             max_drop: 0.95,
             rng: Rng::seeded(seed),
             mean_w: 1.0,
+            mask: Vec::new(),
             total_dropped: 0,
         }
     }
@@ -96,105 +105,74 @@ impl EventBaselineShedder {
         let key = e.attrs[self.key_slot] as i64;
         self.utilities.get(&key).copied().unwrap_or(0.0)
     }
+}
 
-    /// Adapt the drop fraction from the current latency estimate.
-    fn adapt(&mut self, l_q_ns: f64, n_pm: usize) {
-        let lb = self.detector.lb_ns;
-        let l_e = l_q_ns + self.detector.predict_lp(n_pm);
-        // proportional control on the relative bound violation
-        let err = (l_e - lb) / lb;
-        self.drop_p = (self.drop_p + self.gain * err).clamp(0.0, self.max_drop);
+impl Shedder for EventBaselineShedder {
+    fn kind(&self) -> ShedderKind {
+        ShedderKind::EventBaseline
     }
 
-    /// Shard-aware E-BL: adapt once per batch from the global latency
-    /// estimate (predicted processing scaled by the shard count), then
-    /// sample a per-event drop mask for
-    /// [`ShardedOperator::process_batch_masked`].  Returns the mask,
-    /// the number of dropped events, and the virtual drop-decision cost
-    /// (per open window, parallel across shards — the paper's Fig. 9a
-    /// overhead shape survives sharding).
-    pub fn decide_batch(
+    fn on_batch(
         &mut self,
-        l_q_ns: f64,
-        sop: &ShardedOperator,
         events: &[Event],
-    ) -> (Vec<bool>, u64, f64) {
-        let n_shards = sop.n_shards() as f64;
+        l_q_ns: f64,
+        state: &mut dyn OperatorState,
+    ) -> ShedReport {
+        let k = state.parallelism() as f64;
+        self.mask.clear();
+        self.mask.resize(events.len(), false);
         if self.detector.trained() {
             let lb = self.detector.lb_ns;
-            let l_e =
-                l_q_ns + self.detector.predict_lp(sop.pm_count()) / n_shards;
+            let l_e = l_q_ns + self.detector.predict_lp(state.pm_count()) / k;
+            // proportional control on the relative bound violation: one
+            // controller step covers the whole batch, so the
+            // integration scales with the batch size.  Within a
+            // multi-event batch there is no feedback shrinking the
+            // error, so the per-decision movement is clamped (an
+            // unclamped batch step turns the controller bang-bang);
+            // per-event dispatch (batches of one) keeps the paper's
+            // unclamped proportional step.
             let err = (l_e - lb) / lb;
-            // one controller step covers the whole batch: scale the
-            // integration by the batch size to match the per-event
-            // controller's ramp, but clamp the per-decision movement —
-            // within a batch there is no feedback shrinking the error,
-            // so an unclamped step turns the controller bang-bang
-            let step = (self.gain * err * events.len() as f64).clamp(-0.1, 0.1);
+            let mut step = self.gain * err * events.len() as f64;
+            if events.len() > 1 {
+                step = step.clamp(-0.1, 0.1);
+            }
             self.drop_p = (self.drop_p + step).clamp(0.0, self.max_drop);
         }
-        let mut mask = vec![false; events.len()];
         if self.drop_p <= 0.0 {
-            return (mask, 0, 0.0);
+            return ShedReport::default();
         }
+        // the drop decision is made in EVERY window the event belongs
+        // to (black-box granularity — the paper's Fig. 9a overhead),
+        // in parallel across shards
         let per_event_ns =
-            sop.cost.ebl_per_window_ns * sop.open_windows().max(1) as f64;
+            state.cost().ebl_per_window_ns * state.open_windows().max(1) as f64;
         let mut dropped = 0u64;
         for (i, e) in events.iter().enumerate() {
+            // weighted sampling (paper: "uniform sampling ... from the
+            // same event type"): each type's drop probability is
+            // proportional to the inverse-square of its pattern
+            // utility, normalized by a running mean so the realized
+            // drop rate tracks `drop_p`.
             let u = self.event_utility(e);
             let w = 1.0 / (1.0 + u) / (1.0 + u);
             self.mean_w = 0.999 * self.mean_w + 0.001 * w;
             let p = (self.drop_p * w / self.mean_w.max(1e-6)).clamp(0.0, 1.0);
             if self.rng.chance(p) {
-                mask[i] = true;
+                self.mask[i] = true;
                 dropped += 1;
             }
         }
         self.total_dropped += dropped;
-        let cost_ns = per_event_ns * events.len() as f64 / n_shards;
-        (mask, dropped, cost_ns)
-    }
-}
-
-impl Shedder for EventBaselineShedder {
-    fn name(&self) -> &'static str {
-        "e-bl"
+        ShedReport {
+            dropped_pms: 0,
+            dropped_events: dropped,
+            cost_ns: per_event_ns * events.len() as f64 / k,
+        }
     }
 
-    fn on_event(&mut self, e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
-        if self.detector.trained() {
-            self.adapt(l_q_ns, op.pm_count());
-        }
-        if self.drop_p <= 0.0 {
-            return ShedReport::default();
-        }
-        // weighted sampling (paper: "uniform sampling ... from the same
-        // event type"): each type's drop probability is proportional to
-        // the inverse-square of its pattern utility, normalized by a
-        // running mean so the realized drop rate tracks `drop_p`.
-        let u = self.event_utility(e);
-        let w = 1.0 / (1.0 + u) / (1.0 + u);
-        self.mean_w = 0.999 * self.mean_w + 0.001 * w;
-        let p = (self.drop_p * w / self.mean_w.max(1e-6)).clamp(0.0, 1.0);
-        let dropped = self.rng.chance(p);
-        // the drop decision is made in EVERY window the event belongs
-        // to (black-box granularity — the paper's Fig. 9a overhead)
-        let open_windows: usize = op.wins.iter().map(|q| q.windows.len()).sum();
-        let cost_ns = op.cost.ebl_per_window_ns * open_windows.max(1) as f64;
-        if dropped {
-            self.total_dropped += 1;
-            ShedReport {
-                dropped_pms: 0,
-                dropped_event: true,
-                cost_ns,
-            }
-        } else {
-            ShedReport {
-                dropped_pms: 0,
-                dropped_event: false,
-                cost_ns: if self.drop_p > 0.0 { cost_ns } else { 0.0 },
-            }
-        }
+    fn event_mask(&self) -> Option<&[bool]> {
+        Some(&self.mask)
     }
 }
 
@@ -202,6 +180,7 @@ impl Shedder for EventBaselineShedder {
 mod tests {
     use super::*;
     use crate::datasets::stock;
+    use crate::operator::Operator;
     use crate::query::builtin::q1;
 
     fn shedder() -> (Operator, EventBaselineShedder) {
@@ -228,9 +207,10 @@ mod tests {
     fn no_drops_without_pressure() {
         let (mut op, mut s) = shedder();
         let e = Event::new(0, 0, 0, &[400.0, 1.0, 1.0]);
-        let rep = s.on_event(&e, 0.0, &mut op);
-        assert!(!rep.dropped_event);
+        let rep = s.on_batch(&[e], 0.0, &mut op);
+        assert_eq!(rep.dropped_events, 0);
         assert_eq!(s.drop_p, 0.0);
+        assert_eq!(s.event_mask(), Some(&[false][..]));
     }
 
     #[test]
@@ -244,7 +224,7 @@ mod tests {
         // massive queueing latency: controller must react
         for seq in 0..50 {
             let e = Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]);
-            s.on_event(&e, 10_000_000.0, &mut op);
+            s.on_batch(&[e], 10_000_000.0, &mut op);
         }
         assert!(s.drop_p > 0.5, "drop_p={}", s.drop_p);
         // and unused symbols get dropped much more often than pattern symbols
@@ -253,10 +233,10 @@ mod tests {
         for seq in 0..2000 {
             let junk = Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]);
             let pat = Event::new(seq, seq, 0, &[30.0, 1.0, 1.0]);
-            if s.on_event(&junk, 10_000_000.0, &mut op).dropped_event {
+            if s.on_batch(&[junk], 10_000_000.0, &mut op).dropped_events > 0 {
                 dropped_junk += 1;
             }
-            if s.on_event(&pat, 10_000_000.0, &mut op).dropped_event {
+            if s.on_batch(&[pat], 10_000_000.0, &mut op).dropped_events > 0 {
                 dropped_pattern += 1;
             }
         }
@@ -264,5 +244,27 @@ mod tests {
             dropped_junk > dropped_pattern,
             "junk={dropped_junk} pattern={dropped_pattern}"
         );
+    }
+
+    #[test]
+    fn batch_masks_cover_every_event() {
+        let (mut op, mut s) = shedder();
+        for n in (0..100).map(|i| i * 100) {
+            s.detector.observe_processing(n, 1_000.0 * n as f64);
+        }
+        s.detector.fit();
+        let events: Vec<Event> = (0..64)
+            .map(|seq| Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]))
+            .collect();
+        // several batches under pressure: the mask always matches the
+        // batch length and the report counts its set bits
+        for _ in 0..20 {
+            let rep = s.on_batch(&events, 10_000_000.0, &mut op);
+            let mask = s.event_mask().unwrap();
+            assert_eq!(mask.len(), events.len());
+            let set = mask.iter().filter(|&&b| b).count() as u64;
+            assert_eq!(set, rep.dropped_events);
+        }
+        assert!(s.drop_p > 0.0);
     }
 }

@@ -8,8 +8,15 @@
 //!   strategy),
 //! * [`pm_baseline`] — PM-BL: Bernoulli-random PM shedding,
 //! * [`event_baseline`] — E-BL: black-box input-event shedding in the
-//!   style of [15]/[13] (type-utility weighted sampling),
+//!   style of He et al. (type-utility weighted sampling),
 //! * [`none`] — pass-through (ground truth / calibration runs).
+//!
+//! Every strategy implements the batch-first [`Shedder`] trait against
+//! the [`OperatorState`] abstraction, so the same strategy object runs
+//! unchanged on the single-threaded operator (`parallelism() == 1`,
+//! per-event dispatch) and on the sharded runtime (global ρ, k-way
+//! merged victims).  Strategies are built through the single
+//! [`ShedderKind::build`] factory.
 
 pub mod detector;
 pub mod event_baseline;
@@ -23,38 +30,76 @@ pub use none::NoShedder;
 pub use pm_baseline::PmBaselineShedder;
 pub use pspice::PSpiceShedder;
 
+use crate::config::ExperimentConfig;
 use crate::events::Event;
-use crate::operator::Operator;
+use crate::model::ModelConfig;
+use crate::operator::OperatorState;
+use crate::query::Query;
 
-/// What a shedder did for one incoming event.
+/// What a shedder did for one batch of incoming events.
+///
+/// Reports are additive: per-batch reports are accumulated into run
+/// totals with [`ShedReport::merge`] / `+=` instead of summing fields
+/// by hand.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct ShedReport {
     /// PMs dropped from the operator state (white-box shedders).
-    pub dropped_pms: usize,
-    /// The incoming event itself was dropped (black-box shedders).
-    pub dropped_event: bool,
+    pub dropped_pms: u64,
+    /// Incoming events dropped (black-box shedders).
+    pub dropped_events: u64,
     /// Virtual cost of the shedding work (ns) — the paper's `l_s`.
     pub cost_ns: f64,
 }
 
-/// A load-shedding strategy.
+impl ShedReport {
+    /// Fold another report into this one (all fields are additive).
+    pub fn merge(&mut self, other: &ShedReport) {
+        self.dropped_pms += other.dropped_pms;
+        self.dropped_events += other.dropped_events;
+        self.cost_ns += other.cost_ns;
+    }
+}
+
+impl std::ops::AddAssign for ShedReport {
+    fn add_assign(&mut self, rhs: ShedReport) {
+        self.merge(&rhs);
+    }
+}
+
+/// A load-shedding strategy, written once against [`OperatorState`].
 ///
-/// `on_event` runs *before* the operator processes `e`, with the
-/// event's current queueing latency `l_q` (virtual ns).  White-box
-/// strategies mutate the operator state; black-box strategies may claim
-/// the event (`dropped_event`), in which case the operator never sees
-/// it (but window accounting still advances — dropped events exist in
-/// the stream).
+/// `on_batch` runs *before* the state processes `events`, with the
+/// batch's current queueing latency `l_q` (virtual ns).  White-box
+/// strategies drop PMs through the state; black-box strategies mark
+/// victim events in [`Shedder::event_mask`], in which case the state
+/// gives those events window bookkeeping only (dropped events still
+/// exist in the stream).  The single-threaded runtime dispatches
+/// batches of one event, which reproduces the paper's per-event
+/// shedding exactly.
 pub trait Shedder {
-    /// Strategy name for reports.
-    fn name(&self) -> &'static str;
+    /// Which [`ShedderKind`] this strategy instantiates.
+    fn kind(&self) -> ShedderKind;
 
-    /// Decide and perform shedding for one incoming event.
-    fn on_event(&mut self, e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport;
+    /// Strategy name for reports — derived from the kind, so the name
+    /// table lives in exactly one place ([`ShedderKind::name`]).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
 
-    /// Install freshly built utility tables (model retraining, paper
-    /// §III-D).  Default: no-op — only utility-driven strategies care.
-    fn update_tables(&mut self, _tables: Vec<crate::model::UtilityTable>) {}
+    /// Decide and perform shedding for one incoming event batch.
+    fn on_batch(
+        &mut self,
+        events: &[Event],
+        l_q_ns: f64,
+        state: &mut dyn OperatorState,
+    ) -> ShedReport;
+
+    /// Per-event drop mask for the batch last passed to
+    /// [`Shedder::on_batch`] (black-box strategies only; `None` means
+    /// "process every event").
+    fn event_mask(&self) -> Option<&[bool]> {
+        None
+    }
 }
 
 /// Which strategy to instantiate (CLI/config selector).
@@ -72,10 +117,32 @@ pub enum ShedderKind {
     EventBaseline,
 }
 
+/// Every strategy selector, in canonical order.
+pub const ALL_SHEDDER_KINDS: [ShedderKind; 5] = [
+    ShedderKind::None,
+    ShedderKind::PSpice,
+    ShedderKind::PSpiceMinus,
+    ShedderKind::PmBaseline,
+    ShedderKind::EventBaseline,
+];
+
+/// Per-strategy RNG seed schedule: each randomized strategy derives its
+/// stream from the experiment seed with a fixed xor offset, so
+/// strategies never share RNG draws and runs stay reproducible across
+/// shard counts.
+///
+/// | strategy | seed |
+/// |---|---|
+/// | none / pspice / pspice-- | (no RNG) |
+/// | pm-bl | `seed ^ 0xBE11` |
+/// | e-bl | `seed ^ 0xEB1` |
+const PM_BL_SEED_XOR: u64 = 0xBE11;
+/// E-BL's seed offset (see the schedule on [`PM_BL_SEED_XOR`]).
+const E_BL_SEED_XOR: u64 = 0xEB1;
+
 impl ShedderKind {
-    /// Canonical strategy name — matches the `Shedder::name()` of the
-    /// strategy this kind instantiates, so sharded and single-threaded
-    /// runs report identically.
+    /// Canonical strategy name — the single string table; every
+    /// [`Shedder::name`] derives from it.
     pub fn name(self) -> &'static str {
         match self {
             ShedderKind::None => "none",
@@ -83,6 +150,73 @@ impl ShedderKind {
             ShedderKind::PSpiceMinus => "pspice--",
             ShedderKind::PmBaseline => "pm-bl",
             ShedderKind::EventBaseline => "e-bl",
+        }
+    }
+
+    /// Does this strategy rank PMs by utility tables (which the
+    /// pipeline must build and install on the operator state)?
+    pub fn needs_tables(self) -> bool {
+        matches!(self, ShedderKind::PSpice | ShedderKind::PSpiceMinus)
+    }
+
+    /// Model-builder configuration for this strategy's utility tables
+    /// (pSPICE-- drops the remaining-processing-time term, the paper's
+    /// Fig. 8 ablation).
+    pub fn model_config(self) -> ModelConfig {
+        ModelConfig {
+            use_tau: !matches!(self, ShedderKind::PSpiceMinus),
+            ..ModelConfig::default()
+        }
+    }
+
+    /// Build a boxed [`Shedder`] for this kind from an experiment
+    /// configuration (the E-BL key slot is derived from the dataset).
+    /// Delegates to [`ShedderKind::build_with`] — the single strategy
+    /// construction site.
+    pub fn build(
+        self,
+        cfg: &ExperimentConfig,
+        queries: &[Query],
+        detector: &OverloadDetector,
+        seed: u64,
+    ) -> Box<dyn Shedder> {
+        self.build_with(queries, detector, cfg.dataset.key_slot(), seed)
+    }
+
+    /// The single strategy construction site: build a boxed [`Shedder`]
+    /// for this kind.  `detector` is the shared overload detector
+    /// (cloned per strategy); `seed` is the experiment seed, offset per
+    /// strategy by the documented seed schedule; `queries` and
+    /// `key_slot` supply E-BL's pattern utilities.
+    pub fn build_with(
+        self,
+        queries: &[Query],
+        detector: &OverloadDetector,
+        key_slot: usize,
+        seed: u64,
+    ) -> Box<dyn Shedder> {
+        match self {
+            ShedderKind::None => Box::new(NoShedder),
+            ShedderKind::PSpice | ShedderKind::PSpiceMinus => {
+                Box::new(PSpiceShedder::new(detector.clone(), self))
+            }
+            ShedderKind::PmBaseline => Box::new(PmBaselineShedder::new(
+                detector.clone(),
+                seed ^ PM_BL_SEED_XOR,
+            )),
+            ShedderKind::EventBaseline => {
+                let compiled: Vec<crate::nfa::CompiledQuery> = queries
+                    .iter()
+                    .cloned()
+                    .map(crate::nfa::CompiledQuery::compile)
+                    .collect();
+                Box::new(EventBaselineShedder::new(
+                    detector.clone(),
+                    key_slot,
+                    &compiled,
+                    seed ^ E_BL_SEED_XOR,
+                ))
+            }
         }
     }
 }
@@ -104,17 +238,57 @@ impl std::str::FromStr for ShedderKind {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::query::builtin::q1;
 
     #[test]
     fn kind_names_round_trip_through_from_str() {
-        for kind in [
-            ShedderKind::None,
-            ShedderKind::PSpice,
-            ShedderKind::PSpiceMinus,
-            ShedderKind::PmBaseline,
-            ShedderKind::EventBaseline,
-        ] {
+        for kind in ALL_SHEDDER_KINDS {
             assert_eq!(kind.name().parse::<ShedderKind>().unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn factory_shedders_agree_with_kind_names() {
+        // the naming satellite: Shedder::name derives from
+        // ShedderKind::name for every variant the factory can build
+        let cfg = ExperimentConfig::default();
+        let queries = q1(1_000).queries;
+        let det = OverloadDetector::new(1e9, 0.0);
+        for kind in ALL_SHEDDER_KINDS {
+            let s = kind.build(&cfg, &queries, &det, cfg.seed);
+            assert_eq!(s.kind(), kind);
+            assert_eq!(s.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn reports_merge_additively() {
+        let mut total = ShedReport::default();
+        total += ShedReport {
+            dropped_pms: 3,
+            dropped_events: 1,
+            cost_ns: 10.0,
+        };
+        let mut other = ShedReport {
+            dropped_pms: 2,
+            dropped_events: 0,
+            cost_ns: 5.5,
+        };
+        other.merge(&total);
+        assert_eq!(other.dropped_pms, 5);
+        assert_eq!(other.dropped_events, 1);
+        assert!((other.cost_ns - 15.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn only_utility_strategies_need_tables() {
+        for kind in ALL_SHEDDER_KINDS {
+            assert_eq!(
+                kind.needs_tables(),
+                matches!(kind, ShedderKind::PSpice | ShedderKind::PSpiceMinus)
+            );
+        }
+        assert!(ShedderKind::PSpice.model_config().use_tau);
+        assert!(!ShedderKind::PSpiceMinus.model_config().use_tau);
     }
 }

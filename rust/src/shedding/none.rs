@@ -2,20 +2,25 @@
 //! ground-truth run and for calibration phases.
 
 use crate::events::Event;
-use crate::operator::Operator;
+use crate::operator::OperatorState;
 
-use super::{ShedReport, Shedder};
+use super::{ShedReport, Shedder, ShedderKind};
 
 /// No-op shedding strategy.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NoShedder;
 
 impl Shedder for NoShedder {
-    fn name(&self) -> &'static str {
-        "none"
+    fn kind(&self) -> ShedderKind {
+        ShedderKind::None
     }
 
-    fn on_event(&mut self, _e: &Event, _l_q_ns: f64, _op: &mut Operator) -> ShedReport {
+    fn on_batch(
+        &mut self,
+        _events: &[Event],
+        _l_q_ns: f64,
+        _state: &mut dyn OperatorState,
+    ) -> ShedReport {
         ShedReport::default()
     }
 }
@@ -23,13 +28,15 @@ impl Shedder for NoShedder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::operator::Operator;
     use crate::query::builtin::q1;
 
     #[test]
     fn never_drops() {
         let mut op = Operator::new(q1(100).queries);
         let e = Event::new(0, 0, 0, &[0.0, 1.0, 1.0]);
-        let rep = NoShedder.on_event(&e, f64::MAX, &mut op);
+        let rep = NoShedder.on_batch(&[e], f64::MAX, &mut op);
         assert_eq!(rep, ShedReport::default());
+        assert!(NoShedder.event_mask().is_none());
     }
 }

@@ -3,12 +3,11 @@
 //! selected by a Bernoulli/uniform draw instead of by utility.
 
 use crate::events::Event;
-use crate::operator::Operator;
-use crate::runtime::ShardedOperator;
+use crate::operator::OperatorState;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
-use super::{ShedReport, Shedder};
+use super::{ShedReport, Shedder, ShedderKind};
 
 /// The random PM-shedding baseline.
 pub struct PmBaselineShedder {
@@ -28,52 +27,40 @@ impl PmBaselineShedder {
             total_dropped: 0,
         }
     }
-
-    /// Shard-aware PM-BL: same global ρ as pSPICE (detector latency
-    /// scaled by the shard count), victims drawn uniformly across
-    /// shards proportionally to their PM populations.
-    pub fn on_batch(&mut self, l_q_ns: f64, sop: &mut ShardedOperator) -> ShedReport {
-        let n_pm = sop.pm_count();
-        let Some(rho) = self.detector.check_scaled(l_q_ns, n_pm, sop.n_shards())
-        else {
-            return ShedReport::default();
-        };
-        let dropped = sop.drop_random(rho, &mut self.rng);
-        self.total_dropped += dropped as u64;
-        // the cheap scan parallelizes across shards
-        let cost_ns = (sop.cost.shed_drop_ns * dropped as f64
-            + 0.25 * sop.cost.shed_scan_ns * n_pm as f64)
-            / sop.n_shards() as f64;
-        self.detector.observe_shedding(n_pm, cost_ns);
-        ShedReport {
-            dropped_pms: dropped,
-            dropped_event: false,
-            cost_ns,
-        }
-    }
 }
 
 impl Shedder for PmBaselineShedder {
-    fn name(&self) -> &'static str {
-        "pm-bl"
+    fn kind(&self) -> ShedderKind {
+        ShedderKind::PmBaseline
     }
 
-    fn on_event(&mut self, _e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
-        let n_pm = op.pm_count();
-        let Some(rho) = self.detector.check(l_q_ns, n_pm) else {
+    fn on_batch(
+        &mut self,
+        _events: &[Event],
+        l_q_ns: f64,
+        state: &mut dyn OperatorState,
+    ) -> ShedReport {
+        let n_pm = state.pm_count();
+        let Some(rho) = self
+            .detector
+            .check_scaled(l_q_ns, n_pm, state.parallelism())
+        else {
             return ShedReport::default();
         };
-        let dropped = op.drop_random(rho, &mut self.rng);
+        let dropped = state.drop_random(rho, &mut self.rng);
         self.total_dropped += dropped as u64;
         // random selection still scans the PM population once but needs
         // no utility lookups/selection: model only the drop cost plus a
-        // cheap scan (the paper notes PM-BL is slightly cheaper).
-        let cost_ns = op.cost.shed_drop_ns * dropped as f64
-            + 0.25 * op.cost.shed_scan_ns * n_pm as f64;
+        // cheap scan (the paper notes PM-BL is slightly cheaper); the
+        // scan parallelizes across shards
+        let cost = state.cost();
+        let cost_ns = (cost.shed_drop_ns * dropped as f64
+            + 0.25 * cost.shed_scan_ns * n_pm as f64)
+            / state.parallelism() as f64;
         self.detector.observe_shedding(n_pm, cost_ns);
         ShedReport {
-            dropped_pms: dropped,
-            dropped_event: false,
+            dropped_pms: dropped as u64,
+            dropped_events: 0,
             cost_ns,
         }
     }
@@ -84,6 +71,7 @@ mod tests {
     use super::*;
     use crate::datasets::BusGen;
     use crate::events::EventStream;
+    use crate::operator::Operator;
     use crate::query::builtin::q4;
 
     #[test]
@@ -103,9 +91,9 @@ mod tests {
         let mut shed = PmBaselineShedder::new(det, 1);
         let before = op.pm_count();
         let e = g.next_event().unwrap();
-        let rep = shed.on_event(&e, 0.0, &mut op);
+        let rep = shed.on_batch(&[e], 0.0, &mut op);
         assert!(rep.dropped_pms > 0);
-        assert_eq!(op.pm_count(), before - rep.dropped_pms);
+        assert_eq!(op.pm_count() as u64, before as u64 - rep.dropped_pms);
         assert!(rep.cost_ns > 0.0);
     }
 }

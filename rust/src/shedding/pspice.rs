@@ -1,30 +1,28 @@
 //! pSPICE (paper Algorithm 2): drop the ρ lowest-utility partial
-//! matches, with utilities looked up in the precomputed tables.
+//! matches.  The utility ranking itself lives in the operator state
+//! ([`OperatorState::shed_lowest`] — O(n) selection on one shard, k-way
+//! candidate merge across shards); this strategy owns the *decision*:
+//! Alg. 1's overload check, the drop amount ρ, and the shed-cost
+//! feedback into the detector's `g()` regression.
 //!
-//! Selection uses `select_nth_unstable` (expected O(n)) instead of the
-//! paper's full sort (O(n log n)) — strictly better than the complexity
-//! the paper budgets for, and measured in `benches/shed_overhead.rs`.
-
-use std::collections::HashSet;
+//! The same object drives both runtimes: on the sharded backend the
+//! detector sees the global `n_pm` with latency predictions scaled by
+//! the worker parallelism, and the shed cost is the slowest shard's
+//! scan + drop (shards shed in parallel).
 
 use crate::events::Event;
-use crate::model::UtilityTable;
-use crate::operator::{Operator, PmRef};
-use crate::runtime::ShardedOperator;
+use crate::operator::OperatorState;
 
 use super::detector::OverloadDetector;
-use super::{ShedReport, Shedder};
+use super::{ShedReport, Shedder, ShedderKind};
 
-/// The pSPICE load shedder.
+/// The pSPICE load shedder (also pSPICE-- — the two differ only in the
+/// utility tables the pipeline installs on the operator state).
 pub struct PSpiceShedder {
     /// shared overload detector (Alg. 1)
     pub detector: OverloadDetector,
-    /// per-query utility tables from the model builder
-    pub tables: Vec<UtilityTable>,
-    /// scratch buffer reused across calls (no hot-path allocation)
-    scratch: Vec<PmRef>,
-    /// keyed scratch for selection
-    keyed: Vec<(f64, u64)>,
+    /// which ablation this instance reports as
+    kind: ShedderKind,
     /// total PMs dropped over the run (reporting)
     pub total_dropped: u64,
     /// total shed invocations
@@ -32,105 +30,54 @@ pub struct PSpiceShedder {
 }
 
 impl PSpiceShedder {
-    /// Shedder from a trained detector + tables.
-    pub fn new(detector: OverloadDetector, tables: Vec<UtilityTable>) -> Self {
+    /// Shedder from a trained detector.  `kind` must be
+    /// [`ShedderKind::PSpice`] or [`ShedderKind::PSpiceMinus`].
+    pub fn new(detector: OverloadDetector, kind: ShedderKind) -> Self {
+        assert!(
+            matches!(kind, ShedderKind::PSpice | ShedderKind::PSpiceMinus),
+            "PSpiceShedder only instantiates the pspice ablations"
+        );
         PSpiceShedder {
             detector,
-            tables,
-            scratch: Vec::new(),
-            keyed: Vec::new(),
+            kind,
             total_dropped: 0,
             invocations: 0,
-        }
-    }
-
-    /// Utility of one PM (O(1) table lookup).
-    #[inline]
-    pub fn utility(&self, r: &PmRef) -> f64 {
-        self.tables[r.query].lookup(r.state, r.remaining)
-    }
-
-    /// Algorithm 2: drop the `rho` lowest-utility PMs.  Returns
-    /// (scanned, dropped).
-    pub fn drop_lowest(&mut self, op: &mut Operator, rho: usize) -> (usize, usize) {
-        op.pm_refs(&mut self.scratch);
-        let n = self.scratch.len();
-        if n == 0 || rho == 0 {
-            return (n, 0);
-        }
-        let rho = rho.min(n);
-        self.keyed.clear();
-        self.keyed.reserve(n);
-        for r in &self.scratch {
-            self.keyed.push((self.tables[r.query].lookup(r.state, r.remaining), r.pm_id));
-        }
-        if rho < n {
-            // total_cmp, not partial_cmp().unwrap(): a NaN utility (e.g.
-            // from a degenerate table row) must not panic the hot path.
-            // total order puts +NaN above every number, so poisoned PMs
-            // are treated as high-utility and survive.
-            self.keyed
-                .select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
-        }
-        let ids: HashSet<u64> = self.keyed[..rho].iter().map(|&(_, id)| id).collect();
-        let dropped = op.drop_pms(&ids);
-        (n, dropped)
-    }
-
-    /// Shard-aware Algorithm 2 for the sharded runtime: the detector
-    /// sees the *global* `n_pm` and the batch queueing latency (scaled
-    /// by the shard count), computes one global ρ, and the sharded
-    /// operator drops the ρ globally lowest-utility PMs via a k-way
-    /// merge over per-shard candidates.  Utility tables must have been
-    /// installed on the workers with
-    /// [`ShardedOperator::set_tables`].
-    pub fn on_batch(&mut self, l_q_ns: f64, sop: &mut ShardedOperator) -> ShedReport {
-        let n_pm = sop.pm_count();
-        let Some(rho) = self.detector.check_scaled(l_q_ns, n_pm, sop.n_shards())
-        else {
-            return ShedReport::default();
-        };
-        let shed = sop.shed_lowest(rho);
-        self.total_dropped += shed.dropped as u64;
-        self.invocations += 1;
-        // shards shed in parallel: the virtual cost is the slowest
-        // shard's scan + drop
-        let cost_ns = shed
-            .per_shard
-            .iter()
-            .map(|&(scanned, dropped)| sop.cost.shed_ns(scanned, dropped))
-            .fold(0.0f64, f64::max);
-        self.detector.observe_shedding(shed.scanned, cost_ns);
-        ShedReport {
-            dropped_pms: shed.dropped,
-            dropped_event: false,
-            cost_ns,
         }
     }
 }
 
 impl Shedder for PSpiceShedder {
-    fn name(&self) -> &'static str {
-        "pspice"
+    fn kind(&self) -> ShedderKind {
+        self.kind
     }
 
-    fn update_tables(&mut self, tables: Vec<crate::model::UtilityTable>) {
-        self.tables = tables;
-    }
-
-    fn on_event(&mut self, _e: &Event, l_q_ns: f64, op: &mut Operator) -> ShedReport {
-        let n_pm = op.pm_count();
-        let Some(rho) = self.detector.check(l_q_ns, n_pm) else {
+    fn on_batch(
+        &mut self,
+        _events: &[Event],
+        l_q_ns: f64,
+        state: &mut dyn OperatorState,
+    ) -> ShedReport {
+        let n_pm = state.pm_count();
+        let Some(rho) = self
+            .detector
+            .check_scaled(l_q_ns, n_pm, state.parallelism())
+        else {
             return ShedReport::default();
         };
-        let (scanned, dropped) = self.drop_lowest(op, rho);
-        self.total_dropped += dropped as u64;
+        let shed = state.shed_lowest(rho);
+        self.total_dropped += shed.dropped as u64;
         self.invocations += 1;
-        let cost_ns = op.cost.shed_ns(scanned, dropped);
-        self.detector.observe_shedding(scanned, cost_ns);
+        // shards shed in parallel: the virtual cost is the slowest
+        // shard's scan + drop (one shard ⇒ exactly the paper's l_s)
+        let cost_ns = shed
+            .per_shard
+            .iter()
+            .map(|&(scanned, dropped)| state.cost().shed_ns(scanned, dropped))
+            .fold(0.0f64, f64::max);
+        self.detector.observe_shedding(shed.scanned, cost_ns);
         ShedReport {
-            dropped_pms: dropped,
-            dropped_event: false,
+            dropped_pms: shed.dropped as u64,
+            dropped_events: 0,
             cost_ns,
         }
     }
@@ -142,6 +89,7 @@ mod tests {
     use crate::datasets::BusGen;
     use crate::events::EventStream;
     use crate::model::{ModelBuilder, ModelConfig};
+    use crate::operator::Operator;
     use crate::query::builtin::q4;
     use crate::runtime::FallbackEngine;
 
@@ -160,78 +108,9 @@ mod tests {
             Box::new(FallbackEngine),
         );
         let tables = mb.build(&op).unwrap();
+        op.install_tables(&tables);
         let det = OverloadDetector::new(1e9, 0.0);
-        (op, PSpiceShedder::new(det, tables))
-    }
-
-    #[test]
-    fn drops_exactly_rho() {
-        let (mut op, mut shed) = setup();
-        let before = op.pm_count();
-        assert!(before > 20, "need PMs, got {before}");
-        let (scanned, dropped) = shed.drop_lowest(&mut op, 10);
-        assert_eq!(scanned, before);
-        assert_eq!(dropped, 10);
-        assert_eq!(op.pm_count(), before - 10);
-    }
-
-    #[test]
-    fn drops_the_lowest_utilities() {
-        let (mut op, mut shed) = setup();
-        let mut refs = Vec::new();
-        op.pm_refs(&mut refs);
-        let mut utils: Vec<f64> = refs.iter().map(|r| shed.utility(r)).collect();
-        utils.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rho = 8;
-        let threshold = utils[rho - 1];
-        shed.drop_lowest(&mut op, rho);
-        // every survivor has utility >= the rho-th smallest
-        let mut after = Vec::new();
-        op.pm_refs(&mut after);
-        for r in &after {
-            assert!(
-                shed.utility(r) >= threshold - 1e-12,
-                "survivor below threshold"
-            );
-        }
-    }
-
-    #[test]
-    fn nan_utilities_do_not_panic_selection() {
-        // regression: partial_cmp().unwrap() panicked when a utility
-        // table was poisoned with NaN; total_cmp must select anyway
-        let (mut op, mut shed) = setup();
-        for table in &mut shed.tables {
-            for row in &mut table.rows {
-                for (i, v) in row.iter_mut().enumerate() {
-                    if i % 3 == 0 {
-                        *v = f64::NAN;
-                    }
-                }
-            }
-        }
-        let before = op.pm_count();
-        assert!(before > 20, "need PMs, got {before}");
-        let rho = 10;
-        let (scanned, dropped) = shed.drop_lowest(&mut op, rho);
-        assert_eq!(scanned, before);
-        assert_eq!(dropped, rho, "exactly rho victims despite NaNs");
-        assert_eq!(op.pm_count(), before - rho);
-        // NaN-utility PMs sort above every real utility, so survivors
-        // may carry NaN but no finite-utility PM above the threshold
-        // was sacrificed for one
-        let mut after = Vec::new();
-        op.pm_refs(&mut after);
-        assert_eq!(after.len(), before - rho);
-    }
-
-    #[test]
-    fn rho_larger_than_population_drops_all() {
-        let (mut op, mut shed) = setup();
-        let before = op.pm_count();
-        let (_, dropped) = shed.drop_lowest(&mut op, before + 1000);
-        assert_eq!(dropped, before);
-        assert_eq!(op.pm_count(), 0);
+        (op, PSpiceShedder::new(det, ShedderKind::PSpice))
     }
 
     #[test]
@@ -239,8 +118,31 @@ mod tests {
         let (mut op, mut shed) = setup();
         let before = op.pm_count();
         let e = Event::new(0, 0, 0, &[0.0, 0.0, 0.0, 0.0]);
-        let rep = shed.on_event(&e, 0.0, &mut op);
+        let rep = shed.on_batch(&[e], 0.0, &mut op);
         assert_eq!(rep, ShedReport::default());
         assert_eq!(op.pm_count(), before);
+    }
+
+    #[test]
+    fn trained_detector_drops_under_pressure() {
+        let (mut op, mut shed) = setup();
+        // steep linear world: current population is far over budget
+        let mut det = OverloadDetector::new(1_000.0, 0.0);
+        for n in (0..100).map(|i| i * 50) {
+            det.observe_processing(n, 10.0 * n as f64);
+            det.observe_shedding(n, n as f64);
+        }
+        assert!(det.fit());
+        shed.detector = det;
+        let before = op.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let e = Event::new(0, 0, 0, &[0.0, 0.0, 0.0, 0.0]);
+        let rep = shed.on_batch(&[e], 0.0, &mut op);
+        assert!(rep.dropped_pms > 0);
+        assert_eq!(rep.dropped_events, 0);
+        assert!(rep.cost_ns > 0.0);
+        assert_eq!(op.pm_count() as u64, before as u64 - rep.dropped_pms);
+        assert_eq!(shed.total_dropped, rep.dropped_pms);
+        assert!(shed.event_mask().is_none(), "white-box: no event mask");
     }
 }

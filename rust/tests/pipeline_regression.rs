@@ -1,0 +1,234 @@
+//! Redesign regression: the `Pipeline`-based `run_experiment` at
+//! `shards = 1` must reproduce the pre-redesign single-threaded
+//! measurement loop *byte-identically* on the tiny config.
+//!
+//! The `legacy` module below is a faithful transcription of the old
+//! `harness::experiment::measure_single` path (per-event dispatch,
+//! `Shedder::on_event`-style inline pSPICE with shedder-owned utility
+//! tables and `select_nth_unstable` victim selection), built only from
+//! public engine primitives.  Every float is compared through
+//! `to_bits`, so any drift in operation order fails loudly.
+
+use std::collections::HashSet;
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::experiment::{build_queries, build_trace};
+use pspice::harness::run_experiment;
+use pspice::metrics::{LatencyTracker, QorAccounting};
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::Operator;
+use pspice::shedding::{OverloadDetector, ShedderKind};
+use pspice::sim::{RateSource, SimClock};
+
+fn tiny_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        query: "q4".into(),
+        window: 2_000,
+        pattern_n: 4,
+        slide: 250,
+        dataset: DatasetKind::Bus,
+        seed: 3,
+        events: 20_000,
+        warmup: 20_000,
+        rate: 1.4,
+        lb_ms: 0.05,
+        shedder: ShedderKind::PSpice,
+        weights: Vec::new(),
+        cost_factors: Vec::new(),
+        retrain_every: 0,
+        drift_threshold: 0.01,
+        shards: 1,
+        batch: 256,
+    }
+}
+
+/// What the legacy loop measures (the comparable subset of
+/// `ExperimentResult`).
+struct LegacyResult {
+    fn_percent: f64,
+    false_positives: usize,
+    truth_total: usize,
+    capacity_ns: f64,
+    dropped_pms: u64,
+    peak_pms: usize,
+    shed_overhead: f64,
+    latency: LatencyTracker,
+}
+
+/// The pre-redesign three-phase runner, transcribed.
+fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
+    let queries = build_queries(cfg).unwrap();
+    let trace = build_trace(cfg);
+    let lb_ns = cfg.lb_ms * 1e6;
+    let warmup = (cfg.warmup as usize).min(trace.len());
+
+    // ---- phase 1: ground truth (unchanged by the redesign) ---------
+    let mut truth_op = Operator::new(queries.clone());
+    truth_op.obs.enabled = false;
+    let weights: Vec<f64> = queries.iter().map(|q| q.weight).collect();
+    let mut qor = QorAccounting::new(weights, cfg.warmup);
+    let mut cost_sum = 0.0;
+    let mut cost_n = 0u64;
+    let skip = trace.len() / 10;
+    for (i, e) in trace.iter().enumerate() {
+        let out = truth_op.process_event(e);
+        for ce in &out.completions {
+            qor.add_truth(ce);
+        }
+        if i >= skip {
+            cost_sum += out.cost_ns;
+            cost_n += 1;
+        }
+    }
+    let capacity_ns = cost_sum / cost_n.max(1) as f64;
+
+    // ---- phase 2: calibrate + train (as the old runner did) --------
+    let mut op = Operator::new(queries);
+    let mut detector = OverloadDetector::new(lb_ns, 0.02 * lb_ns);
+    for e in &trace[..warmup] {
+        let n_before = op.pm_count();
+        let out = op.process_event(e);
+        for ce in &out.completions {
+            qor.add_detected(ce); // warm-up completions are out of scope anyway
+        }
+        detector.observe_processing(n_before, out.cost_ns);
+    }
+    assert!(detector.fit());
+    for n in [100usize, 1_000, 5_000, 20_000, 50_000] {
+        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+    }
+    detector.fit();
+    let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
+    let tables = builder.build(&op).unwrap();
+
+    // ---- phase 3: the old per-event measurement loop ---------------
+    op.obs.enabled = false; // no retraining on the tiny config
+    let mut clock = SimClock::new();
+    let source = RateSource::from_capacity(capacity_ns, cfg.rate, 0.0);
+    let mut latency = LatencyTracker::new(lb_ns, (cfg.events / 2_000).max(1));
+    let mut shed_ns = 0.0;
+    let mut busy_ns = 0.0;
+    let mut dropped_pms = 0u64;
+    let mut peak_pms = 0usize;
+    // the old PSpiceShedder's scratch state
+    let mut scratch = Vec::new();
+    let mut keyed: Vec<(f64, u64)> = Vec::new();
+    for (i, e) in trace[warmup..].iter().enumerate() {
+        let arrival = source.arrival_ns(i as u64);
+        let l_q = clock.begin_service(arrival);
+        // inline Shedder::on_event for pSPICE (old Alg. 1 + Alg. 2)
+        let mut shed_cost = 0.0;
+        if let Some(rho) = detector.check(l_q, op.pm_count()) {
+            op.pm_refs(&mut scratch);
+            let n = scratch.len();
+            if n > 0 && rho > 0 {
+                let rho = rho.min(n);
+                keyed.clear();
+                keyed.reserve(n);
+                for r in &scratch {
+                    keyed.push((tables[r.query].lookup(r.state, r.remaining), r.pm_id));
+                }
+                if rho < n {
+                    keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
+                }
+                let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+                let dropped = op.drop_pms(&ids);
+                dropped_pms += dropped as u64;
+                shed_cost = op.cost.shed_ns(n, dropped);
+                detector.observe_shedding(n, shed_cost);
+            }
+        }
+        clock.advance(shed_cost);
+        shed_ns += shed_cost;
+        busy_ns += shed_cost;
+        let out = op.process_event(e);
+        clock.advance(out.cost_ns);
+        busy_ns += out.cost_ns;
+        for ce in &out.completions {
+            qor.add_detected(ce);
+        }
+        latency.record(clock.now_ns(), clock.now_ns() - arrival);
+        peak_pms = peak_pms.max(op.pm_count());
+    }
+
+    LegacyResult {
+        fn_percent: qor.fn_percent(),
+        false_positives: qor.false_positives(),
+        truth_total: qor.truth_total(),
+        capacity_ns,
+        dropped_pms,
+        peak_pms,
+        shed_overhead: if busy_ns > 0.0 { shed_ns / busy_ns } else { 0.0 },
+        latency,
+    }
+}
+
+#[test]
+fn pipeline_reproduces_legacy_single_threaded_metrics_bit_for_bit() {
+    let cfg = tiny_cfg();
+    let legacy = legacy_run(&cfg);
+    let new = run_experiment(&cfg).unwrap();
+
+    assert!(legacy.dropped_pms > 0, "scenario must actually shed");
+    assert_eq!(new.shedder, "pspice");
+    assert_eq!(new.shards, 1);
+
+    assert_eq!(new.truth_total, legacy.truth_total);
+    assert_eq!(new.false_positives, legacy.false_positives);
+    assert_eq!(new.dropped_pms, legacy.dropped_pms);
+    assert_eq!(new.dropped_events, 0);
+    assert_eq!(new.peak_pms, legacy.peak_pms);
+
+    assert_eq!(
+        new.capacity_ns.to_bits(),
+        legacy.capacity_ns.to_bits(),
+        "capacity diverged: {} vs {}",
+        new.capacity_ns,
+        legacy.capacity_ns
+    );
+    assert_eq!(
+        new.fn_percent.to_bits(),
+        legacy.fn_percent.to_bits(),
+        "fn% diverged: {} vs {}",
+        new.fn_percent,
+        legacy.fn_percent
+    );
+    assert_eq!(
+        new.shed_overhead.to_bits(),
+        legacy.shed_overhead.to_bits(),
+        "overhead diverged: {} vs {}",
+        new.shed_overhead,
+        legacy.shed_overhead
+    );
+
+    // latency trace: same sample count, same violations, identical
+    // aggregate statistics down to the last bit
+    assert_eq!(new.latency.stats.count(), legacy.latency.stats.count());
+    assert_eq!(new.latency.violations, legacy.latency.violations);
+    assert_eq!(
+        new.latency.stats.mean().to_bits(),
+        legacy.latency.stats.mean().to_bits(),
+        "mean latency diverged: {} vs {}",
+        new.latency.stats.mean(),
+        legacy.latency.stats.mean()
+    );
+    assert_eq!(
+        new.latency.stats.max().to_bits(),
+        legacy.latency.stats.max().to_bits(),
+        "max latency diverged: {} vs {}",
+        new.latency.stats.max(),
+        legacy.latency.stats.max()
+    );
+    assert_eq!(new.latency.trace, legacy.latency.trace, "plot traces diverged");
+}
+
+#[test]
+fn pipeline_run_is_deterministic_across_invocations() {
+    let a = run_experiment(&tiny_cfg()).unwrap();
+    let b = run_experiment(&tiny_cfg()).unwrap();
+    assert_eq!(a.fn_percent.to_bits(), b.fn_percent.to_bits());
+    assert_eq!(a.dropped_pms, b.dropped_pms);
+    assert_eq!(a.peak_pms, b.peak_pms);
+    assert_eq!(a.latency.violations, b.latency.violations);
+}

@@ -1,0 +1,181 @@
+//! Trait-conformance suite for the batch-first `Shedder` API: every
+//! `ShedderKind` built through the single `ShedderKind::build` factory
+//! must uphold the same contract on *both* `OperatorState` backends
+//! (the single-threaded `Operator` and the `ShardedOperator`):
+//!
+//! * an untrained overload detector never sheds anything,
+//! * reported costs are finite and non-negative,
+//! * `ShedderKind::None` never sheds even under extreme pressure,
+//! * event masks (black-box strategies) always match the batch length
+//!   and agree with the reported drop count.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::StockGen;
+use pspice::events::{Event, EventStream};
+use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::operator::{Operator, OperatorState};
+use pspice::query::builtin::q1;
+use pspice::query::Query;
+use pspice::runtime::{FallbackEngine, ShardedOperator};
+use pspice::shedding::{OverloadDetector, ShedderKind, ALL_SHEDDER_KINDS};
+
+fn queries() -> Vec<Query> {
+    q1(1_500).queries
+}
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        query: "q1".into(),
+        window: 1_500,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// A detector trained on a steep linear world: any sizable PM
+/// population is over budget, so trained strategies must act.
+fn hot_detector() -> OverloadDetector {
+    let mut d = OverloadDetector::new(1_000.0, 0.0);
+    for n in (0..100).map(|i| i * 50) {
+        d.observe_processing(n, 10.0 * n as f64);
+        d.observe_shedding(n, n as f64);
+    }
+    assert!(d.fit());
+    d
+}
+
+/// Warm a backend with PMs and install utility tables, returning the
+/// events left for the measurement half.
+fn warmed(state: &mut dyn OperatorState, warm: &[Event]) {
+    // tables from a twin single-threaded operator (the state under
+    // test may be sharded; tables are per-query, so they transfer)
+    let mut twin = Operator::new(queries());
+    for e in warm {
+        twin.process_event(e);
+    }
+    let mut mb = ModelBuilder::new(
+        ModelConfig {
+            eta: 100,
+            max_bins: 64,
+            use_tau: true,
+        },
+        Box::new(FallbackEngine),
+    );
+    let tables = mb.build(&twin).unwrap();
+    for chunk in warm.chunks(512) {
+        state.process_batch(chunk, None);
+    }
+    state.install_tables(&tables);
+}
+
+/// Run `kind` over the measurement events on `state` and return
+/// (total dropped PMs, total dropped events, total cost).
+fn drive(
+    kind: ShedderKind,
+    detector: &OverloadDetector,
+    state: &mut dyn OperatorState,
+    measure: &[Event],
+    l_q_ns: f64,
+) -> (u64, u64, f64) {
+    let mut shedder = kind.build(&cfg(), &queries(), detector, 7);
+    let (mut pms, mut evs, mut cost) = (0u64, 0u64, 0.0f64);
+    for chunk in measure.chunks(64) {
+        let before = state.pm_count();
+        let rep = shedder.on_batch(chunk, l_q_ns, state);
+        assert!(
+            rep.cost_ns.is_finite() && rep.cost_ns >= 0.0,
+            "{}: cost must be finite and non-negative, got {}",
+            kind.name(),
+            rep.cost_ns
+        );
+        assert!(
+            rep.dropped_pms <= before as u64,
+            "{}: cannot drop more PMs than live",
+            kind.name()
+        );
+        if let Some(mask) = shedder.event_mask() {
+            assert_eq!(mask.len(), chunk.len(), "{}: mask length", kind.name());
+            let set = mask.iter().filter(|&&b| b).count() as u64;
+            assert_eq!(set, rep.dropped_events, "{}: mask vs report", kind.name());
+        } else {
+            assert_eq!(rep.dropped_events, 0, "{}: no mask, no drops", kind.name());
+        }
+        let mask = shedder.event_mask();
+        state.process_batch(chunk, mask);
+        pms += rep.dropped_pms;
+        evs += rep.dropped_events;
+        cost += rep.cost_ns;
+    }
+    (pms, evs, cost)
+}
+
+fn backends(warm: &[Event]) -> Vec<(&'static str, Box<dyn OperatorState>)> {
+    let mut single: Box<dyn OperatorState> = Box::new(Operator::new(queries()));
+    warmed(single.as_mut(), warm);
+    let mut sharded: Box<dyn OperatorState> = Box::new(ShardedOperator::new(queries(), 2));
+    warmed(sharded.as_mut(), warm);
+    vec![("single", single), ("sharded", sharded)]
+}
+
+#[test]
+fn untrained_detector_never_sheds_on_any_backend() {
+    let trace = StockGen::with_seed(11).take_events(14_000);
+    let (warm, measure) = trace.split_at(10_000);
+    for (backend, mut state) in backends(warm) {
+        for kind in ALL_SHEDDER_KINDS {
+            let before = state.pm_count();
+            let untrained = OverloadDetector::new(1_000.0, 0.0);
+            let (pms, evs, cost) =
+                drive(kind, &untrained, state.as_mut(), measure, 1e12);
+            assert_eq!(pms, 0, "{backend}/{}: untrained must not drop PMs", kind.name());
+            assert_eq!(evs, 0, "{backend}/{}: untrained must not drop events", kind.name());
+            assert_eq!(cost, 0.0, "{backend}/{}: untrained costs nothing", kind.name());
+            assert!(
+                state.pm_count() >= before.min(1),
+                "{backend}/{}: processing continued",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn none_never_sheds_even_under_pressure() {
+    let trace = StockGen::with_seed(12).take_events(14_000);
+    let (warm, measure) = trace.split_at(10_000);
+    for (backend, mut state) in backends(warm) {
+        let hot = hot_detector();
+        let (pms, evs, cost) =
+            drive(ShedderKind::None, &hot, state.as_mut(), measure, 1e12);
+        assert_eq!((pms, evs), (0, 0), "{backend}: none must never drop");
+        assert_eq!(cost, 0.0, "{backend}: none costs nothing");
+    }
+}
+
+#[test]
+fn trained_strategies_act_identically_shaped_on_both_backends() {
+    let trace = StockGen::with_seed(13).take_events(14_000);
+    let (warm, measure) = trace.split_at(10_000);
+    for (backend, mut state) in backends(warm) {
+        assert!(state.pm_count() > 10, "{backend}: scenario needs PMs");
+        for kind in ALL_SHEDDER_KINDS {
+            if kind == ShedderKind::None {
+                continue;
+            }
+            let hot = hot_detector();
+            let (pms, evs, cost) =
+                drive(kind, &hot, state.as_mut(), measure, 1e9);
+            match kind {
+                ShedderKind::PSpice | ShedderKind::PSpiceMinus | ShedderKind::PmBaseline => {
+                    assert!(pms > 0, "{backend}/{}: PM strategy must drop PMs", kind.name());
+                    assert_eq!(evs, 0, "{backend}/{}: PM strategy drops no events", kind.name());
+                }
+                ShedderKind::EventBaseline => {
+                    assert!(evs > 0, "{backend}/{}: E-BL must drop events", kind.name());
+                    assert_eq!(pms, 0, "{backend}/{}: E-BL drops no PMs", kind.name());
+                }
+                ShedderKind::None => unreachable!(),
+            }
+            assert!(cost > 0.0, "{backend}/{}: acting costs time", kind.name());
+        }
+    }
+}
