@@ -1,6 +1,8 @@
 //! Tiny bench harness (criterion is not in the offline crate set):
 //! warm-up + repeated timed runs, reporting mean ± stddev and
-//! throughput.  Used by every `harness = false` bench target.
+//! throughput, plus machine-readable emission into `BENCH_pr3.json`
+//! so CI's perf-smoke job (and humans diffing runs) can consume the
+//! numbers without scraping stdout.
 
 use std::time::Instant;
 
@@ -70,4 +72,78 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, items: u64, mut
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Was the bench invoked with `-- --smoke` (CI's tiny-config mode)?
+#[allow(dead_code)]
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Minimal JSON string escaping (bench labels are plain ASCII, but be
+/// correct anyway).
+#[allow(dead_code)]
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Emit `results` as the `bench` section of the machine-readable
+/// results file (`$BENCH_JSON`, default `BENCH_pr3.json` in the bench
+/// working directory — the `rust/` package root under cargo).
+///
+/// The file is a single JSON object with one array per bench target,
+/// each section kept on its own line; re-running one bench replaces
+/// only its own section, so `shed_overhead` and `operator_throughput`
+/// can both record into the same file:
+///
+/// ```json
+/// {
+///   "shed_overhead": [{"name": "...", "mean_s": ..., "stddev_s": ..., "items": ..., "items_per_s": ...}],
+///   "operator_throughput": [...]
+/// }
+/// ```
+#[allow(dead_code)]
+pub fn emit_json(bench: &str, results: &[BenchResult]) -> std::io::Result<String> {
+    let path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+    // keep every other bench's single-line section
+    let mut sections: Vec<(String, String)> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(&path) {
+        for line in existing.lines() {
+            let t = line.trim().trim_end_matches(',');
+            if let Some(rest) = t.strip_prefix('"') {
+                if let Some((name, body)) = rest.split_once("\": ") {
+                    if name != bench {
+                        sections.push((name.to_string(), body.to_string()));
+                    }
+                }
+            }
+        }
+    }
+    let entries: Vec<String> = results
+        .iter()
+        .map(|r| {
+            let items_per_s = if r.mean_s > 0.0 {
+                r.items as f64 / r.mean_s
+            } else {
+                0.0
+            };
+            format!(
+                "{{\"name\": \"{}\", \"mean_s\": {:e}, \"stddev_s\": {:e}, \"items\": {}, \"items_per_s\": {:e}}}",
+                escape(&r.name),
+                r.mean_s,
+                r.stddev_s,
+                r.items,
+                items_per_s
+            )
+        })
+        .collect();
+    sections.push((bench.to_string(), format!("[{}]", entries.join(", "))));
+    let body: Vec<String> = sections
+        .iter()
+        .map(|(name, body)| format!("  \"{}\": {}", escape(name), body))
+        .collect();
+    std::fs::write(&path, format!("{{\n{}\n}}\n", body.join(",\n")))?;
+    println!("(bench results recorded in {path})");
+    Ok(path)
 }

@@ -1,10 +1,12 @@
 //! Operator hot-path benches: wall-clock events/s of the match loop at
 //! different PM populations (the L3 request path the paper's `f(n_pm)`
-//! regression models), plus the per-component costs.
+//! regression models), plus the per-component costs.  Records every
+//! measurement into `BENCH_pr3.json`; `-- --smoke` runs a tiny
+//! configuration for CI's perf-smoke job.
 
 mod common;
 
-use common::{bench, black_box};
+use common::{bench, black_box, emit_json, smoke_mode, BenchResult};
 use pspice::datasets::{BusGen, StockGen};
 use pspice::events::EventStream;
 use pspice::operator::Operator;
@@ -12,20 +14,28 @@ use pspice::query::builtin::{q1, q4};
 
 fn main() {
     println!("== operator_throughput ==");
+    let smoke = smoke_mode();
+    let windows: &[u64] = if smoke { &[1_000] } else { &[1_000, 5_000, 10_000] };
+    let (q4_warm, batch_len, reps) = if smoke {
+        (10_000usize, 2_000usize, 5usize)
+    } else {
+        (40_000, 5_000, 10)
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // q1: many windows, 11-state sequences over quotes
-    for &ws in &[1_000u64, 5_000, 10_000] {
+    for &ws in windows {
         let mut op = Operator::new(q1(ws).queries);
         let mut g = StockGen::with_seed(1);
         for _ in 0..3 * ws {
             op.process_event(&g.next_event().unwrap());
         }
-        let batch: Vec<_> = g.take_events(5_000);
+        let batch: Vec<_> = g.take_events(batch_len);
         let pms = op.pm_count();
-        bench(
+        results.push(bench(
             &format!("q1.process_event(ws={ws}, pms={pms})"),
             1,
-            10,
+            reps,
             batch.len() as u64,
             || {
                 let mut op2 = op.clone();
@@ -35,21 +45,21 @@ fn main() {
                 }
                 black_box(checks);
             },
-        );
+        ));
     }
 
     // q4: fewer windows, any-operator with key correlation
     let mut op = Operator::new(q4(6, 20_000, 100).queries);
     let mut g = BusGen::with_seed(2);
-    for _ in 0..40_000 {
+    for _ in 0..q4_warm {
         op.process_event(&g.next_event().unwrap());
     }
-    let batch: Vec<_> = g.take_events(5_000);
+    let batch: Vec<_> = g.take_events(batch_len);
     let pms = op.pm_count();
-    bench(
+    results.push(bench(
         &format!("q4.process_event(pms={pms})"),
         1,
-        10,
+        reps,
         batch.len() as u64,
         || {
             let mut op2 = op.clone();
@@ -57,15 +67,15 @@ fn main() {
                 black_box(op2.process_event(e).checks);
             }
         },
-    );
+    ));
 
     // observation capture on/off delta
     let mut op_obs = op.clone();
     op_obs.obs.enabled = false;
-    bench(
+    results.push(bench(
         &format!("q4.process_event(no-obs, pms={pms})"),
         1,
-        10,
+        reps,
         batch.len() as u64,
         || {
             let mut op2 = op_obs.clone();
@@ -73,13 +83,14 @@ fn main() {
                 black_box(op2.process_event(e).checks);
             }
         },
-    );
+    ));
 
-    // bookkeeping-only path (E-BL dropped events)
-    bench(
+    // bookkeeping-only path (E-BL dropped events) — exercises the
+    // allocation-free no-expiry fast path of QueryWindows::expire
+    results.push(bench(
         &format!("q4.process_bookkeeping(pms={pms})"),
         1,
-        10,
+        reps,
         batch.len() as u64,
         || {
             let mut op2 = op.clone();
@@ -87,13 +98,18 @@ fn main() {
                 black_box(op2.process_bookkeeping(e).opened);
             }
         },
-    );
+    ));
 
     // dataset generation itself
-    bench("stockgen.next_event", 1, 10, 100_000, || {
+    let gen_n: u64 = if smoke { 20_000 } else { 100_000 };
+    results.push(bench("stockgen.next_event", 1, reps, gen_n, || {
         let mut g = StockGen::with_seed(9);
-        for _ in 0..100_000 {
+        for _ in 0..gen_n {
             black_box(g.next_event());
         }
-    });
+    }));
+
+    if let Err(e) = emit_json("operator_throughput", &results) {
+        eprintln!("warning: could not write bench json: {e}");
+    }
 }

@@ -1,17 +1,25 @@
 //! Fig. 9a bench — wall-clock cost of the shedding primitives at
-//! realistic PM populations, for all three strategies, plus the
-//! sort-vs-select ablation the paper's complexity analysis motivates
-//! (paper budgets O(n log n); our selection is O(n)).
+//! realistic PM populations, now centered on the PR-3 acceptance
+//! comparison: the **cell-based** shed decision (enumerate + sort
+//! O(cells) summaries off the per-window state counts) versus the
+//! **legacy per-PM** decision (materialize a `PmRef` + utility pair per
+//! PM, `select_nth_unstable`, build the victim id hash-set), which is
+//! what `shed_lowest` did before the cell index existed.
+//!
+//! Prints an explicit PASS/FAIL line for the ≥2× shed-decision speedup
+//! target at the largest population and records every measurement in
+//! `BENCH_pr3.json` (see `common::emit_json`).  `-- --smoke` runs a
+//! tiny configuration for CI.
 
 mod common;
 
 use std::collections::HashSet;
 
-use common::{bench, black_box};
+use common::{bench, black_box, emit_json, smoke_mode, BenchResult};
 use pspice::datasets::BusGen;
 use pspice::events::EventStream;
 use pspice::model::{ModelBuilder, ModelConfig};
-use pspice::operator::Operator;
+use pspice::operator::{cell_cmp, CellTake, Operator, PmRef, ShedCell};
 use pspice::query::builtin::q4;
 use pspice::runtime::FallbackEngine;
 use pspice::util::Rng;
@@ -20,9 +28,9 @@ fn operator_with_pms(target_pms: usize) -> Operator {
     // big windows + small slide grow the PM population; the event cap
     // bounds setup time (q4's PM population saturates at
     // #windows × (#stops + 1), so very large targets are best-effort)
-    let mut op = Operator::new(q4(8, 40_000, 50).queries);
+    let mut op = Operator::new(q4(8, 60_000, 40).queries);
     let mut g = BusGen::with_seed(1);
-    let mut budget = 2_000_000u64;
+    let mut budget = 3_000_000u64;
     while op.pm_count() < target_pms && budget > 0 {
         op.process_event(&g.next_event().unwrap());
         budget -= 1;
@@ -32,8 +40,18 @@ fn operator_with_pms(target_pms: usize) -> Operator {
 
 fn main() {
     println!("== shed_overhead (Fig. 9a wall-clock) ==");
-    for &n in &[1_000usize, 10_000, 40_000] {
-        let op = operator_with_pms(n);
+    let smoke = smoke_mode();
+    let sizes: &[usize] = if smoke {
+        &[2_000]
+    } else {
+        &[1_000, 10_000, 50_000]
+    };
+    let reps = if smoke { 5 } else { 20 };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut last_speedup = 0.0f64;
+    let mut last_n = 0usize;
+    for &target in sizes {
+        let op = operator_with_pms(target);
         let n = op.pm_count(); // actual population (saturation-aware)
         let mut mb = ModelBuilder::new(
             ModelConfig {
@@ -46,65 +64,127 @@ fn main() {
         let tables = mb.build(&op).unwrap();
         let rho = n / 10;
 
-        // pSPICE drop: enumerate + utility + select + remove
-        bench(
-            &format!("operator.shed_lowest(n={n}, rho={rho})"),
+        let mut tabled = op.clone();
+        tabled.install_tables(&tables);
+
+        // --- the acceptance pair: decision cost, cell vs legacy ------
+
+        // cell-based decision: O(cells) enumeration off the window
+        // state counts + sort + take construction + the per-window
+        // regroup sort (exactly what `shed_lowest` does before the
+        // in-place drop)
+        let mut cells: Vec<ShedCell> = Vec::new();
+        let mut takes: Vec<CellTake> = Vec::new();
+        let cell_decide = bench(
+            &format!("cell.decide(n={n}, rho={rho})"),
             3,
-            20,
+            reps,
             n as u64,
             || {
-                let mut op2 = op.clone();
-                op2.install_tables(&tables);
-                black_box(op2.shed_lowest(rho));
+                tabled.cell_refs(&mut cells);
+                cells.sort_unstable_by(cell_cmp);
+                takes.clear();
+                let mut left = rho;
+                for c in &cells {
+                    if left == 0 {
+                        break;
+                    }
+                    let take = (c.count as usize).min(left) as u32;
+                    left -= take as usize;
+                    takes.push(CellTake {
+                        query: c.query,
+                        open_seq: c.open_seq,
+                        state: c.state,
+                        take,
+                    });
+                }
+                takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
+                black_box(takes.len());
+            },
+        );
+        println!("  ({} cells for {} PMs)", cells.len(), n);
+
+        // legacy per-PM decision: what shed_lowest cost before PR 3
+        let mut refs: Vec<PmRef> = Vec::new();
+        let mut keyed: Vec<(f64, u64)> = Vec::new();
+        let legacy_decide = bench(
+            &format!("legacy.decide(n={n}, rho={rho})"),
+            3,
+            reps,
+            n as u64,
+            || {
+                op.pm_refs(&mut refs);
+                keyed.clear();
+                keyed.reserve(refs.len());
+                for r in &refs {
+                    keyed.push((tables[r.query].lookup(r.state, r.remaining), r.pm_id));
+                }
+                if rho > 0 && rho < keyed.len() {
+                    keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
+                }
+                let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+                black_box(ids.len());
             },
         );
 
-        // PM-BL random drop
-        bench(
+        last_speedup = legacy_decide.mean_s / cell_decide.mean_s.max(1e-12);
+        last_n = n;
+        results.push(BenchResult {
+            name: format!("derived.decide_speedup(n={n})"),
+            mean_s: last_speedup,
+            stddev_s: 0.0,
+            items: 0,
+        });
+
+        // --- full in-place passes and baselines ----------------------
+
+        // pSPICE drop end to end: decision + in-place cell drop
+        results.push(bench(
+            &format!("operator.shed_lowest(n={n}, rho={rho})"),
+            3,
+            reps,
+            n as u64,
+            || {
+                let mut op2 = tabled.clone();
+                black_box(op2.shed_lowest(rho));
+            },
+        ));
+
+        // legacy end to end: per-PM decision + id-set retain over
+        // every window
+        let victims: HashSet<u64> = {
+            op.pm_refs(&mut refs);
+            refs.iter().take(rho).map(|r| r.pm_id).collect()
+        };
+        results.push(bench(
+            &format!("legacy.drop_pms(n={n}, rho={rho})"),
+            3,
+            reps,
+            n as u64,
+            || {
+                let mut op2 = op.clone();
+                black_box(op2.drop_pms(&victims));
+            },
+        ));
+
+        // PM-BL random drop (scratch-buffer path)
+        results.push(bench(
             &format!("pm_bl.drop_random(n={n}, rho={rho})"),
             3,
-            20,
+            reps,
             n as u64,
             || {
                 let mut op2 = op.clone();
                 let mut rng = Rng::seeded(7);
                 black_box(op2.drop_random(rho, &mut rng));
             },
-        );
+        ));
 
-        // ablation: full sort (the paper's O(n log n)) vs our selection
-        let mut refs = Vec::new();
-        op.pm_refs(&mut refs);
-        let utils: Vec<(f64, u64)> = refs
-            .iter()
-            .map(|r| (tables[r.query].lookup(r.state, r.remaining), r.pm_id))
-            .collect();
-        bench(&format!("ablation.full_sort(n={n})"), 3, 20, n as u64, || {
-            let mut v = utils.clone();
-            v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            black_box(&v);
-        });
-        bench(
-            &format!("ablation.select_nth(n={n}, rho={rho})"),
+        // utility lookup alone (the O(1) claim), per cell vs per PM
+        results.push(bench(
+            &format!("pspice.utility_lookup_per_pm(n={n})"),
             3,
-            20,
-            n as u64,
-            || {
-                let mut v = utils.clone();
-                if rho < v.len() {
-                    v.select_nth_unstable_by(rho - 1, |a, b| {
-                        a.0.partial_cmp(&b.0).unwrap()
-                    });
-                }
-                black_box(&v);
-            },
-        );
-
-        // utility lookup alone (the O(1) claim)
-        bench(
-            &format!("pspice.utility_lookup(n={n})"),
-            3,
-            50,
+            reps,
             n as u64,
             || {
                 let mut acc = 0.0;
@@ -113,20 +193,25 @@ fn main() {
                 }
                 black_box(acc);
             },
-        );
+        ));
 
-        // drop by id set (operator-side removal)
-        let victims: HashSet<u64> = refs.iter().take(rho).map(|r| r.pm_id).collect();
-        bench(
-            &format!("operator.drop_pms(n={n}, rho={rho})"),
-            3,
-            20,
-            n as u64,
-            || {
-                let mut op2 = op.clone();
-                black_box(op2.drop_pms(&victims));
-            },
-        );
+        results.push(cell_decide);
+        results.push(legacy_decide);
         println!();
+    }
+
+    let pass = last_speedup >= 2.0;
+    println!(
+        "  target >=2x shed-decision speedup at n={last_n}: {}{} ({last_speedup:.2}x)",
+        if pass { "PASS" } else { "FAIL" },
+        if smoke { " [informational at smoke scale]" } else { "" }
+    );
+    if let Err(e) = emit_json("shed_overhead", &results) {
+        eprintln!("warning: could not write bench json: {e}");
+    }
+    // enforce the acceptance gate at the real (>=50k PM) configuration;
+    // smoke scale is too small and noisy to gate CI on
+    if !smoke && !pass {
+        std::process::exit(1);
     }
 }

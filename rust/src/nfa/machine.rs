@@ -172,7 +172,7 @@ impl CompiledQuery {
                 return StepResult::NoMatch;
             }
             let id = e.attr_id(group.distinct_slot);
-            if pm.seen.contains(&id) {
+            if pm.seen.contains(id) {
                 return StepResult::NoMatch;
             }
             if let Some((k, slot)) = group.spec.bind_key {
@@ -255,7 +255,7 @@ mod tests {
         // two more distinct delayed buses at stop 7: completes
         assert_eq!(cq.try_advance(&mut pm, &delayed(2.0, 7.0)), StepResult::Advanced);
         assert_eq!(cq.try_advance(&mut pm, &delayed(3.0, 7.0)), StepResult::Completed);
-        assert_eq!(pm.seen, vec![1, 2, 3]);
+        assert_eq!(pm.seen.to_vec(), vec![1, 2, 3]);
         let _ = bus::A_BUS;
     }
 

@@ -4,4 +4,4 @@ pub mod machine;
 pub mod pm;
 
 pub use machine::{CompiledQuery, StepResult};
-pub use pm::PartialMatch;
+pub use pm::{PartialMatch, SeenSet};

@@ -4,6 +4,95 @@
 /// Maximum number of correlation keys a PM can carry.
 pub const MAX_KEYS: usize = 2;
 
+/// Ids the any-group distinct-set can hold without spilling to the
+/// heap.  Every built-in query needs at most `n ≤ 8` distinct matches,
+/// so in practice the set lives entirely inside the PM and creating /
+/// advancing a PM never touches the allocator.
+pub const SEEN_INLINE: usize = 8;
+
+/// The distinct-id set of an any-group: a fixed-size inline array with
+/// a heap spill for pathological `n`.  Replaces the per-PM `Vec<i64>`
+/// that used to make every seeded PM a heap allocation and every
+/// distinctness check a pointer chase.
+///
+/// Append-only (ids are never removed; the PM is retired instead),
+/// which is what makes the inline-prefix representation trivial.
+#[derive(Debug, Clone, Default)]
+pub struct SeenSet {
+    len: u32,
+    inline: [i64; SEEN_INLINE],
+    /// overflow beyond [`SEEN_INLINE`] ids (empty — no allocation — for
+    /// every built-in pattern)
+    spill: Vec<i64>,
+}
+
+impl SeenSet {
+    /// Empty set (no heap allocation).
+    pub const fn new() -> Self {
+        SeenSet {
+            len: 0,
+            inline: [0; SEEN_INLINE],
+            spill: Vec::new(),
+        }
+    }
+
+    /// Distinct ids recorded so far.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// No ids recorded yet?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Has `id` been recorded?
+    #[inline]
+    pub fn contains(&self, id: i64) -> bool {
+        let n = self.len as usize;
+        let inline_n = n.min(SEEN_INLINE);
+        if self.inline[..inline_n].contains(&id) {
+            return true;
+        }
+        n > SEEN_INLINE && self.spill.contains(&id)
+    }
+
+    /// Record `id` (caller guarantees it is new — see
+    /// [`SeenSet::contains`]).
+    #[inline]
+    pub fn push(&mut self, id: i64) {
+        let n = self.len as usize;
+        if n < SEEN_INLINE {
+            self.inline[n] = id;
+        } else {
+            self.spill.push(id);
+        }
+        self.len += 1;
+    }
+
+    /// Ids in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = i64> + '_ {
+        let inline_n = self.len().min(SEEN_INLINE);
+        self.inline[..inline_n]
+            .iter()
+            .copied()
+            .chain(self.spill.iter().copied())
+    }
+
+    /// Ids in insertion order, materialized (test/diagnostic helper).
+    pub fn to_vec(&self) -> Vec<i64> {
+        self.iter().collect()
+    }
+}
+
+impl PartialEq for SeenSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.len == other.len && self.iter().eq(other.iter())
+    }
+}
+
 /// A partial match.  `state` counts completed steps, so `state == 0` is
 /// the paper's initial state `s_1` and `state == m-1` is the final state
 /// `s_m` (at which point the PM has become a complex event and is
@@ -20,7 +109,7 @@ pub struct PartialMatch {
     /// Bitmask of which keys are bound.
     pub keys_set: u8,
     /// Distinct ids consumed by the any-group so far.
-    pub seen: Vec<i64>,
+    pub seen: SeenSet,
     /// Sequence number of the event that opened the surrounding window
     /// (for diagnostics and QoR identity).
     pub opened_seq: u64,
@@ -34,7 +123,7 @@ impl PartialMatch {
             state: 0,
             keys: [0.0; MAX_KEYS],
             keys_set: 0,
-            seen: Vec::new(),
+            seen: SeenSet::new(),
             opened_seq,
         }
     }
@@ -104,5 +193,45 @@ mod tests {
         assert_ne!(a.key_bits(), b.key_bits());
         let unbound = PartialMatch::seed(2, 0);
         assert_eq!(unbound.key_bits(), 0);
+    }
+
+    #[test]
+    fn seen_set_stays_inline_for_builtin_sizes() {
+        let mut s = SeenSet::new();
+        for id in 0..SEEN_INLINE as i64 {
+            assert!(!s.contains(id));
+            s.push(id);
+            assert!(s.contains(id));
+        }
+        assert_eq!(s.len(), SEEN_INLINE);
+        assert_eq!(s.to_vec(), (0..SEEN_INLINE as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn seen_set_spills_past_inline_capacity() {
+        let mut s = SeenSet::new();
+        let ids: Vec<i64> = (0..2 * SEEN_INLINE as i64 + 3).collect();
+        for &id in &ids {
+            s.push(id);
+        }
+        assert_eq!(s.len(), ids.len());
+        for &id in &ids {
+            assert!(s.contains(id), "id {id} lost across the spill");
+        }
+        assert!(!s.contains(-1));
+        assert_eq!(s.to_vec(), ids);
+    }
+
+    #[test]
+    fn seen_set_equality_is_content_based() {
+        let mut a = SeenSet::new();
+        let mut b = SeenSet::new();
+        for id in [3, 1, 4] {
+            a.push(id);
+            b.push(id);
+        }
+        assert_eq!(a, b);
+        b.push(15);
+        assert_ne!(a, b);
     }
 }

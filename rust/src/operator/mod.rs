@@ -10,5 +10,5 @@ pub mod state;
 
 pub use cost::CostModel;
 pub use observe::{ObservationHub, QueryStats};
-pub use operator::{ComplexEvent, Operator, PmRef, ProcessOutcome};
+pub use operator::{cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, ShedCell};
 pub use state::{BatchResult, OperatorState, ShedOutcome};

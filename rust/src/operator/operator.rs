@@ -3,10 +3,17 @@
 //! open window, emitting complex events on completion, capturing
 //! observations for the model builder, and accounting virtual cost.
 //!
-//! The operator also exposes the two shedding primitives the paper's
-//! load shedder needs (Alg. 2): enumerate all PMs with their
-//! `(query, state, R_w)` coordinates, and drop a chosen set.
+//! The operator also exposes the shedding primitives the paper's load
+//! shedder needs (Alg. 2).  Since a PM's utility is
+//! `table[state][bin(R_w)]` and `R_w` is a per-window quantity, every PM
+//! of one `(query, window, state)` **cell** scores the same utility; the
+//! operator therefore ranks and drops *cells* (tracked incrementally by
+//! each window's [`crate::windows::StateCounts`] index) instead of
+//! materializing one entry per PM.  Per-PM enumeration
+//! ([`Operator::pm_refs`]) is retained
+//! for tests and QoR accounting so the equivalence stays checkable.
 
+use std::cmp::Ordering;
 use std::collections::HashSet;
 
 use crate::events::Event;
@@ -14,7 +21,7 @@ use crate::model::UtilityTable;
 use crate::nfa::{CompiledQuery, PartialMatch, StepResult};
 use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
-use crate::windows::QueryWindows;
+use crate::windows::{claim_sorted, has_claim_sorted, QueryWindows, Window};
 
 use super::cost::CostModel;
 use super::observe::ObservationHub;
@@ -68,6 +75,53 @@ pub struct PmRef {
     pub key_bits: u64,
 }
 
+/// One non-empty `(query, window, state)` shedding cell: `count` live
+/// PMs sharing one utility.  The unit the shedder ranks — there are
+/// typically orders of magnitude fewer cells than PMs.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedCell {
+    /// looked-up utility (shared by every PM in the cell)
+    pub utility: f64,
+    /// query index (global in cross-shard exchanges)
+    pub query: usize,
+    /// opening sequence number of the cell's window
+    pub open_seq: u64,
+    /// NFA state of the cell's PMs
+    pub state: u32,
+    /// live PMs in the cell
+    pub count: u32,
+}
+
+/// A drop instruction against one cell: remove the first `take` PMs of
+/// the cell in window position order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellTake {
+    /// query index (local to the executing operator)
+    pub query: usize,
+    /// opening sequence number of the cell's window
+    pub open_seq: u64,
+    /// NFA state of the cell
+    pub state: u32,
+    /// PMs to drop from the cell (≤ its live count)
+    pub take: u32,
+}
+
+/// Total order over shedding cells: utility first (NaN-safe — a
+/// poisoned NaN utility sorts above every number, so such cells are
+/// treated as high-utility and survive), then the sharding-invariant
+/// cell identity `(query, open_seq, state)`.  Together with the
+/// first-`take`-in-position-order rule of [`CellTake`], this defines
+/// the engine's deterministic victim selection: the per-PM order
+/// `(utility, query, open_seq, state, window position)`, identical on
+/// one shard and on N.
+pub fn cell_cmp(a: &ShedCell, b: &ShedCell) -> Ordering {
+    a.utility
+        .total_cmp(&b.utility)
+        .then_with(|| a.query.cmp(&b.query))
+        .then_with(|| a.open_seq.cmp(&b.open_seq))
+        .then_with(|| a.state.cmp(&b.state))
+}
+
 /// The CEP operator.
 #[derive(Clone)]
 pub struct Operator {
@@ -98,7 +152,10 @@ pub struct Operator {
     tables: Vec<UtilityTable>,
     /// scratch buffers reused across shed passes (no hot-path alloc)
     shed_scratch: Vec<PmRef>,
-    shed_keyed: Vec<(f64, u64)>,
+    shed_cells: Vec<ShedCell>,
+    shed_takes: Vec<CellTake>,
+    shed_group: Vec<(u32, u32)>,
+    shed_ids: Vec<u64>,
 }
 
 impl Operator {
@@ -123,7 +180,10 @@ impl Operator {
             prev_ts: 0,
             tables: Vec::new(),
             shed_scratch: Vec::new(),
-            shed_keyed: Vec::new(),
+            shed_cells: Vec::new(),
+            shed_takes: Vec::new(),
+            shed_group: Vec::new(),
+            shed_ids: Vec::new(),
         }
     }
 
@@ -182,10 +242,8 @@ impl Operator {
             let qw = &mut wins[qi];
             // 1. expire windows that ended before this event
             let closed = qw.expire(spec, e.seq, e.ts_ms);
-            out.closed += closed.len();
-            for w in &closed {
-                *n_pms -= w.pms.len();
-            }
+            out.closed += closed.windows;
+            *n_pms -= closed.pms;
             // 2. maybe open a new window (the opening event is processed
             //    inside it, like the paper's bus example)
             out.cost_ns += cost.open_check_ns;
@@ -210,9 +268,11 @@ impl Operator {
                 let obs_q = &mut obs.queries[qi];
                 let final_state = (cq.m - 1) as u32;
                 for w in qw.windows.iter_mut() {
+                    let open_seq = w.open_seq;
+                    let Window { pms, counts, .. } = w;
                     let mut i = 0;
-                    while i < w.pms.len() {
-                        let pm = &mut w.pms[i];
+                    while i < pms.len() {
+                        let pm = &mut pms[i];
                         let s = pm.state;
                         let advanced = mask & (1u64 << s) != 0;
                         out.checks += 1;
@@ -227,13 +287,17 @@ impl Operator {
                             *completions_total += 1;
                             out.completions.push(ComplexEvent {
                                 query: qi,
-                                window_open_seq: w.open_seq,
+                                window_open_seq: open_seq,
                                 key_bits: pm.key_bits(),
                                 completed_seq: e.seq,
                             });
-                            w.pms.swap_remove(i);
+                            counts.dec(s);
+                            pms.swap_remove(i);
                             *n_pms -= 1;
                         } else {
+                            if advanced {
+                                counts.advance(s, s + 1);
+                            }
                             i += 1;
                         }
                     }
@@ -241,10 +305,12 @@ impl Operator {
                 continue;
             }
             for w in qw.windows.iter_mut() {
+                let open_seq = w.open_seq;
                 let mut new_seeds = 0usize;
+                let Window { pms, claimed, counts, .. } = w;
                 let mut i = 0;
-                while i < w.pms.len() {
-                    let pm = &mut w.pms[i];
+                while i < pms.len() {
+                    let pm = &mut pms[i];
                     let s_before = pm.state;
                     let was_seed = s_before == 0;
                     let r = cq.try_advance(pm, e);
@@ -252,11 +318,13 @@ impl Operator {
                     out.cost_ns += check_ns;
                     // multi-seed key dedup: a seed that just bound an
                     // already-claimed key must not advance (another PM
-                    // already tracks that correlation group)
+                    // already tracks that correlation group).  `claimed`
+                    // is kept sorted, so the membership test is a
+                    // binary search.
                     if multi_seed
                         && was_seed
                         && r != StepResult::NoMatch
-                        && w.claimed.contains(&pm.key_bits())
+                        && has_claim_sorted(claimed, pm.key_bits())
                     {
                         // revert: re-seed in place.  The check still
                         // happened and its cost was charged, so the
@@ -280,8 +348,9 @@ impl Operator {
                             i += 1;
                         }
                         StepResult::Advanced => {
+                            counts.advance(s_before, pm.state);
                             if multi_seed && was_seed {
-                                w.claimed.push(pm.key_bits());
+                                claim_sorted(claimed, pm.key_bits());
                                 new_seeds += 1;
                             }
                             i += 1;
@@ -290,22 +359,24 @@ impl Operator {
                             *completions_total += 1;
                             out.completions.push(ComplexEvent {
                                 query: qi,
-                                window_open_seq: w.open_seq,
+                                window_open_seq: open_seq,
                                 key_bits: pm.key_bits(),
                                 completed_seq: e.seq,
                             });
                             if multi_seed && was_seed {
                                 // single-step any-group completed from seed
-                                w.claimed.push(pm.key_bits());
+                                claim_sorted(claimed, pm.key_bits());
                                 new_seeds += 1;
                             }
-                            w.pms.swap_remove(i);
+                            counts.dec(s_before);
+                            pms.swap_remove(i);
                             *n_pms -= 1;
                         }
                     }
                 }
                 for _ in 0..new_seeds {
-                    w.pms.push(PartialMatch::seed(*next_pm_id, w.open_seq));
+                    pms.push(PartialMatch::seed(*next_pm_id, open_seq));
+                    counts.inc(0);
                     *next_pm_id += 1;
                     *n_pms += 1;
                     *pms_created += 1;
@@ -348,10 +419,8 @@ impl Operator {
         for (qi, cq) in queries.iter().enumerate() {
             let qw = &mut wins[qi];
             let closed = qw.expire(cq.query.window, e.seq, e.ts_ms);
-            out.closed += closed.len();
-            for w in &closed {
-                *n_pms -= w.pms.len();
-            }
+            out.closed += closed.windows;
+            *n_pms -= closed.pms;
             out.cost_ns += cost.open_check_ns;
             if qw.should_open(cq, e) {
                 qw.open(e, next_pm_id);
@@ -374,6 +443,9 @@ impl Operator {
     }
 
     /// Enumerate every live PM with its shedding coordinates.
+    ///
+    /// Retained for tests and QoR accounting; the shed path itself works
+    /// on [`Operator::cell_refs`], which is O(cells) instead of O(n_pm).
     pub fn pm_refs(&self, buf: &mut Vec<PmRef>) {
         buf.clear();
         for (qi, qw) in self.wins.iter().enumerate() {
@@ -399,32 +471,130 @@ impl Operator {
         }
     }
 
+    /// Enumerate every non-empty `(query, window, state)` cell with its
+    /// table utility into `buf` (cleared first), straight off each
+    /// window's incrementally-maintained [`crate::windows::StateCounts`]
+    /// index — one utility lookup per *cell*, no per-PM work.
+    pub fn cell_refs(&self, buf: &mut Vec<ShedCell>) {
+        buf.clear();
+        for (qi, qw) in self.wins.iter().enumerate() {
+            let spec = self.queries[qi].query.window;
+            let table = self.tables.get(qi);
+            for w in &qw.windows {
+                if w.pms.is_empty() {
+                    continue;
+                }
+                let remaining = w.remaining_events(
+                    spec,
+                    self.last_seq,
+                    self.last_ts,
+                    self.events_per_ms,
+                );
+                for (state, count) in w.counts.iter_nonzero() {
+                    let utility = table.map_or(0.0, |t| t.lookup(state, remaining));
+                    buf.push(ShedCell {
+                        utility,
+                        query: qi,
+                        open_seq: w.open_seq,
+                        state,
+                        count,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Execute cell drop instructions *in place*: for each take, remove
+    /// the first `take` PMs of the cell in window position order (the
+    /// deterministic tie-break documented on [`cell_cmp`]).  `takes`
+    /// must be grouped by window — sorted by `(query, open_seq)` — so
+    /// each affected window is rewritten exactly once.  Returns how
+    /// many PMs were dropped.
+    pub fn drop_cells(&mut self, takes: &[CellTake]) -> usize {
+        debug_assert!(
+            takes
+                .windows(2)
+                .all(|p| (p[0].query, p[0].open_seq) <= (p[1].query, p[1].open_seq)),
+            "cell takes must be grouped by (query, open_seq)"
+        );
+        let mut group = std::mem::take(&mut self.shed_group);
+        let mut dropped = 0usize;
+        let mut i = 0;
+        while i < takes.len() {
+            let (q, open_seq) = (takes[i].query, takes[i].open_seq);
+            group.clear();
+            while i < takes.len() && takes[i].query == q && takes[i].open_seq == open_seq {
+                if takes[i].take > 0 {
+                    group.push((takes[i].state, takes[i].take));
+                }
+                i += 1;
+            }
+            if group.is_empty() {
+                continue;
+            }
+            let qw = &mut self.wins[q];
+            let w_idx = qw
+                .windows
+                .binary_search_by(|w| w.open_seq.cmp(&open_seq))
+                .expect("victim cell's window must still be open");
+            let w = &mut qw.windows[w_idx];
+            let want: usize = group.iter().map(|&(_, t)| t as usize).sum();
+            let got = w.retain_pms(|pm| {
+                match group.iter_mut().find(|g| g.0 == pm.state && g.1 > 0) {
+                    Some(g) => {
+                        g.1 -= 1;
+                        false
+                    }
+                    None => true,
+                }
+            });
+            debug_assert_eq!(got, want, "cell takes must name live PMs");
+            dropped += got;
+        }
+        self.n_pms -= dropped;
+        self.shed_group = group;
+        dropped
+    }
+
     /// Drop the PMs whose ids are in `ids`.  Returns how many were
     /// actually removed.
     pub fn drop_pms(&mut self, ids: &HashSet<u64>) -> usize {
         let mut dropped = 0;
         for qw in &mut self.wins {
             for w in &mut qw.windows {
-                let before = w.pms.len();
-                w.pms.retain(|pm| !ids.contains(&pm.id));
-                dropped += before - w.pms.len();
+                dropped += w.retain_pms(|pm| !ids.contains(&pm.id));
             }
         }
         self.n_pms -= dropped;
         dropped
     }
 
-    /// Drop `rho` PMs uniformly at random (the PM-BL baseline).
+    /// Drop `rho` PMs uniformly at random (the PM-BL baseline), through
+    /// the operator-owned shed scratch buffers — no per-call `Vec` or
+    /// hash-set allocation.
     pub fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
-        let mut refs = Vec::new();
+        let mut refs = std::mem::take(&mut self.shed_scratch);
         self.pm_refs(&mut refs);
         if refs.is_empty() || rho == 0 {
+            self.shed_scratch = refs;
             return 0;
         }
         let rho = rho.min(refs.len());
         rng.shuffle(&mut refs);
-        let ids: HashSet<u64> = refs[..rho].iter().map(|r| r.pm_id).collect();
-        self.drop_pms(&ids)
+        let mut ids = std::mem::take(&mut self.shed_ids);
+        ids.clear();
+        ids.extend(refs[..rho].iter().map(|r| r.pm_id));
+        ids.sort_unstable();
+        let mut dropped = 0;
+        for qw in &mut self.wins {
+            for w in &mut qw.windows {
+                dropped += w.retain_pms(|pm| ids.binary_search(&pm.id).is_err());
+            }
+        }
+        self.n_pms -= dropped;
+        self.shed_scratch = refs;
+        self.shed_ids = ids;
+        dropped
     }
 
     /// Remove every PM and window (used between experiment phases).
@@ -440,7 +610,7 @@ impl Operator {
         self.wins.iter().map(|q| q.windows.len()).sum()
     }
 
-    /// Install the utility tables [`Operator::shed_lowest`] ranks PMs
+    /// Install the utility tables [`Operator::shed_lowest`] ranks cells
     /// by (one table per query; model retraining replaces them).
     pub fn install_tables(&mut self, tables: &[UtilityTable]) {
         self.tables = tables.to_vec();
@@ -449,40 +619,50 @@ impl Operator {
     /// Paper Algorithm 2: drop the `rho` lowest-utility PMs, ranked by
     /// the installed tables (a PM whose query has no table scores 0).
     ///
-    /// Selection uses `select_nth_unstable` (expected O(n)) instead of
-    /// the paper's full sort (O(n log n)), with a NaN-safe total order:
-    /// a poisoned (NaN) utility sorts above every number, so such PMs
-    /// are treated as high-utility and survive.
+    /// Works on `(query, window, state)` cells: every PM of a cell
+    /// shares one utility, so the pass enumerates and sorts O(cells)
+    /// entries instead of O(n_pm), then drops whole cells in place —
+    /// a partial final cell is tie-broken deterministically by PM
+    /// position in its window.  The resulting victim set is exactly the
+    /// first `rho` PMs in the total order
+    /// `(utility, query, open_seq, state, window position)`, with a
+    /// NaN-safe twist: a poisoned (NaN) utility sorts above every
+    /// number, so such PMs are treated as high-utility and survive.
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
-        let mut scratch = std::mem::take(&mut self.shed_scratch);
-        let mut keyed = std::mem::take(&mut self.shed_keyed);
-        self.pm_refs(&mut scratch);
-        let n = scratch.len();
+        let n = self.n_pms;
         let mut out = ShedOutcome {
             scanned: n,
             dropped: 0,
             per_shard: vec![(n, 0)],
         };
-        if n > 0 && rho > 0 {
-            let rho = rho.min(n);
-            keyed.clear();
-            keyed.reserve(n);
-            for r in &scratch {
-                let u = self
-                    .tables
-                    .get(r.query)
-                    .map_or(0.0, |t| t.lookup(r.state, r.remaining));
-                keyed.push((u, r.pm_id));
-            }
-            if rho < n {
-                keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
-            }
-            let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
-            out.dropped = self.drop_pms(&ids);
-            out.per_shard[0].1 = out.dropped;
+        if n == 0 || rho == 0 {
+            return out;
         }
-        self.shed_scratch = scratch;
-        self.shed_keyed = keyed;
+        let mut cells = std::mem::take(&mut self.shed_cells);
+        let mut takes = std::mem::take(&mut self.shed_takes);
+        self.cell_refs(&mut cells);
+        cells.sort_unstable_by(cell_cmp);
+        takes.clear();
+        let mut left = rho.min(n);
+        for c in &cells {
+            if left == 0 {
+                break;
+            }
+            let take = (c.count as usize).min(left) as u32;
+            left -= take as usize;
+            takes.push(CellTake {
+                query: c.query,
+                open_seq: c.open_seq,
+                state: c.state,
+                take,
+            });
+        }
+        // regroup by window so each one is rewritten exactly once
+        takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
+        out.dropped = self.drop_cells(&takes);
+        out.per_shard[0].1 = out.dropped;
+        self.shed_cells = cells;
+        self.shed_takes = takes;
         out
     }
 }
@@ -575,6 +755,14 @@ mod tests {
         Operator::new(q1(ws).queries)
     }
 
+    /// Does every window's cell index agree with a direct recount?
+    fn cell_index_consistent(op: &Operator) -> bool {
+        op.wins
+            .iter()
+            .flat_map(|qw| qw.windows.iter())
+            .all(|w| w.counts.matches(&w.pms))
+    }
+
     #[test]
     fn windows_open_on_leaders_and_expire() {
         let mut op = stock_op(100);
@@ -663,6 +851,7 @@ mod tests {
         let dropped = op.drop_random(before / 2, &mut rng);
         assert_eq!(dropped, before / 2);
         assert_eq!(op.pm_count(), before - dropped);
+        assert!(cell_index_consistent(&op), "cell index drifted");
     }
 
     #[test]
@@ -745,6 +934,52 @@ mod tests {
         }
     }
 
+    #[test]
+    fn cell_index_tracks_the_match_loop() {
+        // the incrementally-maintained per-state counts must agree with
+        // a direct recount after heavy processing on both the generic
+        // (q4) and the key-free fast (q1) paths
+        let mut bus = Operator::new(q4(4, 3000, 300).queries);
+        let mut g = BusGen::with_seed(6);
+        for _ in 0..25_000 {
+            bus.process_event(&g.next_event().unwrap());
+        }
+        assert!(bus.pm_count() > 0);
+        assert!(cell_index_consistent(&bus), "q4 cell index drifted");
+
+        let mut stock = stock_op(1_000);
+        let mut s = StockGen::with_seed(6);
+        for _ in 0..25_000 {
+            stock.process_event(&s.next_event().unwrap());
+        }
+        assert!(stock.pm_count() > 0);
+        assert!(cell_index_consistent(&stock), "q1 cell index drifted");
+    }
+
+    #[test]
+    fn cell_refs_expand_to_the_pm_population() {
+        let mut op = tabled_operator();
+        let mut cells = Vec::new();
+        op.cell_refs(&mut cells);
+        let total: usize = cells.iter().map(|c| c.count as usize).sum();
+        assert_eq!(total, op.pm_count(), "cells must cover every live PM");
+        // expanding each cell's utility `count` times reproduces the
+        // per-PM utility multiset exactly (bit-for-bit)
+        let mut from_cells: Vec<u64> = cells
+            .iter()
+            .flat_map(|c| (0..c.count).map(|_| c.utility.to_bits()))
+            .collect();
+        let mut refs = Vec::new();
+        op.pm_refs(&mut refs);
+        let mut from_pms: Vec<u64> = refs
+            .iter()
+            .map(|r| utility(&op, r).to_bits())
+            .collect();
+        from_cells.sort_unstable();
+        from_pms.sort_unstable();
+        assert_eq!(from_cells, from_pms);
+    }
+
     fn tabled_operator() -> Operator {
         use crate::model::{ModelBuilder, ModelConfig};
         let mut op = Operator::new(q4(6, 4000, 200).queries);
@@ -780,6 +1015,7 @@ mod tests {
         assert_eq!(out.dropped, 10);
         assert_eq!(out.per_shard, vec![(before, 10)]);
         assert_eq!(op.pm_count(), before - 10);
+        assert!(cell_index_consistent(&op), "cell index drifted");
     }
 
     #[test]
@@ -840,7 +1076,8 @@ mod tests {
     #[test]
     fn shed_lowest_without_tables_still_drops() {
         // no tables installed: every PM scores utility 0 and exactly
-        // rho of them are removed (deterministic tie-break by position)
+        // rho of them are removed (deterministic tie-break by cell
+        // identity, then PM position)
         let mut op = Operator::new(q4(6, 5000, 250).queries);
         let mut g = BusGen::with_seed(3);
         for _ in 0..20_000 {
@@ -851,6 +1088,7 @@ mod tests {
         let out = op.shed_lowest(before / 2);
         assert_eq!(out.dropped, before / 2);
         assert_eq!(op.pm_count(), before - out.dropped);
+        assert!(cell_index_consistent(&op), "cell index drifted");
     }
 
     #[test]

@@ -1,37 +1,29 @@
 //! Deterministic merging: complex-event ordering across shards and the
 //! k-way merge that picks the globally lowest-utility shed victims from
-//! per-shard candidate lists (paper Alg. 2's "drop the ρ lowest-utility
-//! PMs", preserved across shards).
+//! per-shard **cell** candidate lists (paper Alg. 2's "drop the ρ
+//! lowest-utility PMs", preserved across shards at O(cells) traffic).
 
 use std::cmp::Ordering;
 
-use crate::operator::ComplexEvent;
+use crate::operator::{cell_cmp, CellTake, ComplexEvent, ShedCell};
 
-use super::worker::Candidate;
-
-/// Total order over shed candidates: utility first (NaN-safe total
-/// order, +NaN sorts above all numbers so poisoned PMs survive), then
-/// the sharding-invariant PM identity so 1-shard and N-shard runs pick
-/// identical victims even under utility ties.
-pub(super) fn cand_cmp(a: &Candidate, b: &Candidate) -> Ordering {
-    a.utility
-        .total_cmp(&b.utility)
-        .then_with(|| a.query.cmp(&b.query))
-        .then_with(|| a.open_seq.cmp(&b.open_seq))
-        .then_with(|| a.key_bits.cmp(&b.key_bits))
-        .then_with(|| a.state.cmp(&b.state))
-        .then_with(|| a.pm_id.cmp(&b.pm_id))
-}
-
-/// K-way merge over per-shard candidate lists (each sorted ascending by
-/// [`cand_cmp`]): selects the `rho` globally lowest candidates and
-/// returns, per shard, the (shard-local) PM ids to drop.
-pub(super) fn k_way_select(lists: &[Vec<Candidate>], rho: usize) -> Vec<Vec<u64>> {
+/// K-way merge over per-shard cell lists (each sorted ascending by
+/// [`cell_cmp`]): walks the global cell order, consuming whole cells
+/// until the budget `rho` is met — the final cell may be taken
+/// partially — and returns, per shard, the [`CellTake`] drop
+/// instructions (global query indices, grouped by window).
+///
+/// Because [`cell_cmp`] is a sharding-invariant total order and a
+/// partial take removes the first PMs of the cell in window position
+/// order, a 1-shard and an N-shard run select the *identical* victim
+/// set — the first `rho` PMs in the engine's documented order
+/// `(utility, query, open_seq, state, window position)`.
+pub(super) fn k_way_take(lists: &[Vec<ShedCell>], rho: usize) -> Vec<Vec<CellTake>> {
     let k = lists.len();
     let mut cursor = vec![0usize; k];
     let mut out = vec![Vec::new(); k];
-    let mut taken = 0;
-    while taken < rho {
+    let mut left = rho;
+    while left > 0 {
         let mut best: Option<usize> = None;
         for s in 0..k {
             if cursor[s] >= lists[s].len() {
@@ -40,7 +32,7 @@ pub(super) fn k_way_select(lists: &[Vec<Candidate>], rho: usize) -> Vec<Vec<u64>
             best = match best {
                 None => Some(s),
                 Some(b) => {
-                    if cand_cmp(&lists[s][cursor[s]], &lists[b][cursor[b]])
+                    if cell_cmp(&lists[s][cursor[s]], &lists[b][cursor[b]])
                         == Ordering::Less
                     {
                         Some(s)
@@ -51,9 +43,20 @@ pub(super) fn k_way_select(lists: &[Vec<Candidate>], rho: usize) -> Vec<Vec<u64>
             };
         }
         let Some(b) = best else { break };
-        out[b].push(lists[b][cursor[b]].pm_id);
+        let c = &lists[b][cursor[b]];
+        let take = (c.count as usize).min(left) as u32;
+        out[b].push(CellTake {
+            query: c.query,
+            open_seq: c.open_seq,
+            state: c.state,
+            take,
+        });
+        left -= take as usize;
         cursor[b] += 1;
-        taken += 1;
+    }
+    // each per-shard list regrouped by window for the in-place drop
+    for takes in &mut out {
+        takes.sort_unstable_by_key(|t: &CellTake| (t.query, t.open_seq, t.state));
     }
     out
 }
@@ -72,63 +75,82 @@ pub fn sort_completions(ces: &mut [ComplexEvent]) {
 mod tests {
     use super::*;
 
-    fn cand(utility: f64, pm_id: u64, query: usize) -> Candidate {
-        Candidate {
+    fn cell(utility: f64, query: usize, open_seq: u64, count: u32) -> ShedCell {
+        ShedCell {
             utility,
-            pm_id,
             query,
-            open_seq: 0,
-            key_bits: 0,
+            open_seq,
             state: 0,
+            count,
         }
     }
 
+    /// Flatten one shard's takes into comparable tuples.
+    fn keys(takes: &[CellTake]) -> Vec<(usize, u64, u32, u32)> {
+        takes
+            .iter()
+            .map(|t| (t.query, t.open_seq, t.state, t.take))
+            .collect()
+    }
+
+    fn total(takes: &[Vec<CellTake>]) -> usize {
+        takes.iter().flatten().map(|t| t.take as usize).sum()
+    }
+
     #[test]
-    fn k_way_select_picks_global_lowest() {
-        // shard 0: utilities 1, 5, 9 — shard 1: 2, 3, 4
+    fn k_way_take_picks_global_lowest_cells() {
+        // shard 0: utilities 1 (x3), 5 (x2) — shard 1: 2 (x2), 3 (x4)
         let lists = vec![
-            vec![cand(1.0, 10, 0), cand(5.0, 11, 0), cand(9.0, 12, 0)],
-            vec![cand(2.0, 20, 1), cand(3.0, 21, 1), cand(4.0, 22, 1)],
+            vec![cell(1.0, 0, 0, 3), cell(5.0, 0, 10, 2)],
+            vec![cell(2.0, 1, 0, 2), cell(3.0, 1, 10, 4)],
         ];
-        let v = k_way_select(&lists, 4);
-        assert_eq!(v[0], vec![10]);
-        assert_eq!(v[1], vec![20, 21, 22]);
+        let v = k_way_take(&lists, 7);
+        // 3 from u=1, 2 from u=2, then 2 of the 4 at u=3
+        assert_eq!(keys(&v[0]), vec![(0, 0, 0, 3)]);
+        assert_eq!(keys(&v[1]), vec![(1, 0, 0, 2), (1, 10, 0, 2)]);
+        assert_eq!(total(&v), 7);
     }
 
     #[test]
-    fn k_way_select_handles_short_lists_and_overdraw() {
-        let lists = vec![vec![cand(1.0, 1, 0)], vec![]];
-        let v = k_way_select(&lists, 10);
-        assert_eq!(v[0], vec![1]);
+    fn k_way_take_handles_short_lists_and_overdraw() {
+        let lists = vec![vec![cell(1.0, 0, 0, 2)], vec![]];
+        let v = k_way_take(&lists, 10);
+        assert_eq!(keys(&v[0]), vec![(0, 0, 0, 2)]);
         assert!(v[1].is_empty());
+        assert_eq!(total(&v), 2);
     }
 
     #[test]
-    fn ties_break_on_identity_not_arrival() {
-        // equal utilities: the lower (query, open_seq, ...) identity wins
-        let a = Candidate {
-            utility: 1.0,
-            pm_id: 99,
-            query: 0,
-            open_seq: 5,
-            key_bits: 0,
-            state: 1,
-        };
-        let b = Candidate {
-            utility: 1.0,
-            pm_id: 1,
-            query: 0,
-            open_seq: 9,
-            key_bits: 0,
-            state: 1,
-        };
-        assert_eq!(cand_cmp(&a, &b), Ordering::Less);
-        // NaN sorts above every finite utility
-        let n = Candidate {
+    fn cell_ties_break_on_identity() {
+        // equal utilities: the lower (query, open_seq, state) cell wins
+        let a = cell(1.0, 0, 5, 1);
+        let b = cell(1.0, 0, 9, 1);
+        assert_eq!(cell_cmp(&a, &b), Ordering::Less);
+        // NaN sorts above every finite utility (poisoned cells survive)
+        let n = ShedCell {
             utility: f64::NAN,
             ..a
         };
-        assert_eq!(cand_cmp(&a, &n), Ordering::Less);
+        assert_eq!(cell_cmp(&a, &n), Ordering::Less);
+        let lists = vec![vec![b], vec![a]];
+        let v = k_way_take(&lists, 1);
+        assert!(v[0].is_empty(), "the open_seq=5 cell must win the tie");
+        assert_eq!(v[1].len(), 1);
+    }
+
+    #[test]
+    fn takes_come_back_grouped_by_window() {
+        // one shard, three single-PM cells: two windows interleaved by
+        // utility — the output must still be window-grouped
+        let mut c1 = cell(1.0, 0, 20, 1);
+        c1.state = 0;
+        let mut c2 = cell(2.0, 0, 10, 1);
+        c2.state = 1;
+        let mut c3 = cell(3.0, 0, 20, 1);
+        c3.state = 2;
+        let lists = vec![vec![c1, c2, c3]];
+        let v = k_way_take(&lists, 3);
+        assert_eq!(keys(&v[0]), vec![(0, 10, 1, 1), (0, 20, 0, 1), (0, 20, 2, 1)]);
     }
 
     #[test]

@@ -19,11 +19,13 @@
 //! The overload detector stays global: it sees the *total* `n_pm` and
 //! the batch latency, and computes one global drop amount ρ.  Victim
 //! selection preserves "drop the ρ globally lowest-utility PMs": every
-//! shard returns its ρ lowest-utility candidates (sorted, with a
-//! sharding-invariant tie-break), the coordinator k-way merges them,
-//! and each shard then drops exactly the ids chosen from its list.
-//! A 1-shard and an N-shard run with the same drop decisions select the
-//! same victims.
+//! shard returns its lowest-utility `(query, window, state)` **cell
+//! summaries** covering ρ PMs (sorted by the sharding-invariant
+//! [`crate::operator::cell_cmp`] order), the coordinator k-way merges
+//! the cells, and each shard then drops exactly the per-cell takes
+//! chosen from its list — worker-channel traffic is O(cells), not
+//! O(n_pm).  A 1-shard and an N-shard run with the same drop decisions
+//! select the same victims.
 
 pub(crate) mod merge;
 mod worker;
@@ -289,8 +291,9 @@ impl ShardedOperator {
     }
 
     /// Drop the ρ globally lowest-utility PMs (paper Alg. 2, shard
-    /// aware): per-shard candidate lists are k-way merged so exactly the
-    /// globally lowest ρ are dropped, with deterministic tie-breaking.
+    /// aware): per-shard cell-summary lists are k-way merged so exactly
+    /// the globally lowest ρ are dropped, with the deterministic
+    /// tie-break documented on [`crate::operator::cell_cmp`].
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
         let scanned = self.pm_count();
         let mut out = ShedOutcome {
@@ -311,19 +314,20 @@ impl ShardedOperator {
                 _ => unreachable!("protocol violation: expected candidates"),
             }
         }
-        let victims = merge::k_way_select(&lists, rho);
-        for (s, ids) in victims.iter().enumerate() {
-            if !ids.is_empty() {
-                self.send(s, Request::DropByIds(ids.iter().copied().collect()));
+        let victims = merge::k_way_take(&lists, rho);
+        for (s, takes) in victims.iter().enumerate() {
+            if !takes.is_empty() {
+                self.send(s, Request::DropCells(takes.clone()));
             }
         }
-        for (s, ids) in victims.iter().enumerate() {
-            if ids.is_empty() {
+        for (s, takes) in victims.iter().enumerate() {
+            if takes.is_empty() {
                 continue;
             }
+            let expected: usize = takes.iter().map(|t| t.take as usize).sum();
             match self.recv(s) {
                 Response::Dropped(d) => {
-                    debug_assert_eq!(d, ids.len(), "victim ids must be live");
+                    debug_assert_eq!(d, expected, "victim cells must be live");
                     self.pms[s] -= d;
                     out.per_shard[s].1 = d;
                     out.dropped += d;

@@ -7,34 +7,20 @@
 //! [`super::ShardedOperator`] façade, which is what keeps the protocol
 //! deadlock-free: every request gets exactly one response, and the
 //! coordinator always drains responses before sending the next round.
+//!
+//! Shed candidates travel as compact `(query, window, state)` **cell
+//! summaries** ([`ShedCell`]) instead of per-PM `PmRef` streams: all
+//! PMs of a cell share one utility, so worker-channel traffic for a
+//! shed round is O(cells), not O(n_pm).
 
-use std::collections::HashSet;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::events::Event;
 use crate::model::UtilityTable;
-use crate::operator::{ComplexEvent, Operator, PmRef};
+use crate::operator::{CellTake, ComplexEvent, Operator, PmRef, ShedCell};
 use crate::query::Query;
 use crate::util::Rng;
-
-/// One shed candidate: a PM with its utility and its sharding-invariant
-/// identity (used for deterministic cross-shard tie-breaking).
-#[derive(Debug, Clone, Copy)]
-pub struct Candidate {
-    /// looked-up utility
-    pub utility: f64,
-    /// shard-local PM id (only meaningful to the shard that sent it)
-    pub pm_id: u64,
-    /// global query index
-    pub query: usize,
-    /// opening sequence number of the PM's window
-    pub open_seq: u64,
-    /// bound correlation keys
-    pub key_bits: u64,
-    /// current state
-    pub state: u32,
-}
 
 /// Aggregated outcome of one batch on one shard.
 #[derive(Debug, Default, Clone)]
@@ -73,15 +59,18 @@ pub(super) enum Request {
     SetCostFactors(Vec<f64>),
     /// Toggle observation capture.
     SetObsEnabled(bool),
-    /// Return the shard's `rho` lowest-utility PMs, sorted ascending.
+    /// Return the shard's lowest-utility cells, sorted ascending by
+    /// [`crate::operator::cell_cmp`], covering at least `rho` PMs
+    /// (query indices remapped to global).
     Candidates {
-        /// global drop budget (upper bound on candidates needed)
+        /// global drop budget (upper bound on PMs needed)
         rho: usize,
     },
     /// Enumerate every live PM (query indices remapped to global).
     PmRefs,
-    /// Drop the PMs with these (shard-local) ids.
-    DropByIds(HashSet<u64>),
+    /// Drop PMs cell-wise (global query indices; the worker remaps and
+    /// applies them in place via [`Operator::drop_cells`]).
+    DropCells(Vec<CellTake>),
     /// Drop `rho` PMs uniformly at random with a seeded RNG.
     DropRandom {
         /// how many to drop
@@ -99,8 +88,8 @@ pub(super) enum Request {
 pub(super) enum Response {
     /// outcome of a `Batch`
     Batch(BatchOutcome),
-    /// sorted lowest-utility candidates
-    Candidates(Vec<Candidate>),
+    /// sorted lowest-utility cell summaries
+    Candidates(Vec<ShedCell>),
     /// every live PM with global query indices
     PmRefs(Vec<PmRef>),
     /// PMs actually dropped
@@ -118,8 +107,15 @@ pub(super) fn run(
     local_to_global: Vec<usize>,
 ) {
     let mut op = Operator::new(queries);
-    let mut tables: Vec<UtilityTable> = Vec::new();
     let mut refs: Vec<PmRef> = Vec::new();
+    let mut cells: Vec<ShedCell> = Vec::new();
+    let mut takes: Vec<CellTake> = Vec::new();
+    let global_to_local = |g: usize| -> usize {
+        local_to_global
+            .iter()
+            .position(|&x| x == g)
+            .expect("cell take for a query this shard does not own")
+    };
     while let Ok(req) = rx.recv() {
         let resp = match req {
             Request::Batch { events, skip_match } => {
@@ -146,7 +142,7 @@ pub(super) fn run(
                 Response::Batch(out)
             }
             Request::SetTables(t) => {
-                tables = t;
+                op.install_tables(&t);
                 Response::Ack
             }
             Request::SetCostFactors(f) => {
@@ -158,28 +154,29 @@ pub(super) fn run(
                 Response::Ack
             }
             Request::Candidates { rho } => {
-                op.pm_refs(&mut refs);
-                let mut cands: Vec<Candidate> = refs
+                // O(cells) enumeration off the per-window state counts,
+                // sorted by the global selection order; only the prefix
+                // covering rho PMs can ever be picked, so the rest
+                // never crosses the channel
+                op.cell_refs(&mut cells);
+                let mut cands: Vec<ShedCell> = cells
                     .iter()
-                    .map(|r| Candidate {
-                        utility: tables
-                            .get(r.query)
-                            .map_or(0.0, |t| t.lookup(r.state, r.remaining)),
-                        pm_id: r.pm_id,
-                        query: local_to_global[r.query],
-                        open_seq: r.open_seq,
-                        key_bits: r.key_bits,
-                        state: r.state,
+                    .map(|c| ShedCell {
+                        query: local_to_global[c.query],
+                        ..*c
                     })
                     .collect();
-                // O(n) partial selection of the rho lowest before the
-                // O(rho log rho) sort the k-way merge needs — matches
-                // the single-threaded shedder's select_nth approach
-                if rho > 0 && rho < cands.len() {
-                    cands.select_nth_unstable_by(rho - 1, super::merge::cand_cmp);
-                    cands.truncate(rho);
+                cands.sort_unstable_by(crate::operator::cell_cmp);
+                let mut covered = 0usize;
+                let mut keep = 0usize;
+                for c in &cands {
+                    keep += 1;
+                    covered += c.count as usize;
+                    if covered >= rho {
+                        break;
+                    }
                 }
-                cands.sort_unstable_by(super::merge::cand_cmp);
+                cands.truncate(keep);
                 Response::Candidates(cands)
             }
             Request::PmRefs => {
@@ -193,7 +190,17 @@ pub(super) fn run(
                         .collect(),
                 )
             }
-            Request::DropByIds(ids) => Response::Dropped(op.drop_pms(&ids)),
+            Request::DropCells(global_takes) => {
+                takes.clear();
+                takes.extend(global_takes.iter().map(|t| CellTake {
+                    query: global_to_local(t.query),
+                    ..*t
+                }));
+                // regroup under local indices (the remap is monotone
+                // for round-robin plans, but don't rely on it)
+                takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
+                Response::Dropped(op.drop_cells(&takes))
+            }
             Request::DropRandom { rho, seed } => {
                 let mut rng = Rng::seeded(seed);
                 Response::Dropped(op.drop_random(rho, &mut rng))

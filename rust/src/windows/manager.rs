@@ -1,10 +1,91 @@
-//! Per-query window bookkeeping.
+//! Per-query window bookkeeping, including the *cell index*: every
+//! window incrementally tracks how many of its PMs sit at each NFA
+//! state.  Because a PM's utility is `table[state][bin(R_w)]` and `R_w`
+//! is a per-window quantity, all PMs of one `(window, state)` cell share
+//! one utility — the shedder ranks cells, not PMs, which is what makes
+//! the shed path O(cells) instead of O(n_pm).
 
 use std::collections::VecDeque;
 
 use crate::events::Event;
 use crate::nfa::{CompiledQuery, PartialMatch};
 use crate::query::{OpenPolicy, WindowSpec};
+
+/// Incrementally-maintained per-state PM counts of one window — the
+/// shedder's cell index.  Entries beyond the stored length are zero, so
+/// the vector only grows to the highest state the window has actually
+/// seen (lazily, without knowing the query's state count up front).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct StateCounts {
+    counts: Vec<u32>,
+}
+
+impl StateCounts {
+    /// PMs at state `s`.
+    #[inline]
+    pub fn get(&self, s: u32) -> u32 {
+        self.counts.get(s as usize).copied().unwrap_or(0)
+    }
+
+    /// One more PM at state `s`.
+    #[inline]
+    pub fn inc(&mut self, s: u32) {
+        let s = s as usize;
+        if self.counts.len() <= s {
+            self.counts.resize(s + 1, 0);
+        }
+        self.counts[s] += 1;
+    }
+
+    /// One fewer PM at state `s`.
+    #[inline]
+    pub fn dec(&mut self, s: u32) {
+        debug_assert!(self.get(s) > 0, "cell index underflow at state {s}");
+        self.counts[s as usize] -= 1;
+    }
+
+    /// A PM moved `from → to`.
+    #[inline]
+    pub fn advance(&mut self, from: u32, to: u32) {
+        self.dec(from);
+        self.inc(to);
+    }
+
+    /// Non-empty `(state, count)` cells, ascending by state.
+    pub fn iter_nonzero(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, &c)| (s as u32, c))
+    }
+
+    /// Does the index agree with a direct recount of `pms`?  (Test and
+    /// debug-assert helper — the hot path never recounts.)
+    pub fn matches(&self, pms: &[PartialMatch]) -> bool {
+        let top = pms.iter().map(|pm| pm.state as usize + 1).max().unwrap_or(0);
+        let mut direct = vec![0u32; top.max(self.counts.len())];
+        for pm in pms {
+            direct[pm.state as usize] += 1;
+        }
+        direct
+            .iter()
+            .enumerate()
+            .all(|(s, &c)| self.get(s as u32) == c)
+    }
+}
+
+/// Windows (and their PM counts) closed by one
+/// [`QueryWindows::expire`] pass.  Returning counts instead of the
+/// window objects keeps the per-event no-expiry fast path
+/// allocation-free.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Expired {
+    /// windows closed
+    pub windows: usize,
+    /// PMs retired with them
+    pub pms: usize,
+}
 
 /// One open window of one query.
 #[derive(Debug, Clone)]
@@ -17,7 +98,14 @@ pub struct Window {
     pub pms: Vec<PartialMatch>,
     /// Key-bit values already claimed by an advanced seed (multi-seed
     /// windows only): prevents two PMs for the same correlation key.
+    /// Kept **sorted** so membership checks binary-search; mutate only
+    /// through [`Window::claim`] / [`Window::has_claim`] (or keep the
+    /// ordering by hand when borrowing fields directly).
     pub claimed: Vec<u64>,
+    /// Per-state PM counts (the shedder's cell index).  Every code path
+    /// that adds, removes or advances a PM must keep this in step;
+    /// [`Window::retain_pms`] does so automatically for removals.
+    pub counts: StateCounts,
 }
 
 impl Window {
@@ -39,6 +127,52 @@ impl Window {
                 (left_ms as f64 * events_per_ms).ceil() as u64
             }
         }
+    }
+
+    /// Is `key` already claimed by an advanced seed?  O(log k).
+    #[inline]
+    pub fn has_claim(&self, key: u64) -> bool {
+        has_claim_sorted(&self.claimed, key)
+    }
+
+    /// Claim `key`, keeping [`Window::claimed`] sorted (idempotent).
+    #[inline]
+    pub fn claim(&mut self, key: u64) {
+        claim_sorted(&mut self.claimed, key);
+    }
+
+    /// Remove the PMs rejected by `keep`, maintaining the cell index.
+    /// Preserves PM order and returns how many were removed.
+    pub fn retain_pms(&mut self, mut keep: impl FnMut(&PartialMatch) -> bool) -> usize {
+        let Window { pms, counts, .. } = self;
+        let before = pms.len();
+        pms.retain(|pm| {
+            if keep(pm) {
+                true
+            } else {
+                counts.dec(pm.state);
+                false
+            }
+        });
+        before - pms.len()
+    }
+}
+
+/// Membership test against a sorted claim list — the free-function
+/// form of [`Window::has_claim`], usable under split field borrows
+/// (the operator's match loop holds `pms` and `claimed` separately).
+#[inline]
+pub fn has_claim_sorted(claimed: &[u64], key: u64) -> bool {
+    claimed.binary_search(&key).is_ok()
+}
+
+/// Sorted idempotent insert into a claim list — the single home of the
+/// "`Window::claimed` stays sorted" invariant; [`Window::claim`] and
+/// the operator's match loop both delegate here.
+#[inline]
+pub fn claim_sorted(claimed: &mut Vec<u64>, key: u64) {
+    if let Err(pos) = claimed.binary_search(&key) {
+        claimed.insert(pos, key);
     }
 }
 
@@ -69,30 +203,35 @@ impl QueryWindows {
             open_ts: e.ts_ms,
             pms: Vec::with_capacity(4),
             claimed: Vec::new(),
+            counts: StateCounts::default(),
         };
         w.pms.push(PartialMatch::seed(*next_pm_id, e.seq));
+        w.counts.inc(0);
         *next_pm_id += 1;
         self.windows.push_back(w);
         self.windows.back_mut().expect("just pushed")
     }
 
-    /// Close (and return) all windows that have expired at the given
-    /// stream position.  Windows are FIFO by `open_seq`, so expiry pops
-    /// from the front.
-    pub fn expire(&mut self, spec: WindowSpec, cur_seq: u64, cur_ts: u64) -> Vec<Window> {
-        let mut closed = Vec::new();
+    /// Close all windows that have expired at the given stream position
+    /// and return how many windows / PMs were retired.  Windows are
+    /// FIFO by `open_seq`, so expiry pops from the front; the common
+    /// nothing-expired case touches no memory beyond the front peek.
+    pub fn expire(&mut self, spec: WindowSpec, cur_seq: u64, cur_ts: u64) -> Expired {
+        let mut out = Expired::default();
         while let Some(front) = self.windows.front() {
             let dead = match spec {
                 WindowSpec::Count(ws) => cur_seq >= front.open_seq + ws,
                 WindowSpec::TimeMs(ms) => cur_ts > front.open_ts + ms,
             };
             if dead {
-                closed.push(self.windows.pop_front().expect("front checked"));
+                let w = self.windows.pop_front().expect("front checked");
+                out.windows += 1;
+                out.pms += w.pms.len();
             } else {
                 break;
             }
         }
-        closed
+        out
     }
 
     /// Total PMs across all open windows.
@@ -135,10 +274,9 @@ mod tests {
         let mut id = 0;
         qw.open(&quote(10, 0.0), &mut id);
         // window [10, 10+50): last contained seq is 59
-        assert!(qw.expire(WindowSpec::Count(50), 59, 0).is_empty());
+        assert_eq!(qw.expire(WindowSpec::Count(50), 59, 0), Expired::default());
         let closed = qw.expire(WindowSpec::Count(50), 60, 0);
-        assert_eq!(closed.len(), 1);
-        assert_eq!(closed[0].open_seq, 10);
+        assert_eq!((closed.windows, closed.pms), (1, 1));
         assert!(qw.windows.is_empty());
     }
 
@@ -147,8 +285,12 @@ mod tests {
         let mut qw = QueryWindows::default();
         let mut id = 0;
         qw.open(&quote(0, 0.0), &mut id); // open_ts = 0
-        assert!(qw.expire(WindowSpec::TimeMs(100), 5, 100).is_empty());
-        assert_eq!(qw.expire(WindowSpec::TimeMs(100), 6, 101).len(), 1);
+        assert_eq!(
+            qw.expire(WindowSpec::TimeMs(100), 5, 100),
+            Expired::default()
+        );
+        let closed = qw.expire(WindowSpec::TimeMs(100), 6, 101);
+        assert_eq!((closed.windows, closed.pms), (1, 1));
     }
 
     #[test]
@@ -158,6 +300,7 @@ mod tests {
             open_ts: 1000,
             pms: Vec::new(),
             claimed: Vec::new(),
+            counts: StateCounts::default(),
         };
         assert_eq!(
             w.remaining_events(WindowSpec::Count(50), 120, 0, 0.0),
@@ -181,5 +324,59 @@ mod tests {
         qw.open(&quote(0, 0.0), &mut id);
         qw.open(&quote(5, 1.0), &mut id);
         assert_eq!(qw.pm_count(), 2);
+    }
+
+    #[test]
+    fn state_counts_track_inc_dec_advance() {
+        let mut c = StateCounts::default();
+        assert_eq!(c.get(3), 0);
+        c.inc(0);
+        c.inc(0);
+        c.inc(2);
+        assert_eq!(c.get(0), 2);
+        assert_eq!(c.get(1), 0);
+        assert_eq!(c.get(2), 1);
+        c.advance(0, 1);
+        assert_eq!(c.get(0), 1);
+        assert_eq!(c.get(1), 1);
+        c.dec(2);
+        assert_eq!(c.get(2), 0);
+        let cells: Vec<(u32, u32)> = c.iter_nonzero().collect();
+        assert_eq!(cells, vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn retain_pms_keeps_cell_index_in_step() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(0, 0.0), &mut id);
+        let w = &mut qw.windows[0];
+        for s in [0u32, 1, 1, 2] {
+            let mut pm = PartialMatch::seed(id, 0);
+            id += 1;
+            pm.state = s;
+            w.pms.push(pm);
+            w.counts.inc(s);
+        }
+        assert!(w.counts.matches(&w.pms));
+        let removed = w.retain_pms(|pm| pm.state != 1);
+        assert_eq!(removed, 2);
+        assert!(w.counts.matches(&w.pms));
+        assert_eq!(w.counts.get(1), 0);
+        assert_eq!(w.counts.get(0), 2); // the seed + the pushed state-0 PM
+    }
+
+    #[test]
+    fn claims_stay_sorted_and_binary_search() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(0, 0.0), &mut id);
+        let w = &mut qw.windows[0];
+        for key in [9u64, 3, 7, 3, 1] {
+            w.claim(key);
+        }
+        assert_eq!(w.claimed, vec![1, 3, 7, 9]);
+        assert!(w.has_claim(7));
+        assert!(!w.has_claim(2));
     }
 }

@@ -6,4 +6,4 @@
 
 pub mod manager;
 
-pub use manager::{QueryWindows, Window};
+pub use manager::{claim_sorted, has_claim_sorted, Expired, QueryWindows, StateCounts, Window};

@@ -5,9 +5,12 @@
 //! The `legacy` module below is a faithful transcription of the old
 //! `harness::experiment::measure_single` path (per-event dispatch,
 //! `Shedder::on_event`-style inline pSPICE with shedder-owned utility
-//! tables and `select_nth_unstable` victim selection), built only from
-//! public engine primitives.  Every float is compared through
-//! `to_bits`, so any drift in operation order fails loudly.
+//! tables and per-PM victim selection), built only from public engine
+//! primitives.  Victim selection follows the engine's documented
+//! deterministic order `(utility, query, open_seq, state, window
+//! position)` — see `operator::cell_cmp` — which the cell-based
+//! `shed_lowest` must reproduce PM-for-PM.  Every float is compared
+//! through `to_bits`, so any drift in operation order fails loudly.
 
 use std::collections::HashSet;
 
@@ -111,9 +114,12 @@ fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
     let mut busy_ns = 0.0;
     let mut dropped_pms = 0u64;
     let mut peak_pms = 0usize;
-    // the old PSpiceShedder's scratch state
+    // the old PSpiceShedder's scratch state.  Keyed by the engine's
+    // deterministic per-PM selection order: utility first, then the
+    // sharding-invariant cell identity (query, open_seq, state), then
+    // window position (pm_refs enumeration order encodes it).
     let mut scratch = Vec::new();
-    let mut keyed: Vec<(f64, u64)> = Vec::new();
+    let mut keyed: Vec<(f64, usize, u64, u32, usize, u64)> = Vec::new();
     for (i, e) in trace[warmup..].iter().enumerate() {
         let arrival = source.arrival_ns(i as u64);
         let l_q = clock.begin_service(arrival);
@@ -126,13 +132,27 @@ fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
                 let rho = rho.min(n);
                 keyed.clear();
                 keyed.reserve(n);
-                for r in &scratch {
-                    keyed.push((tables[r.query].lookup(r.state, r.remaining), r.pm_id));
+                for (idx, r) in scratch.iter().enumerate() {
+                    keyed.push((
+                        tables[r.query].lookup(r.state, r.remaining),
+                        r.query,
+                        r.open_seq,
+                        r.state,
+                        idx,
+                        r.pm_id,
+                    ));
                 }
                 if rho < n {
-                    keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
+                    keyed.select_nth_unstable_by(rho - 1, |a, b| {
+                        a.0
+                            .total_cmp(&b.0)
+                            .then_with(|| a.1.cmp(&b.1))
+                            .then_with(|| a.2.cmp(&b.2))
+                            .then_with(|| a.3.cmp(&b.3))
+                            .then_with(|| a.4.cmp(&b.4))
+                    });
                 }
-                let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+                let ids: HashSet<u64> = keyed[..rho].iter().map(|k| k.5).collect();
                 let dropped = op.drop_pms(&ids);
                 dropped_pms += dropped as u64;
                 shed_cost = op.cost.shed_ns(n, dropped);

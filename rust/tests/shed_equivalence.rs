@@ -1,0 +1,217 @@
+//! Shed-equivalence property suite: the cell-based `shed_lowest`
+//! (ranking `(query, window, state)` cells off the incrementally
+//! maintained per-window state counts) must reproduce the *reference*
+//! per-PM selection — sort every live PM by the engine's documented
+//! deterministic order `(utility, query, open_seq, state, window
+//! position)` and drop the first ρ — exactly: same drop count, same
+//! victim utility multiset, and bit-for-bit identical completions
+//! downstream.  The same must hold between the single-threaded
+//! `Operator` and the `ShardedOperator`'s k-way cell merge.
+
+use std::collections::HashSet;
+
+use pspice::datasets::{BusGen, StockGen};
+use pspice::events::{Event, EventStream};
+use pspice::model::UtilityTable;
+use pspice::nfa::CompiledQuery;
+use pspice::operator::Operator;
+use pspice::query::builtin::{q1, q4};
+use pspice::query::Query;
+use pspice::runtime::sharded::sort_completions;
+use pspice::runtime::ShardedOperator;
+use pspice::testing::{forall, Gen};
+
+/// Deterministic synthetic utility tables (one per query) with varied
+/// values — model building is irrelevant to selection semantics, so the
+/// properties quantify over arbitrary tables instead of trained ones.
+fn synthetic_tables(queries: &[Query], g: &mut Gen) -> Vec<UtilityTable> {
+    queries
+        .iter()
+        .map(|q| {
+            let m = CompiledQuery::compile(q.clone()).m;
+            let nbins = g.usize(3, 10);
+            let bs = g.usize(5, 50) as u64;
+            let rows = (0..nbins)
+                .map(|_| (0..m).map(|_| g.f64(0.0, 2.0)).collect())
+                .collect();
+            UtilityTable { m, bs, rows }
+        })
+        .collect()
+}
+
+/// The reference (pre-cell-index) per-PM selection: enumerate every PM,
+/// key it by the documented deterministic order, drop the first ρ by
+/// id.  Returns how many were dropped.
+fn reference_shed_lowest(op: &mut Operator, tables: &[UtilityTable], rho: usize) -> usize {
+    let mut refs = Vec::new();
+    op.pm_refs(&mut refs);
+    let n = refs.len();
+    if n == 0 || rho == 0 {
+        return 0;
+    }
+    let rho = rho.min(n);
+    // pm_refs enumerates (query, window, position) in order, so the
+    // index is the position tie-break
+    let mut keyed: Vec<(f64, usize, u64, u32, usize, u64)> = refs
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| {
+            (
+                tables
+                    .get(r.query)
+                    .map_or(0.0, |t| t.lookup(r.state, r.remaining)),
+                r.query,
+                r.open_seq,
+                r.state,
+                idx,
+                r.pm_id,
+            )
+        })
+        .collect();
+    keyed.sort_unstable_by(|a, b| {
+        a.0
+            .total_cmp(&b.0)
+            .then_with(|| a.1.cmp(&b.1))
+            .then_with(|| a.2.cmp(&b.2))
+            .then_with(|| a.3.cmp(&b.3))
+            .then_with(|| a.4.cmp(&b.4))
+    });
+    let ids: HashSet<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+    op.drop_pms(&ids)
+}
+
+/// Sharding-invariant coordinates of the whole live population, sorted
+/// (pm ids differ across backends, so they are excluded).
+fn population(op: &dyn pspice::operator::OperatorState) -> Vec<(usize, u64, u64, u32)> {
+    let mut refs = Vec::new();
+    op.pm_refs(&mut refs);
+    let mut coords: Vec<(usize, u64, u64, u32)> = refs
+        .iter()
+        .map(|r| (r.query, r.open_seq, r.key_bits, r.state))
+        .collect();
+    coords.sort_unstable();
+    coords
+}
+
+/// Random (queries, warm trace, tail trace) scenario over both stream
+/// families.
+fn scenario(g: &mut Gen) -> (Vec<Query>, Vec<Event>, Vec<Event>) {
+    let (queries, events) = if g.bool(0.5) {
+        let n = g.usize(3, 5);
+        let ws = g.usize(1_000, 3_000) as u64;
+        let slide = g.usize(100, 500) as u64;
+        let mut gen = BusGen::with_seed(g.usize(0, 1 << 20) as u64);
+        (q4(n, ws, slide).queries, gen.take_events(g.usize(5_000, 9_000)))
+    } else {
+        let ws = g.usize(800, 2_500) as u64;
+        let mut gen = StockGen::with_seed(g.usize(0, 1 << 20) as u64);
+        (q1(ws).queries, gen.take_events(g.usize(5_000, 9_000)))
+    };
+    let split = events.len() * 2 / 3;
+    let tail = events[split..].to_vec();
+    let mut warm = events;
+    warm.truncate(split);
+    (queries, warm, tail)
+}
+
+#[test]
+fn prop_cell_shed_matches_reference_per_pm_selection() {
+    forall(8, 4242, |g| {
+        let (queries, warm, tail) = scenario(g);
+        let tables = synthetic_tables(&queries, g);
+        let mut base = Operator::new(queries);
+        for e in &warm {
+            base.process_event(e);
+        }
+        let before = base.pm_count();
+        if before == 0 {
+            return; // vacuous case
+        }
+        let rho = g.usize(1, before + before / 4 + 1); // overdraw included
+
+        let mut cell = base.clone();
+        cell.install_tables(&tables);
+        let out = cell.shed_lowest(rho);
+        assert_eq!(out.scanned, before);
+        assert_eq!(out.dropped, rho.min(before));
+
+        let mut reference = base;
+        let dropped = reference_shed_lowest(&mut reference, &tables, rho);
+        assert_eq!(out.dropped, dropped, "drop counts diverged");
+
+        // identical victim sets ⇒ identical survivor populations (this
+        // also implies the dropped utility multisets are identical)
+        assert_eq!(
+            population(&cell),
+            population(&reference),
+            "survivors diverged (rho={rho}, n={before})"
+        );
+
+        // ... and bit-for-bit identical completions downstream
+        let mut ces_cell = Vec::new();
+        let mut ces_ref = Vec::new();
+        for e in &tail {
+            ces_cell.extend(cell.process_event(e).completions);
+            ces_ref.extend(reference.process_event(e).completions);
+        }
+        assert_eq!(ces_cell, ces_ref, "downstream completions diverged");
+        assert_eq!(cell.pm_count(), reference.pm_count());
+    });
+}
+
+#[test]
+fn prop_sharded_cell_merge_matches_single_operator() {
+    forall(6, 9191, |g| {
+        // q1's two queries so multi-shard splits actually distribute
+        let ws = g.usize(800, 2_500) as u64;
+        let queries = q1(ws).queries;
+        let mut gen = StockGen::with_seed(g.usize(0, 1 << 20) as u64);
+        let events = gen.take_events(g.usize(6_000, 10_000));
+        let split = events.len() * 2 / 3;
+        let tables = synthetic_tables(&queries, g);
+        let shards = g.usize(2, 3);
+        let batch = g.usize(64, 700);
+
+        let mut single = Operator::new(queries.clone());
+        for e in &events[..split] {
+            single.process_event(e);
+        }
+        let before = single.pm_count();
+        if before == 0 {
+            return;
+        }
+        single.install_tables(&tables);
+
+        let mut sharded = ShardedOperator::new(queries, shards);
+        for chunk in events[..split].chunks(batch) {
+            sharded.process_batch(chunk);
+        }
+        sharded.set_tables(&tables);
+        assert_eq!(sharded.pm_count(), before);
+
+        let rho = g.usize(1, before);
+        let a = single.shed_lowest(rho);
+        let b = sharded.shed_lowest(rho);
+        assert_eq!(a.dropped, b.dropped, "drop counts diverged");
+        assert_eq!(a.scanned, b.scanned);
+        assert_eq!(
+            population(&single),
+            population(&sharded),
+            "victim sets diverged (shards={shards}, rho={rho})"
+        );
+
+        // downstream completions stay identical too
+        let mut ces_single = Vec::new();
+        for e in &events[split..] {
+            ces_single.extend(single.process_event(e).completions);
+        }
+        sort_completions(&mut ces_single);
+        let mut ces_sharded = Vec::new();
+        for chunk in events[split..].chunks(batch) {
+            ces_sharded.extend(sharded.process_batch(chunk).completions);
+        }
+        sort_completions(&mut ces_sharded);
+        assert_eq!(ces_single, ces_sharded, "downstream completions diverged");
+        assert_eq!(single.pm_count(), sharded.pm_count());
+    });
+}
