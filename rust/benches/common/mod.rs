@@ -1,10 +1,65 @@
 //! Tiny bench harness (criterion is not in the offline crate set):
 //! warm-up + repeated timed runs, reporting mean ± stddev and
-//! throughput, plus machine-readable emission into `BENCH_pr3.json`
-//! so CI's perf-smoke job (and humans diffing runs) can consume the
-//! numbers without scraping stdout.
+//! throughput, plus machine-readable emission into a per-PR
+//! `BENCH_*.json` so CI's perf-smoke job (and humans diffing runs) can
+//! consume the numbers without scraping stdout, and a counting global
+//! allocator benches opt into to *prove* a hot path allocation-free.
 
 use std::time::Instant;
+
+/// A counting wrapper around the system allocator.  A bench binary
+/// opts in with
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: common::alloc_count::CountingAllocator =
+///     common::alloc_count::CountingAllocator;
+/// ```
+///
+/// and brackets the measured region with [`alloc_count::snapshot`]
+/// calls; the delta is the number of heap allocations (allocs +
+/// reallocs) the region performed, across *all* threads — worker
+/// shards included, which is the point.
+#[allow(dead_code)]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// The counting allocator (zero-sized; counters are globals).
+    pub struct CountingAllocator;
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// `(allocations, bytes)` counted since process start.
+    pub fn snapshot() -> (u64, u64) {
+        (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+    }
+}
 
 /// One benchmark measurement.
 pub struct BenchResult {
@@ -88,8 +143,10 @@ fn escape(s: &str) -> String {
 }
 
 /// Emit `results` as the `bench` section of the machine-readable
-/// results file (`$BENCH_JSON`, default `BENCH_pr3.json` in the bench
-/// working directory — the `rust/` package root under cargo).
+/// results file (`$BENCH_JSON`, falling back to `default_path` in the
+/// bench working directory — the `rust/` package root under cargo;
+/// each PR's acceptance benches pick their own default, e.g.
+/// `BENCH_pr3.json` / `BENCH_pr4.json`).
 ///
 /// The file is a single JSON object with one array per bench target,
 /// each section kept on its own line; re-running one bench replaces
@@ -103,9 +160,12 @@ fn escape(s: &str) -> String {
 /// }
 /// ```
 #[allow(dead_code)]
-pub fn emit_json(bench: &str, results: &[BenchResult]) -> std::io::Result<String> {
-    let path =
-        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+pub fn emit_json(
+    bench: &str,
+    results: &[BenchResult],
+    default_path: &str,
+) -> std::io::Result<String> {
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
     // keep every other bench's single-line section
     let mut sections: Vec<(String, String)> = Vec::new();
     if let Ok(existing) = std::fs::read_to_string(&path) {

@@ -109,7 +109,7 @@ fn main() {
         }
     }));
 
-    if let Err(e) = emit_json("operator_throughput", &results) {
+    if let Err(e) = emit_json("operator_throughput", &results, "BENCH_pr3.json") {
         eprintln!("warning: could not write bench json: {e}");
     }
 }

@@ -206,7 +206,7 @@ fn main() {
         if pass { "PASS" } else { "FAIL" },
         if smoke { " [informational at smoke scale]" } else { "" }
     );
-    if let Err(e) = emit_json("shed_overhead", &results) {
+    if let Err(e) = emit_json("shed_overhead", &results, "BENCH_pr3.json") {
         eprintln!("warning: could not write bench json: {e}");
     }
     // enforce the acceptance gate at the real (>=50k PM) configuration;

@@ -1,0 +1,352 @@
+//! The zero-allocation event plane: pooled, reference-counted event
+//! batches and word-packed drop masks for the sharded dispatch path.
+//!
+//! The sharded coordinator used to copy every batch into a fresh
+//! `Arc<Vec<Event>>` (and every shed mask into an `Arc<Vec<bool>>`) per
+//! dispatch.  This module replaces both with recycled buffers drawn
+//! from an [`ArcPool`]: the coordinator leases a buffer whose reference
+//! count has drained back to one, refills it in place, and ships clones
+//! of the same `Arc` to every shard — steady-state dispatch performs
+//! **zero heap allocation**.  The synchronous worker protocol is what
+//! makes this sound: workers drop their clone before responding, so by
+//! the next lease every pooled buffer is uniquely owned again.
+//!
+//! [`TypeMask`] is the routing companion: a batch is tagged with the
+//! set of event types it contains while it is filled (one OR per
+//! event), and each shard owns the union of its queries' type masks —
+//! a batch whose occupancy does not intersect a shard's mask cannot
+//! advance any PM there (see `CompiledQuery::types`).
+
+use std::sync::Arc;
+
+use super::{Event, EventType};
+
+/// A small set of event types, packed into one `u64` word.
+///
+/// Types `>= 63` all share the overflow bit 63, which keeps the mask
+/// *conservative*: two distinct high types look identical, so routing
+/// can only ever err on the side of "relevant" (extra work, never a
+/// missed match).  `contains` returning `false` is therefore a proof
+/// that no referenced type equals the probed one.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TypeMask(u64);
+
+impl TypeMask {
+    /// The empty set.
+    pub const EMPTY: TypeMask = TypeMask(0);
+
+    #[inline]
+    fn bit(t: EventType) -> u64 {
+        1u64 << (t as u64).min(63)
+    }
+
+    /// Add one event type.
+    #[inline]
+    pub fn add(&mut self, t: EventType) {
+        self.0 |= Self::bit(t);
+    }
+
+    /// Is `t` (conservatively) in the set?
+    #[inline]
+    pub fn contains(self, t: EventType) -> bool {
+        self.0 & Self::bit(t) != 0
+    }
+
+    /// Do the two sets share any type?
+    #[inline]
+    pub fn intersects(self, other: TypeMask) -> bool {
+        self.0 & other.0 != 0
+    }
+
+    /// Union of the two sets.
+    #[inline]
+    pub fn union(self, other: TypeMask) -> TypeMask {
+        TypeMask(self.0 | other.0)
+    }
+
+    /// Is the set empty?
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// The occupancy mask of a slice of events.
+    pub fn of(events: &[Event]) -> TypeMask {
+        let mut m = TypeMask::EMPTY;
+        for e in events {
+            m.add(e.etype);
+        }
+        m
+    }
+}
+
+/// A reusable event batch: the unit the sharded coordinator ships to
+/// its workers, tagged with the per-type occupancy mask computed while
+/// the buffer was filled.
+#[derive(Debug, Default)]
+pub struct EventBatch {
+    events: Vec<Event>,
+    types: TypeMask,
+}
+
+impl EventBatch {
+    /// Replace the contents with `events` (reusing the buffer's
+    /// capacity), tagging the occupancy mask in the same pass — one OR
+    /// per event, no second scan.
+    pub fn refill(&mut self, events: &[Event]) {
+        self.events.clear();
+        self.events.reserve(events.len());
+        let mut types = TypeMask::EMPTY;
+        for e in events {
+            types.add(e.etype);
+            self.events.push(*e);
+        }
+        self.types = types;
+    }
+
+    /// A freshly allocated (non-pooled) batch — the legacy-dispatch
+    /// comparison path and one-off callers.
+    pub fn copied(events: &[Event]) -> Self {
+        let mut b = EventBatch::default();
+        b.refill(events);
+        b
+    }
+
+    /// The batch's events.
+    #[inline]
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Event types present in the batch.
+    #[inline]
+    pub fn types(&self) -> TypeMask {
+        self.types
+    }
+
+    /// Number of events.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Is the batch empty?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// A word-packed per-event drop mask: bit `i` set means event `i` of
+/// the batch was shed by a black-box strategy and gets window
+/// bookkeeping only.  Replaces `Vec<bool>`/`Arc<Vec<bool>>` everywhere
+/// a [`crate::shedding::Shedder`] hands victims to an operator state —
+/// 64 events per word, recyclable through a [`MaskPool`].
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct DropMask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl DropMask {
+    /// Clear the mask and size it for `len` events (all bits unset),
+    /// reusing the word buffer's capacity.
+    pub fn reset(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
+    }
+
+    /// Mask of `len` events with every bit taken from `bools`.
+    pub fn from_bools(bools: &[bool]) -> Self {
+        let mut m = DropMask::default();
+        m.reset(bools.len());
+        for (i, &b) in bools.iter().enumerate() {
+            if b {
+                m.mark(i);
+            }
+        }
+        m
+    }
+
+    /// Number of events the mask covers.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Does the mask cover zero events?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mark event `i` as dropped.
+    #[inline]
+    pub fn mark(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Was event `i` dropped?
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// How many events are marked dropped.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Is any event marked dropped?
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Become a copy of `other`, reusing this mask's word buffer.
+    pub fn copy_from(&mut self, other: &DropMask) {
+        self.words.clear();
+        self.words.extend_from_slice(&other.words);
+        self.len = other.len;
+    }
+}
+
+/// A free list of reference-counted buffers.  [`ArcPool::lease_with`]
+/// hands out a clone of a pooled `Arc` whose other clones have all been
+/// dropped (refilling it in place first); if every buffer is still in
+/// flight, the pool grows by one.  Buffers are never returned
+/// explicitly — dropping the last outside clone is what makes a buffer
+/// leasable again, so the pool's size is bounded by the peak number of
+/// buffers simultaneously in flight (one, for the synchronous shard
+/// protocol).
+#[derive(Debug, Default)]
+pub struct ArcPool<T> {
+    free: Vec<Arc<T>>,
+}
+
+impl<T: Default> ArcPool<T> {
+    /// An empty pool.
+    pub fn new() -> Self {
+        ArcPool { free: Vec::new() }
+    }
+
+    /// Lease a uniquely-owned buffer, refill it via `fill`, and return
+    /// a shareable clone.  Zero allocation once the pool is warm.
+    pub fn lease_with(&mut self, fill: impl FnOnce(&mut T)) -> Arc<T> {
+        let idx = self
+            .free
+            .iter()
+            .position(|a| Arc::strong_count(a) == 1)
+            .unwrap_or_else(|| {
+                self.free.push(Arc::new(T::default()));
+                self.free.len() - 1
+            });
+        let arc = &mut self.free[idx];
+        fill(Arc::get_mut(arc).expect("strong count checked above"));
+        Arc::clone(arc)
+    }
+
+    /// How many buffers the pool has ever grown to (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Pool of shareable event batches (the coordinator's dispatch plane).
+pub type BatchPool = ArcPool<EventBatch>;
+
+/// Pool of shareable drop masks (the shed-mask companion).
+pub type MaskPool = ArcPool<DropMask>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, etype: EventType) -> Event {
+        Event::new(seq, seq, etype, &[])
+    }
+
+    #[test]
+    fn type_mask_tracks_membership_and_intersection() {
+        let mut m = TypeMask::EMPTY;
+        assert!(m.is_empty());
+        m.add(0);
+        m.add(3);
+        assert!(m.contains(0));
+        assert!(m.contains(3));
+        assert!(!m.contains(1));
+        let other = TypeMask::of(&[ev(0, 1), ev(1, 3)]);
+        assert!(m.intersects(other));
+        assert!(!TypeMask::of(&[ev(0, 1)]).intersects(TypeMask::of(&[ev(0, 2)])));
+        assert_eq!(m.union(other), TypeMask::of(&[ev(0, 0), ev(1, 1), ev(2, 3)]));
+    }
+
+    #[test]
+    fn type_mask_saturates_high_types_conservatively() {
+        let mut m = TypeMask::EMPTY;
+        m.add(100);
+        // distinct high types collide on the overflow bit: conservative
+        assert!(m.contains(200));
+        assert!(m.contains(63));
+        // ... but never claims a low type it does not hold
+        assert!(!m.contains(5));
+    }
+
+    #[test]
+    fn event_batch_refill_reuses_and_retags() {
+        let mut b = EventBatch::copied(&[ev(0, 2), ev(1, 2)]);
+        assert_eq!(b.len(), 2);
+        assert!(b.types().contains(2));
+        b.refill(&[ev(2, 5)]);
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_empty());
+        assert!(b.types().contains(5));
+        assert!(!b.types().contains(2));
+        assert_eq!(b.events()[0].seq, 2);
+    }
+
+    #[test]
+    fn drop_mask_marks_counts_and_copies() {
+        let mut m = DropMask::default();
+        m.reset(130); // spans three words
+        assert_eq!(m.len(), 130);
+        assert!(!m.any());
+        m.mark(0);
+        m.mark(64);
+        m.mark(129);
+        assert!(m.get(0) && m.get(64) && m.get(129));
+        assert!(!m.get(1));
+        assert_eq!(m.count(), 3);
+        let mut c = DropMask::default();
+        c.copy_from(&m);
+        assert_eq!(c, m);
+        // reset clears previous bits
+        m.reset(10);
+        assert!(!m.any());
+        assert_eq!(m.len(), 10);
+        let from = DropMask::from_bools(&[true, false, true]);
+        assert_eq!(from.count(), 2);
+        assert!(from.get(0) && !from.get(1) && from.get(2));
+    }
+
+    #[test]
+    fn arc_pool_recycles_drained_buffers() {
+        let mut pool: BatchPool = ArcPool::new();
+        let a = pool.lease_with(|b| b.refill(&[ev(0, 1)]));
+        assert_eq!(pool.pooled(), 1);
+        // `a` still alive: the next lease must grow the pool
+        let b = pool.lease_with(|b| b.refill(&[ev(1, 1)]));
+        assert_eq!(pool.pooled(), 2);
+        drop(a);
+        drop(b);
+        // both drained: leases now recycle without growth
+        let c = pool.lease_with(|b| b.refill(&[ev(2, 7)]));
+        drop(c);
+        let d = pool.lease_with(|b| b.refill(&[ev(3, 7)]));
+        assert_eq!(pool.pooled(), 2);
+        assert!(d.types().contains(7));
+        assert_eq!(d.events()[0].seq, 3);
+    }
+}

@@ -1,9 +1,12 @@
-//! Primitive events, schemas, and the stream abstraction.
+//! Primitive events, schemas, the stream abstraction, and the pooled
+//! batch/mask plane the sharded runtime dispatches through.
 
+pub mod batch;
 pub mod event;
 pub mod schema;
 pub mod stream;
 
+pub use batch::{ArcPool, BatchPool, DropMask, EventBatch, MaskPool, TypeMask};
 pub use event::{Event, EventType, MAX_ATTRS};
 pub use schema::Schema;
 pub use stream::{EventStream, VecStream};

@@ -26,7 +26,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`events`] | primitive events, schemas, stream abstraction |
+//! | [`events`] | primitive events, schemas, stream abstraction, pooled batch/mask plane ([`events::EventBatch`], [`events::DropMask`]) |
 //! | [`datasets`] | synthetic NYSE / RTLS-soccer / Dublin-bus generators + CSV + the mixed Q1–Q4 workload |
 //! | [`query`] | pattern AST, Tesla-like DSL parser, built-in Q1–Q4 |
 //! | [`nfa`] | pattern → state machine compilation, partial matches |

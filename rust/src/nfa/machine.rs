@@ -49,6 +49,11 @@ pub struct CompiledQuery {
     /// fast path ([`CompiledQuery::step_mask`]) — see EXPERIMENTS.md
     /// §Perf for the measured effect.
     pub key_free_seq: bool,
+    /// event types this query can react to (steps + `OnMatch` open
+    /// spec): an event outside this set cannot advance any PM or open
+    /// an `OnMatch` window, so the operator skims it (bookkeeping +
+    /// modeled cost only) — see EXPERIMENTS.md §Perf design note #2.
+    pub types: crate::events::TypeMask,
 }
 
 /// Evaluate one predicate against an event given the PM's keys.
@@ -111,12 +116,14 @@ impl CompiledQuery {
                         .iter()
                         .all(|p| !matches!(p, Predicate::KeyCmp { .. }))
             });
+        let types = query.type_mask();
         CompiledQuery {
             query,
             head,
             any,
             m,
             key_free_seq,
+            types,
         }
     }
 

@@ -11,4 +11,4 @@ pub mod state;
 pub use cost::CostModel;
 pub use observe::{ObservationHub, QueryStats};
 pub use operator::{cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, ShedCell};
-pub use state::{BatchResult, OperatorState, ShedOutcome};
+pub use state::{BatchResult, OperatorState, PerShard, ShedOutcome, MAX_SHARDS};

@@ -40,6 +40,19 @@ impl QueryStats {
         self.total += 1;
     }
 
+    /// Record `n` identical observations `<s, s', t_ns>` at once — the
+    /// operator's skim path reports a whole cell of self-loop checks
+    /// with one call instead of one per PM.  Counts are exact; the
+    /// summed reward uses one multiply, which can differ from `n`
+    /// sequential [`QueryStats::record`] calls in the last FP ulp
+    /// (documented on the skim path, which is where it matters).
+    #[inline]
+    pub fn record_many(&mut self, s: u32, s2: u32, t_ns: f64, n: u64) {
+        self.counts[s as usize][s2 as usize] += n;
+        self.reward_ns[s as usize][s2 as usize] += t_ns * n as f64;
+        self.total += n;
+    }
+
     /// Learned transition matrix (rows normalized; final state forced
     /// absorbing; unobserved rows stay put).
     pub fn transition_matrix(&self) -> Mat {

@@ -16,16 +16,16 @@
 use std::cmp::Ordering;
 use std::collections::HashSet;
 
-use crate::events::Event;
+use crate::events::{DropMask, Event};
 use crate::model::UtilityTable;
 use crate::nfa::{CompiledQuery, PartialMatch, StepResult};
 use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
-use crate::windows::{claim_sorted, has_claim_sorted, QueryWindows, Window};
+use crate::windows::{QueryWindows, Window};
 
 use super::cost::CostModel;
 use super::observe::ObservationHub;
-use super::state::{BatchResult, OperatorState, ShedOutcome};
+use super::state::{BatchResult, OperatorState, PerShard, ShedOutcome};
 
 /// A detected complex event.  Identity `(query, window_open_seq,
 /// key_bits)` is stable across shedding decisions, which is what makes
@@ -55,6 +55,19 @@ pub struct ProcessOutcome {
     pub opened: usize,
     /// Windows closed by this event.
     pub closed: usize,
+}
+
+impl ProcessOutcome {
+    /// Zero every counter and clear the completions, keeping their
+    /// buffer — readies a reused outcome for the next
+    /// [`Operator::process_event_into`] call.
+    pub fn reset(&mut self) {
+        self.completions.clear();
+        self.cost_ns = 0.0;
+        self.checks = 0;
+        self.opened = 0;
+        self.closed = 0;
+    }
 }
 
 /// Coordinates of one PM for the shedder.
@@ -156,6 +169,12 @@ pub struct Operator {
     shed_takes: Vec<CellTake>,
     shed_group: Vec<(u32, u32)>,
     shed_ids: Vec<u64>,
+    /// per-event outcome reused by [`OperatorState::process_batch`]
+    batch_scratch: ProcessOutcome,
+    /// type-routed skim enabled (default on): events whose type no step
+    /// of a query consumes take the bulk-accounted bookkeeping path for
+    /// that query instead of the per-PM match loop
+    type_routing: bool,
 }
 
 impl Operator {
@@ -184,7 +203,20 @@ impl Operator {
             shed_takes: Vec::new(),
             shed_group: Vec::new(),
             shed_ids: Vec::new(),
+            batch_scratch: ProcessOutcome::default(),
+            type_routing: true,
         }
+    }
+
+    /// Enable or disable the type-routed skim path (on by default).
+    /// Routing is result-equivalent by construction — a skimmed event's
+    /// type matches no step, so no PM could have advanced — and its
+    /// virtual-cost accounting equals the modeled per-PM loop exactly
+    /// in real arithmetic (per-window multiply instead of per-PM adds,
+    /// so the FP rounding of `cost_ns` can differ in the last ulp).
+    /// Disabling it restores the PR 3 behavior for comparison runs.
+    pub fn set_type_routing(&mut self, enabled: bool) {
+        self.type_routing = enabled;
     }
 
     /// Current number of live partial matches (paper's `n_pm`).
@@ -212,10 +244,18 @@ impl Operator {
 
     /// Process one event through every query and window.
     pub fn process_event(&mut self, e: &Event) -> ProcessOutcome {
-        let mut out = ProcessOutcome {
-            cost_ns: self.cost.base_event_ns,
-            ..Default::default()
-        };
+        let mut out = ProcessOutcome::default();
+        self.process_event_into(e, &mut out);
+        out
+    }
+
+    /// Process one event, *accumulating* into `out`: counters and costs
+    /// add, completions append.  The allocation-free form of
+    /// [`Operator::process_event`] — callers reuse one
+    /// [`ProcessOutcome`] (see [`ProcessOutcome::reset`]) across a
+    /// whole batch so the per-event hot path never touches the heap.
+    pub fn process_event_into(&mut self, e: &Event, out: &mut ProcessOutcome) {
+        out.cost_ns += self.cost.base_event_ns;
         // rate estimate for time-window R_w
         if e.ts_ms > self.prev_ts {
             let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
@@ -226,6 +266,7 @@ impl Operator {
         self.last_ts = e.ts_ms;
 
         // disjoint field borrows for the match loop
+        let routing = self.type_routing;
         let Operator {
             queries,
             wins,
@@ -257,6 +298,31 @@ impl Operator {
             let check_ns = cost.check_ns(qi);
             let multi_seed = Self::multi_seed(cq);
             out.cost_ns += cost.per_window_ns * qw.windows.len() as f64;
+            // type-routed skim: no step (or OnMatch open spec) of this
+            // query consumes e's type, so no PM can advance and no
+            // observation can leave the diagonal — charge the modeled
+            // per-PM check cost in bulk off the cell index and move on.
+            // O(windows) instead of O(PMs); the modeled operator still
+            // "checks" every PM (checks/cost/self-loop observations are
+            // accounted identically, with per-cell multiplies replacing
+            // per-PM adds — same value in real arithmetic).
+            if routing && !cq.types.contains(e.etype) {
+                for w in qw.windows.iter() {
+                    let n = w.pms.len() as u64;
+                    if n == 0 {
+                        continue;
+                    }
+                    out.checks += n;
+                    out.cost_ns += check_ns * n as f64;
+                    if obs.enabled {
+                        let obs_q = &mut obs.queries[qi];
+                        for (s, c) in w.counts.iter_nonzero() {
+                            obs_q.record_many(s, s, check_ns, c as u64);
+                        }
+                    }
+                }
+                continue;
+            }
             // fast path for key-free sequences (Q1/Q2 shape): evaluate
             // the step predicates ONCE per event, then each PM check is
             // a bit test.  Virtual-cost and observation accounting are
@@ -318,13 +384,13 @@ impl Operator {
                     out.cost_ns += check_ns;
                     // multi-seed key dedup: a seed that just bound an
                     // already-claimed key must not advance (another PM
-                    // already tracks that correlation group).  `claimed`
-                    // is kept sorted, so the membership test is a
-                    // binary search.
+                    // already tracks that correlation group).  The
+                    // membership test is O(log k) in either `ClaimSet`
+                    // representation.
                     if multi_seed
                         && was_seed
                         && r != StepResult::NoMatch
-                        && has_claim_sorted(claimed, pm.key_bits())
+                        && claimed.contains(pm.key_bits())
                     {
                         // revert: re-seed in place.  The check still
                         // happened and its cost was charged, so the
@@ -350,7 +416,7 @@ impl Operator {
                         StepResult::Advanced => {
                             counts.advance(s_before, pm.state);
                             if multi_seed && was_seed {
-                                claim_sorted(claimed, pm.key_bits());
+                                claimed.insert(pm.key_bits());
                                 new_seeds += 1;
                             }
                             i += 1;
@@ -365,7 +431,7 @@ impl Operator {
                             });
                             if multi_seed && was_seed {
                                 // single-step any-group completed from seed
-                                claim_sorted(claimed, pm.key_bits());
+                                claimed.insert(pm.key_bits());
                                 new_seeds += 1;
                             }
                             counts.dec(s_before);
@@ -383,7 +449,6 @@ impl Operator {
                 }
             }
         }
-        out
     }
 
     /// Window bookkeeping only (expiry + opening), without PM matching.
@@ -393,10 +458,16 @@ impl Operator {
     /// window open/close predicates still see every event; only the
     /// matching work is saved.
     pub fn process_bookkeeping(&mut self, e: &Event) -> ProcessOutcome {
-        let mut out = ProcessOutcome {
-            cost_ns: self.cost.base_event_ns,
-            ..Default::default()
-        };
+        let mut out = ProcessOutcome::default();
+        self.process_bookkeeping_into(e, &mut out);
+        out
+    }
+
+    /// [`Operator::process_bookkeeping`], accumulating into a reused
+    /// outcome — the shed-event counterpart of
+    /// [`Operator::process_event_into`].
+    pub fn process_bookkeeping_into(&mut self, e: &Event, out: &mut ProcessOutcome) {
+        out.cost_ns += self.cost.base_event_ns;
         // rate estimate for time-window R_w — identical to
         // `process_event`: dropped events still arrive, so the stream
         // rate the utility lookups depend on must not go stale
@@ -429,7 +500,6 @@ impl Operator {
                 out.opened += 1;
             }
         }
-        out
     }
 
     /// Ratio of completed PMs to created PMs so far — the paper's
@@ -633,7 +703,7 @@ impl Operator {
         let mut out = ShedOutcome {
             scanned: n,
             dropped: 0,
-            per_shard: vec![(n, 0)],
+            per_shard: PerShard::single(n, 0),
         };
         if n == 0 || rho == 0 {
             return out;
@@ -709,25 +779,30 @@ impl OperatorState for Operator {
         self.obs.enabled = enabled;
     }
 
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult {
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult {
         if let Some(m) = shed_mask {
             assert_eq!(events.len(), m.len(), "one mask bit per event");
         }
         let mut out = BatchResult::default();
+        // one reused per-event outcome for the whole batch: the hot
+        // loop allocates only when completions outgrow their buffers
+        let mut o = std::mem::take(&mut self.batch_scratch);
         for (i, e) in events.iter().enumerate() {
-            let shed = shed_mask.is_some_and(|m| m[i]);
-            let o = if shed {
-                self.process_bookkeeping(e)
+            let shed = shed_mask.is_some_and(|m| m.get(i));
+            o.reset();
+            if shed {
+                self.process_bookkeeping_into(e, &mut o);
             } else {
-                self.process_event(e)
-            };
+                self.process_event_into(e, &mut o);
+            }
             out.cost_ns_max += o.cost_ns;
             out.cost_ns_total += o.cost_ns;
             out.checks += o.checks;
             out.opened += o.opened;
             out.closed += o.closed;
-            out.completions.extend(o.completions);
+            out.completions.extend_from_slice(&o.completions);
         }
+        self.batch_scratch = o;
         out
     }
 
@@ -1013,7 +1088,7 @@ mod tests {
         let out = op.shed_lowest(10);
         assert_eq!(out.scanned, before);
         assert_eq!(out.dropped, 10);
-        assert_eq!(out.per_shard, vec![(before, 10)]);
+        assert_eq!(out.per_shard.as_slice(), &[(before, 10)]);
         assert_eq!(op.pm_count(), before - 10);
         assert!(cell_index_consistent(&op), "cell index drifted");
     }
@@ -1089,6 +1164,85 @@ mod tests {
         assert_eq!(out.dropped, before / 2);
         assert_eq!(op.pm_count(), before - out.dropped);
         assert!(cell_index_consistent(&op), "cell index drifted");
+    }
+
+    #[test]
+    fn type_skim_matches_full_loop_on_mixed_types() {
+        // the mixed workload interleaves disjoint etype families, so
+        // every query skims ~2/3 of the stream: results, checks, PM
+        // evolution and observations must be identical to the unrouted
+        // per-PM loop, and virtual cost equal up to FP associativity
+        use crate::datasets::{mixed_queries, mixed_trace};
+        let trace = mixed_trace(12_000, 9);
+        let run = |routing: bool| {
+            let mut op = Operator::new(mixed_queries(2_000));
+            op.set_type_routing(routing);
+            let mut ces = Vec::new();
+            let (mut checks, mut cost) = (0u64, 0.0f64);
+            for e in &trace {
+                let o = op.process_event(e);
+                ces.extend(o.completions);
+                checks += o.checks;
+                cost += o.cost_ns;
+            }
+            let obs_total = op.obs.total();
+            (ces, checks, cost, op.pm_count(), obs_total, op)
+        };
+        let (ces_on, checks_on, cost_on, pms_on, obs_on, op_on) = run(true);
+        let (ces_off, checks_off, cost_off, pms_off, obs_off, op_off) = run(false);
+        assert_eq!(ces_on, ces_off, "completions diverged");
+        assert_eq!(checks_on, checks_off, "modeled check counts diverged");
+        assert_eq!(pms_on, pms_off, "PM populations diverged");
+        assert_eq!(obs_on, obs_off, "observation totals diverged");
+        assert!(checks_on > 0 && obs_on > 0, "scenario must exercise PMs");
+        let rel = (cost_on - cost_off).abs() / cost_off.max(1.0);
+        assert!(rel < 1e-9, "virtual cost drifted beyond FP noise: {rel}");
+        // transition observations agree exactly (counts are integers)
+        for (a, b) in op_on.obs.queries.iter().zip(&op_off.obs.queries) {
+            assert_eq!(a.counts, b.counts, "transition counts diverged");
+        }
+        for (a, b) in op_on.wins.iter().zip(&op_off.wins) {
+            assert_eq!(a.windows.len(), b.windows.len());
+        }
+    }
+
+    #[test]
+    fn process_event_into_accumulates_like_process_event() {
+        let queries = q1(800).queries;
+        let mut g = StockGen::with_seed(8);
+        let events = g.take_events(3_000);
+        let mut a = Operator::new(queries.clone());
+        let mut b = Operator::new(queries);
+        let mut acc = ProcessOutcome::default();
+        let (mut cost, mut checks) = (0.0f64, 0u64);
+        let mut ces = Vec::new();
+        for e in &events {
+            let o = a.process_event(e);
+            cost += o.cost_ns;
+            checks += o.checks;
+            ces.extend(o.completions);
+            // reused-outcome form: reset + accumulate
+            acc.reset();
+            b.process_event_into(e, &mut acc);
+        }
+        // drive b once more over nothing: acc holds only the last event
+        let mut b2 = Operator::new(q1(800).queries);
+        let mut acc2 = ProcessOutcome::default();
+        let mut ces2 = Vec::new();
+        let (mut cost2, mut checks2) = (0.0f64, 0u64);
+        let mut g2 = StockGen::with_seed(8);
+        for e in &g2.take_events(3_000) {
+            acc2.reset();
+            b2.process_event_into(e, &mut acc2);
+            cost2 += acc2.cost_ns;
+            checks2 += acc2.checks;
+            ces2.extend_from_slice(&acc2.completions);
+        }
+        assert_eq!(ces, ces2);
+        assert_eq!(checks, checks2);
+        assert_eq!(cost.to_bits(), cost2.to_bits(), "identical FP accumulation");
+        assert_eq!(a.pm_count(), b2.pm_count());
+        assert_eq!(b.pm_count(), a.pm_count());
     }
 
     #[test]

@@ -10,12 +10,18 @@
 //! worker shards; `parallelism()` is the only knob that differs (the
 //! overload detector scales its latency predictions by it).
 
-use crate::events::Event;
+use crate::events::{DropMask, Event};
 use crate::model::UtilityTable;
 use crate::util::Rng;
 
 use super::cost::CostModel;
 use super::operator::{ComplexEvent, PmRef};
+
+/// Hard cap on worker shards.  Shard counts are small and fixed at
+/// pipeline build time, which lets per-shard bookkeeping
+/// ([`PerShard`], the dispatch scratch) live in inline fixed-size
+/// arrays instead of per-pass heap `Vec`s.
+pub const MAX_SHARDS: usize = 32;
 
 /// Merged outcome of processing one event batch on an operator state
 /// (any shard count).  For the single-threaded operator the makespan
@@ -37,6 +43,74 @@ pub struct BatchResult {
     pub closed: usize,
 }
 
+/// Per-shard `(scanned, dropped)` counters of one shed pass, stored
+/// inline (no heap — shard counts are bounded by [`MAX_SHARDS`] and
+/// known at build time, so a `Vec` per pass was pure allocator churn).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PerShard {
+    counts: [(usize, usize); MAX_SHARDS],
+    len: usize,
+}
+
+impl PerShard {
+    /// Counters for a single-shard (single-threaded) pass.
+    pub fn single(scanned: usize, dropped: usize) -> Self {
+        let mut p = PerShard::default();
+        p.push(scanned, dropped);
+        p
+    }
+
+    /// Append one shard's counters.
+    pub fn push(&mut self, scanned: usize, dropped: usize) {
+        assert!(self.len < MAX_SHARDS, "more shards than MAX_SHARDS");
+        self.counts[self.len] = (scanned, dropped);
+        self.len += 1;
+    }
+
+    /// Number of shards recorded.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// No shards recorded?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The recorded `(scanned, dropped)` pairs.
+    #[inline]
+    pub fn as_slice(&self) -> &[(usize, usize)] {
+        &self.counts[..self.len]
+    }
+
+    /// Iterate the recorded pairs.
+    pub fn iter(&self) -> std::slice::Iter<'_, (usize, usize)> {
+        self.as_slice().iter()
+    }
+}
+
+impl std::ops::Index<usize> for PerShard {
+    type Output = (usize, usize);
+    fn index(&self, i: usize) -> &(usize, usize) {
+        &self.as_slice()[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for PerShard {
+    fn index_mut(&mut self, i: usize) -> &mut (usize, usize) {
+        assert!(i < self.len, "shard index {i} out of range {}", self.len);
+        &mut self.counts[i]
+    }
+}
+
+impl PartialEq for PerShard {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for PerShard {}
+
 /// Outcome of one utility-ordered shed pass (paper Alg. 2).
 #[derive(Debug, Default, Clone)]
 pub struct ShedOutcome {
@@ -46,7 +120,7 @@ pub struct ShedOutcome {
     pub dropped: usize,
     /// per shard: (scanned, dropped) — used to cost the pass as the
     /// slowest shard's scan + drop (shards shed in parallel)
-    pub per_shard: Vec<(usize, usize)>,
+    pub per_shard: PerShard,
 }
 
 /// Everything a load-shedding strategy may ask of the engine,
@@ -89,10 +163,10 @@ pub trait OperatorState {
     /// Toggle observation capture.
     fn set_obs_enabled(&mut self, enabled: bool);
 
-    /// Process a batch of events.  Events whose `shed_mask` bit is set
+    /// Process a batch of events.  Events whose [`DropMask`] bit is set
     /// get window bookkeeping only (black-box event-shedding semantics:
     /// shed events still exist in the stream).
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult;
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult;
 
     /// Drop the `rho` globally lowest-utility PMs (paper Alg. 2) using
     /// the installed tables; missing tables score a PM at utility 0.

@@ -89,6 +89,7 @@ pub struct PipelineBuilder {
     retrain_every: u64,
     drift_threshold: f64,
     latency_stride: u64,
+    type_routing: bool,
 }
 
 impl Default for PipelineBuilder {
@@ -110,6 +111,7 @@ impl Default for PipelineBuilder {
             retrain_every: 0,
             drift_threshold: 0.01,
             latency_stride: 1,
+            type_routing: true,
         }
     }
 }
@@ -225,10 +227,26 @@ impl PipelineBuilder {
         self
     }
 
+    /// Enable/disable type-routed dispatch on the operator state
+    /// (default on): events whose type a query cannot consume take the
+    /// bulk-accounted skim path, and the sharded coordinator skips
+    /// sending provably-irrelevant batches to inert shards.  Results
+    /// are equivalent either way; disabling pins the PR 3 behavior for
+    /// comparison runs.
+    pub fn type_routing(mut self, enabled: bool) -> Self {
+        self.type_routing = enabled;
+        self
+    }
+
     /// Validate and assemble the [`Pipeline`].
     pub fn build(self) -> crate::Result<Pipeline> {
         anyhow::ensure!(!self.queries.is_empty(), "pipeline needs queries");
         anyhow::ensure!(self.shards >= 1, "shards must be at least 1");
+        anyhow::ensure!(
+            self.shards <= crate::operator::MAX_SHARDS,
+            "shards must be at most {}",
+            crate::operator::MAX_SHARDS
+        );
         anyhow::ensure!(self.batch >= 1, "batch must be at least 1");
         anyhow::ensure!(
             self.retrain_every == 0 || self.shards == 1,
@@ -249,6 +267,12 @@ impl PipelineBuilder {
         } else {
             Backend::Single(Operator::new(self.queries))
         };
+        if !self.type_routing {
+            match &mut backend {
+                Backend::Single(op) => op.set_type_routing(false),
+                Backend::Sharded(sop) => sop.set_type_routing(false),
+            }
+        }
         if !self.cost_factors.is_empty() {
             backend.state().set_cost_factors(&self.cost_factors);
         }

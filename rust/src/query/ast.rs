@@ -192,6 +192,34 @@ impl Query {
     pub fn state_count(&self) -> usize {
         self.pattern.state_count()
     }
+
+    /// Event types this query can react to: every step's type plus the
+    /// `OnMatch` open-predicate type.  An event outside this set can
+    /// neither advance a PM nor open an `OnMatch` window (an `EveryK`
+    /// policy opens on position, not type, and is handled separately by
+    /// the operator's skim path), which is what makes type-routed
+    /// dispatch exact.
+    pub fn type_mask(&self) -> crate::events::TypeMask {
+        let mut m = crate::events::TypeMask::EMPTY;
+        match &self.pattern {
+            Pattern::Seq(steps) => {
+                for s in steps {
+                    m.add(s.etype);
+                }
+            }
+            Pattern::Any { spec, .. } => m.add(spec.etype),
+            Pattern::SeqAny { head, spec, .. } => {
+                for s in head {
+                    m.add(s.etype);
+                }
+                m.add(spec.etype);
+            }
+        }
+        if let OpenPolicy::OnMatch(spec) = &self.open {
+            m.add(spec.etype);
+        }
+        m
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,25 @@
 //! chosen from its list — worker-channel traffic is O(cells), not
 //! O(n_pm).  A 1-shard and an N-shard run with the same drop decisions
 //! select the same victims.
+//!
+//! ## The zero-allocation event plane (PR 4)
+//!
+//! Dispatch draws its buffers from pools instead of allocating: event
+//! batches are recycled [`crate::events::EventBatch`]es (one `Arc`
+//! clone per shard, no copy), shed masks are pooled word-packed
+//! [`crate::events::DropMask`]s, completions ride in per-shard sinks
+//! the workers fill and hand back, and per-shed-pass accounting lives
+//! in the inline [`crate::operator::PerShard`] array.  Batches are
+//! tagged with a [`TypeMask`] occupancy while they are filled, and
+//! **type-routed dispatch** uses it twice: each worker's operator skims
+//! events whose type its queries cannot consume (bulk-accounted
+//! bookkeeping, see `Operator::set_type_routing`), and the coordinator
+//! skips the send entirely for a shard whose queries are irrelevant to
+//! the whole batch *and* whose state is provably inert (no open
+//! windows, no PMs, count-windowed `OnMatch`-opening queries only) —
+//! in that case the skipped shard's virtual cost is reproduced
+//! coordinator-side with the exact same FP accumulation the worker
+//! would have performed, so results stay bit-for-bit identical.
 
 pub(crate) mod merge;
 mod worker;
@@ -34,10 +53,13 @@ use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::events::Event;
+use crate::events::{BatchPool, DropMask, Event, EventBatch, MaskPool, TypeMask};
 use crate::model::UtilityTable;
-use crate::operator::{BatchResult, CostModel, OperatorState, PmRef, ShedOutcome};
-use crate::query::Query;
+use crate::operator::{
+    BatchResult, ComplexEvent, CostModel, OperatorState, PerShard, PmRef, ShedOutcome,
+    MAX_SHARDS,
+};
+use crate::query::{OpenPolicy, Query, WindowSpec};
 use crate::util::Rng;
 
 pub use merge::sort_completions;
@@ -95,25 +117,80 @@ pub struct ShardedOperator {
     created: Vec<u64>,
     /// complex events ever emitted per shard
     completed: Vec<u64>,
-    /// open windows across all shards (for E-BL's per-window drop cost)
+    /// open windows per shard (tracked from batch outcomes; feeds both
+    /// E-BL's per-window drop cost and the coordinator skip predicate)
+    wins_open: Vec<usize>,
+    /// open windows across all shards (cached sum of `wins_open`)
     open_windows: usize,
-    /// cost model used for coordinator-side shed-cost accounting (the
-    /// per-event processing cost is accounted inside each worker)
+    /// cost model used for coordinator-side shed-cost accounting and
+    /// for reproducing a skipped shard's idle batch cost (the worker's
+    /// own model must keep the same `base_event_ns`/`open_check_ns`
+    /// constants — only `check_factor` is configurable, via
+    /// [`ShardedOperator::set_cost_factors`])
     pub cost: CostModel,
+    /// recycled event-batch buffers (dispatch plane)
+    pool: BatchPool,
+    /// recycled shed-mask buffers
+    masks: MaskPool,
+    /// per-shard recycled completion sinks (ride along each Batch
+    /// request, come back filled in the response)
+    comp_bufs: Vec<Vec<ComplexEvent>>,
+    /// per-shard union of the local queries' type masks
+    relevant: Vec<TypeMask>,
+    /// per-shard "inert when idle": every local query opens `OnMatch`
+    /// and uses a count window, so a shard with no windows and no PMs
+    /// is a pure function of the batch length for irrelevant batches
+    static_skip: Vec<bool>,
+    /// type-routed dispatch enabled (default on)
+    routing: bool,
+    /// pooled buffers enabled (default on; off = the PR 3 copy-per-
+    /// dispatch behavior, kept as the benchmark comparison baseline)
+    pooling: bool,
+    /// (shard, batch) sends skipped by type routing (diagnostics)
+    skipped: u64,
 }
 
 impl ShardedOperator {
-    /// Spawn a sharded operator over `n_shards` worker threads.
+    /// Spawn a sharded operator over `n_shards` worker threads (capped
+    /// at the query count; at most [`MAX_SHARDS`] — per-shard
+    /// bookkeeping is inline, so more is a loud error, not a silent
+    /// clamp).
     pub fn new(queries: Vec<Query>, n_shards: usize) -> Self {
         assert!(!queries.is_empty(), "sharded operator needs queries");
+        assert!(
+            n_shards <= MAX_SHARDS,
+            "n_shards={n_shards} exceeds MAX_SHARDS={MAX_SHARDS}"
+        );
         let n_queries = queries.len();
         let plan = ShardPlan::round_robin(n_queries, n_shards);
+        // routing metadata, derived from the query set before it is
+        // partitioned out to the workers
+        let relevant: Vec<TypeMask> = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                a.iter()
+                    .fold(TypeMask::EMPTY, |m, &g| m.union(queries[g].type_mask()))
+            })
+            .collect();
+        let static_skip: Vec<bool> = plan
+            .assignments
+            .iter()
+            .map(|a| {
+                a.iter().all(|&g| {
+                    matches!(queries[g].open, OpenPolicy::OnMatch(_))
+                        && matches!(queries[g].window, WindowSpec::Count(_))
+                })
+            })
+            .collect();
         let mut txs = Vec::with_capacity(plan.n_shards());
         let mut rxs = Vec::with_capacity(plan.n_shards());
         let mut handles = Vec::with_capacity(plan.n_shards());
         for (s, assignment) in plan.assignments.iter().enumerate() {
             let (req_tx, req_rx) = mpsc::sync_channel::<Request>(4);
-            let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+            // bounded (array-backed) in both directions: channel traffic
+            // itself never allocates per message
+            let (resp_tx, resp_rx) = mpsc::sync_channel::<Response>(4);
             let local: Vec<Query> =
                 assignment.iter().map(|&g| queries[g].clone()).collect();
             let l2g = assignment.clone();
@@ -135,9 +212,48 @@ impl ShardedOperator {
             pms: vec![0; n],
             created: vec![0; n],
             completed: vec![0; n],
+            wins_open: vec![0; n],
             open_windows: 0,
             cost: CostModel::with_queries(n_queries),
+            pool: BatchPool::new(),
+            masks: MaskPool::new(),
+            comp_bufs: vec![Vec::new(); n],
+            relevant,
+            static_skip,
+            routing: true,
+            pooling: true,
+            skipped: 0,
         }
+    }
+
+    /// Enable or disable type-routed dispatch (on by default): the
+    /// coordinator-side send skip *and* the workers' per-query skim
+    /// path.  Disabling restores the PR 3 every-shard-matches-everything
+    /// behavior for equivalence tests and benchmark baselines.
+    pub fn set_type_routing(&mut self, enabled: bool) {
+        self.routing = enabled;
+        for s in 0..self.n_shards() {
+            self.send(s, Request::SetTypeRouting(enabled));
+        }
+        self.ack_all();
+    }
+
+    /// Enable or disable the pooled batch/mask buffers (on by default;
+    /// off = one fresh allocation + full copy per dispatch, the PR 3
+    /// behavior kept as the benchmark comparison baseline).
+    pub fn set_pooling(&mut self, enabled: bool) {
+        self.pooling = enabled;
+    }
+
+    /// (shard, batch) sends skipped by type-routed dispatch so far.
+    pub fn skipped_dispatches(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Distinct batch buffers the dispatch pool has grown to (steady
+    /// state: 1 — the synchronous protocol keeps one batch in flight).
+    pub fn pooled_batches(&self) -> usize {
+        self.pool.pooled()
     }
 
     /// Number of worker shards.
@@ -195,28 +311,86 @@ impl ShardedOperator {
         }
     }
 
-    fn dispatch(
-        &mut self,
-        events: &[Event],
-        mask: Option<Arc<Vec<bool>>>,
-    ) -> BatchResult {
+    /// May dispatch of `types` to shard `s` be skipped outright?  Only
+    /// when the outcome is provably reproducible coordinator-side:
+    /// nothing in the batch is relevant to the shard's queries AND the
+    /// shard is inert (no open windows, no PMs) AND its queries are
+    /// statically skippable (count windows + `OnMatch` opens, so
+    /// neither window openings, expirations, nor the time-window rate
+    /// EWMA can be observed by any later decision).
+    fn can_skip(&self, s: usize, types: TypeMask) -> bool {
+        self.routing
+            && self.static_skip[s]
+            && self.pms[s] == 0
+            && self.wins_open[s] == 0
+            && !types.intersects(self.relevant[s])
+    }
+
+    /// The virtual cost a skipped shard would have accounted for a
+    /// `len`-event irrelevant batch on empty state: per event, the base
+    /// cost plus one open-check per local query.  Replicates the
+    /// worker's floating-point accumulation sequence exactly, so a
+    /// skipped dispatch is bit-identical to a sent one.
+    fn idle_cost(&self, s: usize, len: usize) -> f64 {
+        let mut per_event = self.cost.base_event_ns;
+        for _ in 0..self.plan.assignments[s].len() {
+            per_event += self.cost.open_check_ns;
+        }
+        let mut total = 0.0f64;
+        for _ in 0..len {
+            total += per_event;
+        }
+        total
+    }
+
+    fn dispatch(&mut self, events: &[Event], mask: Option<&DropMask>) -> BatchResult {
         let mut out = BatchResult::default();
         if events.is_empty() {
             return out;
         }
-        let batch = Arc::new(events.to_vec());
+        let batch = if self.pooling {
+            self.pool.lease_with(|b| b.refill(events))
+        } else {
+            Arc::new(EventBatch::copied(events))
+        };
+        let types = batch.types();
+        let shed: Option<Arc<DropMask>> = mask.map(|m| {
+            assert_eq!(m.len(), events.len(), "one mask bit per event");
+            if self.pooling {
+                self.masks.lease_with(|p| p.copy_from(m))
+            } else {
+                Arc::new(m.clone())
+            }
+        });
+        let mut sent = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
+            if self.can_skip(s, types) {
+                self.skipped += 1;
+                continue;
+            }
+            sent[s] = true;
+            let sink = std::mem::take(&mut self.comp_bufs[s]);
             self.send(
                 s,
                 Request::Batch {
                     events: Arc::clone(&batch),
-                    skip_match: mask.clone(),
+                    shed: shed.clone(),
+                    sink,
                 },
             );
         }
         for s in 0..self.n_shards() {
+            if !sent[s] {
+                // reproduce the skipped shard's idle outcome: no
+                // completions, checks or window movement — just the
+                // modeled per-event bookkeeping cost
+                let cost = self.idle_cost(s, events.len());
+                out.cost_ns_max = out.cost_ns_max.max(cost);
+                out.cost_ns_total += cost;
+                continue;
+            }
             match self.recv(s) {
-                Response::Batch(b) => {
+                Response::Batch(mut b) => {
                     out.cost_ns_max = out.cost_ns_max.max(b.cost_ns);
                     out.cost_ns_total += b.cost_ns;
                     out.checks += b.checks;
@@ -225,14 +399,18 @@ impl ShardedOperator {
                     self.pms[s] = b.n_pms;
                     self.created[s] = b.pms_created;
                     self.completed[s] = b.completions_total;
-                    out.completions.extend(b.completions);
+                    self.wins_open[s] =
+                        (self.wins_open[s] + b.opened).saturating_sub(b.closed);
+                    out.completions.extend_from_slice(&b.completions);
+                    // reclaim the sink for the next dispatch
+                    b.completions.clear();
+                    self.comp_bufs[s] = b.completions;
                 }
                 _ => unreachable!("protocol violation: expected batch outcome"),
             }
         }
         merge::sort_completions(&mut out.completions);
-        self.open_windows =
-            (self.open_windows + out.opened).saturating_sub(out.closed);
+        self.open_windows = self.wins_open.iter().sum();
         out
     }
 
@@ -247,16 +425,18 @@ impl ShardedOperator {
         self.dispatch(events, None)
     }
 
-    /// Like [`Self::process_batch`], but events whose `dropped` bit is
-    /// set get window bookkeeping only (black-box event-shedding
-    /// semantics: shed events still exist in the stream).
+    /// Like [`Self::process_batch`], but events whose [`DropMask`] bit
+    /// is set get window bookkeeping only (black-box event-shedding
+    /// semantics: shed events still exist in the stream).  The mask is
+    /// forwarded to the workers through the pooled mask plane — no
+    /// allocation in steady state.
     pub fn process_batch_masked(
         &mut self,
         events: &[Event],
-        dropped: &[bool],
+        dropped: &DropMask,
     ) -> BatchResult {
         assert_eq!(events.len(), dropped.len());
-        self.dispatch(events, Some(Arc::new(dropped.to_vec())))
+        self.dispatch(events, Some(dropped))
     }
 
     /// Install utility tables (global query order); each shard receives
@@ -296,10 +476,14 @@ impl ShardedOperator {
     /// tie-break documented on [`crate::operator::cell_cmp`].
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
         let scanned = self.pm_count();
+        let mut per_shard = PerShard::default();
+        for &p in &self.pms {
+            per_shard.push(p, 0);
+        }
         let mut out = ShedOutcome {
             scanned,
             dropped: 0,
-            per_shard: self.pms.iter().map(|&p| (p, 0)).collect(),
+            per_shard,
         };
         if rho == 0 || scanned == 0 {
             return out;
@@ -408,6 +592,7 @@ impl ShardedOperator {
         }
         self.ack_all();
         self.pms.fill(0);
+        self.wins_open.fill(0);
         self.open_windows = 0;
     }
 
@@ -465,11 +650,8 @@ impl OperatorState for ShardedOperator {
         ShardedOperator::set_obs_enabled(self, enabled);
     }
 
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&[bool]>) -> BatchResult {
-        match shed_mask {
-            Some(m) => self.process_batch_masked(events, m),
-            None => self.dispatch(events, None),
-        }
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult {
+        self.dispatch(events, shed_mask)
     }
 
     fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
@@ -579,13 +761,61 @@ mod tests {
             let mut g = BusGen::with_seed(5);
             g.take_events(2_000)
         };
-        let mask = vec![true; events.len()];
+        let mask = crate::events::DropMask::from_bools(&vec![true; events.len()]);
         let mut sharded = ShardedOperator::new(queries, 1);
         let out = sharded.process_batch_masked(&events, &mask);
         assert!(out.completions.is_empty(), "shed events cannot match");
         assert_eq!(out.checks, 0);
         assert!(out.opened > 0, "windows still open on shed events");
         assert!(sharded.pm_count() > 0, "window seeds still exist");
+    }
+
+    #[test]
+    fn dispatch_pool_stays_at_one_buffer() {
+        let queries = q1(1_000).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(4);
+            g.take_events(20_000)
+        };
+        let mut sharded = ShardedOperator::new(queries, 2);
+        for chunk in events.chunks(512) {
+            sharded.process_batch(chunk);
+        }
+        // the synchronous protocol keeps exactly one batch in flight,
+        // so the pool never needs a second buffer
+        assert_eq!(sharded.pooled_batches(), 1);
+    }
+
+    #[test]
+    fn irrelevant_batches_skip_inert_shards_bitwise() {
+        // q1 (stock, etype 0, count windows, OnMatch opens) sharded
+        // with itself: feed a trace whose etype can never match — the
+        // coordinator must skip the send entirely, with the same
+        // observable outcome as an unskipped run
+        let foreign: Vec<Event> = (0..4_000u64)
+            .map(|i| Event::new(i, i, 7, &[1.0, 2.0, 0.0]))
+            .collect();
+        let run = |routing: bool| {
+            let mut sop = ShardedOperator::new(q1(1_000).queries, 2);
+            sop.set_type_routing(routing);
+            let mut cost_max = Vec::new();
+            for chunk in foreign.chunks(256) {
+                let out = sop.process_batch(chunk);
+                assert!(out.completions.is_empty());
+                cost_max.push(out.cost_ns_max.to_bits());
+            }
+            (cost_max, sop.pm_count(), sop.skipped_dispatches())
+        };
+        let (cost_on, pms_on, skipped_on) = run(true);
+        let (cost_off, pms_off, skipped_off) = run(false);
+        assert_eq!(pms_on, 0);
+        assert_eq!(pms_on, pms_off);
+        assert!(skipped_on > 0, "inert shards must be skipped");
+        assert_eq!(skipped_off, 0, "routing off must not skip");
+        assert_eq!(
+            cost_on, cost_off,
+            "skipped dispatch must reproduce the worker's cost bit-for-bit"
+        );
     }
 
     #[test]

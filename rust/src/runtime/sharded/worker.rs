@@ -8,17 +8,27 @@
 //! deadlock-free: every request gets exactly one response, and the
 //! coordinator always drains responses before sending the next round.
 //!
+//! The batch plane is allocation-free in steady state: batches arrive
+//! as clones of pooled [`EventBatch`] `Arc`s (no copy), shed masks as
+//! pooled [`DropMask`] `Arc`s, the per-event [`ProcessOutcome`] is a
+//! worker-owned scratch, and completions are written into a recycled
+//! sink the coordinator sends with each batch and gets back in the
+//! response.  Both channels are bounded (array-backed), so message
+//! passing itself allocates nothing per dispatch.
+//!
 //! Shed candidates travel as compact `(query, window, state)` **cell
 //! summaries** ([`ShedCell`]) instead of per-PM `PmRef` streams: all
 //! PMs of a cell share one utility, so worker-channel traffic for a
 //! shed round is O(cells), not O(n_pm).
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
-use crate::events::Event;
+use crate::events::{DropMask, EventBatch};
 use crate::model::UtilityTable;
-use crate::operator::{CellTake, ComplexEvent, Operator, PmRef, ShedCell};
+use crate::operator::{
+    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, ShedCell,
+};
 use crate::query::Query;
 use crate::util::Rng;
 
@@ -26,6 +36,7 @@ use crate::util::Rng;
 #[derive(Debug, Default, Clone)]
 pub struct BatchOutcome {
     /// completions with *global* query indices, in processing order
+    /// (written into the coordinator's recycled sink)
     pub completions: Vec<ComplexEvent>,
     /// summed virtual cost of the batch on this shard (ns)
     pub cost_ns: f64,
@@ -45,13 +56,16 @@ pub struct BatchOutcome {
 
 /// Coordinator → worker.
 pub(super) enum Request {
-    /// Process a batch; events with a true `skip_match` bit get window
+    /// Process a batch; events with a set [`DropMask`] bit get window
     /// bookkeeping only (black-box event shedding semantics).
     Batch {
-        /// the shared batch
-        events: Arc<Vec<Event>>,
-        /// optional per-event "event was shed" mask
-        skip_match: Option<Arc<Vec<bool>>>,
+        /// the shared pooled batch
+        events: Arc<EventBatch>,
+        /// optional per-event "event was shed" mask (pooled)
+        shed: Option<Arc<DropMask>>,
+        /// recycled completion sink — filled by the worker, returned in
+        /// [`Response::Batch`], recycled by the coordinator
+        sink: Vec<ComplexEvent>,
     },
     /// Install utility tables, one per *local* query, local order.
     SetTables(Vec<UtilityTable>),
@@ -59,6 +73,8 @@ pub(super) enum Request {
     SetCostFactors(Vec<f64>),
     /// Toggle observation capture.
     SetObsEnabled(bool),
+    /// Toggle the operator's type-routed skim path.
+    SetTypeRouting(bool),
     /// Return the shard's lowest-utility cells, sorted ascending by
     /// [`crate::operator::cell_cmp`], covering at least `rho` PMs
     /// (query indices remapped to global).
@@ -102,7 +118,7 @@ pub(super) enum Response {
 /// shard's `i`-th query.
 pub(super) fn run(
     rx: Receiver<Request>,
-    tx: Sender<Response>,
+    tx: SyncSender<Response>,
     queries: Vec<Query>,
     local_to_global: Vec<usize>,
 ) {
@@ -110,6 +126,9 @@ pub(super) fn run(
     let mut refs: Vec<PmRef> = Vec::new();
     let mut cells: Vec<ShedCell> = Vec::new();
     let mut takes: Vec<CellTake> = Vec::new();
+    // reused per-event outcome: the batch loop never allocates once the
+    // completions buffer has grown to its working size
+    let mut scratch = ProcessOutcome::default();
     let global_to_local = |g: usize| -> usize {
         local_to_global
             .iter()
@@ -118,24 +137,32 @@ pub(super) fn run(
     };
     while let Ok(req) = rx.recv() {
         let resp = match req {
-            Request::Batch { events, skip_match } => {
+            Request::Batch {
+                events,
+                shed,
+                mut sink,
+            } => {
                 let mut out = BatchOutcome::default();
-                for (i, e) in events.iter().enumerate() {
-                    let skip = skip_match.as_ref().is_some_and(|m| m[i]);
-                    let o = if skip {
-                        op.process_bookkeeping(e)
+                for (i, e) in events.events().iter().enumerate() {
+                    let skip = shed.as_ref().is_some_and(|m| m.get(i));
+                    scratch.reset();
+                    if skip {
+                        op.process_bookkeeping_into(e, &mut scratch);
                     } else {
-                        op.process_event(e)
-                    };
-                    out.cost_ns += o.cost_ns;
-                    out.checks += o.checks;
-                    out.opened += o.opened;
-                    out.closed += o.closed;
-                    for mut ce in o.completions {
-                        ce.query = local_to_global[ce.query];
-                        out.completions.push(ce);
+                        op.process_event_into(e, &mut scratch);
+                    }
+                    out.cost_ns += scratch.cost_ns;
+                    out.checks += scratch.checks;
+                    out.opened += scratch.opened;
+                    out.closed += scratch.closed;
+                    for ce in &scratch.completions {
+                        sink.push(ComplexEvent {
+                            query: local_to_global[ce.query],
+                            ..*ce
+                        });
                     }
                 }
+                out.completions = sink;
                 out.n_pms = op.pm_count();
                 out.pms_created = op.pms_created;
                 out.completions_total = op.completions_total;
@@ -151,6 +178,10 @@ pub(super) fn run(
             }
             Request::SetObsEnabled(enabled) => {
                 op.obs.enabled = enabled;
+                Response::Ack
+            }
+            Request::SetTypeRouting(enabled) => {
+                op.set_type_routing(enabled);
                 Response::Ack
             }
             Request::Candidates { rho } => {

@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 
-use crate::events::Event;
+use crate::events::{DropMask, Event};
 use crate::nfa::machine::CompiledQuery;
 use crate::operator::OperatorState;
 use crate::query::Predicate;
@@ -44,8 +44,9 @@ pub struct EventBaselineShedder {
     rng: Rng,
     /// running mean of the inverse-utility weight (drop-rate normalizer)
     mean_w: f64,
-    /// per-event drop mask for the last batch (see `event_mask`)
-    mask: Vec<bool>,
+    /// per-event drop mask for the last batch (see `event_mask`) —
+    /// word-packed and reused across batches, never reallocated
+    mask: DropMask,
     /// total events dropped (reporting)
     pub total_dropped: u64,
 }
@@ -94,7 +95,7 @@ impl EventBaselineShedder {
             max_drop: 0.95,
             rng: Rng::seeded(seed),
             mean_w: 1.0,
-            mask: Vec::new(),
+            mask: DropMask::default(),
             total_dropped: 0,
         }
     }
@@ -119,8 +120,7 @@ impl Shedder for EventBaselineShedder {
         state: &mut dyn OperatorState,
     ) -> ShedReport {
         let k = state.parallelism() as f64;
-        self.mask.clear();
-        self.mask.resize(events.len(), false);
+        self.mask.reset(events.len());
         if self.detector.trained() {
             let lb = self.detector.lb_ns;
             let l_e = l_q_ns + self.detector.predict_lp(state.pm_count()) / k;
@@ -159,7 +159,7 @@ impl Shedder for EventBaselineShedder {
             self.mean_w = 0.999 * self.mean_w + 0.001 * w;
             let p = (self.drop_p * w / self.mean_w.max(1e-6)).clamp(0.0, 1.0);
             if self.rng.chance(p) {
-                self.mask[i] = true;
+                self.mask.mark(i);
                 dropped += 1;
             }
         }
@@ -171,7 +171,7 @@ impl Shedder for EventBaselineShedder {
         }
     }
 
-    fn event_mask(&self) -> Option<&[bool]> {
+    fn event_mask(&self) -> Option<&DropMask> {
         Some(&self.mask)
     }
 }
@@ -210,7 +210,9 @@ mod tests {
         let rep = s.on_batch(&[e], 0.0, &mut op);
         assert_eq!(rep.dropped_events, 0);
         assert_eq!(s.drop_p, 0.0);
-        assert_eq!(s.event_mask(), Some(&[false][..]));
+        let mask = s.event_mask().expect("E-BL always reports a mask");
+        assert_eq!(mask.len(), 1);
+        assert!(!mask.get(0));
     }
 
     #[test]
@@ -262,8 +264,7 @@ mod tests {
             let rep = s.on_batch(&events, 10_000_000.0, &mut op);
             let mask = s.event_mask().unwrap();
             assert_eq!(mask.len(), events.len());
-            let set = mask.iter().filter(|&&b| b).count() as u64;
-            assert_eq!(set, rep.dropped_events);
+            assert_eq!(mask.count() as u64, rep.dropped_events);
         }
         assert!(s.drop_p > 0.0);
     }

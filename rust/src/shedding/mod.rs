@@ -31,7 +31,7 @@ pub use pm_baseline::PmBaselineShedder;
 pub use pspice::PSpiceShedder;
 
 use crate::config::ExperimentConfig;
-use crate::events::Event;
+use crate::events::{DropMask, Event};
 use crate::model::ModelConfig;
 use crate::operator::OperatorState;
 use crate::query::Query;
@@ -96,8 +96,11 @@ pub trait Shedder {
 
     /// Per-event drop mask for the batch last passed to
     /// [`Shedder::on_batch`] (black-box strategies only; `None` means
-    /// "process every event").
-    fn event_mask(&self) -> Option<&[bool]> {
+    /// "process every event").  The word-packed [`DropMask`] flows
+    /// through [`OperatorState::process_batch`] and, on the sharded
+    /// runtime, straight into the pooled mask plane — no `Vec<bool>`
+    /// copies anywhere on the drop path.
+    fn event_mask(&self) -> Option<&DropMask> {
         None
     }
 }

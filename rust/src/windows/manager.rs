@@ -5,11 +5,109 @@
 //! one utility — the shedder ranks cells, not PMs, which is what makes
 //! the shed path O(cells) instead of O(n_pm).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::events::Event;
 use crate::nfa::{CompiledQuery, PartialMatch};
 use crate::query::{OpenPolicy, WindowSpec};
+
+/// Claim-set size at which [`ClaimSet`] migrates from the sorted-`Vec`
+/// representation to a `BTreeSet`.  Below it, binary-search membership
+/// plus an O(k) shifting insert into one contiguous allocation beats
+/// the tree on locality; above it, the shifts dominate and the tree's
+/// O(log k) node insert wins.  64 keys ≈ one 512-byte memmove worst
+/// case — roughly where the two curves cross on the built-in
+/// workloads' key widths.
+pub const CLAIM_SPILL_THRESHOLD: usize = 64;
+
+/// Key-bit values already claimed by an advanced seed of a multi-seed
+/// window.  Small sets (the overwhelmingly common case — a window
+/// claims one key per correlation group) live in a sorted `Vec`;
+/// past [`CLAIM_SPILL_THRESHOLD`] keys the set spills to a `BTreeSet`
+/// so inserts stop paying O(k) element shifts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClaimSet {
+    /// sorted ascending; membership is a binary search
+    Sorted(Vec<u64>),
+    /// spilled representation for claim-heavy windows
+    Tree(BTreeSet<u64>),
+}
+
+impl Default for ClaimSet {
+    fn default() -> Self {
+        ClaimSet::Sorted(Vec::new())
+    }
+}
+
+impl ClaimSet {
+    /// Is `key` claimed?  O(log k) in both representations.
+    #[inline]
+    pub fn contains(&self, key: u64) -> bool {
+        match self {
+            ClaimSet::Sorted(v) => v.binary_search(&key).is_ok(),
+            ClaimSet::Tree(t) => t.contains(&key),
+        }
+    }
+
+    /// Claim `key` (idempotent), spilling to the tree representation
+    /// once the sorted vector reaches [`CLAIM_SPILL_THRESHOLD`].
+    pub fn insert(&mut self, key: u64) {
+        match self {
+            ClaimSet::Sorted(v) => match v.binary_search(&key) {
+                Ok(_) => {}
+                Err(pos) => {
+                    if v.len() >= CLAIM_SPILL_THRESHOLD {
+                        let mut t: BTreeSet<u64> = v.iter().copied().collect();
+                        t.insert(key);
+                        *self = ClaimSet::Tree(t);
+                    } else {
+                        v.insert(pos, key);
+                    }
+                }
+            },
+            ClaimSet::Tree(t) => {
+                t.insert(key);
+            }
+        }
+    }
+
+    /// Number of claimed keys.
+    pub fn len(&self) -> usize {
+        match self {
+            ClaimSet::Sorted(v) => v.len(),
+            ClaimSet::Tree(t) => t.len(),
+        }
+    }
+
+    /// No keys claimed?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Has the set spilled to the tree representation?
+    pub fn is_spilled(&self) -> bool {
+        matches!(self, ClaimSet::Tree(_))
+    }
+
+    /// Drop every claim.  The sorted representation keeps its buffer
+    /// (window recycling stays allocation-free); a spilled set reverts
+    /// to (an empty) sorted form, since the recycled window starts its
+    /// life small again.
+    pub fn clear(&mut self) {
+        match self {
+            ClaimSet::Sorted(v) => v.clear(),
+            ClaimSet::Tree(_) => *self = ClaimSet::default(),
+        }
+    }
+
+    /// The claimed keys in ascending order (test/debug helper).
+    pub fn to_sorted_vec(&self) -> Vec<u64> {
+        match self {
+            ClaimSet::Sorted(v) => v.clone(),
+            ClaimSet::Tree(t) => t.iter().copied().collect(),
+        }
+    }
+}
 
 /// Incrementally-maintained per-state PM counts of one window — the
 /// shedder's cell index.  Entries beyond the stored length are zero, so
@@ -49,6 +147,12 @@ impl StateCounts {
     pub fn advance(&mut self, from: u32, to: u32) {
         self.dec(from);
         self.inc(to);
+    }
+
+    /// Forget every count, keeping the buffer for reuse.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.counts.clear();
     }
 
     /// Non-empty `(state, count)` cells, ascending by state.
@@ -98,10 +202,9 @@ pub struct Window {
     pub pms: Vec<PartialMatch>,
     /// Key-bit values already claimed by an advanced seed (multi-seed
     /// windows only): prevents two PMs for the same correlation key.
-    /// Kept **sorted** so membership checks binary-search; mutate only
-    /// through [`Window::claim`] / [`Window::has_claim`] (or keep the
-    /// ordering by hand when borrowing fields directly).
-    pub claimed: Vec<u64>,
+    /// A [`ClaimSet`] — sorted vector with binary-search membership,
+    /// spilling to a `BTreeSet` past [`CLAIM_SPILL_THRESHOLD`] keys.
+    pub claimed: ClaimSet,
     /// Per-state PM counts (the shedder's cell index).  Every code path
     /// that adds, removes or advances a PM must keep this in step;
     /// [`Window::retain_pms`] does so automatically for removals.
@@ -132,13 +235,21 @@ impl Window {
     /// Is `key` already claimed by an advanced seed?  O(log k).
     #[inline]
     pub fn has_claim(&self, key: u64) -> bool {
-        has_claim_sorted(&self.claimed, key)
+        self.claimed.contains(key)
     }
 
-    /// Claim `key`, keeping [`Window::claimed`] sorted (idempotent).
+    /// Claim `key` (idempotent).
     #[inline]
     pub fn claim(&mut self, key: u64) {
-        claim_sorted(&mut self.claimed, key);
+        self.claimed.insert(key);
+    }
+
+    /// Forget all state but keep every buffer's capacity, readying the
+    /// shell for reuse by [`QueryWindows::open`].
+    fn recycle(&mut self) {
+        self.pms.clear();
+        self.claimed.clear();
+        self.counts.clear();
     }
 
     /// Remove the PMs rejected by `keep`, maintaining the cell index.
@@ -158,29 +269,20 @@ impl Window {
     }
 }
 
-/// Membership test against a sorted claim list — the free-function
-/// form of [`Window::has_claim`], usable under split field borrows
-/// (the operator's match loop holds `pms` and `claimed` separately).
-#[inline]
-pub fn has_claim_sorted(claimed: &[u64], key: u64) -> bool {
-    claimed.binary_search(&key).is_ok()
-}
+/// Retired window shells kept for reuse beyond this count are dropped
+/// instead: bounds the recycling pool's memory under expiry bursts
+/// while keeping the steady open→expire→open cycle allocation-free.
+const GRAVEYARD_CAP: usize = 64;
 
-/// Sorted idempotent insert into a claim list — the single home of the
-/// "`Window::claimed` stays sorted" invariant; [`Window::claim`] and
-/// the operator's match loop both delegate here.
-#[inline]
-pub fn claim_sorted(claimed: &mut Vec<u64>, key: u64) {
-    if let Err(pos) = claimed.binary_search(&key) {
-        claimed.insert(pos, key);
-    }
-}
-
-/// All open windows of one query, oldest first.
+/// All open windows of one query, oldest first, plus a bounded free
+/// list of expired window shells whose buffers [`QueryWindows::open`]
+/// reuses — steady-state window churn touches no allocator.
 #[derive(Debug, Default, Clone)]
 pub struct QueryWindows {
     /// open windows, ordered by `open_seq`
     pub windows: VecDeque<Window>,
+    /// recycled shells (cleared, capacity retained)
+    graveyard: Vec<Window>,
 }
 
 impl QueryWindows {
@@ -196,15 +298,18 @@ impl QueryWindows {
         }
     }
 
-    /// Open a window seeded with one initial-state PM.
+    /// Open a window seeded with one initial-state PM, reusing a
+    /// recycled shell when one is available.
     pub fn open(&mut self, e: &Event, next_pm_id: &mut u64) -> &mut Window {
-        let mut w = Window {
-            open_seq: e.seq,
-            open_ts: e.ts_ms,
+        let mut w = self.graveyard.pop().unwrap_or_else(|| Window {
+            open_seq: 0,
+            open_ts: 0,
             pms: Vec::with_capacity(4),
-            claimed: Vec::new(),
+            claimed: ClaimSet::default(),
             counts: StateCounts::default(),
-        };
+        });
+        w.open_seq = e.seq;
+        w.open_ts = e.ts_ms;
         w.pms.push(PartialMatch::seed(*next_pm_id, e.seq));
         w.counts.inc(0);
         *next_pm_id += 1;
@@ -224,9 +329,13 @@ impl QueryWindows {
                 WindowSpec::TimeMs(ms) => cur_ts > front.open_ts + ms,
             };
             if dead {
-                let w = self.windows.pop_front().expect("front checked");
+                let mut w = self.windows.pop_front().expect("front checked");
                 out.windows += 1;
                 out.pms += w.pms.len();
+                if self.graveyard.len() < GRAVEYARD_CAP {
+                    w.recycle();
+                    self.graveyard.push(w);
+                }
             } else {
                 break;
             }
@@ -299,7 +408,7 @@ mod tests {
             open_seq: 100,
             open_ts: 1000,
             pms: Vec::new(),
-            claimed: Vec::new(),
+            claimed: ClaimSet::default(),
             counts: StateCounts::default(),
         };
         assert_eq!(
@@ -375,8 +484,60 @@ mod tests {
         for key in [9u64, 3, 7, 3, 1] {
             w.claim(key);
         }
-        assert_eq!(w.claimed, vec![1, 3, 7, 9]);
+        assert_eq!(w.claimed.to_sorted_vec(), vec![1, 3, 7, 9]);
         assert!(w.has_claim(7));
         assert!(!w.has_claim(2));
+        assert!(!w.claimed.is_spilled());
+    }
+
+    #[test]
+    fn claim_set_spills_to_tree_and_back_on_clear() {
+        // both regimes of the ClaimSet: sorted-Vec below the threshold,
+        // BTreeSet above it, identical membership semantics throughout
+        let mut c = ClaimSet::default();
+        for key in 0..CLAIM_SPILL_THRESHOLD as u64 {
+            c.insert(key * 2); // even keys
+            c.insert(key * 2); // idempotent
+        }
+        assert!(!c.is_spilled());
+        assert_eq!(c.len(), CLAIM_SPILL_THRESHOLD);
+        // one more unique key crosses the threshold
+        c.insert(1);
+        assert!(c.is_spilled());
+        assert_eq!(c.len(), CLAIM_SPILL_THRESHOLD + 1);
+        c.insert(1); // idempotent in the tree too
+        assert_eq!(c.len(), CLAIM_SPILL_THRESHOLD + 1);
+        for key in 0..CLAIM_SPILL_THRESHOLD as u64 {
+            assert!(c.contains(key * 2), "key {} lost in spill", key * 2);
+        }
+        assert!(c.contains(1));
+        assert!(!c.contains(3));
+        // membership order is preserved by the debug view
+        let v = c.to_sorted_vec();
+        assert!(v.windows(2).all(|p| p[0] < p[1]));
+        // clear reverts a spilled set to the compact representation
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.is_spilled());
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn expired_windows_are_recycled_by_open() {
+        let mut qw = QueryWindows::default();
+        let mut id = 0;
+        qw.open(&quote(0, 0.0), &mut id);
+        qw.windows[0].claim(42);
+        let closed = qw.expire(WindowSpec::Count(10), 100, 0);
+        assert_eq!((closed.windows, closed.pms), (1, 1));
+        assert!(qw.windows.is_empty());
+        // the recycled shell must come back empty
+        let w = qw.open(&quote(200, 0.0), &mut id);
+        assert_eq!(w.open_seq, 200);
+        assert_eq!(w.pms.len(), 1, "exactly the fresh seed");
+        assert_eq!(w.pms[0].state, 0);
+        assert!(!w.has_claim(42), "stale claims must not survive recycling");
+        assert_eq!(w.counts.get(0), 1);
+        assert!(w.counts.matches(&w.pms));
     }
 }

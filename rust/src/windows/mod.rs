@@ -6,4 +6,6 @@
 
 pub mod manager;
 
-pub use manager::{claim_sorted, has_claim_sorted, Expired, QueryWindows, StateCounts, Window};
+pub use manager::{
+    ClaimSet, Expired, QueryWindows, StateCounts, Window, CLAIM_SPILL_THRESHOLD,
+};

@@ -134,6 +134,74 @@ fn global_shedding_picks_identical_victims_across_shard_counts() {
 }
 
 #[test]
+fn bus_only_trace_with_foreign_shards_matches_single_and_unrouted() {
+    // the ISSUE-4 satellite workload: the mixed eight-query set fed a
+    // bus-only trace, so the shards hosting only stock/soccer queries
+    // never see a relevant event — type routing must skim (or skip)
+    // them without changing a single completion, drop, or PM count
+    let queries = mixed_queries(1_500);
+    let events: Vec<Event> = {
+        let mut g = BusGen::with_seed(19);
+        g.take_events(20_000)
+            .into_iter()
+            .map(|mut e| {
+                e.etype += pspice::datasets::mixed::BUS_BASE;
+                e
+            })
+            .collect()
+    };
+
+    // single-threaded reference (routing on — the unit suite pins
+    // routed-vs-unrouted equality on the operator itself)
+    let mut single = Operator::new(queries.clone());
+    let mut expected = Vec::new();
+    let mut expected_sheds = Vec::new();
+    for (i, chunk) in events.chunks(512).enumerate() {
+        for e in chunk {
+            expected.extend(single.process_event(e).completions);
+        }
+        if i % 5 == 4 {
+            let out = single.shed_lowest(30);
+            expected_sheds.push((out.dropped, single.pm_count()));
+        }
+    }
+    sort_completions(&mut expected);
+    assert!(
+        expected_sheds.iter().any(|&(d, _)| d > 0),
+        "scenario must actually shed"
+    );
+
+    for shards in [2usize, 4] {
+        for routing in [true, false] {
+            let mut sop = ShardedOperator::new(queries.clone(), shards);
+            sop.set_type_routing(routing);
+            let mut got = Vec::new();
+            let mut sheds = Vec::new();
+            for (i, chunk) in events.chunks(512).enumerate() {
+                got.extend(sop.process_batch(chunk).completions);
+                if i % 5 == 4 {
+                    let out = sop.shed_lowest(30);
+                    sheds.push((out.dropped, sop.pm_count()));
+                }
+            }
+            sort_completions(&mut got);
+            assert_eq!(
+                got, expected,
+                "completions diverged (shards={shards} routing={routing})"
+            );
+            assert_eq!(
+                sheds, expected_sheds,
+                "shed trail diverged (shards={shards} routing={routing})"
+            );
+            assert_eq!(sop.pm_count(), single.pm_count());
+            if !routing {
+                assert_eq!(sop.skipped_dispatches(), 0);
+            }
+        }
+    }
+}
+
+#[test]
 fn shed_lowest_budget_is_exact_on_mixed_workload() {
     let queries = mixed_queries(2_000);
     let trace = mixed_trace(24_000, 17);

@@ -10,11 +10,11 @@
 
 use std::collections::HashSet;
 
-use pspice::datasets::{BusGen, StockGen};
-use pspice::events::{Event, EventStream};
+use pspice::datasets::{mixed_queries, mixed_trace, BusGen, StockGen};
+use pspice::events::{DropMask, Event, EventStream};
 use pspice::model::UtilityTable;
 use pspice::nfa::CompiledQuery;
-use pspice::operator::Operator;
+use pspice::operator::{Operator, OperatorState};
 use pspice::query::builtin::{q1, q4};
 use pspice::query::Query;
 use pspice::runtime::sharded::sort_completions;
@@ -213,5 +213,107 @@ fn prop_sharded_cell_merge_matches_single_operator() {
         sort_completions(&mut ces_sharded);
         assert_eq!(ces_single, ces_sharded, "downstream completions diverged");
         assert_eq!(single.pm_count(), sharded.pm_count());
+    });
+}
+
+/// One run of the pooled/routed measurement loop: batches (some with a
+/// pooled drop mask) interleaved with fixed-ρ shed rounds.  Returns
+/// everything victim-order equivalence is judged on: sorted
+/// completions, the (dropped, pm_count) trail of every shed round, and
+/// the final population coordinates.
+#[allow(clippy::type_complexity)]
+fn drive_masked_shedding(
+    state: &mut dyn OperatorState,
+    trace: &[Event],
+    masks: &[Option<DropMask>],
+    batch: usize,
+    rho: usize,
+) -> (
+    Vec<pspice::operator::ComplexEvent>,
+    Vec<(usize, usize)>,
+    Vec<(usize, u64, u64, u32)>,
+) {
+    let mut ces = Vec::new();
+    let mut sheds = Vec::new();
+    for (i, chunk) in trace.chunks(batch).enumerate() {
+        let mask = masks[i].as_ref();
+        ces.extend(state.process_batch(chunk, mask).completions);
+        if i % 4 == 3 {
+            let out = state.shed_lowest(rho);
+            sheds.push((out.dropped, state.pm_count()));
+        }
+    }
+    sort_completions(&mut ces);
+    (ces, sheds, population(state))
+}
+
+#[test]
+fn prop_pooled_routed_plane_is_equivalent_to_pr3_dispatch() {
+    // The PR 4 acceptance property: the pooled batch/mask plane with
+    // type-routed dispatch must produce identical completions, drops
+    // and victim order to (a) the same shard count with routing off
+    // (the PR 3 matching behavior), (b) other shard counts, and (c)
+    // the single-threaded operator — on a mixed multi-family workload
+    // where every shard hosts queries that skim a large share of the
+    // stream.  Shed rounds use synthetic utility tables so victim
+    // order is exercised, and pooled drop masks cover the black-box
+    // path.
+    forall(4, 2024, |g| {
+        let queries = mixed_queries(g.usize(1_200, 2_500) as u64);
+        let trace = mixed_trace(g.usize(9_000, 15_000), g.usize(0, 1 << 16) as u64);
+        let batch = g.usize(128, 900);
+        let rho = g.usize(8, 48);
+        let tables = synthetic_tables(&queries, g);
+        // one shared mask schedule: every 3rd batch sheds a random
+        // ~10% of its events through the pooled mask plane
+        let n_chunks = trace.len().div_ceil(batch);
+        let masks: Vec<Option<DropMask>> = (0..n_chunks)
+            .map(|i| {
+                if i % 3 != 1 {
+                    return None;
+                }
+                let len = batch.min(trace.len() - i * batch);
+                let mut m = DropMask::default();
+                m.reset(len);
+                for j in 0..len {
+                    if g.bool(0.1) {
+                        m.mark(j);
+                    }
+                }
+                Some(m)
+            })
+            .collect();
+
+        let mut runs = Vec::new();
+        for &shards in &[1usize, 2, 4] {
+            for &routing in &[true, false] {
+                let mut sop = ShardedOperator::new(queries.clone(), shards);
+                sop.set_type_routing(routing);
+                sop.set_tables(&tables);
+                runs.push((
+                    format!("sharded(shards={shards}, routing={routing})"),
+                    drive_masked_shedding(&mut sop, &trace, &masks, batch, rho),
+                ));
+            }
+        }
+        for &routing in &[true, false] {
+            let mut op = Operator::new(queries.clone());
+            op.set_type_routing(routing);
+            op.install_tables(&tables);
+            runs.push((
+                format!("single(routing={routing})"),
+                drive_masked_shedding(&mut op, &trace, &masks, batch, rho),
+            ));
+        }
+        let (ref_name, reference) = &runs[0];
+        assert!(
+            !reference.1.is_empty(),
+            "scenario must include shed rounds"
+        );
+        for (name, run) in &runs[1..] {
+            assert_eq!(run.0, reference.0, "{name} completions != {ref_name}");
+            assert_eq!(run.1, reference.1, "{name} shed trail != {ref_name}");
+            assert_eq!(run.2, reference.2, "{name} survivors != {ref_name}");
+        }
     });
 }

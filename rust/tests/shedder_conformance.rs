@@ -94,7 +94,7 @@ fn drive(
         );
         if let Some(mask) = shedder.event_mask() {
             assert_eq!(mask.len(), chunk.len(), "{}: mask length", kind.name());
-            let set = mask.iter().filter(|&&b| b).count() as u64;
+            let set = mask.count() as u64;
             assert_eq!(set, rep.dropped_events, "{}: mask vs report", kind.name());
         } else {
             assert_eq!(rep.dropped_events, 0, "{}: no mask, no drops", kind.name());
