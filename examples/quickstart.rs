@@ -16,7 +16,7 @@
 
 use pspice::datasets::{BusGen, DatasetKind};
 use pspice::events::EventStream;
-use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::model::{ModelBuilder, ModelConfig, ModelKind};
 use pspice::operator::Operator;
 use pspice::pipeline::Pipeline;
 use pspice::query::builtin::q4;
@@ -98,9 +98,9 @@ fn main() -> pspice::Result<()> {
     // 3. embedding: feed() event slices as they arrive instead of
     //    handing the pipeline a whole trace
     let mut pipe = Pipeline::builder()
-        .queries(queries)
+        .queries(queries.clone())
         .shedder(ShedderKind::PSpice)
-        .detector(detector)
+        .detector(detector.clone())
         .tables(tables)
         .latency_bound_ms(LB_MS)
         .arrivals(RateSource::from_capacity(capacity_ns, RATE, 0.0))
@@ -114,6 +114,28 @@ fn main() -> pspice::Result<()> {
         "\nincremental feed: {detected} complex events, {} PMs shed, {} PMs live",
         pipe.totals().dropped_pms,
         pipe.pm_count()
+    );
+
+    // 4. the versioned model plane: drift-triggered retraining publishes
+    //    fresh epoch-numbered TableSets on ANY backend (shards > 1
+    //    broadcasts them to every worker), and `.model(..)` swaps the
+    //    UtilityModel backend — here the frequency-only predictor
+    let mut pipe = Pipeline::builder()
+        .queries(queries)
+        .shedder(ShedderKind::PSpice)
+        .detector(detector)
+        .model(ModelKind::Freq)
+        .retrain(10_000, 1e-9) // tight threshold: retrain eagerly
+        .latency_bound_ms(LB_MS)
+        .arrivals(RateSource::from_capacity(capacity_ns, RATE, 0.0))
+        .build()?;
+    pipe.prime(warm);
+    pipe.feed(measure)?;
+    let run = pipe.summary(Vec::new());
+    println!(
+        "\nmodel plane: {} retrains -> table epoch {} (freq backend)",
+        run.retrains,
+        pipe.table_epoch()
     );
     Ok(())
 }

@@ -23,6 +23,7 @@ fn cell(query: &str, dataset: DatasetKind, window: u64, n: usize) -> ExperimentC
         rate: 1.2,
         lb_ms: 0.5,
         shedder: ShedderKind::PSpice,
+        model: pspice::model::ModelKind::Markov,
         weights: Vec::new(),
         cost_factors: Vec::new(),
         retrain_every: 0,

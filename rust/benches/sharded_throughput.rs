@@ -29,7 +29,7 @@ mod common;
 use common::{alloc_count, bench, black_box, emit_json, smoke_mode, BenchResult};
 use pspice::datasets::{mixed_queries, mixed_trace};
 use pspice::metrics::Throughput;
-use pspice::operator::Operator;
+use pspice::operator::{BatchResult, Operator, OperatorState};
 use pspice::runtime::ShardedOperator;
 
 #[global_allocator]
@@ -147,16 +147,22 @@ fn main() {
     // One long-lived 4-shard runtime streams the trace once (no
     // replay): the head warms every pool, sink, window shell and
     // channel; the tail is the steady state we count allocations over,
-    // across all threads (workers included).
+    // across all threads (workers included).  Dispatch goes through the
+    // into-buffer API — completions ride ONE recycled BatchResult
+    // across every call, so the coordinator boundary itself is
+    // allocation-free too (the PR 5 follow-up to the pooled plane).
     let mut sop = ShardedOperator::new(queries.clone(), 4);
     sop.set_obs_enabled(false);
     let split = trace.len() * 3 / 5;
+    let mut out = BatchResult::default();
     for chunk in trace[..split].chunks(batch) {
-        black_box(sop.process_batch(chunk));
+        sop.process_batch_into(chunk, None, &mut out);
+        black_box(&out);
     }
     let (a0, b0) = alloc_count::snapshot();
     for chunk in trace[split..].chunks(batch) {
-        black_box(sop.process_batch(chunk));
+        sop.process_batch_into(chunk, None, &mut out);
+        black_box(&out);
     }
     let (a1, b1) = alloc_count::snapshot();
     let tail = (trace.len() - split) as u64;

@@ -66,6 +66,7 @@ pub fn usage() -> &'static str {
                   [--shedder none|pspice|pspice--|pm-bl|e-bl] [--rate 1.2]\n\
                   [--window N] [--pattern-n N] [--events N] [--warmup N]\n\
                   [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
+                  [--model markov|freq]\n\
                   [--retrain-every N] [--drift-threshold F]\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
@@ -115,6 +116,9 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     anyhow::ensure!(cfg.batch >= 1, "--batch must be at least 1");
     if let Some(s) = flags.get("shedder") {
         cfg.shedder = s.parse()?;
+    }
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.parse()?;
     }
     Ok(cfg)
 }
@@ -281,6 +285,22 @@ mod tests {
         assert_eq!(cfg_from_flags(&f).unwrap().shards, 1);
         // zero is rejected
         let f = Flags::parse(&s(&["run", "--shards", "0"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn model_flag_parses() {
+        let f = Flags::parse(&s(&["run", "--model", "freq"])).unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.model, crate::model::ModelKind::Freq);
+        // default stays the Markov model
+        let f = Flags::parse(&s(&["run", "--query", "q1"])).unwrap();
+        assert_eq!(
+            cfg_from_flags(&f).unwrap().model,
+            crate::model::ModelKind::Markov
+        );
+        // unknown backends are rejected
+        let f = Flags::parse(&s(&["run", "--model", "magic"])).unwrap();
         assert!(cfg_from_flags(&f).is_err());
     }
 

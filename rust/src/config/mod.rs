@@ -10,6 +10,7 @@ pub mod toml_lite;
 pub use toml_lite::{TomlDoc, TomlValue};
 
 use crate::datasets::DatasetKind;
+use crate::model::ModelKind;
 use crate::shedding::ShedderKind;
 
 /// Fully resolved experiment configuration (see `examples/configs/`).
@@ -37,6 +38,9 @@ pub struct ExperimentConfig {
     pub lb_ms: f64,
     /// shedding strategy
     pub shedder: ShedderKind,
+    /// utility-model backend (`markov` = the paper's Markov-reward
+    /// model, `freq` = the frequency-only predictor)
+    pub model: ModelKind,
     /// per-query weights override (empty = all 1.0)
     pub weights: Vec<f64>,
     /// per-query check-cost factors (Fig. 8's τ ratios; empty = 1.0)
@@ -68,6 +72,7 @@ impl Default for ExperimentConfig {
             rate: 1.2,
             lb_ms: 1.0,
             shedder: ShedderKind::PSpice,
+            model: ModelKind::Markov,
             weights: Vec::new(),
             cost_factors: Vec::new(),
             retrain_every: 0,
@@ -117,6 +122,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str(section, "shedder") {
             cfg.shedder = v.parse()?;
+        }
+        if let Some(v) = doc.get_str(section, "model") {
+            cfg.model = v.parse()?;
         }
         if let Some(v) = doc.get_array(section, "weights") {
             cfg.weights = v;
@@ -184,8 +192,17 @@ mod tests {
         assert_eq!(cfg.query, "q2");
         assert_eq!(cfg.rate, 1.2);
         assert_eq!(cfg.shedder, ShedderKind::PSpice);
+        assert_eq!(cfg.model, ModelKind::Markov);
         assert_eq!(cfg.shards, 1);
         assert_eq!(cfg.batch, 256);
+    }
+
+    #[test]
+    fn model_kind_parses() {
+        let cfg =
+            ExperimentConfig::from_toml("[experiment]\nmodel = \"freq\"\n").unwrap();
+        assert_eq!(cfg.model, ModelKind::Freq);
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel = \"magic\"\n").is_err());
     }
 
     #[test]

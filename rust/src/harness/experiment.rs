@@ -29,7 +29,8 @@ use crate::config::ExperimentConfig;
 use crate::datasets::{BusGen, DatasetKind, SoccerGen, StockGen};
 use crate::events::{Event, EventStream};
 use crate::metrics::{LatencyTracker, QorAccounting};
-use crate::model::{ModelBuilder, ModelConfig};
+use crate::model::plane::train_from_operator;
+use crate::model::{ModelConfig, UtilityModel};
 use crate::operator::Operator;
 use crate::pipeline::Pipeline;
 use crate::query::builtin;
@@ -196,17 +197,21 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
 
     // ---- phase 2: calibrate + train --------------------------------
     let (op, detector) = calibrate(cfg, &queries, &trace)?;
-    let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
-    let tables = builder.build(&op)?;
-    let model_build_secs = builder.last_build_secs;
-    let engine = builder.engine_name();
+    // train through the model plane: --model picks the UtilityModel
+    // backend (markov = the paper's Markov-reward builder, freq = the
+    // frequency-only predictor)
+    let mut model = cfg.model.build(ModelConfig::default());
+    let tables = train_from_operator(model.as_mut(), &op)?;
+    let model_build_secs = model.last_train_secs();
+    let engine = model.engine();
     // only utility-ranking strategies get tables installed on the
     // state, and pSPICE--'s differ from the reporting build (no
     // processing-time term)
     let strategy_tables = if !cfg.shedder.needs_tables() {
         Vec::new()
     } else if !cfg.shedder.model_config().use_tau {
-        ModelBuilder::with_auto_engine(cfg.shedder.model_config()).build(&op)?
+        let mut ablation = cfg.model.build(cfg.shedder.model_config());
+        train_from_operator(ablation.as_mut(), &op)?
     } else {
         tables
     };
@@ -230,6 +235,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
         .seed(cfg.seed)
         .key_slot(cfg.dataset.key_slot())
         .cost_factors(cfg.cost_factors.clone())
+        .model(cfg.model)
         .retrain(cfg.retrain_every, cfg.drift_threshold)
         .arrivals(RateSource::from_capacity(capacity_ns, cfg.rate, 0.0))
         .source(trace[warmup..].to_vec())
@@ -283,6 +289,7 @@ mod tests {
             rate: 1.4,
             lb_ms: 0.05,
             shedder: ShedderKind::PSpice,
+            model: crate::model::ModelKind::Markov,
             weights: Vec::new(),
             cost_factors: Vec::new(),
             retrain_every: 0,

@@ -79,6 +79,7 @@ fn base_cfg(query: &str, opts: &FigureOpts) -> ExperimentConfig {
         rate: 1.2,
         lb_ms: 0.5,
         shedder: ShedderKind::PSpice,
+        model: crate::model::ModelKind::Markov,
         weights: Vec::new(),
         cost_factors: Vec::new(),
         retrain_every: 0,

@@ -33,7 +33,7 @@
 //! | [`windows`] | count/time/slide window policies and manager |
 //! | [`operator`] | the CEP operator: match loop, observations, cost model, the [`operator::OperatorState`] abstraction |
 //! | [`shedding`] | batch-first [`shedding::Shedder`] strategies (pSPICE / PM-BL / E-BL) + overload detector + the [`shedding::ShedderKind::build`] factory |
-//! | [`model`] | observation stats → Markov model → utility tables |
+//! | [`model`] | observation stats → utility tables, behind the versioned model plane ([`model::UtilityModel`] trainers, epoch-numbered [`model::TableSet`] snapshots, the [`model::ModelController`] retrain loop) |
 //! | [`runtime`] | model engines (PJRT/AOT behind the `xla` feature, rust fallback) + the sharded operator runtime |
 //! | [`pipeline`] | the engine façade: [`pipeline::PipelineBuilder`] → [`pipeline::Pipeline`] (`prime` / `feed` / `run_to_end`) over 1..N shards |
 //! | [`sim`] | virtual-time source/queue for deterministic overload runs |

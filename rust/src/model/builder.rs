@@ -17,6 +17,7 @@ use crate::linalg::markov::compose_bin;
 use crate::operator::{ObservationHub, Operator};
 use crate::runtime::ModelEngine;
 
+use super::plane::{TrainingView, UtilityModel};
 use super::utility::UtilityTable;
 
 /// Model-builder configuration.
@@ -78,31 +79,42 @@ impl ModelBuilder {
 
     /// Expected window size in events for each query of an operator
     /// (count windows exact; time windows via the operator's rate
-    /// estimate).
+    /// estimate).  Delegates to [`Operator::expected_ws`].
     pub fn expected_ws(op: &Operator) -> Vec<u64> {
-        op.queries
-            .iter()
-            .map(|cq| match cq.query.window {
-                crate::query::WindowSpec::Count(ws) => ws,
-                crate::query::WindowSpec::TimeMs(ms) => {
-                    (ms as f64 * op.events_per_ms()).ceil().max(1.0) as u64
-                }
-            })
-            .collect()
+        op.expected_ws()
     }
 
     /// Build utility tables for every query of `op` from its current
-    /// observation counts.
+    /// observation counts (the single-operator convenience around
+    /// [`ModelBuilder::build_view`]).
     pub fn build(&mut self, op: &Operator) -> crate::Result<Vec<UtilityTable>> {
+        let ws = op.expected_ws();
+        let weights: Vec<f64> = op.queries.iter().map(|cq| cq.query.weight).collect();
+        self.build_view(&TrainingView {
+            hub: &op.obs,
+            ws: &ws,
+            weights: &weights,
+        })
+    }
+
+    /// Build utility tables from harvested training inputs — the
+    /// [`UtilityModel`] training entry point, independent of where the
+    /// observations came from (a local operator or a merged sharded
+    /// harvest).
+    pub fn build_view(&mut self, view: &TrainingView<'_>) -> crate::Result<Vec<UtilityTable>> {
+        anyhow::ensure!(
+            view.hub.queries.len() == view.ws.len()
+                && view.ws.len() == view.weights.len(),
+            "training view shape mismatch"
+        );
         let start = std::time::Instant::now();
-        let ws = Self::expected_ws(op);
         // one shared bin count so all queries batch into one engine call
-        let max_ws = *ws.iter().max().expect("at least one query");
+        let max_ws = *view.ws.iter().max().expect("at least one query");
         let bs = (max_ws as f64 / self.cfg.max_bins as f64).ceil().max(1.0) as u64;
         let nbins = (max_ws as f64 / bs as f64).ceil() as usize;
 
-        let chains: Vec<_> = op
-            .obs
+        let chains: Vec<_> = view
+            .hub
             .queries
             .iter()
             .map(|qs| {
@@ -114,19 +126,40 @@ impl ModelBuilder {
         let tables = self.engine.build_tables(&chains, nbins)?;
         let out = tables
             .iter()
-            .zip(&op.queries)
-            .map(|(tab, cq)| {
-                UtilityTable::from_tables(tab, cq.query.weight, bs, self.cfg.use_tau)
-            })
+            .zip(view.weights)
+            .map(|(tab, &w)| UtilityTable::from_tables(tab, w, bs, self.cfg.use_tau))
             .collect();
         self.last_build_secs = start.elapsed().as_secs_f64();
         log::debug!(
             "model build: {} queries, bs={bs}, nbins={nbins}, {:.3}s via {}",
-            op.queries.len(),
+            view.weights.len(),
             self.last_build_secs,
             self.engine.name()
         );
         Ok(out)
+    }
+}
+
+/// The canonical [`UtilityModel`]: the paper's Markov-reward trainer.
+impl UtilityModel for ModelBuilder {
+    fn name(&self) -> &'static str {
+        "markov"
+    }
+
+    fn engine(&self) -> &'static str {
+        self.engine_name()
+    }
+
+    fn ready(&self, hub: &ObservationHub) -> bool {
+        ModelBuilder::ready(self, hub)
+    }
+
+    fn train(&mut self, view: &TrainingView<'_>) -> crate::Result<Vec<UtilityTable>> {
+        self.build_view(view)
+    }
+
+    fn last_train_secs(&self) -> f64 {
+        self.last_build_secs
     }
 }
 

@@ -2,15 +2,26 @@
 //!
 //! * [`utility`] — the `UT_q` tables (paper §III-C-3): per-state,
 //!   per-remaining-events-bin utilities with O(1) interpolated lookup,
-//! * [`builder`] — the model builder (paper Fig. 2): learns `T_q` and
-//!   `R_q` from observations, composes per-bin chains, runs the model
-//!   engine (AOT/PJRT or rust fallback) and assembles the tables,
-//! * [`retrain`] — drift detection on the transition matrix (§III-D).
+//! * [`builder`] — the Markov model builder (paper Fig. 2): learns
+//!   `T_q` and `R_q` from observations, composes per-bin chains, runs
+//!   the model engine (AOT/PJRT or rust fallback) and assembles the
+//!   tables,
+//! * [`retrain`] — drift detection on the transition matrix (§III-D),
+//! * [`plane`] — the versioned model plane: the [`UtilityModel`]
+//!   trainer trait (Markov + frequency-only backends), the immutable
+//!   epoch-numbered [`TableSet`] snapshot every operator state reads
+//!   through, and the [`ModelController`] train→snapshot→publish loop
+//!   driving drift retraining on any backend, sharded included.
 
 pub mod builder;
+pub mod plane;
 pub mod retrain;
 pub mod utility;
 
 pub use builder::{ModelBuilder, ModelConfig};
+pub use plane::{
+    FrequencyModel, KeyUtilityTable, ModelController, ModelHarvest, ModelKind, TableSet,
+    TrainingView, UtilityModel,
+};
 pub use retrain::DriftDetector;
 pub use utility::UtilityTable;

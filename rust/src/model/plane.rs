@@ -1,0 +1,684 @@
+//! The versioned model plane: the API seam between *learning* a
+//! utility model and *reading* it from the shedding hot path.
+//!
+//! Three pieces (paper §III-C/§III-D, generalized the way hSPICE and
+//! gSPICE vary it):
+//!
+//! * [`UtilityModel`] — the trainer abstraction: consume aggregated
+//!   [`ObservationHub`] statistics (via a [`TrainingView`]) and produce
+//!   per-query [`UtilityTable`]s, the O(1) interpolated-lookup artifact
+//!   the shedder reads.  Backends: the canonical Markov-chain builder
+//!   ([`crate::model::ModelBuilder`], `ModelKind::Markov`) and the
+//!   cheap frequency-only [`FrequencyModel`] (`ModelKind::Freq`).
+//! * [`TableSet`] — an immutable, epoch-numbered model snapshot
+//!   (utility tables + per-query check-cost factors + expected window
+//!   sizes + E-BL's [`KeyUtilityTable`]), `Arc`-shared between the
+//!   coordinator, every worker shard, and the strategies.  Operator
+//!   states install whole snapshots
+//!   ([`OperatorState::install_table_set`]) and report the epoch they
+//!   are reading ([`OperatorState::table_epoch`]); the sharded runtime
+//!   broadcasts the `Arc` to its workers, so a retrain is one
+//!   atomic hot swap, never a field-by-field mutation.
+//! * [`ModelController`] — the train→snapshot→publish loop: harvest
+//!   observations from any backend
+//!   ([`OperatorState::harvest_observations`] — the sharded runtime
+//!   merges per-worker statistics), drift-check them against the
+//!   matrices the live model was built from, and on drift train a
+//!   fresh epoch and publish it to the state.
+//!
+//! # Quickstart
+//!
+//! Mirrors `examples/quickstart`: calibrate an operator, train a model
+//! through the plane, snapshot and install it.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use pspice::datasets::BusGen;
+//! use pspice::events::EventStream;
+//! use pspice::model::plane::train_from_operator;
+//! use pspice::model::{ModelConfig, ModelKind, TableSet};
+//! use pspice::operator::{Operator, OperatorState};
+//! use pspice::query::builtin::q4;
+//!
+//! // 1. calibrate: stream warm-up events through a plain operator so
+//! //    its ObservationHub learns the transition statistics
+//! let mut op = Operator::new(q4(4, 2_000, 250).queries);
+//! for e in BusGen::with_seed(7).take_events(40_000) {
+//!     op.process_event(&e);
+//! }
+//!
+//! // 2. train any UtilityModel backend (swap Markov for Freq freely)
+//! let mut model = ModelKind::Markov.build(ModelConfig::default());
+//! let tables = train_from_operator(model.as_mut(), &op).unwrap();
+//!
+//! // 3. snapshot as an immutable epoch-0 TableSet and hot-swap it in
+//! let set = Arc::new(TableSet::initial(tables, vec![1.0], None));
+//! op.install_table_set(Arc::clone(&set));
+//! assert_eq!(op.table_epoch(), 0);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::events::Event;
+use crate::nfa::CompiledQuery;
+use crate::operator::{ObservationHub, OperatorState};
+use crate::query::{Predicate, Query};
+
+use super::builder::{ModelBuilder, ModelConfig};
+use super::retrain::DriftDetector;
+use super::utility::UtilityTable;
+
+/// Borrowed training inputs for one [`UtilityModel::train`] call: the
+/// aggregated observation statistics plus the per-query expected window
+/// sizes and importance weights (all in global query order, one entry
+/// per query).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainingView<'a> {
+    /// aggregated `<q, s, s', t>` statistics
+    pub hub: &'a ObservationHub,
+    /// expected window size in events per query (count windows exact,
+    /// time windows via the operator's rate estimate)
+    pub ws: &'a [u64],
+    /// per-query importance weights `w_q`
+    pub weights: &'a [f64],
+}
+
+/// A trainable utility model: the *training* half of the model plane.
+///
+/// Training consumes [`ObservationHub`] statistics through a
+/// [`TrainingView`] and produces per-query [`UtilityTable`]s — the
+/// *inference* half is the tables' own O(1) interpolated
+/// [`UtilityTable::lookup`], which the shedder reads through an
+/// installed [`TableSet`].  Implementations: the canonical Markov-chain
+/// [`crate::model::ModelBuilder`] and the frequency-only
+/// [`FrequencyModel`]; future predictors (state-aware, learned,
+/// per-type) plug in here.
+pub trait UtilityModel {
+    /// Short backend name (`"markov"`, `"freq"`; the CLI's `--model`
+    /// values).
+    fn name(&self) -> &'static str;
+
+    /// Execution-engine label for reports (for the Markov backend the
+    /// model-engine name, e.g. `"rust-fallback"` or `"pjrt-aot"`).
+    fn engine(&self) -> &'static str {
+        self.name()
+    }
+
+    /// Enough observations to train? (the paper's η)
+    fn ready(&self, hub: &ObservationHub) -> bool;
+
+    /// Train utility tables from aggregated observations (one table per
+    /// query, global order).
+    fn train(&mut self, view: &TrainingView<'_>) -> crate::Result<Vec<UtilityTable>>;
+
+    /// Wall-clock seconds of the last [`UtilityModel::train`] call
+    /// (Fig. 9b's model-build overhead).
+    fn last_train_secs(&self) -> f64;
+}
+
+/// Train a model straight from a calibrated single-threaded operator
+/// (the phase-2 convenience wrapper around [`UtilityModel::train`]).
+pub fn train_from_operator(
+    model: &mut dyn UtilityModel,
+    op: &crate::operator::Operator,
+) -> crate::Result<Vec<UtilityTable>> {
+    let ws = op.expected_ws();
+    let weights: Vec<f64> = op.queries.iter().map(|cq| cq.query.weight).collect();
+    model.train(&TrainingView {
+        hub: &op.obs,
+        ws: &ws,
+        weights: &weights,
+    })
+}
+
+/// Which [`UtilityModel`] backend to instantiate (the CLI's `--model`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// the paper's Markov-reward model (completion probability +
+    /// remaining processing time through the model engine)
+    Markov,
+    /// frequency-only advance probabilities ([`FrequencyModel`])
+    Freq,
+}
+
+impl ModelKind {
+    /// Canonical backend name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Markov => "markov",
+            ModelKind::Freq => "freq",
+        }
+    }
+
+    /// Instantiate the backend.  The `use_tau` and `max_bins` fields of
+    /// [`ModelConfig`] only affect the Markov backend; η (`eta`) gates
+    /// both.
+    pub fn build(self, cfg: ModelConfig) -> Box<dyn UtilityModel> {
+        match self {
+            ModelKind::Markov => Box::new(ModelBuilder::with_auto_engine(cfg)),
+            ModelKind::Freq => Box::new(FrequencyModel::new(cfg.eta)),
+        }
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "markov" => Ok(ModelKind::Markov),
+            "freq" | "frequency" => Ok(ModelKind::Freq),
+            other => anyhow::bail!("unknown model {other:?} (expected markov|freq)"),
+        }
+    }
+}
+
+/// The frequency-only utility model: a trait-proving second backend
+/// that skips the Markov-reward machinery entirely.
+///
+/// A PM at state `s` scores `w_q · Π_{k≥s} p_adv(k)`, where `p_adv(k)`
+/// is the observed frequency of *forward* transitions out of state `k`
+/// — a crude completion-likelihood estimate with no remaining-time term
+/// and no remaining-events binning (one bin spanning the whole window,
+/// so [`UtilityTable::lookup`] still decays the utility toward zero as
+/// the window runs out).  Roughly the spirit of gSPICE's cheapest
+/// learned predictors: strictly less informed than the Markov model,
+/// far cheaper to train.
+#[derive(Debug, Clone)]
+pub struct FrequencyModel {
+    /// observations required before the first train (the paper's η)
+    pub eta: u64,
+    last_train_secs: f64,
+}
+
+impl FrequencyModel {
+    /// Model requiring `eta` observations before it trains.
+    pub fn new(eta: u64) -> Self {
+        FrequencyModel {
+            eta,
+            last_train_secs: 0.0,
+        }
+    }
+}
+
+impl UtilityModel for FrequencyModel {
+    fn name(&self) -> &'static str {
+        "freq"
+    }
+
+    fn ready(&self, hub: &ObservationHub) -> bool {
+        hub.total() >= self.eta
+    }
+
+    fn train(&mut self, view: &TrainingView<'_>) -> crate::Result<Vec<UtilityTable>> {
+        anyhow::ensure!(
+            view.hub.queries.len() == view.ws.len()
+                && view.ws.len() == view.weights.len(),
+            "training view shape mismatch"
+        );
+        let start = std::time::Instant::now();
+        let mut out = Vec::with_capacity(view.hub.queries.len());
+        for (qs, (&ws, &w)) in view
+            .hub
+            .queries
+            .iter()
+            .zip(view.ws.iter().zip(view.weights))
+        {
+            let m = qs.m;
+            // forward-transition frequency per non-final state
+            let mut p_adv = vec![0.0f64; m];
+            for s in 0..m.saturating_sub(1) {
+                let row = &qs.counts[s];
+                let n: u64 = row.iter().sum();
+                if n > 0 {
+                    let fwd: u64 = row[s + 1..].iter().sum();
+                    p_adv[s] = fwd as f64 / n as f64;
+                }
+            }
+            // utility[s] = w · Π_{k=s}^{m-2} p_adv(k), built back to
+            // front so each state costs one multiply
+            let mut row = vec![0.0f64; m];
+            let mut prod = 1.0f64;
+            for s in (0..m).rev() {
+                if s < m - 1 {
+                    prod *= p_adv[s];
+                }
+                row[s] = w * prod;
+            }
+            out.push(UtilityTable {
+                m,
+                bs: ws.max(1),
+                rows: vec![row],
+            });
+        }
+        self.last_train_secs = start.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn last_train_secs(&self) -> f64 {
+        self.last_train_secs
+    }
+}
+
+/// E-BL's key-slot utility table: per key *value* (stock symbol /
+/// player id / bus id), how often the operator's patterns reference it.
+/// Built once from the query set and shared (`Arc`) between the
+/// [`crate::shedding::EventBaselineShedder`] and the [`TableSet`]
+/// snapshot — one allocation, two readers.  It is static per query set
+/// (patterns don't drift), so retrains carry the same `Arc` forward;
+/// the snapshot holds it as part of the complete model state, while the
+/// strategy reads its own clone of the `Arc`.
+#[derive(Debug, Clone, Default)]
+pub struct KeyUtilityTable {
+    slot: usize,
+    utilities: HashMap<i64, f64>,
+}
+
+impl KeyUtilityTable {
+    /// Build from compiled queries: each reference to a concrete key
+    /// value in a pattern raises that value's utility (paper §IV-A: "an
+    /// event type receives a higher utility proportional to its
+    /// repetition in patterns and in windows").
+    pub fn from_compiled(key_slot: usize, queries: &[CompiledQuery]) -> Self {
+        let mut utilities: HashMap<i64, f64> = HashMap::new();
+        let mut bump = |preds: &[Predicate]| {
+            for p in preds {
+                match p {
+                    Predicate::AttrCmp { slot, value, .. } if *slot == key_slot => {
+                        *utilities.entry(*value as i64).or_insert(0.0) += 1.0;
+                    }
+                    Predicate::AttrIn { slot, values } if *slot == key_slot => {
+                        for v in values {
+                            *utilities.entry(*v as i64).or_insert(0.0) += 1.0;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        };
+        for cq in queries {
+            for s in &cq.head {
+                bump(&s.preds);
+            }
+            if let Some(g) = &cq.any {
+                bump(&g.spec.preds);
+            }
+        }
+        KeyUtilityTable {
+            slot: key_slot,
+            utilities,
+        }
+    }
+
+    /// Compile `queries` and build the table
+    /// (see [`KeyUtilityTable::from_compiled`]).
+    pub fn from_queries(queries: &[Query], key_slot: usize) -> Self {
+        let compiled: Vec<CompiledQuery> = queries
+            .iter()
+            .cloned()
+            .map(CompiledQuery::compile)
+            .collect();
+        Self::from_compiled(key_slot, &compiled)
+    }
+
+    /// The attribute slot holding the correlation key.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Utility of an event's key value (0 for values no pattern uses).
+    #[inline]
+    pub fn utility(&self, e: &Event) -> f64 {
+        let key = e.attrs[self.slot] as i64;
+        self.utilities.get(&key).copied().unwrap_or(0.0)
+    }
+
+    /// Distinct key values with non-zero utility.
+    pub fn len(&self) -> usize {
+        self.utilities.len()
+    }
+
+    /// No key value has utility?
+    pub fn is_empty(&self) -> bool {
+        self.utilities.is_empty()
+    }
+}
+
+/// An immutable, epoch-numbered model snapshot: everything the shedding
+/// hot path reads, swapped atomically as one `Arc`.
+///
+/// Epoch 0 is the calibration-time install; every drift retrain bumps
+/// the epoch by one ([`TableSet::next_epoch`]).  `Operator` and
+/// `ShardedOperator` report the epoch they are currently reading via
+/// [`OperatorState::table_epoch`]; the sharded runtime broadcasts the
+/// `Arc` to every worker, so all shards observe the same epoch between
+/// dispatches.
+#[derive(Debug, Clone)]
+pub struct TableSet {
+    /// snapshot version: 0 = initial install, +1 per retrain
+    pub epoch: u64,
+    /// per-query utility tables (global order; empty = strategies that
+    /// never rank by utility, every PM scores 0)
+    pub tables: Vec<UtilityTable>,
+    /// per-query check-cost factors (global order; empty = leave the
+    /// state's current factors untouched)
+    pub check_factors: Vec<f64>,
+    /// expected window sizes the tables were trained at — snapshot
+    /// *metadata* for audits and tests, not consumed by the operator
+    /// (empty for externally built tables)
+    pub ws: Vec<u64>,
+    /// E-BL's key-slot utilities: the same `Arc` the
+    /// [`crate::shedding::EventBaselineShedder`] was built with, carried
+    /// so the snapshot is the complete model state.  Pattern utilities
+    /// are static per query set, so successor epochs carry it unchanged
+    /// — swapping in a *different* table here does NOT rewire an
+    /// already-built E-BL (it keeps its own `Arc` clone).
+    pub key: Option<Arc<KeyUtilityTable>>,
+}
+
+impl TableSet {
+    /// The epoch-0 snapshot installed at pipeline build time.
+    pub fn initial(
+        tables: Vec<UtilityTable>,
+        check_factors: Vec<f64>,
+        key: Option<Arc<KeyUtilityTable>>,
+    ) -> Self {
+        TableSet {
+            epoch: 0,
+            tables,
+            check_factors,
+            ws: Vec::new(),
+            key,
+        }
+    }
+
+    /// The successor snapshot after a retrain: fresh tables, epoch + 1,
+    /// cost factors and key table carried over unchanged.
+    pub fn next_epoch(&self, tables: Vec<UtilityTable>, ws: Vec<u64>) -> Self {
+        TableSet {
+            epoch: self.epoch + 1,
+            tables,
+            check_factors: self.check_factors.clone(),
+            ws,
+            key: self.key.clone(),
+        }
+    }
+
+    /// Table of query `q`, if the snapshot carries tables.
+    pub fn table(&self, q: usize) -> Option<&UtilityTable> {
+        self.tables.get(q)
+    }
+}
+
+/// Reusable buffers for [`OperatorState::harvest_observations`]: the
+/// merged observation statistics plus the per-query expected window
+/// sizes (global query order — the sharded runtime collects each
+/// worker's local statistics into the global slots; queries are
+/// partitioned, so merging is placement, never summation).
+#[derive(Debug, Clone)]
+pub struct ModelHarvest {
+    /// merged per-query statistics
+    pub hub: ObservationHub,
+    /// expected window size in events per query
+    pub ws: Vec<u64>,
+}
+
+impl Default for ModelHarvest {
+    fn default() -> Self {
+        ModelHarvest {
+            hub: ObservationHub::new(&[]),
+            ws: Vec::new(),
+        }
+    }
+}
+
+/// The train→snapshot→publish loop (paper §III-D, backend-agnostic).
+///
+/// Owns the [`UtilityModel`], the [`DriftDetector`] baseline and the
+/// current [`TableSet`]; [`ModelController::check_and_retrain`]
+/// harvests observations from the state (single-threaded or sharded),
+/// drift-checks them, and on drift trains a fresh epoch and publishes
+/// it through [`OperatorState::install_table_set`] — on the sharded
+/// runtime that is the `UpdateTables` broadcast to every worker.
+pub struct ModelController {
+    model: Box<dyn UtilityModel>,
+    threshold: f64,
+    weights: Vec<f64>,
+    current: Arc<TableSet>,
+    drift: Option<DriftDetector>,
+    harvest: ModelHarvest,
+    retrains: u32,
+}
+
+impl ModelController {
+    /// Controller over `model` with the given drift `threshold`,
+    /// per-query `weights`, and the already-installed `initial`
+    /// snapshot (the drift baseline is taken later, at
+    /// [`ModelController::begin`]).
+    pub fn new(
+        model: Box<dyn UtilityModel>,
+        threshold: f64,
+        weights: Vec<f64>,
+        initial: Arc<TableSet>,
+    ) -> Self {
+        ModelController {
+            model,
+            threshold,
+            weights,
+            current: initial,
+            drift: None,
+            harvest: ModelHarvest::default(),
+            retrains: 0,
+        }
+    }
+
+    /// Install the controller's current snapshot on a state (used when
+    /// the controller, not the pipeline, owns the install).
+    pub fn install_initial(&mut self, state: &mut dyn OperatorState) {
+        state.install_table_set(Arc::clone(&self.current));
+    }
+
+    /// Snapshot the drift baseline from the state's current statistics
+    /// (call once, at the calibration→measurement boundary).
+    pub fn begin(&mut self, state: &dyn OperatorState) {
+        state.harvest_observations(&mut self.harvest);
+        self.drift = Some(DriftDetector::snapshot(&self.harvest.hub, self.threshold));
+    }
+
+    /// Harvest → drift-check → (on drift) train a fresh epoch and
+    /// publish it to the state.  Returns whether a retrain happened.
+    /// A no-op until [`ModelController::begin`] has set the baseline.
+    pub fn check_and_retrain(
+        &mut self,
+        state: &mut dyn OperatorState,
+    ) -> crate::Result<bool> {
+        let Some(d) = &self.drift else {
+            return Ok(false);
+        };
+        state.harvest_observations(&mut self.harvest);
+        let (_mse, drifted) = d.check(&self.harvest.hub);
+        if !drifted {
+            return Ok(false);
+        }
+        // honor the model's η gate: a drift verdict on too few
+        // observations (e.g. the forced-drift shape-change path) must
+        // not replace working tables with ones trained on noise — the
+        // next checkpoint retries once enough statistics accumulate
+        if !self.model.ready(&self.harvest.hub) {
+            return Ok(false);
+        }
+        let view = TrainingView {
+            hub: &self.harvest.hub,
+            ws: &self.harvest.ws,
+            weights: &self.weights,
+        };
+        let tables = self.model.train(&view)?;
+        let next = Arc::new(self.current.next_epoch(tables, self.harvest.ws.clone()));
+        self.current = Arc::clone(&next);
+        state.install_table_set(next);
+        self.drift = Some(DriftDetector::snapshot(&self.harvest.hub, self.threshold));
+        self.retrains += 1;
+        Ok(true)
+    }
+
+    /// The snapshot the controller last published (or was given).
+    pub fn table_set(&self) -> &Arc<TableSet> {
+        &self.current
+    }
+
+    /// Epoch of the current snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.current.epoch
+    }
+
+    /// Retrains performed so far.
+    pub fn retrains(&self) -> u32 {
+        self.retrains
+    }
+
+    /// The model backend's name (`"markov"` / `"freq"`).
+    pub fn model_name(&self) -> &'static str {
+        self.model.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::BusGen;
+    use crate::events::EventStream;
+    use crate::operator::Operator;
+    use crate::query::builtin::q4;
+
+    fn trained_operator() -> Operator {
+        let mut op = Operator::new(q4(4, 2_000, 400).queries);
+        let mut g = BusGen::with_seed(1);
+        for _ in 0..30_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        op
+    }
+
+    #[test]
+    fn model_kind_round_trips_and_builds() {
+        for kind in [ModelKind::Markov, ModelKind::Freq] {
+            assert_eq!(kind.name().parse::<ModelKind>().unwrap(), kind);
+            let model = kind.build(ModelConfig::default());
+            assert_eq!(model.name(), kind.name());
+        }
+        assert!("magic".parse::<ModelKind>().is_err());
+        assert_eq!("frequency".parse::<ModelKind>().unwrap(), ModelKind::Freq);
+    }
+
+    #[test]
+    fn frequency_model_trains_monotone_tables() {
+        let op = trained_operator();
+        let mut model = FrequencyModel::new(100);
+        assert!(model.ready(&op.obs));
+        let tables = train_from_operator(&mut model, &op).unwrap();
+        assert_eq!(tables.len(), 1);
+        let ut = &tables[0];
+        assert_eq!(ut.m, 5);
+        assert_eq!(ut.rows.len(), 1, "one bin spanning the window");
+        // utilities are finite, non-negative, and monotone in state:
+        // a PM closer to completion is never worth less
+        for s in 0..ut.m {
+            let u = ut.rows[0][s];
+            assert!(u.is_finite() && u >= 0.0, "s={s} u={u}");
+            if s > 0 {
+                assert!(ut.rows[0][s] + 1e-12 >= ut.rows[0][s - 1], "s={s}");
+            }
+        }
+        // lookup decays toward zero as the window runs out
+        assert!(model.last_train_secs() >= 0.0);
+        assert!(ut.lookup(1, 100) <= ut.lookup(1, 2_000) + 1e-12);
+        assert_eq!(ut.lookup(1, 0), 0.0);
+    }
+
+    #[test]
+    fn frequency_model_scales_with_weights() {
+        let op = trained_operator();
+        let hub = &op.obs;
+        let ws = op.expected_ws();
+        let mut model = FrequencyModel::new(0);
+        let w1 = model
+            .train(&TrainingView {
+                hub,
+                ws: &ws,
+                weights: &[1.0],
+            })
+            .unwrap();
+        let w3 = model
+            .train(&TrainingView {
+                hub,
+                ws: &ws,
+                weights: &[3.0],
+            })
+            .unwrap();
+        for s in 0..w1[0].m {
+            assert!((w3[0].rows[0][s] - 3.0 * w1[0].rows[0][s]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn table_set_epochs_advance_and_carry_config() {
+        let key = Arc::new(KeyUtilityTable::default());
+        let set = TableSet::initial(Vec::new(), vec![1.0, 2.0], Some(key));
+        assert_eq!(set.epoch, 0);
+        assert!(set.table(0).is_none());
+        let next = set.next_epoch(Vec::new(), vec![10, 20]);
+        assert_eq!(next.epoch, 1);
+        assert_eq!(next.check_factors, vec![1.0, 2.0]);
+        assert_eq!(next.ws, vec![10, 20]);
+        assert!(next.key.is_some());
+        assert_eq!(next.next_epoch(Vec::new(), Vec::new()).epoch, 2);
+    }
+
+    #[test]
+    fn key_utility_table_counts_pattern_references() {
+        let queries = crate::query::builtin::q1(1_000).queries;
+        let table = KeyUtilityTable::from_queries(&queries, crate::datasets::stock::A_SYMBOL);
+        assert!(!table.is_empty());
+        assert_eq!(table.slot(), crate::datasets::stock::A_SYMBOL);
+        for sym in crate::query::builtin::PATTERN_RANKS {
+            let e = Event::new(0, 0, 0, &[sym as f64, 1.0, 1.0]);
+            assert!(table.utility(&e) >= 2.0, "sym={sym}");
+        }
+        let e = Event::new(0, 0, 0, &[400.0, 1.0, 1.0]);
+        assert_eq!(table.utility(&e), 0.0);
+    }
+
+    #[test]
+    fn controller_retrains_on_drift_and_bumps_epoch() {
+        let mut op = trained_operator();
+        let initial = Arc::new(TableSet::initial(Vec::new(), vec![1.0], None));
+        let mut ctl = ModelController::new(
+            ModelKind::Freq.build(ModelConfig {
+                eta: 100,
+                ..ModelConfig::default()
+            }),
+            1e-12,
+            vec![1.0],
+            Arc::clone(&initial),
+        );
+        ctl.install_initial(&mut op);
+        assert_eq!(op.table_epoch(), 0);
+        // before begin(): no baseline, never retrains
+        assert!(!ctl.check_and_retrain(&mut op).unwrap());
+        ctl.begin(&op);
+        // unchanged statistics: no drift at any threshold
+        assert!(!ctl.check_and_retrain(&mut op).unwrap());
+        // more observations shift the learned matrix past the tiny
+        // threshold: the controller trains and publishes epoch 1
+        let mut g = BusGen::with_seed(2);
+        for _ in 0..10_000 {
+            op.process_event(&g.next_event().unwrap());
+        }
+        assert!(ctl.check_and_retrain(&mut op).unwrap());
+        assert_eq!(ctl.epoch(), 1);
+        assert_eq!(ctl.retrains(), 1);
+        assert_eq!(op.table_epoch(), 1);
+        assert_eq!(ctl.table_set().tables.len(), 1);
+        assert_eq!(ctl.model_name(), "freq");
+    }
+}

@@ -30,13 +30,26 @@ impl DriftDetector {
 
     /// Check current statistics against the baseline.  Returns the
     /// maximum per-query MSE and whether it crossed the threshold.
+    ///
+    /// A hub whose shape no longer matches the baseline — a different
+    /// query count, or a query whose transition matrix changed
+    /// dimension after a retrain/model swap — is treated as maximal
+    /// drift (`(f64::INFINITY, true)`) instead of feeding mismatched
+    /// shapes into [`Mat::mse`] (which asserts) or silently truncating
+    /// the `zip`: the retrain this forces re-snapshots the baseline at
+    /// the new shape, so the detector self-heals.
     pub fn check(&self, hub: &ObservationHub) -> (f64, bool) {
-        let max_mse = hub
-            .queries
-            .iter()
-            .zip(&self.baseline)
-            .map(|(q, base)| q.transition_matrix().mse(base))
-            .fold(0.0, f64::max);
+        if hub.queries.len() != self.baseline.len() {
+            return (f64::INFINITY, true);
+        }
+        let mut max_mse = 0.0f64;
+        for (q, base) in hub.queries.iter().zip(&self.baseline) {
+            let t = q.transition_matrix();
+            if t.rows() != base.rows() || t.cols() != base.cols() {
+                return (f64::INFINITY, true);
+            }
+            max_mse = max_mse.max(t.mse(base));
+        }
         (max_mse, max_mse > self.threshold)
     }
 }
@@ -72,6 +85,25 @@ mod tests {
         let (mse, drift) = det.check(&hub2);
         assert!(mse < 1e-12);
         assert!(!drift);
+    }
+
+    #[test]
+    fn shape_mismatch_is_maximal_drift_not_a_panic() {
+        // a query whose transition matrix changed dimension after
+        // retraining (or a hub with a different query count) must read
+        // as drifted, never panic inside Mat::mse
+        let hub3 = hub_with(&[(0, 0, 5), (0, 1, 5)]);
+        let det = DriftDetector::snapshot(&hub3, 0.5);
+        let mut hub4 = ObservationHub::new(&[4]);
+        hub4.queries[0].record(0, 1, 1.0);
+        let (mse, drifted) = det.check(&hub4);
+        assert!(drifted, "dimension change must force a retrain");
+        assert!(mse.is_infinite());
+        // different query count: same verdict
+        let hub2q = ObservationHub::new(&[3, 3]);
+        let (mse2, drifted2) = det.check(&hub2q);
+        assert!(drifted2);
+        assert!(mse2.is_infinite());
     }
 
     #[test]

@@ -93,6 +93,17 @@ impl QueryStats {
         }
         self.total = 0;
     }
+
+    /// Overwrite this instance from `src`, reusing its allocations —
+    /// the harvest path copies whole hubs at drift-check cadence, and
+    /// `Vec::clone_from` recycles the row buffers where a plain
+    /// `clone()` would reallocate them every checkpoint.
+    pub fn assign_from(&mut self, src: &QueryStats) {
+        self.m = src.m;
+        self.counts.clone_from(&src.counts);
+        self.reward_ns.clone_from(&src.reward_ns);
+        self.total = src.total;
+    }
 }
 
 /// Statistics for all queries of an operator.
@@ -116,6 +127,19 @@ impl ObservationHub {
     /// Total observations across queries.
     pub fn total(&self) -> u64 {
         self.queries.iter().map(|q| q.total).sum()
+    }
+
+    /// Overwrite this hub from `src`, reusing allocations (see
+    /// [`QueryStats::assign_from`]).
+    pub fn assign_from(&mut self, src: &ObservationHub) {
+        self.enabled = src.enabled;
+        self.queries.truncate(src.queries.len());
+        for (dst, s) in self.queries.iter_mut().zip(&src.queries) {
+            dst.assign_from(s);
+        }
+        for s in &src.queries[self.queries.len()..] {
+            self.queries.push(s.clone());
+        }
     }
 }
 

@@ -15,11 +15,13 @@
 
 use std::cmp::Ordering;
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::events::{DropMask, Event};
+use crate::model::plane::{ModelHarvest, TableSet};
 use crate::model::UtilityTable;
 use crate::nfa::{CompiledQuery, PartialMatch, StepResult};
-use crate::query::{OpenPolicy, Query};
+use crate::query::{OpenPolicy, Query, WindowSpec};
 use crate::util::Rng;
 use crate::windows::{QueryWindows, Window};
 
@@ -160,9 +162,12 @@ pub struct Operator {
     events_per_ms: f64,
     prev_ts: u64,
     /// per-query utility tables for [`Operator::shed_lowest`]
-    /// (installed via [`OperatorState::install_tables`]; may be empty,
-    /// in which case every PM scores utility 0)
+    /// (installed via [`OperatorState::install_table_set`] or the
+    /// inherent [`Operator::install_tables`]; may be empty, in which
+    /// case every PM scores utility 0)
     tables: Vec<UtilityTable>,
+    /// epoch of the installed [`TableSet`] (0 until one is installed)
+    table_epoch: u64,
     /// scratch buffers reused across shed passes (no hot-path alloc)
     shed_scratch: Vec<PmRef>,
     shed_cells: Vec<ShedCell>,
@@ -198,6 +203,7 @@ impl Operator {
             events_per_ms: 1.0,
             prev_ts: 0,
             tables: Vec::new(),
+            table_epoch: 0,
             shed_scratch: Vec::new(),
             shed_cells: Vec::new(),
             shed_takes: Vec::new(),
@@ -233,6 +239,74 @@ impl Operator {
     /// EWMA estimate of events per millisecond of source time.
     pub fn events_per_ms(&self) -> f64 {
         self.events_per_ms
+    }
+
+    /// Expected window size in events for each query (count windows
+    /// exact; time windows via the rate estimate) — the `ws` inputs of
+    /// a [`crate::model::TrainingView`].
+    pub fn expected_ws(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.expected_ws_into(&mut out);
+        out
+    }
+
+    /// [`Operator::expected_ws`] into a recycled buffer (cleared
+    /// first) — the harvest path runs at drift-check cadence and must
+    /// not reallocate per checkpoint.
+    pub fn expected_ws_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.queries.iter().map(|cq| match cq.query.window {
+            WindowSpec::Count(ws) => ws,
+            WindowSpec::TimeMs(ms) => {
+                (ms as f64 * self.events_per_ms).ceil().max(1.0) as u64
+            }
+        }));
+    }
+
+    /// Epoch of the installed model snapshot (0 until a [`TableSet`]
+    /// is installed).
+    pub fn table_epoch(&self) -> u64 {
+        self.table_epoch
+    }
+
+    /// Apply a model snapshot with an explicit query mapping:
+    /// `local_to_global[l]` is the global index of this operator's
+    /// `l`-th query (identity for the single-threaded operator; the
+    /// shard assignment for a worker).  Empty `tables` clear the
+    /// installed tables; empty `check_factors` leave the cost model
+    /// untouched.
+    pub fn apply_table_set(&mut self, set: &TableSet, local_to_global: &[usize]) {
+        assert_eq!(
+            local_to_global.len(),
+            self.queries.len(),
+            "one mapping entry per local query"
+        );
+        // loud, uniform validation across backends: a partial snapshot
+        // is a caller bug, not something to degrade around
+        if let Some(&max_g) = local_to_global.iter().max() {
+            assert!(
+                set.tables.is_empty() || set.tables.len() > max_g,
+                "table set misses query {max_g}: one table per query"
+            );
+            assert!(
+                set.check_factors.is_empty() || set.check_factors.len() > max_g,
+                "table set misses a check factor for query {max_g}"
+            );
+        }
+        if set.tables.is_empty() {
+            self.tables.clear();
+        } else {
+            self.tables = local_to_global
+                .iter()
+                .map(|&g| set.tables[g].clone())
+                .collect();
+        }
+        if !set.check_factors.is_empty() {
+            for (l, &g) in local_to_global.iter().enumerate() {
+                self.cost.check_factor[l] = set.check_factors[g];
+            }
+        }
+        self.table_epoch = set.epoch;
     }
 
     /// Does this query's window multi-seed (slide-opened windows track
@@ -762,28 +836,36 @@ impl OperatorState for Operator {
         Operator::pm_refs(self, buf);
     }
 
-    fn install_tables(&mut self, tables: &[UtilityTable]) {
-        Operator::install_tables(self, tables);
+    fn install_table_set(&mut self, set: Arc<TableSet>) {
+        let identity: Vec<usize> = (0..self.queries.len()).collect();
+        self.apply_table_set(&set, &identity);
     }
 
-    fn set_cost_factors(&mut self, factors: &[f64]) {
-        assert_eq!(
-            factors.len(),
-            self.cost.check_factor.len(),
-            "one factor per query"
-        );
-        self.cost.check_factor = factors.to_vec();
+    fn table_epoch(&self) -> u64 {
+        Operator::table_epoch(self)
+    }
+
+    fn harvest_observations(&self, into: &mut ModelHarvest) {
+        // overwrite-in-place: the harvest runs every drift checkpoint,
+        // so the buffers recycle instead of re-cloning the whole hub
+        into.hub.assign_from(&self.obs);
+        self.expected_ws_into(&mut into.ws);
     }
 
     fn set_obs_enabled(&mut self, enabled: bool) {
         self.obs.enabled = enabled;
     }
 
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult {
+    fn process_batch_into(
+        &mut self,
+        events: &[Event],
+        shed_mask: Option<&DropMask>,
+        out: &mut BatchResult,
+    ) {
         if let Some(m) = shed_mask {
             assert_eq!(events.len(), m.len(), "one mask bit per event");
         }
-        let mut out = BatchResult::default();
+        out.reset();
         // one reused per-event outcome for the whole batch: the hot
         // loop allocates only when completions outgrow their buffers
         let mut o = std::mem::take(&mut self.batch_scratch);
@@ -803,7 +885,6 @@ impl OperatorState for Operator {
             out.completions.extend_from_slice(&o.completions);
         }
         self.batch_scratch = o;
-        out
     }
 
     fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {

@@ -10,8 +10,10 @@
 //! worker shards; `parallelism()` is the only knob that differs (the
 //! overload detector scales its latency predictions by it).
 
+use std::sync::Arc;
+
 use crate::events::{DropMask, Event};
-use crate::model::UtilityTable;
+use crate::model::plane::{ModelHarvest, TableSet};
 use crate::util::Rng;
 
 use super::cost::CostModel;
@@ -41,6 +43,20 @@ pub struct BatchResult {
     pub opened: usize,
     /// windows closed
     pub closed: usize,
+}
+
+impl BatchResult {
+    /// Zero every counter and clear the completions, keeping their
+    /// buffer — readies a recycled result for the next
+    /// [`OperatorState::process_batch_into`] call.
+    pub fn reset(&mut self) {
+        self.completions.clear();
+        self.cost_ns_max = 0.0;
+        self.cost_ns_total = 0.0;
+        self.checks = 0;
+        self.opened = 0;
+        self.closed = 0;
+    }
 }
 
 /// Per-shard `(scanned, dropped)` counters of one shed pass, stored
@@ -153,20 +169,47 @@ pub trait OperatorState {
     /// sharding-invariant identity.
     fn pm_refs(&self, buf: &mut Vec<PmRef>);
 
-    /// Install per-query utility tables (global query order), used by
-    /// [`Self::shed_lowest`] and refreshed on model retraining.
-    fn install_tables(&mut self, tables: &[UtilityTable]);
+    /// Install an immutable, epoch-numbered model snapshot
+    /// ([`TableSet`]): the utility tables [`Self::shed_lowest`] ranks
+    /// by plus the per-query check-cost factors, swapped atomically.
+    /// The sharded runtime broadcasts the `Arc` to every worker
+    /// (`UpdateTables`); drift retraining publishes successor epochs
+    /// through this same entry point.
+    fn install_table_set(&mut self, set: Arc<TableSet>);
 
-    /// Apply per-query check-cost factors (global query order).
-    fn set_cost_factors(&mut self, factors: &[f64]);
+    /// Epoch of the model snapshot the state is currently reading
+    /// (0 = the initial install; bumped by every retrain).
+    fn table_epoch(&self) -> u64;
+
+    /// Snapshot the state's observation statistics and expected window
+    /// sizes into `into` (global query order) — the training inputs for
+    /// [`crate::model::ModelController`].  The sharded runtime asks
+    /// every worker for its local statistics (`Request::Observations`)
+    /// and merges them into the global slots; queries are partitioned
+    /// across shards, so the merge is placement, never summation.
+    fn harvest_observations(&self, into: &mut ModelHarvest);
 
     /// Toggle observation capture.
     fn set_obs_enabled(&mut self, enabled: bool);
 
-    /// Process a batch of events.  Events whose [`DropMask`] bit is set
-    /// get window bookkeeping only (black-box event-shedding semantics:
-    /// shed events still exist in the stream).
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult;
+    /// Process a batch of events, *overwriting* `out` (reset first, so
+    /// its completions buffer is recycled — the allocation-free form at
+    /// the coordinator API boundary).  Events whose [`DropMask`] bit is
+    /// set get window bookkeeping only (black-box event-shedding
+    /// semantics: shed events still exist in the stream).
+    fn process_batch_into(
+        &mut self,
+        events: &[Event],
+        shed_mask: Option<&DropMask>,
+        out: &mut BatchResult,
+    );
+
+    /// Allocating convenience around [`Self::process_batch_into`].
+    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult {
+        let mut out = BatchResult::default();
+        self.process_batch_into(events, shed_mask, &mut out);
+        out
+    }
 
     /// Drop the `rho` globally lowest-utility PMs (paper Alg. 2) using
     /// the installed tables; missing tables score a PM at utility 0.

@@ -34,12 +34,14 @@
 //! exactly; `shards > 1` dispatches `batch`-sized micro-batches to the
 //! sharded runtime.  Either way there is exactly one measurement loop.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::events::Event;
 use crate::metrics::{LatencyTracker, Throughput};
-use crate::model::{DriftDetector, ModelBuilder, UtilityTable};
-use crate::operator::{ComplexEvent, Operator, OperatorState};
+use crate::model::plane::{KeyUtilityTable, ModelController, ModelKind, TableSet};
+use crate::model::UtilityTable;
+use crate::operator::{BatchResult, ComplexEvent, Operator, OperatorState};
 use crate::query::Query;
 use crate::runtime::ShardedOperator;
 use crate::shedding::{OverloadDetector, ShedReport, Shedder, ShedderKind};
@@ -88,6 +90,7 @@ pub struct PipelineBuilder {
     source: Option<Vec<Event>>,
     retrain_every: u64,
     drift_threshold: f64,
+    model_kind: ModelKind,
     latency_stride: u64,
     type_routing: bool,
 }
@@ -110,6 +113,7 @@ impl Default for PipelineBuilder {
             source: None,
             retrain_every: 0,
             drift_threshold: 0.01,
+            model_kind: ModelKind::Markov,
             latency_stride: 1,
             type_routing: true,
         }
@@ -213,11 +217,22 @@ impl PipelineBuilder {
 
     /// Drift-triggered model retraining (paper §III-D): check the
     /// transition-matrix drift every `every` events and rebuild the
-    /// utility tables past `threshold` (0 disables; requires
-    /// `shards == 1`).
+    /// utility tables past `threshold` (0 disables).  Works on every
+    /// backend: at `shards > 1` the [`ModelController`] merges each
+    /// worker's harvested observations and broadcasts the fresh
+    /// [`TableSet`] epoch to all of them.
     pub fn retrain(mut self, every: u64, threshold: f64) -> Self {
         self.retrain_every = every;
         self.drift_threshold = threshold;
+        self
+    }
+
+    /// Which [`crate::model::UtilityModel`] backend drift retraining
+    /// rebuilds tables with (default [`ModelKind::Markov`], the paper's
+    /// Markov-reward model; [`ModelKind::Freq`] swaps in the cheap
+    /// frequency-only predictor).
+    pub fn model(mut self, kind: ModelKind) -> Self {
+        self.model_kind = kind;
         self
     }
 
@@ -248,19 +263,38 @@ impl PipelineBuilder {
             crate::operator::MAX_SHARDS
         );
         anyhow::ensure!(self.batch >= 1, "batch must be at least 1");
-        anyhow::ensure!(
-            self.retrain_every == 0 || self.shards == 1,
-            "drift retraining is not yet supported with shards > 1"
-        );
         let lb_ns = self.lb_ms * 1e6;
         let detector = self
             .detector
             .unwrap_or_else(|| OverloadDetector::new(lb_ns, 0.02 * lb_ns));
+        let n = self.queries.len();
+        let weights: Vec<f64> = self.queries.iter().map(|q| q.weight).collect();
+        // E-BL's key-slot table is built once and Arc-shared between
+        // the strategy and the TableSet snapshot — one model plane for
+        // black-box and white-box strategies alike
+        let key_table = (self.custom.is_none()
+            && matches!(self.shedder, ShedderKind::EventBaseline))
+        .then(|| Arc::new(KeyUtilityTable::from_queries(&self.queries, self.key_slot)));
         let shedder = match self.custom {
             Some(s) => s,
             None => self
                 .shedder
-                .build_with(&self.queries, &detector, self.key_slot, self.seed),
+                .build_from_plane(&detector, key_table.as_ref(), self.seed),
+        };
+        anyhow::ensure!(
+            self.tables.is_empty() || self.tables.len() == n,
+            "{} utility tables for {n} queries",
+            self.tables.len()
+        );
+        let check_factors = if self.cost_factors.is_empty() {
+            vec![1.0; n]
+        } else {
+            anyhow::ensure!(
+                self.cost_factors.len() == n,
+                "{} cost factors for {n} queries",
+                self.cost_factors.len()
+            );
+            self.cost_factors
         };
         let mut backend = if self.shards > 1 {
             Backend::Sharded(ShardedOperator::new(self.queries, self.shards))
@@ -273,28 +307,32 @@ impl PipelineBuilder {
                 Backend::Sharded(sop) => sop.set_type_routing(false),
             }
         }
-        if !self.cost_factors.is_empty() {
-            backend.state().set_cost_factors(&self.cost_factors);
-        }
-        // install unconditionally: strategies that never call
-        // shed_lowest simply ignore the tables, and custom shedders
-        // get them regardless of which kind they report as
-        if !self.tables.is_empty() {
-            backend.state().install_tables(&self.tables);
-        }
-        // sharded workers never capture observations (retraining is
-        // single-threaded only); the single backend keeps capturing
-        // through prime() and flips to its measurement setting on the
-        // first feed()
-        if matches!(backend, Backend::Sharded(_)) {
+        // the whole model snapshot installs as ONE epoch-0 TableSet —
+        // utility tables, check-cost factors and the key-slot table in
+        // a single atomic swap (strategies that never call shed_lowest
+        // simply ignore the tables, and custom shedders get them
+        // regardless of which kind they report as)
+        let initial = Arc::new(TableSet::initial(self.tables, check_factors, key_table));
+        backend.state().install_table_set(Arc::clone(&initial));
+        let retraining = self.retrain_every > 0;
+        // without retraining, sharded workers never need observations;
+        // with it, they keep capturing through prime() exactly like the
+        // single backend, feeding the harvested training view
+        if matches!(backend, Backend::Sharded(_)) && !retraining {
             backend.state().set_obs_enabled(false);
         }
         let dispatch = match &backend {
             Backend::Single(_) => 1,
             Backend::Sharded(_) => self.batch,
         };
-        let model_builder = (self.retrain_every > 0)
-            .then(|| ModelBuilder::with_auto_engine(shedder.kind().model_config()));
+        let controller = retraining.then(|| {
+            ModelController::new(
+                self.model_kind.build(shedder.kind().model_config()),
+                self.drift_threshold,
+                weights,
+                initial,
+            )
+        });
         Ok(Pipeline {
             backend,
             shedder,
@@ -308,9 +346,9 @@ impl PipelineBuilder {
             peak_pms: 0,
             retrains: 0,
             retrain_every: self.retrain_every,
-            drift_threshold: self.drift_threshold,
-            model_builder,
-            drift: None,
+            next_retrain_due: self.retrain_every,
+            controller,
+            batch_out: BatchResult::default(),
             started: false,
             wall: Throughput::new(),
             source: self.source,
@@ -333,6 +371,9 @@ pub struct PipelineRun {
     pub peak_pms: usize,
     /// drift-triggered model rebuilds
     pub retrains: u32,
+    /// epoch of the model snapshot the state ended on (0 = the initial
+    /// install; every retrain bumps it)
+    pub table_epoch: u64,
     /// strategy name
     pub shedder: &'static str,
     /// worker shards that actually ran (the runtime caps the requested
@@ -360,9 +401,14 @@ pub struct Pipeline {
     peak_pms: usize,
     retrains: u32,
     retrain_every: u64,
-    drift_threshold: f64,
-    model_builder: Option<ModelBuilder>,
-    drift: Option<DriftDetector>,
+    /// next event index at which the drift check runs (advances in
+    /// `retrain_every` strides, robust to multi-event dispatch units)
+    next_retrain_due: u64,
+    /// the train→snapshot→publish loop (None = retraining disabled)
+    controller: Option<ModelController>,
+    /// recycled batch outcome: completions reuse one buffer across
+    /// every dispatch (the into-buffer API at the coordinator boundary)
+    batch_out: BatchResult,
     started: bool,
     wall: Throughput,
     source: Option<Vec<Event>>,
@@ -399,6 +445,13 @@ impl Pipeline {
         self.totals
     }
 
+    /// Epoch of the model snapshot the backend is currently reading
+    /// (0 until a retrain publishes a successor [`TableSet`]; on the
+    /// sharded runtime every worker reads the same broadcast epoch).
+    pub fn table_epoch(&self) -> u64 {
+        self.backend.state_ref().table_epoch()
+    }
+
     /// Warm the operator state below capacity (no arrival schedule, no
     /// latency accounting, no shedding): the calibration prefix of an
     /// experiment, or historical state for an embedding.  Must be
@@ -407,51 +460,48 @@ impl Pipeline {
     pub fn prime(&mut self, events: &[Event]) -> Vec<ComplexEvent> {
         assert!(!self.started, "prime() must run before feed()");
         let mut ces = Vec::new();
+        let mut out = std::mem::take(&mut self.batch_out);
         for chunk in events.chunks(self.dispatch) {
-            ces.extend(self.backend.state().process_batch(chunk, None).completions);
+            self.backend.state().process_batch_into(chunk, None, &mut out);
+            ces.extend_from_slice(&out.completions);
         }
+        self.batch_out = out;
         ces
     }
 
     /// First-feed transition: freeze calibration-time observation
     /// capture (unless retraining keeps consuming it) and snapshot the
-    /// drift baseline.
+    /// drift baseline from the harvested statistics — on the sharded
+    /// backend that is the merged per-worker harvest.
     fn start(&mut self) {
         if self.started {
             return;
         }
         self.started = true;
-        if let Backend::Single(op) = &mut self.backend {
-            let retraining = self.retrain_every > 0;
-            op.obs.enabled = retraining;
-            if retraining {
-                self.drift = Some(DriftDetector::snapshot(&op.obs, self.drift_threshold));
-            }
+        let retraining = self.controller.is_some();
+        self.backend.state().set_obs_enabled(retraining);
+        if let Some(c) = &mut self.controller {
+            c.begin(self.backend.state_ref());
         }
     }
 
-    /// §III-D: periodic drift check → rebuild the model.  Building the
-    /// candidate matrix is cheap (counts → probabilities); the full
-    /// table rebuild runs only on actual drift.
+    /// §III-D: periodic drift check → rebuild the model, on any
+    /// backend.  The [`ModelController`] harvests the state's
+    /// observations (merged across workers when sharded), drift-checks
+    /// the candidate matrices (cheap — counts → probabilities), and
+    /// only on actual drift trains a fresh [`TableSet`] epoch and
+    /// publishes it (an `UpdateTables` broadcast when sharded).
     fn maybe_retrain(&mut self) -> crate::Result<()> {
-        if self.retrain_every == 0 || self.idx % self.retrain_every != 0 {
+        let Some(c) = &mut self.controller else {
+            return Ok(());
+        };
+        if self.idx < self.next_retrain_due {
             return Ok(());
         }
-        let Backend::Single(op) = &mut self.backend else {
-            return Ok(());
-        };
-        let Some(d) = &self.drift else {
-            return Ok(());
-        };
-        let (_mse, drifted) = d.check(&op.obs);
-        if drifted {
-            let builder = self
-                .model_builder
-                .as_mut()
-                .expect("retraining always has a model builder");
-            let fresh = builder.build(op)?;
-            op.install_tables(&fresh);
-            self.drift = Some(DriftDetector::snapshot(&op.obs, self.drift_threshold));
+        while self.next_retrain_due <= self.idx {
+            self.next_retrain_due += self.retrain_every;
+        }
+        if c.check_and_retrain(self.backend.state())? {
             self.retrains += 1;
         }
         Ok(())
@@ -482,12 +532,14 @@ impl Pipeline {
             self.busy_ns += rep.cost_ns;
             self.totals += rep;
             let mask = self.shedder.event_mask();
-            let out = self.backend.state().process_batch(chunk, mask);
+            let mut out = std::mem::take(&mut self.batch_out);
+            self.backend.state().process_batch_into(chunk, mask, &mut out);
             // virtual time advances by the batch makespan (the slowest
             // shard; on the single backend, the event's cost)
             self.clock.advance(out.cost_ns_max);
             self.busy_ns += out.cost_ns_max;
-            ces.extend(out.completions);
+            ces.extend_from_slice(&out.completions);
+            self.batch_out = out;
             if let Some(src) = &self.arrivals {
                 let end = self.clock.now_ns();
                 for j in 0..chunk.len() as u64 {
@@ -528,6 +580,7 @@ impl Pipeline {
             totals: self.totals,
             peak_pms: self.peak_pms,
             retrains: self.retrains,
+            table_epoch: self.table_epoch(),
             shedder: self.shedder.name(),
             shards: self.shards(),
             wall_events_per_sec: self.wall.events_per_sec(),
@@ -559,12 +612,44 @@ mod tests {
             .batch(0)
             .build()
             .is_err());
+        // cost factors must match the query count (q4 is one query)
+        assert!(Pipeline::builder()
+            .queries(bus_queries())
+            .cost_factors(vec![1.0, 2.0])
+            .build()
+            .is_err());
+        // retraining at shards > 1 is supported since the model-plane
+        // redesign — the old rejection is gone
         assert!(Pipeline::builder()
             .queries(bus_queries())
             .shards(2)
             .retrain(1_000, 0.01)
             .build()
-            .is_err());
+            .is_ok());
+    }
+
+    #[test]
+    fn sharded_retraining_bumps_the_broadcast_epoch() {
+        // two q4 copies so a 2-shard split actually distributes; a
+        // threshold of ~0 makes every due check a retrain
+        let mut queries = bus_queries();
+        queries.extend(q4(3, 1_500, 300).queries);
+        let events = BusGen::with_seed(9).take_events(24_000);
+        let mut pipe = Pipeline::builder()
+            .queries(queries)
+            .shards(2)
+            .batch(500)
+            .retrain(2_000, 1e-12)
+            .build()
+            .unwrap();
+        assert_eq!(pipe.shards(), 2);
+        pipe.prime(&events[..8_000]);
+        assert_eq!(pipe.table_epoch(), 0);
+        pipe.feed(&events[8_000..]).unwrap();
+        let run = pipe.summary(Vec::new());
+        assert!(run.retrains >= 1, "tight threshold must retrain");
+        assert_eq!(run.retrains as u64, pipe.table_epoch());
+        assert!(pipe.table_epoch() > 0);
     }
 
     #[test]

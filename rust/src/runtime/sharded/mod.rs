@@ -45,19 +45,36 @@
 //! in that case the skipped shard's virtual cost is reproduced
 //! coordinator-side with the exact same FP accumulation the worker
 //! would have performed, so results stay bit-for-bit identical.
+//!
+//! ## The versioned model plane (PR 5)
+//!
+//! Model state is an `Arc`-shared, epoch-numbered
+//! [`crate::model::TableSet`]: [`ShardedOperator::install_table_set`]
+//! broadcasts the snapshot to every worker (`UpdateTables`), each
+//! worker slices out its local queries' tables and cost factors, and
+//! [`ShardedOperator::worker_epochs`] audits that all shards read the
+//! same epoch.  Training inputs flow the other way:
+//! [`ShardedOperator::harvest_observations`] merges every worker's
+//! per-query statistics into the global order (queries are
+//! partitioned, so the merge is placement — per-query statistics are
+//! bit-identical to a single-threaded run), which is what lets
+//! drift-triggered retraining drive the sharded runtime exactly like
+//! the single-threaded operator.
 
 pub(crate) mod merge;
 mod worker;
 
+use std::cell::RefCell;
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::events::{BatchPool, DropMask, Event, EventBatch, MaskPool, TypeMask};
+use crate::model::plane::{ModelHarvest, TableSet};
 use crate::model::UtilityTable;
 use crate::operator::{
-    BatchResult, ComplexEvent, CostModel, OperatorState, PerShard, PmRef, ShedOutcome,
-    MAX_SHARDS,
+    BatchResult, ComplexEvent, CostModel, OperatorState, PerShard, PmRef, QueryStats,
+    ShedCell, ShedOutcome, MAX_SHARDS,
 };
 use crate::query::{OpenPolicy, Query, WindowSpec};
 use crate::util::Rng;
@@ -125,9 +142,12 @@ pub struct ShardedOperator {
     /// cost model used for coordinator-side shed-cost accounting and
     /// for reproducing a skipped shard's idle batch cost (the worker's
     /// own model must keep the same `base_event_ns`/`open_check_ns`
-    /// constants — only `check_factor` is configurable, via
-    /// [`ShardedOperator::set_cost_factors`])
+    /// constants — only `check_factor` is configurable, through the
+    /// installed [`TableSet`]'s `check_factors`)
     pub cost: CostModel,
+    /// epoch of the installed model snapshot (coordinator view; every
+    /// worker adopts the same epoch from the `UpdateTables` broadcast)
+    table_epoch: u64,
     /// recycled event-batch buffers (dispatch plane)
     pool: BatchPool,
     /// recycled shed-mask buffers
@@ -135,6 +155,15 @@ pub struct ShardedOperator {
     /// per-shard recycled completion sinks (ride along each Batch
     /// request, come back filled in the response)
     comp_bufs: Vec<Vec<ComplexEvent>>,
+    /// per-shard recycled shed-candidate sinks (ride each `Candidates`
+    /// request the same way — no O(cells) allocation per shed round)
+    cand_bufs: Vec<Vec<ShedCell>>,
+    /// recycled per-round candidate list-of-lists for the k-way merge
+    cand_lists: Vec<Vec<ShedCell>>,
+    /// per-shard recycled PM-ref sinks (`pm_refs` takes `&self`, so the
+    /// recycling goes through a `RefCell`; the coordinator is
+    /// single-threaded, so the borrow is never contended)
+    ref_sinks: RefCell<Vec<Vec<PmRef>>>,
     /// per-shard union of the local queries' type masks
     relevant: Vec<TypeMask>,
     /// per-shard "inert when idle": every local query opens `OnMatch`
@@ -215,9 +244,13 @@ impl ShardedOperator {
             wins_open: vec![0; n],
             open_windows: 0,
             cost: CostModel::with_queries(n_queries),
+            table_epoch: 0,
             pool: BatchPool::new(),
             masks: MaskPool::new(),
             comp_bufs: vec![Vec::new(); n],
+            cand_bufs: vec![Vec::new(); n],
+            cand_lists: Vec::new(),
+            ref_sinks: RefCell::new(vec![Vec::new(); n]),
             relevant,
             static_skip,
             routing: true,
@@ -343,10 +376,15 @@ impl ShardedOperator {
         total
     }
 
-    fn dispatch(&mut self, events: &[Event], mask: Option<&DropMask>) -> BatchResult {
-        let mut out = BatchResult::default();
+    fn dispatch_into(
+        &mut self,
+        events: &[Event],
+        mask: Option<&DropMask>,
+        out: &mut BatchResult,
+    ) {
+        out.reset();
         if events.is_empty() {
-            return out;
+            return;
         }
         let batch = if self.pooling {
             self.pool.lease_with(|b| b.refill(events))
@@ -411,7 +449,6 @@ impl ShardedOperator {
         }
         merge::sort_completions(&mut out.completions);
         self.open_windows = self.wins_open.iter().sum();
-        out
     }
 
     /// Open windows across all shards.
@@ -422,7 +459,9 @@ impl ShardedOperator {
     /// Process a batch of events on every shard, merging completions
     /// deterministically.
     pub fn process_batch(&mut self, events: &[Event]) -> BatchResult {
-        self.dispatch(events, None)
+        let mut out = BatchResult::default();
+        self.dispatch_into(events, None, &mut out);
+        out
     }
 
     /// Like [`Self::process_batch`], but events whose [`DropMask`] bit
@@ -436,30 +475,105 @@ impl ShardedOperator {
         dropped: &DropMask,
     ) -> BatchResult {
         assert_eq!(events.len(), dropped.len());
-        self.dispatch(events, Some(dropped))
+        let mut out = BatchResult::default();
+        self.dispatch_into(events, Some(dropped), &mut out);
+        out
     }
 
-    /// Install utility tables (global query order); each shard receives
-    /// its own queries' tables.
+    /// Broadcast a model snapshot to every worker (one `Arc` clone per
+    /// shard — `Request::UpdateTables`); each worker slices out its
+    /// local queries' tables and cost factors and adopts the epoch.
+    /// Empty `tables` clear the installed tables; empty
+    /// `check_factors` leave the cost model untouched.
+    pub fn install_table_set(&mut self, set: Arc<TableSet>) {
+        assert!(
+            set.tables.is_empty() || set.tables.len() == self.n_queries,
+            "one table per query"
+        );
+        if !set.check_factors.is_empty() {
+            assert_eq!(
+                set.check_factors.len(),
+                self.n_queries,
+                "one factor per query"
+            );
+            self.cost.check_factor.clone_from(&set.check_factors);
+        }
+        self.table_epoch = set.epoch;
+        for s in 0..self.n_shards() {
+            self.send(s, Request::UpdateTables(Arc::clone(&set)));
+        }
+        self.ack_all();
+    }
+
+    /// Install bare utility tables (global query order), wrapped in an
+    /// anonymous next-epoch [`TableSet`] that leaves cost factors
+    /// untouched.  Test/bench convenience around
+    /// [`ShardedOperator::install_table_set`].
     pub fn set_tables(&mut self, tables: &[UtilityTable]) {
         assert_eq!(tables.len(), self.n_queries, "one table per query");
-        for (s, assignment) in self.plan.assignments.iter().enumerate() {
-            let local: Vec<UtilityTable> =
-                assignment.iter().map(|&g| tables[g].clone()).collect();
-            self.txs[s].send(Request::SetTables(local)).expect("shard worker gone");
-        }
-        self.ack_all();
+        let set = TableSet {
+            epoch: self.table_epoch + 1,
+            tables: tables.to_vec(),
+            check_factors: Vec::new(),
+            ws: Vec::new(),
+            key: None,
+        };
+        self.install_table_set(Arc::new(set));
     }
 
-    /// Apply per-query check-cost factors (global query order).
-    pub fn set_cost_factors(&mut self, factors: &[f64]) {
-        assert_eq!(factors.len(), self.n_queries, "one factor per query");
-        self.cost.check_factor = factors.to_vec();
-        for (s, assignment) in self.plan.assignments.iter().enumerate() {
-            let local: Vec<f64> = assignment.iter().map(|&g| factors[g]).collect();
-            self.txs[s].send(Request::SetCostFactors(local)).expect("shard worker gone");
+    /// Epoch of the model snapshot the workers are reading (coordinator
+    /// view; audit the workers themselves via
+    /// [`ShardedOperator::worker_epochs`]).
+    pub fn table_epoch(&self) -> u64 {
+        self.table_epoch
+    }
+
+    /// Ask every worker for the epoch it is actually reading (shard
+    /// order) — the broadcast invariant says they all match
+    /// [`ShardedOperator::table_epoch`] between dispatches.
+    pub fn worker_epochs(&self) -> Vec<u64> {
+        for s in 0..self.n_shards() {
+            self.send(s, Request::Epoch);
         }
-        self.ack_all();
+        (0..self.n_shards())
+            .map(|s| match self.recv(s) {
+                Response::Epoch(e) => e,
+                _ => unreachable!("protocol violation: expected epoch"),
+            })
+            .collect()
+    }
+
+    /// Merge every worker's observation statistics and expected window
+    /// sizes into `into` (global query order).  Queries are partitioned
+    /// across shards, so each worker's local statistics land in their
+    /// global slots verbatim — per-query statistics are bit-identical
+    /// to a single-threaded run over the same stream.
+    pub fn harvest_observations(&self, into: &mut ModelHarvest) {
+        into.hub.enabled = true;
+        into.hub.queries.clear();
+        into.hub
+            .queries
+            .resize_with(self.n_queries, || QueryStats::new(0));
+        into.ws.clear();
+        into.ws.resize(self.n_queries, 0);
+        for s in 0..self.n_shards() {
+            self.send(s, Request::Observations);
+        }
+        for s in 0..self.n_shards() {
+            match self.recv(s) {
+                Response::Observations { stats, ws } => {
+                    for ((qs, w), &g) in stats
+                        .into_iter()
+                        .zip(ws)
+                        .zip(&self.plan.assignments[s])
+                    {
+                        into.hub.queries[g] = qs;
+                        into.ws[g] = w;
+                    }
+                }
+                _ => unreachable!("protocol violation: expected observations"),
+            }
+        }
     }
 
     /// Toggle observation capture on every shard.
@@ -488,10 +602,15 @@ impl ShardedOperator {
         if rho == 0 || scanned == 0 {
             return out;
         }
+        // candidate lists ride recycled sinks, like completions: the
+        // worker fills the sink in place and the coordinator reclaims
+        // it after the merge — no O(cells) allocation per shed round
         for s in 0..self.n_shards() {
-            self.send(s, Request::Candidates { rho });
+            let sink = std::mem::take(&mut self.cand_bufs[s]);
+            self.send(s, Request::Candidates { rho, sink });
         }
-        let mut lists = Vec::with_capacity(self.n_shards());
+        let mut lists = std::mem::take(&mut self.cand_lists);
+        lists.clear();
         for s in 0..self.n_shards() {
             match self.recv(s) {
                 Response::Candidates(c) => lists.push(c),
@@ -499,6 +618,11 @@ impl ShardedOperator {
             }
         }
         let victims = merge::k_way_take(&lists, rho);
+        for (s, mut c) in lists.drain(..).enumerate() {
+            c.clear();
+            self.cand_bufs[s] = c;
+        }
+        self.cand_lists = lists;
         for (s, takes) in victims.iter().enumerate() {
             if !takes.is_empty() {
                 self.send(s, Request::DropCells(takes.clone()));
@@ -598,15 +722,23 @@ impl ShardedOperator {
 
     /// Enumerate every live PM across all shards (shard order, then
     /// each shard's enumeration order).  Query indices are global;
-    /// `pm_id` is only unique within its shard.
+    /// `pm_id` is only unique within its shard.  Responses ride
+    /// per-shard recycled sinks, so repeated enumeration allocates
+    /// nothing once the sinks reach their working size.
     pub fn pm_refs(&self, buf: &mut Vec<PmRef>) {
         buf.clear();
+        let mut sinks = self.ref_sinks.borrow_mut();
         for s in 0..self.n_shards() {
-            self.send(s, Request::PmRefs);
+            let sink = std::mem::take(&mut sinks[s]);
+            self.send(s, Request::PmRefs { sink });
         }
         for s in 0..self.n_shards() {
             match self.recv(s) {
-                Response::PmRefs(refs) => buf.extend(refs),
+                Response::PmRefs(mut refs) => {
+                    buf.extend_from_slice(&refs);
+                    refs.clear();
+                    sinks[s] = refs;
+                }
                 _ => unreachable!("protocol violation: expected pm refs"),
             }
         }
@@ -638,20 +770,29 @@ impl OperatorState for ShardedOperator {
         ShardedOperator::pm_refs(self, buf);
     }
 
-    fn install_tables(&mut self, tables: &[UtilityTable]) {
-        self.set_tables(tables);
+    fn install_table_set(&mut self, set: Arc<TableSet>) {
+        ShardedOperator::install_table_set(self, set);
     }
 
-    fn set_cost_factors(&mut self, factors: &[f64]) {
-        ShardedOperator::set_cost_factors(self, factors);
+    fn table_epoch(&self) -> u64 {
+        ShardedOperator::table_epoch(self)
+    }
+
+    fn harvest_observations(&self, into: &mut ModelHarvest) {
+        ShardedOperator::harvest_observations(self, into);
     }
 
     fn set_obs_enabled(&mut self, enabled: bool) {
         ShardedOperator::set_obs_enabled(self, enabled);
     }
 
-    fn process_batch(&mut self, events: &[Event], shed_mask: Option<&DropMask>) -> BatchResult {
-        self.dispatch(events, shed_mask)
+    fn process_batch_into(
+        &mut self,
+        events: &[Event],
+        shed_mask: Option<&DropMask>,
+        out: &mut BatchResult,
+    ) {
+        self.dispatch_into(events, shed_mask, out);
     }
 
     fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
@@ -854,6 +995,47 @@ mod tests {
         // query indices come back global, covering both shards
         assert!(refs.iter().any(|r| r.query == 0));
         assert!(refs.iter().any(|r| r.query == 1));
+    }
+
+    #[test]
+    fn table_set_broadcast_reaches_every_worker_and_harvest_merges() {
+        let queries = q1(1_500).queries; // two queries -> two shards
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(3);
+            g.take_events(8_000)
+        };
+        let mut plain = Operator::new(queries.clone());
+        for e in &events {
+            plain.process_event(e);
+        }
+        let mut sop = ShardedOperator::new(queries, 2);
+        for chunk in events.chunks(512) {
+            sop.process_batch(chunk);
+        }
+        // harvest merges worker statistics into global order,
+        // bit-identical to the single-threaded hub
+        let mut h = ModelHarvest::default();
+        sop.harvest_observations(&mut h);
+        assert_eq!(h.ws, plain.expected_ws());
+        assert_eq!(h.hub.total(), plain.obs.total());
+        assert!(h.hub.total() > 0, "scenario must observe transitions");
+        for (a, b) in h.hub.queries.iter().zip(&plain.obs.queries) {
+            assert_eq!(a.counts, b.counts, "per-query counts diverged");
+        }
+        // epoch 0 before any install; a broadcast reaches every worker
+        assert_eq!(sop.table_epoch(), 0);
+        assert_eq!(sop.worker_epochs(), vec![0, 0]);
+        let set = Arc::new(TableSet {
+            epoch: 7,
+            tables: Vec::new(),
+            check_factors: vec![2.0, 3.0],
+            ws: Vec::new(),
+            key: None,
+        });
+        sop.install_table_set(set);
+        assert_eq!(sop.table_epoch(), 7);
+        assert_eq!(sop.worker_epochs(), vec![7, 7]);
+        assert_eq!(sop.cost.check_factor, vec![2.0, 3.0]);
     }
 
     #[test]

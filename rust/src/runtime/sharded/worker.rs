@@ -3,7 +3,8 @@
 //! bounded channels.
 //!
 //! Workers never talk to each other — all cross-shard coordination
-//! (completion merging, global victim selection) happens at the
+//! (completion merging, global victim selection, model-snapshot
+//! broadcast, observation harvest) happens at the
 //! [`super::ShardedOperator`] façade, which is what keeps the protocol
 //! deadlock-free: every request gets exactly one response, and the
 //! coordinator always drains responses before sending the next round.
@@ -13,8 +14,21 @@
 //! pooled [`DropMask`] `Arc`s, the per-event [`ProcessOutcome`] is a
 //! worker-owned scratch, and completions are written into a recycled
 //! sink the coordinator sends with each batch and gets back in the
-//! response.  Both channels are bounded (array-backed), so message
+//! response.  Shed-round traffic rides the same pattern:
+//! [`Request::Candidates`] and [`Request::PmRefs`] carry recycled
+//! sinks the worker fills *in place* (remapping query indices to
+//! global), so a shed round allocates nothing on either side of the
+//! channel.  Both channels are bounded (array-backed), so message
 //! passing itself allocates nothing per dispatch.
+//!
+//! Model state arrives as an `Arc`-shared, epoch-numbered
+//! [`TableSet`] ([`Request::UpdateTables`] — one broadcast per
+//! install/retrain); the worker slices out its local queries' tables
+//! and cost factors and remembers the epoch, which the coordinator can
+//! audit via [`Request::Epoch`].  Training inputs flow the other way:
+//! [`Request::Observations`] returns the worker's per-local-query
+//! statistics plus expected window sizes for the coordinator's merged
+//! harvest (cold path — retraining cadence, not dispatch cadence).
 //!
 //! Shed candidates travel as compact `(query, window, state)` **cell
 //! summaries** ([`ShedCell`]) instead of per-PM `PmRef` streams: all
@@ -25,9 +39,9 @@ use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
 use crate::events::{DropMask, EventBatch};
-use crate::model::UtilityTable;
+use crate::model::plane::TableSet;
 use crate::operator::{
-    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, ShedCell,
+    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, QueryStats, ShedCell,
 };
 use crate::query::Query;
 use crate::util::Rng;
@@ -67,23 +81,36 @@ pub(super) enum Request {
         /// [`Response::Batch`], recycled by the coordinator
         sink: Vec<ComplexEvent>,
     },
-    /// Install utility tables, one per *local* query, local order.
-    SetTables(Vec<UtilityTable>),
-    /// Apply per-local-query check-cost factors.
-    SetCostFactors(Vec<f64>),
+    /// Install the model snapshot: the worker slices its local queries'
+    /// tables and cost factors out of the `Arc`-shared [`TableSet`]
+    /// and adopts its epoch.
+    UpdateTables(Arc<TableSet>),
     /// Toggle observation capture.
     SetObsEnabled(bool),
     /// Toggle the operator's type-routed skim path.
     SetTypeRouting(bool),
     /// Return the shard's lowest-utility cells, sorted ascending by
     /// [`crate::operator::cell_cmp`], covering at least `rho` PMs
-    /// (query indices remapped to global).
+    /// (query indices remapped to global).  `sink` is the recycled
+    /// cell buffer the worker fills in place.
     Candidates {
         /// global drop budget (upper bound on PMs needed)
         rho: usize,
+        /// recycled cell sink, returned in [`Response::Candidates`]
+        sink: Vec<ShedCell>,
     },
-    /// Enumerate every live PM (query indices remapped to global).
-    PmRefs,
+    /// Enumerate every live PM (query indices remapped to global) into
+    /// the recycled `sink`.
+    PmRefs {
+        /// recycled PM-ref sink, returned in [`Response::PmRefs`]
+        sink: Vec<PmRef>,
+    },
+    /// Report the worker's per-local-query observation statistics and
+    /// expected window sizes (the coordinator merges them into the
+    /// global training harvest).
+    Observations,
+    /// Report the epoch of the model snapshot the worker is reading.
+    Epoch,
     /// Drop PMs cell-wise (global query indices; the worker remaps and
     /// applies them in place via [`Operator::drop_cells`]).
     DropCells(Vec<CellTake>),
@@ -104,10 +131,19 @@ pub(super) enum Request {
 pub(super) enum Response {
     /// outcome of a `Batch`
     Batch(BatchOutcome),
-    /// sorted lowest-utility cell summaries
+    /// sorted lowest-utility cell summaries (the recycled sink)
     Candidates(Vec<ShedCell>),
-    /// every live PM with global query indices
+    /// every live PM with global query indices (the recycled sink)
     PmRefs(Vec<PmRef>),
+    /// per-local-query statistics + expected window sizes
+    Observations {
+        /// aggregated stats, local query order
+        stats: Vec<QueryStats>,
+        /// expected window sizes, local query order
+        ws: Vec<u64>,
+    },
+    /// epoch of the installed model snapshot
+    Epoch(u64),
     /// PMs actually dropped
     Dropped(usize),
     /// acknowledgement of a state-setting request
@@ -123,8 +159,6 @@ pub(super) fn run(
     local_to_global: Vec<usize>,
 ) {
     let mut op = Operator::new(queries);
-    let mut refs: Vec<PmRef> = Vec::new();
-    let mut cells: Vec<ShedCell> = Vec::new();
     let mut takes: Vec<CellTake> = Vec::new();
     // reused per-event outcome: the batch loop never allocates once the
     // completions buffer has grown to its working size
@@ -168,12 +202,8 @@ pub(super) fn run(
                 out.completions_total = op.completions_total;
                 Response::Batch(out)
             }
-            Request::SetTables(t) => {
-                op.install_tables(&t);
-                Response::Ack
-            }
-            Request::SetCostFactors(f) => {
-                op.cost.check_factor = f;
+            Request::UpdateTables(set) => {
+                op.apply_table_set(&set, &local_to_global);
                 Response::Ack
             }
             Request::SetObsEnabled(enabled) => {
@@ -184,43 +214,40 @@ pub(super) fn run(
                 op.set_type_routing(enabled);
                 Response::Ack
             }
-            Request::Candidates { rho } => {
+            Request::Candidates { rho, mut sink } => {
                 // O(cells) enumeration off the per-window state counts,
-                // sorted by the global selection order; only the prefix
-                // covering rho PMs can ever be picked, so the rest
-                // never crosses the channel
-                op.cell_refs(&mut cells);
-                let mut cands: Vec<ShedCell> = cells
-                    .iter()
-                    .map(|c| ShedCell {
-                        query: local_to_global[c.query],
-                        ..*c
-                    })
-                    .collect();
-                cands.sort_unstable_by(crate::operator::cell_cmp);
+                // remapped to global indices and sorted *in the
+                // recycled sink*; only the prefix covering rho PMs can
+                // ever be picked, so the rest never crosses the channel
+                op.cell_refs(&mut sink);
+                for c in &mut sink {
+                    c.query = local_to_global[c.query];
+                }
+                sink.sort_unstable_by(crate::operator::cell_cmp);
                 let mut covered = 0usize;
                 let mut keep = 0usize;
-                for c in &cands {
+                for c in &sink {
                     keep += 1;
                     covered += c.count as usize;
                     if covered >= rho {
                         break;
                     }
                 }
-                cands.truncate(keep);
-                Response::Candidates(cands)
+                sink.truncate(keep);
+                Response::Candidates(sink)
             }
-            Request::PmRefs => {
-                op.pm_refs(&mut refs);
-                Response::PmRefs(
-                    refs.iter()
-                        .map(|r| PmRef {
-                            query: local_to_global[r.query],
-                            ..*r
-                        })
-                        .collect(),
-                )
+            Request::PmRefs { mut sink } => {
+                op.pm_refs(&mut sink);
+                for r in &mut sink {
+                    r.query = local_to_global[r.query];
+                }
+                Response::PmRefs(sink)
             }
+            Request::Observations => Response::Observations {
+                stats: op.obs.queries.clone(),
+                ws: op.expected_ws(),
+            },
+            Request::Epoch => Response::Epoch(op.table_epoch()),
             Request::DropCells(global_takes) => {
                 takes.clear();
                 takes.extend(global_takes.iter().map(|t| CellTake {

@@ -14,13 +14,18 @@
 //! decision per open window.  Victims are reported through
 //! [`Shedder::event_mask`]: the operator state gives masked events
 //! window bookkeeping only.
+//!
+//! The per-key-value utilities live in the model plane's
+//! [`KeyUtilityTable`] — built once from the query set and `Arc`-shared
+//! with the pipeline's [`crate::model::TableSet`] snapshot, so the
+//! black-box strategy reads the same versioned model plane the
+//! white-box ones do.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::events::{DropMask, Event};
-use crate::nfa::machine::CompiledQuery;
+use crate::model::plane::KeyUtilityTable;
 use crate::operator::OperatorState;
-use crate::query::Predicate;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
@@ -30,10 +35,9 @@ use super::{ShedReport, Shedder, ShedderKind};
 pub struct EventBaselineShedder {
     /// detector reused for the latency estimate (not for ρ)
     pub detector: OverloadDetector,
-    /// attribute slot holding the event's key value (symbol/player/bus)
-    pub key_slot: usize,
-    /// utility per key value (occurrences in patterns)
-    utilities: HashMap<i64, f64>,
+    /// shared per-key-value pattern utilities (the model plane's
+    /// key-slot table)
+    key: Arc<KeyUtilityTable>,
     /// current drop fraction in [0, max_drop]
     pub drop_p: f64,
     /// controller gain
@@ -52,44 +56,12 @@ pub struct EventBaselineShedder {
 }
 
 impl EventBaselineShedder {
-    /// Build the per-key-value utilities from the operator's queries:
-    /// each reference to a concrete key value in a pattern raises that
-    /// value's utility (paper: "an event type receives a higher utility
-    /// proportional to its repetition in patterns and in windows").
-    pub fn new(
-        detector: OverloadDetector,
-        key_slot: usize,
-        queries: &[CompiledQuery],
-        seed: u64,
-    ) -> Self {
-        let mut utilities: HashMap<i64, f64> = HashMap::new();
-        let mut bump = |preds: &[Predicate]| {
-            for p in preds {
-                match p {
-                    Predicate::AttrCmp { slot, value, .. } if *slot == key_slot => {
-                        *utilities.entry(*value as i64).or_insert(0.0) += 1.0;
-                    }
-                    Predicate::AttrIn { slot, values } if *slot == key_slot => {
-                        for v in values {
-                            *utilities.entry(*v as i64).or_insert(0.0) += 1.0;
-                        }
-                    }
-                    _ => {}
-                }
-            }
-        };
-        for cq in queries {
-            for s in &cq.head {
-                bump(&s.preds);
-            }
-            if let Some(g) = &cq.any {
-                bump(&g.spec.preds);
-            }
-        }
+    /// Shedder reading the given `Arc`-shared key-utility table (see
+    /// [`KeyUtilityTable::from_queries`] for how it is built).
+    pub fn new(detector: OverloadDetector, key: Arc<KeyUtilityTable>, seed: u64) -> Self {
         EventBaselineShedder {
             detector,
-            key_slot,
-            utilities,
+            key,
             drop_p: 0.0,
             gain: 0.5,
             max_drop: 0.95,
@@ -100,11 +72,15 @@ impl EventBaselineShedder {
         }
     }
 
+    /// The shared key-utility table this strategy reads.
+    pub fn key_table(&self) -> &Arc<KeyUtilityTable> {
+        &self.key
+    }
+
     /// Utility of an event's key value (0 for values no pattern uses).
     #[inline]
     pub fn event_utility(&self, e: &Event) -> f64 {
-        let key = e.attrs[self.key_slot] as i64;
-        self.utilities.get(&key).copied().unwrap_or(0.0)
+        self.key.utility(e)
     }
 }
 
@@ -186,7 +162,12 @@ mod tests {
     fn shedder() -> (Operator, EventBaselineShedder) {
         let op = Operator::new(q1(1000).queries);
         let det = OverloadDetector::new(1_000_000.0, 0.0);
-        let s = EventBaselineShedder::new(det, stock::A_SYMBOL, &op.queries, 3);
+        let key = Arc::new(KeyUtilityTable::from_compiled(
+            stock::A_SYMBOL,
+            &op.queries,
+        ));
+        let s = EventBaselineShedder::new(det, key, 3);
+        assert!(!s.key_table().is_empty());
         (op, s)
     }
 

@@ -30,8 +30,11 @@ pub use none::NoShedder;
 pub use pm_baseline::PmBaselineShedder;
 pub use pspice::PSpiceShedder;
 
+use std::sync::Arc;
+
 use crate::config::ExperimentConfig;
 use crate::events::{DropMask, Event};
+use crate::model::plane::KeyUtilityTable;
 use crate::model::ModelConfig;
 use crate::operator::OperatorState;
 use crate::query::Query;
@@ -186,16 +189,33 @@ impl ShedderKind {
         self.build_with(queries, detector, cfg.dataset.key_slot(), seed)
     }
 
-    /// The single strategy construction site: build a boxed [`Shedder`]
-    /// for this kind.  `detector` is the shared overload detector
-    /// (cloned per strategy); `seed` is the experiment seed, offset per
-    /// strategy by the documented seed schedule; `queries` and
-    /// `key_slot` supply E-BL's pattern utilities.
+    /// Convenience around [`ShedderKind::build_from_plane`]: builds
+    /// E-BL's [`KeyUtilityTable`] from `queries` and `key_slot` on the
+    /// spot (strategies that don't read it get none).
     pub fn build_with(
         self,
         queries: &[Query],
         detector: &OverloadDetector,
         key_slot: usize,
+        seed: u64,
+    ) -> Box<dyn Shedder> {
+        let key = matches!(self, ShedderKind::EventBaseline)
+            .then(|| Arc::new(KeyUtilityTable::from_queries(queries, key_slot)));
+        self.build_from_plane(detector, key.as_ref(), seed)
+    }
+
+    /// The single strategy construction site: build a boxed [`Shedder`]
+    /// for this kind against the model plane.  `detector` is the shared
+    /// overload detector (cloned per strategy); `seed` is the
+    /// experiment seed, offset per strategy by the documented seed
+    /// schedule; `key` is the `Arc`-shared [`KeyUtilityTable`] E-BL
+    /// reads (the same one the pipeline's
+    /// [`crate::model::TableSet`] snapshot carries; required for
+    /// [`ShedderKind::EventBaseline`], ignored by every other kind).
+    pub fn build_from_plane(
+        self,
+        detector: &OverloadDetector,
+        key: Option<&Arc<KeyUtilityTable>>,
         seed: u64,
     ) -> Box<dyn Shedder> {
         match self {
@@ -207,19 +227,11 @@ impl ShedderKind {
                 detector.clone(),
                 seed ^ PM_BL_SEED_XOR,
             )),
-            ShedderKind::EventBaseline => {
-                let compiled: Vec<crate::nfa::CompiledQuery> = queries
-                    .iter()
-                    .cloned()
-                    .map(crate::nfa::CompiledQuery::compile)
-                    .collect();
-                Box::new(EventBaselineShedder::new(
-                    detector.clone(),
-                    key_slot,
-                    &compiled,
-                    seed ^ E_BL_SEED_XOR,
-                ))
-            }
+            ShedderKind::EventBaseline => Box::new(EventBaselineShedder::new(
+                detector.clone(),
+                Arc::clone(key.expect("e-bl needs a key-utility table")),
+                seed ^ E_BL_SEED_XOR,
+            )),
         }
     }
 }

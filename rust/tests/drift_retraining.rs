@@ -1,15 +1,19 @@
-//! §III-D integration: drift-triggered model retraining end-to-end.
-//!
-//! The drift detector compares a freshly learned transition matrix
-//! against the one the live model was built from; when the input
-//! distribution shifts, the model must be rebuilt.
+//! §III-D integration: drift-triggered model retraining end-to-end —
+//! single-threaded through `run_experiment`, and sharded through the
+//! model plane (`ModelController` harvest → train → `TableSet`
+//! broadcast), including victim-selection equivalence against a
+//! single-threaded reference.
+
+use std::sync::Arc;
 
 use pspice::config::ExperimentConfig;
-use pspice::datasets::DatasetKind;
+use pspice::datasets::{mixed_queries, mixed_trace, DatasetKind};
 use pspice::harness::run_experiment;
-use pspice::model::DriftDetector;
-use pspice::operator::{ObservationHub, Operator};
+use pspice::model::{DriftDetector, ModelConfig, ModelController, ModelKind, TableSet};
+use pspice::operator::{ObservationHub, Operator, OperatorState};
 use pspice::query::builtin::q4;
+use pspice::runtime::sharded::sort_completions;
+use pspice::runtime::ShardedOperator;
 use pspice::shedding::ShedderKind;
 
 fn base() -> ExperimentConfig {
@@ -25,6 +29,7 @@ fn base() -> ExperimentConfig {
         rate: 1.4,
         lb_ms: 0.05,
         shedder: ShedderKind::PSpice,
+        model: ModelKind::Markov,
         weights: Vec::new(),
         cost_factors: Vec::new(),
         retrain_every: 0,
@@ -100,4 +105,121 @@ fn drift_detector_fires_on_distribution_shift() {
     let (mse_same, drifted_same) = det_loose.check(&op_same.obs);
     assert!(!drifted_same, "identical stream drifted: mse={mse_same}");
     let _ = ObservationHub::new(&[2]);
+}
+
+/// Drive one backend through the mixed workload with a tightly-wound
+/// `ModelController`: warm-up, drift baseline, a retrain checkpoint,
+/// then a shed round.  Returns everything retrain equivalence is
+/// judged on: sorted completions, dropped PMs, the survivor population
+/// coordinates, the final epoch, and how many retrains fired.
+#[allow(clippy::type_complexity)]
+fn drive_retraining(
+    state: &mut dyn OperatorState,
+    warm: &[pspice::events::Event],
+    tail: &[pspice::events::Event],
+    batch: usize,
+    rho: usize,
+) -> (
+    Vec<pspice::operator::ComplexEvent>,
+    usize,
+    Vec<(usize, u64, u64, u32)>,
+    u64,
+    u32,
+) {
+    let n = 8; // mixed_queries is eight queries
+    let initial = Arc::new(TableSet::initial(Vec::new(), vec![1.0; n], None));
+    let mut ctl = ModelController::new(
+        ModelKind::Markov.build(ModelConfig {
+            eta: 100,
+            max_bins: 64,
+            use_tau: true,
+        }),
+        1e-12, // everything counts as drift
+        vec![1.0; n],
+        initial,
+    );
+    ctl.install_initial(state);
+    for chunk in warm.chunks(batch) {
+        state.process_batch(chunk, None);
+    }
+    ctl.begin(state);
+
+    let mut ces = Vec::new();
+    let mut dropped = 0usize;
+    for (i, chunk) in tail.chunks(batch).enumerate() {
+        ces.extend(state.process_batch(chunk, None).completions);
+        if i == 4 {
+            // harvest → drift (tight threshold) → train → publish
+            assert!(ctl.check_and_retrain(state).unwrap(), "must retrain");
+        }
+        if i == 8 {
+            // shed from the retrained tables
+            dropped += state.shed_lowest(rho).dropped;
+        }
+    }
+    sort_completions(&mut ces);
+
+    let mut refs = Vec::new();
+    state.pm_refs(&mut refs);
+    let mut coords: Vec<(usize, u64, u64, u32)> = refs
+        .iter()
+        .map(|r| (r.query, r.open_seq, r.key_bits, r.state))
+        .collect();
+    coords.sort_unstable();
+    (ces, dropped, coords, state.table_epoch(), ctl.retrains())
+}
+
+#[test]
+fn sharded_retraining_matches_single_threaded_reference() {
+    // the acceptance test for the model plane: at shards ∈ {2, 4}, the
+    // broadcast TableSet epoch reaches the coordinator, and shedding
+    // from the retrained tables selects the exact same victims (hence
+    // the same completions and survivors) as a single-threaded run
+    // driven with identical batches and the same controller schedule
+    let trace = mixed_trace(40_000, 5);
+    let (warm, tail) = trace.split_at(24_000);
+    let batch = 512;
+    let rho = 150;
+
+    let mut single = Operator::new(mixed_queries(2_000));
+    let reference = drive_retraining(&mut single, warm, tail, batch, rho);
+    assert!(!reference.0.is_empty(), "scenario must detect something");
+    assert!(reference.1 > 0, "shed round must drop PMs");
+    assert_eq!(reference.3, 1, "one retrain => epoch 1");
+    assert_eq!(reference.4, 1);
+
+    for shards in [2usize, 4] {
+        let mut sop = ShardedOperator::new(mixed_queries(2_000), shards);
+        let run = drive_retraining(&mut sop, warm, tail, batch, rho);
+        assert_eq!(
+            run.0, reference.0,
+            "shards={shards}: completions diverged from the reference"
+        );
+        assert_eq!(run.1, reference.1, "shards={shards}: drop counts diverged");
+        assert_eq!(run.2, reference.2, "shards={shards}: survivors diverged");
+        assert_eq!(run.3, 1, "shards={shards}: coordinator epoch");
+        assert_eq!(run.4, 1, "shards={shards}: retrain count");
+        // the broadcast reached every worker, not just the coordinator
+        assert_eq!(sop.worker_epochs(), vec![1; shards]);
+    }
+}
+
+#[test]
+fn pipeline_retrains_at_shards_gt_1() {
+    // the end-to-end acceptance: PipelineBuilder::retrain no longer
+    // rejects shards > 1, and the sharded measurement phase actually
+    // rebuilds the model under a tight drift threshold
+    let mut cfg = base();
+    cfg.query = "q1+q2".into(); // four queries -> a real 2-shard split
+    cfg.dataset = DatasetKind::Stock;
+    cfg.window = 2_000;
+    cfg.shards = 2;
+    cfg.batch = 250;
+    cfg.retrain_every = 5_000;
+    cfg.drift_threshold = 1e-9;
+    let r = run_experiment(&cfg).unwrap();
+    assert_eq!(r.shards, 2);
+    assert!(r.retrains >= 1, "retrains={}", r.retrains);
+    assert_eq!(r.false_positives, 0);
+    assert!((0.0..=100.0).contains(&r.fn_percent));
 }

@@ -27,6 +27,7 @@ fn cfg(query: &str) -> ExperimentConfig {
         rate: 1.3,
         lb_ms: 0.5,
         shedder: ShedderKind::PSpice,
+        model: pspice::model::ModelKind::Markov,
         weights: Vec::new(),
         cost_factors: Vec::new(),
         retrain_every: 0,

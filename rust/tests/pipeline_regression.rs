@@ -37,6 +37,7 @@ fn tiny_cfg() -> ExperimentConfig {
         rate: 1.4,
         lb_ms: 0.05,
         shedder: ShedderKind::PSpice,
+        model: pspice::model::ModelKind::Markov,
         weights: Vec::new(),
         cost_factors: Vec::new(),
         retrain_every: 0,

@@ -9,10 +9,13 @@
 //! * event masks (black-box strategies) always match the batch length
 //!   and agree with the reported drop count.
 
+use std::sync::Arc;
+
 use pspice::config::ExperimentConfig;
 use pspice::datasets::StockGen;
 use pspice::events::{Event, EventStream};
-use pspice::model::{ModelBuilder, ModelConfig};
+use pspice::model::plane::train_from_operator;
+use pspice::model::{ModelBuilder, ModelConfig, ModelKind, TableSet, UtilityModel};
 use pspice::operator::{Operator, OperatorState};
 use pspice::query::builtin::q1;
 use pspice::query::Query;
@@ -43,8 +46,8 @@ fn hot_detector() -> OverloadDetector {
     d
 }
 
-/// Warm a backend with PMs and install utility tables, returning the
-/// events left for the measurement half.
+/// Warm a backend with PMs and install utility tables (as an epoch-0
+/// [`TableSet`] snapshot — the model-plane install path).
 fn warmed(state: &mut dyn OperatorState, warm: &[Event]) {
     // tables from a twin single-threaded operator (the state under
     // test may be sharded; tables are per-query, so they transfer)
@@ -64,7 +67,8 @@ fn warmed(state: &mut dyn OperatorState, warm: &[Event]) {
     for chunk in warm.chunks(512) {
         state.process_batch(chunk, None);
     }
-    state.install_tables(&tables);
+    state.install_table_set(Arc::new(TableSet::initial(tables, Vec::new(), None)));
+    assert_eq!(state.table_epoch(), 0);
 }
 
 /// Run `kind` over the measurement events on `state` and return
@@ -148,6 +152,48 @@ fn none_never_sheds_even_under_pressure() {
             drive(ShedderKind::None, &hot, state.as_mut(), measure, 1e12);
         assert_eq!((pms, evs), (0, 0), "{backend}: none must never drop");
         assert_eq!(cost, 0.0, "{backend}: none costs nothing");
+    }
+}
+
+#[test]
+fn pspice_sheds_against_the_frequency_only_utility_model() {
+    // the model plane's trait-proving backend: pSPICE's decision loop
+    // must work unchanged when the tables come from the frequency-only
+    // UtilityModel instead of the Markov builder, on both backends
+    let trace = StockGen::with_seed(15).take_events(14_000);
+    let (warm, measure) = trace.split_at(10_000);
+    let mut twin = Operator::new(queries());
+    for e in warm {
+        twin.process_event(e);
+    }
+    let mut model = ModelKind::Freq.build(ModelConfig {
+        eta: 100,
+        max_bins: 64,
+        use_tau: true,
+    });
+    assert_eq!(model.name(), "freq");
+    assert!(model.ready(&twin.obs));
+    let tables = train_from_operator(model.as_mut(), &twin).unwrap();
+    assert_eq!(tables.len(), queries().len());
+
+    let mut single: Box<dyn OperatorState> = Box::new(Operator::new(queries()));
+    let mut sharded: Box<dyn OperatorState> = Box::new(ShardedOperator::new(queries(), 2));
+    for (backend, state) in [("single", &mut single), ("sharded", &mut sharded)] {
+        for chunk in warm.chunks(512) {
+            state.process_batch(chunk, None);
+        }
+        state.install_table_set(Arc::new(TableSet::initial(
+            tables.clone(),
+            Vec::new(),
+            None,
+        )));
+        assert!(state.pm_count() > 10, "{backend}: scenario needs PMs");
+        let hot = hot_detector();
+        let (pms, evs, cost) =
+            drive(ShedderKind::PSpice, &hot, state.as_mut(), measure, 1e9);
+        assert!(pms > 0, "{backend}: pSPICE must shed on freq tables");
+        assert_eq!(evs, 0, "{backend}: white-box drops no events");
+        assert!(cost > 0.0, "{backend}: shedding costs time");
     }
 }
 
