@@ -11,11 +11,14 @@
 //! AOT/PJRT artifacts if `make artifacts` has run, otherwise the rust
 //! fallback), then overloads the operator at 140% of its measured
 //! capacity and shows pSPICE holding the latency bound while dropping
-//! far less quality than random PM shedding.  The last section embeds
-//! the same engine incrementally via `Pipeline::feed`.
+//! far less quality than random PM shedding.  Later sections embed
+//! the same engine incrementally via `Pipeline::feed`, retrain the
+//! model plane on drift, and drive the real-time ingestion plane from
+//! a synthetic burst source through the bounded ingest queue.
 
 use pspice::datasets::{BusGen, DatasetKind};
 use pspice::events::EventStream;
+use pspice::ingest::{Burst, OverflowPolicy, SyntheticSource};
 use pspice::model::{ModelBuilder, ModelConfig, ModelKind};
 use pspice::operator::Operator;
 use pspice::pipeline::Pipeline;
@@ -101,7 +104,7 @@ fn main() -> pspice::Result<()> {
         .queries(queries.clone())
         .shedder(ShedderKind::PSpice)
         .detector(detector.clone())
-        .tables(tables)
+        .tables(tables.clone())
         .latency_bound_ms(LB_MS)
         .arrivals(RateSource::from_capacity(capacity_ns, RATE, 0.0))
         .build()?;
@@ -121,9 +124,9 @@ fn main() -> pspice::Result<()> {
     //    broadcasts them to every worker), and `.model(..)` swaps the
     //    UtilityModel backend — here the frequency-only predictor
     let mut pipe = Pipeline::builder()
-        .queries(queries)
+        .queries(queries.clone())
         .shedder(ShedderKind::PSpice)
-        .detector(detector)
+        .detector(detector.clone())
         .model(ModelKind::Freq)
         .retrain(10_000, 1e-9) // tight threshold: retrain eagerly
         .latency_bound_ms(LB_MS)
@@ -136,6 +139,45 @@ fn main() -> pspice::Result<()> {
         "\nmodel plane: {} retrains -> table epoch {} (freq backend)",
         run.retrains,
         pipe.table_epoch()
+    );
+
+    // 5. the real-time ingestion plane: a synthetic burst source feeds
+    //    the bounded ingest queue and `run_realtime` drives the loop on
+    //    the clock abstraction — swap `.wall_clock()` into the builder
+    //    and the identical code runs against real time
+    let period_ns = 2_000.0 * capacity_ns;
+    let source = SyntheticSource::new(
+        measure.to_vec(),
+        Box::new(Burst::from_capacity(
+            capacity_ns,
+            0.5,        // quiet phase: 50% of capacity
+            2.0 * RATE, // bursts: 280% of capacity
+            period_ns,
+            0.25 * period_ns,
+        )),
+        measure[0].seq,
+        warm.last().map_or(0.0, |e| e.ts_ms as f64 * 1e6),
+    )
+    .with_limit(20_000);
+    let mut pipe = Pipeline::builder()
+        .queries(queries)
+        .shedder(ShedderKind::PSpice)
+        .detector(detector)
+        .tables(tables)
+        .latency_bound_ms(LB_MS)
+        .key_slot(DatasetKind::Bus.key_slot())
+        .ingest_source(Box::new(source))
+        .ingest_capacity(4_096)
+        .ingest_policy(OverflowPolicy::DropOldest)
+        .build()?;
+    pipe.prime(warm);
+    let run = pipe.run_realtime(f64::INFINITY)?;
+    println!(
+        "\nreal-time burst ingest: p95={:.3}ms (LB={LB_MS}ms), {} PMs shed, \
+         {} events lost at the queue",
+        run.latency.p95_ns() / 1e6,
+        run.totals.dropped_pms,
+        run.queue_dropped,
     );
     Ok(())
 }

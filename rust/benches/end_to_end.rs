@@ -30,6 +30,7 @@ fn cell(query: &str, dataset: DatasetKind, window: u64, n: usize) -> ExperimentC
         drift_threshold: 0.01,
         shards: 1,
         batch: 256,
+        ..ExperimentConfig::default()
     }
 }
 

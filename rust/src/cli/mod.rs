@@ -68,6 +68,12 @@ pub fn usage() -> &'static str {
                   [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
                   [--model markov|freq]\n\
                   [--retrain-every N] [--drift-threshold F]\n\
+       realtime   run against the ingest plane (same flags as run, plus)\n\
+                  [--source trace|tail|socket|burst|flashcrowd|oscillate]\n\
+                  [--overload predicted|measured] [--duration-ms F]\n\
+                  [--ingest-capacity N] [--ingest-policy drop-oldest|block]\n\
+                  [--wall true|false] [--path file.csv] [--addr host:port]\n\
+                  [--out result.json]\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
        fig7       [--scale F]                       latency-bound trace\n\
@@ -120,6 +126,19 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     if let Some(m) = flags.get("model") {
         cfg.model = m.parse()?;
     }
+    // real-time plane
+    if let Some(o) = flags.get("overload") {
+        cfg.overload = o.parse()?;
+    }
+    if let Some(s) = flags.get("source") {
+        cfg.source = s.parse()?;
+    }
+    cfg.ingest_capacity = flags.get_parse("ingest-capacity", cfg.ingest_capacity)?;
+    if let Some(p) = flags.get("ingest-policy") {
+        cfg.ingest_policy = p.parse()?;
+    }
+    cfg.duration_ms = flags.get_parse("duration-ms", cfg.duration_ms)?;
+    anyhow::ensure!(cfg.ingest_capacity >= 1, "--ingest-capacity must be at least 1");
     Ok(cfg)
 }
 
@@ -166,6 +185,73 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 "  wall throughput   : {:.0} events/s",
                 r.wall_events_per_sec
             );
+            Ok(())
+        }
+        "realtime" => {
+            let cfg = cfg_from_flags(&flags)?;
+            let wall: bool = flags.get_parse("wall", false)?;
+            // tail/socket need a host attachment built here; everything
+            // else the harness builds from the config
+            let external: Option<Box<dyn crate::ingest::Source>> = match cfg.source {
+                crate::ingest::SourceKind::Tail => {
+                    let path = flags
+                        .get("path")
+                        .ok_or_else(|| anyhow::anyhow!("--source tail needs --path"))?;
+                    Some(Box::new(crate::ingest::FileTailSource::from_start(
+                        std::path::Path::new(path),
+                    )?))
+                }
+                crate::ingest::SourceKind::Socket => {
+                    let addr = flags
+                        .get("addr")
+                        .ok_or_else(|| anyhow::anyhow!("--source socket needs --addr"))?;
+                    let src = crate::ingest::SocketSource::bind(addr)?;
+                    eprintln!("listening on {}", src.local_addr()?);
+                    Some(Box::new(src))
+                }
+                _ => None,
+            };
+            let r = crate::harness::run_realtime_experiment(&cfg, external, wall)?;
+            println!(
+                "realtime: query={} shedder={} source={} overload={} clock={}",
+                r.query,
+                r.shedder,
+                r.source,
+                r.overload,
+                if r.wall { "wall" } else { "virtual" }
+            );
+            println!("  capacity          : {:.0} ns/event", r.capacity_ns);
+            println!(
+                "  events            : {} processed, {} queue-dropped",
+                r.events_processed(),
+                r.queue_dropped
+            );
+            println!("  complex events    : {}", r.completions);
+            println!(
+                "  latency           : mean={:.3}ms p95={:.3}ms max={:.3}ms (LB {:.3}ms)",
+                r.latency.stats.mean() / 1e6,
+                r.latency.p95_ns() / 1e6,
+                r.latency.stats.max() / 1e6,
+                r.lb_ms
+            );
+            println!(
+                "  violations        : {:.2}%",
+                r.latency.violation_rate() * 100.0
+            );
+            println!(
+                "  shed              : {} PMs, {} events, {:.3}% overhead",
+                r.dropped_pms,
+                r.dropped_events,
+                r.shed_overhead * 100.0
+            );
+            println!(
+                "  wall throughput   : {:.0} events/s over {:.2}s",
+                r.wall_events_per_sec, r.real_elapsed_secs
+            );
+            if let Some(out) = flags.get("out") {
+                r.write_json(std::path::Path::new(out))?;
+                println!("  wrote {out}");
+            }
             Ok(())
         }
         "fig5" => figures::fig5(
@@ -317,6 +403,40 @@ mod tests {
         let cfg = cfg_from_flags(&f).unwrap();
         assert_eq!(cfg.retrain_every, 5_000);
         assert!((cfg.drift_threshold - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn realtime_flags_parse() {
+        let f = Flags::parse(&s(&[
+            "realtime",
+            "--source",
+            "burst",
+            "--overload",
+            "measured",
+            "--ingest-capacity",
+            "1024",
+            "--ingest-policy",
+            "block",
+            "--duration-ms",
+            "50",
+        ]))
+        .unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.source, crate::ingest::SourceKind::Burst);
+        assert_eq!(cfg.overload, crate::shedding::OverloadKind::Measured);
+        assert_eq!(cfg.ingest_capacity, 1024);
+        assert_eq!(cfg.ingest_policy, crate::ingest::OverflowPolicy::Block);
+        assert!((cfg.duration_ms - 50.0).abs() < 1e-12);
+        // defaults are the batch-identical trace plane
+        let f = Flags::parse(&s(&["realtime", "--query", "q4"])).unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.source, crate::ingest::SourceKind::Trace);
+        assert_eq!(cfg.overload, crate::shedding::OverloadKind::Predicted);
+        // bad selectors are rejected
+        let f = Flags::parse(&s(&["realtime", "--source", "warp"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
+        let f = Flags::parse(&s(&["realtime", "--ingest-capacity", "0"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
     }
 
     #[test]

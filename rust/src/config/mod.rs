@@ -10,8 +10,9 @@ pub mod toml_lite;
 pub use toml_lite::{TomlDoc, TomlValue};
 
 use crate::datasets::DatasetKind;
+use crate::ingest::{OverflowPolicy, SourceKind};
 use crate::model::ModelKind;
-use crate::shedding::ShedderKind;
+use crate::shedding::{OverloadKind, ShedderKind};
 
 /// Fully resolved experiment configuration (see `examples/configs/`).
 #[derive(Debug, Clone)]
@@ -56,6 +57,17 @@ pub struct ExperimentConfig {
     pub shards: usize,
     /// events per dispatched batch in sharded mode
     pub batch: usize,
+    /// which overload detector drives shedding (`predicted` = Alg. 1
+    /// regressions, `measured` = latency EWMAs)
+    pub overload: OverloadKind,
+    /// ingest source for real-time runs (`trace` replays the dataset)
+    pub source: SourceKind,
+    /// bounded ingest-queue capacity (events)
+    pub ingest_capacity: usize,
+    /// what the full ingest queue does (`drop-oldest` or `block`)
+    pub ingest_policy: OverflowPolicy,
+    /// real-time run duration in clock ms (0 = until the source ends)
+    pub duration_ms: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -79,6 +91,11 @@ impl Default for ExperimentConfig {
             drift_threshold: 0.01,
             shards: 1,
             batch: 256,
+            overload: OverloadKind::Predicted,
+            source: SourceKind::Trace,
+            ingest_capacity: 8_192,
+            ingest_policy: OverflowPolicy::DropOldest,
+            duration_ms: 0.0,
         }
     }
 }
@@ -143,6 +160,21 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_num(section, "batch") {
             cfg.batch = v as usize;
+        }
+        if let Some(v) = doc.get_str(section, "overload") {
+            cfg.overload = v.parse()?;
+        }
+        if let Some(v) = doc.get_str(section, "source") {
+            cfg.source = v.parse()?;
+        }
+        if let Some(v) = doc.get_num(section, "ingest_capacity") {
+            cfg.ingest_capacity = v as usize;
+        }
+        if let Some(v) = doc.get_str(section, "ingest_policy") {
+            cfg.ingest_policy = v.parse()?;
+        }
+        if let Some(v) = doc.get_num(section, "duration_ms") {
+            cfg.duration_ms = v;
         }
         Ok(cfg)
     }
@@ -220,5 +252,26 @@ mod tests {
         assert!(
             ExperimentConfig::from_toml("[experiment]\nshedder = \"magic\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn realtime_keys_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\noverload = \"measured\"\nsource = \"burst\"\n\
+             ingest_capacity = 512\ningest_policy = \"block\"\nduration_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.overload, OverloadKind::Measured);
+        assert_eq!(cfg.source, SourceKind::Burst);
+        assert_eq!(cfg.ingest_capacity, 512);
+        assert_eq!(cfg.ingest_policy, OverflowPolicy::Block);
+        assert!((cfg.duration_ms - 250.0).abs() < 1e-12);
+        // and the defaults stay on the batch plane
+        let d = ExperimentConfig::default();
+        assert_eq!(d.overload, OverloadKind::Predicted);
+        assert_eq!(d.source, SourceKind::Trace);
+        assert_eq!(d.ingest_policy, OverflowPolicy::DropOldest);
+        assert!(ExperimentConfig::from_toml("[experiment]\noverload = \"psychic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nsource = \"warp\"\n").is_err());
     }
 }

@@ -48,6 +48,40 @@ impl Event {
     pub fn attr_id(&self, slot: usize) -> i64 {
         self.attrs[slot] as i64
     }
+
+    /// Parse one CSV row in the archive format
+    /// (`seq,ts_ms,etype,a0,a1,...`; see [`crate::datasets::csv`]).
+    /// Trailing attribute columns may be omitted (they default to 0),
+    /// which is what the line-oriented ingest sources (file tail, TCP
+    /// socket) accept on the wire.
+    pub fn parse_csv(line: &str) -> crate::Result<Event> {
+        let mut parts = line.trim().split(',');
+        let mut next = |what: &str| {
+            parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("event line missing {what}: {line:?}"))
+        };
+        let seq: u64 = next("seq")?.trim().parse()?;
+        let ts_ms: u64 = next("ts_ms")?.trim().parse()?;
+        let etype: EventType = next("etype")?.trim().parse()?;
+        let mut attrs = [0.0; MAX_ATTRS];
+        for (i, slot) in attrs.iter_mut().enumerate() {
+            match parts.next() {
+                Some(v) => {
+                    *slot = v.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("event line has bad a{i}: {line:?}")
+                    })?
+                }
+                None => break,
+            }
+        }
+        Ok(Event {
+            seq,
+            ts_ms,
+            etype,
+            attrs,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -69,6 +103,26 @@ mod tests {
     #[should_panic(expected = "too many attributes")]
     fn too_many_attrs_panics() {
         Event::new(0, 0, 0, &[0.0; MAX_ATTRS + 1]);
+    }
+
+    #[test]
+    fn parse_csv_round_trips_and_tolerates_short_rows() {
+        let e = Event::new(42, 1234, 3, &[7.0, 1.5]);
+        let row = format!(
+            "{},{},{},{}",
+            e.seq,
+            e.ts_ms,
+            e.etype,
+            e.attrs.map(|a| a.to_string()).join(",")
+        );
+        assert_eq!(Event::parse_csv(&row).unwrap(), e);
+        // wire format: trailing attribute columns are optional
+        let short = Event::parse_csv("42,1234,3,7").unwrap();
+        assert_eq!(short.seq, 42);
+        assert_eq!(short.attr(0), 7.0);
+        assert_eq!(short.attr(1), 0.0);
+        assert!(Event::parse_csv("not,a,row").is_err());
+        assert!(Event::parse_csv("1,2").is_err());
     }
 
     #[test]

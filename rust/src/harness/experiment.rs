@@ -115,7 +115,7 @@ pub fn build_trace(cfg: &ExperimentConfig) -> Vec<Event> {
     }
 }
 
-fn apply_cost_factors(op: &mut Operator, cfg: &ExperimentConfig) {
+pub(crate) fn apply_cost_factors(op: &mut Operator, cfg: &ExperimentConfig) {
     if cfg.cost_factors.is_empty() {
         return;
     }
@@ -159,7 +159,7 @@ fn ground_truth(
 /// Phase 2: calibrate the overload detector on the warm-up prefix and
 /// build the utility model.  Returns the trained detector plus the
 /// calibrated operator (whose observations feed the model builder).
-fn calibrate(
+pub(crate) fn calibrate(
     cfg: &ExperimentConfig,
     queries: &[Query],
     trace: &[Event],
@@ -296,6 +296,7 @@ mod tests {
             drift_threshold: 0.01,
             shards: 1,
             batch: 256,
+            ..ExperimentConfig::default()
         }
     }
 

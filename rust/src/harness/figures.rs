@@ -86,6 +86,7 @@ fn base_cfg(query: &str, opts: &FigureOpts) -> ExperimentConfig {
         drift_threshold: 0.01,
         shards: 1,
         batch: 256,
+        ..ExperimentConfig::default()
     }
 }
 

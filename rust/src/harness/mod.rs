@@ -4,9 +4,14 @@
 //!   + train → overloaded measurement on a [`crate::pipeline::Pipeline`])
 //!   producing FN%/FP/latency/overhead numbers for one configuration,
 //! * [`figures`] — drivers that regenerate every figure of the paper's
-//!   evaluation section (Figs. 5–9) as printed tables + CSV files.
+//!   evaluation section (Figs. 5–9) as printed tables + CSV files,
+//! * [`realtime`] — the real-time driver: same calibration, then the
+//!   ingest plane ([`crate::pipeline::Pipeline::run_realtime`]) under
+//!   replay, synthetic-overload, tail or socket sources.
 
 pub mod experiment;
 pub mod figures;
+pub mod realtime;
 
 pub use experiment::{run_experiment, ExperimentResult};
+pub use realtime::{run_realtime_experiment, RealtimeResult};

@@ -1,0 +1,424 @@
+//! The real-time experiment driver: calibrate on the warm-up prefix
+//! exactly like the batch runner, then drive the pipeline's ingest
+//! plane ([`Pipeline::run_realtime`]) instead of the virtual-time
+//! feed loop.
+//!
+//! Ground truth is deliberately skipped: a real-time run races a
+//! clock, so QoR is not comparable across machines — the quantities
+//! that ARE portable (p95 vs the bound, queue drops, shed volume) are
+//! what [`RealtimeResult`] reports, and what the CI smoke gate checks.
+//!
+//! Sources come from the configuration: `trace` replays the dataset on
+//! the deterministic schedule; `burst`/`flashcrowd`/`oscillate` are
+//! the synthetic adversarial generators, parameterized from the
+//! *measured* capacity so "120% load" means the same thing on every
+//! machine; `tail`/`socket` need an external attachment (a path or an
+//! address) and are passed in prebuilt by the CLI.
+
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::events::Event;
+use crate::ingest::{
+    Burst, FlashCrowd, OscillatingRate, Source, SourceKind, SyntheticSource, TraceSource,
+};
+use crate::metrics::LatencyTracker;
+use crate::model::plane::train_from_operator;
+use crate::operator::Operator;
+use crate::pipeline::Pipeline;
+use crate::sim::RateSource;
+
+use super::experiment::{apply_cost_factors, build_queries, build_trace, calibrate};
+
+/// Summary of one real-time run — the portable quantities only (see
+/// the [module docs](self) for why there is no QoR here).
+#[derive(Debug, Clone)]
+pub struct RealtimeResult {
+    /// configuration echo
+    pub query: String,
+    /// strategy that ran
+    pub shedder: &'static str,
+    /// source that fed the run
+    pub source: &'static str,
+    /// overload plane ("predicted" or "measured")
+    pub overload: &'static str,
+    /// true = wall clock, false = virtual clock
+    pub wall: bool,
+    /// measured capacity (mean ns per event on the warm-up prefix)
+    pub capacity_ns: f64,
+    /// the latency bound LB (ms)
+    pub lb_ms: f64,
+    /// latency accounting for every processed event
+    pub latency: LatencyTracker,
+    /// events lost at the full ingest queue (drop-oldest only)
+    pub queue_dropped: u64,
+    /// PMs dropped by the shedder
+    pub dropped_pms: u64,
+    /// events dropped by the shedder (E-BL)
+    pub dropped_events: u64,
+    /// shed time / operator busy time
+    pub shed_overhead: f64,
+    /// peak live PM count
+    pub peak_pms: usize,
+    /// complex events detected during the run
+    pub completions: usize,
+    /// wall-clock events/s of the run loop
+    pub wall_events_per_sec: f64,
+    /// real elapsed seconds (host time, even for virtual runs)
+    pub real_elapsed_secs: f64,
+}
+
+impl RealtimeResult {
+    /// Events that went through latency accounting.
+    pub fn events_processed(&self) -> u64 {
+        self.latency.stats.count()
+    }
+
+    /// Hand-rolled JSON (the vendored crate set has no serde): flat
+    /// object, milliseconds for every latency field.
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.6}")
+            } else {
+                "0".into()
+            }
+        }
+        let l = &self.latency;
+        format!(
+            concat!(
+                "{{\n",
+                "  \"query\": \"{query}\",\n",
+                "  \"shedder\": \"{shedder}\",\n",
+                "  \"source\": \"{source}\",\n",
+                "  \"overload\": \"{overload}\",\n",
+                "  \"wall\": {wall},\n",
+                "  \"capacity_ns\": {capacity_ns},\n",
+                "  \"lb_ms\": {lb_ms},\n",
+                "  \"events\": {events},\n",
+                "  \"completions\": {completions},\n",
+                "  \"mean_ms\": {mean_ms},\n",
+                "  \"p50_ms\": {p50_ms},\n",
+                "  \"p95_ms\": {p95_ms},\n",
+                "  \"max_ms\": {max_ms},\n",
+                "  \"violations\": {violations},\n",
+                "  \"violation_rate\": {violation_rate},\n",
+                "  \"queue_dropped\": {queue_dropped},\n",
+                "  \"dropped_pms\": {dropped_pms},\n",
+                "  \"dropped_events\": {dropped_events},\n",
+                "  \"shed_overhead\": {shed_overhead},\n",
+                "  \"peak_pms\": {peak_pms},\n",
+                "  \"wall_events_per_sec\": {weps},\n",
+                "  \"real_elapsed_secs\": {elapsed}\n",
+                "}}\n"
+            ),
+            query = self.query,
+            shedder = self.shedder,
+            source = self.source,
+            overload = self.overload,
+            wall = self.wall,
+            capacity_ns = num(self.capacity_ns),
+            lb_ms = num(self.lb_ms),
+            events = self.events_processed(),
+            completions = self.completions,
+            mean_ms = num(l.stats.mean() / 1e6),
+            p50_ms = num(l.quantile(0.5) / 1e6),
+            p95_ms = num(l.p95_ns() / 1e6),
+            max_ms = num(l.stats.max() / 1e6),
+            violations = l.violations,
+            violation_rate = num(l.violation_rate()),
+            queue_dropped = self.queue_dropped,
+            dropped_pms = self.dropped_pms,
+            dropped_events = self.dropped_events,
+            shed_overhead = num(self.shed_overhead),
+            peak_pms = self.peak_pms,
+            weps = num(self.wall_events_per_sec),
+            elapsed = num(self.real_elapsed_secs),
+        )
+    }
+
+    /// Write [`RealtimeResult::to_json`] to a file.
+    pub fn write_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// Mean per-event cost (ns) over the warm-up prefix — the portable
+/// capacity yardstick the synthetic generators and the trace schedule
+/// are calibrated against.  Same settle-skip as the batch runner's
+/// ground-truth pass, but over the prefix only: real-time runs never
+/// see the measurement events ahead of time.
+fn measure_capacity(cfg: &ExperimentConfig, queries: &[crate::query::Query], warmup: &[Event]) -> f64 {
+    let mut op = Operator::new(queries.to_vec());
+    apply_cost_factors(&mut op, cfg);
+    op.obs.enabled = false;
+    let skip = warmup.len() / 10;
+    let mut sum = 0.0;
+    let mut n = 0u64;
+    for (i, e) in warmup.iter().enumerate() {
+        let out = op.process_event(e);
+        if i >= skip {
+            sum += out.cost_ns;
+            n += 1;
+        }
+    }
+    sum / n.max(1) as f64
+}
+
+/// Build the configured ingest source.  Synthetic generators replay
+/// the measurement slice of the trace with profile parameters derived
+/// from `capacity_ns`, so the same config overloads every machine by
+/// the same factor; sequence numbers and timestamps continue from the
+/// warm-up prefix so windows see one monotonic stream.
+pub fn build_realtime_source(
+    cfg: &ExperimentConfig,
+    capacity_ns: f64,
+    trace: &[Event],
+    warmup: usize,
+) -> crate::Result<Box<dyn Source>> {
+    let pool = trace[warmup..].to_vec();
+    anyhow::ensure!(!pool.is_empty(), "no measurement events after warm-up");
+    let seq0 = pool[0].seq;
+    let ts0_ns = if warmup > 0 {
+        trace[warmup - 1].ts_ms as f64 * 1e6
+    } else {
+        0.0
+    };
+    // one profile "cycle" spans ~2000 events of drain time: long enough
+    // for queueing to build, short enough that a smoke run sees many
+    let period_ns = 2_000.0 * capacity_ns;
+    let source: Box<dyn Source> = match cfg.source {
+        SourceKind::Trace => Box::new(TraceSource::new(
+            pool,
+            RateSource::from_capacity(capacity_ns, cfg.rate, 0.0),
+        )),
+        SourceKind::Burst => Box::new(
+            SyntheticSource::new(
+                pool,
+                Box::new(Burst::from_capacity(
+                    capacity_ns,
+                    0.5,
+                    2.0 * cfg.rate,
+                    period_ns,
+                    0.25 * period_ns,
+                )),
+                seq0,
+                ts0_ns,
+            )
+            .with_limit(cfg.events),
+        ),
+        SourceKind::FlashCrowd => Box::new(
+            SyntheticSource::new(
+                pool,
+                Box::new(FlashCrowd::from_capacity(
+                    capacity_ns,
+                    0.6,
+                    2.0 * cfg.rate,
+                    0.25 * period_ns,
+                    0.5 * period_ns,
+                    period_ns,
+                    0.5 * period_ns,
+                )),
+                seq0,
+                ts0_ns,
+            )
+            .with_limit(cfg.events),
+        ),
+        SourceKind::Oscillate => Box::new(
+            SyntheticSource::new(
+                pool,
+                Box::new(OscillatingRate::from_capacity(
+                    capacity_ns,
+                    cfg.rate,
+                    0.8,
+                    period_ns,
+                )),
+                seq0,
+                ts0_ns,
+            )
+            .with_limit(cfg.events),
+        ),
+        SourceKind::Tail | SourceKind::Socket => anyhow::bail!(
+            "source {:?} needs an external attachment (--path / --addr)",
+            cfg.source.name()
+        ),
+    };
+    Ok(source)
+}
+
+/// Run one real-time experiment: calibrate + train on the warm-up
+/// prefix (identical to the batch runner's phase 2), then drive the
+/// ingest plane until the source ends or `cfg.duration_ms` of clock
+/// time passes.  `external` overrides the configured source (the CLI
+/// builds tail/socket sources there); `wall` swaps the virtual clock
+/// for the monotonic one.
+pub fn run_realtime_experiment(
+    cfg: &ExperimentConfig,
+    external: Option<Box<dyn Source>>,
+    wall: bool,
+) -> crate::Result<RealtimeResult> {
+    let queries = build_queries(cfg)?;
+    let trace = build_trace(cfg);
+    let warmup = (cfg.warmup as usize).min(trace.len());
+    let capacity_ns = measure_capacity(cfg, &queries, &trace[..warmup]);
+    anyhow::ensure!(capacity_ns > 0.0, "warm-up prefix too short to measure capacity");
+    let (op, detector) = calibrate(cfg, &queries, &trace)?;
+    let tables = if cfg.shedder.needs_tables() {
+        let mut model = cfg.model.build(cfg.shedder.model_config());
+        train_from_operator(model.as_mut(), &op)?
+    } else {
+        Vec::new()
+    };
+    drop(op);
+    let source = match external {
+        Some(s) => s,
+        None => build_realtime_source(cfg, capacity_ns, &trace, warmup)?,
+    };
+    let source_name = source.name();
+    let mut builder = Pipeline::builder()
+        .queries(queries)
+        .shedder(cfg.shedder)
+        .detector(detector)
+        .tables(tables)
+        .latency_bound_ms(cfg.lb_ms)
+        .latency_stride((cfg.events / 2_000).max(1))
+        .shards(cfg.shards)
+        .batch(cfg.batch)
+        .seed(cfg.seed)
+        .key_slot(cfg.dataset.key_slot())
+        .cost_factors(cfg.cost_factors.clone())
+        .model(cfg.model)
+        .retrain(cfg.retrain_every, cfg.drift_threshold)
+        .overload(cfg.overload)
+        .ingest_capacity(cfg.ingest_capacity)
+        .ingest_policy(cfg.ingest_policy)
+        .ingest_source(source);
+    if wall {
+        builder = builder.wall_clock();
+    }
+    let mut pipe = builder.build()?;
+    pipe.prime(&trace[..warmup]);
+    let deadline_ns = if cfg.duration_ms > 0.0 {
+        pipe.now_ns() + cfg.duration_ms * 1e6
+    } else {
+        f64::INFINITY
+    };
+    let started = Instant::now();
+    let run = pipe.run_realtime(deadline_ns)?;
+    let real_elapsed_secs = started.elapsed().as_secs_f64();
+    Ok(RealtimeResult {
+        query: cfg.query.clone(),
+        shedder: run.shedder,
+        source: source_name,
+        overload: cfg.overload.name(),
+        wall,
+        capacity_ns,
+        lb_ms: cfg.lb_ms,
+        latency: run.latency,
+        queue_dropped: run.queue_dropped,
+        dropped_pms: run.totals.dropped_pms,
+        dropped_events: run.totals.dropped_events,
+        shed_overhead: run.shed_overhead,
+        peak_pms: run.peak_pms,
+        completions: run.completions.len(),
+        wall_events_per_sec: run.wall_events_per_sec,
+        real_elapsed_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::DatasetKind;
+    use crate::shedding::{OverloadKind, ShedderKind};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            query: "q4".into(),
+            window: 2_000,
+            pattern_n: 4,
+            slide: 250,
+            dataset: DatasetKind::Bus,
+            seed: 3,
+            events: 10_000,
+            warmup: 12_000,
+            rate: 1.4,
+            lb_ms: 0.05,
+            shedder: ShedderKind::PSpice,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn trace_source_run_completes_virtually() {
+        let res = run_realtime_experiment(&tiny_cfg(), None, false).unwrap();
+        assert_eq!(res.source, "trace");
+        assert_eq!(res.overload, "predicted");
+        assert!(!res.wall);
+        assert_eq!(res.events_processed(), 10_000);
+        assert!(res.capacity_ns > 0.0);
+        // pSPICE holds the bound on the replayed overload
+        assert!(
+            res.latency.violation_rate() < 0.05,
+            "violations={}",
+            res.latency.violation_rate()
+        );
+    }
+
+    #[test]
+    fn synthetic_burst_overloads_and_sheds() {
+        let mut cfg = tiny_cfg();
+        cfg.source = crate::ingest::SourceKind::Burst;
+        let res = run_realtime_experiment(&cfg, None, false).unwrap();
+        assert_eq!(res.source, "burst");
+        assert_eq!(res.events_processed(), 10_000);
+        assert!(
+            res.dropped_pms > 0,
+            "2.8x-capacity bursts must force shedding"
+        );
+    }
+
+    #[test]
+    fn measured_overload_plane_runs() {
+        let mut cfg = tiny_cfg();
+        cfg.source = crate::ingest::SourceKind::Oscillate;
+        cfg.overload = OverloadKind::Measured;
+        let res = run_realtime_experiment(&cfg, None, false).unwrap();
+        assert_eq!(res.overload, "measured");
+        assert_eq!(res.events_processed(), 10_000);
+        assert!(res.dropped_pms > 0, "measured plane must also shed");
+    }
+
+    #[test]
+    fn json_has_the_gate_fields() {
+        let res = run_realtime_experiment(&tiny_cfg(), None, false).unwrap();
+        let json = res.to_json();
+        for key in [
+            "\"p95_ms\"",
+            "\"lb_ms\"",
+            "\"violation_rate\"",
+            "\"queue_dropped\"",
+            "\"shedder\"",
+            "\"wall\": false",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // parses as JSON (python gate in CI does the same)
+        assert!(json.trim_end().ends_with('}'));
+        assert!(json.starts_with('{'));
+    }
+
+    #[test]
+    fn duration_deadline_stops_the_run() {
+        let mut cfg = tiny_cfg();
+        cfg.source = crate::ingest::SourceKind::Oscillate;
+        cfg.duration_ms = 1.0; // 1 virtual ms — far less than the trace
+        let res = run_realtime_experiment(&cfg, None, false).unwrap();
+        assert!(
+            res.events_processed() < 10_000,
+            "deadline must cut the run short (processed {})",
+            res.events_processed()
+        );
+    }
+}

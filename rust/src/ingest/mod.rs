@@ -1,0 +1,116 @@
+//! The real-time ingestion plane: sources, the bounded ingest queue,
+//! and the arrival timestamps that turn the latency bound into a
+//! defended SLO.
+//!
+//! Virtual-time experiments model arrivals with a [`crate::sim::RateSource`]
+//! schedule; this module is the path for *actual* arrivals.  A
+//! [`Source`] is polled with the current clock time and yields
+//! timestamped events; they pass through a bounded [`IngestQueue`]
+//! whose arrival stamps measure genuine queueing delay; the pipeline's
+//! [`crate::pipeline::Pipeline::run_realtime`] loop drains it under a
+//! [`crate::sim::Clock`] — the virtual [`crate::sim::SimClock`] for
+//! deterministic replay, or a [`crate::sim::WallClock`] for wall-clock
+//! pressure.
+//!
+//! Sources:
+//!
+//! * [`TraceSource`] — today's datasets on the deterministic schedule,
+//! * [`FileTailSource`] — follow a growing CSV file,
+//! * [`SocketSource`] — line-oriented events over TCP,
+//! * [`Burst`], [`FlashCrowd`], [`OscillatingRate`] — synthetic
+//!   adversarial overload generators (via [`SyntheticSource`]).
+
+pub mod queue;
+pub mod socket;
+pub mod source;
+pub mod synthetic;
+pub mod tail;
+
+pub use queue::{IngestQueue, OverflowPolicy, PushOutcome};
+pub use socket::SocketSource;
+pub use source::{Source, SourcePoll, TraceSource};
+pub use synthetic::{Burst, FlashCrowd, OscillatingRate, RateProfile, SyntheticSource};
+pub use tail::FileTailSource;
+
+/// CLI/config selector for the ingest source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SourceKind {
+    /// pre-materialized dataset trace on the deterministic schedule
+    #[default]
+    Trace,
+    /// tail a growing CSV file
+    Tail,
+    /// line-oriented events over TCP
+    Socket,
+    /// square-wave overload bursts
+    Burst,
+    /// one ramp–hold–decay flash crowd
+    FlashCrowd,
+    /// sinusoidal load straddling capacity
+    Oscillate,
+}
+
+/// Every source selector, in canonical order.
+pub const ALL_SOURCE_KINDS: [SourceKind; 6] = [
+    SourceKind::Trace,
+    SourceKind::Tail,
+    SourceKind::Socket,
+    SourceKind::Burst,
+    SourceKind::FlashCrowd,
+    SourceKind::Oscillate,
+];
+
+impl SourceKind {
+    /// Canonical selector name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SourceKind::Trace => "trace",
+            SourceKind::Tail => "tail",
+            SourceKind::Socket => "socket",
+            SourceKind::Burst => "burst",
+            SourceKind::FlashCrowd => "flashcrowd",
+            SourceKind::Oscillate => "oscillate",
+        }
+    }
+
+    /// Is this one of the synthetic overload generators?
+    pub fn is_synthetic(self) -> bool {
+        matches!(
+            self,
+            SourceKind::Burst | SourceKind::FlashCrowd | SourceKind::Oscillate
+        )
+    }
+}
+
+impl std::str::FromStr for SourceKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "trace" => Ok(SourceKind::Trace),
+            "tail" => Ok(SourceKind::Tail),
+            "socket" => Ok(SourceKind::Socket),
+            "burst" => Ok(SourceKind::Burst),
+            "flashcrowd" | "flash-crowd" => Ok(SourceKind::FlashCrowd),
+            "oscillate" | "oscillating" => Ok(SourceKind::Oscillate),
+            other => anyhow::bail!(
+                "unknown source {other:?} (trace|tail|socket|burst|flashcrowd|oscillate)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_kind_names_round_trip() {
+        for kind in ALL_SOURCE_KINDS {
+            assert_eq!(kind.name().parse::<SourceKind>().unwrap(), kind);
+        }
+        assert!("warp-drive".parse::<SourceKind>().is_err());
+        assert_eq!(SourceKind::default(), SourceKind::Trace);
+        assert!(SourceKind::Burst.is_synthetic());
+        assert!(!SourceKind::Socket.is_synthetic());
+    }
+}

@@ -1,0 +1,289 @@
+//! The bounded ingest queue between sources and the pipeline.
+//!
+//! Every admitted event carries its arrival timestamp, so the queue
+//! *is* the measurement instrument for queueing delay: the real-time
+//! loop derives `l_q` from the stamps of the batch it pops, and the
+//! measured overload detector derives ρ from that delay — no cost
+//! model involved.
+//!
+//! Overflow is governed by [`OverflowPolicy`]:
+//!
+//! * [`OverflowPolicy::DropOldest`] — a full queue evicts its oldest
+//!   entry to admit the new one (bounding queueing delay at the price
+//!   of losing input; the drops are counted and reported separately
+//!   from shedding).
+//! * [`OverflowPolicy::Block`] — a full queue refuses the push; the
+//!   ingest loop then stops pulling from the source, i.e. backpressure
+//!   propagates upstream (a TCP source's peer eventually blocks on its
+//!   socket, a scheduled source simply falls behind and later floods).
+//!
+//! Independently of the hard capacity, the queue latches a
+//! *backpressure* flag at a high watermark and releases it at a low
+//! watermark.  Under [`OverflowPolicy::Block`] the ingest loop stops
+//! pulling as soon as the flag latches — the hysteresis band keeps the
+//! loop from flapping between pull and stall on every event.
+
+use std::collections::VecDeque;
+
+use crate::events::Event;
+
+/// What a full [`IngestQueue`] does with a new event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// evict the oldest queued event to admit the new one
+    DropOldest,
+    /// refuse the new event; the producer must stop pulling
+    Block,
+}
+
+impl std::str::FromStr for OverflowPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "drop-oldest" | "drop_oldest" | "dropoldest" => Ok(OverflowPolicy::DropOldest),
+            "block" => Ok(OverflowPolicy::Block),
+            other => anyhow::bail!("unknown ingest policy {other:?} (drop-oldest|block)"),
+        }
+    }
+}
+
+impl OverflowPolicy {
+    /// Canonical CLI/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverflowPolicy::DropOldest => "drop-oldest",
+            OverflowPolicy::Block => "block",
+        }
+    }
+}
+
+/// Outcome of one [`IngestQueue::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// admitted within capacity
+    Accepted,
+    /// admitted, but the oldest queued event was evicted to make room
+    EvictedOldest,
+    /// refused ([`OverflowPolicy::Block`] and the queue is full)
+    Refused,
+}
+
+/// Bounded FIFO of `(event, arrival_ns)` with watermark backpressure.
+#[derive(Debug)]
+pub struct IngestQueue {
+    buf: VecDeque<(Event, f64)>,
+    capacity: usize,
+    policy: OverflowPolicy,
+    /// latch backpressure at this fill level …
+    high: usize,
+    /// … release it at this one
+    low: usize,
+    backpressure: bool,
+    dropped: u64,
+    peak_len: usize,
+}
+
+impl IngestQueue {
+    /// Queue with the default watermarks (latch at 80% full, release
+    /// at 50%).
+    pub fn new(capacity: usize, policy: OverflowPolicy) -> Self {
+        Self::with_watermarks(capacity, policy, 0.8, 0.5)
+    }
+
+    /// Queue with explicit watermark fractions of `capacity`
+    /// (`0 < low ≤ high ≤ 1`).
+    pub fn with_watermarks(
+        capacity: usize,
+        policy: OverflowPolicy,
+        high_frac: f64,
+        low_frac: f64,
+    ) -> Self {
+        let capacity = capacity.max(1);
+        assert!(
+            0.0 < low_frac && low_frac <= high_frac && high_frac <= 1.0,
+            "watermarks need 0 < low <= high <= 1"
+        );
+        let high = ((capacity as f64 * high_frac) as usize).clamp(1, capacity);
+        let low = ((capacity as f64 * low_frac) as usize).min(high);
+        IngestQueue {
+            buf: VecDeque::with_capacity(capacity),
+            capacity,
+            policy,
+            high,
+            low,
+            backpressure: false,
+            dropped: 0,
+            peak_len: 0,
+        }
+    }
+
+    /// Offer one event with its arrival timestamp.
+    pub fn push(&mut self, event: Event, arrival_ns: f64) -> PushOutcome {
+        let outcome = if self.buf.len() >= self.capacity {
+            match self.policy {
+                OverflowPolicy::DropOldest => {
+                    self.buf.pop_front();
+                    self.dropped += 1;
+                    self.buf.push_back((event, arrival_ns));
+                    PushOutcome::EvictedOldest
+                }
+                OverflowPolicy::Block => PushOutcome::Refused,
+            }
+        } else {
+            self.buf.push_back((event, arrival_ns));
+            PushOutcome::Accepted
+        };
+        self.peak_len = self.peak_len.max(self.buf.len());
+        self.update_backpressure();
+        outcome
+    }
+
+    /// Pop up to `max` events into the caller's recycled buffers
+    /// (cleared first); returns how many were popped.
+    pub fn pop_into(&mut self, max: usize, events: &mut Vec<Event>, arrivals: &mut Vec<f64>) -> usize {
+        events.clear();
+        arrivals.clear();
+        let n = max.min(self.buf.len());
+        for _ in 0..n {
+            let (e, a) = self.buf.pop_front().expect("len checked");
+            events.push(e);
+            arrivals.push(a);
+        }
+        self.update_backpressure();
+        n
+    }
+
+    fn update_backpressure(&mut self) {
+        if self.buf.len() >= self.high {
+            self.backpressure = true;
+        } else if self.buf.len() <= self.low {
+            self.backpressure = false;
+        }
+    }
+
+    /// Is the latched backpressure flag up?  (Latches at the high
+    /// watermark, releases at the low one.)
+    pub fn backpressured(&self) -> bool {
+        self.backpressure
+    }
+
+    /// Should the ingest loop stop pulling from the source right now?
+    /// Under [`OverflowPolicy::Block`] that is the backpressure flag;
+    /// under [`OverflowPolicy::DropOldest`] the queue always accepts.
+    pub fn pull_paused(&self) -> bool {
+        self.policy == OverflowPolicy::Block && self.backpressure
+    }
+
+    /// Events currently queued.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Hard capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The overflow policy.
+    pub fn policy(&self) -> OverflowPolicy {
+        self.policy
+    }
+
+    /// Events evicted by [`OverflowPolicy::DropOldest`] so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// High-water mark of the queue length over the run.
+    pub fn peak_len(&self) -> usize {
+        self.peak_len
+    }
+
+    /// Queueing delay of the oldest entry at `now_ns` (0 when empty).
+    pub fn head_delay_ns(&self, now_ns: f64) -> f64 {
+        self.buf
+            .front()
+            .map(|&(_, a)| (now_ns - a).max(0.0))
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64) -> Event {
+        Event::new(seq, seq, 0, &[])
+    }
+
+    #[test]
+    fn drop_oldest_evicts_in_fifo_order() {
+        let mut q = IngestQueue::new(3, OverflowPolicy::DropOldest);
+        for i in 0..3 {
+            assert_eq!(q.push(ev(i), i as f64), PushOutcome::Accepted);
+        }
+        assert_eq!(q.push(ev(3), 3.0), PushOutcome::EvictedOldest);
+        assert_eq!(q.dropped(), 1);
+        let (mut e, mut a) = (Vec::new(), Vec::new());
+        assert_eq!(q.pop_into(10, &mut e, &mut a), 3);
+        // event 0 was the victim; 1..=3 survive in order
+        assert_eq!(e.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn block_refuses_and_never_drops() {
+        let mut q = IngestQueue::new(2, OverflowPolicy::Block);
+        assert_eq!(q.push(ev(0), 0.0), PushOutcome::Accepted);
+        assert_eq!(q.push(ev(1), 1.0), PushOutcome::Accepted);
+        assert_eq!(q.push(ev(2), 2.0), PushOutcome::Refused);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.dropped(), 0);
+    }
+
+    #[test]
+    fn watermarks_latch_and_release() {
+        // capacity 10: latch at 8, release at 5
+        let mut q = IngestQueue::new(10, OverflowPolicy::Block);
+        let (mut e, mut a) = (Vec::new(), Vec::new());
+        for i in 0..7 {
+            q.push(ev(i), 0.0);
+        }
+        assert!(!q.backpressured(), "below high watermark");
+        q.push(ev(7), 0.0);
+        assert!(q.backpressured(), "latched at high watermark");
+        assert!(q.pull_paused());
+        q.pop_into(2, &mut e, &mut a); // len 6: inside the hysteresis band
+        assert!(q.backpressured(), "hysteresis holds the latch");
+        q.pop_into(1, &mut e, &mut a); // len 5 = low watermark
+        assert!(!q.backpressured(), "released at low watermark");
+        assert!(!q.pull_paused());
+    }
+
+    #[test]
+    fn drop_oldest_never_pauses_pulls() {
+        let mut q = IngestQueue::new(4, OverflowPolicy::DropOldest);
+        for i in 0..20 {
+            q.push(ev(i), 0.0);
+        }
+        assert!(q.backpressured(), "flag still reports pressure");
+        assert!(!q.pull_paused(), "but pulling continues");
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.dropped(), 16);
+        assert_eq!(q.peak_len(), 4);
+    }
+
+    #[test]
+    fn head_delay_measures_oldest_entry() {
+        let mut q = IngestQueue::new(4, OverflowPolicy::Block);
+        assert_eq!(q.head_delay_ns(100.0), 0.0);
+        q.push(ev(0), 10.0);
+        q.push(ev(1), 50.0);
+        assert!((q.head_delay_ns(100.0) - 90.0).abs() < 1e-12);
+    }
+}

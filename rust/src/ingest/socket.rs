@@ -1,0 +1,197 @@
+//! TCP ingest: a non-blocking listener accepting line-oriented event
+//! streams in the CSV wire format (`seq,ts_ms,etype,a0,...`, one event
+//! per line; see [`crate::events::Event::parse_csv`]).  Events are
+//! stamped with the poll time — arrival is when the engine reads them
+//! off the wire.  One peer at a time; when it disconnects the listener
+//! goes back to accepting.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use anyhow::Context;
+
+use crate::events::Event;
+
+use super::source::{Source, SourcePoll};
+
+/// A [`Source`] reading events from a TCP peer.
+pub struct SocketSource {
+    listener: TcpListener,
+    conn: Option<TcpStream>,
+    /// bytes carried until a full line is available
+    carry: Vec<u8>,
+    /// lines that failed to parse (skipped, counted)
+    pub bad_lines: u64,
+}
+
+impl SocketSource {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and listen without blocking.
+    pub fn bind(addr: &str) -> crate::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding ingest socket {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("non-blocking ingest listener")?;
+        Ok(SocketSource {
+            listener,
+            conn: None,
+            carry: Vec::new(),
+            bad_lines: 0,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> crate::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Try to accept a peer if none is connected.
+    fn ensure_conn(&mut self) -> bool {
+        if self.conn.is_some() {
+            return true;
+        }
+        match self.listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    return false;
+                }
+                self.conn = Some(stream);
+                true
+            }
+            Err(_) => false, // WouldBlock or transient: no peer yet
+        }
+    }
+
+    /// Split complete lines out of `carry`, parse them, stamp `now_ns`.
+    fn drain_lines(&mut self, now_ns: f64, max: usize, sink: &mut Vec<(Event, f64)>) -> usize {
+        let mut pushed = 0usize;
+        let mut start = 0usize;
+        while pushed < max {
+            let Some(rel) = self.carry[start..].iter().position(|&b| b == b'\n') else {
+                break;
+            };
+            let end = start + rel;
+            let line = String::from_utf8_lossy(&self.carry[start..end]);
+            let t = line.trim();
+            if !(t.is_empty() || t.starts_with('#') || t.starts_with("seq,")) {
+                match Event::parse_csv(t) {
+                    Ok(e) => {
+                        sink.push((e, now_ns));
+                        pushed += 1;
+                    }
+                    Err(_) => self.bad_lines += 1,
+                }
+            }
+            start = end + 1;
+        }
+        if start > 0 {
+            self.carry.drain(..start);
+        }
+        pushed
+    }
+}
+
+impl Source for SocketSource {
+    fn poll_into(
+        &mut self,
+        now_ns: f64,
+        max: usize,
+        sink: &mut Vec<(Event, f64)>,
+    ) -> SourcePoll {
+        let mut pushed = 0usize;
+        if self.ensure_conn() {
+            let mut buf = [0u8; 4096];
+            loop {
+                let Some(conn) = self.conn.as_mut() else { break };
+                match conn.read(&mut buf) {
+                    Ok(0) => {
+                        // peer hung up: back to accepting
+                        self.conn = None;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.carry.extend_from_slice(&buf[..n]);
+                        pushed += self.drain_lines(now_ns, max - pushed, sink);
+                        if pushed >= max {
+                            break;
+                        }
+                    }
+                    Err(err) if err.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break, // WouldBlock: drained the wire for now
+                }
+            }
+        }
+        // lines may already be buffered even without fresh bytes
+        if pushed < max {
+            pushed += self.drain_lines(now_ns, max - pushed, sink);
+        }
+        if pushed > 0 {
+            SourcePoll::Ready
+        } else {
+            SourcePoll::Pending {
+                next_arrival_ns: None,
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn receives_lines_over_tcp() {
+        let mut src = SocketSource::bind("127.0.0.1:0").unwrap();
+        let addr = src.local_addr().unwrap();
+        let mut sink = Vec::new();
+
+        // no peer yet
+        assert_eq!(
+            src.poll_into(1.0, 8, &mut sink),
+            SourcePoll::Pending { next_arrival_ns: None }
+        );
+
+        let mut peer = TcpStream::connect(addr).unwrap();
+        peer.write_all(b"0,100,1,2.5\ngarbage\n1,200,0").unwrap();
+        peer.flush().unwrap();
+
+        // give the kernel a beat to move the bytes
+        let mut got = 0;
+        for _ in 0..200 {
+            if let SourcePoll::Ready = src.poll_into(10.0, 8, &mut sink) {
+                got = sink.len();
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(got, 1, "only the one complete good line so far");
+        assert_eq!(sink[0].0.seq, 0);
+        assert_eq!(sink[0].0.attr(0), 2.5);
+        assert_eq!(sink[0].1, 10.0);
+        assert_eq!(src.bad_lines, 1);
+
+        // finish the partial line and close
+        peer.write_all(b",7\n").unwrap();
+        drop(peer);
+        sink.clear();
+        let mut ok = false;
+        for _ in 0..200 {
+            if let SourcePoll::Ready = src.poll_into(20.0, 8, &mut sink) {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(ok, "completed line must arrive");
+        assert_eq!(sink[0].0.seq, 1);
+        assert_eq!(sink[0].0.ts_ms, 200);
+        assert_eq!(sink[0].0.etype, 0);
+        assert_eq!(sink[0].0.attr(0), 7.0);
+        assert_eq!(src.name(), "socket");
+    }
+}

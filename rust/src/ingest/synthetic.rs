@@ -1,0 +1,390 @@
+//! Synthetic overload generators: deterministic arrival processes with
+//! adversarial rate profiles, replaying a pool of real dataset events.
+//!
+//! Each generator integrates an instantaneous rate profile `r(t)`
+//! (events per virtual ns): the next arrival is always
+//! `t + 1/r(t)`, so the emitted inter-arrival gaps follow the profile
+//! exactly and every run is reproducible — no RNG anywhere.  Emitted
+//! events cycle through the supplied pool with their sequence numbers
+//! and timestamps re-stamped to the *arrival* timeline (in the
+//! real-time plane, an event's time is when it arrives), continuing
+//! from a caller-supplied origin so windows see one monotonic stream
+//! across a warm-up prefix and the generated load.
+
+use crate::events::Event;
+
+use super::source::{Source, SourcePoll};
+
+/// Floor on the instantaneous rate so an adversarial profile can stall
+/// arrivals but never divide by zero (one event per 10 virtual s).
+const MIN_RATE_PER_NS: f64 = 1e-10;
+
+/// An instantaneous target arrival rate over the run's timeline.
+pub trait RateProfile: Send {
+    /// Events per virtual nanosecond at time `t_ns`.
+    fn rate_per_ns(&self, t_ns: f64) -> f64;
+
+    /// Selector-style name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Square-wave bursts: `peak` rate for the first `burst_ns` of every
+/// `period_ns`, `base` rate the rest of the time.
+#[derive(Debug, Clone, Copy)]
+pub struct Burst {
+    /// quiet-phase rate (events/ns)
+    pub base_per_ns: f64,
+    /// burst-phase rate (events/ns)
+    pub peak_per_ns: f64,
+    /// full cycle length (ns)
+    pub period_ns: f64,
+    /// burst length at the start of each cycle (ns)
+    pub burst_ns: f64,
+}
+
+impl Burst {
+    /// Bursts expressed as multiples of a measured per-event capacity
+    /// cost: `base_factor`/`peak_factor` are fractions of the maximum
+    /// drain rate `1/capacity_ns` (1.0 = exactly saturating).
+    pub fn from_capacity(
+        capacity_ns: f64,
+        base_factor: f64,
+        peak_factor: f64,
+        period_ns: f64,
+        burst_ns: f64,
+    ) -> Self {
+        assert!(capacity_ns > 0.0 && period_ns > 0.0 && burst_ns <= period_ns);
+        Burst {
+            base_per_ns: base_factor / capacity_ns,
+            peak_per_ns: peak_factor / capacity_ns,
+            period_ns,
+            burst_ns,
+        }
+    }
+}
+
+impl RateProfile for Burst {
+    fn rate_per_ns(&self, t_ns: f64) -> f64 {
+        let phase = t_ns.rem_euclid(self.period_ns);
+        if phase < self.burst_ns {
+            self.peak_per_ns
+        } else {
+            self.base_per_ns
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "burst"
+    }
+}
+
+/// One flash crowd: ramp linearly from `base` to `peak` over
+/// `ramp_ns`, hold the peak for `hold_ns`, decay linearly back over
+/// `decay_ns`, then stay at `base`.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashCrowd {
+    /// steady-state rate before/after the crowd (events/ns)
+    pub base_per_ns: f64,
+    /// crowd peak rate (events/ns)
+    pub peak_per_ns: f64,
+    /// when the ramp starts (ns)
+    pub start_ns: f64,
+    /// ramp-up length (ns)
+    pub ramp_ns: f64,
+    /// plateau length (ns)
+    pub hold_ns: f64,
+    /// decay length (ns)
+    pub decay_ns: f64,
+}
+
+impl FlashCrowd {
+    /// Flash crowd expressed as multiples of the maximum drain rate
+    /// `1/capacity_ns` (see [`Burst::from_capacity`]).
+    pub fn from_capacity(
+        capacity_ns: f64,
+        base_factor: f64,
+        peak_factor: f64,
+        start_ns: f64,
+        ramp_ns: f64,
+        hold_ns: f64,
+        decay_ns: f64,
+    ) -> Self {
+        assert!(capacity_ns > 0.0 && ramp_ns > 0.0 && decay_ns > 0.0);
+        FlashCrowd {
+            base_per_ns: base_factor / capacity_ns,
+            peak_per_ns: peak_factor / capacity_ns,
+            start_ns,
+            ramp_ns,
+            hold_ns,
+            decay_ns,
+        }
+    }
+}
+
+impl RateProfile for FlashCrowd {
+    fn rate_per_ns(&self, t_ns: f64) -> f64 {
+        let t = t_ns - self.start_ns;
+        if t < 0.0 {
+            self.base_per_ns
+        } else if t < self.ramp_ns {
+            let f = t / self.ramp_ns;
+            self.base_per_ns + f * (self.peak_per_ns - self.base_per_ns)
+        } else if t < self.ramp_ns + self.hold_ns {
+            self.peak_per_ns
+        } else if t < self.ramp_ns + self.hold_ns + self.decay_ns {
+            let f = (t - self.ramp_ns - self.hold_ns) / self.decay_ns;
+            self.peak_per_ns + f * (self.base_per_ns - self.peak_per_ns)
+        } else {
+            self.base_per_ns
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "flashcrowd"
+    }
+}
+
+/// Sinusoidal load: `mean + amplitude·sin(2πt/period)`, clamped below
+/// by [`MIN_RATE_PER_NS`].  With `mean` slightly above capacity the
+/// crests sustain genuine overload while the troughs let the queue
+/// drain — the adversarial regime the CI smoke job replays.
+#[derive(Debug, Clone, Copy)]
+pub struct OscillatingRate {
+    /// mean rate (events/ns)
+    pub mean_per_ns: f64,
+    /// oscillation amplitude (events/ns)
+    pub amplitude_per_ns: f64,
+    /// oscillation period (ns)
+    pub period_ns: f64,
+}
+
+impl OscillatingRate {
+    /// Oscillation expressed as multiples of the maximum drain rate
+    /// `1/capacity_ns` (see [`Burst::from_capacity`]).
+    pub fn from_capacity(
+        capacity_ns: f64,
+        mean_factor: f64,
+        amplitude_factor: f64,
+        period_ns: f64,
+    ) -> Self {
+        assert!(capacity_ns > 0.0 && period_ns > 0.0);
+        OscillatingRate {
+            mean_per_ns: mean_factor / capacity_ns,
+            amplitude_per_ns: amplitude_factor / capacity_ns,
+            period_ns,
+        }
+    }
+}
+
+impl RateProfile for OscillatingRate {
+    fn rate_per_ns(&self, t_ns: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t_ns / self.period_ns;
+        (self.mean_per_ns + self.amplitude_per_ns * phase.sin()).max(MIN_RATE_PER_NS)
+    }
+
+    fn name(&self) -> &'static str {
+        "oscillate"
+    }
+}
+
+/// A [`Source`] driving a pool of real events through a
+/// [`RateProfile`].
+pub struct SyntheticSource {
+    pool: Vec<Event>,
+    profile: Box<dyn RateProfile>,
+    /// next pool slot to replay (cycles)
+    pool_idx: usize,
+    /// events emitted so far
+    emitted: u64,
+    /// stop after this many events (`u64::MAX` = run to the deadline)
+    limit: u64,
+    /// arrival instant of the next event (ns)
+    next_arrival_ns: f64,
+    /// re-stamped sequence numbers start here
+    seq0: u64,
+    /// re-stamped timestamps are `ts0_ns + arrival` (ns)
+    ts0_ns: f64,
+}
+
+impl SyntheticSource {
+    /// Generator replaying `pool` (cycling) on `profile`'s schedule,
+    /// with arrivals starting at t=0 on the ingest timeline.
+    /// Re-stamped events get sequence numbers `seq0, seq0+1, …` and
+    /// timestamps `(ts0_ns + arrival_ns)/1e6` ms, so they extend
+    /// whatever stream primed the operator.
+    pub fn new(pool: Vec<Event>, profile: Box<dyn RateProfile>, seq0: u64, ts0_ns: f64) -> Self {
+        assert!(!pool.is_empty(), "synthetic source needs a non-empty pool");
+        SyntheticSource {
+            pool,
+            profile,
+            pool_idx: 0,
+            emitted: 0,
+            limit: u64::MAX,
+            next_arrival_ns: 0.0,
+            seq0,
+            ts0_ns,
+        }
+    }
+
+    /// Cap the total number of emitted events.
+    pub fn with_limit(mut self, limit: u64) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Events emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+}
+
+impl Source for SyntheticSource {
+    fn poll_into(
+        &mut self,
+        now_ns: f64,
+        max: usize,
+        sink: &mut Vec<(Event, f64)>,
+    ) -> SourcePoll {
+        let mut pushed = 0usize;
+        while pushed < max {
+            if self.emitted >= self.limit {
+                return if pushed > 0 {
+                    SourcePoll::Ready
+                } else {
+                    SourcePoll::Exhausted
+                };
+            }
+            if self.next_arrival_ns > now_ns {
+                return if pushed > 0 {
+                    SourcePoll::Ready
+                } else {
+                    SourcePoll::Pending {
+                        next_arrival_ns: Some(self.next_arrival_ns),
+                    }
+                };
+            }
+            let mut e = self.pool[self.pool_idx];
+            self.pool_idx += 1;
+            if self.pool_idx == self.pool.len() {
+                self.pool_idx = 0;
+            }
+            e.seq = self.seq0 + self.emitted;
+            e.ts_ms = ((self.ts0_ns + self.next_arrival_ns) / 1e6) as u64;
+            sink.push((e, self.next_arrival_ns));
+            self.emitted += 1;
+            pushed += 1;
+            let rate = self.profile.rate_per_ns(self.next_arrival_ns).max(MIN_RATE_PER_NS);
+            self.next_arrival_ns += 1.0 / rate;
+        }
+        SourcePoll::Ready
+    }
+
+    fn name(&self) -> &'static str {
+        self.profile.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Vec<Event> {
+        (0..4).map(|i| Event::new(i, i, (i % 2) as u16, &[i as f64])).collect()
+    }
+
+    /// Drain every arrival up to `until_ns` and return the arrival times.
+    fn arrivals(src: &mut SyntheticSource, until_ns: f64) -> Vec<f64> {
+        let mut sink = Vec::new();
+        loop {
+            match src.poll_into(until_ns, 1_000, &mut sink) {
+                SourcePoll::Ready => continue,
+                _ => break,
+            }
+        }
+        sink.iter().map(|&(_, a)| a).collect()
+    }
+
+    #[test]
+    fn burst_profile_alternates_gap_lengths() {
+        // capacity 100ns/event: quiet at 0.5x (gap 200), burst at 2x
+        // (gap 50); 10µs period with a 2µs burst
+        let prof = Burst::from_capacity(100.0, 0.5, 2.0, 10_000.0, 2_000.0);
+        assert_eq!(prof.name(), "burst");
+        let mut src = SyntheticSource::new(pool(), Box::new(prof), 0, 0.0);
+        let at = arrivals(&mut src, 20_000.0);
+        assert!(!at.is_empty());
+        let mut bursty = 0usize;
+        let mut quiet = 0usize;
+        for w in at.windows(2) {
+            let gap = w[1] - w[0];
+            if (gap - 50.0).abs() < 1e-6 {
+                bursty += 1;
+            } else if (gap - 200.0).abs() < 1e-6 {
+                quiet += 1;
+            } else {
+                panic!("unexpected gap {gap}");
+            }
+        }
+        assert!(bursty > 0 && quiet > 0, "both phases must appear");
+        // burst phase density: 2µs at gap 50 ≈ 40 events vs 8µs at gap
+        // 200 ≈ 40 — roughly balanced counts, wildly different rates
+        let rate_peak = 1.0 / 50.0;
+        let rate_base = 1.0 / 200.0;
+        assert!(rate_peak / rate_base > 3.9);
+    }
+
+    #[test]
+    fn flash_crowd_ramps_and_decays() {
+        let prof = FlashCrowd::from_capacity(100.0, 0.5, 2.0, 1_000.0, 1_000.0, 500.0, 1_000.0);
+        assert_eq!(prof.rate_per_ns(0.0), 0.005);
+        assert!((prof.rate_per_ns(1_500.0) - 0.0125).abs() < 1e-12, "mid-ramp");
+        assert_eq!(prof.rate_per_ns(2_250.0), 0.02, "plateau");
+        assert!((prof.rate_per_ns(3_000.0) - 0.0125).abs() < 1e-12, "mid-decay");
+        assert_eq!(prof.rate_per_ns(10_000.0), 0.005, "back to base");
+        // the emitted gaps shrink toward the peak then recover
+        let mut src = SyntheticSource::new(pool(), Box::new(prof), 0, 0.0);
+        let at = arrivals(&mut src, 5_000.0);
+        let gaps: Vec<f64> = at.windows(2).map(|w| w[1] - w[0]).collect();
+        let min_gap = gaps.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((min_gap - 50.0).abs() < 5.0, "peak gap ≈ 1/peak rate, got {min_gap}");
+        assert!(gaps[0] > 2.0 * min_gap, "starts slow");
+        assert!(gaps[gaps.len() - 1] > 2.0 * min_gap, "ends slow");
+    }
+
+    #[test]
+    fn oscillating_rate_has_the_requested_period() {
+        let prof = OscillatingRate::from_capacity(100.0, 1.2, 0.8, 10_000.0);
+        assert_eq!(prof.name(), "oscillate");
+        // crest at t=P/4, trough at t=3P/4
+        let crest = prof.rate_per_ns(2_500.0);
+        let trough = prof.rate_per_ns(7_500.0);
+        assert!((crest - 0.02).abs() < 1e-9);
+        assert!((trough - 0.004).abs() < 1e-9);
+        assert!((prof.rate_per_ns(0.0) - 0.012).abs() < 1e-9, "mean at phase 0");
+        // periodicity
+        assert!((prof.rate_per_ns(1_234.0) - prof.rate_per_ns(11_234.0)).abs() < 1e-9);
+        // never goes negative even with amplitude > mean
+        let wild = OscillatingRate::from_capacity(100.0, 0.5, 5.0, 1_000.0);
+        assert!(wild.rate_per_ns(750.0) >= MIN_RATE_PER_NS);
+    }
+
+    #[test]
+    fn synthetic_source_restamps_and_cycles() {
+        let prof = Burst::from_capacity(100.0, 1.0, 1.0, 1_000.0, 500.0);
+        let mut src = SyntheticSource::new(pool(), Box::new(prof), 100, 2e6).with_limit(10);
+        let mut sink = Vec::new();
+        assert_eq!(src.poll_into(1e9, 100, &mut sink), SourcePoll::Ready);
+        assert_eq!(src.poll_into(1e9, 100, &mut sink), SourcePoll::Exhausted);
+        assert_eq!(sink.len(), 10);
+        assert_eq!(src.emitted(), 10);
+        // sequence numbers continue from seq0, monotonically
+        assert_eq!(sink[0].0.seq, 100);
+        assert_eq!(sink[9].0.seq, 109);
+        // timestamps ride the arrival timeline offset by ts0
+        assert_eq!(sink[0].0.ts_ms, 2);
+        assert!(sink.windows(2).all(|w| w[0].0.ts_ms <= w[1].0.ts_ms));
+        // pool of 4 cycles: payloads repeat with period 4
+        assert_eq!(sink[0].0.attrs, sink[4].0.attrs);
+        assert_eq!(sink[1].0.attrs, sink[5].0.attrs);
+    }
+}

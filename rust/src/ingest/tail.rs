@@ -1,0 +1,170 @@
+//! Tail a growing CSV file of events (the archive format of
+//! [`crate::datasets::csv`]): complete appended lines become events,
+//! stamped with the clock time at which the poll observed them — in
+//! the real-time plane an external event "arrives" when the engine
+//! first sees it.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::events::Event;
+
+use super::source::{Source, SourcePoll};
+
+/// A [`Source`] following a file that another process appends to.
+pub struct FileTailSource {
+    path: PathBuf,
+    reader: BufReader<File>,
+    /// partial trailing line carried across polls until its newline
+    /// shows up
+    carry: String,
+    /// lines that failed to parse (skipped, counted)
+    pub bad_lines: u64,
+}
+
+impl FileTailSource {
+    /// Tail `path` from the beginning of the file.
+    pub fn from_start(path: &Path) -> crate::Result<Self> {
+        let file = File::open(path)
+            .with_context(|| format!("tailing {}", path.display()))?;
+        Ok(FileTailSource {
+            path: path.to_path_buf(),
+            reader: BufReader::new(file),
+            carry: String::new(),
+            bad_lines: 0,
+        })
+    }
+
+    /// Tail `path` from its current end (only new appends are read).
+    pub fn from_end(path: &Path) -> crate::Result<Self> {
+        let mut s = Self::from_start(path)?;
+        s.reader
+            .seek(SeekFrom::End(0))
+            .with_context(|| format!("seeking {}", s.path.display()))?;
+        Ok(s)
+    }
+
+    /// The tailed path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Parse the carried line if it is complete; returns the event.
+    fn take_complete_line(&mut self) -> Option<Event> {
+        if !self.carry.ends_with('\n') {
+            return None;
+        }
+        let line = std::mem::take(&mut self.carry);
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with("seq,") {
+            return None; // blank / comment / archive header
+        }
+        match Event::parse_csv(t) {
+            Ok(e) => Some(e),
+            Err(_) => {
+                self.bad_lines += 1;
+                None
+            }
+        }
+    }
+}
+
+impl Source for FileTailSource {
+    fn poll_into(
+        &mut self,
+        now_ns: f64,
+        max: usize,
+        sink: &mut Vec<(Event, f64)>,
+    ) -> SourcePoll {
+        let mut pushed = 0usize;
+        while pushed < max {
+            match self.reader.read_line(&mut self.carry) {
+                // EOF *for now* — the file may keep growing; no
+                // schedule to report
+                Ok(0) => break,
+                Ok(_) => {
+                    if let Some(e) = self.take_complete_line() {
+                        sink.push((e, now_ns));
+                        pushed += 1;
+                    }
+                    // incomplete trailing line stays in `carry` and is
+                    // finished by a later poll; skipped lines just loop
+                }
+                Err(err) => {
+                    if err.kind() == std::io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        if pushed > 0 {
+            SourcePoll::Ready
+        } else {
+            SourcePoll::Pending {
+                next_arrival_ns: None,
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "tail"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pspice_tail_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn tails_appended_lines_and_skips_garbage() {
+        let path = tmp("grow.csv");
+        std::fs::write(&path, "seq,ts_ms,etype,a0,a1,a2,a3,a4,a5\n").unwrap();
+        let mut src = FileTailSource::from_start(&path).unwrap();
+        let mut sink = Vec::new();
+
+        assert_eq!(
+            src.poll_into(10.0, 16, &mut sink),
+            SourcePoll::Pending { next_arrival_ns: None },
+            "header only: nothing to emit"
+        );
+
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "0,100,1,3.5").unwrap();
+        writeln!(f, "this is not an event").unwrap();
+        writeln!(f, "1,200,2,4.5,1").unwrap();
+        // and one incomplete line with no newline yet
+        write!(f, "2,300,").unwrap();
+        f.flush().unwrap();
+
+        assert_eq!(src.poll_into(50.0, 16, &mut sink), SourcePoll::Ready);
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink[0].0.seq, 0);
+        assert_eq!(sink[0].0.etype, 1);
+        assert_eq!(sink[0].1, 50.0, "arrival = observation time");
+        assert_eq!(sink[1].0.seq, 1);
+        assert_eq!(src.bad_lines, 1);
+
+        // completing the partial line makes it parseable
+        writeln!(f, "0,9.0").unwrap();
+        f.flush().unwrap();
+        sink.clear();
+        assert_eq!(src.poll_into(60.0, 16, &mut sink), SourcePoll::Ready);
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0].0.seq, 2);
+        assert_eq!(sink[0].0.ts_ms, 300);
+        assert_eq!(sink[0].0.etype, 0);
+        assert_eq!(sink[0].0.attr(0), 9.0);
+        assert_eq!(src.name(), "tail");
+    }
+}

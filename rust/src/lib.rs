@@ -35,8 +35,9 @@
 //! | [`shedding`] | batch-first [`shedding::Shedder`] strategies (pSPICE / PM-BL / E-BL) + overload detector + the [`shedding::ShedderKind::build`] factory |
 //! | [`model`] | observation stats → utility tables, behind the versioned model plane ([`model::UtilityModel`] trainers, epoch-numbered [`model::TableSet`] snapshots, the [`model::ModelController`] retrain loop) |
 //! | [`runtime`] | model engines (PJRT/AOT behind the `xla` feature, rust fallback) + the sharded operator runtime |
-//! | [`pipeline`] | the engine façade: [`pipeline::PipelineBuilder`] → [`pipeline::Pipeline`] (`prime` / `feed` / `run_to_end`) over 1..N shards |
-//! | [`sim`] | virtual-time source/queue for deterministic overload runs |
+//! | [`pipeline`] | the engine façade: [`pipeline::PipelineBuilder`] → [`pipeline::Pipeline`] (`prime` / `feed` / `run_to_end` / `run_realtime`) over 1..N shards |
+//! | [`sim`] | the [`sim::Clock`] abstraction (virtual [`sim::SimClock`], monotonic [`sim::WallClock`]) + deterministic arrival schedules |
+//! | [`ingest`] | real-time ingestion: [`ingest::Source`] trait (trace/tail/socket/synthetic overload generators) + the bounded backpressured [`ingest::IngestQueue`] |
 //! | [`metrics`] | latency, wall-clock throughput, QoR (FN/FP) accounting |
 //! | [`harness`] | experiment runner (built on [`pipeline`]) + Figure 5–9 drivers |
 //! | [`linalg`] | dense matrices, regression, Markov oracle |
@@ -50,6 +51,7 @@ pub mod config;
 pub mod datasets;
 pub mod events;
 pub mod harness;
+pub mod ingest;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

@@ -18,7 +18,16 @@ pub struct LatencyTracker {
     /// keep every k-th sample in the trace
     stride: u64,
     seen: u64,
+    /// bounded quantile reservoir: every `q_stride`-th sample, thinned
+    /// every-other when full (same scheme as the detector's sample
+    /// caps), so tail quantiles stay available at O(1) memory
+    q_samples: Vec<f64>,
+    q_stride: u64,
 }
+
+/// Quantile reservoir cap: past this many kept samples, keep every
+/// other one and double the keep stride.
+const QUANTILE_CAP: usize = 8_192;
 
 impl LatencyTracker {
     /// Tracker with a plotting stride (keep every `stride`-th sample).
@@ -30,6 +39,8 @@ impl LatencyTracker {
             trace: Vec::new(),
             stride: stride.max(1),
             seen: 0,
+            q_samples: Vec::new(),
+            q_stride: 1,
         }
     }
 
@@ -43,6 +54,17 @@ impl LatencyTracker {
         if self.seen % self.stride == 0 {
             self.trace.push((now_ns, l_e_ns));
         }
+        if self.seen % self.q_stride == 0 {
+            self.q_samples.push(l_e_ns);
+            if self.q_samples.len() >= QUANTILE_CAP {
+                let mut keep = false;
+                self.q_samples.retain(|_| {
+                    keep = !keep;
+                    keep
+                });
+                self.q_stride *= 2;
+            }
+        }
         self.seen += 1;
     }
 
@@ -53,6 +75,23 @@ impl LatencyTracker {
         } else {
             self.violations as f64 / self.stats.count() as f64
         }
+    }
+
+    /// Latency quantile `q` in [0, 1] from the bounded reservoir
+    /// (nearest-rank on the kept samples; 0.0 with no samples).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.q_samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.q_samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    /// The p95 latency (ns) — the real-time SLO gate.
+    pub fn p95_ns(&self) -> f64 {
+        self.quantile(0.95)
     }
 }
 
@@ -79,5 +118,35 @@ mod tests {
         }
         assert_eq!(t.trace.len(), 10);
         assert_eq!(t.stats.count(), 100);
+    }
+
+    #[test]
+    fn quantiles_track_the_distribution() {
+        let mut t = LatencyTracker::new(1e9, 1);
+        // 1..=1000 in scrambled order
+        for i in 0..1000u64 {
+            let v = ((i * 617) % 1000 + 1) as f64;
+            t.record(i as f64, v);
+        }
+        assert!((t.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((t.quantile(1.0) - 1000.0).abs() < 1e-9);
+        let p50 = t.quantile(0.5);
+        assert!((450.0..=550.0).contains(&p50), "p50={p50}");
+        let p95 = t.p95_ns();
+        assert!((930.0..=970.0).contains(&p95), "p95={p95}");
+        assert_eq!(LatencyTracker::new(1.0, 1).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_reservoir_stays_bounded() {
+        let mut t = LatencyTracker::new(1e9, 1);
+        for i in 0..100_000u64 {
+            t.record(i as f64, (i % 100) as f64);
+        }
+        assert!(t.q_samples.len() < super::QUANTILE_CAP);
+        assert_eq!(t.stats.count(), 100_000);
+        // the thinned reservoir still sees the whole range
+        let p95 = t.p95_ns();
+        assert!((90.0..=99.0).contains(&p95), "p95={p95}");
     }
 }

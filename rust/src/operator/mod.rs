@@ -10,5 +10,7 @@ pub mod state;
 
 pub use cost::CostModel;
 pub use observe::{ObservationHub, QueryStats};
-pub use operator::{cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, ShedCell};
+pub use operator::{
+    cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell,
+};
 pub use state::{BatchResult, OperatorState, PerShard, ShedOutcome, MAX_SHARDS};

@@ -137,6 +137,53 @@ pub fn cell_cmp(a: &ShedCell, b: &ShedCell) -> Ordering {
         .then_with(|| a.state.cmp(&b.state))
 }
 
+/// Frozen scalar digest of the operator's stream-rate state: the last
+/// processed position and the events-per-ms EWMA that time-window
+/// `R_w` estimates read.  Every operator folds every event into its
+/// digest — which makes the digest identical across shards and
+/// reproducible coordinator-side, so a worker whose irrelevant batches
+/// were skipped can be brought bit-exactly current with one
+/// [`Operator::set_rate_digest`] instead of replaying the events.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateDigest {
+    /// EWMA of events per millisecond of source time
+    pub events_per_ms: f64,
+    /// timestamp of the previous fold (EWMA denominator anchor)
+    pub prev_ts: u64,
+    /// sequence number of the last folded event
+    pub last_seq: u64,
+    /// timestamp of the last folded event
+    pub last_ts: u64,
+}
+
+impl Default for RateDigest {
+    fn default() -> Self {
+        RateDigest {
+            events_per_ms: 1.0,
+            prev_ts: 0,
+            last_seq: 0,
+            last_ts: 0,
+        }
+    }
+}
+
+impl RateDigest {
+    /// Fold one event into the digest — the single definition of the
+    /// rate update, shared by event processing, shed-event bookkeeping
+    /// and the sharded coordinator's mirror, so all three produce the
+    /// same floating-point sequence.
+    #[inline]
+    pub fn fold(&mut self, e: &Event) {
+        if e.ts_ms > self.prev_ts {
+            let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
+            self.events_per_ms = 0.999 * self.events_per_ms + 0.001 * inst;
+        }
+        self.prev_ts = e.ts_ms;
+        self.last_seq = e.seq;
+        self.last_ts = e.ts_ms;
+    }
+}
+
 /// The CEP operator.
 #[derive(Clone)]
 pub struct Operator {
@@ -155,12 +202,9 @@ pub struct Operator {
     pub pms_created: u64,
     /// total complex events ever emitted (match-probability numerator)
     pub completions_total: u64,
-    /// last processed position (for `R_w` of time windows)
-    last_seq: u64,
-    last_ts: u64,
-    /// EWMA of events per ms of source time (for time-window `R_w`)
-    events_per_ms: f64,
-    prev_ts: u64,
+    /// stream-rate digest: last processed position and the
+    /// events-per-ms EWMA (for `R_w` of time windows)
+    rate: RateDigest,
     /// per-query utility tables for [`Operator::shed_lowest`]
     /// (installed via [`OperatorState::install_table_set`] or the
     /// inherent [`Operator::install_tables`]; may be empty, in which
@@ -198,10 +242,7 @@ impl Operator {
             n_pms: 0,
             pms_created: 0,
             completions_total: 0,
-            last_seq: 0,
-            last_ts: 0,
-            events_per_ms: 1.0,
-            prev_ts: 0,
+            rate: RateDigest::default(),
             tables: Vec::new(),
             table_epoch: 0,
             shed_scratch: Vec::new(),
@@ -233,12 +274,25 @@ impl Operator {
 
     /// Current stream position `(seq, ts)`.
     pub fn position(&self) -> (u64, u64) {
-        (self.last_seq, self.last_ts)
+        (self.rate.last_seq, self.rate.last_ts)
     }
 
     /// EWMA estimate of events per millisecond of source time.
     pub fn events_per_ms(&self) -> f64 {
-        self.events_per_ms
+        self.rate.events_per_ms
+    }
+
+    /// Snapshot of the stream-rate digest (see [`RateDigest`]).
+    pub fn rate_digest(&self) -> RateDigest {
+        self.rate
+    }
+
+    /// Overwrite the stream-rate digest — the sharded coordinator's
+    /// resync path for a worker whose irrelevant batches were skipped
+    /// (the coordinator folds the same events into a mirror digest, so
+    /// installing it is bit-identical to having processed them).
+    pub fn set_rate_digest(&mut self, d: RateDigest) {
+        self.rate = d;
     }
 
     /// Expected window size in events for each query (count windows
@@ -258,7 +312,7 @@ impl Operator {
         out.extend(self.queries.iter().map(|cq| match cq.query.window {
             WindowSpec::Count(ws) => ws,
             WindowSpec::TimeMs(ms) => {
-                (ms as f64 * self.events_per_ms).ceil().max(1.0) as u64
+                (ms as f64 * self.rate.events_per_ms).ceil().max(1.0) as u64
             }
         }));
     }
@@ -331,13 +385,7 @@ impl Operator {
     pub fn process_event_into(&mut self, e: &Event, out: &mut ProcessOutcome) {
         out.cost_ns += self.cost.base_event_ns;
         // rate estimate for time-window R_w
-        if e.ts_ms > self.prev_ts {
-            let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
-            self.events_per_ms = 0.999 * self.events_per_ms + 0.001 * inst;
-        }
-        self.prev_ts = e.ts_ms;
-        self.last_seq = e.seq;
-        self.last_ts = e.ts_ms;
+        self.rate.fold(e);
 
         // disjoint field borrows for the match loop
         let routing = self.type_routing;
@@ -545,13 +593,7 @@ impl Operator {
         // rate estimate for time-window R_w — identical to
         // `process_event`: dropped events still arrive, so the stream
         // rate the utility lookups depend on must not go stale
-        if e.ts_ms > self.prev_ts {
-            let inst = 1.0 / (e.ts_ms - self.prev_ts) as f64;
-            self.events_per_ms = 0.999 * self.events_per_ms + 0.001 * inst;
-        }
-        self.prev_ts = e.ts_ms;
-        self.last_seq = e.seq;
-        self.last_ts = e.ts_ms;
+        self.rate.fold(e);
         let Operator {
             queries,
             wins,
@@ -597,9 +639,9 @@ impl Operator {
             for w in &qw.windows {
                 let remaining = w.remaining_events(
                     spec,
-                    self.last_seq,
-                    self.last_ts,
-                    self.events_per_ms,
+                    self.rate.last_seq,
+                    self.rate.last_ts,
+                    self.rate.events_per_ms,
                 );
                 for pm in &w.pms {
                     buf.push(PmRef {
@@ -630,9 +672,9 @@ impl Operator {
                 }
                 let remaining = w.remaining_events(
                     spec,
-                    self.last_seq,
-                    self.last_ts,
-                    self.events_per_ms,
+                    self.rate.last_seq,
+                    self.rate.last_ts,
+                    self.rate.events_per_ms,
                 );
                 for (state, count) in w.counts.iter_nonzero() {
                     let utility = table.map_or(0.0, |t| t.lookup(state, remaining));
@@ -933,7 +975,7 @@ mod tests {
         // all windows currently open must be within ws of the tip
         for qw in &op.wins {
             for w in &qw.windows {
-                assert!(op.last_seq < w.open_seq + 100);
+                assert!(op.rate.last_seq < w.open_seq + 100);
             }
         }
         // pm count cache consistent
@@ -1049,6 +1091,28 @@ mod tests {
     }
 
     #[test]
+    fn rate_digest_mirror_folds_bit_identically() {
+        // a detached digest folding the same events is bit-identical to
+        // the operator's own (the sharded coordinator's mirror relies
+        // on this), and installing it resyncs a stale operator exactly
+        let mut op = Operator::new(q1(500).queries);
+        let mut stale = Operator::new(q1(500).queries);
+        let mut mirror = op.rate_digest();
+        assert_eq!(mirror, RateDigest::default());
+        let mut g = StockGen::with_seed(11);
+        for _ in 0..5_000 {
+            let e = g.next_event().unwrap();
+            op.process_event(&e);
+            mirror.fold(&e);
+        }
+        assert_eq!(op.rate_digest(), mirror, "mirror diverged");
+        assert_ne!(stale.rate_digest(), mirror);
+        stale.set_rate_digest(mirror);
+        assert_eq!(stale.rate_digest(), op.rate_digest());
+        assert_eq!(stale.expected_ws(), op.expected_ws());
+    }
+
+    #[test]
     fn reverted_multi_seed_checks_are_observed_as_self_loops() {
         // regression: the claimed-key revert path charged the check cost
         // but skipped obs.record, biasing the transition matrix
@@ -1086,7 +1150,7 @@ mod tests {
         for r in &refs {
             // the window the PM lives in must be open, i.e. opened in
             // the last ws events
-            assert!(op.last_seq < r.open_seq + 5000);
+            assert!(op.rate.last_seq < r.open_seq + 5000);
         }
     }
 

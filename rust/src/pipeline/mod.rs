@@ -38,14 +38,18 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::events::Event;
+use crate::ingest::{IngestQueue, OverflowPolicy, Source, SourcePoll};
 use crate::metrics::{LatencyTracker, Throughput};
 use crate::model::plane::{KeyUtilityTable, ModelController, ModelKind, TableSet};
 use crate::model::UtilityTable;
 use crate::operator::{BatchResult, ComplexEvent, Operator, OperatorState};
 use crate::query::Query;
 use crate::runtime::ShardedOperator;
-use crate::shedding::{OverloadDetector, ShedReport, Shedder, ShedderKind};
-use crate::sim::{RateSource, SimClock};
+use crate::shedding::{
+    MeasuredDetector, OverloadDetector, OverloadGauge, OverloadKind, ShedReport, Shedder,
+    ShedderKind,
+};
+use crate::sim::{Clock, RateSource, SimClock};
 
 /// The operator state behind a pipeline: the classic single-threaded
 /// operator, or the sharded multi-worker runtime.
@@ -93,6 +97,11 @@ pub struct PipelineBuilder {
     model_kind: ModelKind,
     latency_stride: u64,
     type_routing: bool,
+    clock: Option<Box<dyn Clock>>,
+    overload: OverloadKind,
+    ingest: Option<Box<dyn Source>>,
+    ingest_capacity: usize,
+    ingest_policy: OverflowPolicy,
 }
 
 impl Default for PipelineBuilder {
@@ -116,6 +125,11 @@ impl Default for PipelineBuilder {
             model_kind: ModelKind::Markov,
             latency_stride: 1,
             type_routing: true,
+            clock: None,
+            overload: OverloadKind::Predicted,
+            ingest: None,
+            ingest_capacity: 8_192,
+            ingest_policy: OverflowPolicy::DropOldest,
         }
     }
 }
@@ -253,6 +267,51 @@ impl PipelineBuilder {
         self
     }
 
+    /// The time plane the pipeline runs on (default: a fresh virtual
+    /// [`SimClock`]).  Pass a [`crate::sim::WallClock`] to run the same
+    /// measurement loop against monotonic wall time — see
+    /// [`Pipeline::run_realtime`].
+    pub fn clock(mut self, clock: Box<dyn Clock>) -> Self {
+        self.clock = Some(clock);
+        self
+    }
+
+    /// Shorthand for `.clock(Box::new(WallClock::new()))`.
+    pub fn wall_clock(self) -> Self {
+        self.clock(Box::new(crate::sim::WallClock::new()))
+    }
+
+    /// Which overload detector drives shedding (default
+    /// [`OverloadKind::Predicted`], the paper's Alg. 1 regressions;
+    /// [`OverloadKind::Measured`] swaps in the model-free
+    /// [`MeasuredDetector`] fed by observed batch latencies).
+    pub fn overload(mut self, kind: OverloadKind) -> Self {
+        self.overload = kind;
+        self
+    }
+
+    /// Attach a real-time ingest [`Source`] for
+    /// [`Pipeline::run_realtime`] (trace replay, file tail, TCP socket,
+    /// or a synthetic overload generator).
+    pub fn ingest_source(mut self, source: Box<dyn Source>) -> Self {
+        self.ingest = Some(source);
+        self
+    }
+
+    /// Capacity of the bounded ingest queue (default 8192 events).
+    pub fn ingest_capacity(mut self, capacity: usize) -> Self {
+        self.ingest_capacity = capacity;
+        self
+    }
+
+    /// What the ingest queue does when full (default
+    /// [`OverflowPolicy::DropOldest`]; [`OverflowPolicy::Block`]
+    /// backpressures the source instead of losing events).
+    pub fn ingest_policy(mut self, policy: OverflowPolicy) -> Self {
+        self.ingest_policy = policy;
+        self
+    }
+
     /// Validate and assemble the [`Pipeline`].
     pub fn build(self) -> crate::Result<Pipeline> {
         anyhow::ensure!(!self.queries.is_empty(), "pipeline needs queries");
@@ -267,6 +326,14 @@ impl PipelineBuilder {
         let detector = self
             .detector
             .unwrap_or_else(|| OverloadDetector::new(lb_ns, 0.02 * lb_ns));
+        // the overload switch: strategies hold a gauge and never know
+        // which plane they run on
+        let gauge = match self.overload {
+            OverloadKind::Predicted => OverloadGauge::Predicted(detector),
+            OverloadKind::Measured => {
+                OverloadGauge::Measured(MeasuredDetector::new(lb_ns, 0.02 * lb_ns))
+            }
+        };
         let n = self.queries.len();
         let weights: Vec<f64> = self.queries.iter().map(|q| q.weight).collect();
         // E-BL's key-slot table is built once and Arc-shared between
@@ -279,7 +346,7 @@ impl PipelineBuilder {
             Some(s) => s,
             None => self
                 .shedder
-                .build_from_plane(&detector, key_table.as_ref(), self.seed),
+                .build_from_gauge(&gauge, key_table.as_ref(), self.seed),
         };
         anyhow::ensure!(
             self.tables.is_empty() || self.tables.len() == n,
@@ -336,7 +403,7 @@ impl PipelineBuilder {
         Ok(Pipeline {
             backend,
             shedder,
-            clock: SimClock::new(),
+            clock: self.clock.unwrap_or_else(|| Box::new(SimClock::new())),
             arrivals: self.arrivals,
             latency: LatencyTracker::new(lb_ns, self.latency_stride),
             dispatch,
@@ -352,6 +419,10 @@ impl PipelineBuilder {
             started: false,
             wall: Throughput::new(),
             source: self.source,
+            ingest: self
+                .ingest
+                .map(|s| (s, IngestQueue::new(self.ingest_capacity, self.ingest_policy))),
+            queue_dropped: 0,
         })
     }
 }
@@ -381,6 +452,9 @@ pub struct PipelineRun {
     pub shards: usize,
     /// wall-clock events/s across all feeds (not virtual time)
     pub wall_events_per_sec: f64,
+    /// events lost at the ingest queue (real-time runs with a full
+    /// queue under [`OverflowPolicy::DropOldest`]; 0 in batch runs)
+    pub queue_dropped: u64,
 }
 
 /// The assembled engine: one measurement loop for every strategy and
@@ -389,7 +463,7 @@ pub struct PipelineRun {
 pub struct Pipeline {
     backend: Backend,
     shedder: Box<dyn Shedder>,
-    clock: SimClock,
+    clock: Box<dyn Clock>,
     arrivals: Option<RateSource>,
     latency: LatencyTracker,
     /// events per dispatch unit (1 on the single-threaded backend)
@@ -412,6 +486,11 @@ pub struct Pipeline {
     started: bool,
     wall: Throughput,
     source: Option<Vec<Event>>,
+    /// the real-time plane: ingest source + bounded queue (None in
+    /// batch/virtual mode)
+    ingest: Option<(Box<dyn Source>, IngestQueue)>,
+    /// events lost at the ingest queue so far
+    queue_dropped: u64,
 }
 
 impl Pipeline {
@@ -438,6 +517,14 @@ impl Pipeline {
     /// Global live PM count.
     pub fn pm_count(&self) -> usize {
         self.backend.state_ref().pm_count()
+    }
+
+    /// The pipeline clock's current time (ns) — virtual on a
+    /// [`SimClock`], monotonic-plus-offset on a
+    /// [`crate::sim::WallClock`].  Deadlines for
+    /// [`Pipeline::run_realtime`] are expressed on this timeline.
+    pub fn now_ns(&self) -> f64 {
+        self.clock.now_ns()
     }
 
     /// Accumulated shed totals so far.
@@ -538,6 +625,13 @@ impl Pipeline {
             // shard; on the single backend, the event's cost)
             self.clock.advance(out.cost_ns_max);
             self.busy_ns += out.cost_ns_max;
+            // feed the gauge what the batch actually cost (no-op on the
+            // predicted plane)
+            self.shedder.observe_batch(
+                self.backend.state_ref().pm_count(),
+                chunk.len(),
+                out.cost_ns_max,
+            );
             ces.extend_from_slice(&out.completions);
             self.batch_out = out;
             if let Some(src) = &self.arrivals {
@@ -584,7 +678,115 @@ impl Pipeline {
             shedder: self.shedder.name(),
             shards: self.shards(),
             wall_events_per_sec: self.wall.events_per_sec(),
+            queue_dropped: self.queue_dropped,
         }
+    }
+
+    /// Drive the pipeline against its ingest plane until the clock
+    /// reaches `deadline_ns` or the source is exhausted: poll the
+    /// [`Source`], pass arrivals through the bounded [`IngestQueue`]
+    /// (measuring *real* queueing delay from its arrival stamps), and
+    /// run the same shed-then-process loop as [`Pipeline::feed`].
+    ///
+    /// On a [`crate::sim::SimClock`] the loop fast-forwards across
+    /// arrival gaps (deterministic replay); on a
+    /// [`crate::sim::WallClock`] gaps with no known next arrival are
+    /// idled in real time, so external sources (tail, socket) are
+    /// polled at millisecond cadence.  Needs
+    /// [`PipelineBuilder::ingest_source`].
+    pub fn run_realtime(&mut self, deadline_ns: f64) -> crate::Result<PipelineRun> {
+        let (mut source, mut queue) = self
+            .ingest
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("run_realtime needs an .ingest_source(..)"))?;
+        self.start();
+        let wall_start = Instant::now();
+        let mut completions = Vec::new();
+        let mut batch_events: Vec<Event> = Vec::with_capacity(self.dispatch);
+        let mut batch_arrivals: Vec<f64> = Vec::with_capacity(self.dispatch);
+        let mut poll_buf: Vec<(Event, f64)> = Vec::new();
+        let mut processed = 0u64;
+        let mut exhausted = false;
+        let result = loop {
+            let now = self.clock.now_ns();
+            if now >= deadline_ns {
+                break Ok(());
+            }
+            // 1. pull arrivals into the queue.  Block policy polls only
+            // what fits (true backpressure); DropOldest polls freely
+            // and lets the queue evict.
+            let mut next_arrival: Option<f64> = None;
+            if !exhausted && !queue.pull_paused() {
+                let room = match queue.policy() {
+                    OverflowPolicy::Block => queue.capacity() - queue.len(),
+                    OverflowPolicy::DropOldest => queue.capacity(),
+                };
+                if room > 0 {
+                    poll_buf.clear();
+                    match source.poll_into(now, room, &mut poll_buf) {
+                        SourcePoll::Ready => {
+                            for (e, arrival_ns) in poll_buf.drain(..) {
+                                queue.push(e, arrival_ns);
+                            }
+                        }
+                        SourcePoll::Pending { next_arrival_ns } => next_arrival = next_arrival_ns,
+                        SourcePoll::Exhausted => exhausted = true,
+                    }
+                }
+            }
+            // 2. nothing buffered: wait for the next arrival (or give
+            // external sources a beat) and try again
+            if queue.is_empty() {
+                if exhausted {
+                    break Ok(());
+                }
+                match next_arrival {
+                    Some(t) => self.clock.wait_until(t.min(deadline_ns)),
+                    // no schedule: 1ms — virtual jump or real sleep
+                    None => self.clock.idle(1e6),
+                }
+                continue;
+            }
+            // 3. the shed-then-process loop of feed(), with l_q
+            // measured from the queue's arrival stamps
+            let n = queue.pop_into(self.dispatch, &mut batch_events, &mut batch_arrivals);
+            let first = batch_arrivals[0];
+            let last = batch_arrivals[n - 1];
+            self.clock.begin_service(last);
+            let l_q = (self.clock.now_ns() - first).max(0.0);
+            let rep = self.shedder.on_batch(&batch_events, l_q, self.backend.state());
+            self.clock.advance(rep.cost_ns);
+            self.busy_ns += rep.cost_ns;
+            self.totals += rep;
+            let mask = self.shedder.event_mask();
+            let mut out = std::mem::take(&mut self.batch_out);
+            self.backend
+                .state()
+                .process_batch_into(&batch_events, mask, &mut out);
+            self.clock.advance(out.cost_ns_max);
+            self.busy_ns += out.cost_ns_max;
+            self.shedder
+                .observe_batch(self.backend.state_ref().pm_count(), n, out.cost_ns_max);
+            completions.extend_from_slice(&out.completions);
+            self.batch_out = out;
+            let end = self.clock.now_ns();
+            for &arrival_ns in batch_arrivals.iter() {
+                self.latency.record(end, (end - arrival_ns).max(0.0));
+            }
+            self.peak_pms = self.peak_pms.max(self.backend.state_ref().pm_count());
+            self.idx += n as u64;
+            processed += n as u64;
+            if let Err(e) = self.maybe_retrain() {
+                break Err(e);
+            }
+        };
+        self.wall
+            .record(processed, wall_start.elapsed().as_secs_f64());
+        self.queue_dropped = queue.dropped();
+        // restow so a later call picks up where this one stopped
+        self.ingest = Some((source, queue));
+        result?;
+        Ok(self.summary(completions))
     }
 }
 

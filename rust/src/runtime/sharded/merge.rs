@@ -5,23 +5,29 @@
 
 use std::cmp::Ordering;
 
-use crate::operator::{cell_cmp, CellTake, ComplexEvent, ShedCell};
+use crate::operator::{cell_cmp, CellTake, ComplexEvent, ShedCell, MAX_SHARDS};
 
 /// K-way merge over per-shard cell lists (each sorted ascending by
 /// [`cell_cmp`]): walks the global cell order, consuming whole cells
 /// until the budget `rho` is met — the final cell may be taken
-/// partially — and returns, per shard, the [`CellTake`] drop
-/// instructions (global query indices, grouped by window).
+/// partially — and fills, per shard, the [`CellTake`] drop
+/// instructions (global query indices, grouped by window) into the
+/// caller's recycled `out` buffers (cleared first; one per shard, so a
+/// steady-state shed round allocates no victim lists).
 ///
 /// Because [`cell_cmp`] is a sharding-invariant total order and a
 /// partial take removes the first PMs of the cell in window position
 /// order, a 1-shard and an N-shard run select the *identical* victim
 /// set — the first `rho` PMs in the engine's documented order
 /// `(utility, query, open_seq, state, window position)`.
-pub(super) fn k_way_take(lists: &[Vec<ShedCell>], rho: usize) -> Vec<Vec<CellTake>> {
+pub(super) fn k_way_take(lists: &[Vec<ShedCell>], rho: usize, out: &mut [Vec<CellTake>]) {
     let k = lists.len();
-    let mut cursor = vec![0usize; k];
-    let mut out = vec![Vec::new(); k];
+    debug_assert_eq!(k, out.len(), "one take buffer per shard");
+    for takes in out.iter_mut() {
+        takes.clear();
+    }
+    debug_assert!(k <= MAX_SHARDS);
+    let mut cursor = [0usize; MAX_SHARDS];
     let mut left = rho;
     while left > 0 {
         let mut best: Option<usize> = None;
@@ -55,10 +61,9 @@ pub(super) fn k_way_take(lists: &[Vec<ShedCell>], rho: usize) -> Vec<Vec<CellTak
         cursor[b] += 1;
     }
     // each per-shard list regrouped by window for the in-place drop
-    for takes in &mut out {
+    for takes in out.iter_mut() {
         takes.sort_unstable_by_key(|t: &CellTake| (t.query, t.open_seq, t.state));
     }
-    out
 }
 
 /// Sort completions into the canonical deterministic order.  The key
@@ -85,6 +90,14 @@ mod tests {
         }
     }
 
+    /// Run the merge into fresh buffers (tests for the recycled path
+    /// pass their own).
+    fn take(lists: &[Vec<ShedCell>], rho: usize) -> Vec<Vec<CellTake>> {
+        let mut out = vec![Vec::new(); lists.len()];
+        k_way_take(lists, rho, &mut out);
+        out
+    }
+
     /// Flatten one shard's takes into comparable tuples.
     fn keys(takes: &[CellTake]) -> Vec<(usize, u64, u32, u32)> {
         takes
@@ -104,7 +117,7 @@ mod tests {
             vec![cell(1.0, 0, 0, 3), cell(5.0, 0, 10, 2)],
             vec![cell(2.0, 1, 0, 2), cell(3.0, 1, 10, 4)],
         ];
-        let v = k_way_take(&lists, 7);
+        let v = take(&lists, 7);
         // 3 from u=1, 2 from u=2, then 2 of the 4 at u=3
         assert_eq!(keys(&v[0]), vec![(0, 0, 0, 3)]);
         assert_eq!(keys(&v[1]), vec![(1, 0, 0, 2), (1, 10, 0, 2)]);
@@ -114,7 +127,7 @@ mod tests {
     #[test]
     fn k_way_take_handles_short_lists_and_overdraw() {
         let lists = vec![vec![cell(1.0, 0, 0, 2)], vec![]];
-        let v = k_way_take(&lists, 10);
+        let v = take(&lists, 10);
         assert_eq!(keys(&v[0]), vec![(0, 0, 0, 2)]);
         assert!(v[1].is_empty());
         assert_eq!(total(&v), 2);
@@ -133,7 +146,7 @@ mod tests {
         };
         assert_eq!(cell_cmp(&a, &n), Ordering::Less);
         let lists = vec![vec![b], vec![a]];
-        let v = k_way_take(&lists, 1);
+        let v = take(&lists, 1);
         assert!(v[0].is_empty(), "the open_seq=5 cell must win the tie");
         assert_eq!(v[1].len(), 1);
     }
@@ -149,8 +162,21 @@ mod tests {
         let mut c3 = cell(3.0, 0, 20, 1);
         c3.state = 2;
         let lists = vec![vec![c1, c2, c3]];
-        let v = k_way_take(&lists, 3);
+        let v = take(&lists, 3);
         assert_eq!(keys(&v[0]), vec![(0, 10, 1, 1), (0, 20, 0, 1), (0, 20, 2, 1)]);
+    }
+
+    #[test]
+    fn recycled_buffers_are_cleared_before_reuse() {
+        let lists = vec![vec![cell(1.0, 0, 0, 2)], vec![cell(2.0, 1, 0, 2)]];
+        let mut out = vec![Vec::new(), Vec::new()];
+        k_way_take(&lists, 4, &mut out);
+        assert_eq!(total(&out), 4);
+        // same buffers, smaller budget: stale takes must not survive
+        k_way_take(&lists, 1, &mut out);
+        assert_eq!(keys(&out[0]), vec![(0, 0, 0, 1)]);
+        assert!(out[1].is_empty());
+        assert_eq!(total(&out), 1);
     }
 
     #[test]

@@ -41,10 +41,25 @@
 //! bookkeeping, see `Operator::set_type_routing`), and the coordinator
 //! skips the send entirely for a shard whose queries are irrelevant to
 //! the whole batch *and* whose state is provably inert (no open
-//! windows, no PMs, count-windowed `OnMatch`-opening queries only) —
-//! in that case the skipped shard's virtual cost is reproduced
+//! windows, no PMs, no event due for a local `EveryK` slide) — in that
+//! case the skipped shard's virtual cost is reproduced
 //! coordinator-side with the exact same FP accumulation the worker
 //! would have performed, so results stay bit-for-bit identical.
+//!
+//! ## Rate-digest sync (PR 6)
+//!
+//! The one piece of worker state that moves on *every* event —
+//! relevant or not — is the stream-rate digest
+//! ([`crate::operator::RateDigest`]: last position + events-per-ms
+//! EWMA, which time-window `R_w` estimates and expected window sizes
+//! read).  The coordinator folds every dispatched batch into a mirror
+//! digest and marks skipped shards stale; before a stale shard's next
+//! real batch (or an observation harvest) one `SyncRate` message
+//! installs the mirror, which is bit-identical to the digest the
+//! worker would have folded itself.  This is what extends the send
+//! skip beyond the count-windowed `OnMatch` shards of PR 4 to
+//! time-windowed and slide-opened (`EveryK`) queries without giving up
+//! exactness.
 //!
 //! ## The versioned model plane (PR 5)
 //!
@@ -64,7 +79,7 @@
 pub(crate) mod merge;
 mod worker;
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -73,10 +88,10 @@ use crate::events::{BatchPool, DropMask, Event, EventBatch, MaskPool, TypeMask};
 use crate::model::plane::{ModelHarvest, TableSet};
 use crate::model::UtilityTable;
 use crate::operator::{
-    BatchResult, ComplexEvent, CostModel, OperatorState, PerShard, PmRef, QueryStats,
-    ShedCell, ShedOutcome, MAX_SHARDS,
+    BatchResult, CellTake, ComplexEvent, CostModel, OperatorState, PerShard, PmRef,
+    QueryStats, RateDigest, ShedCell, ShedOutcome, MAX_SHARDS,
 };
-use crate::query::{OpenPolicy, Query, WindowSpec};
+use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
 
 pub use merge::sort_completions;
@@ -160,16 +175,32 @@ pub struct ShardedOperator {
     cand_bufs: Vec<Vec<ShedCell>>,
     /// recycled per-round candidate list-of-lists for the k-way merge
     cand_lists: Vec<Vec<ShedCell>>,
+    /// per-shard recycled victim take lists: filled by the k-way merge,
+    /// sent to the shard as owned `DropCells` payloads, re-stowed from
+    /// the `CellsDropped` responses — no O(cells) victim-list
+    /// allocation or clone per shed round
+    take_bufs: Vec<Vec<CellTake>>,
     /// per-shard recycled PM-ref sinks (`pm_refs` takes `&self`, so the
     /// recycling goes through a `RefCell`; the coordinator is
     /// single-threaded, so the borrow is never contended)
     ref_sinks: RefCell<Vec<Vec<PmRef>>>,
     /// per-shard union of the local queries' type masks
     relevant: Vec<TypeMask>,
-    /// per-shard "inert when idle": every local query opens `OnMatch`
-    /// and uses a count window, so a shard with no windows and no PMs
-    /// is a pure function of the batch length for irrelevant batches
-    static_skip: Vec<bool>,
+    /// per-shard distinct `EveryK` slide values of the local queries:
+    /// slide-opened windows open on `seq % k == 0` regardless of event
+    /// type, so a skip additionally requires that no batch event is
+    /// due for any of these (empty for all-`OnMatch` shards)
+    every_ks: Vec<Vec<u64>>,
+    /// coordinator mirror of the stream-rate digest: folded with every
+    /// dispatched batch (shed or not), so it always equals the digest
+    /// a worker that saw every event would hold — the payload of the
+    /// `SyncRate` resync for shards whose batches were skipped
+    rate: RateDigest,
+    /// per-shard "rate digest is stale": set when a batch send is
+    /// skipped, cleared by `sync_rate` before the shard's next real
+    /// batch or observation harvest (`Cell`: the harvest path is
+    /// `&self`, like `ref_sinks`)
+    stale: Vec<Cell<bool>>,
     /// type-routed dispatch enabled (default on)
     routing: bool,
     /// pooled buffers enabled (default on; off = the PR 3 copy-per-
@@ -202,14 +233,20 @@ impl ShardedOperator {
                     .fold(TypeMask::EMPTY, |m, &g| m.union(queries[g].type_mask()))
             })
             .collect();
-        let static_skip: Vec<bool> = plan
+        let every_ks: Vec<Vec<u64>> = plan
             .assignments
             .iter()
             .map(|a| {
-                a.iter().all(|&g| {
-                    matches!(queries[g].open, OpenPolicy::OnMatch(_))
-                        && matches!(queries[g].window, WindowSpec::Count(_))
-                })
+                let mut ks: Vec<u64> = a
+                    .iter()
+                    .filter_map(|&g| match &queries[g].open {
+                        OpenPolicy::EveryK(k) => Some(*k),
+                        OpenPolicy::OnMatch(_) => None,
+                    })
+                    .collect();
+                ks.sort_unstable();
+                ks.dedup();
+                ks
             })
             .collect();
         let mut txs = Vec::with_capacity(plan.n_shards());
@@ -250,9 +287,12 @@ impl ShardedOperator {
             comp_bufs: vec![Vec::new(); n],
             cand_bufs: vec![Vec::new(); n],
             cand_lists: Vec::new(),
+            take_bufs: vec![Vec::new(); n],
             ref_sinks: RefCell::new(vec![Vec::new(); n]),
             relevant,
-            static_skip,
+            every_ks,
+            rate: RateDigest::default(),
+            stale: vec![Cell::new(false); n],
             routing: true,
             pooling: true,
             skipped: 0,
@@ -344,19 +384,52 @@ impl ShardedOperator {
         }
     }
 
-    /// May dispatch of `types` to shard `s` be skipped outright?  Only
-    /// when the outcome is provably reproducible coordinator-side:
-    /// nothing in the batch is relevant to the shard's queries AND the
-    /// shard is inert (no open windows, no PMs) AND its queries are
-    /// statically skippable (count windows + `OnMatch` opens, so
-    /// neither window openings, expirations, nor the time-window rate
-    /// EWMA can be observed by any later decision).
-    fn can_skip(&self, s: usize, types: TypeMask) -> bool {
+    /// Is some event of the batch due to open a slide window on shard
+    /// `s` (a local `EveryK(k)` query opens on `seq % k == 0`,
+    /// whatever the event's type)?  O(k-values) for the contiguous-seq
+    /// batches the pipeline dispatches; a scan only for gapped seqs.
+    fn due_open(&self, s: usize, events: &[Event]) -> bool {
+        self.every_ks[s].iter().any(|&k| {
+            let first = events[0].seq;
+            let last = events[events.len() - 1].seq;
+            if last >= first && last - first + 1 == events.len() as u64 {
+                // contiguous: is some multiple of k inside [first, last]?
+                last / k >= (first + k - 1) / k
+            } else {
+                events.iter().any(|e| e.seq % k == 0)
+            }
+        })
+    }
+
+    /// May dispatch of this batch to shard `s` be skipped outright?
+    /// Only when the outcome is provably reproducible coordinator-side:
+    /// nothing in the batch is relevant to the shard's queries (so no
+    /// PM can advance and no `OnMatch` window can open), the shard is
+    /// inert (no open windows, no PMs — expiry over zero windows is a
+    /// no-op), and no event is due for a local `EveryK` slide.  The one
+    /// piece of worker state that still moves — the stream-rate digest
+    /// every operator folds per event — is reproduced on the
+    /// coordinator's mirror and re-installed via `sync_rate` before the
+    /// shard's next real batch, so the skip stays bit-exact even for
+    /// time-windowed and slide-opened queries.
+    fn can_skip(&self, s: usize, types: TypeMask, events: &[Event]) -> bool {
         self.routing
-            && self.static_skip[s]
             && self.pms[s] == 0
             && self.wins_open[s] == 0
             && !types.intersects(self.relevant[s])
+            && !self.due_open(s, events)
+    }
+
+    /// Bring a stale shard's rate digest current: one `SyncRate`
+    /// message installing the coordinator mirror, which at this point
+    /// equals the digest of a worker that processed every batch.
+    fn sync_rate(&self, s: usize) {
+        self.send(s, Request::SyncRate(self.rate));
+        match self.recv(s) {
+            Response::Ack => {}
+            _ => unreachable!("protocol violation: expected sync ack"),
+        }
+        self.stale[s].set(false);
     }
 
     /// The virtual cost a skipped shard would have accounted for a
@@ -402,9 +475,15 @@ impl ShardedOperator {
         });
         let mut sent = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
-            if self.can_skip(s, types) {
+            if self.can_skip(s, types, events) {
                 self.skipped += 1;
+                // the worker misses this batch's rate folds; resynced
+                // from the mirror before its next real batch
+                self.stale[s].set(true);
                 continue;
+            }
+            if self.stale[s].get() {
+                self.sync_rate(s);
             }
             sent[s] = true;
             let sink = std::mem::take(&mut self.comp_bufs[s]);
@@ -416,6 +495,13 @@ impl ShardedOperator {
                     sink,
                 },
             );
+        }
+        // fold the batch into the mirror *after* the send decisions: a
+        // resync above must deliver the digest as of the previous
+        // batch — the worker folds this one itself (shed events fold
+        // too, exactly like `process_bookkeeping`)
+        for e in events {
+            self.rate.fold(e);
         }
         for s in 0..self.n_shards() {
             if !sent[s] {
@@ -549,6 +635,13 @@ impl ShardedOperator {
     /// global slots verbatim — per-query statistics are bit-identical
     /// to a single-threaded run over the same stream.
     pub fn harvest_observations(&self, into: &mut ModelHarvest) {
+        // expected window sizes read the stream-rate digest, so shards
+        // whose batches were skipped must be brought current first
+        for s in 0..self.n_shards() {
+            if self.stale[s].get() {
+                self.sync_rate(s);
+            }
+        }
         into.hub.enabled = true;
         into.hub.queries.clear();
         into.hub
@@ -617,32 +710,42 @@ impl ShardedOperator {
                 _ => unreachable!("protocol violation: expected candidates"),
             }
         }
-        let victims = merge::k_way_take(&lists, rho);
+        let mut victims = std::mem::take(&mut self.take_bufs);
+        merge::k_way_take(&lists, rho, &mut victims);
         for (s, mut c) in lists.drain(..).enumerate() {
             c.clear();
             self.cand_bufs[s] = c;
         }
         self.cand_lists = lists;
-        for (s, takes) in victims.iter().enumerate() {
-            if !takes.is_empty() {
-                self.send(s, Request::DropCells(takes.clone()));
-            }
-        }
-        for (s, takes) in victims.iter().enumerate() {
+        // victim lists travel as owned payloads and come back (cleared)
+        // in the responses — the buffers are recycled, never cloned
+        let mut expected = [0usize; MAX_SHARDS];
+        let mut sent = [false; MAX_SHARDS];
+        for (s, takes) in victims.iter_mut().enumerate() {
             if takes.is_empty() {
                 continue;
             }
-            let expected: usize = takes.iter().map(|t| t.take as usize).sum();
+            expected[s] = takes.iter().map(|t| t.take as usize).sum();
+            sent[s] = true;
+            self.send(s, Request::DropCells(std::mem::take(takes)));
+        }
+        for s in 0..self.n_shards() {
+            if !sent[s] {
+                continue;
+            }
             match self.recv(s) {
-                Response::Dropped(d) => {
-                    debug_assert_eq!(d, expected, "victim cells must be live");
-                    self.pms[s] -= d;
-                    out.per_shard[s].1 = d;
-                    out.dropped += d;
+                Response::CellsDropped { n, takes } => {
+                    debug_assert_eq!(n, expected[s], "victim cells must be live");
+                    self.pms[s] -= n;
+                    out.per_shard[s].1 = n;
+                    out.dropped += n;
+                    debug_assert!(takes.is_empty(), "worker returns a cleared buffer");
+                    victims[s] = takes;
                 }
                 _ => unreachable!("protocol violation: expected drop count"),
             }
         }
+        self.take_bufs = victims;
         out
     }
 
@@ -825,7 +928,7 @@ mod tests {
     use crate::datasets::{BusGen, StockGen};
     use crate::events::EventStream;
     use crate::operator::Operator;
-    use crate::query::builtin::{q1, q4};
+    use crate::query::builtin::{q1, q3, q4};
 
     #[test]
     fn round_robin_covers_all_queries_once() {
@@ -960,6 +1063,74 @@ mod tests {
     }
 
     #[test]
+    fn slide_opened_shards_skip_between_due_seqs_bitwise() {
+        // q4 opens EveryK(250) — a window opens on every 250th seq
+        // whatever the event's type, so PR 4's static predicate could
+        // never skip it.  Foreign batches are skippable exactly in the
+        // stretches where no seq is due and the previous slide's window
+        // has expired, and the outcome must stay bit-identical to a
+        // routing-off run that sends every batch.
+        let queries = q4(3, 100, 250).queries;
+        let foreign: Vec<Event> = (0..5_000u64)
+            .map(|i| Event::new(i, i, 7, &[1.0, 2.0, 0.0, 0.0]))
+            .collect();
+        let run = |routing: bool| {
+            let mut sop = ShardedOperator::new(queries.clone(), 1);
+            sop.set_type_routing(routing);
+            let mut cost = Vec::new();
+            let mut opened = 0usize;
+            for chunk in foreign.chunks(50) {
+                let out = sop.process_batch(chunk);
+                assert!(out.completions.is_empty());
+                opened += out.opened;
+                cost.push(out.cost_ns_max.to_bits());
+            }
+            (cost, opened, sop.pm_count(), sop.skipped_dispatches())
+        };
+        let (cost_on, opened_on, pms_on, skipped_on) = run(true);
+        let (cost_off, opened_off, pms_off, skipped_off) = run(false);
+        assert!(opened_on > 0, "due seqs must still open slide windows");
+        assert_eq!(opened_on, opened_off);
+        assert_eq!(pms_on, pms_off);
+        assert!(skipped_on > 0, "no-due stretches must be skipped");
+        assert_eq!(skipped_off, 0, "routing off must not skip");
+        assert_eq!(
+            cost_on, cost_off,
+            "skipped dispatch must reproduce the worker's cost bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn skipped_time_window_shards_resync_rate_digest() {
+        // q3 opens OnMatch with a *time* window, whose expected window
+        // size reads the events-per-ms EWMA — worker state that moves
+        // on every event, relevant or not.  Fully-foreign batches are
+        // skipped, and the SyncRate resync must make the harvest
+        // report exactly the ws an unsharded run computes.
+        let queries = q3(4, 1_500).queries;
+        let foreign: Vec<Event> = (0..4_000u64)
+            .map(|i| Event::new(i, 3 * i, 7, &[1.0, 2.0, 0.0]))
+            .collect();
+        let mut plain = Operator::new(queries.clone());
+        for e in &foreign {
+            plain.process_event(e);
+        }
+        let mut sop = ShardedOperator::new(queries, 1);
+        for chunk in foreign.chunks(256) {
+            let out = sop.process_batch(chunk);
+            assert!(out.completions.is_empty());
+            assert_eq!(out.opened, 0);
+        }
+        assert!(sop.skipped_dispatches() > 0, "foreign batches must skip");
+        let mut h = ModelHarvest::default();
+        sop.harvest_observations(&mut h);
+        assert_eq!(h.ws, plain.expected_ws(), "rate digest must resync exactly");
+        // the digest carried real information: a worker left on the
+        // default digest (1 event/ms) would have reported ws = 1500
+        assert_ne!(h.ws[0], 1_500, "ws must reflect the folded stream rate");
+    }
+
+    #[test]
     fn drop_random_is_exact_across_shards() {
         let queries = q1(2_000).queries;
         let events: Vec<_> = {
@@ -978,6 +1149,28 @@ mod tests {
         let rest = sharded.pm_count();
         assert_eq!(sharded.drop_random(rest + 100, &mut rng), rest);
         assert_eq!(sharded.pm_count(), 0);
+    }
+
+    #[test]
+    fn shed_rounds_recycle_victim_buffers() {
+        let queries = q1(2_000).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(10_000)
+        };
+        let mut sharded = ShardedOperator::new(queries, 2);
+        sharded.process_batch(&events);
+        let before = sharded.pm_count();
+        assert!(before > 20, "need PMs, got {before}");
+        let out1 = sharded.shed_lowest(10);
+        assert_eq!(out1.dropped, 10);
+        // the victim take lists came back from the workers: the
+        // re-stowed buffers keep their capacity for the next round
+        let cap: usize = sharded.take_bufs.iter().map(|b| b.capacity()).sum();
+        assert!(cap > 0, "take buffers must be re-stowed after the round");
+        let out2 = sharded.shed_lowest(5);
+        assert_eq!(out2.dropped, 5);
+        assert_eq!(sharded.pm_count(), before - 15);
     }
 
     #[test]

@@ -41,7 +41,7 @@ use std::sync::Arc;
 use crate::events::{DropMask, EventBatch};
 use crate::model::plane::TableSet;
 use crate::operator::{
-    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, QueryStats, ShedCell,
+    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, QueryStats, RateDigest, ShedCell,
 };
 use crate::query::Query;
 use crate::util::Rng;
@@ -112,8 +112,16 @@ pub(super) enum Request {
     /// Report the epoch of the model snapshot the worker is reading.
     Epoch,
     /// Drop PMs cell-wise (global query indices; the worker remaps and
-    /// applies them in place via [`Operator::drop_cells`]).
+    /// applies them in place via [`Operator::drop_cells`]).  The take
+    /// list is a recycled per-shard buffer — it comes back, cleared,
+    /// in [`Response::CellsDropped`].
     DropCells(Vec<CellTake>),
+    /// Overwrite the operator's stream-rate digest with the
+    /// coordinator's mirror.  Sent before the next real batch to a
+    /// shard whose irrelevant batches were skipped: every operator
+    /// folds every event into the digest, so installing the mirror is
+    /// bit-identical to having processed the skipped events.
+    SyncRate(RateDigest),
     /// Drop `rho` PMs uniformly at random with a seeded RNG.
     DropRandom {
         /// how many to drop
@@ -144,8 +152,17 @@ pub(super) enum Response {
     },
     /// epoch of the installed model snapshot
     Epoch(u64),
-    /// PMs actually dropped
+    /// PMs actually dropped ([`Request::DropRandom`])
     Dropped(usize),
+    /// PMs actually dropped cell-wise, plus the recycled take buffer
+    /// ([`Request::DropCells`])
+    CellsDropped {
+        /// PMs actually dropped
+        n: usize,
+        /// the request's take list, cleared for the coordinator to
+        /// re-stow
+        takes: Vec<CellTake>,
+    },
     /// acknowledgement of a state-setting request
     Ack,
 }
@@ -248,7 +265,7 @@ pub(super) fn run(
                 ws: op.expected_ws(),
             },
             Request::Epoch => Response::Epoch(op.table_epoch()),
-            Request::DropCells(global_takes) => {
+            Request::DropCells(mut global_takes) => {
                 takes.clear();
                 takes.extend(global_takes.iter().map(|t| CellTake {
                     query: global_to_local(t.query),
@@ -257,7 +274,16 @@ pub(super) fn run(
                 // regroup under local indices (the remap is monotone
                 // for round-robin plans, but don't rely on it)
                 takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
-                Response::Dropped(op.drop_cells(&takes))
+                let n = op.drop_cells(&takes);
+                global_takes.clear();
+                Response::CellsDropped {
+                    n,
+                    takes: global_takes,
+                }
+            }
+            Request::SyncRate(digest) => {
+                op.set_rate_digest(digest);
+                Response::Ack
             }
             Request::DropRandom { rho, seed } => {
                 let mut rng = Rng::seeded(seed);

@@ -29,12 +29,13 @@ use crate::operator::OperatorState;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
+use super::measured::OverloadGauge;
 use super::{ShedReport, Shedder, ShedderKind};
 
 /// The event-shedding baseline.
 pub struct EventBaselineShedder {
-    /// detector reused for the latency estimate (not for ρ)
-    pub detector: OverloadDetector,
+    /// overload gauge reused for the latency estimate (not for ρ)
+    pub detector: OverloadGauge,
     /// shared per-key-value pattern utilities (the model plane's
     /// key-slot table)
     key: Arc<KeyUtilityTable>,
@@ -56,11 +57,17 @@ pub struct EventBaselineShedder {
 }
 
 impl EventBaselineShedder {
-    /// Shedder reading the given `Arc`-shared key-utility table (see
-    /// [`KeyUtilityTable::from_queries`] for how it is built).
+    /// Shedder on the predicted plane reading the given `Arc`-shared
+    /// key-utility table (see [`KeyUtilityTable::from_queries`] for how
+    /// it is built).
     pub fn new(detector: OverloadDetector, key: Arc<KeyUtilityTable>, seed: u64) -> Self {
+        Self::from_gauge(OverloadGauge::Predicted(detector), key, seed)
+    }
+
+    /// Shedder from either overload plane.
+    pub fn from_gauge(gauge: OverloadGauge, key: Arc<KeyUtilityTable>, seed: u64) -> Self {
         EventBaselineShedder {
-            detector,
+            detector: gauge,
             key,
             drop_p: 0.0,
             gain: 0.5,
@@ -98,8 +105,9 @@ impl Shedder for EventBaselineShedder {
         let k = state.parallelism() as f64;
         self.mask.reset(events.len());
         if self.detector.trained() {
-            let lb = self.detector.lb_ns;
-            let l_e = l_q_ns + self.detector.predict_lp(state.pm_count()) / k;
+            let lb = self.detector.lb_ns();
+            let l_e =
+                l_q_ns + self.detector.estimate_lp_scaled(state.pm_count(), state.parallelism());
             // proportional control on the relative bound violation: one
             // controller step covers the whole batch, so the
             // integration scales with the batch size.  Within a
@@ -149,6 +157,10 @@ impl Shedder for EventBaselineShedder {
 
     fn event_mask(&self) -> Option<&DropMask> {
         Some(&self.mask)
+    }
+
+    fn observe_batch(&mut self, n_pm: usize, events: usize, cost_ns: f64) {
+        self.detector.observe_batch(n_pm, events, cost_ns);
     }
 }
 
@@ -200,10 +212,12 @@ mod tests {
     fn controller_raises_drop_p_under_pressure() {
         let (mut op, mut s) = shedder();
         // train the detector on a steep linear model
+        let mut det = OverloadDetector::new(1_000_000.0, 0.0);
         for n in (0..100).map(|i| i * 100) {
-            s.detector.observe_processing(n, 1_000.0 * n as f64);
+            det.observe_processing(n, 1_000.0 * n as f64);
         }
-        s.detector.fit();
+        det.fit();
+        s.detector = OverloadGauge::Predicted(det);
         // massive queueing latency: controller must react
         for seq in 0..50 {
             let e = Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]);
@@ -232,10 +246,12 @@ mod tests {
     #[test]
     fn batch_masks_cover_every_event() {
         let (mut op, mut s) = shedder();
+        let mut det = OverloadDetector::new(1_000_000.0, 0.0);
         for n in (0..100).map(|i| i * 100) {
-            s.detector.observe_processing(n, 1_000.0 * n as f64);
+            det.observe_processing(n, 1_000.0 * n as f64);
         }
-        s.detector.fit();
+        det.fit();
+        s.detector = OverloadGauge::Predicted(det);
         let events: Vec<Event> = (0..64)
             .map(|seq| Event::new(seq, seq, 0, &[400.0, 1.0, 1.0]))
             .collect();

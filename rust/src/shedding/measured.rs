@@ -1,0 +1,375 @@
+//! Measured overload detection, and the [`OverloadGauge`] that lets
+//! every consumer — shedders, the pipeline, the sharded coordinator —
+//! speak to either detector through one interface.
+//!
+//! The classic [`OverloadDetector`](super::OverloadDetector) *predicts*
+//! latency from regressions fitted at calibration time (paper Alg. 1).
+//! [`MeasuredDetector`] never predicts: it maintains EWMAs over the
+//! latencies the pipeline actually observed — the per-event drain cost
+//! of recent batches and the marginal cost of carrying one PM — and
+//! combines them with the *measured* queueing delay of the batch at
+//! hand (in the real-time plane, straight from the ingest queue's
+//! arrival stamps):
+//!
+//! ```text
+//! l̂_p           = EWMA(batch makespan / batch events)       (drain)
+//! β̂             = EWMA(l̂_p sample / n_pm)                   (marginal)
+//! ŝ             = EWMA(shed cost / scanned PMs)
+//! overloaded    ⇔ l_q + l̂_p + ŝ·n_pm + b_s > LB
+//! ρ             = ⌈(l_q + l̂_p + ŝ·n_pm + b_s − LB) / β̂⌉
+//! ```
+//!
+//! i.e. ρ is the number of PMs whose measured marginal cost covers the
+//! bound violation.  Because the EWMAs are fed with batch *makespans*
+//! (the slowest shard), parallelism is already priced in and no `1/k`
+//! scaling applies — one of the documented ways the two detectors can
+//! disagree (EXPERIMENTS.md design note #4).
+
+use super::detector::OverloadDetector;
+
+/// Which overload detector drives shedding
+/// ([`crate::pipeline::PipelineBuilder::overload`] selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadKind {
+    /// regression predictions fitted at calibration (paper Alg. 1)
+    #[default]
+    Predicted,
+    /// EWMAs over observed batch latencies + measured queue delay
+    Measured,
+}
+
+impl OverloadKind {
+    /// Canonical CLI/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadKind::Predicted => "predicted",
+            OverloadKind::Measured => "measured",
+        }
+    }
+}
+
+impl std::str::FromStr for OverloadKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "predicted" => Ok(OverloadKind::Predicted),
+            "measured" => Ok(OverloadKind::Measured),
+            other => anyhow::bail!("unknown overload detector {other:?} (predicted|measured)"),
+        }
+    }
+}
+
+/// Overload detection from measured signals only (no fitted model).
+#[derive(Debug, Clone)]
+pub struct MeasuredDetector {
+    /// Latency bound LB (ns).
+    pub lb_ns: f64,
+    /// Safety buffer `b_s` (ns).
+    pub safety_ns: f64,
+    /// EWMA smoothing factor per observed batch.
+    alpha: f64,
+    /// EWMA of per-event drain cost (ns/event) — the inverse drain rate.
+    drain_ns: f64,
+    /// EWMA of the marginal per-event cost of one live PM (ns/(event·PM)).
+    per_pm_ns: f64,
+    /// EWMA of the per-scanned-PM shed cost (ns/PM).
+    shed_per_pm_ns: f64,
+    /// batches observed
+    samples: u64,
+    /// batches observed with a live PM population
+    pm_samples: u64,
+    /// don't fire before this many batches have been seen
+    min_samples: u64,
+}
+
+impl MeasuredDetector {
+    /// Detector for a latency bound (ns) with a safety buffer.
+    pub fn new(lb_ns: f64, safety_ns: f64) -> Self {
+        MeasuredDetector {
+            lb_ns,
+            safety_ns,
+            alpha: 0.1,
+            drain_ns: 0.0,
+            per_pm_ns: 0.0,
+            shed_per_pm_ns: 0.0,
+            samples: 0,
+            pm_samples: 0,
+            min_samples: 5,
+        }
+    }
+
+    #[inline]
+    fn ewma(current: f64, sample: f64, alpha: f64, first: bool) -> f64 {
+        if first {
+            sample
+        } else {
+            (1.0 - alpha) * current + alpha * sample
+        }
+    }
+
+    /// Feed one observed batch: `n_pm` live PMs while it processed,
+    /// `events` events, `cost_ns` its makespan (slowest shard).
+    pub fn observe_batch(&mut self, n_pm: usize, events: usize, cost_ns: f64) {
+        if events == 0 {
+            return;
+        }
+        let per_event = cost_ns / events as f64;
+        self.drain_ns = Self::ewma(self.drain_ns, per_event, self.alpha, self.samples == 0);
+        self.samples += 1;
+        if n_pm > 0 {
+            let marginal = per_event / n_pm as f64;
+            self.per_pm_ns =
+                Self::ewma(self.per_pm_ns, marginal, self.alpha, self.pm_samples == 0);
+            self.pm_samples += 1;
+        }
+    }
+
+    /// Feed one observed shed round: `scanned` PMs scanned, `cost_ns`
+    /// the round's makespan.
+    pub fn observe_shedding(&mut self, scanned: usize, cost_ns: f64) {
+        if scanned == 0 {
+            return;
+        }
+        self.shed_per_pm_ns = Self::ewma(
+            self.shed_per_pm_ns,
+            cost_ns / scanned as f64,
+            self.alpha,
+            self.shed_per_pm_ns == 0.0,
+        );
+    }
+
+    /// Enough observations to act on?
+    pub fn ready(&self) -> bool {
+        self.samples >= self.min_samples && self.drain_ns > 0.0
+    }
+
+    /// Measured per-event drain cost (ns); the drain *rate* is its
+    /// inverse.
+    pub fn drain_ns(&self) -> f64 {
+        self.drain_ns
+    }
+
+    /// Measured drain rate (events per second).
+    pub fn drain_rate_per_sec(&self) -> f64 {
+        if self.drain_ns > 0.0 {
+            1e9 / self.drain_ns
+        } else {
+            0.0
+        }
+    }
+
+    /// Measured marginal cost of one live PM (ns per event per PM).
+    pub fn per_pm_ns(&self) -> f64 {
+        self.per_pm_ns
+    }
+
+    /// The measured analogue of Alg. 1: from the batch's *measured*
+    /// queueing delay and the EWMA'd drain/marginal costs, return
+    /// `Some(ρ)` when the bound is threatened.  `parallelism` is
+    /// accepted for interface parity but unused — makespan observations
+    /// already price the shards in.
+    pub fn check_scaled(&self, l_q_ns: f64, n_pm: usize, _parallelism: usize) -> Option<usize> {
+        if !self.ready() || n_pm == 0 {
+            return None;
+        }
+        let l_s = self.shed_per_pm_ns * n_pm as f64;
+        let projected = l_q_ns + self.drain_ns + l_s + self.safety_ns;
+        let excess = projected - self.lb_ns;
+        if excess <= 0.0 {
+            return None;
+        }
+        // β̂ = measured cost of carrying one PM; when no marginal has
+        // been observed yet, attribute the whole drain cost to the
+        // population (the most aggressive consistent assumption)
+        let marginal = if self.per_pm_ns > 0.0 {
+            self.per_pm_ns
+        } else {
+            self.drain_ns / n_pm as f64
+        };
+        let rho = (excess / marginal).ceil().max(1.0) as usize;
+        Some(rho.min(n_pm))
+    }
+}
+
+/// One interface over both overload detectors.  Everything downstream
+/// of the [`crate::pipeline::PipelineBuilder::overload`] switch — the
+/// shedding strategies and, through them, the sharded coordinator —
+/// holds an `OverloadGauge` and never knows which plane it is on.
+#[derive(Debug, Clone)]
+pub enum OverloadGauge {
+    /// calibration-fitted regression predictions (paper Alg. 1)
+    Predicted(OverloadDetector),
+    /// EWMAs over observed latencies (measured plane)
+    Measured(MeasuredDetector),
+}
+
+impl OverloadGauge {
+    /// Which plane this gauge runs on.
+    pub fn kind(&self) -> OverloadKind {
+        match self {
+            OverloadGauge::Predicted(_) => OverloadKind::Predicted,
+            OverloadGauge::Measured(_) => OverloadKind::Measured,
+        }
+    }
+
+    /// The latency bound LB (ns).
+    pub fn lb_ns(&self) -> f64 {
+        match self {
+            OverloadGauge::Predicted(d) => d.lb_ns,
+            OverloadGauge::Measured(d) => d.lb_ns,
+        }
+    }
+
+    /// Can the gauge act yet (fitted / enough observations)?
+    pub fn trained(&self) -> bool {
+        match self {
+            OverloadGauge::Predicted(d) => d.trained(),
+            OverloadGauge::Measured(d) => d.ready(),
+        }
+    }
+
+    /// Shard-aware overload check: `Some(ρ)` when shedding is needed.
+    pub fn check_scaled(&self, l_q_ns: f64, n_pm: usize, parallelism: usize) -> Option<usize> {
+        match self {
+            OverloadGauge::Predicted(d) => d.check_scaled(l_q_ns, n_pm, parallelism),
+            OverloadGauge::Measured(d) => d.check_scaled(l_q_ns, n_pm, parallelism),
+        }
+    }
+
+    /// Estimated per-event processing latency at the current population
+    /// for a `parallelism`-wide deployment (E-BL's controller input).
+    pub fn estimate_lp_scaled(&self, n_pm: usize, parallelism: usize) -> f64 {
+        match self {
+            OverloadGauge::Predicted(d) => d.predict_lp(n_pm) / parallelism.max(1) as f64,
+            // measured makespans already include the parallelism
+            OverloadGauge::Measured(d) => d.drain_ns(),
+        }
+    }
+
+    /// Record an observed shed round (feeds `g()` on the predicted
+    /// plane, the shed-cost EWMA on the measured one).
+    pub fn observe_shedding(&mut self, scanned: usize, cost_ns: f64) {
+        match self {
+            OverloadGauge::Predicted(d) => d.observe_shedding(scanned, cost_ns),
+            OverloadGauge::Measured(d) => d.observe_shedding(scanned, cost_ns),
+        }
+    }
+
+    /// Record an observed processing batch.  No-op on the predicted
+    /// plane (its `f()` is frozen at calibration), the lifeblood of the
+    /// measured one.
+    pub fn observe_batch(&mut self, n_pm: usize, events: usize, cost_ns: f64) {
+        match self {
+            OverloadGauge::Predicted(_) => {}
+            OverloadGauge::Measured(d) => d.observe_batch(n_pm, events, cost_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fed() -> MeasuredDetector {
+        let mut d = MeasuredDetector::new(10_000.0, 0.0);
+        // steady state: 1000 PMs, batches of 100 events costing 5µs
+        // per event ⇒ marginal ≈ 5 ns/(event·PM)
+        for _ in 0..50 {
+            d.observe_batch(1_000, 100, 100.0 * 5_000.0);
+            d.observe_shedding(1_000, 1_000.0);
+        }
+        d
+    }
+
+    #[test]
+    fn needs_warmup_before_firing() {
+        let mut d = MeasuredDetector::new(1_000.0, 0.0);
+        d.observe_batch(100, 10, 1e9);
+        assert!(!d.ready());
+        assert_eq!(d.check_scaled(1e9, 100, 1), None, "unready never fires");
+        for _ in 0..10 {
+            d.observe_batch(100, 10, 1e9);
+        }
+        assert!(d.ready());
+        assert!(d.check_scaled(1e9, 100, 1).is_some());
+    }
+
+    #[test]
+    fn empty_batches_are_ignored() {
+        let mut d = MeasuredDetector::new(1_000.0, 0.0);
+        for _ in 0..100 {
+            d.observe_batch(10, 0, 123.0);
+            d.observe_shedding(0, 123.0);
+        }
+        assert!(!d.ready());
+    }
+
+    #[test]
+    fn no_overload_when_drain_fits_the_bound() {
+        let d = fed();
+        // 5µs per event under a 10µs bound with no queueing: fine
+        assert_eq!(d.check_scaled(0.0, 1_000, 1), None);
+    }
+
+    #[test]
+    fn measured_queue_delay_drives_rho() {
+        let d = fed();
+        // 8µs of measured queueing on top of 5µs drain breaks the
+        // 10µs bound by ~3µs+shed ⇒ ρ ≈ excess / 5ns ≈ 600+
+        let rho = d.check_scaled(8_000.0, 1_000, 1).expect("overloaded");
+        assert!(rho >= 600, "rho={rho}");
+        assert!(rho <= 1_000, "clamped to the population");
+        // more delay, more shedding
+        let rho_hot = d.check_scaled(9_000.0, 1_000, 1).unwrap();
+        assert!(rho_hot > rho);
+        // hopeless delay drops everything
+        assert_eq!(d.check_scaled(1e9, 1_000, 1), Some(1_000));
+    }
+
+    #[test]
+    fn drain_rate_tracks_observations() {
+        let d = fed();
+        assert!((d.drain_ns() - 5_000.0).abs() < 1e-9);
+        assert!((d.drain_rate_per_sec() - 200_000.0).abs() < 1e-3);
+        assert!((d.per_pm_ns() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_adapts_to_regime_change() {
+        let mut d = fed();
+        assert!((d.drain_ns() - 5_000.0).abs() < 1e-9);
+        // the operator suddenly drains 10x faster
+        for _ in 0..100 {
+            d.observe_batch(1_000, 100, 100.0 * 500.0);
+        }
+        assert!(d.drain_ns() < 600.0, "EWMA converges: {}", d.drain_ns());
+    }
+
+    #[test]
+    fn gauge_dispatches_to_both_planes() {
+        let m = OverloadGauge::Measured(fed());
+        assert_eq!(m.kind(), OverloadKind::Measured);
+        assert!(m.trained());
+        assert_eq!(m.lb_ns(), 10_000.0);
+        assert!(m.check_scaled(9_000.0, 1_000, 1).is_some());
+        assert!((m.estimate_lp_scaled(123, 4) - 5_000.0).abs() < 1e-9);
+
+        let p = OverloadGauge::Predicted(OverloadDetector::new(10_000.0, 0.0));
+        assert_eq!(p.kind(), OverloadKind::Predicted);
+        assert!(!p.trained(), "untrained regression");
+        assert_eq!(p.check_scaled(1e9, 1_000, 1), None);
+        // observe_batch is a no-op on the predicted plane
+        let mut p = p;
+        p.observe_batch(1_000, 100, 1e9);
+        assert!(!p.trained());
+    }
+
+    #[test]
+    fn overload_kind_round_trips() {
+        for k in [OverloadKind::Predicted, OverloadKind::Measured] {
+            assert_eq!(k.name().parse::<OverloadKind>().unwrap(), k);
+        }
+        assert!("psychic".parse::<OverloadKind>().is_err());
+        assert_eq!(OverloadKind::default(), OverloadKind::Predicted);
+    }
+}

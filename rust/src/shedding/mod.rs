@@ -4,6 +4,10 @@
 //!
 //! * [`detector`] — Alg. 1: latency-regression overload detection and
 //!   the drop amount ρ,
+//! * [`measured`] — the model-free alternative ([`MeasuredDetector`]:
+//!   EWMAs over observed batch latencies + measured queue delay) and
+//!   the [`OverloadGauge`] every strategy holds so either detector
+//!   plugs in behind one interface,
 //! * [`pspice`] — Alg. 2: utility-ordered PM shedding (the white-box
 //!   strategy),
 //! * [`pm_baseline`] — PM-BL: Bernoulli-random PM shedding,
@@ -20,12 +24,14 @@
 
 pub mod detector;
 pub mod event_baseline;
+pub mod measured;
 pub mod none;
 pub mod pm_baseline;
 pub mod pspice;
 
 pub use detector::OverloadDetector;
 pub use event_baseline::EventBaselineShedder;
+pub use measured::{MeasuredDetector, OverloadGauge, OverloadKind};
 pub use none::NoShedder;
 pub use pm_baseline::PmBaselineShedder;
 pub use pspice::PSpiceShedder;
@@ -106,6 +112,14 @@ pub trait Shedder {
     fn event_mask(&self) -> Option<&DropMask> {
         None
     }
+
+    /// Feed back what processing the batch actually cost: `n_pm` live
+    /// PMs after it, `events` events, `cost_ns` the observed makespan.
+    /// The pipeline calls this after every processed batch; strategies
+    /// on the predicted plane ignore it (their regressions are frozen
+    /// at calibration), strategies holding a measured
+    /// [`OverloadGauge`] feed their drain-rate EWMAs.
+    fn observe_batch(&mut self, _n_pm: usize, _events: usize, _cost_ns: f64) {}
 }
 
 /// Which strategy to instantiate (CLI/config selector).
@@ -204,31 +218,45 @@ impl ShedderKind {
         self.build_from_plane(detector, key.as_ref(), seed)
     }
 
-    /// The single strategy construction site: build a boxed [`Shedder`]
-    /// for this kind against the model plane.  `detector` is the shared
-    /// overload detector (cloned per strategy); `seed` is the
-    /// experiment seed, offset per strategy by the documented seed
-    /// schedule; `key` is the `Arc`-shared [`KeyUtilityTable`] E-BL
-    /// reads (the same one the pipeline's
-    /// [`crate::model::TableSet`] snapshot carries; required for
-    /// [`ShedderKind::EventBaseline`], ignored by every other kind).
+    /// Build against the predicted plane: wraps `detector` in a
+    /// [`OverloadGauge::Predicted`] and delegates to
+    /// [`ShedderKind::build_from_gauge`] — the single strategy
+    /// construction site.
     pub fn build_from_plane(
         self,
         detector: &OverloadDetector,
         key: Option<&Arc<KeyUtilityTable>>,
         seed: u64,
     ) -> Box<dyn Shedder> {
+        self.build_from_gauge(&OverloadGauge::Predicted(detector.clone()), key, seed)
+    }
+
+    /// The single strategy construction site: build a boxed [`Shedder`]
+    /// for this kind against the model plane.  `gauge` is the overload
+    /// gauge — predicted (Alg. 1 regressions) or measured (latency
+    /// EWMAs) — cloned per strategy; `seed` is the experiment seed,
+    /// offset per strategy by the documented seed schedule; `key` is
+    /// the `Arc`-shared [`KeyUtilityTable`] E-BL reads (the same one
+    /// the pipeline's [`crate::model::TableSet`] snapshot carries;
+    /// required for [`ShedderKind::EventBaseline`], ignored by every
+    /// other kind).
+    pub fn build_from_gauge(
+        self,
+        gauge: &OverloadGauge,
+        key: Option<&Arc<KeyUtilityTable>>,
+        seed: u64,
+    ) -> Box<dyn Shedder> {
         match self {
             ShedderKind::None => Box::new(NoShedder),
             ShedderKind::PSpice | ShedderKind::PSpiceMinus => {
-                Box::new(PSpiceShedder::new(detector.clone(), self))
+                Box::new(PSpiceShedder::from_gauge(gauge.clone(), self))
             }
-            ShedderKind::PmBaseline => Box::new(PmBaselineShedder::new(
-                detector.clone(),
+            ShedderKind::PmBaseline => Box::new(PmBaselineShedder::from_gauge(
+                gauge.clone(),
                 seed ^ PM_BL_SEED_XOR,
             )),
-            ShedderKind::EventBaseline => Box::new(EventBaselineShedder::new(
-                detector.clone(),
+            ShedderKind::EventBaseline => Box::new(EventBaselineShedder::from_gauge(
+                gauge.clone(),
                 Arc::clone(key.expect("e-bl needs a key-utility table")),
                 seed ^ E_BL_SEED_XOR,
             )),

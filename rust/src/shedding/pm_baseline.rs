@@ -7,22 +7,28 @@ use crate::operator::OperatorState;
 use crate::util::Rng;
 
 use super::detector::OverloadDetector;
+use super::measured::OverloadGauge;
 use super::{ShedReport, Shedder, ShedderKind};
 
 /// The random PM-shedding baseline.
 pub struct PmBaselineShedder {
-    /// shared overload detector
-    pub detector: OverloadDetector,
+    /// the overload gauge (predicted or measured plane)
+    pub detector: OverloadGauge,
     rng: Rng,
     /// total PMs dropped (reporting)
     pub total_dropped: u64,
 }
 
 impl PmBaselineShedder {
-    /// Baseline with its own RNG stream.
+    /// Baseline on the predicted plane with its own RNG stream.
     pub fn new(detector: OverloadDetector, seed: u64) -> Self {
+        Self::from_gauge(OverloadGauge::Predicted(detector), seed)
+    }
+
+    /// Baseline from either overload plane.
+    pub fn from_gauge(gauge: OverloadGauge, seed: u64) -> Self {
         PmBaselineShedder {
-            detector,
+            detector: gauge,
             rng: Rng::seeded(seed),
             total_dropped: 0,
         }
@@ -63,6 +69,10 @@ impl Shedder for PmBaselineShedder {
             dropped_events: 0,
             cost_ns,
         }
+    }
+
+    fn observe_batch(&mut self, n_pm: usize, events: usize, cost_ns: f64) {
+        self.detector.observe_batch(n_pm, events, cost_ns);
     }
 }
 

@@ -14,13 +14,15 @@ use crate::events::Event;
 use crate::operator::OperatorState;
 
 use super::detector::OverloadDetector;
+use super::measured::OverloadGauge;
 use super::{ShedReport, Shedder, ShedderKind};
 
 /// The pSPICE load shedder (also pSPICE-- — the two differ only in the
 /// utility tables the pipeline installs on the operator state).
 pub struct PSpiceShedder {
-    /// shared overload detector (Alg. 1)
-    pub detector: OverloadDetector,
+    /// the overload gauge (predicted Alg. 1 regressions or measured
+    /// latency EWMAs)
+    pub detector: OverloadGauge,
     /// which ablation this instance reports as
     kind: ShedderKind,
     /// total PMs dropped over the run (reporting)
@@ -30,15 +32,20 @@ pub struct PSpiceShedder {
 }
 
 impl PSpiceShedder {
-    /// Shedder from a trained detector.  `kind` must be
+    /// Shedder from a trained predicted-plane detector.  `kind` must be
     /// [`ShedderKind::PSpice`] or [`ShedderKind::PSpiceMinus`].
     pub fn new(detector: OverloadDetector, kind: ShedderKind) -> Self {
+        Self::from_gauge(OverloadGauge::Predicted(detector), kind)
+    }
+
+    /// Shedder from either overload plane.
+    pub fn from_gauge(gauge: OverloadGauge, kind: ShedderKind) -> Self {
         assert!(
             matches!(kind, ShedderKind::PSpice | ShedderKind::PSpiceMinus),
             "PSpiceShedder only instantiates the pspice ablations"
         );
         PSpiceShedder {
-            detector,
+            detector: gauge,
             kind,
             total_dropped: 0,
             invocations: 0,
@@ -80,6 +87,10 @@ impl Shedder for PSpiceShedder {
             dropped_events: 0,
             cost_ns,
         }
+    }
+
+    fn observe_batch(&mut self, n_pm: usize, events: usize, cost_ns: f64) {
+        self.detector.observe_batch(n_pm, events, cost_ns);
     }
 }
 
@@ -133,7 +144,7 @@ mod tests {
             det.observe_shedding(n, n as f64);
         }
         assert!(det.fit());
-        shed.detector = det;
+        shed.detector = OverloadGauge::Predicted(det);
         let before = op.pm_count();
         assert!(before > 20, "need PMs, got {before}");
         let e = Event::new(0, 0, 0, &[0.0, 0.0, 0.0, 0.0]);

@@ -7,9 +7,15 @@
 //! queueing latency is the gap between arrival and processing start.
 //! Deterministic, seed-stable, and orders of magnitude faster than
 //! wall-clock replay (DESIGN.md §3).
+//!
+//! Since the real-time ingestion plane, the clock itself is a trait:
+//! [`Clock`] is implemented by the virtual [`SimClock`] (bit-exact with
+//! the historical runs, pinned by the `pipeline_regression` test) and
+//! by [`WallClock`], which anchors the same semantics to monotonic wall
+//! time with a virtual offset for fast-forwarding.
 
 pub mod clock;
 pub mod source;
 
-pub use clock::SimClock;
+pub use clock::{Clock, SimClock, WallClock};
 pub use source::RateSource;

@@ -36,6 +36,7 @@ fn base() -> ExperimentConfig {
         drift_threshold: 0.01,
         shards: 1,
         batch: 256,
+        ..ExperimentConfig::default()
     }
 }
 

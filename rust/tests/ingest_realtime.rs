@@ -1,0 +1,115 @@
+//! Real-time ingestion plane, end to end: synthetic overload must be
+//! survivable *with* shedding and damaging *without* it, the bounded
+//! ingest queue must honor its overflow policy's accounting, and the
+//! wall-clock plane must run the same loop against real time.
+//!
+//! Every virtual-mode test here is deterministic (seeded generators on
+//! a `SimClock` timeline); assertions on the overload runs are
+//! comparative (shedding vs. none on the identical arrival schedule)
+//! rather than absolute thresholds, so they hold on any host.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_realtime_experiment;
+use pspice::ingest::{OverflowPolicy, SourceKind};
+use pspice::shedding::ShedderKind;
+
+fn rt_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        query: "q4".into(),
+        window: 2_000,
+        pattern_n: 4,
+        slide: 250,
+        dataset: DatasetKind::Bus,
+        seed: 3,
+        events: 10_000,
+        warmup: 12_000,
+        rate: 1.4,
+        lb_ms: 0.05,
+        shedder: ShedderKind::PSpice,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn shedding_beats_no_shedding_on_the_same_bursts() {
+    // identical burst schedule (2.8x capacity peaks, mean load > 1):
+    // without shedding the backlog compounds and the tail blows the
+    // bound; with pSPICE the bound holds far better
+    let mut cfg = rt_cfg();
+    cfg.source = SourceKind::Burst;
+    let with = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    cfg.shedder = ShedderKind::None;
+    let without = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    assert!(with.dropped_pms > 0, "bursts must force shedding");
+    assert_eq!(without.dropped_pms, 0, "`none` must never shed");
+    let lb_ns = without.lb_ms * 1e6;
+    assert!(
+        without.latency.p95_ns() > lb_ns,
+        "unshed bursts must violate the bound (p95 = {} ns)",
+        without.latency.p95_ns()
+    );
+    assert!(
+        with.latency.p95_ns() < without.latency.p95_ns(),
+        "shedding must improve the tail: {} vs {} ns",
+        with.latency.p95_ns(),
+        without.latency.p95_ns()
+    );
+    assert!(
+        with.latency.violation_rate() < without.latency.violation_rate(),
+        "shedding must cut the violation rate: {} vs {}",
+        with.latency.violation_rate(),
+        without.latency.violation_rate()
+    );
+}
+
+#[test]
+fn block_policy_loses_nothing_drop_oldest_accounts_for_losses() {
+    // a flash crowd against a tiny queue with shedding off: `block`
+    // backpressures the source and processes every event; `drop-oldest`
+    // evicts, and every eviction shows up in the accounting
+    let mut cfg = rt_cfg();
+    cfg.source = SourceKind::FlashCrowd;
+    cfg.shedder = ShedderKind::None;
+    cfg.ingest_capacity = 256;
+
+    cfg.ingest_policy = OverflowPolicy::Block;
+    let blocked = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert_eq!(blocked.queue_dropped, 0, "block must never lose events");
+    assert_eq!(
+        blocked.events_processed(),
+        10_000,
+        "backpressure defers, it does not discard"
+    );
+
+    cfg.ingest_policy = OverflowPolicy::DropOldest;
+    let dropping = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert!(
+        dropping.queue_dropped > 0,
+        "a flash crowd must overflow a 256-event queue"
+    );
+    assert_eq!(
+        dropping.events_processed() + dropping.queue_dropped,
+        10_000,
+        "every generated event is either processed or counted dropped"
+    );
+}
+
+#[test]
+fn wall_clock_run_terminates_and_processes_events() {
+    // the wall plane: real time underneath, modeled service costs as a
+    // virtual offset, scheduled gaps fast-forwarded — so this finishes
+    // in milliseconds of real time while modeling the same overload
+    let mut cfg = rt_cfg();
+    cfg.source = SourceKind::Oscillate;
+    cfg.events = 2_000;
+    cfg.duration_ms = 500.0;
+    let res = run_realtime_experiment(&cfg, None, true).unwrap();
+    assert!(res.wall, "result must be stamped as a wall-clock run");
+    assert_eq!(res.source, "oscillate");
+    assert!(res.events_processed() > 0, "wall run must process events");
+    assert!(res.events_processed() <= 2_000);
+    assert!(res.real_elapsed_secs >= 0.0);
+}

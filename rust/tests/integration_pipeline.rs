@@ -34,6 +34,7 @@ fn cfg(query: &str) -> ExperimentConfig {
         drift_threshold: 0.01,
         shards: 1,
         batch: 256,
+        ..ExperimentConfig::default()
     }
 }
 

@@ -44,6 +44,7 @@ fn tiny_cfg() -> ExperimentConfig {
         drift_threshold: 0.01,
         shards: 1,
         batch: 256,
+        ..ExperimentConfig::default()
     }
 }
 
@@ -252,4 +253,43 @@ fn pipeline_run_is_deterministic_across_invocations() {
     assert_eq!(a.dropped_pms, b.dropped_pms);
     assert_eq!(a.peak_pms, b.peak_pms);
     assert_eq!(a.latency.violations, b.latency.violations);
+}
+
+#[test]
+fn explicit_sim_clock_reproduces_the_default_clock_bit_for_bit() {
+    // the clock abstraction must be invisible: a pipeline handed an
+    // explicit `SimClock` trait object produces the same floats as one
+    // using the implicit default
+    let cfg = tiny_cfg();
+    let queries = build_queries(&cfg).unwrap();
+    let trace = build_trace(&cfg);
+    let events = trace[..10_000].to_vec();
+    let run = |explicit: bool| {
+        let mut b = pspice::pipeline::Pipeline::builder()
+            .queries(queries.clone())
+            .latency_bound_ms(cfg.lb_ms)
+            .arrivals(RateSource::from_capacity(2_000.0, cfg.rate, 0.0))
+            .source(events.clone());
+        if explicit {
+            b = b.clock(Box::new(SimClock::new()));
+        }
+        b.build().unwrap().run_to_end().unwrap()
+    };
+    let a = run(false);
+    let b = run(true);
+    assert_eq!(a.completions, b.completions, "detections diverged");
+    assert!(a.latency.stats.count() > 0);
+    assert_eq!(a.latency.stats.count(), b.latency.stats.count());
+    assert_eq!(
+        a.latency.stats.mean().to_bits(),
+        b.latency.stats.mean().to_bits(),
+        "mean latency diverged"
+    );
+    assert_eq!(
+        a.latency.stats.max().to_bits(),
+        b.latency.stats.max().to_bits(),
+        "max latency diverged"
+    );
+    assert_eq!(a.latency.violations, b.latency.violations);
+    assert_eq!(a.queue_dropped, b.queue_dropped);
 }
