@@ -13,8 +13,10 @@
 //! capacity and shows pSPICE holding the latency bound while dropping
 //! far less quality than random PM shedding.  Later sections embed
 //! the same engine incrementally via `Pipeline::feed`, retrain the
-//! model plane on drift, and drive the real-time ingestion plane from
-//! a synthetic burst source through the bounded ingest queue.
+//! model plane on drift, drive the real-time ingestion plane from
+//! a synthetic burst source through the bounded ingest queue, and pin
+//! the scorecard's run-manifest identity for the gated evaluation
+//! grid.
 
 use pspice::datasets::{BusGen, DatasetKind};
 use pspice::events::EventStream;
@@ -178,6 +180,30 @@ fn main() -> pspice::Result<()> {
         run.latency.p95_ns() / 1e6,
         run.totals.dropped_pms,
         run.queue_dropped,
+    );
+
+    // 6. the scorecard: the same measurements, as a gated protocol.
+    //    A RunManifest pins every input under a content hash — same
+    //    hash, same primary metrics (bit-identical under the sim
+    //    clock) — and `cargo run --release -- scoreboard --smoke`
+    //    runs the full strategy x dataset grid, appends a line to the
+    //    committed SCORECARD.jsonl, and fails on any >5% regression
+    //    against the previous comparable entry.  Here: just the
+    //    manifest identity for the smoke grid.
+    let sc = pspice::config::ScorecardConfig::default();
+    let manifest = pspice::scorecard::RunManifest {
+        smoke: true,
+        commit: pspice::scorecard::manifest::git_commit(),
+        seeds: (0..sc.reps as u64).map(|r| sc.base_seed + r).collect(),
+        sc,
+        cells: pspice::scorecard::grid(true),
+    };
+    println!(
+        "\nscorecard: {} grid cells x {} seeds pinned as {} \
+         (run `scoreboard --smoke` for the gated protocol)",
+        manifest.cells.len(),
+        manifest.seeds.len(),
+        manifest.hash(),
     );
     Ok(())
 }

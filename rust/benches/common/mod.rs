@@ -148,13 +148,15 @@ fn escape(s: &str) -> String {
 /// each PR's acceptance benches pick their own default, e.g.
 /// `BENCH_pr3.json` / `BENCH_pr4.json`).
 ///
-/// The file is a single JSON object with one array per bench target,
-/// each section kept on its own line; re-running one bench replaces
-/// only its own section, so `shed_overhead` and `operator_throughput`
-/// can both record into the same file:
+/// The file is a single JSON object stamped with a schema marker the
+/// scorecard's bench-gate folding validates, plus one array per bench
+/// target, each section kept on its own line; re-running one bench
+/// replaces only its own section, so `shed_overhead` and
+/// `operator_throughput` can both record into the same file:
 ///
 /// ```json
 /// {
+///   "schema": "pspice-bench-v1",
 ///   "shed_overhead": [{"name": "...", "mean_s": ..., "stddev_s": ..., "items": ..., "items_per_s": ...}],
 ///   "operator_throughput": [...]
 /// }
@@ -166,14 +168,16 @@ pub fn emit_json(
     default_path: &str,
 ) -> std::io::Result<String> {
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
-    // keep every other bench's single-line section
-    let mut sections: Vec<(String, String)> = Vec::new();
+    // the schema marker always leads; keep every other bench's
+    // single-line section
+    let mut sections: Vec<(String, String)> =
+        vec![("schema".to_string(), "\"pspice-bench-v1\"".to_string())];
     if let Ok(existing) = std::fs::read_to_string(&path) {
         for line in existing.lines() {
             let t = line.trim().trim_end_matches(',');
             if let Some(rest) = t.strip_prefix('"') {
                 if let Some((name, body)) = rest.split_once("\": ") {
-                    if name != bench {
+                    if name != bench && name != "schema" {
                         sections.push((name.to_string(), body.to_string()));
                     }
                 }

@@ -22,7 +22,10 @@ pub struct Flags {
 }
 
 impl Flags {
-    /// Parse raw args (after the binary name).
+    /// Parse raw args (after the binary name).  A flag followed by
+    /// another `--flag` (or by nothing) is a boolean switch and reads
+    /// as `"true"` — so `scoreboard --smoke` and `realtime --wall true`
+    /// both work.
     pub fn parse(args: &[String]) -> crate::Result<Flags> {
         anyhow::ensure!(!args.is_empty(), "{}", usage());
         let cmd = args[0].clone();
@@ -32,9 +35,13 @@ impl Flags {
             let key = args[i]
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("expected --flag, got {:?}", args[i]))?;
-            anyhow::ensure!(i + 1 < args.len(), "--{key} needs a value");
-            values.insert(key.to_string(), args[i + 1].clone());
-            i += 2;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                values.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                values.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
         }
         Ok(Flags { cmd, values })
     }
@@ -73,13 +80,17 @@ pub fn usage() -> &'static str {
                   [--overload predicted|measured] [--duration-ms F]\n\
                   [--ingest-capacity N] [--ingest-policy drop-oldest|block]\n\
                   [--wall true|false] [--path file.csv] [--addr host:port]\n\
-                  [--out result.json]\n\
+                  [--codec lines|csv] [--out result.json]\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
        fig7       [--scale F]                       latency-bound trace\n\
        fig8       [--scale F]                       pSPICE vs pSPICE--\n\
        fig9a      [--scale F]                       shedding overhead\n\
        fig9b      [--scale F]                       model build overhead\n\
+       scoreboard run the gated evaluation grid and append the trend ledger\n\
+                  [--smoke] [--config file.toml] [--ledger SCORECARD.jsonl]\n\
+                  [--out-dir results/scorecard] [--bench-json f1.json,f2.json]\n\
+                  [--bless]\n\
        calibrate  --query q1..q4                    capacity + regressions\n\
        gen-data   --dataset stock|soccer|bus --events N --out file.csv\n\
        query-dsl  --file query.dsl --query q1..q4   parse a DSL query"
@@ -133,6 +144,9 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     if let Some(s) = flags.get("source") {
         cfg.source = s.parse()?;
     }
+    if let Some(c) = flags.get("codec") {
+        cfg.codec = c.parse()?;
+    }
     cfg.ingest_capacity = flags.get_parse("ingest-capacity", cfg.ingest_capacity)?;
     if let Some(p) = flags.get("ingest-policy") {
         cfg.ingest_policy = p.parse()?;
@@ -140,6 +154,29 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     cfg.duration_ms = flags.get_parse("duration-ms", cfg.duration_ms)?;
     anyhow::ensure!(cfg.ingest_capacity >= 1, "--ingest-capacity must be at least 1");
     Ok(cfg)
+}
+
+fn scoreboard_opts(flags: &Flags) -> crate::Result<crate::scorecard::ScoreboardOpts> {
+    let mut opts = crate::scorecard::ScoreboardOpts {
+        smoke: flags.get_parse("smoke", false)?,
+        bless: flags.get_parse("bless", false)?,
+        ..Default::default()
+    };
+    opts.config_path = flags.get("config").map(std::path::PathBuf::from);
+    if let Some(p) = flags.get("ledger") {
+        opts.ledger_path = std::path::PathBuf::from(p);
+    }
+    if let Some(p) = flags.get("out-dir") {
+        opts.out_dir = std::path::PathBuf::from(p);
+    }
+    if let Some(list) = flags.get("bench-json") {
+        opts.bench_json = list
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect();
+    }
+    Ok(opts)
 }
 
 fn figure_opts(flags: &Flags) -> crate::Result<FigureOpts> {
@@ -205,8 +242,8 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                     let addr = flags
                         .get("addr")
                         .ok_or_else(|| anyhow::anyhow!("--source socket needs --addr"))?;
-                    let src = crate::ingest::SocketSource::bind(addr)?;
-                    eprintln!("listening on {}", src.local_addr()?);
+                    let src = crate::ingest::SocketSource::bind_with(addr, cfg.codec)?;
+                    eprintln!("listening on {} ({})", src.local_addr()?, cfg.codec.name());
                     Some(Box::new(src))
                 }
                 _ => None,
@@ -266,6 +303,10 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
         "fig8" => figures::fig8(&figure_opts(&flags)?),
         "fig9a" => figures::fig9a(&figure_opts(&flags)?),
         "fig9b" => figures::fig9b(&figure_opts(&flags)?),
+        "scoreboard" => {
+            let opts = scoreboard_opts(&flags)?;
+            crate::scorecard::run_scoreboard(&opts)
+        }
         "calibrate" => {
             let cfg = cfg_from_flags(&flags)?;
             let queries = crate::harness::experiment::build_queries(&cfg)?;
@@ -349,7 +390,52 @@ mod tests {
     fn rejects_bad_flags() {
         assert!(Flags::parse(&s(&[])).is_err());
         assert!(Flags::parse(&s(&["run", "query", "q1"])).is_err());
-        assert!(Flags::parse(&s(&["run", "--query"])).is_err());
+    }
+
+    #[test]
+    fn valueless_flags_read_as_true() {
+        // a trailing flag is a boolean switch
+        let f = Flags::parse(&s(&["scoreboard", "--smoke"])).unwrap();
+        assert_eq!(f.get("smoke"), Some("true"));
+        assert!(f.get_parse("smoke", false).unwrap());
+        // ... and so is one followed by another flag
+        let f = Flags::parse(&s(&["scoreboard", "--smoke", "--ledger", "L.jsonl"])).unwrap();
+        assert_eq!(f.get("smoke"), Some("true"));
+        assert_eq!(f.get("ledger"), Some("L.jsonl"));
+        // explicit values still win
+        let f = Flags::parse(&s(&["realtime", "--wall", "false"])).unwrap();
+        assert!(!f.get_parse("wall", true).unwrap());
+    }
+
+    #[test]
+    fn scoreboard_flags_resolve_to_opts() {
+        let f = Flags::parse(&s(&[
+            "scoreboard",
+            "--smoke",
+            "--bench-json",
+            "a.json,b.json",
+            "--out-dir",
+            "tmp/sc",
+            "--bless",
+        ]))
+        .unwrap();
+        let opts = scoreboard_opts(&f).unwrap();
+        assert!(opts.smoke);
+        assert!(opts.bless);
+        assert_eq!(opts.out_dir, std::path::PathBuf::from("tmp/sc"));
+        assert_eq!(
+            opts.bench_json,
+            vec![
+                std::path::PathBuf::from("a.json"),
+                std::path::PathBuf::from("b.json")
+            ]
+        );
+        // defaults: repo-root ledger, no bench files, full scale
+        let f = Flags::parse(&s(&["scoreboard"])).unwrap();
+        let opts = scoreboard_opts(&f).unwrap();
+        assert!(!opts.smoke);
+        assert_eq!(opts.ledger_path, std::path::PathBuf::from("SCORECARD.jsonl"));
+        assert!(opts.bench_json.is_empty());
     }
 
     #[test]
@@ -419,10 +505,13 @@ mod tests {
             "block",
             "--duration-ms",
             "50",
+            "--codec",
+            "csv",
         ]))
         .unwrap();
         let cfg = cfg_from_flags(&f).unwrap();
         assert_eq!(cfg.source, crate::ingest::SourceKind::Burst);
+        assert_eq!(cfg.codec, crate::ingest::WireCodec::Csv);
         assert_eq!(cfg.overload, crate::shedding::OverloadKind::Measured);
         assert_eq!(cfg.ingest_capacity, 1024);
         assert_eq!(cfg.ingest_policy, crate::ingest::OverflowPolicy::Block);

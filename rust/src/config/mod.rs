@@ -10,7 +10,7 @@ pub mod toml_lite;
 pub use toml_lite::{TomlDoc, TomlValue};
 
 use crate::datasets::DatasetKind;
-use crate::ingest::{OverflowPolicy, SourceKind};
+use crate::ingest::{OverflowPolicy, SourceKind, WireCodec};
 use crate::model::ModelKind;
 use crate::shedding::{OverloadKind, ShedderKind};
 
@@ -62,6 +62,8 @@ pub struct ExperimentConfig {
     pub overload: OverloadKind,
     /// ingest source for real-time runs (`trace` replays the dataset)
     pub source: SourceKind,
+    /// wire framing for `--source socket` (`lines` or strict `csv`)
+    pub codec: WireCodec,
     /// bounded ingest-queue capacity (events)
     pub ingest_capacity: usize,
     /// what the full ingest queue does (`drop-oldest` or `block`)
@@ -93,6 +95,7 @@ impl Default for ExperimentConfig {
             batch: 256,
             overload: OverloadKind::Predicted,
             source: SourceKind::Trace,
+            codec: WireCodec::Lines,
             ingest_capacity: 8_192,
             ingest_policy: OverflowPolicy::DropOldest,
             duration_ms: 0.0,
@@ -167,6 +170,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str(section, "source") {
             cfg.source = v.parse()?;
         }
+        if let Some(v) = doc.get_str(section, "codec") {
+            cfg.codec = v.parse()?;
+        }
         if let Some(v) = doc.get_num(section, "ingest_capacity") {
             cfg.ingest_capacity = v as usize;
         }
@@ -183,6 +189,93 @@ impl ExperimentConfig {
     pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::from_toml(&text)
+    }
+}
+
+/// Scoreboard protocol settings (section `[scorecard]`, all keys
+/// optional): how many repeated seeds back each grid cell's confidence
+/// interval, and how much release-over-release regression the trend
+/// gates tolerate (see `rust/src/scorecard/`).
+#[derive(Debug, Clone)]
+pub struct ScorecardConfig {
+    /// repeated seeds per grid cell (`base_seed .. base_seed + reps`)
+    pub reps: usize,
+    /// first dataset seed of the repetition sweep
+    pub base_seed: u64,
+    /// default gate: fail on more than this % regression on any
+    /// primary metric vs the previous ledger entry
+    pub max_regression_pct: f64,
+    /// per-metric override for `p95_ms`
+    pub gate_p95_ms_pct: Option<f64>,
+    /// per-metric override for `fn_percent`
+    pub gate_fn_percent_pct: Option<f64>,
+    /// per-metric override for `throughput_at_slo_eps`
+    pub gate_throughput_pct: Option<f64>,
+}
+
+impl Default for ScorecardConfig {
+    fn default() -> Self {
+        ScorecardConfig {
+            reps: 3,
+            base_seed: 42,
+            max_regression_pct: 5.0,
+            gate_p95_ms_pct: None,
+            gate_fn_percent_pct: None,
+            gate_throughput_pct: None,
+        }
+    }
+}
+
+impl ScorecardConfig {
+    /// Parse from TOML-subset text (section `[scorecard]`).
+    pub fn from_toml(text: &str) -> crate::Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ScorecardConfig::default();
+        let section = "scorecard";
+        if let Some(v) = doc.get_num(section, "reps") {
+            cfg.reps = v as usize;
+        }
+        if let Some(v) = doc.get_num(section, "base_seed") {
+            cfg.base_seed = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "max_regression_pct") {
+            cfg.max_regression_pct = v;
+        }
+        if let Some(v) = doc.get_num(section, "gate_p95_ms_pct") {
+            cfg.gate_p95_ms_pct = Some(v);
+        }
+        if let Some(v) = doc.get_num(section, "gate_fn_percent_pct") {
+            cfg.gate_fn_percent_pct = Some(v);
+        }
+        if let Some(v) = doc.get_num(section, "gate_throughput_pct") {
+            cfg.gate_throughput_pct = Some(v);
+        }
+        anyhow::ensure!(cfg.reps >= 1, "scorecard.reps must be at least 1");
+        Ok(cfg)
+    }
+
+    /// Load from a file (missing file = defaults, so `scoreboard` runs
+    /// without a config).
+    pub fn from_file_or_default(path: &std::path::Path) -> crate::Result<Self> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::from_toml(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(ScorecardConfig::default())
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// The regression tolerance (in %) gating `metric` (canonical
+    /// primary-metric names; unknown metrics get the default).
+    pub fn limit_pct_for(&self, metric: &str) -> f64 {
+        let over = match metric {
+            "p95_ms" => self.gate_p95_ms_pct,
+            "fn_percent" => self.gate_fn_percent_pct,
+            "throughput_at_slo_eps" => self.gate_throughput_pct,
+            _ => None,
+        };
+        over.unwrap_or(self.max_regression_pct)
     }
 }
 
@@ -273,5 +366,34 @@ mod tests {
         assert_eq!(d.ingest_policy, OverflowPolicy::DropOldest);
         assert!(ExperimentConfig::from_toml("[experiment]\noverload = \"psychic\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nsource = \"warp\"\n").is_err());
+    }
+
+    #[test]
+    fn codec_key_parses() {
+        let cfg = ExperimentConfig::from_toml("[experiment]\ncodec = \"csv\"\n").unwrap();
+        assert_eq!(cfg.codec, WireCodec::Csv);
+        assert_eq!(ExperimentConfig::default().codec, WireCodec::Lines);
+        assert!(ExperimentConfig::from_toml("[experiment]\ncodec = \"json\"\n").is_err());
+    }
+
+    #[test]
+    fn scorecard_section_parses() {
+        let sc = ScorecardConfig::from_toml(
+            "[scorecard]\nreps = 5\nbase_seed = 7\nmax_regression_pct = 3\n\
+             gate_p95_ms_pct = 10\n",
+        )
+        .unwrap();
+        assert_eq!(sc.reps, 5);
+        assert_eq!(sc.base_seed, 7);
+        assert!((sc.max_regression_pct - 3.0).abs() < 1e-12);
+        // the override applies only to its metric
+        assert!((sc.limit_pct_for("p95_ms") - 10.0).abs() < 1e-12);
+        assert!((sc.limit_pct_for("fn_percent") - 3.0).abs() < 1e-12);
+        assert!((sc.limit_pct_for("throughput_at_slo_eps") - 3.0).abs() < 1e-12);
+        // defaults without a [scorecard] section
+        let d = ScorecardConfig::from_toml("[experiment]\nquery = \"q1\"\n").unwrap();
+        assert_eq!(d.reps, 3);
+        assert!((d.limit_pct_for("p95_ms") - 5.0).abs() < 1e-12);
+        assert!(ScorecardConfig::from_toml("[scorecard]\nreps = 0\n").is_err());
     }
 }

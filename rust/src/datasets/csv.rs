@@ -29,6 +29,39 @@ pub fn write_csv(path: &Path, events: &[Event]) -> crate::Result<()> {
     Ok(())
 }
 
+/// Is this line the canonical header row written by [`write_csv`]?
+pub fn is_csv_header(line: &str) -> bool {
+    line.starts_with("seq,ts_ms,etype")
+}
+
+/// Parse one strict data row of the [`write_csv`] format: all three
+/// integer columns plus exactly [`MAX_ATTRS`] attribute columns must be
+/// present and well-formed.  Shared by [`read_csv`] and the socket
+/// ingest's CSV wire codec
+/// ([`crate::ingest::WireCodec::Csv`]), so file replay and wire replay
+/// accept byte-identical rows.
+pub fn parse_csv_row(line: &str) -> crate::Result<Event> {
+    let mut parts = line.split(',');
+    let mut next = |what: &str| {
+        parts
+            .next()
+            .with_context(|| format!("missing {what} column"))
+    };
+    let seq: u64 = next("seq")?.parse()?;
+    let ts_ms: u64 = next("ts_ms")?.parse()?;
+    let etype: u16 = next("etype")?.parse()?;
+    let mut attrs = [0.0; MAX_ATTRS];
+    for (i, slot) in attrs.iter_mut().enumerate() {
+        *slot = next(&format!("a{i}"))?.parse()?;
+    }
+    Ok(Event {
+        seq,
+        ts_ms,
+        etype,
+        attrs,
+    })
+}
+
 /// Read events back from a CSV file written by [`write_csv`].
 pub fn read_csv(path: &Path) -> crate::Result<Vec<Event>> {
     let file = std::fs::File::open(path)
@@ -38,35 +71,16 @@ pub fn read_csv(path: &Path) -> crate::Result<Vec<Event>> {
         .next()
         .context("empty csv")?
         .context("reading header")?;
-    anyhow::ensure!(
-        header.starts_with("seq,ts_ms,etype"),
-        "unrecognized csv header: {header}"
-    );
+    anyhow::ensure!(is_csv_header(&header), "unrecognized csv header: {header}");
     let mut out = Vec::new();
     for (lineno, line) in lines.enumerate() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let mut parts = line.split(',');
-        let mut next = |what: &str| {
-            parts
-                .next()
-                .with_context(|| format!("line {}: missing {what}", lineno + 2))
-        };
-        let seq: u64 = next("seq")?.parse()?;
-        let ts_ms: u64 = next("ts_ms")?.parse()?;
-        let etype: u16 = next("etype")?.parse()?;
-        let mut attrs = [0.0; MAX_ATTRS];
-        for (i, slot) in attrs.iter_mut().enumerate() {
-            *slot = next(&format!("a{i}"))?.parse()?;
-        }
-        out.push(Event {
-            seq,
-            ts_ms,
-            etype,
-            attrs,
-        });
+        out.push(
+            parse_csv_row(&line).with_context(|| format!("line {}", lineno + 2))?,
+        );
     }
     Ok(out)
 }

@@ -38,6 +38,15 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Canonical selector name (the scorecard ledger keys cells on it).
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::Stock => "stock",
+            DatasetKind::Soccer => "soccer",
+            DatasetKind::Bus => "bus",
+        }
+    }
+
     /// Attribute slot holding the stream's correlation key (stock
     /// symbol / player id / bus id) — the slot E-BL's type utilities
     /// are keyed on.

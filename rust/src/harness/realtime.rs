@@ -62,6 +62,13 @@ pub struct RealtimeResult {
     pub peak_pms: usize,
     /// complex events detected during the run
     pub completions: usize,
+    /// drift-triggered model rebuilds during the run (the measured
+    /// overload plane feeds the same retraining loop as the simulated
+    /// one — see [`Pipeline::run_realtime`])
+    pub retrains: u32,
+    /// model-table epoch at the end of the run (`retrains` + initial
+    /// installs; 0 when the strategy carries no tables)
+    pub table_epoch: u64,
     /// wall-clock events/s of the run loop
     pub wall_events_per_sec: f64,
     /// real elapsed seconds (host time, even for virtual runs)
@@ -108,6 +115,8 @@ impl RealtimeResult {
                 "  \"dropped_events\": {dropped_events},\n",
                 "  \"shed_overhead\": {shed_overhead},\n",
                 "  \"peak_pms\": {peak_pms},\n",
+                "  \"retrains\": {retrains},\n",
+                "  \"table_epoch\": {table_epoch},\n",
                 "  \"wall_events_per_sec\": {weps},\n",
                 "  \"real_elapsed_secs\": {elapsed}\n",
                 "}}\n"
@@ -132,6 +141,8 @@ impl RealtimeResult {
             dropped_events = self.dropped_events,
             shed_overhead = num(self.shed_overhead),
             peak_pms = self.peak_pms,
+            retrains = self.retrains,
+            table_epoch = self.table_epoch,
             weps = num(self.wall_events_per_sec),
             elapsed = num(self.real_elapsed_secs),
         )
@@ -322,6 +333,8 @@ pub fn run_realtime_experiment(
         shed_overhead: run.shed_overhead,
         peak_pms: run.peak_pms,
         completions: run.completions.len(),
+        retrains: run.retrains,
+        table_epoch: run.table_epoch,
         wall_events_per_sec: run.wall_events_per_sec,
         real_elapsed_secs,
     })
@@ -407,6 +420,28 @@ mod tests {
         // parses as JSON (python gate in CI does the same)
         assert!(json.trim_end().ends_with('}'));
         assert!(json.starts_with('{'));
+    }
+
+    #[test]
+    fn wall_clock_run_retrains_on_drift() {
+        // the measured ingest plane must feed the drift loop exactly
+        // like the virtual one: a ~0 threshold makes every due check a
+        // retrain once the model has observations
+        let mut cfg = tiny_cfg();
+        cfg.overload = OverloadKind::Measured;
+        cfg.retrain_every = 1_500;
+        cfg.drift_threshold = 1e-12;
+        let res = run_realtime_experiment(&cfg, None, true).unwrap();
+        assert!(res.wall);
+        assert_eq!(res.events_processed(), 10_000);
+        assert!(
+            res.retrains >= 1,
+            "tight threshold must retrain on the wall clock"
+        );
+        assert_eq!(res.table_epoch, res.retrains as u64);
+        let json = res.to_json();
+        assert!(json.contains("\"retrains\""), "json must carry retrains");
+        assert!(json.contains("\"table_epoch\""));
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //!
 //! * [`TraceSource`] — today's datasets on the deterministic schedule,
 //! * [`FileTailSource`] — follow a growing CSV file,
-//! * [`SocketSource`] — line-oriented events over TCP,
+//! * [`SocketSource`] — events over TCP, lenient line framing or the
+//!   strict CSV file format ([`WireCodec`]),
 //! * [`Burst`], [`FlashCrowd`], [`OscillatingRate`] — synthetic
 //!   adversarial overload generators (via [`SyntheticSource`]).
 
@@ -27,7 +28,7 @@ pub mod synthetic;
 pub mod tail;
 
 pub use queue::{IngestQueue, OverflowPolicy, PushOutcome};
-pub use socket::SocketSource;
+pub use socket::{SocketSource, WireCodec};
 pub use source::{Source, SourcePoll, TraceSource};
 pub use synthetic::{Burst, FlashCrowd, OscillatingRate, RateProfile, SyntheticSource};
 pub use tail::FileTailSource;

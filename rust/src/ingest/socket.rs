@@ -1,9 +1,20 @@
 //! TCP ingest: a non-blocking listener accepting line-oriented event
-//! streams in the CSV wire format (`seq,ts_ms,etype,a0,...`, one event
-//! per line; see [`crate::events::Event::parse_csv`]).  Events are
-//! stamped with the poll time — arrival is when the engine reads them
-//! off the wire.  One peer at a time; when it disconnects the listener
-//! goes back to accepting.
+//! streams.  Two wire codecs ([`WireCodec`]):
+//!
+//! * [`WireCodec::Lines`] (default) — lenient `seq,ts_ms,etype,a0,...`
+//!   lines via [`crate::events::Event::parse_csv`]: trailing attribute
+//!   columns optional, comments/headers skipped, bad lines counted.
+//! * [`WireCodec::Csv`] — the exact [`crate::datasets::csv`] file
+//!   format on the wire: each connection must open with the
+//!   `seq,ts_ms,etype,...` header, and every row must carry all
+//!   attribute columns (strict, shared row parser
+//!   [`crate::datasets::csv::parse_csv_row`]), so `gen-data` output can
+//!   be piped straight into a socket unchanged.
+//!
+//! Events are stamped with the poll time — arrival is when the engine
+//! reads them off the wire.  One peer at a time; when it disconnects
+//! the listener goes back to accepting (and the CSV codec expects a
+//! fresh header from the next peer).
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -14,19 +25,62 @@ use crate::events::Event;
 
 use super::source::{Source, SourcePoll};
 
+/// Framing of the byte stream a [`SocketSource`] peer sends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// lenient line format (default): comments and header lines
+    /// skipped, trailing attribute columns optional
+    #[default]
+    Lines,
+    /// strict [`crate::datasets::csv`] file format: per-connection
+    /// header required, all attribute columns required
+    Csv,
+}
+
+impl WireCodec {
+    /// Canonical selector name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Lines => "lines",
+            WireCodec::Csv => "csv",
+        }
+    }
+}
+
+impl std::str::FromStr for WireCodec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "lines" => Ok(WireCodec::Lines),
+            "csv" => Ok(WireCodec::Csv),
+            other => anyhow::bail!("unknown codec {other:?} (lines|csv)"),
+        }
+    }
+}
+
 /// A [`Source`] reading events from a TCP peer.
 pub struct SocketSource {
     listener: TcpListener,
     conn: Option<TcpStream>,
     /// bytes carried until a full line is available
     carry: Vec<u8>,
+    /// wire framing (see [`WireCodec`])
+    codec: WireCodec,
+    /// CSV codec: current connection has sent its header row
+    header_seen: bool,
     /// lines that failed to parse (skipped, counted)
     pub bad_lines: u64,
 }
 
 impl SocketSource {
-    /// Bind `addr` (e.g. `127.0.0.1:0`) and listen without blocking.
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and listen without blocking,
+    /// with the default lenient [`WireCodec::Lines`] framing.
     pub fn bind(addr: &str) -> crate::Result<Self> {
+        Self::bind_with(addr, WireCodec::default())
+    }
+
+    /// Bind `addr` with an explicit wire codec.
+    pub fn bind_with(addr: &str, codec: WireCodec) -> crate::Result<Self> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding ingest socket {addr}"))?;
         listener
@@ -36,6 +90,8 @@ impl SocketSource {
             listener,
             conn: None,
             carry: Vec::new(),
+            codec,
+            header_seen: false,
             bad_lines: 0,
         })
     }
@@ -56,13 +112,16 @@ impl SocketSource {
                     return false;
                 }
                 self.conn = Some(stream);
+                // a fresh peer must send its own CSV header
+                self.header_seen = false;
                 true
             }
             Err(_) => false, // WouldBlock or transient: no peer yet
         }
     }
 
-    /// Split complete lines out of `carry`, parse them, stamp `now_ns`.
+    /// Split complete lines out of `carry`, decode them with the wire
+    /// codec, stamp `now_ns`.
     fn drain_lines(&mut self, now_ns: f64, max: usize, sink: &mut Vec<(Event, f64)>) -> usize {
         let mut pushed = 0usize;
         let mut start = 0usize;
@@ -73,13 +132,41 @@ impl SocketSource {
             let end = start + rel;
             let line = String::from_utf8_lossy(&self.carry[start..end]);
             let t = line.trim();
-            if !(t.is_empty() || t.starts_with('#') || t.starts_with("seq,")) {
-                match Event::parse_csv(t) {
-                    Ok(e) => {
-                        sink.push((e, now_ns));
-                        pushed += 1;
+            match self.codec {
+                WireCodec::Lines => {
+                    if !(t.is_empty()
+                        || t.starts_with('#')
+                        || crate::datasets::csv::is_csv_header(t))
+                    {
+                        match Event::parse_csv(t) {
+                            Ok(e) => {
+                                sink.push((e, now_ns));
+                                pushed += 1;
+                            }
+                            Err(_) => self.bad_lines += 1,
+                        }
                     }
-                    Err(_) => self.bad_lines += 1,
+                }
+                WireCodec::Csv => {
+                    if t.is_empty() {
+                        // blank lines are legal in the file format too
+                    } else if !self.header_seen {
+                        // strict framing: the connection must open with
+                        // the canonical header before any data row
+                        if crate::datasets::csv::is_csv_header(t) {
+                            self.header_seen = true;
+                        } else {
+                            self.bad_lines += 1;
+                        }
+                    } else {
+                        match crate::datasets::csv::parse_csv_row(t) {
+                            Ok(e) => {
+                                sink.push((e, now_ns));
+                                pushed += 1;
+                            }
+                            Err(_) => self.bad_lines += 1,
+                        }
+                    }
                 }
             }
             start = end + 1;
@@ -193,5 +280,63 @@ mod tests {
         assert_eq!(sink[0].0.etype, 0);
         assert_eq!(sink[0].0.attr(0), 7.0);
         assert_eq!(src.name(), "socket");
+    }
+
+    #[test]
+    fn csv_codec_round_trips_generated_trace() {
+        use crate::events::EventStream;
+
+        // materialize a real trace through the canonical CSV file
+        // format, then replay those exact bytes over the wire
+        let events = crate::datasets::StockGen::with_seed(77).take_events(64);
+        let dir = std::env::temp_dir().join("pspice_socket_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wire.csv");
+        crate::datasets::csv::write_csv(&path, &events).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let mut src = SocketSource::bind_with("127.0.0.1:0", WireCodec::Csv).unwrap();
+        let addr = src.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        peer.write_all(&bytes).unwrap();
+        peer.flush().unwrap();
+        drop(peer);
+
+        let mut sink = Vec::new();
+        for _ in 0..500 {
+            src.poll_into(5.0, events.len(), &mut sink);
+            if sink.len() >= events.len() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let back: Vec<_> = sink.iter().map(|(e, _)| *e).collect();
+        assert_eq!(back, events, "wire replay must be byte-identical");
+        assert_eq!(src.bad_lines, 0, "the canonical format has no bad lines");
+
+        // strict framing: a row before the header is rejected, the
+        // header unlocks the connection
+        let mut src = SocketSource::bind_with("127.0.0.1:0", WireCodec::Csv).unwrap();
+        let addr = src.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        peer.write_all(b"0,1,2,0,0,0,0,0,0\nseq,ts_ms,etype,a0,a1,a2,a3,a4,a5\n3,4,5,1,2,3,4,5,6\n5,6,7,1.5\n")
+            .unwrap();
+        peer.flush().unwrap();
+        drop(peer);
+        let mut sink = Vec::new();
+        for _ in 0..500 {
+            src.poll_into(6.0, 8, &mut sink);
+            if !sink.is_empty() && src.bad_lines >= 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(sink.len(), 1, "only the complete post-header row parses");
+        assert_eq!(sink[0].0.seq, 3);
+        // headerless row + short row (strict codec wants every column)
+        assert_eq!(src.bad_lines, 2);
+        assert_eq!("csv".parse::<WireCodec>().unwrap(), WireCodec::Csv);
+        assert_eq!(WireCodec::default().name(), "lines");
+        assert!("json".parse::<WireCodec>().is_err());
     }
 }

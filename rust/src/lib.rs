@@ -40,6 +40,7 @@
 //! | [`ingest`] | real-time ingestion: [`ingest::Source`] trait (trace/tail/socket/synthetic overload generators) + the bounded backpressured [`ingest::IngestQueue`] |
 //! | [`metrics`] | latency, wall-clock throughput, QoR (FN/FP) accounting |
 //! | [`harness`] | experiment runner (built on [`pipeline`]) + Figure 5–9 drivers |
+//! | [`scorecard`] | the gated evaluation protocol: run manifests, QoR/latency metrics with confidence intervals, the committed `SCORECARD.jsonl` trend ledger and its regression gates |
 //! | [`linalg`] | dense matrices, regression, Markov oracle |
 //! | [`config`] | TOML-subset experiment configuration |
 //! | [`cli`] | argument parsing for the `pspice` binary |
@@ -60,6 +61,7 @@ pub mod operator;
 pub mod pipeline;
 pub mod query;
 pub mod runtime;
+pub mod scorecard;
 pub mod shedding;
 pub mod sim;
 pub mod testing;

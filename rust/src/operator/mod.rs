@@ -9,7 +9,7 @@ pub mod operator;
 pub mod state;
 
 pub use cost::CostModel;
-pub use observe::{ObservationHub, QueryStats};
+pub use observe::{DeltaRow, ObservationHub, QueryStats, StatsDelta};
 pub use operator::{
     cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell,
 };

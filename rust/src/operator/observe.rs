@@ -19,6 +19,11 @@ pub struct QueryStats {
     pub reward_ns: Vec<Vec<f64>>,
     /// Total observations.
     pub total: u64,
+    /// `dirty[s]` — row `s` changed since the last
+    /// [`QueryStats::take_delta`].  Drives the sharded runtime's delta
+    /// harvests; a fresh or reset instance is all-dirty so the first
+    /// harvest ships every row.
+    dirty: Vec<bool>,
 }
 
 impl QueryStats {
@@ -29,6 +34,7 @@ impl QueryStats {
             counts: vec![vec![0; m]; m],
             reward_ns: vec![vec![0.0; m]; m],
             total: 0,
+            dirty: vec![true; m],
         }
     }
 
@@ -38,6 +44,7 @@ impl QueryStats {
         self.counts[s as usize][s2 as usize] += 1;
         self.reward_ns[s as usize][s2 as usize] += t_ns;
         self.total += 1;
+        self.dirty[s as usize] = true;
     }
 
     /// Record `n` identical observations `<s, s', t_ns>` at once — the
@@ -51,6 +58,7 @@ impl QueryStats {
         self.counts[s as usize][s2 as usize] += n;
         self.reward_ns[s as usize][s2 as usize] += t_ns * n as f64;
         self.total += n;
+        self.dirty[s as usize] = true;
     }
 
     /// Learned transition matrix (rows normalized; final state forced
@@ -83,7 +91,8 @@ impl QueryStats {
             .collect()
     }
 
-    /// Reset all counters (used at retraining boundaries).
+    /// Reset all counters (used at retraining boundaries).  Marks every
+    /// row dirty: the zeroed rows must reach the next delta harvest.
     pub fn reset(&mut self) {
         for row in &mut self.counts {
             row.fill(0);
@@ -92,6 +101,7 @@ impl QueryStats {
             row.fill(0.0);
         }
         self.total = 0;
+        self.dirty.fill(true);
     }
 
     /// Overwrite this instance from `src`, reusing its allocations —
@@ -103,7 +113,78 @@ impl QueryStats {
         self.counts.clone_from(&src.counts);
         self.reward_ns.clone_from(&src.reward_ns);
         self.total = src.total;
+        self.dirty.clone_from(&src.dirty);
     }
+
+    /// Snapshot the rows dirtied since the last call — **verbatim
+    /// cumulative values**, not arithmetic differences, so applying the
+    /// delta to a mirror is bit-identical to a full clone (f64 rewards
+    /// never go through extra additions) — and clear the dirty flags.
+    ///
+    /// The sharded runtime's observation harvest ships these instead of
+    /// cloning whole `m × m` count matrices every drift check.
+    pub fn take_delta(&mut self) -> StatsDelta {
+        let mut rows = Vec::new();
+        for s in 0..self.m {
+            if self.dirty[s] {
+                rows.push(DeltaRow {
+                    s: s as u32,
+                    counts: self.counts[s].clone(),
+                    reward_ns: self.reward_ns[s].clone(),
+                });
+                self.dirty[s] = false;
+            }
+        }
+        StatsDelta {
+            m: self.m,
+            total: self.total,
+            rows,
+        }
+    }
+
+    /// Overwrite this instance's dirtied rows from a
+    /// [`QueryStats::take_delta`] snapshot.  Resizes (zeroed) on a
+    /// state-count change — the sender marks everything dirty whenever
+    /// that can happen, so no stale row survives a resize.
+    pub fn apply_delta(&mut self, d: &StatsDelta) {
+        if self.m != d.m {
+            self.m = d.m;
+            self.counts.clear();
+            self.counts.resize_with(d.m, || vec![0; d.m]);
+            self.reward_ns.clear();
+            self.reward_ns.resize_with(d.m, || vec![0.0; d.m]);
+            self.dirty = vec![true; d.m];
+        }
+        for row in &d.rows {
+            self.counts[row.s as usize].clone_from(&row.counts);
+            self.reward_ns[row.s as usize].clone_from(&row.reward_ns);
+        }
+        self.total = d.total;
+    }
+}
+
+/// One dirtied row of a [`QueryStats`] matrix pair, by source state.
+#[derive(Debug, Clone)]
+pub struct DeltaRow {
+    /// source state `s`
+    pub s: u32,
+    /// cumulative `counts[s][..]`, verbatim
+    pub counts: Vec<u64>,
+    /// cumulative `reward_ns[s][..]`, verbatim
+    pub reward_ns: Vec<f64>,
+}
+
+/// The rows of one query's statistics dirtied since the last harvest
+/// (see [`QueryStats::take_delta`]): what the sharded runtime sends
+/// over the worker channel instead of a full matrix clone.
+#[derive(Debug, Clone)]
+pub struct StatsDelta {
+    /// Markov state count of the sender
+    pub m: usize,
+    /// cumulative total observations
+    pub total: u64,
+    /// dirtied rows, ascending by state
+    pub rows: Vec<DeltaRow>,
 }
 
 /// Statistics for all queries of an operator.
@@ -181,5 +262,43 @@ mod tests {
         qs.reset();
         assert_eq!(qs.total, 0);
         assert_eq!(qs.counts[0][1], 0);
+    }
+
+    #[test]
+    fn delta_round_trip_is_bit_identical() {
+        let mut src = QueryStats::new(3);
+        let mut mirror = QueryStats::new(0);
+        // first harvest: everything is dirty (fresh instance)
+        src.record(0, 1, 10.5);
+        src.record(1, 2, 0.1 + 0.2); // a value with FP residue
+        let d = src.take_delta();
+        assert_eq!(d.rows.len(), 3, "fresh stats ship every row");
+        mirror.apply_delta(&d);
+        assert_eq!(mirror.counts, src.counts);
+        assert_eq!(mirror.total, src.total);
+        for (a, b) in mirror.reward_ns.iter().zip(&src.reward_ns) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // quiet harvest: nothing dirty, nothing shipped
+        let d = src.take_delta();
+        assert!(d.rows.is_empty());
+        assert_eq!(d.total, src.total);
+        // touch one row: only that row crosses
+        src.record_many(2, 2, 7.25, 4);
+        let d = src.take_delta();
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.rows[0].s, 2);
+        mirror.apply_delta(&d);
+        assert_eq!(mirror.counts, src.counts);
+        assert_eq!(mirror.total, src.total);
+        // reset marks everything dirty so the zeroes propagate
+        src.reset();
+        let d = src.take_delta();
+        assert_eq!(d.rows.len(), 3);
+        mirror.apply_delta(&d);
+        assert_eq!(mirror.counts, QueryStats::new(3).counts);
+        assert_eq!(mirror.total, 0);
     }
 }

@@ -201,6 +201,14 @@ pub struct ShardedOperator {
     /// batch or observation harvest (`Cell`: the harvest path is
     /// `&self`, like `ref_sinks`)
     stale: Vec<Cell<bool>>,
+    /// persistent mirror of the merged observation harvest: workers
+    /// ship only rows dirtied since their last harvest
+    /// ([`crate::operator::StatsDelta`], verbatim cumulative values),
+    /// which this mirror accumulates into the global query slots — so
+    /// a drift check costs O(changed rows) channel traffic instead of
+    /// cloning every per-query count matrix (`RefCell`: the harvest
+    /// path is `&self`, like `ref_sinks`)
+    obs_mirror: RefCell<ModelHarvest>,
     /// type-routed dispatch enabled (default on)
     routing: bool,
     /// pooled buffers enabled (default on; off = the PR 3 copy-per-
@@ -293,6 +301,7 @@ impl ShardedOperator {
             every_ks,
             rate: RateDigest::default(),
             stale: vec![Cell::new(false); n],
+            obs_mirror: RefCell::new(ModelHarvest::default()),
             routing: true,
             pooling: true,
             skipped: 0,
@@ -634,6 +643,14 @@ impl ShardedOperator {
     /// across shards, so each worker's local statistics land in their
     /// global slots verbatim — per-query statistics are bit-identical
     /// to a single-threaded run over the same stream.
+    ///
+    /// Workers ship **delta rows** (only statistics rows dirtied since
+    /// their last harvest, as verbatim cumulative values — see
+    /// [`crate::operator::QueryStats::take_delta`]) which are applied to
+    /// a persistent coordinator-side mirror, so a quiet drift check
+    /// costs O(changed rows) channel traffic instead of a full matrix
+    /// clone per query.  The mirror is then copied into the caller's
+    /// buffer allocation-free via `assign_from`.
     pub fn harvest_observations(&self, into: &mut ModelHarvest) {
         // expected window sizes read the stream-rate digest, so shards
         // whose batches were skipped must be brought current first
@@ -642,31 +659,39 @@ impl ShardedOperator {
                 self.sync_rate(s);
             }
         }
-        into.hub.enabled = true;
-        into.hub.queries.clear();
-        into.hub
-            .queries
-            .resize_with(self.n_queries, || QueryStats::new(0));
-        into.ws.clear();
-        into.ws.resize(self.n_queries, 0);
+        let mut mirror = self.obs_mirror.borrow_mut();
+        if mirror.hub.queries.len() != self.n_queries {
+            // first harvest: placeholder stats, resized by the all-dirty
+            // first delta from each worker
+            mirror.hub.queries.clear();
+            mirror
+                .hub
+                .queries
+                .resize_with(self.n_queries, || QueryStats::new(0));
+            mirror.ws.clear();
+            mirror.ws.resize(self.n_queries, 0);
+        }
+        mirror.hub.enabled = true;
         for s in 0..self.n_shards() {
             self.send(s, Request::Observations);
         }
         for s in 0..self.n_shards() {
             match self.recv(s) {
                 Response::Observations { stats, ws } => {
-                    for ((qs, w), &g) in stats
-                        .into_iter()
+                    for ((delta, w), &g) in stats
+                        .iter()
                         .zip(ws)
                         .zip(&self.plan.assignments[s])
                     {
-                        into.hub.queries[g] = qs;
-                        into.ws[g] = w;
+                        mirror.hub.queries[g].apply_delta(delta);
+                        mirror.ws[g] = w;
                     }
                 }
                 _ => unreachable!("protocol violation: expected observations"),
             }
         }
+        into.hub.assign_from(&mirror.hub);
+        into.ws.clone_from(&mirror.ws);
     }
 
     /// Toggle observation capture on every shard.

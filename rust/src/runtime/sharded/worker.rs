@@ -27,8 +27,10 @@
 //! and cost factors and remembers the epoch, which the coordinator can
 //! audit via [`Request::Epoch`].  Training inputs flow the other way:
 //! [`Request::Observations`] returns the worker's per-local-query
-//! statistics plus expected window sizes for the coordinator's merged
-//! harvest (cold path — retraining cadence, not dispatch cadence).
+//! statistic *deltas* (only rows dirtied since the last harvest, as
+//! verbatim cumulative values) plus expected window sizes for the
+//! coordinator's mirrored harvest (cold path — retraining cadence,
+//! not dispatch cadence — but O(changed rows), not O(m²), per check).
 //!
 //! Shed candidates travel as compact `(query, window, state)` **cell
 //! summaries** ([`ShedCell`]) instead of per-PM `PmRef` streams: all
@@ -41,7 +43,7 @@ use std::sync::Arc;
 use crate::events::{DropMask, EventBatch};
 use crate::model::plane::TableSet;
 use crate::operator::{
-    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, QueryStats, RateDigest, ShedCell,
+    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell, StatsDelta,
 };
 use crate::query::Query;
 use crate::util::Rng;
@@ -105,9 +107,10 @@ pub(super) enum Request {
         /// recycled PM-ref sink, returned in [`Response::PmRefs`]
         sink: Vec<PmRef>,
     },
-    /// Report the worker's per-local-query observation statistics and
-    /// expected window sizes (the coordinator merges them into the
-    /// global training harvest).
+    /// Report the worker's per-local-query observation statistics —
+    /// as **delta rows** dirtied since the last harvest, not full
+    /// matrix clones — and expected window sizes (the coordinator
+    /// applies them to its persistent mirror of the global harvest).
     Observations,
     /// Report the epoch of the model snapshot the worker is reading.
     Epoch,
@@ -143,10 +146,13 @@ pub(super) enum Response {
     Candidates(Vec<ShedCell>),
     /// every live PM with global query indices (the recycled sink)
     PmRefs(Vec<PmRef>),
-    /// per-local-query statistics + expected window sizes
+    /// per-local-query statistic deltas + expected window sizes
     Observations {
-        /// aggregated stats, local query order
-        stats: Vec<QueryStats>,
+        /// rows dirtied since the last harvest
+        /// ([`crate::operator::QueryStats::take_delta`] — verbatim
+        /// cumulative values, so the coordinator's mirror stays
+        /// bit-identical to a full clone), local query order
+        stats: Vec<StatsDelta>,
         /// expected window sizes, local query order
         ws: Vec<u64>,
     },
@@ -261,7 +267,12 @@ pub(super) fn run(
                 Response::PmRefs(sink)
             }
             Request::Observations => Response::Observations {
-                stats: op.obs.queries.clone(),
+                stats: op
+                    .obs
+                    .queries
+                    .iter_mut()
+                    .map(|q| q.take_delta())
+                    .collect(),
                 ws: op.expected_ws(),
             },
             Request::Epoch => Response::Epoch(op.table_epoch()),

@@ -1,0 +1,270 @@
+//! The scoreboard driver: `cargo run --release -- scoreboard
+//! [--smoke]` in one command runs the full strategy × dataset grid
+//! over repeated seeds, aggregates the metrics layer, evaluates the
+//! regression gates against the committed ledger, appends the new
+//! entry, and regenerates figures — the whole evaluation protocol, no
+//! manual steps to forget.
+//!
+//! The grid covers every strategy (`none` / `pspice` / `pspice--` /
+//! `pm-bl` / `e-bl`) on each of the three datasets at that dataset's
+//! canonical query (bus→q4, soccer→q3, stock→q1).  `--smoke` shrinks
+//! the traces to CI scale; smoke and full runs hash differently and
+//! never gate against each other.
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use crate::config::{ExperimentConfig, ScorecardConfig};
+use crate::datasets::DatasetKind;
+use crate::harness::figures::{self, FigureOpts};
+use crate::harness::run_experiment;
+use crate::shedding::ALL_SHEDDER_KINDS;
+
+use super::gates;
+use super::ledger::{Ledger, LedgerEntry};
+use super::manifest::{git_commit, RunManifest};
+use super::metrics::{CellMetrics, RepMetrics, PRIMARY_METRICS};
+
+/// Scoreboard invocation options (CLI flags resolve into this).
+#[derive(Debug, Clone)]
+pub struct ScoreboardOpts {
+    /// CI-sized traces (12k events) instead of full scale (60k)
+    pub smoke: bool,
+    /// optional TOML with a `[scorecard]` section (reps, gate limits)
+    pub config_path: Option<PathBuf>,
+    /// the trend ledger to gate against and append to
+    pub ledger_path: PathBuf,
+    /// where the manifest artifact and figure CSVs go
+    pub out_dir: PathBuf,
+    /// `BENCH_*.json` files whose acceptance gates fold into this run
+    pub bench_json: Vec<PathBuf>,
+    /// append despite gate violations, marking the entry blessed
+    pub bless: bool,
+}
+
+impl Default for ScoreboardOpts {
+    fn default() -> Self {
+        ScoreboardOpts {
+            smoke: false,
+            config_path: None,
+            ledger_path: PathBuf::from("SCORECARD.jsonl"),
+            out_dir: PathBuf::from("results/scorecard"),
+            bench_json: Vec::new(),
+            bless: false,
+        }
+    }
+}
+
+/// The canonical per-dataset cell configuration.  Window/pattern/LB
+/// choices follow the proven figure-driver configurations
+/// ([`crate::harness::figures`]); smoke runs shrink the trace and
+/// loosen nothing else.
+fn dataset_cfg(dataset: DatasetKind, smoke: bool) -> ExperimentConfig {
+    let (query, window, pattern_n, slide) = match dataset {
+        DatasetKind::Bus => ("q4", 2_000, 4, 250),
+        DatasetKind::Soccer => ("q3", 1_500, 4, 500),
+        DatasetKind::Stock => ("q1", if smoke { 2_000 } else { 5_000 }, 0, 500),
+    };
+    let lb_ms = match dataset {
+        // q4/q3 latencies sit well under a ms at smoke scale; stock's
+        // q1 runs a bigger window and needs the figure-driver bound
+        DatasetKind::Bus | DatasetKind::Soccer if smoke => 0.05,
+        _ => 0.5,
+    };
+    ExperimentConfig {
+        query: query.into(),
+        window,
+        pattern_n,
+        slide,
+        dataset,
+        events: if smoke { 12_000 } else { 60_000 },
+        warmup: if smoke { 12_000 } else { 60_000 },
+        rate: if smoke { 1.4 } else { 1.2 },
+        lb_ms,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The full evaluation grid: every strategy on every dataset (15
+/// cells), in canonical order (datasets outer, strategies inner).
+pub fn grid(smoke: bool) -> Vec<ExperimentConfig> {
+    let mut cells = Vec::new();
+    for dataset in [DatasetKind::Bus, DatasetKind::Soccer, DatasetKind::Stock] {
+        for shedder in ALL_SHEDDER_KINDS {
+            let mut cfg = dataset_cfg(dataset, smoke);
+            cfg.shedder = shedder;
+            cells.push(cfg);
+        }
+    }
+    cells
+}
+
+/// Run every cell once per seed and aggregate (also the entry point
+/// the determinism tests drive with a reduced grid).
+pub fn run_cells(
+    cfgs: &[ExperimentConfig],
+    seeds: &[u64],
+) -> crate::Result<Vec<CellMetrics>> {
+    let mut cells = Vec::with_capacity(cfgs.len());
+    for cfg in cfgs {
+        let mut reps = Vec::with_capacity(seeds.len());
+        for &seed in seeds {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let r = run_experiment(&c)
+                .with_context(|| format!("cell {}/{} seed {seed}", cfg.shedder.name(), cfg.dataset.name()))?;
+            reps.push(RepMetrics::from_result(&c, &r));
+        }
+        let cell = CellMetrics {
+            dataset: cfg.dataset.name().to_string(),
+            query: cfg.query.clone(),
+            shedder: cfg.shedder.name().to_string(),
+            reps,
+        };
+        let p95 = cell.ci("p95_ms");
+        let fnp = cell.ci("fn_percent");
+        let thr = cell.ci("throughput_at_slo_eps");
+        println!(
+            "[scoreboard] {:<16} p95={:.4}±{:.4}ms  fn={:.2}±{:.2}%  thr@slo={:.0}±{:.0} ev/s  (n={})",
+            cell.key(),
+            p95.mean,
+            p95.ci95,
+            fnp.mean,
+            fnp.ci95,
+            thr.mean,
+            thr.ci95,
+            p95.n
+        );
+        cells.push(cell);
+    }
+    Ok(cells)
+}
+
+/// One-command evaluation: grid → metrics → gates → ledger → figures.
+/// Fails (and does NOT append) when a gate is violated, naming every
+/// offending cell/metric; `--bless` records the regression instead.
+pub fn run_scoreboard(opts: &ScoreboardOpts) -> crate::Result<()> {
+    let sc = match &opts.config_path {
+        Some(p) => ScorecardConfig::from_file_or_default(p)?,
+        None => ScorecardConfig::default(),
+    };
+    let seeds: Vec<u64> = (0..sc.reps as u64).map(|r| sc.base_seed + r).collect();
+    let cfgs = grid(opts.smoke);
+    let manifest = RunManifest {
+        smoke: opts.smoke,
+        commit: git_commit(),
+        seeds: seeds.clone(),
+        sc: sc.clone(),
+        cells: cfgs.clone(),
+    };
+    let hash = manifest.hash();
+    println!(
+        "[scoreboard] {} grid: {} cells x {} seeds, manifest {hash}",
+        if opts.smoke { "smoke" } else { "full" },
+        cfgs.len(),
+        seeds.len()
+    );
+
+    let cells = run_cells(&cfgs, &seeds)?;
+
+    // fold the perf benches' own acceptance checks into this run's
+    // gate set (and into the ledger entry, for the trend)
+    let mut bench = Vec::new();
+    let mut violations = Vec::new();
+    for p in &opts.bench_json {
+        let (summary, v) = gates::fold_bench_file(p)?;
+        bench.extend(summary);
+        violations.extend(v);
+    }
+
+    let ledger = Ledger::read(&opts.ledger_path)?;
+    let baseline = ledger.baseline(opts.smoke, &hash);
+    if baseline.is_none() {
+        println!(
+            "[scoreboard] no comparable baseline in {} (hash {hash}) — this \
+             run establishes one; trend gates pass vacuously",
+            opts.ledger_path.display()
+        );
+    }
+    violations.extend(gates::evaluate(baseline, &cells, &sc));
+
+    // artifacts: pinned manifest + regenerated figures next to it
+    std::fs::create_dir_all(&opts.out_dir)?;
+    std::fs::write(opts.out_dir.join("manifest.json"), manifest.to_json())?;
+    let fig = FigureOpts {
+        scale: if opts.smoke { 0.02 } else { 0.2 },
+        out_dir: opts.out_dir.clone(),
+    };
+    figures::fig9b(&fig)?;
+    if !opts.smoke {
+        figures::fig7(&fig)?;
+        figures::fig8(&fig)?;
+    }
+
+    let blessed = opts.bless && !violations.is_empty();
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("[scoreboard] GATE VIOLATION: {v}");
+        }
+        if !opts.bless {
+            let names: Vec<String> = violations
+                .iter()
+                .map(|v| format!("{} {}", v.cell, v.metric))
+                .collect();
+            anyhow::bail!(
+                "scoreboard: {} regression gate(s) failed ({}); rerun with \
+                 --bless to record an intentional regression",
+                violations.len(),
+                names.join(", ")
+            );
+        }
+        eprintln!("[scoreboard] --bless: recording the regression as intentional");
+    }
+
+    let entry = LedgerEntry { manifest, cells, blessed, bench };
+    Ledger::append_line(&opts.ledger_path, &entry.to_line())?;
+    println!(
+        "[scoreboard] appended entry {hash} to {} ({} primary metrics gated per cell)",
+        opts.ledger_path.display(),
+        PRIMARY_METRICS.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shedding::ShedderKind;
+
+    #[test]
+    fn grid_covers_every_strategy_on_every_dataset() {
+        for smoke in [true, false] {
+            let g = grid(smoke);
+            assert_eq!(g.len(), 15, "5 strategies x 3 datasets");
+            for kind in ALL_SHEDDER_KINDS {
+                assert_eq!(g.iter().filter(|c| c.shedder == kind).count(), 3);
+            }
+            for (dataset, query) in [
+                (DatasetKind::Bus, "q4"),
+                (DatasetKind::Soccer, "q3"),
+                (DatasetKind::Stock, "q1"),
+            ] {
+                let ds: Vec<_> = g.iter().filter(|c| c.dataset == dataset).collect();
+                assert_eq!(ds.len(), 5);
+                assert!(ds.iter().all(|c| c.query == query));
+            }
+            // smoke shrinks the trace, not the grid
+            let events = g[0].events;
+            assert_eq!(events, if smoke { 12_000 } else { 60_000 });
+        }
+        // smoke and full must hash differently end to end
+        let smoke_grid = grid(true);
+        let full_grid = grid(false);
+        assert_ne!(
+            super::super::manifest::cfg_canonical(&smoke_grid[0]),
+            super::super::manifest::cfg_canonical(&full_grid[0])
+        );
+        assert!(smoke_grid.iter().any(|c| c.shedder == ShedderKind::None));
+    }
+}

@@ -1,0 +1,359 @@
+//! Release-over-release regression gates.
+//!
+//! Two gate families:
+//!
+//! * **trend gates** — every primary metric of every grid cell is
+//!   compared against the baseline ledger entry (same manifest hash,
+//!   same smoke flag).  Direction-aware: latency and FN% may not grow,
+//!   throughput-at-SLO may not shrink, by more than the configured
+//!   percentage (default 5%, per-metric overrides in `[scorecard]`).
+//!   Each relative limit carries a small *absolute* tolerance so a
+//!   baseline near zero (e.g. `fn_percent = 0` for shedder `none`)
+//!   doesn't turn an epsilon wobble into an infinite relative
+//!   regression.
+//! * **bench gates** — the acceptance checks the perf benches already
+//!   compute (`alloc_gate`, `decide_speedup`) are folded in from their
+//!   `BENCH_*.json` files so one CI job owns all pass/fail perf
+//!   decisions.
+//!
+//! A violation names its cell (`shedder/dataset`, or `bench`) and
+//! metric — the scoreboard's error message is actionable, not "perf
+//! got worse somewhere".
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::config::ScorecardConfig;
+
+use super::json::Json;
+use super::ledger::entry_cell_mean;
+use super::metrics::{CellMetrics, PRIMARY_METRICS};
+
+/// Absolute slack on the `p95_ms` gate (virtual ms).
+pub const P95_TOL_MS: f64 = 1e-3;
+/// Absolute slack on the `fn_percent` gate (percentage points).
+pub const FN_TOL_PCT: f64 = 0.5;
+/// Absolute slack on the `throughput_at_slo_eps` gate (events/s).
+pub const THR_TOL_EPS: f64 = 1.0;
+
+/// Schema tag the bench emitter stamps into `BENCH_*.json`.
+pub const BENCH_SCHEMA: &str = "pspice-bench-v1";
+
+/// One failed gate, naming exactly what regressed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateViolation {
+    /// `"shedder/dataset"` for trend gates, `"bench"` for bench gates
+    pub cell: String,
+    /// metric name (`p95_ms`, `fn_percent`, `throughput_at_slo_eps`,
+    /// `alloc_gate`, `decide_speedup`)
+    pub metric: String,
+    /// baseline value (or the bench gate's required value)
+    pub prev: f64,
+    /// this run's value
+    pub cur: f64,
+    /// relative limit that was exceeded (0 for exact bench gates)
+    pub limit_pct: f64,
+}
+
+impl fmt::Display for GateViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {}: baseline {:.6} -> current {:.6} (limit {}%)",
+            self.cell, self.metric, self.prev, self.cur, self.limit_pct
+        )
+    }
+}
+
+/// `(higher_is_better, absolute_tolerance)` for a primary metric.
+fn direction(metric: &str) -> (bool, f64) {
+    match metric {
+        "p95_ms" => (false, P95_TOL_MS),
+        "fn_percent" => (false, FN_TOL_PCT),
+        "throughput_at_slo_eps" => (true, THR_TOL_EPS),
+        other => panic!("no gate direction for metric {other:?}"),
+    }
+}
+
+/// Compare this run's cells against the baseline ledger entry.  No
+/// baseline (first run, or the manifest changed) passes vacuously —
+/// the appended entry *becomes* the baseline.
+pub fn evaluate(
+    baseline: Option<&Json>,
+    cells: &[CellMetrics],
+    sc: &ScorecardConfig,
+) -> Vec<GateViolation> {
+    let Some(base) = baseline else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for cell in cells {
+        let key = cell.key();
+        for metric in PRIMARY_METRICS {
+            // a cell absent from the baseline can't regress against it
+            let Some(prev) = entry_cell_mean(base, &key, metric) else {
+                continue;
+            };
+            let cur = cell.ci(metric).mean;
+            let limit = sc.limit_pct_for(metric);
+            let (higher_better, tol) = direction(metric);
+            let violated = if higher_better {
+                cur < prev * (1.0 - limit / 100.0) - tol
+            } else {
+                cur > prev * (1.0 + limit / 100.0) + tol
+            };
+            if violated {
+                out.push(GateViolation {
+                    cell: key.clone(),
+                    metric: metric.to_string(),
+                    prev,
+                    cur,
+                    limit_pct: limit,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Fold one `BENCH_*.json` file into the scoreboard: returns the
+/// `(name, value)` summaries recorded in the ledger entry plus any
+/// bench-gate violations.
+///
+/// Gates mirror the benches' own acceptance semantics: `alloc_gate`
+/// (from `sharded_throughput`) must report 1.0 — the steady-state hot
+/// path performed zero heap allocations; `decide_speedup` (from
+/// `shed_overhead`) must be ≥ 2.0 at the full-scale configuration
+/// (n ≥ 50 000 partial matches) — smoke-scale speedups are recorded
+/// but informational, exactly as the bench itself treats them.
+pub fn fold_bench_file(
+    path: &Path,
+) -> crate::Result<(Vec<(String, f64)>, Vec<GateViolation>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench results {}", path.display()))?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parsing bench results {}", path.display()))?;
+    anyhow::ensure!(
+        j.get("schema").and_then(Json::as_str) == Some(BENCH_SCHEMA),
+        "{}: missing \"schema\": \"{BENCH_SCHEMA}\" marker (re-run the bench \
+         to stamp it; pre-scorecard files are not gateable)",
+        path.display()
+    );
+    let mut summary = Vec::new();
+    let mut violations = Vec::new();
+
+    if let Some(section) = j.get("sharded_throughput") {
+        for e in section.items() {
+            if e.get("name").and_then(Json::as_str) == Some("alloc_gate") {
+                let v = e.get("mean_s").and_then(Json::as_f64).unwrap_or(0.0);
+                summary.push(("alloc_gate".to_string(), v));
+                if v != 1.0 {
+                    violations.push(GateViolation {
+                        cell: "bench".to_string(),
+                        metric: "alloc_gate".to_string(),
+                        prev: 1.0,
+                        cur: v,
+                        limit_pct: 0.0,
+                    });
+                }
+            }
+        }
+    }
+
+    if let Some(section) = j.get("shed_overhead") {
+        // the bench emits one derived speedup per PM-count rung; gate
+        // the largest rung only
+        let mut best: Option<(u64, f64)> = None;
+        for e in section.items() {
+            let Some(name) = e.get("name").and_then(Json::as_str) else {
+                continue;
+            };
+            let n = name
+                .strip_prefix("derived.decide_speedup(n=")
+                .and_then(|r| r.strip_suffix(')'))
+                .and_then(|d| d.parse::<u64>().ok());
+            if let (Some(n), Some(v)) = (n, e.get("mean_s").and_then(Json::as_f64)) {
+                match best {
+                    Some((bn, _)) if bn >= n => {}
+                    _ => best = Some((n, v)),
+                }
+            }
+        }
+        if let Some((n, v)) = best {
+            summary.push(("decide_speedup".to_string(), v));
+            if n >= 50_000 && v < 2.0 {
+                violations.push(GateViolation {
+                    cell: "bench".to_string(),
+                    metric: "decide_speedup".to_string(),
+                    prev: 2.0,
+                    cur: v,
+                    limit_pct: 0.0,
+                });
+            }
+        }
+    }
+
+    Ok((summary, violations))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, ScorecardConfig};
+    use crate::scorecard::ledger::LedgerEntry;
+    use crate::scorecard::manifest::RunManifest;
+    use crate::scorecard::metrics::RepMetrics;
+
+    fn cell(p95: f64, fnp: f64, thr: f64) -> CellMetrics {
+        CellMetrics {
+            dataset: "bus".into(),
+            query: "q4".into(),
+            shedder: "pspice".into(),
+            reps: vec![RepMetrics {
+                seed: 42,
+                p50_ms: 0.01,
+                p95_ms: p95,
+                p99_ms: p95 * 2.0,
+                fn_percent: fnp,
+                false_positives: 0.0,
+                throughput_at_slo_eps: thr,
+                capacity_ns: 2_000.0,
+                wall_events_per_sec: 1e6,
+            }],
+        }
+    }
+
+    fn baseline_entry(cells: Vec<CellMetrics>) -> Json {
+        let entry = LedgerEntry {
+            manifest: RunManifest {
+                smoke: true,
+                commit: "base".into(),
+                seeds: vec![42],
+                sc: ScorecardConfig::default(),
+                cells: vec![ExperimentConfig::default()],
+            },
+            cells,
+            blessed: false,
+            bench: Vec::new(),
+        };
+        Json::parse(&entry.to_line()).unwrap()
+    }
+
+    #[test]
+    fn injected_regression_fails_with_named_metric() {
+        let sc = ScorecardConfig::default(); // 5%
+        let base = baseline_entry(vec![cell(0.40, 10.0, 100_000.0)]);
+
+        // identical run: clean
+        assert!(evaluate(Some(&base), &[cell(0.40, 10.0, 100_000.0)], &sc).is_empty());
+        // no baseline: vacuous pass
+        assert!(evaluate(None, &[cell(9.9, 99.0, 1.0)], &sc).is_empty());
+        // improvement in every direction: clean
+        assert!(evaluate(Some(&base), &[cell(0.30, 8.0, 120_000.0)], &sc).is_empty());
+        // within limit + tolerance: clean (4% worse p95)
+        assert!(evaluate(Some(&base), &[cell(0.416, 10.0, 100_000.0)], &sc).is_empty());
+
+        // >5% p95 regression: named violation
+        let v = evaluate(Some(&base), &[cell(0.50, 10.0, 100_000.0)], &sc);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].cell, "pspice/bus");
+        assert_eq!(v[0].metric, "p95_ms");
+        assert!(v[0].to_string().contains("pspice/bus p95_ms"), "{}", v[0]);
+
+        // >5% throughput drop: named violation (direction-aware)
+        let v = evaluate(Some(&base), &[cell(0.40, 10.0, 90_000.0)], &sc);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].metric, "throughput_at_slo_eps");
+
+        // all three at once
+        let v = evaluate(Some(&base), &[cell(1.0, 50.0, 1_000.0)], &sc);
+        assert_eq!(v.len(), 3);
+
+        // a cell missing from the baseline can't regress
+        let mut stranger = cell(9.0, 90.0, 1.0);
+        stranger.shedder = "e-bl".into();
+        assert!(evaluate(Some(&base), &[stranger], &sc).is_empty());
+    }
+
+    #[test]
+    fn absolute_tolerance_absorbs_near_zero_baselines() {
+        let sc = ScorecardConfig::default();
+        // shedder `none` has fn_percent == 0: an epsilon wobble is an
+        // infinite relative regression but must NOT trip the gate
+        let base = baseline_entry(vec![cell(0.40, 0.0, 100_000.0)]);
+        assert!(evaluate(Some(&base), &[cell(0.40, 0.4, 100_000.0)], &sc).is_empty());
+        // ... but a real jump past the slack still does
+        let v = evaluate(Some(&base), &[cell(0.40, 1.0, 100_000.0)], &sc);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].metric, "fn_percent");
+    }
+
+    #[test]
+    fn per_metric_override_beats_default() {
+        let sc = ScorecardConfig {
+            gate_p95_ms_pct: Some(50.0),
+            ..ScorecardConfig::default()
+        };
+        let base = baseline_entry(vec![cell(0.40, 10.0, 100_000.0)]);
+        // 25% worse p95 passes under the 50% override...
+        assert!(evaluate(Some(&base), &[cell(0.50, 10.0, 100_000.0)], &sc).is_empty());
+        // ...while fn_percent still gates at the 5% default
+        let v = evaluate(Some(&base), &[cell(0.50, 12.0, 100_000.0)], &sc);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].metric, "fn_percent");
+    }
+
+    #[test]
+    fn bench_folding_gates_and_summarizes() {
+        let dir = std::env::temp_dir().join("pspice_gates_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let good = dir.join("good.json");
+        std::fs::write(
+            &good,
+            "{\n  \"schema\": \"pspice-bench-v1\",\n  \"sharded_throughput\": \
+             [{\"name\": \"alloc_gate\", \"mean_s\": 1, \"stddev_s\": 0, \"items\": 0, \"items_per_s\": 0}],\n  \
+             \"shed_overhead\": [{\"name\": \"derived.decide_speedup(n=2000)\", \"mean_s\": 1.1, \"stddev_s\": 0, \"items\": 0, \"items_per_s\": 0}, \
+             {\"name\": \"derived.decide_speedup(n=200000)\", \"mean_s\": 3.4, \"stddev_s\": 0, \"items\": 0, \"items_per_s\": 0}]\n}\n",
+        )
+        .unwrap();
+        let (summary, violations) = fold_bench_file(&good).unwrap();
+        assert!(violations.is_empty(), "{violations:?}");
+        assert!(summary.contains(&("alloc_gate".to_string(), 1.0)));
+        // largest rung wins
+        assert!(summary.contains(&("decide_speedup".to_string(), 3.4)));
+
+        let bad = dir.join("bad.json");
+        std::fs::write(
+            &bad,
+            "{\n  \"schema\": \"pspice-bench-v1\",\n  \"sharded_throughput\": \
+             [{\"name\": \"alloc_gate\", \"mean_s\": 0, \"stddev_s\": 0, \"items\": 7, \"items_per_s\": 0}],\n  \
+             \"shed_overhead\": [{\"name\": \"derived.decide_speedup(n=200000)\", \"mean_s\": 1.2, \"stddev_s\": 0, \"items\": 0, \"items_per_s\": 0}]\n}\n",
+        )
+        .unwrap();
+        let (_, violations) = fold_bench_file(&bad).unwrap();
+        assert_eq!(violations.len(), 2);
+        assert_eq!(violations[0].metric, "alloc_gate");
+        assert_eq!(violations[1].metric, "decide_speedup");
+
+        // smoke-scale speedup below 2x is informational, not a gate
+        let smoke = dir.join("smoke.json");
+        std::fs::write(
+            &smoke,
+            "{\n  \"schema\": \"pspice-bench-v1\",\n  \
+             \"shed_overhead\": [{\"name\": \"derived.decide_speedup(n=2000)\", \"mean_s\": 1.2, \"stddev_s\": 0, \"items\": 0, \"items_per_s\": 0}]\n}\n",
+        )
+        .unwrap();
+        let (summary, violations) = fold_bench_file(&smoke).unwrap();
+        assert!(violations.is_empty());
+        assert!(summary.contains(&("decide_speedup".to_string(), 1.2)));
+
+        // unstamped (pre-scorecard) files are rejected loudly
+        let unstamped = dir.join("unstamped.json");
+        std::fs::write(&unstamped, "{\n  \"shed_overhead\": []\n}\n").unwrap();
+        assert!(fold_bench_file(&unstamped).is_err());
+        assert!(fold_bench_file(&dir.join("missing.json")).is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! A minimal JSON reader/writer (the vendored crate set has no
+//! `serde_json`; see DESIGN.md §3 for the same story as `toml_lite`).
+//!
+//! Reads the whole of what the repo's own tooling emits — ledger lines
+//! in `SCORECARD.jsonl`, `BENCH_*.json` bench results — and nothing
+//! more exotic: objects, arrays, strings with the common escapes,
+//! numbers, booleans, null.  Writing goes through [`esc`] and [`num`]
+//! so emitted lines parse back exactly.
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// any number (f64 is exact for every value this repo emits)
+    Num(f64),
+    /// a string
+    Str(String),
+    /// an array
+    Arr(Vec<Json>),
+    /// an object (sorted map: deterministic iteration for re-emission)
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse `text` as a single JSON value (trailing whitespace ok).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(
+            pos == bytes.len(),
+            "trailing garbage at byte {pos} of json"
+        );
+        Ok(v)
+    }
+
+    /// Object member lookup (None for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Number value (None for non-numbers).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// String value (None for non-strings).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Bool value (None for non-booleans).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array items (empty slice for non-arrays).
+    pub fn items(&self) -> &[Json] {
+        match self {
+            Json::Arr(v) => v.as_slice(),
+            _ => &[],
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> crate::Result<()> {
+    anyhow::ensure!(
+        *pos < b.len() && b[*pos] == c,
+        "expected {:?} at byte {} of json",
+        c as char,
+        *pos
+    );
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of json");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> crate::Result<Json> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "bad literal at byte {} of json",
+        *pos
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    expect(b, pos, b'{')?;
+    let mut m = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        m.insert(key, val);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated object in json");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            c => anyhow::bail!("expected ',' or '}}', got {:?} in json", c as char),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    expect(b, pos, b'[')?;
+    let mut v = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated array in json");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(v));
+            }
+            c => anyhow::bail!("expected ',' or ']', got {:?} in json", c as char),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> crate::Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "unterminated escape in json");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "short \\u escape in json");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let cp = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => anyhow::bail!("unknown escape \\{:?} in json", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy a full UTF-8 scalar, not a byte
+                let s = std::str::from_utf8(&b[*pos..])?;
+                let ch = s.chars().next().unwrap();
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+    anyhow::bail!("unterminated string in json")
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    let v: f64 = s
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad number {s:?} at byte {start} of json: {e}"))?;
+    Ok(Json::Num(v))
+}
+
+/// Escape `s` for embedding in a JSON string literal.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a float so it parses back bit-identically (Rust's shortest
+/// round-trip `Display`); non-finite values become `null`.
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_shapes_we_emit() {
+        let j = Json::parse(
+            r#"{"schema": "pspice-bench-v1", "xs": [1, 2.5, -3e-2], "ok": true, "none": null}"#,
+        )
+        .unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pspice-bench-v1"));
+        let xs: Vec<f64> = j.get("xs").unwrap().items().iter().filter_map(|v| v.as_f64()).collect();
+        assert_eq!(xs, vec![1.0, 2.5, -0.03]);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("none"), Some(&Json::Null));
+        assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\": 1} trailing").is_err());
+        assert!(Json::parse("nope").is_err());
+        assert!(Json::parse("\"open").is_err());
+    }
+
+    #[test]
+    fn strings_round_trip_through_esc() {
+        let s = "quote\" slash\\ tab\t newline\n unicode é";
+        let j = Json::parse(&format!("\"{}\"", esc(s))).unwrap();
+        assert_eq!(j.as_str(), Some(s));
+    }
+
+    #[test]
+    fn floats_round_trip_through_num() {
+        for v in [0.1 + 0.2, 1.0 / 3.0, 1e-12, 123456789.123456, 0.0] {
+            let j = Json::parse(&num(v)).unwrap();
+            assert_eq!(j.as_f64().unwrap().to_bits(), v.to_bits());
+        }
+        assert_eq!(num(f64::NAN), "null");
+    }
+}

@@ -1,0 +1,245 @@
+//! The committed trend ledger: `SCORECARD.jsonl` at the repo root, one
+//! JSON object per line, one line per release (plus `--smoke` lines
+//! from CI).  Appending is the scoreboard's job; this module owns the
+//! line format, parsing, baseline selection, and the append itself.
+//!
+//! Baseline selection is by **manifest hash**: the newest earlier entry
+//! with the same `smoke` flag and the same `manifest_hash` is the
+//! comparison point for the regression gates.  A hash miss (first run,
+//! or the grid/config changed) means there is nothing comparable — the
+//! gates pass vacuously and the new entry becomes the baseline for the
+//! next release.  That keeps "we changed the experiment" from
+//! masquerading as "the code regressed".
+
+use std::io::Write;
+use std::path::Path;
+
+use super::json::{esc, num, Json};
+use super::metrics::{CellMetrics, ALL_METRICS};
+use super::manifest::{RunManifest, SCHEMA};
+
+/// One scoreboard run, serialized as a single `SCORECARD.jsonl` line.
+#[derive(Debug, Clone)]
+pub struct LedgerEntry {
+    /// run identity (hash, seeds, commit, grid)
+    pub manifest: RunManifest,
+    /// per-cell aggregates
+    pub cells: Vec<CellMetrics>,
+    /// true when gate violations were deliberately accepted with
+    /// `--bless` (see EXPERIMENTS.md note #5)
+    pub blessed: bool,
+    /// bench-gate summaries folded in from `BENCH_*.json` files
+    /// (name, value) — recorded for the trend, gated separately
+    pub bench: Vec<(String, f64)>,
+}
+
+impl LedgerEntry {
+    /// Serialize as one JSONL line (no trailing newline).  Contains no
+    /// timestamps — identical runs produce identical lines, which is
+    /// what lets CI diff the committed ledger against a fresh run.
+    pub fn to_line(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str(&format!(
+            "{{\"schema\": \"{}\", \"smoke\": {}, \"commit\": \"{}\", \
+             \"manifest_hash\": \"{}\", \"seeds\": [{}], \"blessed\": {}, \
+             \"max_regression_pct\": {}, \"cells\": [",
+            SCHEMA,
+            self.manifest.smoke,
+            esc(&self.manifest.commit),
+            self.manifest.hash(),
+            self.manifest
+                .seeds
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.blessed,
+            num(self.manifest.sc.max_regression_pct),
+        ));
+        for (i, cell) in self.cells.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"dataset\": \"{}\", \"query\": \"{}\", \"shedder\": \"{}\", \
+                 \"metrics\": {{",
+                esc(&cell.dataset),
+                esc(&cell.query),
+                esc(&cell.shedder),
+            ));
+            for (j, m) in ALL_METRICS.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                let ci = cell.ci(m);
+                s.push_str(&format!(
+                    "\"{}\": {{\"mean\": {}, \"stddev\": {}, \"ci95\": {}, \"n\": {}}}",
+                    m,
+                    num(ci.mean),
+                    num(ci.stddev),
+                    num(ci.ci95),
+                    ci.n
+                ));
+            }
+            s.push_str("}}");
+        }
+        s.push_str("], \"bench\": {");
+        for (i, (name, v)) in self.bench.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\": {}", esc(name), num(*v)));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// The parsed ledger (oldest first, same order as the file).
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    /// parsed entry objects
+    pub entries: Vec<Json>,
+}
+
+impl Ledger {
+    /// Read and parse `path`.  A missing file is an empty ledger; a
+    /// malformed line is an error (the ledger is committed — corruption
+    /// should fail loudly, not silently drop history).
+    pub fn read(path: &Path) -> crate::Result<Ledger> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Ledger::default())
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{} line {}: {e}", path.display(), i + 1))?;
+            anyhow::ensure!(
+                j.get("schema").and_then(Json::as_str) == Some(SCHEMA),
+                "{} line {}: unknown or missing schema tag",
+                path.display(),
+                i + 1
+            );
+            entries.push(j);
+        }
+        Ok(Ledger { entries })
+    }
+
+    /// The newest entry with this `smoke` flag and `manifest_hash` —
+    /// the regression-gate baseline (None = nothing comparable).
+    pub fn baseline(&self, smoke: bool, manifest_hash: &str) -> Option<&Json> {
+        self.entries.iter().rev().find(|e| {
+            e.get("smoke").and_then(Json::as_bool) == Some(smoke)
+                && e.get("manifest_hash").and_then(Json::as_str) == Some(manifest_hash)
+        })
+    }
+
+    /// Append one line to the ledger file (created if missing).
+    pub fn append_line(path: &Path, line: &str) -> crate::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "{line}")?;
+        Ok(())
+    }
+}
+
+/// The mean of `metric` for cell `key` ("shedder/dataset") inside a
+/// parsed ledger entry.
+pub fn entry_cell_mean(entry: &Json, key: &str, metric: &str) -> Option<f64> {
+    for cell in entry.get("cells")?.items() {
+        let shedder = cell.get("shedder").and_then(Json::as_str)?;
+        let dataset = cell.get("dataset").and_then(Json::as_str)?;
+        if format!("{shedder}/{dataset}") == key {
+            return cell.get("metrics")?.get(metric)?.get("mean")?.as_f64();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, ScorecardConfig};
+    use crate::scorecard::metrics::RepMetrics;
+
+    fn entry(p95: f64, smoke: bool) -> LedgerEntry {
+        LedgerEntry {
+            manifest: RunManifest {
+                smoke,
+                commit: "abc123".into(),
+                seeds: vec![42, 43],
+                sc: ScorecardConfig::default(),
+                cells: vec![ExperimentConfig::default()],
+            },
+            cells: vec![CellMetrics {
+                dataset: "bus".into(),
+                query: "q4".into(),
+                shedder: "pspice".into(),
+                reps: vec![RepMetrics {
+                    seed: 42,
+                    p50_ms: 0.01,
+                    p95_ms: p95,
+                    p99_ms: 0.09,
+                    fn_percent: 12.5,
+                    false_positives: 0.0,
+                    throughput_at_slo_eps: 500_000.0,
+                    capacity_ns: 2_000.0,
+                    wall_events_per_sec: 1e6,
+                }],
+            }],
+            blessed: false,
+            bench: vec![("alloc_gate".into(), 1.0)],
+        }
+    }
+
+    #[test]
+    fn line_round_trips_and_baseline_matches_by_hash() {
+        let e = entry(0.04, true);
+        let line = e.to_line();
+        assert_eq!(line, entry(0.04, true).to_line(), "deterministic line");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(
+            entry_cell_mean(&j, "pspice/bus", "p95_ms"),
+            Some(0.04)
+        );
+        assert_eq!(entry_cell_mean(&j, "pspice/bus", "fn_percent"), Some(12.5));
+        assert_eq!(entry_cell_mean(&j, "e-bl/bus", "p95_ms"), None);
+        assert_eq!(
+            j.get("bench").unwrap().get("alloc_gate").and_then(Json::as_f64),
+            Some(1.0)
+        );
+
+        let dir = std::env::temp_dir().join("pspice_ledger_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SCORECARD.jsonl");
+        let _ = std::fs::remove_file(&path);
+        Ledger::append_line(&path, &line).unwrap();
+        Ledger::append_line(&path, &entry(0.05, false).to_line()).unwrap();
+        let ledger = Ledger::read(&path).unwrap();
+        assert_eq!(ledger.entries.len(), 2);
+        let hash = e.manifest.hash();
+        // smoke flag participates in baseline selection
+        let base = ledger.baseline(true, &hash).unwrap();
+        assert_eq!(entry_cell_mean(base, "pspice/bus", "p95_ms"), Some(0.04));
+        // the full entry hashes differently (smoke is hashed), so the
+        // smoke baseline is NOT comparable to it
+        assert!(ledger.baseline(false, &hash).is_none());
+        assert!(ledger.baseline(true, "fnv1a:0000000000000000").is_none());
+        // missing file = empty ledger; garbage = loud error
+        assert!(Ledger::read(&dir.join("missing.jsonl")).unwrap().entries.is_empty());
+        std::fs::write(dir.join("bad.jsonl"), "not json\n").unwrap();
+        assert!(Ledger::read(&dir.join("bad.jsonl")).is_err());
+        std::fs::write(dir.join("wrong.jsonl"), "{\"schema\": \"other\"}\n").unwrap();
+        assert!(Ledger::read(&dir.join("wrong.jsonl")).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Run manifests: the full resolved inputs of a scoreboard run —
+//! seeds, grid configurations, gate settings, dataset identities,
+//! shard/batch/clock settings — plus a content hash over a canonical
+//! serialization, so two runs with the same hash provably consumed the
+//! same inputs (and, under the sim clock, provably produce the same
+//! primary metrics — pinned by `tests/scorecard.rs`).
+//!
+//! The hash deliberately covers *inputs only*: the git commit and any
+//! wall-clock facts are recorded alongside but excluded, so the ledger
+//! can compare entries across releases ("same experiment, different
+//! code") — the whole point of a trend gate.
+
+use crate::config::{ExperimentConfig, ScorecardConfig};
+
+use super::json::{esc, num};
+
+/// Ledger/manifest schema tag (bump on breaking layout changes).
+pub const SCHEMA: &str = "pspice-scorecard-v1";
+
+/// The resolved identity of one scoreboard run.
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    /// smoke (CI-sized) or full grid
+    pub smoke: bool,
+    /// git commit the run was built from (recorded, NOT hashed)
+    pub commit: String,
+    /// dataset seeds, one run per seed per cell
+    pub seeds: Vec<u64>,
+    /// gate/repetition settings
+    pub sc: ScorecardConfig,
+    /// fully resolved per-cell configurations (seed = first of `seeds`)
+    pub cells: Vec<ExperimentConfig>,
+}
+
+/// Canonical one-line serialization of one experiment configuration:
+/// every field that influences the run, in a fixed order, floats in
+/// shortest round-trip form.  The manifest hash and the determinism
+/// tests both key off this — extend it whenever `ExperimentConfig`
+/// grows a field that changes results.
+pub fn cfg_canonical(cfg: &ExperimentConfig) -> String {
+    format!(
+        "query={};window={};pattern_n={};slide={};dataset={};seed={};events={};\
+         warmup={};rate={};lb_ms={};shedder={};model={};weights={:?};\
+         cost_factors={:?};retrain_every={};drift_threshold={};shards={};\
+         batch={};overload={};source={};codec={};ingest_capacity={};\
+         ingest_policy={};duration_ms={}",
+        cfg.query,
+        cfg.window,
+        cfg.pattern_n,
+        cfg.slide,
+        cfg.dataset.name(),
+        cfg.seed,
+        cfg.events,
+        cfg.warmup,
+        cfg.rate,
+        cfg.lb_ms,
+        cfg.shedder.name(),
+        cfg.model.name(),
+        cfg.weights,
+        cfg.cost_factors,
+        cfg.retrain_every,
+        cfg.drift_threshold,
+        cfg.shards,
+        cfg.batch,
+        cfg.overload.name(),
+        cfg.source.name(),
+        cfg.codec.name(),
+        cfg.ingest_capacity,
+        cfg.ingest_policy.name(),
+        cfg.duration_ms,
+    )
+}
+
+/// 64-bit FNV-1a over `bytes` — tiny, dependency-free, and stable
+/// across platforms/releases, which is all a content fingerprint needs
+/// (this is an identity check, not a security boundary).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl RunManifest {
+    /// The canonical input serialization the content hash covers:
+    /// schema, smoke flag, seeds, gate settings, and every cell config
+    /// — but never the commit or anything wall-clock.
+    pub fn canonical(&self) -> String {
+        let mut s = format!(
+            "schema={};smoke={};seeds={:?};reps={};base_seed={};\
+             max_regression_pct={};gate_p95_ms_pct={:?};\
+             gate_fn_percent_pct={:?};gate_throughput_pct={:?}\n",
+            SCHEMA,
+            self.smoke,
+            self.seeds,
+            self.sc.reps,
+            self.sc.base_seed,
+            self.sc.max_regression_pct,
+            self.sc.gate_p95_ms_pct,
+            self.sc.gate_fn_percent_pct,
+            self.sc.gate_throughput_pct,
+        );
+        for cfg in &self.cells {
+            s.push_str(&cfg_canonical(cfg));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// The content hash (`fnv1a:<16 hex digits>`).
+    pub fn hash(&self) -> String {
+        format!("fnv1a:{:016x}", fnv1a(self.canonical().as_bytes()))
+    }
+
+    /// Full manifest as pretty JSON (the artifact written next to the
+    /// figures; the ledger line carries only the hash + seeds +
+    /// commit).
+    pub fn to_json(&self) -> String {
+        let cells: Vec<String> = self
+            .cells
+            .iter()
+            .map(|c| format!("    \"{}\"", esc(&cfg_canonical(c))))
+            .collect();
+        let seeds: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
+        format!(
+            "{{\n  \"schema\": \"{}\",\n  \"smoke\": {},\n  \"commit\": \"{}\",\n  \
+             \"manifest_hash\": \"{}\",\n  \"seeds\": [{}],\n  \
+             \"max_regression_pct\": {},\n  \"cells\": [\n{}\n  ]\n}}\n",
+            SCHEMA,
+            self.smoke,
+            esc(&self.commit),
+            self.hash(),
+            seeds.join(", "),
+            num(self.sc.max_regression_pct),
+            cells.join(",\n"),
+        )
+    }
+}
+
+/// Best-effort git commit identity: `git rev-parse HEAD`, then the
+/// `GITHUB_SHA` CI variable, then `"unknown"`.  Recorded in the ledger
+/// for humans; never part of the content hash.
+pub fn git_commit() -> String {
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+    }
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    "unknown".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> RunManifest {
+        RunManifest {
+            smoke: true,
+            commit: "deadbeef".into(),
+            seeds: vec![42, 43],
+            sc: ScorecardConfig::default(),
+            cells: vec![ExperimentConfig::default()],
+        }
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hash_covers_inputs_not_commit() {
+        let m = manifest();
+        let h = m.hash();
+        assert_eq!(h, manifest().hash(), "identical inputs, identical hash");
+        let mut other_commit = manifest();
+        other_commit.commit = "cafebabe".into();
+        assert_eq!(h, other_commit.hash(), "commit must not perturb the hash");
+        let mut other_seed = manifest();
+        other_seed.cells[0].seed = 7;
+        assert_ne!(h, other_seed.hash(), "a config change must change the hash");
+        let mut other_smoke = manifest();
+        other_smoke.smoke = false;
+        assert_ne!(h, other_smoke.hash());
+        assert!(h.starts_with("fnv1a:"), "{h}");
+        assert_eq!(h.len(), "fnv1a:".len() + 16);
+    }
+
+    #[test]
+    fn manifest_json_parses_back() {
+        let m = manifest();
+        let j = super::super::json::Json::parse(&m.to_json()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(j.get("manifest_hash").unwrap().as_str(), Some(m.hash().as_str()));
+        assert_eq!(j.get("cells").unwrap().items().len(), 1);
+        assert_eq!(j.get("smoke").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn cfg_canonical_tracks_every_live_field() {
+        // a coarse tripwire: if someone adds a result-shaping config
+        // field without extending cfg_canonical, the semicolon count
+        // here goes stale and this test points at the contract
+        let line = cfg_canonical(&ExperimentConfig::default());
+        assert_eq!(line.matches(';').count(), 23, "{line}");
+        assert!(line.contains("codec=lines"));
+        assert!(line.contains("shedder=pspice"));
+    }
+}

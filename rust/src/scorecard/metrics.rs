@@ -1,0 +1,208 @@
+//! The scoreboard's metrics layer: per-repetition primary metrics
+//! distilled from an [`ExperimentResult`], and per-cell aggregates with
+//! 95% confidence intervals over the repeated seeds.
+//!
+//! Two metric classes, by design:
+//!
+//! * **primary** (gated, hashed into determinism tests) — p50/p95/p99
+//!   latency, QoR (weighted FN% against the run's own shedder-none
+//!   ground truth, false positives), and throughput-at-SLO.  All are
+//!   functions of *virtual* time and the seeded trace, so under the sim
+//!   clock two runs of the same manifest produce bit-identical values.
+//! * **informational** (recorded, never gated) — wall-clock events/s,
+//!   which varies with the host and would make every gate flaky.
+//!
+//! Throughput-at-SLO is the offered load actually served within the
+//! latency bound: `offered_eps × (1 − violation_rate)`, with
+//! `offered_eps = rate × 10⁹ / capacity_ns` (the virtual arrival rate
+//! the experiment drives).  It is continuous — a strategy that holds
+//! the bound on 99% of events scores 99% of the offered rate — and
+//! deterministic, unlike a wall-clock throughput measurement.
+
+use crate::config::ExperimentConfig;
+use crate::harness::ExperimentResult;
+
+/// Mean ± spread of one metric over the repetition seeds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci {
+    /// sample mean
+    pub mean: f64,
+    /// sample standard deviation (n−1 denominator; 0 for n = 1)
+    pub stddev: f64,
+    /// 95% confidence half-width: `1.96 · stddev / √n`
+    pub ci95: f64,
+    /// sample count
+    pub n: usize,
+}
+
+impl Ci {
+    /// Aggregate `xs` (empty input → all-zero CI).
+    pub fn from_samples(xs: &[f64]) -> Ci {
+        let n = xs.len();
+        if n == 0 {
+            return Ci { mean: 0.0, stddev: 0.0, ci95: 0.0, n: 0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let stddev = if n > 1 {
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+            var.sqrt()
+        } else {
+            0.0
+        };
+        let ci95 = 1.96 * stddev / (n as f64).sqrt();
+        Ci { mean, stddev, ci95, n }
+    }
+}
+
+/// The distilled metrics of one repetition (one seed, one cell).
+#[derive(Debug, Clone, Copy)]
+pub struct RepMetrics {
+    /// dataset seed of this repetition
+    pub seed: u64,
+    /// latency quantiles over the measurement phase (virtual ms)
+    pub p50_ms: f64,
+    /// 95th percentile latency (virtual ms)
+    pub p95_ms: f64,
+    /// 99th percentile latency (virtual ms)
+    pub p99_ms: f64,
+    /// weighted false-negative % vs this seed's shedder-none truth run
+    pub fn_percent: f64,
+    /// detected-but-untrue complex events
+    pub false_positives: f64,
+    /// offered load served within the latency bound (virtual events/s)
+    pub throughput_at_slo_eps: f64,
+    /// measured capacity (virtual ns/event) — context, not gated
+    pub capacity_ns: f64,
+    /// host-dependent wall throughput — informational ONLY
+    pub wall_events_per_sec: f64,
+}
+
+impl RepMetrics {
+    /// Distill one experiment run.
+    pub fn from_result(cfg: &ExperimentConfig, r: &ExperimentResult) -> RepMetrics {
+        let offered_eps = if r.capacity_ns > 0.0 {
+            cfg.rate * 1e9 / r.capacity_ns
+        } else {
+            0.0
+        };
+        RepMetrics {
+            seed: cfg.seed,
+            p50_ms: r.latency.quantile(0.50) / 1e6,
+            p95_ms: r.latency.quantile(0.95) / 1e6,
+            p99_ms: r.latency.quantile(0.99) / 1e6,
+            fn_percent: r.fn_percent,
+            false_positives: r.false_positives as f64,
+            throughput_at_slo_eps: offered_eps * (1.0 - r.latency.violation_rate()),
+            capacity_ns: r.capacity_ns,
+            wall_events_per_sec: r.wall_events_per_sec,
+        }
+    }
+}
+
+/// The primary (gated) metric names, in canonical ledger order.
+pub const PRIMARY_METRICS: [&str; 3] = ["p95_ms", "fn_percent", "throughput_at_slo_eps"];
+
+/// All ledger metric names, primary first (`wall_events_per_sec` is
+/// informational — present in entries, never gated, never part of the
+/// determinism contract).
+pub const ALL_METRICS: [&str; 7] = [
+    "p95_ms",
+    "fn_percent",
+    "throughput_at_slo_eps",
+    "p50_ms",
+    "p99_ms",
+    "false_positives",
+    "wall_events_per_sec",
+];
+
+/// One grid cell (strategy × dataset) with its repetitions.
+#[derive(Debug, Clone)]
+pub struct CellMetrics {
+    /// dataset selector name ("bus" / "soccer" / "stock")
+    pub dataset: String,
+    /// query the dataset maps to ("q4" / "q3" / "q1")
+    pub query: String,
+    /// strategy name ("none" / "pspice" / ...)
+    pub shedder: String,
+    /// one entry per repetition seed
+    pub reps: Vec<RepMetrics>,
+}
+
+impl CellMetrics {
+    /// `"<shedder>/<dataset>"` — how gates and error messages name the
+    /// cell.
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.shedder, self.dataset)
+    }
+
+    /// Per-repetition samples of a named metric.
+    pub fn samples(&self, metric: &str) -> Vec<f64> {
+        self.reps
+            .iter()
+            .map(|r| match metric {
+                "p50_ms" => r.p50_ms,
+                "p95_ms" => r.p95_ms,
+                "p99_ms" => r.p99_ms,
+                "fn_percent" => r.fn_percent,
+                "false_positives" => r.false_positives,
+                "throughput_at_slo_eps" => r.throughput_at_slo_eps,
+                "capacity_ns" => r.capacity_ns,
+                "wall_events_per_sec" => r.wall_events_per_sec,
+                other => panic!("unknown metric {other:?}"),
+            })
+            .collect()
+    }
+
+    /// Aggregate one named metric over the repetitions.
+    pub fn ci(&self, metric: &str) -> Ci {
+        Ci::from_samples(&self.samples(metric))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_matches_hand_computation() {
+        let ci = Ci::from_samples(&[2.0, 4.0, 6.0]);
+        assert!((ci.mean - 4.0).abs() < 1e-12);
+        assert!((ci.stddev - 2.0).abs() < 1e-12, "n-1 denominator");
+        assert!((ci.ci95 - 1.96 * 2.0 / 3f64.sqrt()).abs() < 1e-12);
+        assert_eq!(ci.n, 3);
+        // degenerate cases
+        let one = Ci::from_samples(&[5.0]);
+        assert_eq!(one.stddev, 0.0);
+        assert_eq!(one.ci95, 0.0);
+        assert_eq!(Ci::from_samples(&[]).n, 0);
+    }
+
+    #[test]
+    fn cell_aggregates_named_metrics() {
+        let rep = |seed, p95, fnp| RepMetrics {
+            seed,
+            p50_ms: 0.1,
+            p95_ms: p95,
+            p99_ms: 0.9,
+            fn_percent: fnp,
+            false_positives: 0.0,
+            throughput_at_slo_eps: 1000.0,
+            capacity_ns: 2000.0,
+            wall_events_per_sec: 1e6,
+        };
+        let cell = CellMetrics {
+            dataset: "bus".into(),
+            query: "q4".into(),
+            shedder: "pspice".into(),
+            reps: vec![rep(1, 0.4, 10.0), rep(2, 0.6, 20.0)],
+        };
+        assert_eq!(cell.key(), "pspice/bus");
+        assert!((cell.ci("p95_ms").mean - 0.5).abs() < 1e-12);
+        assert!((cell.ci("fn_percent").mean - 15.0).abs() < 1e-12);
+        assert_eq!(cell.ci("p95_ms").n, 2);
+        for m in ALL_METRICS {
+            let _ = cell.ci(m); // every ledger metric must resolve
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! The gated evaluation subsystem ("scorecard"): run manifests, QoR and
+//! latency metrics with confidence intervals, a committed trend ledger,
+//! and release-over-release regression gates.
+//!
+//! The problem this solves: the repo's evaluation claims (pSPICE beats
+//! the baselines at equal drop rates; the sharded runtime holds its
+//! speedup; the hot path stays allocation-free) were each checked by a
+//! bespoke script or a human reading bench output.  The scorecard makes
+//! the whole protocol one command with one pass/fail answer:
+//!
+//! ```text
+//! cargo run --release -- scoreboard [--smoke]
+//! ```
+//!
+//! * [`manifest`] — [`manifest::RunManifest`] pins *everything* a run
+//!   consumed (seeds, resolved configs, dataset identities, gate
+//!   settings) under a content hash: same hash ⇒ same inputs ⇒ (under
+//!   the sim clock) bit-identical primary metrics.
+//! * [`metrics`] — p50/p95/p99 latency, throughput-at-SLO, and QoR
+//!   (FN%/FP vs each run's own shedder-`none` ground truth), aggregated
+//!   with 95% confidence intervals over repeated seeds.
+//! * [`ledger`] — `SCORECARD.jsonl` at the repo root: one JSON line per
+//!   release, committed, so the metric trend travels with the history.
+//! * [`gates`] — "no more than 5% worse than the baseline entry on any
+//!   primary metric" (per-metric overrides in `[scorecard]`), plus the
+//!   perf benches' own acceptance checks folded in from `BENCH_*.json`.
+//! * [`board`] — the driver tying it together and regenerating figures.
+//! * [`json`] — the minimal JSON reader both the ledger and the bench
+//!   folding parse with (no `serde_json` in the offline crate set).
+//!
+//! See EXPERIMENTS.md note #5 for metric definitions, the ground-truth
+//! QoR methodology, gate semantics, and how to bless an intentional
+//! regression.
+
+pub mod board;
+pub mod gates;
+pub mod json;
+pub mod ledger;
+pub mod manifest;
+pub mod metrics;
+
+pub use board::{grid, run_cells, run_scoreboard, ScoreboardOpts};
+pub use gates::{GateViolation, BENCH_SCHEMA};
+pub use ledger::{Ledger, LedgerEntry};
+pub use manifest::{cfg_canonical, RunManifest, SCHEMA};
+pub use metrics::{CellMetrics, Ci, RepMetrics, ALL_METRICS, PRIMARY_METRICS};

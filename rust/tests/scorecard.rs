@@ -1,0 +1,151 @@
+//! Scorecard contract tests: the manifest's determinism promise (same
+//! seeds + same config ⇒ identical manifest hash AND bit-identical
+//! primary metrics under the sim clock), and the trend gates'
+//! end-to-end behavior against a real ledger file (vacuous pass with
+//! no baseline, named-metric failure on an injected regression).
+
+use std::path::PathBuf;
+
+use pspice::config::{ExperimentConfig, ScorecardConfig};
+use pspice::datasets::DatasetKind;
+use pspice::scorecard::gates;
+use pspice::scorecard::ledger::{entry_cell_mean, Ledger, LedgerEntry};
+use pspice::scorecard::manifest::git_commit;
+use pspice::scorecard::{run_cells, CellMetrics, RunManifest, PRIMARY_METRICS};
+use pspice::shedding::ShedderKind;
+
+/// One reduced grid cell (bus/q4, pSPICE) at test scale — small enough
+/// to run twice, big enough to shed under overload.
+fn tiny_grid() -> Vec<ExperimentConfig> {
+    vec![ExperimentConfig {
+        query: "q4".into(),
+        window: 2_000,
+        pattern_n: 4,
+        slide: 250,
+        dataset: DatasetKind::Bus,
+        events: 6_000,
+        warmup: 10_000,
+        rate: 1.4,
+        lb_ms: 0.05,
+        shedder: ShedderKind::PSpice,
+        ..ExperimentConfig::default()
+    }]
+}
+
+fn tiny_manifest(cells: Vec<ExperimentConfig>, seeds: Vec<u64>) -> RunManifest {
+    RunManifest {
+        smoke: true,
+        commit: git_commit(),
+        seeds,
+        sc: ScorecardConfig {
+            reps: 2,
+            base_seed: 3,
+            ..ScorecardConfig::default()
+        },
+        cells,
+    }
+}
+
+#[test]
+fn same_manifest_means_identical_hash_and_primary_metrics() {
+    let cfgs = tiny_grid();
+    let seeds = vec![3u64, 4];
+
+    let m1 = tiny_manifest(cfgs.clone(), seeds.clone());
+    let m2 = tiny_manifest(cfgs.clone(), seeds.clone());
+    assert_eq!(m1.hash(), m2.hash(), "same inputs, same manifest hash");
+
+    let run1 = run_cells(&cfgs, &seeds).unwrap();
+    let run2 = run_cells(&cfgs, &seeds).unwrap();
+    assert_eq!(run1.len(), 1);
+    assert_eq!(run1[0].reps.len(), 2, "one rep per seed");
+    assert_eq!(run1[0].key(), "pspice/bus");
+
+    for (c1, c2) in run1.iter().zip(&run2) {
+        for metric in PRIMARY_METRICS {
+            let s1 = c1.samples(metric);
+            let s2 = c2.samples(metric);
+            for (a, b) in s1.iter().zip(&s2) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{metric} must be bit-identical across identical runs \
+                     ({a} vs {b})"
+                );
+            }
+        }
+    }
+    // the virtual-time substrate really measured something
+    let p95 = run1[0].ci("p95_ms");
+    assert!(p95.mean > 0.0, "p95 must be positive, got {}", p95.mean);
+    assert_eq!(p95.n, 2);
+}
+
+#[test]
+fn different_seed_schedule_changes_the_hash() {
+    let cfgs = tiny_grid();
+    let a = tiny_manifest(cfgs.clone(), vec![3, 4]);
+    let b = tiny_manifest(cfgs, vec![3, 5]);
+    assert_ne!(a.hash(), b.hash());
+}
+
+#[test]
+fn ledger_gates_pass_vacuously_then_catch_injected_regression() {
+    let dir = std::env::temp_dir().join("pspice_scorecard_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ledger_path: PathBuf = dir.join("SCORECARD.jsonl");
+    let _ = std::fs::remove_file(&ledger_path);
+
+    let cfgs = tiny_grid();
+    let seeds = vec![3u64, 4];
+    let manifest = tiny_manifest(cfgs.clone(), seeds.clone());
+    let sc = manifest.sc.clone();
+    let cells = run_cells(&cfgs, &seeds).unwrap();
+
+    // empty ledger: no baseline, gates pass vacuously
+    let ledger = Ledger::read(&ledger_path).unwrap();
+    assert!(ledger.entries.is_empty());
+    assert!(ledger.baseline(true, &manifest.hash()).is_none());
+    assert!(gates::evaluate(None, &cells, &sc).is_empty());
+
+    // append the establishing entry and re-read it as the baseline
+    let entry = LedgerEntry {
+        manifest: manifest.clone(),
+        cells: cells.clone(),
+        blessed: false,
+        bench: Vec::new(),
+    };
+    Ledger::append_line(&ledger_path, &entry.to_line()).unwrap();
+    let ledger = Ledger::read(&ledger_path).unwrap();
+    let baseline = ledger.baseline(true, &manifest.hash()).unwrap();
+    let recorded = entry_cell_mean(baseline, "pspice/bus", "p95_ms").unwrap();
+    let measured = cells[0].ci("p95_ms").mean;
+    assert_eq!(
+        recorded.to_bits(),
+        measured.to_bits(),
+        "the ledger line round-trips the measured mean exactly"
+    );
+
+    // the same measurements against their own baseline: clean
+    assert!(gates::evaluate(Some(baseline), &cells, &sc).is_empty());
+
+    // inject a >5% latency regression and demand a named violation
+    let mut worse: Vec<CellMetrics> = cells.clone();
+    for rep in &mut worse[0].reps {
+        rep.p95_ms *= 1.5;
+    }
+    let violations = gates::evaluate(Some(baseline), &worse, &sc);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].cell, "pspice/bus");
+    assert_eq!(violations[0].metric, "p95_ms");
+    let msg = violations[0].to_string();
+    assert!(
+        msg.contains("pspice/bus") && msg.contains("p95_ms"),
+        "the error must name the cell and metric: {msg}"
+    );
+
+    // a different manifest (full-scale flag) finds no baseline here
+    let mut full = manifest.clone();
+    full.smoke = false;
+    assert!(ledger.baseline(false, &full.hash()).is_none());
+}
