@@ -14,9 +14,10 @@
 //! far less quality than random PM shedding.  Later sections embed
 //! the same engine incrementally via `Pipeline::feed`, retrain the
 //! model plane on drift, drive the real-time ingestion plane from
-//! a synthetic burst source through the bounded ingest queue, and pin
+//! a synthetic burst source through the bounded ingest queue, pin
 //! the scorecard's run-manifest identity for the gated evaluation
-//! grid.
+//! grid, and kill shard workers mid-run with a deterministic
+//! `FaultPlan` to show shed-native recovery.
 
 use pspice::datasets::{BusGen, DatasetKind};
 use pspice::events::EventStream;
@@ -25,6 +26,7 @@ use pspice::model::{ModelBuilder, ModelConfig, ModelKind};
 use pspice::operator::Operator;
 use pspice::pipeline::Pipeline;
 use pspice::query::builtin::q4;
+use pspice::runtime::FaultPlan;
 use pspice::shedding::{OverloadDetector, ShedderKind};
 use pspice::sim::RateSource;
 
@@ -164,7 +166,7 @@ fn main() -> pspice::Result<()> {
     let mut pipe = Pipeline::builder()
         .queries(queries)
         .shedder(ShedderKind::PSpice)
-        .detector(detector)
+        .detector(detector.clone())
         .tables(tables)
         .latency_bound_ms(LB_MS)
         .key_slot(DatasetKind::Bus.key_slot())
@@ -204,6 +206,58 @@ fn main() -> pspice::Result<()> {
         manifest.cells.len(),
         manifest.seeds.len(),
         manifest.hash(),
+    );
+
+    // 7. chaos: a deterministic FaultPlan kills both shard workers
+    //    mid-run.  The coordinator detects each death, respawns the
+    //    worker with the current table epoch, and books the partial
+    //    matches that died with it as an involuntary shed round
+    //    (`dropped_pms_failure`) — failure costs result quality, never
+    //    the latency bound.  Dispatch counts are cumulative from
+    //    priming: 40k warm events / batch 256 = ~157 dispatches, so
+    //    170/190 land in the overloaded measurement phase.  Same spec
+    //    on the CLI: `realtime ... --faults kill:0@170,kill:1@190`.
+    let two_queries = {
+        // two Q4 variants (slide 250 vs 500), one shard each
+        let mut v = q4(4, 2_000, 250).queries;
+        v.extend(q4(4, 2_000, 500).queries);
+        v
+    };
+    let source = SyntheticSource::new(
+        measure.to_vec(),
+        Box::new(Burst::from_capacity(
+            capacity_ns,
+            0.5,
+            2.0 * RATE,
+            period_ns,
+            0.25 * period_ns,
+        )),
+        measure[0].seq,
+        warm.last().map_or(0.0, |e| e.ts_ms as f64 * 1e6),
+    )
+    .with_limit(12_000);
+    let mut pipe = Pipeline::builder()
+        .queries(two_queries)
+        .shedder(ShedderKind::PSpice)
+        .detector(detector)
+        .model(ModelKind::Freq)
+        .retrain(10_000, 1e-9)
+        .latency_bound_ms(LB_MS)
+        .shards(2)
+        .batch(256)
+        .seed(7)
+        .key_slot(DatasetKind::Bus.key_slot())
+        .fault_plan(FaultPlan::parse("kill:0@170,kill:1@190")?)
+        .ingest_source(Box::new(source))
+        .build()?;
+    pipe.prime(warm);
+    let run = pipe.run_realtime(f64::INFINITY)?;
+    println!(
+        "\nchaos: {} worker deaths survived, {} PMs lost to crashes \
+         (counted as shed), p95={:.3}ms (LB={LB_MS}ms)",
+        run.recoveries,
+        run.totals.dropped_pms_failure,
+        run.latency.p95_ns() / 1e6,
     );
     Ok(())
 }

@@ -75,12 +75,15 @@ pub fn usage() -> &'static str {
                   [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
                   [--model markov|freq]\n\
                   [--retrain-every N] [--drift-threshold F]\n\
+                  [--faults kill:S@D,delay:S@D:MS,poison:S@D] (chaos, shards>1)\n\
        realtime   run against the ingest plane (same flags as run, plus)\n\
                   [--source trace|tail|socket|burst|flashcrowd|oscillate]\n\
                   [--overload predicted|measured] [--duration-ms F]\n\
                   [--ingest-capacity N] [--ingest-policy drop-oldest|block]\n\
                   [--wall true|false] [--path file.csv] [--addr host:port]\n\
                   [--codec lines|csv] [--out result.json]\n\
+                  (SIGINT finishes the in-flight batch and still emits\n\
+                  the result, with \"interrupted\": true)\n\
        fig5       --query q1|q2|q3|q4 [--scale F]   match-probability sweep\n\
        fig6       --query q1|q3 [--scale F]         event-rate sweep\n\
        fig7       [--scale F]                       latency-bound trace\n\
@@ -153,6 +156,11 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
     }
     cfg.duration_ms = flags.get_parse("duration-ms", cfg.duration_ms)?;
     anyhow::ensure!(cfg.ingest_capacity >= 1, "--ingest-capacity must be at least 1");
+    if let Some(spec) = flags.get("faults") {
+        // validate here so a typo dies before the warm-up phases run
+        crate::runtime::FaultPlan::parse(spec)?;
+        cfg.faults = spec.to_string();
+    }
     Ok(cfg)
 }
 
@@ -210,6 +218,12 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 "  dropped           : {} PMs, {} events",
                 r.dropped_pms, r.dropped_events
             );
+            if r.recoveries > 0 {
+                println!(
+                    "  failures          : {} shard respawns, {} PMs lost (counted as shed)",
+                    r.recoveries, r.dropped_pms_failure
+                );
+            }
             println!(
                 "  latency           : mean={:.3}ms max={:.3}ms violations={:.2}%",
                 r.latency.stats.mean() / 1e6,
@@ -248,14 +262,24 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 }
                 _ => None,
             };
-            let r = crate::harness::run_realtime_experiment(&cfg, external, wall)?;
+            // Ctrl-C finishes the in-flight batch and still emits the
+            // result block + JSON below, exiting 0 (a second Ctrl-C
+            // force-kills); see util::interrupt
+            let stop = crate::util::interrupt::install();
+            let r = crate::harness::run_realtime_experiment_with_stop(
+                &cfg,
+                external,
+                wall,
+                Some(stop),
+            )?;
             println!(
-                "realtime: query={} shedder={} source={} overload={} clock={}",
+                "realtime: query={} shedder={} source={} overload={} clock={}{}",
                 r.query,
                 r.shedder,
                 r.source,
                 r.overload,
-                if r.wall { "wall" } else { "virtual" }
+                if r.wall { "wall" } else { "virtual" },
+                if r.interrupted { " (interrupted)" } else { "" }
             );
             println!("  capacity          : {:.0} ns/event", r.capacity_ns);
             println!(
@@ -281,6 +305,12 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 r.dropped_events,
                 r.shed_overhead * 100.0
             );
+            if r.recoveries > 0 {
+                println!(
+                    "  failures          : {} shard respawns, {} PMs lost (counted as shed)",
+                    r.recoveries, r.dropped_pms_failure
+                );
+            }
             println!(
                 "  wall throughput   : {:.0} events/s over {:.2}s",
                 r.wall_events_per_sec, r.real_elapsed_secs
@@ -525,6 +555,26 @@ mod tests {
         let f = Flags::parse(&s(&["realtime", "--source", "warp"])).unwrap();
         assert!(cfg_from_flags(&f).is_err());
         let f = Flags::parse(&s(&["realtime", "--ingest-capacity", "0"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn faults_flag_parses_and_validates() {
+        let f = Flags::parse(&s(&[
+            "run",
+            "--shards",
+            "2",
+            "--faults",
+            "kill:0@10,delay:1@5:2.5",
+        ]))
+        .unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.faults, "kill:0@10,delay:1@5:2.5");
+        // default carries no plan
+        let f = Flags::parse(&s(&["run", "--query", "q1"])).unwrap();
+        assert_eq!(cfg_from_flags(&f).unwrap().faults, "");
+        // a malformed spec dies at flag parsing, before any phase runs
+        let f = Flags::parse(&s(&["run", "--faults", "explode:0@1"])).unwrap();
         assert!(cfg_from_flags(&f).is_err());
     }
 

@@ -70,6 +70,10 @@ pub struct ExperimentConfig {
     pub ingest_policy: OverflowPolicy,
     /// real-time run duration in clock ms (0 = until the source ends)
     pub duration_ms: f64,
+    /// seeded chaos schedule for the sharded runtime, as a
+    /// comma-separated [`crate::runtime::FaultPlan`] spec
+    /// (`"kill:1@10,delay:0@5:2.5,poison:2@30"`; empty = no injection)
+    pub faults: String,
 }
 
 impl Default for ExperimentConfig {
@@ -99,6 +103,7 @@ impl Default for ExperimentConfig {
             ingest_capacity: 8_192,
             ingest_policy: OverflowPolicy::DropOldest,
             duration_ms: 0.0,
+            faults: String::new(),
         }
     }
 }
@@ -181,6 +186,11 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_num(section, "duration_ms") {
             cfg.duration_ms = v;
+        }
+        if let Some(v) = doc.get_str(section, "faults") {
+            // parse eagerly so a bad spec fails at load, not mid-run
+            crate::runtime::FaultPlan::parse(v)?;
+            cfg.faults = v.to_string();
         }
         Ok(cfg)
     }
@@ -374,6 +384,20 @@ mod tests {
         assert_eq!(cfg.codec, WireCodec::Csv);
         assert_eq!(ExperimentConfig::default().codec, WireCodec::Lines);
         assert!(ExperimentConfig::from_toml("[experiment]\ncodec = \"json\"\n").is_err());
+    }
+
+    #[test]
+    fn faults_key_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\nshards = 2\nfaults = \"kill:1@10,delay:0@5:2.5\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults, "kill:1@10,delay:0@5:2.5");
+        assert_eq!(ExperimentConfig::default().faults, "");
+        // a malformed spec fails at config load, not mid-run
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\nfaults = \"kill:1\"\n").is_err()
+        );
     }
 
     #[test]

@@ -63,6 +63,11 @@ pub struct ExperimentResult {
     pub shed_overhead: f64,
     /// PMs dropped during measurement
     pub dropped_pms: u64,
+    /// PMs lost to crashed shard workers (involuntary shed; 0 on
+    /// healthy runs)
+    pub dropped_pms_failure: u64,
+    /// shard workers respawned after a failure during measurement
+    pub recoveries: u64,
     /// events dropped during measurement (E-BL)
     pub dropped_events: u64,
     /// model build wall-clock seconds (phase 2)
@@ -223,9 +228,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
     drop(op);
 
     // ---- phase 3: measurement through the pipeline -----------------
+    let faults = crate::runtime::FaultPlan::parse(&cfg.faults)?;
     let mut pipe = Pipeline::builder()
         .queries(queries)
         .shedder(cfg.shedder)
+        .fault_plan(faults)
         .detector(detector)
         .tables(strategy_tables)
         .latency_bound_ms(cfg.lb_ms)
@@ -262,6 +269,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
         latency: run.latency,
         shed_overhead: run.shed_overhead,
         dropped_pms: run.totals.dropped_pms,
+        dropped_pms_failure: run.totals.dropped_pms_failure,
+        recoveries: run.recoveries,
         dropped_events: run.totals.dropped_events,
         model_build_secs,
         engine,

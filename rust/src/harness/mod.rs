@@ -14,4 +14,6 @@ pub mod figures;
 pub mod realtime;
 
 pub use experiment::{run_experiment, ExperimentResult};
-pub use realtime::{run_realtime_experiment, RealtimeResult};
+pub use realtime::{
+    run_realtime_experiment, run_realtime_experiment_with_stop, RealtimeResult,
+};

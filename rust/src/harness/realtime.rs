@@ -15,6 +15,8 @@
 //! machine; `tail`/`socket` need an external attachment (a path or an
 //! address) and are passed in prebuilt by the CLI.
 
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ExperimentConfig;
@@ -26,6 +28,7 @@ use crate::metrics::LatencyTracker;
 use crate::model::plane::train_from_operator;
 use crate::operator::Operator;
 use crate::pipeline::Pipeline;
+use crate::runtime::FaultPlan;
 use crate::sim::RateSource;
 
 use super::experiment::{apply_cost_factors, build_queries, build_trace, calibrate};
@@ -54,6 +57,14 @@ pub struct RealtimeResult {
     pub queue_dropped: u64,
     /// PMs dropped by the shedder
     pub dropped_pms: u64,
+    /// PMs lost to crashed shard workers (involuntary shed; see
+    /// [`crate::shedding::ShedReport::dropped_pms_failure`])
+    pub dropped_pms_failure: u64,
+    /// shard workers respawned after a failure during the run
+    pub recoveries: u64,
+    /// a stop signal (SIGINT) ended the run before deadline/source end;
+    /// the in-flight batch completed and every total above is valid
+    pub interrupted: bool,
     /// events dropped by the shedder (E-BL)
     pub dropped_events: u64,
     /// shed time / operator busy time
@@ -112,6 +123,9 @@ impl RealtimeResult {
                 "  \"violation_rate\": {violation_rate},\n",
                 "  \"queue_dropped\": {queue_dropped},\n",
                 "  \"dropped_pms\": {dropped_pms},\n",
+                "  \"dropped_pms_failure\": {dropped_pms_failure},\n",
+                "  \"recoveries\": {recoveries},\n",
+                "  \"interrupted\": {interrupted},\n",
                 "  \"dropped_events\": {dropped_events},\n",
                 "  \"shed_overhead\": {shed_overhead},\n",
                 "  \"peak_pms\": {peak_pms},\n",
@@ -138,6 +152,9 @@ impl RealtimeResult {
             violation_rate = num(l.violation_rate()),
             queue_dropped = self.queue_dropped,
             dropped_pms = self.dropped_pms,
+            dropped_pms_failure = self.dropped_pms_failure,
+            recoveries = self.recoveries,
+            interrupted = self.interrupted,
             dropped_events = self.dropped_events,
             shed_overhead = num(self.shed_overhead),
             peak_pms = self.peak_pms,
@@ -269,6 +286,19 @@ pub fn run_realtime_experiment(
     external: Option<Box<dyn Source>>,
     wall: bool,
 ) -> crate::Result<RealtimeResult> {
+    run_realtime_experiment_with_stop(cfg, external, wall, None)
+}
+
+/// [`run_realtime_experiment`] with a cooperative stop flag: when the
+/// flag goes `true` (a SIGINT handler, a watchdog) the pipeline
+/// finishes its in-flight batch and returns the run's measurements
+/// with [`RealtimeResult::interrupted`] set, instead of losing them.
+pub fn run_realtime_experiment_with_stop(
+    cfg: &ExperimentConfig,
+    external: Option<Box<dyn Source>>,
+    wall: bool,
+    stop: Option<Arc<AtomicBool>>,
+) -> crate::Result<RealtimeResult> {
     let queries = build_queries(cfg)?;
     let trace = build_trace(cfg);
     let warmup = (cfg.warmup as usize).min(trace.len());
@@ -290,6 +320,7 @@ pub fn run_realtime_experiment(
     let mut builder = Pipeline::builder()
         .queries(queries)
         .shedder(cfg.shedder)
+        .fault_plan(FaultPlan::parse(&cfg.faults)?)
         .detector(detector)
         .tables(tables)
         .latency_bound_ms(cfg.lb_ms)
@@ -305,6 +336,9 @@ pub fn run_realtime_experiment(
         .ingest_capacity(cfg.ingest_capacity)
         .ingest_policy(cfg.ingest_policy)
         .ingest_source(source);
+    if let Some(flag) = stop {
+        builder = builder.stop_flag(flag);
+    }
     if wall {
         builder = builder.wall_clock();
     }
@@ -329,6 +363,9 @@ pub fn run_realtime_experiment(
         latency: run.latency,
         queue_dropped: run.queue_dropped,
         dropped_pms: run.totals.dropped_pms,
+        dropped_pms_failure: run.totals.dropped_pms_failure,
+        recoveries: run.recoveries,
+        interrupted: run.interrupted,
         dropped_events: run.totals.dropped_events,
         shed_overhead: run.shed_overhead,
         peak_pms: run.peak_pms,
@@ -442,6 +479,47 @@ mod tests {
         let json = res.to_json();
         assert!(json.contains("\"retrains\""), "json must carry retrains");
         assert!(json.contains("\"table_epoch\""));
+    }
+
+    #[test]
+    fn stop_flag_interrupts_and_keeps_the_measurements() {
+        let mut cfg = tiny_cfg();
+        cfg.source = crate::ingest::SourceKind::Oscillate;
+        // flag already set: the loop must exit before processing
+        // anything, still returning a well-formed (interrupted) result
+        let stop = Arc::new(AtomicBool::new(true));
+        let res =
+            run_realtime_experiment_with_stop(&cfg, None, false, Some(stop)).unwrap();
+        assert!(res.interrupted);
+        assert_eq!(res.events_processed(), 0);
+        let json = res.to_json();
+        assert!(json.contains("\"interrupted\": true"), "{json}");
+        // a run nobody interrupts reports false
+        let res = run_realtime_experiment(&tiny_cfg(), None, false).unwrap();
+        assert!(!res.interrupted);
+        assert!(res.to_json().contains("\"interrupted\": false"));
+    }
+
+    #[test]
+    fn injected_kill_flows_into_the_realtime_result() {
+        let mut cfg = tiny_cfg();
+        cfg.query = "q1".into();
+        cfg.dataset = DatasetKind::Stock;
+        cfg.window = 1_500;
+        cfg.shards = 2;
+        cfg.batch = 64;
+        cfg.source = crate::ingest::SourceKind::Oscillate;
+        cfg.faults = "kill:0@10".into();
+        let res = run_realtime_experiment(&cfg, None, false).unwrap();
+        assert_eq!(res.recoveries, 1, "one kill, one respawn");
+        assert!(res.dropped_pms_failure > 0, "the dead shard held PMs");
+        let json = res.to_json();
+        assert!(json.contains("\"dropped_pms_failure\""), "{json}");
+        assert!(json.contains("\"recoveries\": 1"), "{json}");
+        // same seed, same plan: failure accounting is deterministic
+        let again = run_realtime_experiment(&cfg, None, false).unwrap();
+        assert_eq!(again.dropped_pms_failure, res.dropped_pms_failure);
+        assert_eq!(again.completions, res.completions);
     }
 
     #[test]

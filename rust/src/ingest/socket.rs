@@ -13,8 +13,11 @@
 //!
 //! Events are stamped with the poll time — arrival is when the engine
 //! reads them off the wire.  One peer at a time; when it disconnects
-//! the listener goes back to accepting (and the CSV codec expects a
-//! fresh header from the next peer).
+//! (cleanly or mid-stream with a read error) the listener goes back to
+//! accepting, counts the hand-off in [`SocketSource::reconnects`], and
+//! the CSV codec expects a fresh header from the next peer.  A dangling
+//! partial line from the dead peer is discarded so the next stream
+//! starts on a line boundary.
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -70,6 +73,11 @@ pub struct SocketSource {
     header_seen: bool,
     /// lines that failed to parse (skipped, counted)
     pub bad_lines: u64,
+    /// accepted connections after the first — every time a peer went
+    /// away (hang-up or mid-stream error) and a new one took over
+    pub reconnects: u64,
+    /// at least one peer has ever connected
+    ever_connected: bool,
 }
 
 impl SocketSource {
@@ -93,6 +101,8 @@ impl SocketSource {
             codec,
             header_seen: false,
             bad_lines: 0,
+            reconnects: 0,
+            ever_connected: false,
         })
     }
 
@@ -114,6 +124,19 @@ impl SocketSource {
                 self.conn = Some(stream);
                 // a fresh peer must send its own CSV header
                 self.header_seen = false;
+                if self.ever_connected {
+                    self.reconnects += 1;
+                } else {
+                    self.ever_connected = true;
+                }
+                // a dangling partial line from the previous peer can
+                // never complete; drop it (keeping any still-undrained
+                // complete lines) so the new stream starts on a line
+                // boundary instead of gluing onto stale bytes
+                match self.carry.iter().rposition(|&b| b == b'\n') {
+                    Some(last_nl) => self.carry.truncate(last_nl + 1),
+                    None => self.carry.clear(),
+                }
                 true
             }
             Err(_) => false, // WouldBlock or transient: no peer yet
@@ -203,8 +226,18 @@ impl Source for SocketSource {
                             break;
                         }
                     }
+                    Err(err) if err.kind() == std::io::ErrorKind::WouldBlock => {
+                        break; // drained the wire for now
+                    }
                     Err(err) if err.kind() == std::io::ErrorKind::Interrupted => continue,
-                    Err(_) => break, // WouldBlock: drained the wire for now
+                    Err(_) => {
+                        // peer broke mid-stream (reset, aborted, ...):
+                        // this connection is dead, not merely idle —
+                        // back to accepting instead of treating the
+                        // source as drained forever
+                        self.conn = None;
+                        break;
+                    }
                 }
             }
         }
@@ -280,6 +313,51 @@ mod tests {
         assert_eq!(sink[0].0.etype, 0);
         assert_eq!(sink[0].0.attr(0), 7.0);
         assert_eq!(src.name(), "socket");
+    }
+
+    #[test]
+    fn survives_peer_disconnect_and_takes_a_new_connection() {
+        let mut src = SocketSource::bind("127.0.0.1:0").unwrap();
+        let addr = src.local_addr().unwrap();
+        let mut sink = Vec::new();
+
+        // peer #1: one complete line plus a dangling partial, then gone
+        let mut peer = TcpStream::connect(addr).unwrap();
+        peer.write_all(b"0,100,1,2.5\n7,7").unwrap();
+        peer.flush().unwrap();
+        drop(peer);
+        for _ in 0..500 {
+            src.poll_into(10.0, 8, &mut sink);
+            if !sink.is_empty() && src.conn.is_none() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0].0.seq, 0);
+        assert!(src.conn.is_none(), "hang-up returns to accepting");
+        assert_eq!(src.reconnects, 0, "the first peer is not a reconnect");
+
+        // peer #2: a new stream must parse cleanly — the dangling
+        // `7,7` from peer #1 must not glue onto its first line
+        let mut peer = TcpStream::connect(addr).unwrap();
+        peer.write_all(b"1,200,0,7\n").unwrap();
+        peer.flush().unwrap();
+        drop(peer);
+        sink.clear();
+        for _ in 0..500 {
+            src.poll_into(20.0, 8, &mut sink);
+            if !sink.is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(sink.len(), 1, "second peer's line arrives");
+        assert_eq!(sink[0].0.seq, 1);
+        assert_eq!(sink[0].0.ts_ms, 200);
+        assert_eq!(sink[0].0.attr(0), 7.0);
+        assert_eq!(src.reconnects, 1, "hand-off counted");
+        assert_eq!(src.bad_lines, 0, "stale partial discarded, not parsed");
     }
 
     #[test]

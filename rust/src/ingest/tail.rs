@@ -3,6 +3,12 @@
 //! stamped with the clock time at which the poll observed them — in
 //! the real-time plane an external event "arrives" when the engine
 //! first sees it.
+//!
+//! Log-style rotation is survived: when a poll hits EOF the source
+//! stats the path, and if the file shrank below what was already
+//! consumed (in-place truncation) or its inode changed (`rename(2)`
+//! rotation), it reopens the path from the start of the new file and
+//! counts the event in [`FileTailSource::rotations`].
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, Seek, SeekFrom};
@@ -18,11 +24,32 @@ use super::source::{Source, SourcePoll};
 pub struct FileTailSource {
     path: PathBuf,
     reader: BufReader<File>,
+    /// bytes consumed from the currently-open file — a stat length
+    /// below this means the file was truncated under us
+    consumed: u64,
+    /// inode of the currently-open file (0 on non-unix targets, where
+    /// only the truncation check applies)
+    ino: u64,
     /// partial trailing line carried across polls until its newline
     /// shows up
     carry: String,
     /// lines that failed to parse (skipped, counted)
     pub bad_lines: u64,
+    /// rotations/truncations detected (path reopened from its start)
+    pub rotations: u64,
+}
+
+/// Inode identity of an open file, for rotation detection.
+fn ino_of(file: &File) -> u64 {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::MetadataExt;
+        file.metadata().map(|m| m.ino()).unwrap_or(0)
+    }
+    #[cfg(not(unix))]
+    {
+        0
+    }
 }
 
 impl FileTailSource {
@@ -30,18 +57,23 @@ impl FileTailSource {
     pub fn from_start(path: &Path) -> crate::Result<Self> {
         let file = File::open(path)
             .with_context(|| format!("tailing {}", path.display()))?;
+        let ino = ino_of(&file);
         Ok(FileTailSource {
             path: path.to_path_buf(),
             reader: BufReader::new(file),
+            consumed: 0,
+            ino,
             carry: String::new(),
             bad_lines: 0,
+            rotations: 0,
         })
     }
 
     /// Tail `path` from its current end (only new appends are read).
     pub fn from_end(path: &Path) -> crate::Result<Self> {
         let mut s = Self::from_start(path)?;
-        s.reader
+        s.consumed = s
+            .reader
             .seek(SeekFrom::End(0))
             .with_context(|| format!("seeking {}", s.path.display()))?;
         Ok(s)
@@ -50,6 +82,42 @@ impl FileTailSource {
     /// The tailed path.
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// At EOF: was the path rotated (new inode) or truncated (stat
+    /// length below what we already consumed)?  If so reopen from the
+    /// start of the new file.  Returns whether a reopen happened.
+    fn reopen_if_rotated(&mut self) -> bool {
+        let Ok(meta) = std::fs::metadata(&self.path) else {
+            // mid-rotation: the new file may not exist yet — keep the
+            // old handle and try again on a later poll
+            return false;
+        };
+        let truncated = meta.len() < self.consumed;
+        if !truncated && !self.inode_changed(&meta) {
+            return false;
+        }
+        let Ok(file) = File::open(&self.path) else {
+            return false; // raced with the rotator; retry next poll
+        };
+        self.ino = ino_of(&file);
+        self.reader = BufReader::new(file);
+        self.consumed = 0;
+        // a partial line carried from the old file can never complete
+        self.carry.clear();
+        self.rotations += 1;
+        true
+    }
+
+    #[cfg(unix)]
+    fn inode_changed(&self, meta: &std::fs::Metadata) -> bool {
+        use std::os::unix::fs::MetadataExt;
+        meta.ino() != self.ino
+    }
+
+    #[cfg(not(unix))]
+    fn inode_changed(&self, _meta: &std::fs::Metadata) -> bool {
+        false
     }
 
     /// Parse the carried line if it is complete; returns the event.
@@ -82,10 +150,16 @@ impl Source for FileTailSource {
         let mut pushed = 0usize;
         while pushed < max {
             match self.reader.read_line(&mut self.carry) {
-                // EOF *for now* — the file may keep growing; no
-                // schedule to report
-                Ok(0) => break,
-                Ok(_) => {
+                // EOF *for now* — the file may keep growing, or may
+                // just have been rotated/truncated under us
+                Ok(0) => {
+                    if self.reopen_if_rotated() {
+                        continue; // fresh file: read it from the start
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    self.consumed += n as u64;
                     if let Some(e) = self.take_complete_line() {
                         sink.push((e, now_ns));
                         pushed += 1;
@@ -166,5 +240,59 @@ mod tests {
         assert_eq!(sink[0].0.etype, 0);
         assert_eq!(sink[0].0.attr(0), 9.0);
         assert_eq!(src.name(), "tail");
+    }
+
+    #[test]
+    #[cfg(unix)] // the rename-rotation leg needs inode identity
+    fn detects_rotation_and_truncation_and_reopens() {
+        let path = tmp("rotate.csv");
+        std::fs::write(&path, "0,100,1,3.5\n").unwrap();
+        let mut src = FileTailSource::from_start(&path).unwrap();
+        let mut sink = Vec::new();
+
+        assert_eq!(src.poll_into(10.0, 16, &mut sink), SourcePoll::Ready);
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0].0.seq, 0);
+        assert_eq!(src.rotations, 0);
+
+        // rename(2)-style rotation: a new file (new inode) slides in
+        // under the tailed path; the old handle only ever sees EOF
+        let staged = tmp("rotate.csv.new");
+        std::fs::write(&staged, "10,500,1,1.5\n").unwrap();
+        std::fs::rename(&staged, &path).unwrap();
+        sink.clear();
+        assert_eq!(
+            src.poll_into(20.0, 16, &mut sink),
+            SourcePoll::Ready,
+            "rotation detected at EOF, new file read from its start"
+        );
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0].0.seq, 10);
+        assert_eq!(sink[0].0.ts_ms, 500);
+        assert_eq!(src.rotations, 1);
+
+        // in-place truncation: same inode, but the file shrank below
+        // what was already consumed
+        std::fs::write(&path, "20,600,0,2\n").unwrap();
+        sink.clear();
+        assert_eq!(src.poll_into(30.0, 16, &mut sink), SourcePoll::Ready);
+        assert_eq!(sink.len(), 1);
+        assert_eq!(sink[0].0.seq, 20);
+        assert_eq!(src.rotations, 2);
+
+        // steady state: plain EOF on an unchanged file is not a
+        // rotation, and appends still flow
+        assert_eq!(
+            src.poll_into(40.0, 16, &mut sink),
+            SourcePoll::Pending { next_arrival_ns: None }
+        );
+        assert_eq!(src.rotations, 2);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "21,700,1,8").unwrap();
+        f.flush().unwrap();
+        sink.clear();
+        assert_eq!(src.poll_into(50.0, 16, &mut sink), SourcePoll::Ready);
+        assert_eq!(sink[0].0.seq, 21);
+        assert_eq!(src.bad_lines, 0);
     }
 }

@@ -13,4 +13,4 @@ pub use observe::{DeltaRow, ObservationHub, QueryStats, StatsDelta};
 pub use operator::{
     cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell,
 };
-pub use state::{BatchResult, OperatorState, PerShard, ShedOutcome, MAX_SHARDS};
+pub use state::{BatchResult, FailureDrain, OperatorState, PerShard, ShedOutcome, MAX_SHARDS};

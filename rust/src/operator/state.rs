@@ -127,6 +127,20 @@ impl PartialEq for PerShard {
 
 impl Eq for PerShard {}
 
+/// Failure accounting drained from an operator state: PMs lost to
+/// worker deaths (semantically an involuntary 100%-shed round — they
+/// flow into `ShedReport::dropped_pms_failure`, charging failures to
+/// QoR instead of availability) and the worker respawns performed.
+/// The single-threaded operator has no workers to lose, so its drain
+/// is always the default zero value.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FailureDrain {
+    /// PMs that died with their worker since the last drain
+    pub dropped_pms: u64,
+    /// worker respawns since the last drain
+    pub recoveries: u64,
+}
+
 /// Outcome of one utility-ordered shed pass (paper Alg. 2).
 #[derive(Debug, Default, Clone)]
 pub struct ShedOutcome {
@@ -221,4 +235,12 @@ pub trait OperatorState {
 
     /// Remove every PM and window (between experiment phases).
     fn reset_state(&mut self);
+
+    /// Take the failure accounting accumulated since the last drain —
+    /// see [`FailureDrain`].  Backends without supervised workers (the
+    /// single-threaded operator) keep the default: nothing ever fails
+    /// out from under them, so the drain is always zero.
+    fn drain_failures(&mut self) -> FailureDrain {
+        FailureDrain::default()
+    }
 }

@@ -34,6 +34,7 @@
 //! exactly; `shards > 1` dispatches `batch`-sized micro-batches to the
 //! sharded runtime.  Either way there is exactly one measurement loop.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -44,7 +45,7 @@ use crate::model::plane::{KeyUtilityTable, ModelController, ModelKind, TableSet}
 use crate::model::UtilityTable;
 use crate::operator::{BatchResult, ComplexEvent, Operator, OperatorState};
 use crate::query::Query;
-use crate::runtime::ShardedOperator;
+use crate::runtime::{FaultPlan, ShardedOperator};
 use crate::shedding::{
     MeasuredDetector, OverloadDetector, OverloadGauge, OverloadKind, ShedReport, Shedder,
     ShedderKind,
@@ -102,6 +103,8 @@ pub struct PipelineBuilder {
     ingest: Option<Box<dyn Source>>,
     ingest_capacity: usize,
     ingest_policy: OverflowPolicy,
+    fault_plan: Option<FaultPlan>,
+    stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for PipelineBuilder {
@@ -130,6 +133,8 @@ impl Default for PipelineBuilder {
             ingest: None,
             ingest_capacity: 8_192,
             ingest_policy: OverflowPolicy::DropOldest,
+            fault_plan: None,
+            stop: None,
         }
     }
 }
@@ -312,6 +317,27 @@ impl PipelineBuilder {
         self
     }
 
+    /// Seeded chaos schedule for the sharded runtime (requires
+    /// `shards > 1`): each [`crate::runtime::FaultSpec`] kills, delays
+    /// or poisons one worker at a fixed dispatch count, and the
+    /// coordinator recovers by respawning the shard and accounting its
+    /// lost PMs as an involuntary shed
+    /// ([`ShedReport::dropped_pms_failure`]).  An empty plan is exactly
+    /// the unfaulted pipeline.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Cooperative stop flag for [`Pipeline::run_realtime`]: when the
+    /// flag goes `true` (e.g. from a SIGINT handler) the loop finishes
+    /// the in-flight batch, marks the run interrupted and returns its
+    /// summary instead of spinning to the deadline.
+    pub fn stop_flag(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.stop = Some(flag);
+        self
+    }
+
     /// Validate and assemble the [`Pipeline`].
     pub fn build(self) -> crate::Result<Pipeline> {
         anyhow::ensure!(!self.queries.is_empty(), "pipeline needs queries");
@@ -363,8 +389,25 @@ impl PipelineBuilder {
             );
             self.cost_factors
         };
+        let faults = self.fault_plan.unwrap_or_else(FaultPlan::none);
+        anyhow::ensure!(
+            faults.is_empty() || self.shards > 1,
+            "fault injection targets the sharded runtime; set shards > 1"
+        );
+        if let Some(max) = faults.max_shard() {
+            // the runtime caps the shard count at the query count
+            let running = self.shards.min(n);
+            anyhow::ensure!(
+                max < running,
+                "fault plan targets shard {max}, but the run has {running} shards"
+            );
+        }
         let mut backend = if self.shards > 1 {
-            Backend::Sharded(ShardedOperator::new(self.queries, self.shards))
+            Backend::Sharded(ShardedOperator::with_faults(
+                self.queries,
+                self.shards,
+                faults,
+            ))
         } else {
             Backend::Single(Operator::new(self.queries))
         };
@@ -423,6 +466,9 @@ impl PipelineBuilder {
                 .ingest
                 .map(|s| (s, IngestQueue::new(self.ingest_capacity, self.ingest_policy))),
             queue_dropped: 0,
+            recoveries: 0,
+            stop: self.stop,
+            interrupted: false,
         })
     }
 }
@@ -455,6 +501,13 @@ pub struct PipelineRun {
     /// events lost at the ingest queue (real-time runs with a full
     /// queue under [`OverflowPolicy::DropOldest`]; 0 in batch runs)
     pub queue_dropped: u64,
+    /// shard workers respawned after a failure (sharded runs under a
+    /// [`FaultPlan`], or real crashes; lost PMs are accounted in
+    /// [`ShedReport::dropped_pms_failure`])
+    pub recoveries: u64,
+    /// a stop flag ended [`Pipeline::run_realtime`] before its deadline
+    /// (the in-flight batch still completed; totals are valid)
+    pub interrupted: bool,
 }
 
 /// The assembled engine: one measurement loop for every strategy and
@@ -491,6 +544,12 @@ pub struct Pipeline {
     ingest: Option<(Box<dyn Source>, IngestQueue)>,
     /// events lost at the ingest queue so far
     queue_dropped: u64,
+    /// shard respawns folded in from the backend's failure drain
+    recoveries: u64,
+    /// cooperative early-exit flag for [`Pipeline::run_realtime`]
+    stop: Option<Arc<AtomicBool>>,
+    /// the stop flag fired during a real-time run
+    interrupted: bool,
 }
 
 impl Pipeline {
@@ -530,6 +589,22 @@ impl Pipeline {
     /// Accumulated shed totals so far.
     pub fn totals(&self) -> ShedReport {
         self.totals
+    }
+
+    /// Shard workers respawned after a failure so far.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Fold the backend's failure drain into the run accounting: PMs
+    /// lost to a crashed shard are an involuntary shed
+    /// ([`ShedReport::dropped_pms_failure`]), and every respawn counts
+    /// as a recovery.  No-op on the single-threaded backend and on
+    /// healthy sharded runs.
+    fn drain_failures(&mut self) {
+        let d = self.backend.state().drain_failures();
+        self.totals.dropped_pms_failure += d.dropped_pms;
+        self.recoveries += d.recoveries;
     }
 
     /// Epoch of the model snapshot the backend is currently reading
@@ -634,6 +709,7 @@ impl Pipeline {
             );
             ces.extend_from_slice(&out.completions);
             self.batch_out = out;
+            self.drain_failures();
             if let Some(src) = &self.arrivals {
                 let end = self.clock.now_ns();
                 for j in 0..chunk.len() as u64 {
@@ -679,6 +755,8 @@ impl Pipeline {
             shards: self.shards(),
             wall_events_per_sec: self.wall.events_per_sec(),
             queue_dropped: self.queue_dropped,
+            recoveries: self.recoveries,
+            interrupted: self.interrupted,
         }
     }
 
@@ -708,6 +786,16 @@ impl Pipeline {
         let mut processed = 0u64;
         let mut exhausted = false;
         let result = loop {
+            // cooperative shutdown: the previous iteration finished its
+            // in-flight batch, so stopping here loses nothing
+            if self
+                .stop
+                .as_ref()
+                .is_some_and(|f| f.load(Ordering::Relaxed))
+            {
+                self.interrupted = true;
+                break Ok(());
+            }
             let now = self.clock.now_ns();
             if now >= deadline_ns {
                 break Ok(());
@@ -769,6 +857,7 @@ impl Pipeline {
                 .observe_batch(self.backend.state_ref().pm_count(), n, out.cost_ns_max);
             completions.extend_from_slice(&out.completions);
             self.batch_out = out;
+            self.drain_failures();
             let end = self.clock.now_ns();
             for &arrival_ns in batch_arrivals.iter() {
                 self.latency.record(end, (end - arrival_ns).max(0.0));

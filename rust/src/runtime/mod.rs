@@ -27,4 +27,4 @@ pub use engine::{auto_engine, BatchTables, ModelEngine};
 pub use fallback::FallbackEngine;
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtEngine;
-pub use sharded::{ShardPlan, ShardedOperator};
+pub use sharded::{FaultKind, FaultPlan, FaultSpec, ShardFailure, ShardPlan, ShardedOperator};

@@ -1,0 +1,222 @@
+//! Deterministic fault injection for the sharded runtime.
+//!
+//! A [`FaultPlan`] is a list of [`FaultSpec`]s — *kill shard k at its
+//! n-th batch dispatch*, *delay its response*, *poison a `DropCells`
+//! take* — handed to each worker at spawn time.  Faults trigger on the
+//! worker's **cumulative** batch-dispatch count (continuing across
+//! respawns, see [`FaultPlan::for_shard`]), so a plan is a pure
+//! function of the event stream: the same seed and plan produce the
+//! same failures, the same recovery accounting, and the same surviving
+//! completions on the virtual clock — which is what makes a chaos run
+//! assertable in CI instead of merely stressful.
+//!
+//! The spec string (config key `faults`, CLI `--faults`) is a
+//! comma-separated list:
+//!
+//! ```text
+//! kill:1@10, delay:0@5:2.5, poison:2@30
+//! ```
+//!
+//! * `kill:<shard>@<dispatch>` — the worker panics while handling its
+//!   `<dispatch>`-th batch (exercising the `catch_unwind` supervision
+//!   and the coordinator's respawn path),
+//! * `delay:<shard>@<dispatch>:<ms>` — the worker sleeps `<ms>` wall
+//!   milliseconds before answering (latency fault; virtual-clock
+//!   accounting is untouched, so simulated runs stay bit-exact),
+//! * `poison:<shard>@<dispatch>` — the worker runs a `DropCells` take
+//!   for a query it does not own (the malformed-input path that used
+//!   to panic the worker; now a structured [`super::ShardFailure`]).
+//!
+//! Dispatch counts are 1-based and per shard.
+
+use std::sync::Once;
+
+/// What to inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// panic inside the worker's batch handler
+    Kill,
+    /// sleep this many wall-clock milliseconds before responding
+    Delay(f64),
+    /// apply a `DropCells` take for an unowned query
+    PoisonDropCells,
+}
+
+/// One injected fault: `kind` fires when `shard` handles its
+/// `dispatch`-th batch (1-based, cumulative across respawns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// target shard index
+    pub shard: usize,
+    /// 1-based cumulative batch-dispatch count that triggers the fault
+    pub dispatch: u64,
+    /// what happens
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule for one sharded run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// every injected fault (any order; matched by shard + dispatch)
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// No faults (the plan every ordinary run carries implicitly).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Is there nothing to inject?
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The faults aimed at `shard`, in dispatch order — the list a
+    /// (re)spawned worker carries.
+    pub fn for_shard(&self, shard: usize) -> Vec<FaultSpec> {
+        let mut v: Vec<FaultSpec> = self
+            .faults
+            .iter()
+            .filter(|f| f.shard == shard)
+            .copied()
+            .collect();
+        v.sort_by_key(|f| f.dispatch);
+        v
+    }
+
+    /// Highest shard index any fault targets (validation: the plan
+    /// must fit the actual shard count).
+    pub fn max_shard(&self) -> Option<usize> {
+        self.faults.iter().map(|f| f.shard).max()
+    }
+
+    /// Parse the comma-separated spec-string format documented on the
+    /// [module](self).  Empty input is the empty plan.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let mut faults = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            faults.push(Self::parse_entry(entry)?);
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    fn parse_entry(entry: &str) -> crate::Result<FaultSpec> {
+        let (kind_name, rest) = entry
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault {entry:?}: expected kind:shard@dispatch"))?;
+        let (shard_s, rest) = rest
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault {entry:?}: expected shard@dispatch"))?;
+        let shard: usize = shard_s
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("fault {entry:?}: bad shard: {e}"))?;
+        let (dispatch_s, tail) = match rest.split_once(':') {
+            Some((d, t)) => (d, Some(t)),
+            None => (rest, None),
+        };
+        let dispatch: u64 = dispatch_s
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("fault {entry:?}: bad dispatch: {e}"))?;
+        anyhow::ensure!(dispatch >= 1, "fault {entry:?}: dispatch counts are 1-based");
+        let kind = match (kind_name.trim(), tail) {
+            ("kill", None) => FaultKind::Kill,
+            ("poison", None) => FaultKind::PoisonDropCells,
+            ("delay", Some(ms)) => {
+                let ms: f64 = ms
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault {entry:?}: bad delay ms: {e}"))?;
+                anyhow::ensure!(
+                    ms.is_finite() && ms >= 0.0,
+                    "fault {entry:?}: delay must be a finite non-negative ms value"
+                );
+                FaultKind::Delay(ms)
+            }
+            ("delay", None) => {
+                anyhow::bail!("fault {entry:?}: delay needs a trailing :ms value")
+            }
+            (other, _) => anyhow::bail!("fault {entry:?}: unknown kind {other:?} (kill|delay|poison)"),
+        };
+        Ok(FaultSpec { shard, dispatch, kind })
+    }
+}
+
+/// Keep injected worker panics from spraying the default panic
+/// backtrace over stderr: panics on `pspice-shard-*` threads are
+/// reported in-band as [`super::ShardFailure`]s, so the hook stays
+/// quiet for them and delegates everything else to the previous hook.
+/// Installed once per process, and only when a run actually carries a
+/// fault plan — ordinary runs keep the stock panic output.
+pub(super) fn install_quiet_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let on_shard = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("pspice-shard-"));
+            if !on_shard {
+                previous(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_spec_vocabulary() {
+        let plan = FaultPlan::parse("kill:1@10, delay:0@5:2.5,poison:2@30").unwrap();
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(
+            plan.faults[0],
+            FaultSpec { shard: 1, dispatch: 10, kind: FaultKind::Kill }
+        );
+        assert_eq!(
+            plan.faults[1],
+            FaultSpec { shard: 0, dispatch: 5, kind: FaultKind::Delay(2.5) }
+        );
+        assert_eq!(
+            plan.faults[2],
+            FaultSpec { shard: 2, dispatch: 30, kind: FaultKind::PoisonDropCells }
+        );
+        assert_eq!(plan.max_shard(), Some(2));
+        // per-shard extraction sorts by dispatch
+        let plan = FaultPlan::parse("kill:0@20,kill:0@5").unwrap();
+        let s0 = plan.for_shard(0);
+        assert_eq!(s0.len(), 2);
+        assert_eq!(s0[0].dispatch, 5);
+        assert_eq!(s0[1].dispatch, 20);
+        assert!(plan.for_shard(1).is_empty());
+    }
+
+    #[test]
+    fn empty_and_bad_specs() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ,  ").unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+        assert_eq!(FaultPlan::none().max_shard(), None);
+        for bad in [
+            "kill",             // no shard@dispatch
+            "kill:1",           // no dispatch
+            "kill:x@3",         // bad shard
+            "kill:1@zero",      // bad dispatch
+            "kill:1@0",         // dispatch is 1-based
+            "delay:1@3",        // delay without ms
+            "delay:1@3:soon",   // bad ms
+            "delay:1@3:-1",     // negative ms
+            "explode:1@3",      // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

@@ -75,7 +75,31 @@
 //! bit-identical to a single-threaded run), which is what lets
 //! drift-triggered retraining drive the sharded runtime exactly like
 //! the single-threaded operator.
+//!
+//! ## Supervision and shed-native recovery (PR 8)
+//!
+//! A worker death — panic, protocol fault, or closed channel — never
+//! takes the coordinator down.  Workers wrap request handling in
+//! `catch_unwind` and report a structured [`ShardFailure`] as their
+//! final message; every coordinator↔worker channel operation detects
+//! failure (a `Failed` response or a send/recv `Err`) and marks the
+//! shard dead instead of panicking.  Recovery happens at the next
+//! `&mut` entry point (and at the end of every dispatch, so a shard
+//! killed mid-batch is back before the next one): the dead worker is
+//! respawned with a fresh operator over its queries, the current
+//! [`TableSet`] epoch, observation/routing toggles and the mirrored
+//! [`RateDigest`] are re-installed, and the incarnation's lost PMs are
+//! accounted as an **involuntary 100%-shed round**
+//! ([`ShardedOperator::drain_failures`] →
+//! `ShedReport::dropped_pms_failure`).  That framing is the point:
+//! recovery is bounded-latency — no replay, no redelivery — so a
+//! failure costs quality of results, never availability or the
+//! latency bound, exactly like a deliberate shed.  The deterministic
+//! [`FaultPlan`] (kill/delay/poison schedules keyed on cumulative
+//! per-shard dispatch counts, surviving respawn) makes the whole path
+//! testable: same seed + same plan ⇒ same deaths, same accounting.
 
+mod fault;
 pub(crate) mod merge;
 mod worker;
 
@@ -88,13 +112,15 @@ use crate::events::{BatchPool, DropMask, Event, EventBatch, MaskPool, TypeMask};
 use crate::model::plane::{ModelHarvest, TableSet};
 use crate::model::UtilityTable;
 use crate::operator::{
-    BatchResult, CellTake, ComplexEvent, CostModel, OperatorState, PerShard, PmRef,
-    QueryStats, RateDigest, ShedCell, ShedOutcome, MAX_SHARDS,
+    BatchResult, CellTake, ComplexEvent, CostModel, FailureDrain, OperatorState, PerShard,
+    PmRef, QueryStats, RateDigest, ShedCell, ShedOutcome, MAX_SHARDS,
 };
 use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
 
+pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use merge::sort_completions;
+pub use worker::ShardFailure;
 
 use worker::{Request, Response};
 
@@ -216,6 +242,36 @@ pub struct ShardedOperator {
     pooling: bool,
     /// (shard, batch) sends skipped by type routing (diagnostics)
     skipped: u64,
+    /// the full query set (global order), retained because respawning
+    /// a dead shard needs fresh operators over its queries
+    queries: Vec<Query>,
+    /// the run's deterministic fault schedule (`None` for ordinary
+    /// runs — the injection hooks cost nothing when absent)
+    fault_plan: Option<Arc<FaultPlan>>,
+    /// per-shard "worker is dead": set wherever a channel op fails
+    /// (`Cell` — failures also surface on `&self` paths like
+    /// `pm_refs`); the respawn waits for the next `&mut` entry point
+    dead: Vec<Cell<bool>>,
+    /// the failure report behind each dead mark, consumed at respawn
+    /// (`RefCell`: same `&self` detection paths)
+    failed: RefCell<Vec<Option<ShardFailure>>>,
+    /// cumulative `Batch` requests accepted per shard — the dispatch
+    /// offset a respawned worker resumes its fault schedule from
+    batches_sent: Vec<u64>,
+    /// created-PM totals of dead incarnations, folded in at recovery
+    /// so `match_probability` spans the whole run
+    created_base: Vec<u64>,
+    /// completion totals of dead incarnations (see `created_base`)
+    completed_base: Vec<u64>,
+    /// PMs lost to worker deaths since the last `drain_failures` —
+    /// the involuntary 100%-shed rounds
+    failure_dropped: u64,
+    /// worker respawns since the last `drain_failures`
+    recoveries: u64,
+    /// current observation-capture toggle, re-installed on respawn
+    obs_enabled: bool,
+    /// last installed model snapshot, re-installed on respawn
+    current_tables: Option<Arc<TableSet>>,
 }
 
 impl ShardedOperator {
@@ -224,6 +280,16 @@ impl ShardedOperator {
     /// bookkeeping is inline, so more is a loud error, not a silent
     /// clamp).
     pub fn new(queries: Vec<Query>, n_shards: usize) -> Self {
+        Self::with_faults(queries, n_shards, FaultPlan::none())
+    }
+
+    /// Like [`ShardedOperator::new`], carrying a deterministic
+    /// [`FaultPlan`]: each worker receives its slice of the schedule at
+    /// spawn (and, on respawn, the dispatch offset its predecessors
+    /// already consumed), so the same plan and stream reproduce the
+    /// same deaths and the same recovery accounting.  An empty plan is
+    /// exactly [`ShardedOperator::new`].
+    pub fn with_faults(queries: Vec<Query>, n_shards: usize, faults: FaultPlan) -> Self {
         assert!(!queries.is_empty(), "sharded operator needs queries");
         assert!(
             n_shards <= MAX_SHARDS,
@@ -257,21 +323,27 @@ impl ShardedOperator {
                 ks
             })
             .collect();
+        if let Some(max) = faults.max_shard() {
+            assert!(
+                max < plan.n_shards(),
+                "fault plan targets shard {max}, but the run has {} shards",
+                plan.n_shards()
+            );
+        }
+        let fault_plan = if faults.is_empty() {
+            None
+        } else {
+            // injected kills are reported in-band; keep their panic
+            // output off stderr (ordinary runs never install the hook)
+            fault::install_quiet_panic_hook();
+            Some(Arc::new(faults))
+        };
         let mut txs = Vec::with_capacity(plan.n_shards());
         let mut rxs = Vec::with_capacity(plan.n_shards());
         let mut handles = Vec::with_capacity(plan.n_shards());
         for (s, assignment) in plan.assignments.iter().enumerate() {
-            let (req_tx, req_rx) = mpsc::sync_channel::<Request>(4);
-            // bounded (array-backed) in both directions: channel traffic
-            // itself never allocates per message
-            let (resp_tx, resp_rx) = mpsc::sync_channel::<Response>(4);
-            let local: Vec<Query> =
-                assignment.iter().map(|&g| queries[g].clone()).collect();
-            let l2g = assignment.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("pspice-shard-{s}"))
-                .spawn(move || worker::run(req_rx, resp_tx, local, l2g))
-                .expect("spawn shard worker");
+            let (req_tx, resp_rx, handle) =
+                Self::spawn_worker(&queries, assignment, fault_plan.as_deref(), s, 0);
             txs.push(req_tx);
             rxs.push(resp_rx);
             handles.push(handle);
@@ -305,7 +377,43 @@ impl ShardedOperator {
             routing: true,
             pooling: true,
             skipped: 0,
+            queries,
+            fault_plan,
+            dead: vec![Cell::new(false); n],
+            failed: RefCell::new(vec![None; n]),
+            batches_sent: vec![0; n],
+            created_base: vec![0; n],
+            completed_base: vec![0; n],
+            failure_dropped: 0,
+            recoveries: 0,
+            obs_enabled: true,
+            current_tables: None,
         }
+    }
+
+    /// Spawn one shard worker: fresh bounded channels in both
+    /// directions (array-backed — channel traffic itself never
+    /// allocates per message), a fresh operator over the shard's
+    /// queries, and the shard's slice of the fault schedule resumed at
+    /// `dispatch_offset`.  Thread spawn is an OS-resource call, not a
+    /// channel operation — failing it is a loud error.
+    fn spawn_worker(
+        queries: &[Query],
+        assignment: &[usize],
+        fault_plan: Option<&FaultPlan>,
+        s: usize,
+        dispatch_offset: u64,
+    ) -> (SyncSender<Request>, Receiver<Response>, JoinHandle<()>) {
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(4);
+        let (resp_tx, resp_rx) = mpsc::sync_channel::<Response>(4);
+        let local: Vec<Query> = assignment.iter().map(|&g| queries[g].clone()).collect();
+        let l2g = assignment.to_vec();
+        let faults = fault_plan.map_or_else(Vec::new, |p| p.for_shard(s));
+        let handle = std::thread::Builder::new()
+            .name(format!("pspice-shard-{s}"))
+            .spawn(move || worker::run(s, req_rx, resp_tx, local, l2g, faults, dispatch_offset))
+            .expect("spawn shard worker");
+        (req_tx, resp_rx, handle)
     }
 
     /// Enable or disable type-routed dispatch (on by default): the
@@ -313,11 +421,9 @@ impl ShardedOperator {
     /// path.  Disabling restores the PR 3 every-shard-matches-everything
     /// behavior for equivalence tests and benchmark baselines.
     pub fn set_type_routing(&mut self, enabled: bool) {
+        self.recover_dead();
         self.routing = enabled;
-        for s in 0..self.n_shards() {
-            self.send(s, Request::SetTypeRouting(enabled));
-        }
-        self.ack_all();
+        self.broadcast_ack(|| Request::SetTypeRouting(enabled));
     }
 
     /// Enable or disable the pooled batch/mask buffers (on by default;
@@ -364,33 +470,192 @@ impl ShardedOperator {
     }
 
     /// Global completed-over-created PM ratio (the paper's match
-    /// probability).
+    /// probability).  Spans the whole run: totals of dead worker
+    /// incarnations are folded into per-shard bases at recovery.
     pub fn match_probability(&self) -> f64 {
-        let created: u64 = self.created.iter().sum();
+        let created: u64 = self.created.iter().sum::<u64>()
+            + self.created_base.iter().sum::<u64>();
         if created == 0 {
             0.0
         } else {
-            self.completed.iter().sum::<u64>() as f64 / created as f64
+            let completed: u64 = self.completed.iter().sum::<u64>()
+                + self.completed_base.iter().sum::<u64>();
+            completed as f64 / created as f64
         }
     }
 
-    fn recv(&self, shard: usize) -> Response {
-        self.rxs[shard]
-            .recv()
-            .expect("shard worker died (panicked?)")
+    /// Mark a shard dead, recording why.  Detection happens wherever a
+    /// channel operation fails — `&self` paths included — while the
+    /// respawn waits for the next `&mut` entry point
+    /// ([`Self::recover_dead`]).
+    fn mark_dead(&self, shard: usize, failure: Option<ShardFailure>) {
+        self.dead[shard].set(true);
+        let mut failed = self.failed.borrow_mut();
+        if failed[shard].is_none() {
+            failed[shard] = Some(failure.unwrap_or_else(|| ShardFailure {
+                shard,
+                dispatch: self.batches_sent[shard],
+                reason: "channel closed".to_string(),
+            }));
+        }
     }
 
-    fn send(&self, shard: usize, req: Request) {
-        self.txs[shard].send(req).expect("shard worker gone");
+    fn protocol_violation(&self, shard: usize, expected: &str) -> Option<ShardFailure> {
+        Some(ShardFailure {
+            shard,
+            dispatch: self.batches_sent[shard],
+            reason: format!("protocol violation: expected {expected}"),
+        })
     }
 
-    fn ack_all(&self) {
-        for s in 0..self.n_shards() {
-            match self.recv(s) {
-                Response::Ack => {}
-                _ => unreachable!("protocol violation: expected ack"),
+    /// Receive a shard's response, turning worker death — a
+    /// [`Response::Failed`] report or a closed channel — into a dead
+    /// mark instead of a coordinator panic.  `None` means the shard is
+    /// (now) dead and contributed nothing.
+    fn recv(&self, shard: usize) -> Option<Response> {
+        if self.dead[shard].get() {
+            return None;
+        }
+        match self.rxs[shard].recv() {
+            Ok(Response::Failed(f)) => {
+                self.mark_dead(shard, Some(f));
+                None
+            }
+            Ok(resp) => Some(resp),
+            Err(_) => {
+                self.mark_dead(shard, None);
+                None
             }
         }
+    }
+
+    /// Send a request to a shard.  Returns whether the shard accepted
+    /// it — `false` for a shard already marked dead or whose request
+    /// channel turns out closed (which marks it).  Callers only await
+    /// responses for accepted requests.
+    fn send(&self, shard: usize, req: Request) -> bool {
+        if self.dead[shard].get() {
+            return false;
+        }
+        match self.txs[shard].send(req) {
+            Ok(()) => true,
+            Err(_) => {
+                self.mark_dead(shard, None);
+                false
+            }
+        }
+    }
+
+    /// Broadcast a state-setting request to every live shard and drain
+    /// the acks; shards that die mid-round are marked and skipped.
+    fn broadcast_ack(&self, mk: impl Fn() -> Request) {
+        let mut sent = [false; MAX_SHARDS];
+        for s in 0..self.n_shards() {
+            sent[s] = self.send(s, mk());
+        }
+        for s in 0..self.n_shards() {
+            if !sent[s] {
+                continue;
+            }
+            match self.recv(s) {
+                Some(Response::Ack) | None => {}
+                Some(_) => self.mark_dead(s, self.protocol_violation(s, "ack")),
+            }
+        }
+    }
+
+    /// Respawn every dead shard.  Lost PMs are accounted as an
+    /// involuntary 100%-shed round (drained into
+    /// `ShedReport::dropped_pms_failure` by the pipeline), the
+    /// replacement worker resumes the shard's fault schedule at its
+    /// cumulative dispatch offset, and the coordinator re-installs its
+    /// view of the mutable worker state: routing and observation
+    /// toggles, the current model snapshot, and the mirrored rate
+    /// digest (the PR 6 `SyncRate` machinery).  Recovery is
+    /// bounded-latency by construction — no replay, no redelivery: the
+    /// replacement starts empty, exactly like a shard after a 100%
+    /// shed, so a failure costs QoR, never availability.
+    fn recover_dead(&mut self) {
+        for s in 0..self.n_shards() {
+            if self.dead[s].get() {
+                self.respawn(s);
+            }
+        }
+    }
+
+    fn respawn(&mut self, s: usize) {
+        if let Some(f) = self.failed.borrow_mut()[s].take() {
+            log::warn!(
+                "shard {s} died at dispatch {} ({}); respawning",
+                f.dispatch,
+                f.reason
+            );
+        }
+        self.failure_dropped += self.pms[s] as u64;
+        self.recoveries += 1;
+        self.created_base[s] += self.created[s];
+        self.completed_base[s] += self.completed[s];
+        self.created[s] = 0;
+        self.completed[s] = 0;
+        self.pms[s] = 0;
+        self.wins_open[s] = 0;
+        self.open_windows = self.wins_open.iter().sum();
+        let (tx, rx, handle) = Self::spawn_worker(
+            &self.queries,
+            &self.plan.assignments[s],
+            self.fault_plan.as_deref(),
+            s,
+            self.batches_sent[s],
+        );
+        // install the new endpoints *before* joining: dropping the old
+        // ones unblocks a worker still parked on a channel op, so the
+        // join cannot hang
+        self.txs[s] = tx;
+        self.rxs[s] = rx;
+        let old = std::mem::replace(&mut self.handles[s], handle);
+        let _ = old.join();
+        self.dead[s].set(false);
+        self.stale[s].set(false);
+        // re-install the coordinator's view of worker state; if the
+        // replacement dies during these (repeated kills are batch-keyed
+        // and cannot re-fire, but a genuine panic could), it is marked
+        // dead again and picked up at the next recovery point
+        let routing = self.routing;
+        self.reinstall(s, Request::SetTypeRouting(routing), "routing ack");
+        let obs = self.obs_enabled;
+        self.reinstall(s, Request::SetObsEnabled(obs), "obs ack");
+        if let Some(set) = self.current_tables.clone() {
+            self.reinstall(s, Request::UpdateTables(set), "tables ack");
+        }
+        let rate = self.rate;
+        self.reinstall(s, Request::SyncRate(rate), "rate ack");
+    }
+
+    /// One re-install step of a respawn: fire the request and absorb
+    /// the ack, marking the shard dead again on any failure.
+    fn reinstall(&self, s: usize, req: Request, what: &str) {
+        if !self.send(s, req) {
+            return;
+        }
+        match self.recv(s) {
+            Some(Response::Ack) | None => {}
+            Some(_) => self.mark_dead(s, self.protocol_violation(s, what)),
+        }
+    }
+
+    /// Take the failure accounting accumulated since the last drain:
+    /// PMs lost to worker deaths (the involuntary shed rounds) and
+    /// respawns performed.  Recovers any still-dead shard first, so
+    /// the numbers are complete as of this call.
+    pub fn drain_failures(&mut self) -> FailureDrain {
+        self.recover_dead();
+        let out = FailureDrain {
+            dropped_pms: self.failure_dropped,
+            recoveries: self.recoveries,
+        };
+        self.failure_dropped = 0;
+        self.recoveries = 0;
+        out
     }
 
     /// Is some event of the batch due to open a slide window on shard
@@ -433,12 +698,14 @@ impl ShardedOperator {
     /// message installing the coordinator mirror, which at this point
     /// equals the digest of a worker that processed every batch.
     fn sync_rate(&self, s: usize) {
-        self.send(s, Request::SyncRate(self.rate));
-        match self.recv(s) {
-            Response::Ack => {}
-            _ => unreachable!("protocol violation: expected sync ack"),
+        if !self.send(s, Request::SyncRate(self.rate)) {
+            return; // dead: the respawn re-installs the digest itself
         }
-        self.stale[s].set(false);
+        match self.recv(s) {
+            Some(Response::Ack) => self.stale[s].set(false),
+            None => {}
+            Some(_) => self.mark_dead(s, self.protocol_violation(s, "sync ack")),
+        }
     }
 
     /// The virtual cost a skipped shard would have accounted for a
@@ -468,6 +735,9 @@ impl ShardedOperator {
         if events.is_empty() {
             return;
         }
+        // a shard that died since the last dispatch is back before
+        // this one sees it
+        self.recover_dead();
         let batch = if self.pooling {
             self.pool.lease_with(|b| b.refill(events))
         } else {
@@ -494,9 +764,8 @@ impl ShardedOperator {
             if self.stale[s].get() {
                 self.sync_rate(s);
             }
-            sent[s] = true;
             let sink = std::mem::take(&mut self.comp_bufs[s]);
-            self.send(
+            sent[s] = self.send(
                 s,
                 Request::Batch {
                     events: Arc::clone(&batch),
@@ -504,6 +773,9 @@ impl ShardedOperator {
                     sink,
                 },
             );
+            if sent[s] {
+                self.batches_sent[s] += 1;
+            }
         }
         // fold the batch into the mirror *after* the send decisions: a
         // resync above must deliver the digest as of the previous
@@ -514,6 +786,13 @@ impl ShardedOperator {
         }
         for s in 0..self.n_shards() {
             if !sent[s] {
+                if self.dead[s].get() {
+                    // a dead shard contributes nothing this batch; its
+                    // lost PMs become failure-shed at the recovery
+                    // below — availability and the bound are preserved,
+                    // the batch just misses that shard's completions
+                    continue;
+                }
                 // reproduce the skipped shard's idle outcome: no
                 // completions, checks or window movement — just the
                 // modeled per-event bookkeeping cost
@@ -523,7 +802,7 @@ impl ShardedOperator {
                 continue;
             }
             match self.recv(s) {
-                Response::Batch(mut b) => {
+                Some(Response::Batch(mut b)) => {
                     out.cost_ns_max = out.cost_ns_max.max(b.cost_ns);
                     out.cost_ns_total += b.cost_ns;
                     out.checks += b.checks;
@@ -539,11 +818,20 @@ impl ShardedOperator {
                     b.completions.clear();
                     self.comp_bufs[s] = b.completions;
                 }
-                _ => unreachable!("protocol violation: expected batch outcome"),
+                // died mid-batch (Failed response or closed channel):
+                // no contribution, recovered below
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "batch outcome"))
+                }
             }
         }
         merge::sort_completions(&mut out.completions);
         self.open_windows = self.wins_open.iter().sum();
+        // bounded-latency recovery: a shard that died during this
+        // batch is respawned before the call returns, so the pipeline
+        // drains complete failure accounting right after the dispatch
+        self.recover_dead();
     }
 
     /// Open windows across all shards.
@@ -593,11 +881,10 @@ impl ShardedOperator {
             );
             self.cost.check_factor.clone_from(&set.check_factors);
         }
+        self.recover_dead();
         self.table_epoch = set.epoch;
-        for s in 0..self.n_shards() {
-            self.send(s, Request::UpdateTables(Arc::clone(&set)));
-        }
-        self.ack_all();
+        self.current_tables = Some(Arc::clone(&set));
+        self.broadcast_ack(|| Request::UpdateTables(Arc::clone(&set)));
     }
 
     /// Install bare utility tables (global query order), wrapped in an
@@ -625,15 +912,27 @@ impl ShardedOperator {
 
     /// Ask every worker for the epoch it is actually reading (shard
     /// order) — the broadcast invariant says they all match
-    /// [`ShardedOperator::table_epoch`] between dispatches.
+    /// [`ShardedOperator::table_epoch`] between dispatches.  A dead
+    /// shard reports the coordinator's epoch: that is what its
+    /// replacement adopts at recovery, so the invariant holds.
     pub fn worker_epochs(&self) -> Vec<u64> {
+        let mut sent = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
-            self.send(s, Request::Epoch);
+            sent[s] = self.send(s, Request::Epoch);
         }
         (0..self.n_shards())
-            .map(|s| match self.recv(s) {
-                Response::Epoch(e) => e,
-                _ => unreachable!("protocol violation: expected epoch"),
+            .map(|s| {
+                if !sent[s] {
+                    return self.table_epoch;
+                }
+                match self.recv(s) {
+                    Some(Response::Epoch(e)) => e,
+                    None => self.table_epoch,
+                    Some(_) => {
+                        self.mark_dead(s, self.protocol_violation(s, "epoch"));
+                        self.table_epoch
+                    }
+                }
             })
             .collect()
     }
@@ -672,12 +971,20 @@ impl ShardedOperator {
             mirror.ws.resize(self.n_queries, 0);
         }
         mirror.hub.enabled = true;
+        let mut sent = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
-            self.send(s, Request::Observations);
+            sent[s] = self.send(s, Request::Observations);
         }
         for s in 0..self.n_shards() {
+            if !sent[s] {
+                // dead shard: its queries keep their last-harvested
+                // rows in the mirror (the replacement restarts
+                // observation counts from zero — a training-data cost
+                // of the failure model, not a correctness one)
+                continue;
+            }
             match self.recv(s) {
-                Response::Observations { stats, ws } => {
+                Some(Response::Observations { stats, ws }) => {
                     for ((delta, w), &g) in stats
                         .iter()
                         .zip(ws)
@@ -687,7 +994,10 @@ impl ShardedOperator {
                         mirror.ws[g] = w;
                     }
                 }
-                _ => unreachable!("protocol violation: expected observations"),
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "observations"))
+                }
             }
         }
         into.hub.assign_from(&mirror.hub);
@@ -696,10 +1006,9 @@ impl ShardedOperator {
 
     /// Toggle observation capture on every shard.
     pub fn set_obs_enabled(&mut self, enabled: bool) {
-        for s in 0..self.n_shards() {
-            self.send(s, Request::SetObsEnabled(enabled));
-        }
-        self.ack_all();
+        self.recover_dead();
+        self.obs_enabled = enabled;
+        self.broadcast_ack(|| Request::SetObsEnabled(enabled));
     }
 
     /// Drop the ρ globally lowest-utility PMs (paper Alg. 2, shard
@@ -707,6 +1016,7 @@ impl ShardedOperator {
     /// the globally lowest ρ are dropped, with the deterministic
     /// tie-break documented on [`crate::operator::cell_cmp`].
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
+        self.recover_dead();
         let scanned = self.pm_count();
         let mut per_shard = PerShard::default();
         for &p in &self.pms {
@@ -723,16 +1033,25 @@ impl ShardedOperator {
         // candidate lists ride recycled sinks, like completions: the
         // worker fills the sink in place and the coordinator reclaims
         // it after the merge — no O(cells) allocation per shed round
+        let mut asked = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
             let sink = std::mem::take(&mut self.cand_bufs[s]);
-            self.send(s, Request::Candidates { rho, sink });
+            asked[s] = self.send(s, Request::Candidates { rho, sink });
         }
         let mut lists = std::mem::take(&mut self.cand_lists);
         lists.clear();
         for s in 0..self.n_shards() {
+            if !asked[s] {
+                lists.push(Vec::new());
+                continue;
+            }
             match self.recv(s) {
-                Response::Candidates(c) => lists.push(c),
-                _ => unreachable!("protocol violation: expected candidates"),
+                Some(Response::Candidates(c)) => lists.push(c),
+                None => lists.push(Vec::new()),
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "candidates"));
+                    lists.push(Vec::new());
+                }
             }
         }
         let mut victims = std::mem::take(&mut self.take_bufs);
@@ -751,15 +1070,14 @@ impl ShardedOperator {
                 continue;
             }
             expected[s] = takes.iter().map(|t| t.take as usize).sum();
-            sent[s] = true;
-            self.send(s, Request::DropCells(std::mem::take(takes)));
+            sent[s] = self.send(s, Request::DropCells(std::mem::take(takes)));
         }
         for s in 0..self.n_shards() {
             if !sent[s] {
                 continue;
             }
             match self.recv(s) {
-                Response::CellsDropped { n, takes } => {
+                Some(Response::CellsDropped { n, takes }) => {
                     debug_assert_eq!(n, expected[s], "victim cells must be live");
                     self.pms[s] -= n;
                     out.per_shard[s].1 = n;
@@ -767,7 +1085,13 @@ impl ShardedOperator {
                     debug_assert!(takes.is_empty(), "worker returns a cleared buffer");
                     victims[s] = takes;
                 }
-                _ => unreachable!("protocol violation: expected drop count"),
+                // died mid-drop: everything it held becomes
+                // failure-shed at the next recovery point, which
+                // subsumes this round's takes
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "drop count"))
+                }
             }
         }
         self.take_bufs = victims;
@@ -778,6 +1102,7 @@ impl ShardedOperator {
     /// allocating the budget proportionally to shard populations
     /// (largest-remainder rounding, deterministic).
     pub fn drop_random(&mut self, rho: usize, rng: &mut Rng) -> usize {
+        self.recover_dead();
         let total = self.pm_count();
         if rho == 0 || total == 0 {
             return 0;
@@ -811,9 +1136,10 @@ impl ShardedOperator {
             s = (s + 1) % alloc.len();
         }
         let mut dropped = 0;
+        let mut sent = [false; MAX_SHARDS];
         for (s, &k) in alloc.iter().enumerate() {
             if k > 0 {
-                self.send(
+                sent[s] = self.send(
                     s,
                     Request::DropRandom {
                         rho: k,
@@ -822,16 +1148,19 @@ impl ShardedOperator {
                 );
             }
         }
-        for (s, &k) in alloc.iter().enumerate() {
-            if k == 0 {
+        for s in 0..self.n_shards() {
+            if !sent[s] {
                 continue;
             }
             match self.recv(s) {
-                Response::Dropped(d) => {
+                Some(Response::Dropped(d)) => {
                     self.pms[s] -= d;
                     dropped += d;
                 }
-                _ => unreachable!("protocol violation: expected drop count"),
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "drop count"))
+                }
             }
         }
         dropped
@@ -839,10 +1168,8 @@ impl ShardedOperator {
 
     /// Remove every PM and window on every shard (between phases).
     pub fn reset_state(&mut self) {
-        for s in 0..self.n_shards() {
-            self.send(s, Request::Reset);
-        }
-        self.ack_all();
+        self.recover_dead();
+        self.broadcast_ack(|| Request::Reset);
         self.pms.fill(0);
         self.wins_open.fill(0);
         self.open_windows = 0;
@@ -856,18 +1183,25 @@ impl ShardedOperator {
     pub fn pm_refs(&self, buf: &mut Vec<PmRef>) {
         buf.clear();
         let mut sinks = self.ref_sinks.borrow_mut();
+        let mut sent = [false; MAX_SHARDS];
         for s in 0..self.n_shards() {
             let sink = std::mem::take(&mut sinks[s]);
-            self.send(s, Request::PmRefs { sink });
+            sent[s] = self.send(s, Request::PmRefs { sink });
         }
         for s in 0..self.n_shards() {
+            if !sent[s] {
+                continue; // dead shard: no live PMs to enumerate
+            }
             match self.recv(s) {
-                Response::PmRefs(mut refs) => {
+                Some(Response::PmRefs(mut refs)) => {
                     buf.extend_from_slice(&refs);
                     refs.clear();
                     sinks[s] = refs;
                 }
-                _ => unreachable!("protocol violation: expected pm refs"),
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "pm refs"))
+                }
             }
         }
     }
@@ -933,6 +1267,10 @@ impl OperatorState for ShardedOperator {
 
     fn reset_state(&mut self) {
         ShardedOperator::reset_state(self);
+    }
+
+    fn drain_failures(&mut self) -> FailureDrain {
+        ShardedOperator::drain_failures(self)
     }
 }
 
@@ -1266,5 +1604,131 @@ mod tests {
         assert!(sharded.pm_count() > 0);
         sharded.reset_state();
         assert_eq!(sharded.pm_count(), 0);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_exactly_new() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(22);
+            g.take_events(8_000)
+        };
+        let run = |mut sop: ShardedOperator| {
+            let mut got = Vec::new();
+            let mut cost = Vec::new();
+            for chunk in events.chunks(512) {
+                let out = sop.process_batch(chunk);
+                cost.push(out.cost_ns_max.to_bits());
+                got.extend(out.completions);
+            }
+            let drain = sop.drain_failures();
+            assert_eq!(drain, FailureDrain::default());
+            (got, cost, sop.pm_count())
+        };
+        let plain = run(ShardedOperator::new(queries.clone(), 2));
+        let faulted = run(ShardedOperator::with_faults(
+            queries,
+            2,
+            FaultPlan::none(),
+        ));
+        assert_eq!(plain, faulted);
+    }
+
+    #[test]
+    fn injected_kill_recovers_and_accounts_lost_pms_as_shed() {
+        let queries = q1(1_500).queries; // two queries -> two shards
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(20_000)
+        };
+        let run = || {
+            let plan = FaultPlan::parse("kill:0@10").unwrap();
+            let mut sop = ShardedOperator::with_faults(queries.clone(), 2, plan);
+            let mut completions = 0usize;
+            let mut lost = 0u64;
+            let mut recoveries = 0u64;
+            for chunk in events.chunks(512) {
+                completions += sop.process_batch(chunk).completions.len();
+                let d = sop.drain_failures();
+                lost += d.dropped_pms;
+                recoveries += d.recoveries;
+            }
+            assert_eq!(recoveries, 1, "exactly one kill, exactly one respawn");
+            assert!(lost > 0, "the dead shard held PMs that must count as shed");
+            assert!(completions > 0, "the surviving shard keeps completing");
+            assert!(sop.pm_count() > 0, "the replacement accumulates state again");
+            (completions, lost, sop.pm_count())
+        };
+        // same seed + same plan => identical failure accounting
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn poison_drop_cells_fails_structured_and_recovers() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(12_000)
+        };
+        let plan = FaultPlan::parse("poison:1@5").unwrap();
+        let mut sop = ShardedOperator::with_faults(queries.clone(), 2, plan);
+        for chunk in events.chunks(512) {
+            sop.process_batch(chunk);
+        }
+        let d = sop.drain_failures();
+        assert_eq!(d.recoveries, 1, "the poisoned take must kill shard 1 once");
+        // the run kept going on both shards afterwards
+        assert!(sop.pm_count() > 0);
+        assert_eq!(sop.drain_failures(), FailureDrain::default(), "drain resets");
+    }
+
+    #[test]
+    fn delayed_response_changes_nothing_but_wall_time() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(6_000)
+        };
+        let run = |spec: &str| {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let mut sop = ShardedOperator::with_faults(queries.clone(), 2, plan);
+            let mut got = Vec::new();
+            for chunk in events.chunks(512) {
+                got.extend(sop.process_batch(chunk).completions);
+            }
+            assert_eq!(sop.drain_failures(), FailureDrain::default());
+            (got, sop.pm_count())
+        };
+        assert_eq!(run(""), run("delay:0@2:1.5"));
+    }
+
+    #[test]
+    fn recovery_reinstalls_tables_routing_and_rate() {
+        // kill a shard after a table install and a routing toggle: the
+        // replacement must adopt the same epoch without any caller
+        // intervention, and the harvest must still resync its digest
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(3);
+            g.take_events(10_000)
+        };
+        let plan = FaultPlan::parse("kill:0@8").unwrap();
+        let mut sop = ShardedOperator::with_faults(queries.clone(), 2, plan);
+        let set = Arc::new(TableSet {
+            epoch: 9,
+            tables: Vec::new(),
+            check_factors: vec![2.0, 3.0],
+            ws: Vec::new(),
+            key: None,
+        });
+        sop.install_table_set(set);
+        for chunk in events.chunks(512) {
+            sop.process_batch(chunk);
+        }
+        assert_eq!(sop.drain_failures().recoveries, 1);
+        assert_eq!(sop.worker_epochs(), vec![9, 9], "replacement re-adopts epoch");
+        let mut h = ModelHarvest::default();
+        sop.harvest_observations(&mut h);
+        assert!(h.ws.iter().all(|&w| w > 0), "ws flows from a synced digest");
     }
 }

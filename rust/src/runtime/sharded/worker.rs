@@ -36,10 +36,25 @@
 //! summaries** ([`ShedCell`]) instead of per-PM `PmRef` streams: all
 //! PMs of a cell share one utility, so worker-channel traffic for a
 //! shed round is O(cells), not O(n_pm).
+//!
+//! # Supervision
+//!
+//! The worker never takes the coordinator down with it.  Each request
+//! is handled under [`std::panic::catch_unwind`]; a panic — or a
+//! protocol-level fault like a `DropCells` take for a query this shard
+//! does not own — turns into a structured [`Response::Failed`] carrying
+//! a [`ShardFailure`], after which the thread exits and the coordinator
+//! respawns a replacement (see `ShardedOperator::recover_dead`).  The
+//! deterministic [`FaultSpec`] list a worker carries makes this path
+//! testable: injected kills/delays/poisons trigger on the worker's
+//! cumulative batch-dispatch count, which survives respawn via
+//! `dispatch_offset`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
+use super::fault::{FaultKind, FaultSpec};
 use crate::events::{DropMask, EventBatch};
 use crate::model::plane::TableSet;
 use crate::operator::{
@@ -68,6 +83,21 @@ pub struct BatchOutcome {
     pub pms_created: u64,
     /// complex events ever emitted on this shard
     pub completions_total: u64,
+}
+
+/// Why a shard worker died.  Sent as the worker's final message
+/// ([`Response::Failed`]) instead of letting a panic poison the
+/// channel; the coordinator turns it into dead-shard accounting and a
+/// respawn.
+#[derive(Debug, Clone)]
+pub struct ShardFailure {
+    /// which shard died
+    pub shard: usize,
+    /// the worker's cumulative batch-dispatch count at death (1-based;
+    /// 0 if it never saw a batch)
+    pub dispatch: u64,
+    /// human-readable cause (panic message or protocol violation)
+    pub reason: String,
 }
 
 /// Coordinator → worker.
@@ -171,70 +201,127 @@ pub(super) enum Response {
     },
     /// acknowledgement of a state-setting request
     Ack,
+    /// the worker died (panic or protocol fault); this is its final
+    /// message before the thread exits
+    Failed(ShardFailure),
 }
 
-/// The worker loop.  `local_to_global[i]` is the global index of the
-/// shard's `i`-th query.
-pub(super) fn run(
-    rx: Receiver<Request>,
-    tx: SyncSender<Response>,
-    queries: Vec<Query>,
+/// Mutable worker state, grouped so the request handler can be run
+/// under one `AssertUnwindSafe` borrow.
+struct WorkerState {
+    op: Operator,
+    /// recycled local-index take buffer for `DropCells`
+    takes: Vec<CellTake>,
+    /// reused per-event outcome: the batch loop never allocates once
+    /// the completions buffer has grown to its working size
+    scratch: ProcessOutcome,
     local_to_global: Vec<usize>,
-) {
-    let mut op = Operator::new(queries);
-    let mut takes: Vec<CellTake> = Vec::new();
-    // reused per-event outcome: the batch loop never allocates once the
-    // completions buffer has grown to its working size
-    let mut scratch = ProcessOutcome::default();
-    let global_to_local = |g: usize| -> usize {
-        local_to_global
+    /// injected faults for this shard, sorted by dispatch
+    faults: Vec<FaultSpec>,
+    /// cumulative batches handled (1-based after the first), starting
+    /// from the respawn offset so fault triggers survive recovery
+    dispatches: u64,
+}
+
+impl WorkerState {
+    fn global_to_local(&self, g: usize) -> Result<usize, String> {
+        self.local_to_global
             .iter()
             .position(|&x| x == g)
-            .expect("cell take for a query this shard does not own")
-    };
-    while let Ok(req) = rx.recv() {
-        let resp = match req {
+            .ok_or_else(|| format!("cell take for query {g}, which this shard does not own"))
+    }
+
+    /// Remap global-index takes to local and apply them; the malformed
+    /// input that used to panic the worker is now a structured error.
+    fn apply_cell_takes(&mut self, global_takes: &[CellTake]) -> Result<usize, String> {
+        self.takes.clear();
+        for t in global_takes {
+            let query = self.global_to_local(t.query)?;
+            self.takes.push(CellTake { query, ..*t });
+        }
+        // regroup under local indices (the remap is monotone for
+        // round-robin plans, but don't rely on it)
+        self.takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
+        Ok(self.op.drop_cells(&self.takes))
+    }
+
+    /// Fire any injected faults due at the current dispatch count.
+    fn inject_due_faults(&mut self) -> Result<(), String> {
+        // the list is tiny (a handful of specs per chaos run), so a
+        // linear scan per batch is cheaper than tracking a cursor
+        // across respawns
+        for f in &self.faults {
+            if f.dispatch != self.dispatches {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Kill => {
+                    panic!("injected kill at dispatch {}", self.dispatches)
+                }
+                FaultKind::Delay(ms) => {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+                }
+                FaultKind::PoisonDropCells => {
+                    // exercise the real malformed-input path: a take
+                    // for a query no shard owns
+                    let poisoned = CellTake {
+                        query: usize::MAX,
+                        open_seq: 0,
+                        state: 0,
+                        take: 1,
+                    };
+                    self.apply_cell_takes(&[poisoned])?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, req: Request) -> Result<Response, String> {
+        Ok(match req {
             Request::Batch {
                 events,
                 shed,
                 mut sink,
             } => {
+                self.dispatches += 1;
+                self.inject_due_faults()?;
                 let mut out = BatchOutcome::default();
                 for (i, e) in events.events().iter().enumerate() {
                     let skip = shed.as_ref().is_some_and(|m| m.get(i));
-                    scratch.reset();
+                    self.scratch.reset();
                     if skip {
-                        op.process_bookkeeping_into(e, &mut scratch);
+                        self.op.process_bookkeeping_into(e, &mut self.scratch);
                     } else {
-                        op.process_event_into(e, &mut scratch);
+                        self.op.process_event_into(e, &mut self.scratch);
                     }
-                    out.cost_ns += scratch.cost_ns;
-                    out.checks += scratch.checks;
-                    out.opened += scratch.opened;
-                    out.closed += scratch.closed;
-                    for ce in &scratch.completions {
+                    out.cost_ns += self.scratch.cost_ns;
+                    out.checks += self.scratch.checks;
+                    out.opened += self.scratch.opened;
+                    out.closed += self.scratch.closed;
+                    for ce in &self.scratch.completions {
                         sink.push(ComplexEvent {
-                            query: local_to_global[ce.query],
+                            query: self.local_to_global[ce.query],
                             ..*ce
                         });
                     }
                 }
                 out.completions = sink;
-                out.n_pms = op.pm_count();
-                out.pms_created = op.pms_created;
-                out.completions_total = op.completions_total;
+                out.n_pms = self.op.pm_count();
+                out.pms_created = self.op.pms_created;
+                out.completions_total = self.op.completions_total;
                 Response::Batch(out)
             }
             Request::UpdateTables(set) => {
-                op.apply_table_set(&set, &local_to_global);
+                self.op.apply_table_set(&set, &self.local_to_global);
                 Response::Ack
             }
             Request::SetObsEnabled(enabled) => {
-                op.obs.enabled = enabled;
+                self.op.obs.enabled = enabled;
                 Response::Ack
             }
             Request::SetTypeRouting(enabled) => {
-                op.set_type_routing(enabled);
+                self.op.set_type_routing(enabled);
                 Response::Ack
             }
             Request::Candidates { rho, mut sink } => {
@@ -242,9 +329,9 @@ pub(super) fn run(
                 // remapped to global indices and sorted *in the
                 // recycled sink*; only the prefix covering rho PMs can
                 // ever be picked, so the rest never crosses the channel
-                op.cell_refs(&mut sink);
+                self.op.cell_refs(&mut sink);
                 for c in &mut sink {
-                    c.query = local_to_global[c.query];
+                    c.query = self.local_to_global[c.query];
                 }
                 sink.sort_unstable_by(crate::operator::cell_cmp);
                 let mut covered = 0usize;
@@ -260,32 +347,25 @@ pub(super) fn run(
                 Response::Candidates(sink)
             }
             Request::PmRefs { mut sink } => {
-                op.pm_refs(&mut sink);
+                self.op.pm_refs(&mut sink);
                 for r in &mut sink {
-                    r.query = local_to_global[r.query];
+                    r.query = self.local_to_global[r.query];
                 }
                 Response::PmRefs(sink)
             }
             Request::Observations => Response::Observations {
-                stats: op
+                stats: self
+                    .op
                     .obs
                     .queries
                     .iter_mut()
                     .map(|q| q.take_delta())
                     .collect(),
-                ws: op.expected_ws(),
+                ws: self.op.expected_ws(),
             },
-            Request::Epoch => Response::Epoch(op.table_epoch()),
+            Request::Epoch => Response::Epoch(self.op.table_epoch()),
             Request::DropCells(mut global_takes) => {
-                takes.clear();
-                takes.extend(global_takes.iter().map(|t| CellTake {
-                    query: global_to_local(t.query),
-                    ..*t
-                }));
-                // regroup under local indices (the remap is monotone
-                // for round-robin plans, but don't rely on it)
-                takes.sort_unstable_by_key(|t| (t.query, t.open_seq, t.state));
-                let n = op.drop_cells(&takes);
+                let n = self.apply_cell_takes(&global_takes)?;
                 global_takes.clear();
                 Response::CellsDropped {
                     n,
@@ -293,18 +373,78 @@ pub(super) fn run(
                 }
             }
             Request::SyncRate(digest) => {
-                op.set_rate_digest(digest);
+                self.op.set_rate_digest(digest);
                 Response::Ack
             }
             Request::DropRandom { rho, seed } => {
                 let mut rng = Rng::seeded(seed);
-                Response::Dropped(op.drop_random(rho, &mut rng))
+                Response::Dropped(self.op.drop_random(rho, &mut rng))
             }
             Request::Reset => {
-                op.reset_state();
+                self.op.reset_state();
                 Response::Ack
             }
-            Request::Shutdown => break,
+            Request::Shutdown => unreachable!("Shutdown is handled by the loop"),
+        })
+    }
+}
+
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// The worker loop.  `local_to_global[i]` is the global index of the
+/// shard's `i`-th query.  `faults` is this shard's slice of the run's
+/// [`super::FaultPlan`]; `dispatch_offset` is how many batches
+/// previous incarnations of this shard already handled, so fault
+/// triggers keyed on cumulative dispatch counts survive respawn.
+pub(super) fn run(
+    shard: usize,
+    rx: Receiver<Request>,
+    tx: SyncSender<Response>,
+    queries: Vec<Query>,
+    local_to_global: Vec<usize>,
+    faults: Vec<FaultSpec>,
+    dispatch_offset: u64,
+) {
+    let mut state = WorkerState {
+        op: Operator::new(queries),
+        takes: Vec::new(),
+        scratch: ProcessOutcome::default(),
+        local_to_global,
+        faults,
+        dispatches: dispatch_offset,
+    };
+    while let Ok(req) = rx.recv() {
+        if matches!(req, Request::Shutdown) {
+            break;
+        }
+        let resp = match catch_unwind(AssertUnwindSafe(|| state.handle(req))) {
+            Ok(Ok(resp)) => resp,
+            Ok(Err(reason)) => {
+                // structured protocol fault: report and die — the
+                // operator may hold partially-applied state
+                let _ = tx.send(Response::Failed(ShardFailure {
+                    shard,
+                    dispatch: state.dispatches,
+                    reason,
+                }));
+                return;
+            }
+            Err(payload) => {
+                let _ = tx.send(Response::Failed(ShardFailure {
+                    shard,
+                    dispatch: state.dispatches,
+                    reason: panic_reason(payload.as_ref()),
+                }));
+                return;
+            }
         };
         if tx.send(resp).is_err() {
             break; // coordinator gone

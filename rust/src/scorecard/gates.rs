@@ -219,6 +219,7 @@ mod tests {
                 fn_percent: fnp,
                 false_positives: 0.0,
                 throughput_at_slo_eps: thr,
+                dropped_pms_failure: 0.0,
                 capacity_ns: 2_000.0,
                 wall_events_per_sec: 1e6,
             }],

@@ -192,6 +192,7 @@ mod tests {
                     fn_percent: 12.5,
                     false_positives: 0.0,
                     throughput_at_slo_eps: 500_000.0,
+                    dropped_pms_failure: 0.0,
                     capacity_ns: 2_000.0,
                     wall_events_per_sec: 1e6,
                 }],

@@ -72,6 +72,11 @@ pub struct RepMetrics {
     pub false_positives: f64,
     /// offered load served within the latency bound (virtual events/s)
     pub throughput_at_slo_eps: f64,
+    /// PMs lost to crashed shard workers and accounted as involuntary
+    /// shed (0 on healthy runs; deterministic under a seeded
+    /// [`crate::runtime::FaultPlan`], so chaos entries trend it —
+    /// recorded, never gated, because healthy baselines sit at 0)
+    pub dropped_pms_failure: f64,
     /// measured capacity (virtual ns/event) — context, not gated
     pub capacity_ns: f64,
     /// host-dependent wall throughput — informational ONLY
@@ -94,6 +99,7 @@ impl RepMetrics {
             fn_percent: r.fn_percent,
             false_positives: r.false_positives as f64,
             throughput_at_slo_eps: offered_eps * (1.0 - r.latency.violation_rate()),
+            dropped_pms_failure: r.dropped_pms_failure as f64,
             capacity_ns: r.capacity_ns,
             wall_events_per_sec: r.wall_events_per_sec,
         }
@@ -106,13 +112,14 @@ pub const PRIMARY_METRICS: [&str; 3] = ["p95_ms", "fn_percent", "throughput_at_s
 /// All ledger metric names, primary first (`wall_events_per_sec` is
 /// informational — present in entries, never gated, never part of the
 /// determinism contract).
-pub const ALL_METRICS: [&str; 7] = [
+pub const ALL_METRICS: [&str; 8] = [
     "p95_ms",
     "fn_percent",
     "throughput_at_slo_eps",
     "p50_ms",
     "p99_ms",
     "false_positives",
+    "dropped_pms_failure",
     "wall_events_per_sec",
 ];
 
@@ -147,6 +154,7 @@ impl CellMetrics {
                 "fn_percent" => r.fn_percent,
                 "false_positives" => r.false_positives,
                 "throughput_at_slo_eps" => r.throughput_at_slo_eps,
+                "dropped_pms_failure" => r.dropped_pms_failure,
                 "capacity_ns" => r.capacity_ns,
                 "wall_events_per_sec" => r.wall_events_per_sec,
                 other => panic!("unknown metric {other:?}"),
@@ -188,6 +196,7 @@ mod tests {
             fn_percent: fnp,
             false_positives: 0.0,
             throughput_at_slo_eps: 1000.0,
+            dropped_pms_failure: 0.0,
             capacity_ns: 2000.0,
             wall_events_per_sec: 1e6,
         };

@@ -149,9 +149,9 @@ impl Shedder for EventBaselineShedder {
         }
         self.total_dropped += dropped;
         ShedReport {
-            dropped_pms: 0,
             dropped_events: dropped,
             cost_ns: per_event_ns * events.len() as f64 / k,
+            ..ShedReport::default()
         }
     }
 

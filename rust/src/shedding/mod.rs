@@ -54,6 +54,12 @@ use crate::query::Query;
 pub struct ShedReport {
     /// PMs dropped from the operator state (white-box shedders).
     pub dropped_pms: u64,
+    /// PMs lost to worker failures — the *involuntary* shed rounds: a
+    /// crashed shard's partial matches are accounted here (not in
+    /// `dropped_pms`, which only counts deliberate strategy drops), so
+    /// failure costs QoR on the same axis as shedding instead of
+    /// costing availability.
+    pub dropped_pms_failure: u64,
     /// Incoming events dropped (black-box shedders).
     pub dropped_events: u64,
     /// Virtual cost of the shedding work (ns) — the paper's `l_s`.
@@ -64,6 +70,7 @@ impl ShedReport {
     /// Fold another report into this one (all fields are additive).
     pub fn merge(&mut self, other: &ShedReport) {
         self.dropped_pms += other.dropped_pms;
+        self.dropped_pms_failure += other.dropped_pms_failure;
         self.dropped_events += other.dropped_events;
         self.cost_ns += other.cost_ns;
     }
@@ -309,16 +316,19 @@ mod tests {
         let mut total = ShedReport::default();
         total += ShedReport {
             dropped_pms: 3,
+            dropped_pms_failure: 4,
             dropped_events: 1,
             cost_ns: 10.0,
         };
         let mut other = ShedReport {
             dropped_pms: 2,
+            dropped_pms_failure: 1,
             dropped_events: 0,
             cost_ns: 5.5,
         };
         other.merge(&total);
         assert_eq!(other.dropped_pms, 5);
+        assert_eq!(other.dropped_pms_failure, 5);
         assert_eq!(other.dropped_events, 1);
         assert!((other.cost_ns - 15.5).abs() < 1e-12);
     }

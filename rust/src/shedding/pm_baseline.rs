@@ -66,8 +66,8 @@ impl Shedder for PmBaselineShedder {
         self.detector.observe_shedding(n_pm, cost_ns);
         ShedReport {
             dropped_pms: dropped as u64,
-            dropped_events: 0,
             cost_ns,
+            ..ShedReport::default()
         }
     }
 

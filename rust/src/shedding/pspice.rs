@@ -84,8 +84,8 @@ impl Shedder for PSpiceShedder {
         self.detector.observe_shedding(shed.scanned, cost_ns);
         ShedReport {
             dropped_pms: shed.dropped as u64,
-            dropped_events: 0,
             cost_ns,
+            ..ShedReport::default()
         }
     }
 

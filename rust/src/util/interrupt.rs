@@ -1,0 +1,102 @@
+//! Cooperative SIGINT handling for long-running CLI commands (the
+//! vendored crate set has no `ctrlc`/`signal-hook`; this is a minimal
+//! libc-`signal(2)` shim).
+//!
+//! [`install`] registers a handler and returns the shared stop flag the
+//! handler sets.  Loops that take the flag (e.g.
+//! [`crate::pipeline::PipelineBuilder::stop_flag`]) finish their
+//! in-flight batch and return their measurements instead of dying
+//! mid-run.  A **second** SIGINT restores the default disposition and
+//! re-raises, so a hung run can still be killed the ordinary way.
+//!
+//! On non-unix targets [`install`] returns a flag nothing ever sets.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// The handler only ever *reads* this cell (an atomic store through a
+/// pre-created `Arc` — no allocation, async-signal-safe); `install`
+/// populates it before the handler can fire.
+static FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+
+/// Register the SIGINT handler (idempotent) and return the stop flag
+/// it sets.  The first Ctrl-C flips the flag; the second falls back to
+/// the default disposition (process death).
+pub fn install() -> Arc<AtomicBool> {
+    let flag = FLAG.get_or_init(|| Arc::new(AtomicBool::new(false)));
+    imp::register();
+    Arc::clone(flag)
+}
+
+/// Has the flag been set (by a signal or by hand)?  Mostly for tests;
+/// run loops poll the `Arc` they were given directly.
+pub fn fired() -> bool {
+    FLAG.get().map(|f| f.load(Ordering::SeqCst)).unwrap_or(false)
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::{Ordering, FLAG};
+
+    pub const SIGINT: i32 = 2;
+    const SIG_DFL: usize = 0;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn raise(signum: i32) -> i32;
+    }
+
+    extern "C" fn on_sigint(sig: i32) {
+        if let Some(f) = FLAG.get() {
+            if !f.swap(true, Ordering::SeqCst) {
+                // first Ctrl-C: cooperative shutdown, run loops notice
+                // at their next batch boundary
+                return;
+            }
+        }
+        // second Ctrl-C (or a handler without a flag, which cannot
+        // happen through `install`): die the ordinary way
+        unsafe {
+            signal(sig, SIG_DFL);
+            raise(sig);
+        }
+    }
+
+    pub fn register() {
+        unsafe {
+            signal(SIGINT, on_sigint as usize);
+        }
+    }
+
+    /// Deliver a real SIGINT to this process (test hook).
+    #[cfg(test)]
+    pub fn self_interrupt() {
+        unsafe {
+            raise(SIGINT);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn register() {}
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_real_sigint_sets_the_flag_once() {
+        let flag = install();
+        assert!(!flag.load(Ordering::SeqCst));
+        assert!(!fired());
+        // `raise` delivers synchronously on the calling thread, so the
+        // handler has run by the time it returns
+        imp::self_interrupt();
+        assert!(flag.load(Ordering::SeqCst), "handler must set the flag");
+        assert!(fired());
+        // install() hands every caller the same flag
+        assert!(install().load(Ordering::SeqCst));
+    }
+}

@@ -1,11 +1,13 @@
 //! Small self-contained utilities: deterministic RNG, string interning,
-//! running statistics and a tiny stderr logger.
+//! running statistics, a tiny stderr logger and a SIGINT stop-flag shim
+//! for graceful CLI shutdown.
 //!
 //! The offline crate cache ships no `rand`/`tracing`; these stand-ins are
 //! deliberately minimal and fully deterministic (seeded) so every
 //! experiment in the harness is reproducible bit-for-bit.
 
 pub mod interner;
+pub mod interrupt;
 pub mod logger;
 pub mod rng;
 pub mod stats;

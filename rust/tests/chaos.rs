@@ -1,0 +1,148 @@
+//! Chaos suite: deterministic fault injection against the sharded
+//! real-time plane.
+//!
+//! A seeded `FaultPlan` kills each of the four shard workers once
+//! mid-overload.  The run must complete with every event accounted
+//! for, every dead worker respawned, the lost partial matches booked
+//! as involuntary shedding (`dropped_pms_failure`), and the latency
+//! tail in the same regime as the fault-free run — recovery is
+//! bounded-latency, not replay, so a crash costs result quality and
+//! never the latency bound.
+//!
+//! Everything here runs on the virtual clock, so every assertion is
+//! deterministic per seed: two identical runs must agree bit-for-bit,
+//! which is also what lets CI trend `dropped_pms_failure`.
+
+use pspice::config::ExperimentConfig;
+use pspice::datasets::DatasetKind;
+use pspice::harness::run_realtime_experiment;
+use pspice::ingest::SourceKind;
+use pspice::shedding::{OverloadKind, ShedderKind};
+
+fn chaos_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        // four queries so the run actually has four shards to kill
+        query: "q1+q2".into(),
+        window: 1_500,
+        dataset: DatasetKind::Stock,
+        seed: 11,
+        events: 10_000,
+        warmup: 12_000,
+        rate: 1.4,
+        lb_ms: 0.05,
+        shedder: ShedderKind::PSpice,
+        shards: 4,
+        batch: 64,
+        source: SourceKind::Oscillate,
+        overload: OverloadKind::Measured,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Kill each of the four shards once, staggered.  Dispatch counts are
+/// cumulative from priming: the 12k-event warm-up prefix consumes ~188
+/// dispatches at batch 64, so these indices land in the measured
+/// overload phase, with every shard holding live PMs.
+const KILL_EACH_SHARD_ONCE: &str = "kill:0@200,kill:1@215,kill:2@230,kill:3@245";
+
+#[test]
+fn every_shard_killed_once_run_completes_in_the_same_latency_regime() {
+    let clean = run_realtime_experiment(&chaos_cfg(), None, false).unwrap();
+    let mut cfg = chaos_cfg();
+    cfg.faults = KILL_EACH_SHARD_ONCE.into();
+    let faulty = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    assert_eq!(clean.recoveries, 0);
+    assert_eq!(clean.dropped_pms_failure, 0);
+    assert_eq!(faulty.recoveries, 4, "each shard killed and respawned once");
+    assert!(
+        faulty.dropped_pms_failure > 0,
+        "mid-overload the dead shards held PMs, and losing them is shedding"
+    );
+
+    // recovery never loses *events*: the coordinator keeps dispatching
+    // and the latency accounting covers the whole stream either way
+    assert_eq!(faulty.events_processed(), clean.events_processed());
+    assert_eq!(faulty.events_processed(), 10_000);
+
+    // bounded-latency recovery: the faulty run's tail stays in the
+    // regime the fault-free run demonstrates — inside the bound, or
+    // within a small factor of the fault-free tail when the workload
+    // itself runs above it.  (Respawn cost is real time, not virtual
+    // time, so on this clock any tail growth would mean recovery
+    // perturbed the shedding loop itself.)
+    let lb_ns = faulty.lb_ms * 1e6;
+    assert!(
+        faulty.latency.p95_ns() <= lb_ns.max(clean.latency.p95_ns() * 1.25),
+        "recovery blew up the tail: faulty p95 {} ns vs clean p95 {} ns (LB {} ns)",
+        faulty.latency.p95_ns(),
+        clean.latency.p95_ns(),
+        lb_ns
+    );
+    assert!(
+        faulty.latency.violation_rate() <= clean.latency.violation_rate() + 0.05,
+        "recovery must not add violations: {} vs {}",
+        faulty.latency.violation_rate(),
+        clean.latency.violation_rate()
+    );
+}
+
+#[test]
+fn failure_accounting_is_deterministic_per_seed() {
+    let mut cfg = chaos_cfg();
+    cfg.faults = KILL_EACH_SHARD_ONCE.into();
+    let a = run_realtime_experiment(&cfg, None, false).unwrap();
+    let b = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    assert_eq!(a.recoveries, 4);
+    assert_eq!(a.recoveries, b.recoveries);
+    assert_eq!(a.dropped_pms_failure, b.dropped_pms_failure);
+    assert_eq!(a.dropped_pms, b.dropped_pms);
+    assert_eq!(a.completions, b.completions);
+    assert_eq!(a.latency.stats.count(), b.latency.stats.count());
+    assert_eq!(a.latency.violations, b.latency.violations);
+    assert_eq!(
+        a.latency.stats.mean().to_bits(),
+        b.latency.stats.mean().to_bits(),
+        "mean latency diverged across identical chaos runs"
+    );
+    assert_eq!(
+        a.latency.stats.max().to_bits(),
+        b.latency.stats.max().to_bits(),
+        "max latency diverged across identical chaos runs"
+    );
+}
+
+#[test]
+fn non_fatal_faults_leave_the_virtual_measurement_bit_exact() {
+    // a delayed response stalls the wall clock, not the virtual one:
+    // with the fault machinery armed but nothing killed, every number
+    // must match the plain run exactly (the zero-fault regression pin
+    // one level up from `ShardedOperator`'s own empty-plan test)
+    let clean = run_realtime_experiment(&chaos_cfg(), None, false).unwrap();
+    let mut cfg = chaos_cfg();
+    cfg.faults = "delay:1@190:0.5".into();
+    let delayed = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    assert_eq!(delayed.recoveries, 0, "a delay is not a failure");
+    assert_eq!(delayed.dropped_pms_failure, 0);
+    assert_eq!(delayed.completions, clean.completions);
+    assert_eq!(delayed.dropped_pms, clean.dropped_pms);
+    assert_eq!(delayed.peak_pms, clean.peak_pms);
+    assert_eq!(
+        delayed.latency.stats.mean().to_bits(),
+        clean.latency.stats.mean().to_bits(),
+        "a non-fatal fault changed the virtual timeline"
+    );
+    assert_eq!(delayed.latency.violations, clean.latency.violations);
+}
+
+#[test]
+fn repeated_kills_of_the_same_shard_respawn_every_time() {
+    let mut cfg = chaos_cfg();
+    cfg.faults = "kill:2@200,kill:2@230,kill:2@260".into();
+    let res = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert_eq!(res.recoveries, 3, "every kill of shard 2 must respawn it");
+    assert!(res.dropped_pms_failure > 0);
+    assert_eq!(res.events_processed(), 10_000);
+}
