@@ -16,8 +16,10 @@
 //! model plane on drift, drive the real-time ingestion plane from
 //! a synthetic burst source through the bounded ingest queue, pin
 //! the scorecard's run-manifest identity for the gated evaluation
-//! grid, and kill shard workers mid-run with a deterministic
-//! `FaultPlan` to show shed-native recovery.
+//! grid, kill shard workers mid-run with a deterministic
+//! `FaultPlan` to show shed-native recovery, and finally arm the
+//! checkpoint plane so the same kills recover *losslessly* via
+//! snapshot + journal replay.
 
 use pspice::datasets::{BusGen, DatasetKind};
 use pspice::events::EventStream;
@@ -59,7 +61,10 @@ fn main() -> pspice::Result<()> {
     capacity_ns /= warm.len() as f64;
     assert!(detector.fit(), "latency regression needs more warm-up");
     for n in [100usize, 1_000, 5_000, 20_000] {
-        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+        // the shed-decision scan is priced per *cell*: convert the
+        // seeded PM populations through the mean cell occupancy
+        let cells = (n as f64 / pspice::operator::EST_PMS_PER_CELL) as usize;
+        detector.observe_shedding(n, op.cost.shed_ns(cells, n / 10));
     }
     detector.fit();
     let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
@@ -239,7 +244,7 @@ fn main() -> pspice::Result<()> {
     let mut pipe = Pipeline::builder()
         .queries(two_queries)
         .shedder(ShedderKind::PSpice)
-        .detector(detector)
+        .detector(detector.clone())
         .model(ModelKind::Freq)
         .retrain(10_000, 1e-9)
         .latency_bound_ms(LB_MS)
@@ -256,6 +261,65 @@ fn main() -> pspice::Result<()> {
         "\nchaos: {} worker deaths survived, {} PMs lost to crashes \
          (counted as shed), p95={:.3}ms (LB={LB_MS}ms)",
         run.recoveries,
+        run.totals.dropped_pms_failure,
+        run.latency.p95_ns() / 1e6,
+    );
+
+    // 8. checkpointed chaos: the same kills, lossless.  With
+    //    `.checkpoint_every(8)` each shard snapshots its full state
+    //    every 8 dispatches and the coordinator journals dispatches
+    //    (up to `.journal_cap(..)` buffered events) since the last
+    //    ack; a respawn restores the snapshot and replays the journal
+    //    tail, so the PMs that died come back as `recovered_pms`
+    //    instead of being booked to `dropped_pms_failure`.  Replay
+    //    cost is charged to the clock — lossless recovery pays in
+    //    catch-up latency what lossy recovery pays in quality.  Same
+    //    knobs on the CLI: `realtime ... --checkpoint-every 8
+    //    --journal-cap 20000` (and `--deadline-ms F` arms hang
+    //    detection on the dispatch path; wall-clock runs derive a
+    //    default deadline from the latency bound automatically).
+    let two_queries = {
+        let mut v = q4(4, 2_000, 250).queries;
+        v.extend(q4(4, 2_000, 500).queries);
+        v
+    };
+    let source = SyntheticSource::new(
+        measure.to_vec(),
+        Box::new(Burst::from_capacity(
+            capacity_ns,
+            0.5,
+            2.0 * RATE,
+            period_ns,
+            0.25 * period_ns,
+        )),
+        measure[0].seq,
+        warm.last().map_or(0.0, |e| e.ts_ms as f64 * 1e6),
+    )
+    .with_limit(12_000);
+    let mut pipe = Pipeline::builder()
+        .queries(two_queries)
+        .shedder(ShedderKind::PSpice)
+        .detector(detector)
+        .model(ModelKind::Freq)
+        .retrain(10_000, 1e-9)
+        .latency_bound_ms(LB_MS)
+        .shards(2)
+        .batch(256)
+        .seed(7)
+        .key_slot(DatasetKind::Bus.key_slot())
+        .fault_plan(FaultPlan::parse("kill:0@170,kill:1@190")?)
+        .checkpoint_every(8)
+        .journal_cap(20_000)
+        .ingest_source(Box::new(source))
+        .build()?;
+    pipe.prime(warm);
+    let run = pipe.run_realtime(f64::INFINITY)?;
+    println!(
+        "\ncheckpointed chaos: {} deaths recovered losslessly — {} PMs \
+         restored ({} events replayed), {} lost to crashes, p95={:.3}ms",
+        run.recoveries,
+        run.totals.recovered_pms,
+        run.totals.replayed_events,
         run.totals.dropped_pms_failure,
         run.latency.p95_ns() / 1e6,
     );

@@ -75,7 +75,10 @@ pub fn usage() -> &'static str {
                   [--lb-ms F] [--seed N] [--shards N] [--batch N]\n\
                   [--model markov|freq]\n\
                   [--retrain-every N] [--drift-threshold F]\n\
-                  [--faults kill:S@D,delay:S@D:MS,poison:S@D] (chaos, shards>1)\n\
+                  [--faults kill:S@D,delay:S@D:MS,poison:S@D,hang:S@D,\n\
+                  shedkill:S@D] (chaos, shards>1)\n\
+                  [--checkpoint-every N] [--journal-cap N] (snapshot+replay\n\
+                  recovery) [--deadline-ms F] (worker hang detection)\n\
        realtime   run against the ingest plane (same flags as run, plus)\n\
                   [--source trace|tail|socket|burst|flashcrowd|oscillate]\n\
                   [--overload predicted|measured] [--duration-ms F]\n\
@@ -161,6 +164,10 @@ fn cfg_from_flags(flags: &Flags) -> crate::Result<ExperimentConfig> {
         crate::runtime::FaultPlan::parse(spec)?;
         cfg.faults = spec.to_string();
     }
+    cfg.checkpoint_every = flags.get_parse("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.journal_cap = flags.get_parse("journal-cap", cfg.journal_cap)?;
+    cfg.worker_deadline_ms = flags.get_parse("deadline-ms", cfg.worker_deadline_ms)?;
+    anyhow::ensure!(cfg.journal_cap >= 1, "--journal-cap must be at least 1");
     Ok(cfg)
 }
 
@@ -222,6 +229,12 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 println!(
                     "  failures          : {} shard respawns, {} PMs lost (counted as shed)",
                     r.recoveries, r.dropped_pms_failure
+                );
+            }
+            if r.recovered_pms > 0 || r.hangs_detected > 0 {
+                println!(
+                    "  recovery          : {} PMs restored ({} events replayed), {} hangs detected",
+                    r.recovered_pms, r.replayed_events, r.hangs_detected
                 );
             }
             println!(
@@ -309,6 +322,12 @@ pub fn run(args: Vec<String>) -> crate::Result<()> {
                 println!(
                     "  failures          : {} shard respawns, {} PMs lost (counted as shed)",
                     r.recoveries, r.dropped_pms_failure
+                );
+            }
+            if r.recovered_pms > 0 || r.hangs_detected > 0 {
+                println!(
+                    "  recovery          : {} PMs restored ({} events replayed), {} hangs detected",
+                    r.recovered_pms, r.replayed_events, r.hangs_detected
                 );
             }
             println!(
@@ -576,6 +595,37 @@ mod tests {
         // a malformed spec dies at flag parsing, before any phase runs
         let f = Flags::parse(&s(&["run", "--faults", "explode:0@1"])).unwrap();
         assert!(cfg_from_flags(&f).is_err());
+    }
+
+    #[test]
+    fn recovery_flags_parse() {
+        let f = Flags::parse(&s(&[
+            "run",
+            "--shards",
+            "4",
+            "--checkpoint-every",
+            "16",
+            "--journal-cap",
+            "20000",
+            "--deadline-ms",
+            "250",
+        ]))
+        .unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.checkpoint_every, 16);
+        assert_eq!(cfg.journal_cap, 20_000);
+        assert!((cfg.worker_deadline_ms - 250.0).abs() < 1e-12);
+        // defaults: checkpointing off, no explicit deadline
+        let f = Flags::parse(&s(&["run", "--query", "q1"])).unwrap();
+        let cfg = cfg_from_flags(&f).unwrap();
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert_eq!(cfg.worker_deadline_ms, 0.0);
+        // a zero journal cap is rejected
+        let f = Flags::parse(&s(&["run", "--journal-cap", "0"])).unwrap();
+        assert!(cfg_from_flags(&f).is_err());
+        // the new fault kinds go through the same eager validation
+        let f = Flags::parse(&s(&["run", "--faults", "hang:0@3,shedkill:1@4"])).unwrap();
+        assert_eq!(cfg_from_flags(&f).unwrap().faults, "hang:0@3,shedkill:1@4");
     }
 
     #[test]

@@ -74,6 +74,18 @@ pub struct ExperimentConfig {
     /// comma-separated [`crate::runtime::FaultPlan`] spec
     /// (`"kill:1@10,delay:0@5:2.5,poison:2@30"`; empty = no injection)
     pub faults: String,
+    /// take a per-shard state snapshot every this many batch dispatches
+    /// (sharded runtime; 0 = checkpointing off, worker death falls back
+    /// to lossy recovery)
+    pub checkpoint_every: u64,
+    /// per-shard journal capacity in events; a shard whose journal
+    /// outgrows this between checkpoints degrades to lossy recovery
+    /// until the next completed checkpoint
+    pub journal_cap: usize,
+    /// deadline for any single worker response in wall ms (0 = derive:
+    /// wall-clock runs get one from the latency bound, virtual runs
+    /// block forever); a worker that misses it is treated as hung
+    pub worker_deadline_ms: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -104,6 +116,9 @@ impl Default for ExperimentConfig {
             ingest_policy: OverflowPolicy::DropOldest,
             duration_ms: 0.0,
             faults: String::new(),
+            checkpoint_every: 0,
+            journal_cap: 8_192,
+            worker_deadline_ms: 0.0,
         }
     }
 }
@@ -191,6 +206,15 @@ impl ExperimentConfig {
             // parse eagerly so a bad spec fails at load, not mid-run
             crate::runtime::FaultPlan::parse(v)?;
             cfg.faults = v.to_string();
+        }
+        if let Some(v) = doc.get_num(section, "checkpoint_every") {
+            cfg.checkpoint_every = v as u64;
+        }
+        if let Some(v) = doc.get_num(section, "journal_cap") {
+            cfg.journal_cap = v as usize;
+        }
+        if let Some(v) = doc.get_num(section, "worker_deadline_ms") {
+            cfg.worker_deadline_ms = v;
         }
         Ok(cfg)
     }
@@ -398,6 +422,23 @@ mod tests {
         assert!(
             ExperimentConfig::from_toml("[experiment]\nfaults = \"kill:1\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn recovery_keys_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\nshards = 4\ncheckpoint_every = 16\n\
+             journal_cap = 20000\nworker_deadline_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 16);
+        assert_eq!(cfg.journal_cap, 20_000);
+        assert!((cfg.worker_deadline_ms - 250.0).abs() < 1e-12);
+        // defaults: checkpointing off, a bounded journal, no deadline
+        let d = ExperimentConfig::default();
+        assert_eq!(d.checkpoint_every, 0);
+        assert_eq!(d.journal_cap, 8_192);
+        assert_eq!(d.worker_deadline_ms, 0.0);
     }
 
     #[test]

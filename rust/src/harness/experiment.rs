@@ -68,6 +68,13 @@ pub struct ExperimentResult {
     pub dropped_pms_failure: u64,
     /// shard workers respawned after a failure during measurement
     pub recoveries: u64,
+    /// PMs restored by checkpointed (snapshot + journal replay)
+    /// recovery instead of being lost to `dropped_pms_failure`
+    pub recovered_pms: u64,
+    /// journaled events replayed into respawned workers
+    pub replayed_events: u64,
+    /// worker hangs detected by the dispatch deadline
+    pub hangs_detected: u64,
     /// events dropped during measurement (E-BL)
     pub dropped_events: u64,
     /// model build wall-clock seconds (phase 2)
@@ -180,9 +187,13 @@ pub(crate) fn calibrate(
         detector.observe_processing(n_before, out.cost_ns);
     }
     anyhow::ensure!(detector.fit(), "latency regression needs more warm-up");
-    // seed g() with the cost model's shed cost shape
+    // seed g() with the cost model's shed cost shape; the shed decision
+    // scans *cells*, not PMs, so the PM count n converts to its
+    // expected cell count before pricing the scan — keeping the seeded
+    // regression on the same axis as live observe_shedding() feedback
     for n in [100usize, 1_000, 5_000, 20_000, 50_000] {
-        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+        let cells = (n as f64 / crate::operator::EST_PMS_PER_CELL) as usize;
+        detector.observe_shedding(n, op.cost.shed_ns(cells, n / 10));
     }
     detector.fit();
     Ok((op, detector))
@@ -233,6 +244,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
         .queries(queries)
         .shedder(cfg.shedder)
         .fault_plan(faults)
+        .checkpoint_every(cfg.checkpoint_every)
+        .journal_cap(cfg.journal_cap)
+        .worker_deadline_ms(cfg.worker_deadline_ms)
         .detector(detector)
         .tables(strategy_tables)
         .latency_bound_ms(cfg.lb_ms)
@@ -271,6 +285,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult>
         dropped_pms: run.totals.dropped_pms,
         dropped_pms_failure: run.totals.dropped_pms_failure,
         recoveries: run.recoveries,
+        recovered_pms: run.totals.recovered_pms,
+        replayed_events: run.totals.replayed_events,
+        hangs_detected: run.totals.hangs_detected,
         dropped_events: run.totals.dropped_events,
         model_build_secs,
         engine,

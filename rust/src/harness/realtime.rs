@@ -62,6 +62,13 @@ pub struct RealtimeResult {
     pub dropped_pms_failure: u64,
     /// shard workers respawned after a failure during the run
     pub recoveries: u64,
+    /// PMs restored by checkpointed (snapshot + journal replay)
+    /// recovery instead of being lost to `dropped_pms_failure`
+    pub recovered_pms: u64,
+    /// journaled events replayed into respawned workers
+    pub replayed_events: u64,
+    /// worker hangs detected by the dispatch deadline
+    pub hangs_detected: u64,
     /// a stop signal (SIGINT) ended the run before deadline/source end;
     /// the in-flight batch completed and every total above is valid
     pub interrupted: bool,
@@ -125,6 +132,9 @@ impl RealtimeResult {
                 "  \"dropped_pms\": {dropped_pms},\n",
                 "  \"dropped_pms_failure\": {dropped_pms_failure},\n",
                 "  \"recoveries\": {recoveries},\n",
+                "  \"recovered_pms\": {recovered_pms},\n",
+                "  \"replayed_events\": {replayed_events},\n",
+                "  \"hangs_detected\": {hangs_detected},\n",
                 "  \"interrupted\": {interrupted},\n",
                 "  \"dropped_events\": {dropped_events},\n",
                 "  \"shed_overhead\": {shed_overhead},\n",
@@ -154,6 +164,9 @@ impl RealtimeResult {
             dropped_pms = self.dropped_pms,
             dropped_pms_failure = self.dropped_pms_failure,
             recoveries = self.recoveries,
+            recovered_pms = self.recovered_pms,
+            replayed_events = self.replayed_events,
+            hangs_detected = self.hangs_detected,
             interrupted = self.interrupted,
             dropped_events = self.dropped_events,
             shed_overhead = num(self.shed_overhead),
@@ -321,6 +334,9 @@ pub fn run_realtime_experiment_with_stop(
         .queries(queries)
         .shedder(cfg.shedder)
         .fault_plan(FaultPlan::parse(&cfg.faults)?)
+        .checkpoint_every(cfg.checkpoint_every)
+        .journal_cap(cfg.journal_cap)
+        .worker_deadline_ms(cfg.worker_deadline_ms)
         .detector(detector)
         .tables(tables)
         .latency_bound_ms(cfg.lb_ms)
@@ -365,6 +381,9 @@ pub fn run_realtime_experiment_with_stop(
         dropped_pms: run.totals.dropped_pms,
         dropped_pms_failure: run.totals.dropped_pms_failure,
         recoveries: run.recoveries,
+        recovered_pms: run.totals.recovered_pms,
+        replayed_events: run.totals.replayed_events,
+        hangs_detected: run.totals.hangs_detected,
         interrupted: run.interrupted,
         dropped_events: run.totals.dropped_events,
         shed_overhead: run.shed_overhead,

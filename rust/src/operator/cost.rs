@@ -10,6 +10,16 @@
 //! per-open-window cost, and different queries can have different
 //! per-check costs (their Fig. 8 τ_Q1/τ_Q2 factor is `check_factor`).
 
+/// Average live PMs per `(query, window, state)` shed cell on the
+/// built-in workloads — the bridge between the paper's per-PM cost
+/// framing (`l_s = g(n_pm)`) and the engine's O(cells) shed decision.
+/// `shed_scan_ns` is per *cell* and equals the pre-recalibration per-PM
+/// scan unit (14 ns) times this factor, so a shed pass over a typical
+/// population costs exactly what it did when the model charged per PM;
+/// callers that only know a PM count estimate the cell count as
+/// `n_pm / EST_PMS_PER_CELL`.
+pub const EST_PMS_PER_CELL: f64 = 3.2;
+
 /// Cost model parameters (virtual nanoseconds).
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -23,7 +33,11 @@ pub struct CostModel {
     pub check_factor: Vec<f64>,
     /// Per window-open test per event.
     pub open_check_ns: f64,
-    /// Shedder cost per PM scanned (utility lookup + selection).
+    /// Shedder cost per *cell* scanned (utility lookup + selection).
+    /// The shed decision ranks `(query, window, state)` cells, not
+    /// individual PMs, so its cost is O(cells); the default is the old
+    /// per-PM unit (14 ns) × [`EST_PMS_PER_CELL`] for continuity with
+    /// the paper's per-PM `g(n_pm)` framing.
     pub shed_scan_ns: f64,
     /// Shedder cost per PM actually dropped.
     pub shed_drop_ns: f64,
@@ -44,7 +58,7 @@ impl CostModel {
             per_check_ns: 120.0,
             check_factor: vec![1.0; n_queries],
             open_check_ns: 25.0,
-            shed_scan_ns: 14.0,
+            shed_scan_ns: 14.0 * EST_PMS_PER_CELL,
             shed_drop_ns: 30.0,
             ebl_per_window_ns: 3.0,
         }
@@ -56,8 +70,10 @@ impl CostModel {
         self.per_check_ns * self.check_factor[q]
     }
 
-    /// Cost of a shed pass that scanned `scanned` PMs and dropped
-    /// `dropped` (the paper's `l_s = g(n_pm)`).
+    /// Cost of a shed pass that scanned `scanned` *cells* and dropped
+    /// `dropped` PMs — the O(cells) decision plus the O(dropped)
+    /// removal, the engine's realization of the paper's `l_s = g(n_pm)`
+    /// (which assumed a per-PM scan).
     #[inline]
     pub fn shed_ns(&self, scanned: usize, dropped: usize) -> f64 {
         self.shed_scan_ns * scanned as f64 + self.shed_drop_ns * dropped as f64

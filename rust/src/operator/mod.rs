@@ -8,9 +8,10 @@ pub mod observe;
 pub mod operator;
 pub mod state;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, EST_PMS_PER_CELL};
 pub use observe::{DeltaRow, ObservationHub, QueryStats, StatsDelta};
 pub use operator::{
-    cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell,
+    cell_cmp, CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShardSnapshot,
+    ShedCell,
 };
 pub use state::{BatchResult, FailureDrain, OperatorState, PerShard, ShedOutcome, MAX_SHARDS};

@@ -196,6 +196,14 @@ pub struct ObservationHub {
     pub enabled: bool,
 }
 
+impl Default for ObservationHub {
+    /// An empty, enabled hub — the starting point a snapshot's
+    /// [`ObservationHub::assign_from`] grows into.
+    fn default() -> Self {
+        ObservationHub::new(&[])
+    }
+}
+
 impl ObservationHub {
     /// Hub for queries with the given state counts.
     pub fn new(ms: &[usize]) -> Self {
@@ -208,6 +216,16 @@ impl ObservationHub {
     /// Total observations across queries.
     pub fn total(&self) -> u64 {
         self.queries.iter().map(|q| q.total).sum()
+    }
+
+    /// Mark every row of every query dirty, forcing the next delta
+    /// harvest to ship the full matrices.  The checkpoint plane calls
+    /// this after a snapshot import: the restored rows must reach the
+    /// coordinator's mirror verbatim, whatever its pre-crash state.
+    pub fn mark_all_dirty(&mut self) {
+        for q in &mut self.queries {
+            q.dirty.fill(true);
+        }
     }
 
     /// Overwrite this hub from `src`, reusing allocations (see

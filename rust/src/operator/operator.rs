@@ -184,6 +184,36 @@ impl RateDigest {
     }
 }
 
+/// A compact, self-contained copy of one operator's matching state:
+/// live PMs and window positions (with their [`crate::windows::StateCounts`]
+/// cell indexes), the PM-id/created/completed counters, the stream-rate
+/// digest and the observation-stat rows.  What the checkpoint plane
+/// (`runtime/sharded/checkpoint.rs`) ships per shard every
+/// `checkpoint_every` dispatches, and what `respawn` restores before
+/// replaying the journal.
+///
+/// Model tables, check-cost factors, the obs-enabled flag and routing
+/// are deliberately absent: the coordinator holds the authoritative
+/// copies and reinstalls them on every respawn, so snapshotting them
+/// would only create a second source of truth.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSnapshot {
+    /// per-query open windows (PMs, claims, cell counts)
+    pub wins: Vec<QueryWindows>,
+    /// next fresh PM id
+    pub next_pm_id: u64,
+    /// cached live PM count
+    pub n_pms: usize,
+    /// total PMs ever created
+    pub pms_created: u64,
+    /// total complex events ever emitted
+    pub completions_total: u64,
+    /// stream-rate digest at capture time
+    pub rate: RateDigest,
+    /// observation statistics (verbatim cumulative rows)
+    pub obs: ObservationHub,
+}
+
 /// The CEP operator.
 #[derive(Clone)]
 pub struct Operator {
@@ -819,7 +849,7 @@ impl Operator {
         let mut out = ShedOutcome {
             scanned: n,
             dropped: 0,
-            per_shard: PerShard::single(n, 0),
+            per_shard: PerShard::single(0, 0),
         };
         if n == 0 || rho == 0 {
             return out;
@@ -827,6 +857,9 @@ impl Operator {
         let mut cells = std::mem::take(&mut self.shed_cells);
         let mut takes = std::mem::take(&mut self.shed_takes);
         self.cell_refs(&mut cells);
+        // per-shard scan counter is in *cells*: the decision enumerates
+        // and ranks the cell index, never individual PMs
+        out.per_shard[0].0 = cells.len();
         cells.sort_unstable_by(cell_cmp);
         takes.clear();
         let mut left = rho.min(n);
@@ -850,6 +883,49 @@ impl Operator {
         self.shed_cells = cells;
         self.shed_takes = takes;
         out
+    }
+
+    /// Export the operator's matching state into `snap`, reusing every
+    /// buffer the snapshot already owns — a warm snapshot of a warm
+    /// operator touches no allocator (the PR 4 discipline).  See
+    /// [`ShardSnapshot`] for what is and isn't captured.
+    pub fn export_snapshot(&self, snap: &mut ShardSnapshot) {
+        snap.wins.resize_with(self.wins.len(), QueryWindows::default);
+        for (dst, src) in snap.wins.iter_mut().zip(self.wins.iter()) {
+            dst.assign_from(src);
+        }
+        snap.next_pm_id = self.next_pm_id;
+        snap.n_pms = self.n_pms;
+        snap.pms_created = self.pms_created;
+        snap.completions_total = self.completions_total;
+        snap.rate = self.rate;
+        snap.obs.assign_from(&self.obs);
+    }
+
+    /// Overwrite the operator's matching state from `snap` (the inverse
+    /// of [`Operator::export_snapshot`]), recycling the operator's own
+    /// buffers.  The obs-enabled flag is preserved — the coordinator
+    /// reinstalls it before restoring — and every observation row is
+    /// marked dirty so the next delta harvest resyncs the coordinator's
+    /// mirror with the restored values verbatim.
+    pub fn import_snapshot(&mut self, snap: &ShardSnapshot) {
+        assert_eq!(
+            snap.wins.len(),
+            self.wins.len(),
+            "snapshot is for an operator with the same query set"
+        );
+        for (dst, src) in self.wins.iter_mut().zip(snap.wins.iter()) {
+            dst.assign_from(src);
+        }
+        self.next_pm_id = snap.next_pm_id;
+        self.n_pms = snap.n_pms;
+        self.pms_created = snap.pms_created;
+        self.completions_total = snap.completions_total;
+        self.rate = snap.rate;
+        let enabled = self.obs.enabled;
+        self.obs.assign_from(&snap.obs);
+        self.obs.enabled = enabled;
+        self.obs.mark_all_dirty();
     }
 }
 
@@ -1230,10 +1306,15 @@ mod tests {
         let mut op = tabled_operator();
         let before = op.pm_count();
         assert!(before > 20, "need PMs, got {before}");
+        let mut cells = Vec::new();
+        op.cell_refs(&mut cells);
+        let n_cells = cells.len();
+        assert!(n_cells < before, "cells must compress the population");
         let out = op.shed_lowest(10);
         assert_eq!(out.scanned, before);
         assert_eq!(out.dropped, 10);
-        assert_eq!(out.per_shard.as_slice(), &[(before, 10)]);
+        // the per-shard scan counter is in cells (the O(cells) decision)
+        assert_eq!(out.per_shard.as_slice(), &[(n_cells, 10)]);
         assert_eq!(op.pm_count(), before - 10);
         assert!(cell_index_consistent(&op), "cell index drifted");
     }
@@ -1388,6 +1469,66 @@ mod tests {
         assert_eq!(cost.to_bits(), cost2.to_bits(), "identical FP accumulation");
         assert_eq!(a.pm_count(), b2.pm_count());
         assert_eq!(b.pm_count(), a.pm_count());
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_exact() {
+        // export → import must reproduce PM/window/cell-count state
+        // bit-for-bit: the restored operator and the original evolve
+        // identically (completions, PM ids, FP costs) from there on
+        let mut op = tabled_operator();
+        assert!(op.pm_count() > 20, "need live PMs to snapshot");
+        let mut snap = ShardSnapshot::default();
+        op.export_snapshot(&mut snap);
+
+        // the import target is deliberately *dirty* — a different
+        // stream history — so the buffer-recycling paths are exercised
+        let mut restored = Operator::new(q4(6, 4000, 200).queries);
+        let mut other = BusGen::with_seed(99);
+        for _ in 0..10_000 {
+            restored.process_event(&other.next_event().unwrap());
+        }
+        restored.import_snapshot(&snap);
+
+        assert_eq!(restored.pm_count(), op.pm_count());
+        assert_eq!(restored.open_windows(), op.open_windows());
+        assert_eq!(restored.pms_created, op.pms_created);
+        assert_eq!(restored.completions_total, op.completions_total);
+        assert_eq!(restored.rate_digest(), op.rate_digest());
+        assert_eq!(restored.obs.total(), op.obs.total());
+        for (a, b) in restored.wins.iter().zip(op.wins.iter()) {
+            assert_eq!(a.windows.len(), b.windows.len());
+            for (wa, wb) in a.windows.iter().zip(b.windows.iter()) {
+                assert_eq!(wa.open_seq, wb.open_seq);
+                assert_eq!(wa.open_ts, wb.open_ts);
+                assert_eq!(wa.pms, wb.pms, "PM state diverged");
+                assert_eq!(
+                    wa.claimed.to_sorted_vec(),
+                    wb.claimed.to_sorted_vec(),
+                    "claim state diverged"
+                );
+                assert!(wa.counts.matches(&wa.pms), "cell index diverged");
+            }
+        }
+
+        // continue the original stream on both: identical evolution
+        // (tables only affect shedding, which this path never takes)
+        let mut g = BusGen::with_seed(7);
+        let _ = g.take_events(40_000); // the prefix tabled_operator consumed
+        let (mut cost_a, mut cost_b) = (0.0f64, 0.0f64);
+        let (mut ces_a, mut ces_b) = (Vec::new(), Vec::new());
+        for e in &g.take_events(5_000) {
+            let oa = op.process_event(e);
+            let ob = restored.process_event(e);
+            cost_a += oa.cost_ns;
+            cost_b += ob.cost_ns;
+            ces_a.extend(oa.completions);
+            ces_b.extend(ob.completions);
+        }
+        assert_eq!(ces_a, ces_b, "post-restore completions diverged");
+        assert_eq!(cost_a.to_bits(), cost_b.to_bits(), "FP cost diverged");
+        assert_eq!(op.pm_count(), restored.pm_count());
+        assert_eq!(op.obs.total(), restored.obs.total());
     }
 
     #[test]

@@ -130,15 +130,28 @@ impl Eq for PerShard {}
 /// Failure accounting drained from an operator state: PMs lost to
 /// worker deaths (semantically an involuntary 100%-shed round — they
 /// flow into `ShedReport::dropped_pms_failure`, charging failures to
-/// QoR instead of availability) and the worker respawns performed.
-/// The single-threaded operator has no workers to lose, so its drain
-/// is always the default zero value.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+/// QoR instead of availability), the worker respawns performed, and —
+/// when the checkpoint plane is armed — the state the respawns brought
+/// back instead of losing.  The single-threaded operator has no
+/// workers to lose, so its drain is always the default zero value.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct FailureDrain {
     /// PMs that died with their worker since the last drain
     pub dropped_pms: u64,
     /// worker respawns since the last drain
     pub recoveries: u64,
+    /// PMs restored by snapshot + journal replay instead of being lost
+    pub recovered_pms: u64,
+    /// journaled events replayed into respawned workers
+    pub replayed_events: u64,
+    /// PMs dropped by replayed shed directives (already decided before
+    /// the crash, booked exactly once — as voluntary shedding)
+    pub replayed_drop_pms: u64,
+    /// worker hangs detected by the dispatch deadline
+    pub hangs_detected: u64,
+    /// virtual cost of the replays (charged to the clock by the caller
+    /// so recovery cannot hide work from the latency accounting)
+    pub replay_cost_ns: f64,
 }
 
 /// Outcome of one utility-ordered shed pass (paper Alg. 2).
@@ -148,8 +161,9 @@ pub struct ShedOutcome {
     pub scanned: usize,
     /// PMs dropped globally
     pub dropped: usize,
-    /// per shard: (scanned, dropped) — used to cost the pass as the
-    /// slowest shard's scan + drop (shards shed in parallel)
+    /// per shard: (cells scanned, PMs dropped) — used to cost the pass
+    /// as the slowest shard's O(cells) decision + O(dropped) removal
+    /// (shards shed in parallel)
     pub per_shard: PerShard,
 }
 

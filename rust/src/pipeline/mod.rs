@@ -45,7 +45,7 @@ use crate::model::plane::{KeyUtilityTable, ModelController, ModelKind, TableSet}
 use crate::model::UtilityTable;
 use crate::operator::{BatchResult, ComplexEvent, Operator, OperatorState};
 use crate::query::Query;
-use crate::runtime::{FaultPlan, ShardedOperator};
+use crate::runtime::{FaultPlan, RecoveryConfig, ShardedOperator};
 use crate::shedding::{
     MeasuredDetector, OverloadDetector, OverloadGauge, OverloadKind, ShedReport, Shedder,
     ShedderKind,
@@ -104,6 +104,7 @@ pub struct PipelineBuilder {
     ingest_capacity: usize,
     ingest_policy: OverflowPolicy,
     fault_plan: Option<FaultPlan>,
+    recovery: RecoveryConfig,
     stop: Option<Arc<AtomicBool>>,
 }
 
@@ -134,6 +135,7 @@ impl Default for PipelineBuilder {
             ingest_capacity: 8_192,
             ingest_policy: OverflowPolicy::DropOldest,
             fault_plan: None,
+            recovery: RecoveryConfig::default(),
             stop: None,
         }
     }
@@ -329,6 +331,36 @@ impl PipelineBuilder {
         self
     }
 
+    /// Take a per-shard state snapshot every `every` batch dispatches
+    /// (sharded runtime; default 0 = off).  With checkpointing on, a
+    /// crashed worker is restored from its last snapshot plus a journal
+    /// replay instead of PR 8's lossy respawn: recovered PMs are booked
+    /// as [`ShedReport::recovered_pms`], not
+    /// [`ShedReport::dropped_pms_failure`].
+    pub fn checkpoint_every(mut self, every: u64) -> Self {
+        self.recovery.checkpoint_every = every;
+        self
+    }
+
+    /// Per-shard journal capacity in events (default 8192).  A shard
+    /// whose journal outgrows this between checkpoints degrades to
+    /// lossy recovery until the next completed checkpoint re-arms it.
+    pub fn journal_cap(mut self, cap: usize) -> Self {
+        self.recovery.journal_cap = cap;
+        self
+    }
+
+    /// Deadline for any single worker response, in wall milliseconds
+    /// (0 = derive: wall-clock runs get `100 × LB` clamped to
+    /// [50 ms, 1000 ms]; virtual-clock runs block forever, the PR 8
+    /// behavior).  A worker that misses the deadline is treated as
+    /// hung — marked dead, its thread detached — and the shard is
+    /// recovered like a crash.
+    pub fn worker_deadline_ms(mut self, ms: f64) -> Self {
+        self.recovery.worker_deadline_ms = ms;
+        self
+    }
+
     /// Cooperative stop flag for [`Pipeline::run_realtime`]: when the
     /// flag goes `true` (e.g. from a SIGINT handler) the loop finishes
     /// the in-flight batch, marks the run interrupted and returns its
@@ -402,11 +434,29 @@ impl PipelineBuilder {
                 "fault plan targets shard {max}, but the run has {running} shards"
             );
         }
+        anyhow::ensure!(
+            self.recovery.worker_deadline_ms >= 0.0
+                && self.recovery.worker_deadline_ms.is_finite(),
+            "worker_deadline_ms must be a finite non-negative ms value"
+        );
+        let mut recovery = self.recovery;
+        // wall-clock runs get a hang deadline by default: generous
+        // relative to the latency bound (a healthy worker answers a
+        // dispatch in a small fraction of LB), clamped so thread-spawn
+        // jitter cannot trip it and a huge LB cannot disable it.
+        // Virtual-clock runs keep 0 (block forever): wall stalls there
+        // are scheduler noise, not modeled behavior.
+        if recovery.worker_deadline_ms == 0.0
+            && self.clock.as_ref().is_some_and(|c| c.is_wall())
+        {
+            recovery.worker_deadline_ms = (100.0 * self.lb_ms).clamp(50.0, 1000.0);
+        }
         let mut backend = if self.shards > 1 {
-            Backend::Sharded(ShardedOperator::with_faults(
+            Backend::Sharded(ShardedOperator::with_recovery(
                 self.queries,
                 self.shards,
                 faults,
+                recovery,
             ))
         } else {
             Backend::Single(Operator::new(self.queries))
@@ -598,13 +648,25 @@ impl Pipeline {
 
     /// Fold the backend's failure drain into the run accounting: PMs
     /// lost to a crashed shard are an involuntary shed
-    /// ([`ShedReport::dropped_pms_failure`]), and every respawn counts
-    /// as a recovery.  No-op on the single-threaded backend and on
-    /// healthy sharded runs.
+    /// ([`ShedReport::dropped_pms_failure`]), PMs a checkpointed
+    /// respawn restored are [`ShedReport::recovered_pms`], PMs dropped
+    /// by replaying unacked shed directives are ordinary voluntary
+    /// shedding, every respawn counts as a recovery, and the replay's
+    /// processing cost is charged to the clock so recovery cannot hide
+    /// work from the latency accounting.  No-op on the single-threaded
+    /// backend and on healthy sharded runs.
     fn drain_failures(&mut self) {
         let d = self.backend.state().drain_failures();
         self.totals.dropped_pms_failure += d.dropped_pms;
+        self.totals.dropped_pms += d.replayed_drop_pms;
+        self.totals.recovered_pms += d.recovered_pms;
+        self.totals.replayed_events += d.replayed_events;
+        self.totals.hangs_detected += d.hangs_detected;
         self.recoveries += d.recoveries;
+        if d.replay_cost_ns > 0.0 {
+            self.clock.advance(d.replay_cost_ns);
+            self.busy_ns += d.replay_cost_ns;
+        }
     }
 
     /// Epoch of the model snapshot the backend is currently reading

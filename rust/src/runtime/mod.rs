@@ -27,4 +27,7 @@ pub use engine::{auto_engine, BatchTables, ModelEngine};
 pub use fallback::FallbackEngine;
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtEngine;
-pub use sharded::{FaultKind, FaultPlan, FaultSpec, ShardFailure, ShardPlan, ShardedOperator};
+pub use sharded::{
+    FaultKind, FaultPlan, FaultSpec, RecoveryConfig, ShardFailure, ShardPlan, ShardSnapshot,
+    ShardedOperator,
+};

@@ -1,0 +1,194 @@
+//! The shed-native checkpoint/recovery plane for the sharded runtime.
+//!
+//! PR 8 made worker death survivable but *lossy*: a crashed shard's PMs
+//! were booked wholesale as involuntary shedding
+//! (`dropped_pms_failure`) — the one failure mode where the system
+//! dropped state with zero regard for utility.  This module closes that
+//! gap with the classic snapshot + journal-replay recipe, specialized
+//! to the engine's zero-alloc batch plane:
+//!
+//! * **Snapshots.**  Every [`RecoveryConfig::checkpoint_every`] batch
+//!   dispatches, the coordinator sends each shard a recycled
+//!   [`ShardSnapshot`] box (`Request::Checkpoint`); the worker fills it
+//!   via [`crate::operator::Operator::export_snapshot`] — live PMs,
+//!   window positions and their `StateCounts` cell indexes, the
+//!   PM-id/created/completed counters, the rate digest and the obs-stat
+//!   rows — reusing the box's buffers, and ships it back on the same
+//!   request/response channel.  Steady-state checkpoints of a warm
+//!   shard touch no allocator (the PR 4 discipline).
+//!
+//! * **Journal.**  Between acked snapshots the coordinator journals
+//!   every state-mutating request it sends a shard: batches as clones
+//!   of the pooled `EventBatch`/`DropMask` `Arc`s (no copy), shed
+//!   directives as their take lists / RNG seeds.  `respawn` then
+//!   restores the last snapshot and replays the journal
+//!   (`Request::Restore`), which reproduces the dead worker's state
+//!   bit-exactly — the one-request-in-flight protocol means at most the
+//!   final journal entry was unacknowledged at death.
+//!
+//! * **Accounting.**  Restored PMs are booked as `recovered_pms`
+//!   instead of `dropped_pms_failure`; completions of unacked entries
+//!   are emitted into the next dispatch's merge (exactly the ones the
+//!   dead worker never delivered); PMs dropped by replaying *unacked*
+//!   shed directives are booked once, as ordinary voluntary shedding;
+//!   and the replay's processing cost is charged to the virtual clock
+//!   so recovery cannot hide work from the latency accounting.
+//!   Snapshot capture itself charges nothing virtual: it models an
+//!   asynchronous state mirror whose cost is real (wall) time, which
+//!   the wall-clock plane observes on its own.
+//!
+//! * **Overflow degrade.**  The journal is bounded by
+//!   [`RecoveryConfig::journal_cap`] (counted in events).  When a shard
+//!   overflows it — checkpoints too sparse for the event rate — its
+//!   snapshot and journal are discarded and the shard degrades to
+//!   PR 8's lossy recovery (PMs booked as `dropped_pms_failure`) until
+//!   the next completed checkpoint re-arms it.  Bounded memory beats
+//!   unbounded replay: the cap is the knob that keeps recovery from
+//!   becoming the thing that kills the latency bound.
+//!
+//! Deadline-bounded dispatch and quarantine (the hang-detection half of
+//! this plane) live in the coordinator — see `recv_deadline` and
+//! `quarantine` in `runtime/sharded/mod.rs`.
+
+use std::sync::Arc;
+
+use crate::events::{DropMask, EventBatch};
+use crate::operator::{CellTake, ComplexEvent, RateDigest};
+
+pub use crate::operator::ShardSnapshot;
+
+/// Checkpoint/recovery knobs, threaded from `PipelineBuilder` into the
+/// sharded coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    /// Take a per-shard snapshot every this many batch dispatches
+    /// (0 = checkpointing off: worker death falls back to PR 8's lossy
+    /// recovery).
+    pub checkpoint_every: u64,
+    /// Journal capacity per shard, in *events*.  A shard whose journal
+    /// outgrows this between checkpoints degrades to lossy recovery
+    /// until the next completed checkpoint (see the module docs).
+    pub journal_cap: usize,
+    /// Deadline for any single worker response, in wall milliseconds
+    /// (0 = block forever, the PR 8 behavior).  A worker that misses it
+    /// is treated as hung: marked dead, its thread detached, and the
+    /// shard recovered like a crash.  Only meaningful on the wall
+    /// clock; `PipelineBuilder::build` derives a default from the
+    /// latency bound for wall-clock runs.
+    pub worker_deadline_ms: f64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            checkpoint_every: 0,
+            journal_cap: 8_192,
+            worker_deadline_ms: 0.0,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Is snapshot + journal recovery armed?
+    #[inline]
+    pub fn checkpointing(&self) -> bool {
+        self.checkpoint_every > 0
+    }
+
+    /// The worker-response deadline, if one is set.
+    #[inline]
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        (self.worker_deadline_ms > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(self.worker_deadline_ms / 1e3))
+    }
+}
+
+/// One state-mutating request journaled at the coordinator since the
+/// shard's last acked snapshot.  Batches hold clones of the pooled
+/// `Arc`s — journaling copies pointers, never events.
+pub(super) enum JournalEntry {
+    /// a dispatched event batch (with its shed mask, if any)
+    Batch {
+        /// the shared pooled batch
+        events: Arc<EventBatch>,
+        /// the shared pooled shed mask
+        shed: Option<Arc<DropMask>>,
+    },
+    /// a cell-wise shed directive (global query indices, as sent)
+    DropCells(Vec<CellTake>),
+    /// a random-drop directive with its deterministic seed
+    DropRandom {
+        /// how many PMs to drop
+        rho: usize,
+        /// the coordinator-chosen RNG seed
+        seed: u64,
+    },
+    /// a rate-digest install (the PR 6 resync after skipped batches):
+    /// journaled so a replayed worker's digest evolves exactly like the
+    /// dead one's — snapshot digest, then the same interleaving of
+    /// installs and per-event folds
+    SyncRate(RateDigest),
+}
+
+/// Per-shard journal of state-mutating requests since the last acked
+/// snapshot.  `acked` is the prefix of entries whose responses arrived
+/// (their completions were merged and their drops booked); with the
+/// synchronous one-in-flight protocol, at most one entry past `acked`
+/// can exist when a worker dies.
+#[derive(Default)]
+pub(super) struct Journal {
+    /// journaled requests, oldest first
+    pub entries: Vec<JournalEntry>,
+    /// total events across the `Batch` entries (the capacity metric)
+    pub events: usize,
+    /// acknowledged prefix length
+    pub acked: usize,
+    /// is snapshot + journal replay valid for this shard right now?
+    /// `false` while checkpointing is off, after a journal-capacity
+    /// overflow (until the next completed checkpoint re-arms it), and
+    /// after a failed restore consumed the journal
+    pub armed: bool,
+}
+
+impl Journal {
+    /// Append one entry, accounting its event count.
+    pub fn push(&mut self, entry: JournalEntry) {
+        if let JournalEntry::Batch { events, .. } = &entry {
+            self.events += events.len();
+        }
+        self.entries.push(entry);
+    }
+
+    /// Forget everything (new snapshot acked, or degrade-to-lossy).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.events = 0;
+        self.acked = 0;
+    }
+}
+
+/// What a `Request::Restore` did: the restored counters the coordinator
+/// needs for its mirrors, plus the replay accounting.
+#[derive(Debug, Default)]
+pub(super) struct RestoreOutcome {
+    /// live PMs after restore + replay (the recovered population)
+    pub pms: usize,
+    /// `pms_created` after restore + replay
+    pub created: u64,
+    /// `completions_total` after restore + replay
+    pub completed: u64,
+    /// open windows after restore + replay
+    pub wins_open: usize,
+    /// events replayed from the journal (all `Batch` entries)
+    pub replayed_events: u64,
+    /// PMs dropped by replaying *unacked* shed directives — decided
+    /// before the crash but never applied/booked, so the coordinator
+    /// books them now, exactly once, as voluntary shedding
+    pub replayed_drop_pms: u64,
+    /// virtual processing cost of the replay (charged to the clock)
+    pub replay_cost_ns: f64,
+    /// completions of unacked journal entries, global query indices —
+    /// the ones the dead worker never delivered; the coordinator merges
+    /// them into the next dispatch
+    pub completions: Vec<ComplexEvent>,
+}

@@ -25,7 +25,18 @@
 //!   accounting is untouched, so simulated runs stay bit-exact),
 //! * `poison:<shard>@<dispatch>` — the worker runs a `DropCells` take
 //!   for a query it does not own (the malformed-input path that used
-//!   to panic the worker; now a structured [`super::ShardFailure`]).
+//!   to panic the worker; now a structured [`super::ShardFailure`]),
+//! * `hang:<shard>@<dispatch>` — the worker stops responding (sleeps
+//!   far past any deadline) instead of crashing: exercises the
+//!   coordinator's `worker_deadline_ms` hang detection, which marks the
+//!   shard dead, *detaches* the stuck thread, and recovers exactly like
+//!   a crash,
+//! * `shedkill:<shard>@<dispatch>` — arms on the `<dispatch>`-th batch
+//!   and panics the worker on its *next* `DropCells` request, before
+//!   any take is applied: the worker dies mid-shed-round, between the
+//!   `Candidates` harvest and the drop, pinning the coordinator's
+//!   already-merged victim selection and its no-double-booking
+//!   accounting.
 //!
 //! Dispatch counts are 1-based and per shard.
 
@@ -40,6 +51,12 @@ pub enum FaultKind {
     Delay(f64),
     /// apply a `DropCells` take for an unowned query
     PoisonDropCells,
+    /// stop responding (sleep far past any deadline) instead of
+    /// crashing — the hang-detection fault
+    Hang,
+    /// arm on this batch, then panic on the next `DropCells` request
+    /// before applying any take (death mid-shed-round)
+    ShedKill,
 }
 
 /// One injected fault: `kind` fires when `shard` handles its
@@ -128,6 +145,8 @@ impl FaultPlan {
         let kind = match (kind_name.trim(), tail) {
             ("kill", None) => FaultKind::Kill,
             ("poison", None) => FaultKind::PoisonDropCells,
+            ("hang", None) => FaultKind::Hang,
+            ("shedkill", None) => FaultKind::ShedKill,
             ("delay", Some(ms)) => {
                 let ms: f64 = ms
                     .trim()
@@ -142,7 +161,12 @@ impl FaultPlan {
             ("delay", None) => {
                 anyhow::bail!("fault {entry:?}: delay needs a trailing :ms value")
             }
-            (other, _) => anyhow::bail!("fault {entry:?}: unknown kind {other:?} (kill|delay|poison)"),
+            (k @ ("kill" | "poison" | "hang" | "shedkill"), Some(_)) => {
+                anyhow::bail!("fault {entry:?}: {k} takes no trailing value")
+            }
+            (other, _) => anyhow::bail!(
+                "fault {entry:?}: unknown kind {other:?} (kill|delay|poison|hang|shedkill)"
+            ),
         };
         Ok(FaultSpec { shard, dispatch, kind })
     }
@@ -190,6 +214,15 @@ mod tests {
             FaultSpec { shard: 2, dispatch: 30, kind: FaultKind::PoisonDropCells }
         );
         assert_eq!(plan.max_shard(), Some(2));
+        let plan = FaultPlan::parse("hang:3@7,shedkill:1@4").unwrap();
+        assert_eq!(
+            plan.faults[0],
+            FaultSpec { shard: 3, dispatch: 7, kind: FaultKind::Hang }
+        );
+        assert_eq!(
+            plan.faults[1],
+            FaultSpec { shard: 1, dispatch: 4, kind: FaultKind::ShedKill }
+        );
         // per-shard extraction sorts by dispatch
         let plan = FaultPlan::parse("kill:0@20,kill:0@5").unwrap();
         let s0 = plan.for_shard(0);
@@ -215,6 +248,8 @@ mod tests {
             "delay:1@3:soon",   // bad ms
             "delay:1@3:-1",     // negative ms
             "explode:1@3",      // unknown kind
+            "hang:1@3:9",       // hang takes no tail
+            "shedkill:1@3:9",   // shedkill takes no tail
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
         }

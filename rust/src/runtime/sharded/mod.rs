@@ -98,15 +98,51 @@
 //! [`FaultPlan`] (kill/delay/poison schedules keyed on cumulative
 //! per-shard dispatch counts, surviving respawn) makes the whole path
 //! testable: same seed + same plan ⇒ same deaths, same accounting.
+//!
+//! ## Checkpointed recovery, hang detection and quarantine (PR 9)
+//!
+//! Three additions turn the lossy PR 8 story into a *shed-native
+//! checkpoint/recovery plane* (all default-off; see [`RecoveryConfig`]
+//! and the [`checkpoint`] module docs):
+//!
+//! * **Snapshot + journal replay.**  With `checkpoint_every > 0` the
+//!   coordinator periodically captures per-shard [`ShardSnapshot`]s
+//!   (recycled boxes over the request/response channel) and journals
+//!   every state-mutating request since the last acked snapshot
+//!   (pooled-`Arc` clones — pointers, not events).  A dead shard's
+//!   respawn then *restores* snapshot + journal instead of starting
+//!   empty: recovered PMs are booked as `recovered_pms` rather than
+//!   `dropped_pms_failure`, completions the dead worker never delivered
+//!   are re-emitted, and replay cost is charged to the virtual clock.
+//!   A journal outgrowing `journal_cap` degrades that shard to the
+//!   lossy PR 8 path until the next completed checkpoint.
+//!
+//! * **Deadline-bounded dispatch.**  With `worker_deadline_ms > 0`
+//!   every worker response is awaited with `recv_timeout`; a miss is a
+//!   detected *hang* ([`FaultKind::Hang`] injects one
+//!   deterministically): the shard is marked dead, its stuck thread
+//!   detached — never joined — and recovery proceeds exactly as for a
+//!   crash.  This closes the liveness hole of a blocking `recv`: a
+//!   wedged worker used to stall the coordinator forever.
+//!
+//! * **Quarantine.**  A shard that fails [`QUARANTINE_AFTER`]
+//!   consecutive dispatches (counter reset by any clean batch response)
+//!   stops respawn-looping: its queries are rerouted to a fault-free
+//!   *inline* fallback operator on the coordinator thread, seeded via
+//!   the same restore-or-lossy path, and served synchronously through
+//!   the same request vocabulary.
 
+pub mod checkpoint;
 mod fault;
 pub(crate) mod merge;
 mod worker;
 
 use std::cell::{Cell, RefCell};
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::events::{BatchPool, DropMask, Event, EventBatch, MaskPool, TypeMask};
 use crate::model::plane::{ModelHarvest, TableSet};
@@ -118,11 +154,32 @@ use crate::operator::{
 use crate::query::{OpenPolicy, Query};
 use crate::util::Rng;
 
+pub use checkpoint::{RecoveryConfig, ShardSnapshot};
 pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use merge::sort_completions;
 pub use worker::ShardFailure;
 
-use worker::{Request, Response};
+use checkpoint::{Journal, JournalEntry, RestoreOutcome};
+use worker::{Request, Response, WorkerState};
+
+/// Consecutive failed dispatches after which a shard is quarantined to
+/// the inline fallback operator instead of respawn-looping.  The
+/// counter resets on any clean batch response, so only a shard that
+/// *keeps* dying (crash-looping worker, poisoned environment) trips it.
+pub const QUARANTINE_AFTER: u32 = 3;
+
+/// A quarantined shard's fallback lane: the same [`WorkerState`] the
+/// thread worker runs, driven synchronously on the coordinator thread.
+/// `send` handles the request inline and parks the response in
+/// `pending`; `recv` pops it — so every existing protocol path works
+/// unchanged.  The inline state carries *no* fault schedule, and its
+/// requests run without `catch_unwind`: quarantine is the trusted
+/// last-resort lane, so a genuine panic here surfaces loudly instead of
+/// being absorbed.
+struct InlineShard {
+    state: WorkerState,
+    pending: VecDeque<Response>,
+}
 
 /// How queries are assigned to shards.
 #[derive(Debug, Clone)]
@@ -272,6 +329,50 @@ pub struct ShardedOperator {
     obs_enabled: bool,
     /// last installed model snapshot, re-installed on respawn
     current_tables: Option<Arc<TableSet>>,
+    /// checkpoint/recovery knobs (all default-off; see [`checkpoint`])
+    recovery: RecoveryConfig,
+    /// per-shard last acked snapshot (`None` until the first checkpoint
+    /// acks, or after a journal-overflow degrade; a `None` snapshot
+    /// with an armed journal means restore-from-genesis — the empty
+    /// state every fresh worker starts in)
+    snaps: Vec<Option<Box<ShardSnapshot>>>,
+    /// per-shard spare snapshot box: checkpoint N+1 is exported into
+    /// the box snapshot N−1 came back in, so steady-state checkpoints
+    /// of a warm shard allocate nothing
+    spares: Vec<Option<Box<ShardSnapshot>>>,
+    /// per-shard journal of state-mutating requests since the last
+    /// acked snapshot (`RefCell`: appends also happen on `&self` paths
+    /// like `sync_rate`; the coordinator is single-threaded)
+    journals: RefCell<Vec<Journal>>,
+    /// per-shard "worker missed its response deadline": its thread may
+    /// be parked for minutes, so it is detached — never joined — at
+    /// respawn and drop
+    hung: Vec<Cell<bool>>,
+    /// hangs detected since the last `drain_failures` (`Cell`:
+    /// detection happens in the `&self` receive path)
+    hangs_detected: Cell<u64>,
+    /// per-shard consecutive failed dispatches (reset by a clean batch
+    /// response); at [`QUARANTINE_AFTER`] the shard is quarantined
+    consec_failures: Vec<Cell<u32>>,
+    /// quarantined shards' inline fallback lanes (`RefCell`: `send` and
+    /// `recv` are `&self`)
+    quarantine: RefCell<Vec<Option<Box<InlineShard>>>>,
+    /// completions recovered from a dead shard's unacked journal
+    /// entries, merged into the current/next dispatch's output
+    pending_completions: Vec<ComplexEvent>,
+    /// PMs restored by snapshot + replay since the last drain (the
+    /// counter that replaces `failure_dropped` on the recovered path)
+    recovered_pms: u64,
+    /// events replayed from journals since the last drain
+    replayed_events: u64,
+    /// PMs dropped by replaying unacked shed directives since the last
+    /// drain (booked exactly once, as voluntary shedding)
+    replayed_drop_pms: u64,
+    /// virtual replay cost since the last drain (charged to the clock
+    /// by the pipeline)
+    replay_cost_ns: f64,
+    /// lifetime batch dispatches (the checkpoint cadence counter)
+    total_dispatches: u64,
 }
 
 impl ShardedOperator {
@@ -290,6 +391,21 @@ impl ShardedOperator {
     /// same deaths and the same recovery accounting.  An empty plan is
     /// exactly [`ShardedOperator::new`].
     pub fn with_faults(queries: Vec<Query>, n_shards: usize, faults: FaultPlan) -> Self {
+        Self::with_recovery(queries, n_shards, faults, RecoveryConfig::default())
+    }
+
+    /// Like [`ShardedOperator::with_faults`], with the checkpoint/
+    /// recovery plane configured: periodic snapshots + journal replay
+    /// (`checkpoint_every`), bounded journals (`journal_cap`), and
+    /// deadline-bounded dispatch with hang detection
+    /// (`worker_deadline_ms`).  The default [`RecoveryConfig`] is
+    /// exactly [`ShardedOperator::with_faults`].
+    pub fn with_recovery(
+        queries: Vec<Query>,
+        n_shards: usize,
+        faults: FaultPlan,
+        recovery: RecoveryConfig,
+    ) -> Self {
         assert!(!queries.is_empty(), "sharded operator needs queries");
         assert!(
             n_shards <= MAX_SHARDS,
@@ -388,6 +504,30 @@ impl ShardedOperator {
             recoveries: 0,
             obs_enabled: true,
             current_tables: None,
+            snaps: (0..n).map(|_| None).collect(),
+            spares: (0..n).map(|_| None).collect(),
+            journals: RefCell::new(
+                (0..n)
+                    .map(|_| Journal {
+                        // genesis journals are armed from the first
+                        // dispatch: snapshot `None` + journal = replay
+                        // from the empty state a fresh worker starts in
+                        armed: recovery.checkpointing(),
+                        ..Journal::default()
+                    })
+                    .collect(),
+            ),
+            hung: vec![Cell::new(false); n],
+            hangs_detected: Cell::new(0),
+            consec_failures: vec![Cell::new(0); n],
+            quarantine: RefCell::new((0..n).map(|_| None).collect()),
+            pending_completions: Vec::new(),
+            recovered_pms: 0,
+            replayed_events: 0,
+            replayed_drop_pms: 0,
+            replay_cost_ns: 0.0,
+            total_dispatches: 0,
+            recovery,
         }
     }
 
@@ -492,6 +632,9 @@ impl ShardedOperator {
         self.dead[shard].set(true);
         let mut failed = self.failed.borrow_mut();
         if failed[shard].is_none() {
+            // one increment per death (the report is taken at respawn);
+            // a clean batch response resets the streak
+            self.consec_failures[shard].set(self.consec_failures[shard].get() + 1);
             failed[shard] = Some(failure.unwrap_or_else(|| ShardFailure {
                 shard,
                 dispatch: self.batches_sent[shard],
@@ -509,21 +652,70 @@ impl ShardedOperator {
     }
 
     /// Receive a shard's response, turning worker death — a
-    /// [`Response::Failed`] report or a closed channel — into a dead
-    /// mark instead of a coordinator panic.  `None` means the shard is
-    /// (now) dead and contributed nothing.
+    /// [`Response::Failed`] report, a closed channel, or (with a
+    /// configured deadline) a response timeout — into a dead mark
+    /// instead of a coordinator panic or an unbounded wait.  `None`
+    /// means the shard is (now) dead and contributed nothing.
     fn recv(&self, shard: usize) -> Option<Response> {
+        self.recv_with(shard, self.recovery.deadline())
+    }
+
+    fn recv_with(&self, shard: usize, deadline: Option<Duration>) -> Option<Response> {
         if self.dead[shard].get() {
             return None;
         }
-        match self.rxs[shard].recv() {
+        if let Some(q) = self.quarantine.borrow_mut()[shard].as_mut() {
+            // inline lane: the response was parked at send time
+            return match q.pending.pop_front() {
+                Some(Response::Failed(f)) => {
+                    self.mark_dead(shard, Some(f));
+                    None
+                }
+                Some(resp) => Some(resp),
+                None => {
+                    self.mark_dead(
+                        shard,
+                        self.protocol_violation(shard, "a parked inline response"),
+                    );
+                    None
+                }
+            };
+        }
+        // Err(true) = deadline missed (hang), Err(false) = disconnected
+        let got = match deadline {
+            Some(d) => self.rxs[shard]
+                .recv_timeout(d)
+                .map_err(|e| e == RecvTimeoutError::Timeout),
+            None => self.rxs[shard].recv().map_err(|_| false),
+        };
+        match got {
             Ok(Response::Failed(f)) => {
                 self.mark_dead(shard, Some(f));
                 None
             }
             Ok(resp) => Some(resp),
-            Err(_) => {
-                self.mark_dead(shard, None);
+            Err(timed_out) => {
+                if timed_out {
+                    // hang detected: the thread may be parked for
+                    // minutes, so it is detached at recovery (never
+                    // joined); its eventual send lands on a dropped
+                    // receiver
+                    self.hung[shard].set(true);
+                    self.hangs_detected.set(self.hangs_detected.get() + 1);
+                    self.mark_dead(
+                        shard,
+                        Some(ShardFailure {
+                            shard,
+                            dispatch: self.batches_sent[shard],
+                            reason: format!(
+                                "hang: no response within the {:.1} ms deadline",
+                                self.recovery.worker_deadline_ms
+                            ),
+                        }),
+                    );
+                } else {
+                    self.mark_dead(shard, None);
+                }
                 None
             }
         }
@@ -532,10 +724,24 @@ impl ShardedOperator {
     /// Send a request to a shard.  Returns whether the shard accepted
     /// it — `false` for a shard already marked dead or whose request
     /// channel turns out closed (which marks it).  Callers only await
-    /// responses for accepted requests.
+    /// responses for accepted requests.  A quarantined shard handles
+    /// the request inline, synchronously, and parks the response for
+    /// the matching [`Self::recv`].
     fn send(&self, shard: usize, req: Request) -> bool {
         if self.dead[shard].get() {
             return false;
+        }
+        if let Some(q) = self.quarantine.borrow_mut()[shard].as_mut() {
+            let resp = match q.state.handle(req) {
+                Ok(resp) => resp,
+                Err(reason) => Response::Failed(ShardFailure {
+                    shard,
+                    dispatch: self.batches_sent[shard],
+                    reason,
+                }),
+            };
+            q.pending.push_back(resp);
+            return true;
         }
         match self.txs[shard].send(req) {
             Ok(()) => true,
@@ -544,6 +750,52 @@ impl ShardedOperator {
                 false
             }
         }
+    }
+
+    /// Is snapshot + journal recovery live for this shard right now?
+    fn journal_armed(&self, shard: usize) -> bool {
+        self.recovery.checkpointing() && self.journals.borrow()[shard].armed
+    }
+
+    /// Journal a state-mutating request that a shard just accepted.
+    /// Only `Batch` entries grow the event count, so the overflow check
+    /// lives at the dispatch site ([`Self::check_journal_overflow`]).
+    fn journal_push(&self, shard: usize, entry: JournalEntry) {
+        self.journals.borrow_mut()[shard].push(entry);
+    }
+
+    /// Degrade a shard to lossy recovery if its journal outgrew the
+    /// event cap — checkpoints too sparse for the event rate.  Bounded
+    /// memory beats unbounded replay; the next completed checkpoint
+    /// re-arms the shard.
+    fn check_journal_overflow(&mut self, shard: usize) {
+        {
+            let mut journals = self.journals.borrow_mut();
+            let j = &mut journals[shard];
+            if j.events <= self.recovery.journal_cap {
+                return;
+            }
+            log::warn!(
+                "shard {shard}: journal overflowed {} events (cap {}); \
+                 degrading to lossy recovery until the next checkpoint",
+                j.events,
+                self.recovery.journal_cap
+            );
+            j.clear();
+            j.armed = false;
+        }
+        if let Some(b) = self.snaps[shard].take() {
+            self.spares[shard] = Some(b);
+        }
+    }
+
+    /// Mark a journaled request acknowledged: its completions were
+    /// merged and its drops booked, so a later replay must not re-emit
+    /// them.
+    fn journal_ack(&self, shard: usize) {
+        let mut journals = self.journals.borrow_mut();
+        let j = &mut journals[shard];
+        j.acked = j.entries.len();
     }
 
     /// Broadcast a state-setting request to every live shard and drain
@@ -586,20 +838,20 @@ impl ShardedOperator {
     fn respawn(&mut self, s: usize) {
         if let Some(f) = self.failed.borrow_mut()[s].take() {
             log::warn!(
-                "shard {s} died at dispatch {} ({}); respawning",
+                "shard {s} died at dispatch {} ({}); recovering",
                 f.dispatch,
                 f.reason
             );
         }
-        self.failure_dropped += self.pms[s] as u64;
         self.recoveries += 1;
-        self.created_base[s] += self.created[s];
-        self.completed_base[s] += self.completed[s];
-        self.created[s] = 0;
-        self.completed[s] = 0;
-        self.pms[s] = 0;
-        self.wins_open[s] = 0;
-        self.open_windows = self.wins_open.iter().sum();
+        // a crash-looping shard (or a failed inline lane) goes to the
+        // quarantine path instead of another thread respawn
+        if self.quarantine.borrow()[s].is_some()
+            || self.consec_failures[s].get() >= QUARANTINE_AFTER
+        {
+            self.quarantine_shard(s);
+            return;
+        }
         let (tx, rx, handle) = Self::spawn_worker(
             &self.queries,
             &self.plan.assignments[s],
@@ -613,13 +865,27 @@ impl ShardedOperator {
         self.txs[s] = tx;
         self.rxs[s] = rx;
         let old = std::mem::replace(&mut self.handles[s], handle);
-        let _ = old.join();
+        if self.hung[s].get() {
+            // a hung thread may be parked far past any deadline:
+            // detach it — its eventual send lands on the receiver we
+            // just dropped, and the thread exits on its own
+            self.hung[s].set(false);
+            drop(old);
+        } else {
+            let _ = old.join();
+        }
         self.dead[s].set(false);
-        self.stale[s].set(false);
-        // re-install the coordinator's view of worker state; if the
-        // replacement dies during these (repeated kills are batch-keyed
-        // and cannot re-fire, but a genuine panic could), it is marked
-        // dead again and picked up at the next recovery point
+        self.reseed(s);
+    }
+
+    /// Re-install the coordinator's view of worker state on a fresh
+    /// incarnation (thread or inline — `send` routes either way), then
+    /// recover its matching state: checkpointed restore when armed,
+    /// the PR 8 lossy path otherwise.  If the incarnation dies during
+    /// these (repeated kills are batch-keyed and cannot re-fire, but a
+    /// genuine panic could), it is marked dead again and picked up at
+    /// the next recovery point.
+    fn reseed(&mut self, s: usize) {
         let routing = self.routing;
         self.reinstall(s, Request::SetTypeRouting(routing), "routing ack");
         let obs = self.obs_enabled;
@@ -627,8 +893,183 @@ impl ShardedOperator {
         if let Some(set) = self.current_tables.clone() {
             self.reinstall(s, Request::UpdateTables(set), "tables ack");
         }
+        if self.try_restore(s) {
+            // shed-native checkpointed recovery: PMs, windows, counters
+            // and rate digest are back exactly.  No `SyncRate` and no
+            // `stale` reset: the snapshot restores the digest as of the
+            // checkpoint and the replayed journal (including journaled
+            // syncs) reproduces the dead worker's digest, which lags
+            // the mirror by exactly the batches that worker also never
+            // saw — the existing staleness machinery resyncs those.
+            return;
+        }
+        // PR 8 lossy path: the incarnation's PMs become failure-shed
+        // and the replacement starts empty on the mirrored digest
+        self.book_lossy(s);
+        self.stale[s].set(false);
         let rate = self.rate;
         self.reinstall(s, Request::SyncRate(rate), "rate ack");
+        if self.journal_armed(s) {
+            // the synced digest is part of the replacement's genesis
+            // baseline: journal it so a replay reproduces it
+            self.journal_push(s, JournalEntry::SyncRate(rate));
+            self.journal_ack(s);
+        }
+    }
+
+    /// The PR 8 lossy bookkeeping: the dead incarnation's PMs become an
+    /// involuntary 100%-shed round and its lifetime counters fold into
+    /// the per-shard bases.  The replacement starts empty, so the
+    /// recovery baseline also restarts: journal cleared and re-armed
+    /// (genesis = the empty state), snapshot retired to the spare slot.
+    fn book_lossy(&mut self, s: usize) {
+        self.failure_dropped += self.pms[s] as u64;
+        self.created_base[s] += self.created[s];
+        self.completed_base[s] += self.completed[s];
+        self.created[s] = 0;
+        self.completed[s] = 0;
+        self.pms[s] = 0;
+        self.wins_open[s] = 0;
+        self.open_windows = self.wins_open.iter().sum();
+        if self.recovery.checkpointing() {
+            {
+                let mut journals = self.journals.borrow_mut();
+                journals[s].clear();
+                journals[s].armed = true;
+            }
+            if let Some(b) = self.snaps[s].take() {
+                self.spares[s] = Some(b);
+            }
+        }
+    }
+
+    /// Attempt checkpointed recovery of a freshly reseeded shard: ship
+    /// the last acked snapshot plus the journal, let the replacement
+    /// replay, and adopt the restored mirrors.  Returns `false`
+    /// (leaving the mirrors untouched) when the plane is off or
+    /// degraded, or when the replacement itself fails mid-restore —
+    /// the caller then books the death lossily.
+    fn try_restore(&mut self, s: usize) -> bool {
+        if !self.journal_armed(s) {
+            return false;
+        }
+        let snap = self.snaps[s].take();
+        let (journal, emit_from) = {
+            let mut journals = self.journals.borrow_mut();
+            let j = &mut journals[s];
+            let emit_from = j.acked;
+            j.events = 0;
+            j.acked = 0;
+            (std::mem::take(&mut j.entries), emit_from)
+        };
+        if !self.send(
+            s,
+            Request::Restore {
+                snap,
+                journal,
+                emit_from,
+            },
+        ) {
+            self.journals.borrow_mut()[s].armed = false;
+            return false;
+        }
+        // replay is bulk work that may legitimately exceed the per-
+        // response deadline: wait without one (the replacement is
+        // fresh, and no faults fire during replay)
+        match self.recv_with(s, None) {
+            Some(Response::Restored {
+                outcome,
+                snap,
+                journal,
+            }) => {
+                self.adopt_restore(s, outcome, snap, journal);
+                true
+            }
+            None => {
+                // died mid-restore and the payload died with it: disarm
+                // so the next respawn books this death lossily instead
+                // of "restoring" an empty journal
+                self.journals.borrow_mut()[s].armed = false;
+                false
+            }
+            Some(_) => {
+                self.mark_dead(s, self.protocol_violation(s, "restore outcome"));
+                self.journals.borrow_mut()[s].armed = false;
+                false
+            }
+        }
+    }
+
+    /// Adopt a successful restore: reinstate snapshot + journal (now
+    /// fully acked), replace the mirrors with the restored counters —
+    /// *without* folding bases, because the replacement continues the
+    /// dead incarnation's lifetime counters — and book the replay
+    /// accounting (`recovered_pms` instead of `dropped_pms_failure`).
+    fn adopt_restore(
+        &mut self,
+        s: usize,
+        outcome: RestoreOutcome,
+        snap: Option<Box<ShardSnapshot>>,
+        journal: Vec<JournalEntry>,
+    ) {
+        self.snaps[s] = snap;
+        {
+            let mut journals = self.journals.borrow_mut();
+            let j = &mut journals[s];
+            j.entries = journal;
+            j.acked = j.entries.len();
+            j.events = j
+                .entries
+                .iter()
+                .map(|e| match e {
+                    JournalEntry::Batch { events, .. } => events.len(),
+                    _ => 0,
+                })
+                .sum();
+            j.armed = true;
+        }
+        self.recovered_pms += outcome.pms as u64;
+        self.replayed_events += outcome.replayed_events;
+        self.replayed_drop_pms += outcome.replayed_drop_pms;
+        self.replay_cost_ns += outcome.replay_cost_ns;
+        self.pms[s] = outcome.pms;
+        self.created[s] = outcome.created;
+        self.completed[s] = outcome.completed;
+        self.wins_open[s] = outcome.wins_open;
+        self.open_windows = self.wins_open.iter().sum();
+        let mut completions = outcome.completions;
+        self.pending_completions.append(&mut completions);
+    }
+
+    /// Reroute a crash-looping shard to the inline fallback lane: a
+    /// fault-free [`WorkerState`] on the coordinator thread, reseeded
+    /// by the same restore-or-lossy recovery as a thread respawn and
+    /// served synchronously through `send`/`recv` from then on.  The
+    /// retired worker thread keeps its slot in `handles` and is joined
+    /// at drop (skipped if it hung).
+    fn quarantine_shard(&mut self, s: usize) {
+        log::warn!(
+            "shard {s}: {} consecutive failures; rerouting to the inline fallback operator",
+            self.consec_failures[s].get()
+        );
+        let local: Vec<Query> = self.plan.assignments[s]
+            .iter()
+            .map(|&g| self.queries[g].clone())
+            .collect();
+        // deliberately no fault schedule: the fallback lane must not
+        // inherit the faults that crash-looped the thread worker
+        let state = WorkerState::new(
+            local,
+            self.plan.assignments[s].clone(),
+            Vec::new(),
+            self.batches_sent[s],
+        );
+        self.quarantine.borrow_mut()[s] = Some(Box::new(InlineShard {
+            state,
+            pending: VecDeque::new(),
+        }));
+        self.dead[s].set(false);
+        self.reseed(s);
     }
 
     /// One re-install step of a respawn: fire the request and absorb
@@ -652,9 +1093,19 @@ impl ShardedOperator {
         let out = FailureDrain {
             dropped_pms: self.failure_dropped,
             recoveries: self.recoveries,
+            recovered_pms: self.recovered_pms,
+            replayed_events: self.replayed_events,
+            replayed_drop_pms: self.replayed_drop_pms,
+            hangs_detected: self.hangs_detected.get(),
+            replay_cost_ns: self.replay_cost_ns,
         };
         self.failure_dropped = 0;
         self.recoveries = 0;
+        self.recovered_pms = 0;
+        self.replayed_events = 0;
+        self.replayed_drop_pms = 0;
+        self.hangs_detected.set(0);
+        self.replay_cost_ns = 0.0;
         out
     }
 
@@ -701,8 +1152,16 @@ impl ShardedOperator {
         if !self.send(s, Request::SyncRate(self.rate)) {
             return; // dead: the respawn re-installs the digest itself
         }
+        if self.journal_armed(s) {
+            self.journal_push(s, JournalEntry::SyncRate(self.rate));
+        }
         match self.recv(s) {
-            Some(Response::Ack) => self.stale[s].set(false),
+            Some(Response::Ack) => {
+                self.stale[s].set(false);
+                if self.journal_armed(s) {
+                    self.journal_ack(s);
+                }
+            }
             None => {}
             Some(_) => self.mark_dead(s, self.protocol_violation(s, "sync ack")),
         }
@@ -775,6 +1234,19 @@ impl ShardedOperator {
             );
             if sent[s] {
                 self.batches_sent[s] += 1;
+                if self.journal_armed(s) {
+                    // journaling clones the pooled Arcs (pointers, not
+                    // events); the pool grows beyond its steady-state
+                    // single buffer only while checkpointing is on
+                    self.journal_push(
+                        s,
+                        JournalEntry::Batch {
+                            events: Arc::clone(&batch),
+                            shed: shed.clone(),
+                        },
+                    );
+                    self.check_journal_overflow(s);
+                }
             }
         }
         // fold the batch into the mirror *after* the send decisions: a
@@ -803,6 +1275,10 @@ impl ShardedOperator {
             }
             match self.recv(s) {
                 Some(Response::Batch(mut b)) => {
+                    self.consec_failures[s].set(0);
+                    if self.journal_armed(s) {
+                        self.journal_ack(s);
+                    }
                     out.cost_ns_max = out.cost_ns_max.max(b.cost_ns);
                     out.cost_ns_total += b.cost_ns;
                     out.checks += b.checks;
@@ -826,12 +1302,58 @@ impl ShardedOperator {
                 }
             }
         }
-        merge::sort_completions(&mut out.completions);
         self.open_windows = self.wins_open.iter().sum();
         // bounded-latency recovery: a shard that died during this
         // batch is respawned before the call returns, so the pipeline
-        // drains complete failure accounting right after the dispatch
+        // drains complete failure accounting right after the dispatch;
+        // a checkpointed restore may surface completions the dead
+        // worker never delivered — merged into this batch's output
         self.recover_dead();
+        if !self.pending_completions.is_empty() {
+            out.completions.append(&mut self.pending_completions);
+        }
+        merge::sort_completions(&mut out.completions);
+        self.total_dispatches += 1;
+        if self.recovery.checkpointing()
+            && self.total_dispatches % self.recovery.checkpoint_every == 0
+        {
+            self.take_checkpoints();
+        }
+    }
+
+    /// One checkpoint round: every live shard exports its state into a
+    /// recycled snapshot box; on ack the shard's journal baseline moves
+    /// (cleared + re-armed) and the previous snapshot becomes the next
+    /// round's spare.  Capture charges nothing to the virtual clock: it
+    /// models an asynchronous state mirror whose real cost the
+    /// wall-clock plane observes by itself.
+    fn take_checkpoints(&mut self) {
+        let mut sent = [false; MAX_SHARDS];
+        for s in 0..self.n_shards() {
+            let sink = self.spares[s].take().unwrap_or_default();
+            sent[s] = self.send(s, Request::Checkpoint { sink });
+        }
+        for s in 0..self.n_shards() {
+            if !sent[s] {
+                continue;
+            }
+            match self.recv(s) {
+                Some(Response::Checkpoint(snap)) => {
+                    if let Some(old) = self.snaps[s].replace(snap) {
+                        self.spares[s] = Some(old);
+                    }
+                    let mut journals = self.journals.borrow_mut();
+                    journals[s].clear();
+                    journals[s].armed = true;
+                }
+                // died during capture (box lost with it): recovered at
+                // the next entry point, snapshot state unchanged
+                None => {}
+                Some(_) => {
+                    self.mark_dead(s, self.protocol_violation(s, "checkpoint"))
+                }
+            }
+        }
     }
 
     /// Open windows across all shards.
@@ -1018,9 +1540,12 @@ impl ShardedOperator {
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
         self.recover_dead();
         let scanned = self.pm_count();
+        // per-shard (cells scanned, PMs dropped): the cell counts come
+        // back with the candidate responses (the O(cells) decision
+        // scan), the drop counts with the `CellsDropped` acks
         let mut per_shard = PerShard::default();
-        for &p in &self.pms {
-            per_shard.push(p, 0);
+        for _ in &self.pms {
+            per_shard.push(0, 0);
         }
         let mut out = ShedOutcome {
             scanned,
@@ -1046,7 +1571,10 @@ impl ShardedOperator {
                 continue;
             }
             match self.recv(s) {
-                Some(Response::Candidates(c)) => lists.push(c),
+                Some(Response::Candidates { cells, scanned }) => {
+                    out.per_shard[s].0 = scanned;
+                    lists.push(cells);
+                }
                 None => lists.push(Vec::new()),
                 Some(_) => {
                     self.mark_dead(s, self.protocol_violation(s, "candidates"));
@@ -1070,7 +1598,14 @@ impl ShardedOperator {
                 continue;
             }
             expected[s] = takes.iter().map(|t| t.take as usize).sum();
-            sent[s] = self.send(s, Request::DropCells(std::mem::take(takes)));
+            let payload = std::mem::take(takes);
+            let journaled = self.journal_armed(s).then(|| payload.clone());
+            sent[s] = self.send(s, Request::DropCells(payload));
+            if sent[s] {
+                if let Some(j) = journaled {
+                    self.journal_push(s, JournalEntry::DropCells(j));
+                }
+            }
         }
         for s in 0..self.n_shards() {
             if !sent[s] {
@@ -1078,6 +1613,9 @@ impl ShardedOperator {
             }
             match self.recv(s) {
                 Some(Response::CellsDropped { n, takes }) => {
+                    if self.journal_armed(s) {
+                        self.journal_ack(s);
+                    }
                     debug_assert_eq!(n, expected[s], "victim cells must be live");
                     self.pms[s] -= n;
                     out.per_shard[s].1 = n;
@@ -1139,13 +1677,11 @@ impl ShardedOperator {
         let mut sent = [false; MAX_SHARDS];
         for (s, &k) in alloc.iter().enumerate() {
             if k > 0 {
-                sent[s] = self.send(
-                    s,
-                    Request::DropRandom {
-                        rho: k,
-                        seed: rng.next_u64(),
-                    },
-                );
+                let seed = rng.next_u64();
+                sent[s] = self.send(s, Request::DropRandom { rho: k, seed });
+                if sent[s] && self.journal_armed(s) {
+                    self.journal_push(s, JournalEntry::DropRandom { rho: k, seed });
+                }
             }
         }
         for s in 0..self.n_shards() {
@@ -1154,6 +1690,9 @@ impl ShardedOperator {
             }
             match self.recv(s) {
                 Some(Response::Dropped(d)) => {
+                    if self.journal_armed(s) {
+                        self.journal_ack(s);
+                    }
                     self.pms[s] -= d;
                     dropped += d;
                 }
@@ -1173,6 +1712,27 @@ impl ShardedOperator {
         self.pms.fill(0);
         self.wins_open.fill(0);
         self.open_windows = 0;
+        self.pending_completions.clear();
+        if self.recovery.checkpointing() {
+            // the recovery baseline restarts at the empty state the
+            // reset produced: journals back to genesis, snapshots
+            // retired to the spare slots; each shard's first journaled
+            // entry will be a digest sync (`stale` below), aligning
+            // replay with the digest the reset did *not* clear
+            {
+                let mut journals = self.journals.borrow_mut();
+                for j in journals.iter_mut() {
+                    j.clear();
+                    j.armed = true;
+                }
+            }
+            for s in 0..self.n_shards() {
+                if let Some(b) = self.snaps[s].take() {
+                    self.spares[s] = Some(b);
+                }
+                self.stale[s].set(true);
+            }
+        }
     }
 
     /// Enumerate every live PM across all shards (shard order, then
@@ -1279,7 +1839,14 @@ impl Drop for ShardedOperator {
         for tx in &self.txs {
             let _ = tx.send(Request::Shutdown);
         }
-        for h in self.handles.drain(..) {
+        for (s, h) in self.handles.drain(..).enumerate() {
+            if self.hung[s].get() {
+                // a hung worker may be parked far past any deadline;
+                // joining it would stall teardown — detach instead
+                // (its eventual send hits a dropped receiver and the
+                // thread exits on its own)
+                continue;
+            }
             let _ = h.join();
         }
     }
@@ -1730,5 +2297,203 @@ mod tests {
         let mut h = ModelHarvest::default();
         sop.harvest_observations(&mut h);
         assert!(h.ws.iter().all(|&w| w > 0), "ws flows from a synced digest");
+    }
+
+    /// Checkpointing on: a killed shard restores snapshot + journal,
+    /// reproducing the clean run's completions and PM state exactly —
+    /// nothing is booked as failure shedding.
+    #[test]
+    fn checkpointed_kill_restores_state_exactly() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(20_000)
+        };
+        let clean = {
+            let mut sop = ShardedOperator::new(queries.clone(), 2);
+            let mut got = Vec::new();
+            for chunk in events.chunks(512) {
+                got.extend(sop.process_batch(chunk).completions);
+            }
+            (got, sop.pm_count())
+        };
+        let recovery = RecoveryConfig {
+            checkpoint_every: 4,
+            journal_cap: 100_000,
+            worker_deadline_ms: 0.0,
+        };
+        let plan = FaultPlan::parse("kill:0@10").unwrap();
+        let mut sop =
+            ShardedOperator::with_recovery(queries, 2, plan, recovery);
+        let mut got = Vec::new();
+        for chunk in events.chunks(512) {
+            got.extend(sop.process_batch(chunk).completions);
+        }
+        let d = sop.drain_failures();
+        assert_eq!(d.recoveries, 1, "one kill, one recovery");
+        assert_eq!(d.dropped_pms, 0, "recovery must not be lossy");
+        assert!(d.recovered_pms > 0, "the dead shard's PMs come back");
+        assert!(d.replayed_events > 0, "replay covers the journal");
+        assert_eq!(d.hangs_detected, 0);
+        assert_eq!(
+            (got, sop.pm_count()),
+            clean,
+            "restored run must match the clean run bit-for-bit"
+        );
+    }
+
+    /// A worker killed between the `Candidates` harvest and `DropCells`
+    /// (the mid-shed-round death): victim selection stays deterministic
+    /// and no dropped PM is ever booked twice — lossily the whole shard
+    /// becomes failure-shed, checkpointed the takes are replayed and
+    /// booked exactly once as voluntary shedding.
+    #[test]
+    fn shed_kill_mid_round_never_double_books() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(12_000)
+        };
+        let run = |recovery: RecoveryConfig| {
+            let plan = FaultPlan::parse("shedkill:1@4").unwrap();
+            let mut sop =
+                ShardedOperator::with_recovery(queries.clone(), 2, plan, recovery);
+            for chunk in events.chunks(512) {
+                sop.process_batch(chunk);
+            }
+            let before = sop.pm_count();
+            let before_s1 = sop.pm_counts()[1];
+            assert!(before_s1 > 0, "shard 1 must hold PMs before the round");
+            // a budget past shard 0's whole population forces takes
+            // onto shard 1, so the armed shed-kill is guaranteed to
+            // fire mid-round
+            let rho = sop.pm_counts()[0] + before_s1 / 2;
+            let out = sop.shed_lowest(rho);
+            let d = sop.drain_failures();
+            assert_eq!(d.recoveries, 1, "the armed shed-kill fires exactly once");
+            assert_eq!(
+                out.per_shard[1].1, 0,
+                "no CellsDropped ack can come from the dead shard"
+            );
+            (before, before_s1, out.dropped, d, sop.pm_count())
+        };
+        // lossy: shard 1 dies before applying its takes; its entire
+        // population is booked as failure shedding, exactly once
+        let lossy = run(RecoveryConfig::default());
+        let (_, before_s1, _, d, _) = lossy;
+        assert_eq!(d.dropped_pms, before_s1 as u64, "whole shard becomes failure-shed");
+        assert_eq!(d.recovered_pms, 0);
+        // deterministic victim selection: same seed + plan => same round
+        assert_eq!(run(RecoveryConfig::default()), lossy);
+        // checkpointed: the unacked takes replay on the restored state
+        // and are booked exactly once, as voluntary shedding
+        let recovery = RecoveryConfig {
+            checkpoint_every: 4,
+            journal_cap: 100_000,
+            worker_deadline_ms: 0.0,
+        };
+        let (before, before_s1, dropped, d, pm_after) = run(recovery);
+        assert_eq!(d.dropped_pms, 0, "nothing is lossily shed");
+        assert!(d.replayed_drop_pms > 0, "the takes replay exactly once");
+        assert_eq!(
+            d.recovered_pms,
+            before_s1 as u64 - d.replayed_drop_pms,
+            "recovered = shard population minus its replayed drops"
+        );
+        assert_eq!(
+            pm_after,
+            before - dropped - d.replayed_drop_pms as usize,
+            "population reflects each drop exactly once"
+        );
+    }
+
+    /// An injected hang is detected by the response deadline instead of
+    /// blocking the coordinator forever: the shard is marked hung, its
+    /// thread detached, and the run continues through a recovery.
+    #[test]
+    fn hang_is_detected_within_the_deadline() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(6_000)
+        };
+        let recovery = RecoveryConfig {
+            checkpoint_every: 0,
+            journal_cap: 8_192,
+            worker_deadline_ms: 200.0,
+        };
+        let plan = FaultPlan::parse("hang:0@3").unwrap();
+        let mut sop =
+            ShardedOperator::with_recovery(queries, 2, plan, recovery);
+        let mut completions = 0usize;
+        for chunk in events.chunks(512) {
+            completions += sop.process_batch(chunk).completions.len();
+        }
+        let d = sop.drain_failures();
+        assert_eq!(d.hangs_detected, 1, "the deadline must catch the hang");
+        assert_eq!(d.recoveries, 1, "a hang recovers like a crash");
+        assert!(completions > 0, "the run keeps completing");
+        assert!(sop.pm_count() > 0);
+    }
+
+    /// Three consecutive failures quarantine the shard onto the inline
+    /// fallback lane: no more respawns, later faults aimed at the shard
+    /// can never fire, and the run stays deterministic.
+    #[test]
+    fn crash_loop_quarantines_to_the_inline_fallback() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(12_000)
+        };
+        let run = || {
+            // kills at 2, 3, 4 are consecutive (no clean response in
+            // between); the kill at 6 would hit the quarantined lane,
+            // which carries no fault schedule — it must never fire
+            let plan =
+                FaultPlan::parse("kill:0@2,kill:0@3,kill:0@4,kill:0@6").unwrap();
+            let mut sop = ShardedOperator::with_faults(queries.clone(), 2, plan);
+            let mut got = Vec::new();
+            for chunk in events.chunks(512) {
+                got.extend(sop.process_batch(chunk).completions);
+            }
+            let d = sop.drain_failures();
+            assert_eq!(
+                d.recoveries, 3,
+                "third failure quarantines; the fourth kill never fires"
+            );
+            assert!(sop.pm_count() > 0, "the inline lane accumulates state");
+            (got, sop.pm_count())
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// A journal that outgrows its cap degrades the shard to lossy
+    /// recovery until the next checkpoint: a later kill books its PMs
+    /// as failure shedding, with nothing recovered.
+    #[test]
+    fn journal_overflow_degrades_to_lossy_recovery() {
+        let queries = q1(1_500).queries;
+        let events: Vec<_> = {
+            let mut g = StockGen::with_seed(9);
+            g.take_events(12_000)
+        };
+        let recovery = RecoveryConfig {
+            // no checkpoint ever completes within the run, and the very
+            // first 512-event batch overflows the 100-event cap
+            checkpoint_every: 1_000,
+            journal_cap: 100,
+            worker_deadline_ms: 0.0,
+        };
+        let plan = FaultPlan::parse("kill:0@10").unwrap();
+        let mut sop =
+            ShardedOperator::with_recovery(queries, 2, plan, recovery);
+        for chunk in events.chunks(512) {
+            sop.process_batch(chunk);
+        }
+        let d = sop.drain_failures();
+        assert_eq!(d.recoveries, 1);
+        assert!(d.dropped_pms > 0, "degraded shard loses its PMs lossily");
+        assert_eq!(d.recovered_pms, 0, "nothing can be restored after overflow");
     }
 }

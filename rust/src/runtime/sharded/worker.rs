@@ -54,14 +54,22 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
+use super::checkpoint::{JournalEntry, RestoreOutcome};
 use super::fault::{FaultKind, FaultSpec};
 use crate::events::{DropMask, EventBatch};
 use crate::model::plane::TableSet;
 use crate::operator::{
-    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShedCell, StatsDelta,
+    CellTake, ComplexEvent, Operator, PmRef, ProcessOutcome, RateDigest, ShardSnapshot, ShedCell,
+    StatsDelta,
 };
 use crate::query::Query;
 use crate::util::Rng;
+
+/// How long an injected [`FaultKind::Hang`] sleeps: far past any
+/// plausible `worker_deadline_ms`, so the coordinator always times out
+/// first; the stuck thread is detached and its eventual send lands on a
+/// dropped receiver.
+const HANG_SLEEP: std::time::Duration = std::time::Duration::from_secs(600);
 
 /// Aggregated outcome of one batch on one shard.
 #[derive(Debug, Default, Clone)]
@@ -164,6 +172,30 @@ pub(super) enum Request {
     },
     /// Remove every PM and window.
     Reset,
+    /// Export the operator's matching state into the recycled snapshot
+    /// box (the checkpoint plane; see [`super::checkpoint`]).
+    Checkpoint {
+        /// recycled snapshot box — filled in place via
+        /// [`Operator::export_snapshot`], returned in
+        /// [`Response::Checkpoint`]
+        sink: Box<ShardSnapshot>,
+    },
+    /// Restore a snapshot and replay the journal on a respawned worker
+    /// (tables/routing/obs-enabled were already reinstalled by the
+    /// preceding requests, exactly as on the lossy path).  Replay runs
+    /// *without* fault injection or dispatch accounting — it reproduces
+    /// state, it is not new work.
+    Restore {
+        /// the shard's last acked snapshot; `None` replays the journal
+        /// from genesis — the empty state a fresh worker starts in
+        snap: Option<Box<ShardSnapshot>>,
+        /// journaled requests since that snapshot, oldest first
+        journal: Vec<JournalEntry>,
+        /// index of the first *unacked* entry: only completions and
+        /// drops from entries at or past it are emitted/booked (the
+        /// acked prefix was already merged before the crash)
+        emit_from: usize,
+    },
     /// Exit the worker loop.
     Shutdown,
 }
@@ -173,7 +205,15 @@ pub(super) enum Response {
     /// outcome of a `Batch`
     Batch(BatchOutcome),
     /// sorted lowest-utility cell summaries (the recycled sink)
-    Candidates(Vec<ShedCell>),
+    Candidates {
+        /// the rho-covering prefix of the shard's cells, sorted
+        /// ascending (the recycled sink)
+        cells: Vec<ShedCell>,
+        /// cells enumerated by the O(cells) decision scan — the
+        /// pre-truncation count, which is what the shed-cost model
+        /// charges for
+        scanned: usize,
+    },
     /// every live PM with global query indices (the recycled sink)
     PmRefs(Vec<PmRef>),
     /// per-local-query statistic deltas + expected window sizes
@@ -201,14 +241,29 @@ pub(super) enum Response {
     },
     /// acknowledgement of a state-setting request
     Ack,
+    /// the filled snapshot box ([`Request::Checkpoint`])
+    Checkpoint(Box<ShardSnapshot>),
+    /// outcome of a [`Request::Restore`]: restored counters + replay
+    /// accounting, with the snapshot and journal handed back so the
+    /// coordinator can reinstate them without cloning
+    Restored {
+        /// what the restore + replay produced
+        outcome: RestoreOutcome,
+        /// the snapshot, returned for reinstatement
+        snap: Option<Box<ShardSnapshot>>,
+        /// the journal, returned for reinstatement (now fully acked)
+        journal: Vec<JournalEntry>,
+    },
     /// the worker died (panic or protocol fault); this is its final
     /// message before the thread exits
     Failed(ShardFailure),
 }
 
 /// Mutable worker state, grouped so the request handler can be run
-/// under one `AssertUnwindSafe` borrow.
-struct WorkerState {
+/// under one `AssertUnwindSafe` borrow.  `pub(super)` because the
+/// coordinator also drives one *inline* (same-thread, fault-free) for
+/// quarantined shards — see `quarantine` in [`super`].
+pub(super) struct WorkerState {
     op: Operator,
     /// recycled local-index take buffer for `DropCells`
     takes: Vec<CellTake>,
@@ -221,9 +276,30 @@ struct WorkerState {
     /// cumulative batches handled (1-based after the first), starting
     /// from the respawn offset so fault triggers survive recovery
     dispatches: u64,
+    /// a [`FaultKind::ShedKill`] fired: panic on the next `DropCells`
+    /// request before applying any take
+    armed_shed_kill: bool,
 }
 
 impl WorkerState {
+    /// Fresh worker state over its own operator.
+    pub(super) fn new(
+        queries: Vec<Query>,
+        local_to_global: Vec<usize>,
+        faults: Vec<FaultSpec>,
+        dispatch_offset: u64,
+    ) -> Self {
+        WorkerState {
+            op: Operator::new(queries),
+            takes: Vec::new(),
+            scratch: ProcessOutcome::default(),
+            local_to_global,
+            faults,
+            dispatches: dispatch_offset,
+            armed_shed_kill: false,
+        }
+    }
+
     fn global_to_local(&self, g: usize) -> Result<usize, String> {
         self.local_to_global
             .iter()
@@ -272,12 +348,51 @@ impl WorkerState {
                     };
                     self.apply_cell_takes(&[poisoned])?;
                 }
+                FaultKind::Hang => {
+                    std::thread::sleep(HANG_SLEEP);
+                }
+                FaultKind::ShedKill => {
+                    self.armed_shed_kill = true;
+                }
             }
         }
         Ok(())
     }
 
-    fn handle(&mut self, req: Request) -> Result<Response, String> {
+    /// The batch plane's event loop, shared between live dispatch
+    /// ([`Request::Batch`]) and journal replay ([`Request::Restore`]):
+    /// process every event (bookkeeping-only where the shed mask is
+    /// set), accumulate cost/check/window counters into `out`, and push
+    /// completions — remapped to global query indices — into `sink`.
+    fn process_batch_events(
+        &mut self,
+        events: &EventBatch,
+        shed: Option<&DropMask>,
+        out: &mut BatchOutcome,
+        sink: &mut Vec<ComplexEvent>,
+    ) {
+        for (i, e) in events.events().iter().enumerate() {
+            let skip = shed.is_some_and(|m| m.get(i));
+            self.scratch.reset();
+            if skip {
+                self.op.process_bookkeeping_into(e, &mut self.scratch);
+            } else {
+                self.op.process_event_into(e, &mut self.scratch);
+            }
+            out.cost_ns += self.scratch.cost_ns;
+            out.checks += self.scratch.checks;
+            out.opened += self.scratch.opened;
+            out.closed += self.scratch.closed;
+            for ce in &self.scratch.completions {
+                sink.push(ComplexEvent {
+                    query: self.local_to_global[ce.query],
+                    ..*ce
+                });
+            }
+        }
+    }
+
+    pub(super) fn handle(&mut self, req: Request) -> Result<Response, String> {
         Ok(match req {
             Request::Batch {
                 events,
@@ -287,25 +402,7 @@ impl WorkerState {
                 self.dispatches += 1;
                 self.inject_due_faults()?;
                 let mut out = BatchOutcome::default();
-                for (i, e) in events.events().iter().enumerate() {
-                    let skip = shed.as_ref().is_some_and(|m| m.get(i));
-                    self.scratch.reset();
-                    if skip {
-                        self.op.process_bookkeeping_into(e, &mut self.scratch);
-                    } else {
-                        self.op.process_event_into(e, &mut self.scratch);
-                    }
-                    out.cost_ns += self.scratch.cost_ns;
-                    out.checks += self.scratch.checks;
-                    out.opened += self.scratch.opened;
-                    out.closed += self.scratch.closed;
-                    for ce in &self.scratch.completions {
-                        sink.push(ComplexEvent {
-                            query: self.local_to_global[ce.query],
-                            ..*ce
-                        });
-                    }
-                }
+                self.process_batch_events(&events, shed.as_deref(), &mut out, &mut sink);
                 out.completions = sink;
                 out.n_pms = self.op.pm_count();
                 out.pms_created = self.op.pms_created;
@@ -330,6 +427,7 @@ impl WorkerState {
                 // recycled sink*; only the prefix covering rho PMs can
                 // ever be picked, so the rest never crosses the channel
                 self.op.cell_refs(&mut sink);
+                let scanned = sink.len();
                 for c in &mut sink {
                     c.query = self.local_to_global[c.query];
                 }
@@ -344,7 +442,10 @@ impl WorkerState {
                     }
                 }
                 sink.truncate(keep);
-                Response::Candidates(sink)
+                Response::Candidates {
+                    cells: sink,
+                    scanned,
+                }
             }
             Request::PmRefs { mut sink } => {
                 self.op.pm_refs(&mut sink);
@@ -365,6 +466,15 @@ impl WorkerState {
             },
             Request::Epoch => Response::Epoch(self.op.table_epoch()),
             Request::DropCells(mut global_takes) => {
+                if self.armed_shed_kill {
+                    // die between the Candidates harvest and the drop:
+                    // the coordinator already merged victims, but no
+                    // take lands on this shard
+                    panic!(
+                        "injected shed-kill after dispatch {} (before applying takes)",
+                        self.dispatches
+                    );
+                }
                 let n = self.apply_cell_takes(&global_takes)?;
                 global_takes.clear();
                 Response::CellsDropped {
@@ -383,6 +493,66 @@ impl WorkerState {
             Request::Reset => {
                 self.op.reset_state();
                 Response::Ack
+            }
+            Request::Checkpoint { mut sink } => {
+                self.op.export_snapshot(&mut sink);
+                Response::Checkpoint(sink)
+            }
+            Request::Restore {
+                snap,
+                journal,
+                emit_from,
+            } => {
+                if let Some(snap) = &snap {
+                    self.op.import_snapshot(snap);
+                }
+                let mut outcome = RestoreOutcome::default();
+                // replay accounting rides the normal batch counters; a
+                // scratch sink swallows completions of acked entries
+                // (the coordinator merged them before the crash)
+                let mut acc = BatchOutcome::default();
+                let mut discard: Vec<ComplexEvent> = Vec::new();
+                for (i, entry) in journal.iter().enumerate() {
+                    let emit = i >= emit_from;
+                    match entry {
+                        JournalEntry::Batch { events, shed } => {
+                            outcome.replayed_events += events.len() as u64;
+                            let dst = if emit {
+                                &mut outcome.completions
+                            } else {
+                                &mut discard
+                            };
+                            self.process_batch_events(events, shed.as_deref(), &mut acc, dst);
+                            discard.clear();
+                        }
+                        JournalEntry::DropCells(takes) => {
+                            let n = self.apply_cell_takes(takes)?;
+                            if emit {
+                                outcome.replayed_drop_pms += n as u64;
+                            }
+                        }
+                        JournalEntry::DropRandom { rho, seed } => {
+                            let mut rng = Rng::seeded(*seed);
+                            let n = self.op.drop_random(*rho, &mut rng);
+                            if emit {
+                                outcome.replayed_drop_pms += n as u64;
+                            }
+                        }
+                        JournalEntry::SyncRate(digest) => {
+                            self.op.set_rate_digest(*digest);
+                        }
+                    }
+                }
+                outcome.replay_cost_ns = acc.cost_ns;
+                outcome.pms = self.op.pm_count();
+                outcome.created = self.op.pms_created;
+                outcome.completed = self.op.completions_total;
+                outcome.wins_open = self.op.open_windows();
+                Response::Restored {
+                    outcome,
+                    snap,
+                    journal,
+                }
             }
             Request::Shutdown => unreachable!("Shutdown is handled by the loop"),
         })
@@ -413,14 +583,7 @@ pub(super) fn run(
     faults: Vec<FaultSpec>,
     dispatch_offset: u64,
 ) {
-    let mut state = WorkerState {
-        op: Operator::new(queries),
-        takes: Vec::new(),
-        scratch: ProcessOutcome::default(),
-        local_to_global,
-        faults,
-        dispatches: dispatch_offset,
-    };
+    let mut state = WorkerState::new(queries, local_to_global, faults, dispatch_offset);
     while let Ok(req) = rx.recv() {
         if matches!(req, Request::Shutdown) {
             break;

@@ -220,6 +220,9 @@ mod tests {
                 false_positives: 0.0,
                 throughput_at_slo_eps: thr,
                 dropped_pms_failure: 0.0,
+                recovered_pms: 0.0,
+                replayed_events: 0.0,
+                hangs_detected: 0.0,
                 capacity_ns: 2_000.0,
                 wall_events_per_sec: 1e6,
             }],

@@ -43,7 +43,8 @@ pub fn cfg_canonical(cfg: &ExperimentConfig) -> String {
          warmup={};rate={};lb_ms={};shedder={};model={};weights={:?};\
          cost_factors={:?};retrain_every={};drift_threshold={};shards={};\
          batch={};overload={};source={};codec={};ingest_capacity={};\
-         ingest_policy={};duration_ms={};faults={}",
+         ingest_policy={};duration_ms={};checkpoint_every={};journal_cap={};\
+         worker_deadline_ms={};faults={}",
         cfg.query,
         cfg.window,
         cfg.pattern_n,
@@ -68,6 +69,9 @@ pub fn cfg_canonical(cfg: &ExperimentConfig) -> String {
         cfg.ingest_capacity,
         cfg.ingest_policy.name(),
         cfg.duration_ms,
+        cfg.checkpoint_every,
+        cfg.journal_cap,
+        cfg.worker_deadline_ms,
         // the fault spec is comma-separated by construction, so it can
         // never smuggle a field separator into this line
         cfg.faults,
@@ -221,7 +225,7 @@ mod tests {
         // field without extending cfg_canonical, the semicolon count
         // here goes stale and this test points at the contract
         let line = cfg_canonical(&ExperimentConfig::default());
-        assert_eq!(line.matches(';').count(), 24, "{line}");
+        assert_eq!(line.matches(';').count(), 27, "{line}");
         assert!(line.contains("codec=lines"));
         assert!(line.contains("shedder=pspice"));
         assert!(line.ends_with("faults="), "empty plan serializes empty");

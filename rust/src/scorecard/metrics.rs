@@ -77,6 +77,15 @@ pub struct RepMetrics {
     /// [`crate::runtime::FaultPlan`], so chaos entries trend it —
     /// recorded, never gated, because healthy baselines sit at 0)
     pub dropped_pms_failure: f64,
+    /// PMs restored by checkpointed recovery instead of being lost
+    /// (recorded, never gated: healthy baselines sit at 0)
+    pub recovered_pms: f64,
+    /// journaled events replayed into respawned workers (recorded,
+    /// never gated)
+    pub replayed_events: f64,
+    /// worker hangs detected by the dispatch deadline (recorded, never
+    /// gated)
+    pub hangs_detected: f64,
     /// measured capacity (virtual ns/event) — context, not gated
     pub capacity_ns: f64,
     /// host-dependent wall throughput — informational ONLY
@@ -100,6 +109,9 @@ impl RepMetrics {
             false_positives: r.false_positives as f64,
             throughput_at_slo_eps: offered_eps * (1.0 - r.latency.violation_rate()),
             dropped_pms_failure: r.dropped_pms_failure as f64,
+            recovered_pms: r.recovered_pms as f64,
+            replayed_events: r.replayed_events as f64,
+            hangs_detected: r.hangs_detected as f64,
             capacity_ns: r.capacity_ns,
             wall_events_per_sec: r.wall_events_per_sec,
         }
@@ -112,7 +124,7 @@ pub const PRIMARY_METRICS: [&str; 3] = ["p95_ms", "fn_percent", "throughput_at_s
 /// All ledger metric names, primary first (`wall_events_per_sec` is
 /// informational — present in entries, never gated, never part of the
 /// determinism contract).
-pub const ALL_METRICS: [&str; 8] = [
+pub const ALL_METRICS: [&str; 11] = [
     "p95_ms",
     "fn_percent",
     "throughput_at_slo_eps",
@@ -120,6 +132,9 @@ pub const ALL_METRICS: [&str; 8] = [
     "p99_ms",
     "false_positives",
     "dropped_pms_failure",
+    "recovered_pms",
+    "replayed_events",
+    "hangs_detected",
     "wall_events_per_sec",
 ];
 
@@ -155,6 +170,9 @@ impl CellMetrics {
                 "false_positives" => r.false_positives,
                 "throughput_at_slo_eps" => r.throughput_at_slo_eps,
                 "dropped_pms_failure" => r.dropped_pms_failure,
+                "recovered_pms" => r.recovered_pms,
+                "replayed_events" => r.replayed_events,
+                "hangs_detected" => r.hangs_detected,
                 "capacity_ns" => r.capacity_ns,
                 "wall_events_per_sec" => r.wall_events_per_sec,
                 other => panic!("unknown metric {other:?}"),
@@ -197,6 +215,9 @@ mod tests {
             false_positives: 0.0,
             throughput_at_slo_eps: 1000.0,
             dropped_pms_failure: 0.0,
+            recovered_pms: 0.0,
+            replayed_events: 0.0,
+            hangs_detected: 0.0,
             capacity_ns: 2000.0,
             wall_events_per_sec: 1e6,
         };

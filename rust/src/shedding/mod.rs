@@ -62,6 +62,14 @@ pub struct ShedReport {
     pub dropped_pms_failure: u64,
     /// Incoming events dropped (black-box shedders).
     pub dropped_events: u64,
+    /// PMs a dead worker's respawn restored via snapshot + journal
+    /// replay — state that would have been `dropped_pms_failure` under
+    /// lossy recovery (recorded, never gated).
+    pub recovered_pms: u64,
+    /// Journaled events replayed into respawned workers.
+    pub replayed_events: u64,
+    /// Worker hangs detected by the dispatch deadline.
+    pub hangs_detected: u64,
     /// Virtual cost of the shedding work (ns) — the paper's `l_s`.
     pub cost_ns: f64,
 }
@@ -72,6 +80,9 @@ impl ShedReport {
         self.dropped_pms += other.dropped_pms;
         self.dropped_pms_failure += other.dropped_pms_failure;
         self.dropped_events += other.dropped_events;
+        self.recovered_pms += other.recovered_pms;
+        self.replayed_events += other.replayed_events;
+        self.hangs_detected += other.hangs_detected;
         self.cost_ns += other.cost_ns;
     }
 }
@@ -318,18 +329,27 @@ mod tests {
             dropped_pms: 3,
             dropped_pms_failure: 4,
             dropped_events: 1,
+            recovered_pms: 7,
+            replayed_events: 64,
+            hangs_detected: 1,
             cost_ns: 10.0,
         };
         let mut other = ShedReport {
             dropped_pms: 2,
             dropped_pms_failure: 1,
             dropped_events: 0,
+            recovered_pms: 3,
+            replayed_events: 6,
+            hangs_detected: 0,
             cost_ns: 5.5,
         };
         other.merge(&total);
         assert_eq!(other.dropped_pms, 5);
         assert_eq!(other.dropped_pms_failure, 5);
         assert_eq!(other.dropped_events, 1);
+        assert_eq!(other.recovered_pms, 10);
+        assert_eq!(other.replayed_events, 70);
+        assert_eq!(other.hangs_detected, 1);
         assert!((other.cost_ns - 15.5).abs() < 1e-12);
     }
 

@@ -56,12 +56,15 @@ impl Shedder for PmBaselineShedder {
         let dropped = state.drop_random(rho, &mut self.rng);
         self.total_dropped += dropped as u64;
         // random selection still scans the PM population once but needs
-        // no utility lookups/selection: model only the drop cost plus a
-        // cheap scan (the paper notes PM-BL is slightly cheaper); the
-        // scan parallelizes across shards
+        // no utility lookups, cell index or selection: model only the
+        // drop cost plus a cheap per-PM scan (the paper notes PM-BL is
+        // slightly cheaper).  `shed_scan_ns` is per *cell*, so dividing
+        // by EST_PMS_PER_CELL recovers the per-PM scan unit; the scan
+        // parallelizes across shards.
         let cost = state.cost();
+        let per_pm_scan_ns = cost.shed_scan_ns / crate::operator::EST_PMS_PER_CELL;
         let cost_ns = (cost.shed_drop_ns * dropped as f64
-            + 0.25 * cost.shed_scan_ns * n_pm as f64)
+            + 0.25 * per_pm_scan_ns * n_pm as f64)
             / state.parallelism() as f64;
         self.detector.observe_shedding(n_pm, cost_ns);
         ShedReport {

@@ -75,7 +75,8 @@ impl Shedder for PSpiceShedder {
         self.total_dropped += shed.dropped as u64;
         self.invocations += 1;
         // shards shed in parallel: the virtual cost is the slowest
-        // shard's scan + drop (one shard ⇒ exactly the paper's l_s)
+        // shard's O(cells) decision + O(dropped) removal (one shard ⇒
+        // exactly the paper's l_s, with the scan charged per cell)
         let cost_ns = shed
             .per_shard
             .iter()

@@ -107,6 +107,15 @@ impl ClaimSet {
             ClaimSet::Tree(t) => t.iter().copied().collect(),
         }
     }
+
+    /// Become a copy of `other`, reusing this set's buffer when both
+    /// sides are in the compact representation (snapshot recycling).
+    pub fn assign_from(&mut self, other: &ClaimSet) {
+        match (&mut *self, other) {
+            (ClaimSet::Sorted(dst), ClaimSet::Sorted(src)) => dst.clone_from(src),
+            (dst, src) => *dst = src.clone(),
+        }
+    }
 }
 
 /// Incrementally-maintained per-state PM counts of one window — the
@@ -162,6 +171,13 @@ impl StateCounts {
             .enumerate()
             .filter(|(_, &c)| c > 0)
             .map(|(s, &c)| (s as u32, c))
+    }
+
+    /// Become a copy of `other`, reusing this index's buffer
+    /// (snapshot recycling).
+    #[inline]
+    pub fn assign_from(&mut self, other: &StateCounts) {
+        self.counts.clone_from(&other.counts);
     }
 
     /// Does the index agree with a direct recount of `pms`?  (Test and
@@ -250,6 +266,16 @@ impl Window {
         self.pms.clear();
         self.claimed.clear();
         self.counts.clear();
+    }
+
+    /// Become a copy of `other`, reusing every buffer this window
+    /// already owns (the checkpoint plane's snapshot recycling).
+    pub fn assign_from(&mut self, other: &Window) {
+        self.open_seq = other.open_seq;
+        self.open_ts = other.open_ts;
+        self.pms.clone_from(&other.pms);
+        self.claimed.assign_from(&other.claimed);
+        self.counts.assign_from(&other.counts);
     }
 
     /// Remove the PMs rejected by `keep`, maintaining the cell index.
@@ -346,6 +372,37 @@ impl QueryWindows {
     /// Total PMs across all open windows.
     pub fn pm_count(&self) -> usize {
         self.windows.iter().map(|w| w.pms.len()).sum()
+    }
+
+    /// Become a copy of `other`'s open windows, recycling this query's
+    /// window shells (surplus shells retire to the graveyard, deficits
+    /// draw from it).  The graveyard itself is a local buffer pool and
+    /// is never copied, so steady-state snapshots of a warm window set
+    /// touch no allocator — the PR 4 discipline extended to the
+    /// checkpoint plane.
+    pub fn assign_from(&mut self, other: &QueryWindows) {
+        while self.windows.len() > other.windows.len() {
+            let mut w = self.windows.pop_back().expect("len checked");
+            if self.graveyard.len() < GRAVEYARD_CAP {
+                w.recycle();
+                self.graveyard.push(w);
+            }
+        }
+        for (dst, src) in self.windows.iter_mut().zip(other.windows.iter()) {
+            dst.assign_from(src);
+        }
+        while self.windows.len() < other.windows.len() {
+            let src = &other.windows[self.windows.len()];
+            let mut w = self.graveyard.pop().unwrap_or_else(|| Window {
+                open_seq: 0,
+                open_ts: 0,
+                pms: Vec::new(),
+                claimed: ClaimSet::default(),
+                counts: StateCounts::default(),
+            });
+            w.assign_from(src);
+            self.windows.push_back(w);
+        }
     }
 }
 
@@ -520,6 +577,42 @@ mod tests {
         assert!(c.is_empty());
         assert!(!c.is_spilled());
         assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn assign_from_round_trips_windows_claims_and_counts() {
+        let mut src = QueryWindows::default();
+        let mut id = 0;
+        src.open(&quote(0, 0.0), &mut id);
+        src.open(&quote(5, 1.0), &mut id);
+        src.windows[0].claim(42);
+        let mut pm = PartialMatch::seed(id, 5);
+        pm.state = 2;
+        src.windows[1].counts.inc(2);
+        src.windows[1].pms.push(pm);
+
+        // dst starts with MORE windows than src: surplus shells retire
+        let mut dst = QueryWindows::default();
+        for s in 0..3 {
+            dst.open(&quote(s * 10, 0.0), &mut id);
+        }
+        dst.assign_from(&src);
+        assert_eq!(dst.windows.len(), 2);
+        for (d, s) in dst.windows.iter().zip(src.windows.iter()) {
+            assert_eq!(d.open_seq, s.open_seq);
+            assert_eq!(d.open_ts, s.open_ts);
+            assert_eq!(d.pms, s.pms);
+            assert_eq!(d.claimed.to_sorted_vec(), s.claimed.to_sorted_vec());
+            assert!(d.counts.matches(&d.pms));
+        }
+
+        // and a deficit grows the window set without losing any state
+        let mut empty = QueryWindows::default();
+        empty.assign_from(&src);
+        assert_eq!(empty.windows.len(), 2);
+        assert!(empty.windows[0].has_claim(42));
+        assert_eq!(empty.windows[1].counts.get(2), 1);
+        assert_eq!(empty.pm_count(), src.pm_count());
     }
 
     #[test]

@@ -3,11 +3,15 @@
 //!
 //! A seeded `FaultPlan` kills each of the four shard workers once
 //! mid-overload.  The run must complete with every event accounted
-//! for, every dead worker respawned, the lost partial matches booked
-//! as involuntary shedding (`dropped_pms_failure`), and the latency
-//! tail in the same regime as the fault-free run — recovery is
-//! bounded-latency, not replay, so a crash costs result quality and
-//! never the latency bound.
+//! for, every dead worker respawned, and the latency tail in the same
+//! regime as the fault-free run.  Without checkpointing the lost
+//! partial matches are booked as involuntary shedding
+//! (`dropped_pms_failure`): recovery is bounded-latency, and a crash
+//! costs result quality, never the latency bound.  With the checkpoint
+//! plane armed (`checkpoint_every > 0`) the same kills recover all
+//! state via snapshot + journal replay instead: `dropped_pms_failure`
+//! stays 0, the restored PMs are booked as `recovered_pms`, and the
+//! run's detections match the fault-free run exactly.
 //!
 //! Everything here runs on the virtual clock, so every assertion is
 //! deterministic per seed: two identical runs must agree bit-for-bit,
@@ -145,4 +149,92 @@ fn repeated_kills_of_the_same_shard_respawn_every_time() {
     assert_eq!(res.recoveries, 3, "every kill of shard 2 must respawn it");
     assert!(res.dropped_pms_failure > 0);
     assert_eq!(res.events_processed(), 10_000);
+}
+
+/// An under-capacity, no-shedding configuration: with no strategy in
+/// the loop, detections are a pure function of the event stream, so a
+/// checkpointed chaos run can be compared against the clean run
+/// *exactly* — any lost or invented completion is a recovery bug.
+fn recovery_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        query: "q1+q2".into(),
+        window: 1_500,
+        dataset: DatasetKind::Stock,
+        seed: 11,
+        events: 10_000,
+        warmup: 12_000,
+        rate: 0.5,
+        lb_ms: 2.0,
+        shedder: ShedderKind::None,
+        shards: 4,
+        batch: 64,
+        checkpoint_every: 8,
+        journal_cap: 20_000,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn checkpointed_kills_of_every_shard_lose_no_state() {
+    let clean = run_realtime_experiment(&recovery_cfg(), None, false).unwrap();
+    assert_eq!(clean.recoveries, 0);
+    assert_eq!(clean.recovered_pms, 0);
+
+    let mut cfg = recovery_cfg();
+    cfg.faults = KILL_EACH_SHARD_ONCE.into();
+    let ck = run_realtime_experiment(&cfg, None, false).unwrap();
+
+    assert_eq!(ck.recoveries, 4, "each shard killed and respawned once");
+    assert_eq!(
+        ck.dropped_pms_failure, 0,
+        "snapshot + journal replay must not lose a single PM"
+    );
+    assert!(ck.recovered_pms > 0, "the dead shards held PMs to restore");
+    assert!(ck.replayed_events > 0, "restores replay the journal tail");
+    assert_eq!(ck.hangs_detected, 0);
+    assert_eq!(ck.events_processed(), 10_000);
+    // QoR matches the clean run exactly: every completion the dead
+    // workers would have produced is recovered or replayed
+    assert_eq!(ck.completions, clean.completions, "recovery changed QoR");
+
+    // the lossy baseline on the same fault schedule pays in state
+    cfg.checkpoint_every = 0;
+    let lossy = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert_eq!(lossy.recoveries, 4);
+    assert!(lossy.dropped_pms_failure > 0, "lossy recovery drops PMs");
+    assert_eq!(lossy.recovered_pms, 0);
+}
+
+#[test]
+fn checkpointed_recovery_is_deterministic_per_seed() {
+    let mut cfg = recovery_cfg();
+    cfg.faults = KILL_EACH_SHARD_ONCE.into();
+    let a = run_realtime_experiment(&cfg, None, false).unwrap();
+    let b = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert_eq!(a.recovered_pms, b.recovered_pms);
+    assert_eq!(a.replayed_events, b.replayed_events);
+    assert_eq!(a.completions, b.completions);
+    assert_eq!(a.dropped_pms_failure, 0);
+    assert_eq!(b.dropped_pms_failure, 0);
+}
+
+#[test]
+fn injected_hang_is_detected_within_the_deadline_and_recovered() {
+    // the hang fault sleeps far past any deadline instead of crashing;
+    // with an explicit worker deadline the coordinator must detect it,
+    // detach the stuck thread, and (checkpointing on) restore the
+    // shard without losing state.  The deadline is wall time even on
+    // the virtual clock, so the run stalls ~deadline ms once and then
+    // completes.
+    let clean = run_realtime_experiment(&recovery_cfg(), None, false).unwrap();
+    let mut cfg = recovery_cfg();
+    cfg.faults = "hang:1@210".into();
+    cfg.worker_deadline_ms = 200.0;
+    let res = run_realtime_experiment(&cfg, None, false).unwrap();
+    assert_eq!(res.hangs_detected, 1, "the hang must be detected");
+    assert_eq!(res.recoveries, 1, "a detected hang recovers like a crash");
+    assert_eq!(res.dropped_pms_failure, 0, "checkpointing keeps the state");
+    assert!(res.recovered_pms > 0);
+    assert_eq!(res.events_processed(), 10_000);
+    assert_eq!(res.completions, clean.completions, "hang recovery changed QoR");
 }

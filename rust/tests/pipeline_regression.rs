@@ -100,8 +100,11 @@ fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
         detector.observe_processing(n_before, out.cost_ns);
     }
     assert!(detector.fit());
+    // mirror the harness exactly: the shed-decision scan is priced per
+    // *cell*, so the seeded PM counts convert through EST_PMS_PER_CELL
     for n in [100usize, 1_000, 5_000, 20_000, 50_000] {
-        detector.observe_shedding(n, op.cost.shed_ns(n, n / 10));
+        let cells = (n as f64 / pspice::operator::EST_PMS_PER_CELL) as usize;
+        detector.observe_shedding(n, op.cost.shed_ns(cells, n / 10));
     }
     detector.fit();
     let mut builder = ModelBuilder::with_auto_engine(ModelConfig::default());
@@ -155,9 +158,17 @@ fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
                     });
                 }
                 let ids: HashSet<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+                // the engine prices the decision scan per *cell* (the
+                // distinct (query, window, state) triples with live
+                // PMs), while g() still regresses on the PM population
+                let n_cells = scratch
+                    .iter()
+                    .map(|r| (r.query, r.open_seq, r.state))
+                    .collect::<HashSet<_>>()
+                    .len();
                 let dropped = op.drop_pms(&ids);
                 dropped_pms += dropped as u64;
-                shed_cost = op.cost.shed_ns(n, dropped);
+                shed_cost = op.cost.shed_ns(n_cells, dropped);
                 detector.observe_shedding(n, shed_cost);
             }
         }
