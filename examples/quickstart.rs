@@ -323,5 +323,28 @@ fn main() -> pspice::Result<()> {
         run.totals.dropped_pms_failure,
         run.latency.p95_ns() / 1e6,
     );
+
+    // 9. the invariant audit: everything above is bit-exact — same
+    //    trace + seed, same bytes out, across shard counts and
+    //    recovery paths.  `pallas-audit` (rust/tools/audit) is the
+    //    static gate that keeps it that way: a token-level scan of
+    //    rust/src banning hash-container iteration / `partial_cmp` /
+    //    unseeded randomness in result-affecting modules, wall-clock
+    //    reads outside the sim::Clock plane, panics on the sharded
+    //    supervision paths, and allocation in `// audit: no-alloc`
+    //    hot functions.  Run it locally:
+    //
+    //        cargo run -p pallas-audit
+    //        cargo run -p pallas-audit -- --json
+    //
+    //    Exit 0 means clean; findings exit 1 with file:line, and CI's
+    //    `static-audit` job holds the committed baseline at empty.
+    //    Deliberate exceptions are annotated in source as
+    //    `// audit:allow(<key>): <reason>` — a missing reason is
+    //    itself a finding.  (See EXPERIMENTS.md design note #8.)
+    println!(
+        "\ninvariant audit: `cargo run -p pallas-audit` scans rust/src \
+         for determinism/clock/panic/alloc violations (CI: static-audit)"
+    );
     Ok(())
 }

@@ -13,7 +13,6 @@
 
 mod common;
 
-use std::collections::HashSet;
 
 use common::{bench, black_box, emit_json, smoke_mode, BenchResult};
 use pspice::datasets::BusGen;
@@ -122,7 +121,8 @@ fn main() {
                 if rho > 0 && rho < keyed.len() {
                     keyed.select_nth_unstable_by(rho - 1, |a, b| a.0.total_cmp(&b.0));
                 }
-                let ids: HashSet<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+                let mut ids: Vec<u64> = keyed[..rho].iter().map(|&(_, id)| id).collect();
+                ids.sort_unstable();
                 black_box(ids.len());
             },
         );
@@ -152,9 +152,11 @@ fn main() {
 
         // legacy end to end: per-PM decision + id-set retain over
         // every window
-        let victims: HashSet<u64> = {
+        let victims: Vec<u64> = {
             op.pm_refs(&mut refs);
-            refs.iter().take(rho).map(|r| r.pm_id).collect()
+            let mut v: Vec<u64> = refs.iter().take(rho).map(|r| r.pm_id).collect();
+            v.sort_unstable();
+            v
         };
         results.push(bench(
             &format!("legacy.drop_pms(n={n}, rho={rho})"),

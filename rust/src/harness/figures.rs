@@ -286,9 +286,9 @@ pub fn fig9b(opts: &FigureOpts) -> crate::Result<()> {
             max_bins: 512,
             ..ModelConfig::default()
         });
-        let t0 = std::time::Instant::now();
+        let t0 = crate::sim::WallTimer::start();
         let tables = mb.build(&op)?;
-        let secs = t0.elapsed().as_secs_f64();
+        let secs = t0.elapsed_secs();
         println!(
             "  ws={ws:>6} build={:.4}s bins={} engine={}",
             secs,

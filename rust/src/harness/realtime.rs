@@ -365,6 +365,8 @@ pub fn run_realtime_experiment_with_stop(
     } else {
         f64::INFINITY
     };
+    // audit:allow(wall-clock): reports real_elapsed_secs for the smoke log —
+    // instrumentation only, the run is timed by the pipeline's Clock
     let started = Instant::now();
     let run = pipe.run_realtime(deadline_ns)?;
     let real_elapsed_secs = started.elapsed().as_secs_f64();

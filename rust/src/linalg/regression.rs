@@ -79,12 +79,7 @@ fn solve_normal(xtx: &mut [Vec<f64>], xty: &mut [f64]) -> Option<Vec<f64>> {
     let k = xty.len();
     for col in 0..k {
         // pivot
-        let piv = (col..k).max_by(|&a, &b| {
-            xtx[a][col]
-                .abs()
-                .partial_cmp(&xtx[b][col].abs())
-                .unwrap()
-        })?;
+        let piv = (col..k).max_by(|&a, &b| xtx[a][col].abs().total_cmp(&xtx[b][col].abs()))?;
         if xtx[piv][col].abs() < 1e-12 {
             return None;
         }
@@ -172,7 +167,7 @@ pub fn fit_latency_model(xs: &[f64], ys: &[f64]) -> Option<LatencyModel> {
     ]
     .into_iter()
     .filter_map(|k| fit_basis(k, xs, ys))
-    .min_by(|a, b| a.rss.partial_cmp(&b.rss).unwrap())
+    .min_by(|a, b| a.rss.total_cmp(&b.rss))
 }
 
 #[cfg(test)]

@@ -84,7 +84,7 @@ impl LatencyTracker {
             return 0.0;
         }
         let mut sorted = self.q_samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let rank = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
         sorted[rank.min(sorted.len() - 1)]
     }

@@ -3,14 +3,16 @@
 //! of ground-truth complex events missed.  Also counts false positives
 //! (which must be zero for the white-box shedders).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::operator::ComplexEvent;
 
 /// Shedding-invariant identity of a complex event: the completing
 /// event's sequence number is excluded (different shedding decisions
-/// may complete the same logical match on a different event).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// may complete the same logical match on a different event).  Ordered
+/// so the truth/detected sets iterate deterministically (the audit's
+/// no-hash-iteration rule for result-affecting modules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CeKey {
     /// query index
     pub query: usize,
@@ -36,9 +38,9 @@ pub struct QorAccounting {
     /// per-query weights `w_q`
     pub weights: Vec<f64>,
     /// ground-truth complex events
-    pub truth: HashSet<CeKey>,
+    pub truth: BTreeSet<CeKey>,
     /// detected complex events
-    pub detected: HashSet<CeKey>,
+    pub detected: BTreeSet<CeKey>,
     /// only count events whose window opened at/after this seq
     /// (excludes the calibration warm-up region)
     pub from_seq: u64,
@@ -49,8 +51,8 @@ impl QorAccounting {
     pub fn new(weights: Vec<f64>, from_seq: u64) -> Self {
         QorAccounting {
             weights,
-            truth: HashSet::new(),
-            detected: HashSet::new(),
+            truth: BTreeSet::new(),
+            detected: BTreeSet::new(),
             from_seq,
         }
     }

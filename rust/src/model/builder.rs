@@ -107,7 +107,7 @@ impl ModelBuilder {
                 && view.ws.len() == view.weights.len(),
             "training view shape mismatch"
         );
-        let start = std::time::Instant::now();
+        let timer = crate::sim::WallTimer::start();
         // one shared bin count so all queries batch into one engine call
         let max_ws = *view.ws.iter().max().expect("at least one query");
         let bs = (max_ws as f64 / self.cfg.max_bins as f64).ceil().max(1.0) as u64;
@@ -129,7 +129,7 @@ impl ModelBuilder {
             .zip(view.weights)
             .map(|(tab, &w)| UtilityTable::from_tables(tab, w, bs, self.cfg.use_tau))
             .collect();
-        self.last_build_secs = start.elapsed().as_secs_f64();
+        self.last_build_secs = timer.elapsed_secs();
         log::debug!(
             "model build: {} queries, bs={bs}, nbins={nbins}, {:.3}s via {}",
             view.weights.len(),

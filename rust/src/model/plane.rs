@@ -57,7 +57,7 @@
 //! assert_eq!(op.table_epoch(), 0);
 //! ```
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::events::Event;
@@ -216,7 +216,7 @@ impl UtilityModel for FrequencyModel {
                 && view.ws.len() == view.weights.len(),
             "training view shape mismatch"
         );
-        let start = std::time::Instant::now();
+        let timer = crate::sim::WallTimer::start();
         let mut out = Vec::with_capacity(view.hub.queries.len());
         for (qs, (&ws, &w)) in view
             .hub
@@ -251,7 +251,7 @@ impl UtilityModel for FrequencyModel {
                 rows: vec![row],
             });
         }
-        self.last_train_secs = start.elapsed().as_secs_f64();
+        self.last_train_secs = timer.elapsed_secs();
         Ok(out)
     }
 
@@ -271,7 +271,11 @@ impl UtilityModel for FrequencyModel {
 #[derive(Debug, Clone, Default)]
 pub struct KeyUtilityTable {
     slot: usize,
-    utilities: HashMap<i64, f64>,
+    // ordered map: lookups are point reads, but the determinism audit
+    // bans hash containers from result-affecting modules outright —
+    // the table is tiny (pattern-referenced key values), so the
+    // O(log n) read costs nothing measurable
+    utilities: BTreeMap<i64, f64>,
 }
 
 impl KeyUtilityTable {
@@ -280,7 +284,7 @@ impl KeyUtilityTable {
     /// event type receives a higher utility proportional to its
     /// repetition in patterns and in windows").
     pub fn from_compiled(key_slot: usize, queries: &[CompiledQuery]) -> Self {
-        let mut utilities: HashMap<i64, f64> = HashMap::new();
+        let mut utilities: BTreeMap<i64, f64> = BTreeMap::new();
         let mut bump = |preds: &[Predicate]| {
             for p in preds {
                 match p {

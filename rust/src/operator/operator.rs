@@ -14,7 +14,6 @@
 //! for tests and QoR accounting so the equivalence stays checkable.
 
 use std::cmp::Ordering;
-use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::events::{DropMask, Event};
@@ -412,6 +411,7 @@ impl Operator {
     /// [`Operator::process_event`] — callers reuse one
     /// [`ProcessOutcome`] (see [`ProcessOutcome::reset`]) across a
     /// whole batch so the per-event hot path never touches the heap.
+    // audit: no-alloc
     pub fn process_event_into(&mut self, e: &Event, out: &mut ProcessOutcome) {
         out.cost_ns += self.cost.base_event_ns;
         // rate estimate for time-window R_w
@@ -726,6 +726,7 @@ impl Operator {
     /// must be grouped by window — sorted by `(query, open_seq)` — so
     /// each affected window is rewritten exactly once.  Returns how
     /// many PMs were dropped.
+    // audit: no-alloc
     pub fn drop_cells(&mut self, takes: &[CellTake]) -> usize {
         debug_assert!(
             takes
@@ -772,13 +773,16 @@ impl Operator {
         dropped
     }
 
-    /// Drop the PMs whose ids are in `ids`.  Returns how many were
+    /// Drop the PMs whose ids are in `ids` (must be sorted ascending —
+    /// membership is a binary search, keeping this module free of hash
+    /// containers per the determinism audit).  Returns how many were
     /// actually removed.
-    pub fn drop_pms(&mut self, ids: &HashSet<u64>) -> usize {
+    pub fn drop_pms(&mut self, ids: &[u64]) -> usize {
+        debug_assert!(ids.windows(2).all(|p| p[0] <= p[1]), "drop_pms ids must be sorted");
         let mut dropped = 0;
         for qw in &mut self.wins {
             for w in &mut qw.windows {
-                dropped += w.retain_pms(|pm| !ids.contains(&pm.id));
+                dropped += w.retain_pms(|pm| ids.binary_search(&pm.id).is_err());
             }
         }
         self.n_pms -= dropped;
@@ -844,6 +848,7 @@ impl Operator {
     /// `(utility, query, open_seq, state, window position)`, with a
     /// NaN-safe twist: a poisoned (NaN) utility sorts above every
     /// number, so such PMs are treated as high-utility and survive.
+    // audit: no-alloc
     pub fn shed_lowest(&mut self, rho: usize) -> ShedOutcome {
         let n = self.n_pms;
         let mut out = ShedOutcome {
@@ -1138,7 +1143,9 @@ mod tests {
         let mut refs = Vec::new();
         op.pm_refs(&mut refs);
         assert_eq!(refs.len(), op.pm_count());
-        let victim: HashSet<u64> = refs.iter().take(5).map(|r| r.pm_id).collect();
+        let mut victim: Vec<u64> = refs.iter().take(5).map(|r| r.pm_id).collect();
+        victim.sort_unstable();
+        victim.dedup();
         let dropped = op.drop_pms(&victim);
         assert_eq!(dropped, victim.len().min(refs.len()));
     }
@@ -1325,7 +1332,7 @@ mod tests {
         let mut refs = Vec::new();
         op.pm_refs(&mut refs);
         let mut utils: Vec<f64> = refs.iter().map(|r| utility(&op, r)).collect();
-        utils.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        utils.sort_by(|a, b| a.total_cmp(b));
         let rho = 8;
         let threshold = utils[rho - 1];
         op.shed_lowest(rho);

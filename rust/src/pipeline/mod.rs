@@ -736,6 +736,8 @@ impl Pipeline {
     /// the batch makespan.  Returns the complex events detected.
     pub fn feed(&mut self, events: &[Event]) -> crate::Result<Vec<ComplexEvent>> {
         self.start();
+        // audit:allow(wall-clock): wall throughput instrumentation only — feeds
+        // wall_secs in the run report, never the virtual timeline
         let wall_start = Instant::now();
         let mut ces = Vec::new();
         for chunk in events.chunks(self.dispatch) {
@@ -840,6 +842,8 @@ impl Pipeline {
             .take()
             .ok_or_else(|| anyhow::anyhow!("run_realtime needs an .ingest_source(..)"))?;
         self.start();
+        // audit:allow(wall-clock): wall throughput instrumentation only — the
+        // real-time loop's timeline comes from self.clock, not this stopwatch
         let wall_start = Instant::now();
         let mut completions = Vec::new();
         let mut batch_events: Vec<Event> = Vec::with_capacity(self.dispatch);

@@ -552,6 +552,9 @@ impl ShardedOperator {
         let handle = std::thread::Builder::new()
             .name(format!("pspice-shard-{s}"))
             .spawn(move || worker::run(s, req_rx, resp_tx, local, l2g, faults, dispatch_offset))
+            // audit:allow(panic): OS thread-spawn failure is a resource
+            // exhaustion at construction time, not a worker fault the
+            // supervision loop could degrade into a ShardFailure
             .expect("spawn shard worker");
         (req_tx, resp_rx, handle)
     }
@@ -1184,6 +1187,7 @@ impl ShardedOperator {
         total
     }
 
+    // audit: no-alloc
     fn dispatch_into(
         &mut self,
         events: &[Event],
@@ -1200,6 +1204,8 @@ impl ShardedOperator {
         let batch = if self.pooling {
             self.pool.lease_with(|b| b.refill(events))
         } else {
+            // audit:allow(alloc): pooling-off baseline path — exists to
+            // measure exactly this allocation against the pooled path
             Arc::new(EventBatch::copied(events))
         };
         let types = batch.types();
@@ -1208,6 +1214,8 @@ impl ShardedOperator {
             if self.pooling {
                 self.masks.lease_with(|p| p.copy_from(m))
             } else {
+                // audit:allow(alloc): pooling-off baseline path, same
+                // rationale as the batch buffer above
                 Arc::new(m.clone())
             }
         });

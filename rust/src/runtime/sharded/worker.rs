@@ -332,6 +332,8 @@ impl WorkerState {
             }
             match f.kind {
                 FaultKind::Kill => {
+                    // audit:allow(panic): deliberate chaos-injection crash —
+                    // the supervision loop under test must absorb it
                     panic!("injected kill at dispatch {}", self.dispatches)
                 }
                 FaultKind::Delay(ms) => {
@@ -470,6 +472,7 @@ impl WorkerState {
                     // die between the Candidates harvest and the drop:
                     // the coordinator already merged victims, but no
                     // take lands on this shard
+                    // audit:allow(panic): deliberate chaos-injection crash
                     panic!(
                         "injected shed-kill after dispatch {} (before applying takes)",
                         self.dispatches
@@ -554,6 +557,8 @@ impl WorkerState {
                     journal,
                 }
             }
+            // audit:allow(panic): the run loop matches Shutdown before
+            // calling handle(), so this arm is statically dead
             Request::Shutdown => unreachable!("Shutdown is handled by the loop"),
         })
     }

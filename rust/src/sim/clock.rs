@@ -44,6 +44,35 @@ pub trait Clock: Send {
     }
 }
 
+/// Instrumentation-only wall-clock stopwatch.
+///
+/// The clock-discipline rule (enforced by `pallas-audit`) is that
+/// `Instant::now` appears nowhere outside this module: *measured* time
+/// that shapes results must flow through a [`Clock`], and pure
+/// instrumentation — model-build wall time (Fig. 9b), wall throughput
+/// of a finished run — must be visibly segregated from it.  `WallTimer`
+/// is that segregation: a reading that can be *reported* but never fed
+/// back into virtual-clock accounting, because nothing converts it to a
+/// timeline position.
+#[derive(Debug, Clone, Copy)]
+pub struct WallTimer {
+    started: Instant,
+}
+
+impl WallTimer {
+    /// Start a stopwatch at the current instant.
+    pub fn start() -> Self {
+        WallTimer {
+            started: Instant::now(),
+        }
+    }
+
+    /// Real seconds elapsed since [`WallTimer::start`].
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
 /// Virtual clock (nanoseconds).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SimClock {

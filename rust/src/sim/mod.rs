@@ -17,5 +17,5 @@
 pub mod clock;
 pub mod source;
 
-pub use clock::{Clock, SimClock, WallClock};
+pub use clock::{Clock, SimClock, WallClock, WallTimer};
 pub use source::RateSource;

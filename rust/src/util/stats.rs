@@ -102,7 +102,7 @@ pub struct Summary {
 /// Percentile of a (will be sorted) sample, `q` in `[0, 1]`.
 pub fn percentile(xs: &mut [f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     let pos = q.clamp(0.0, 1.0) * (xs.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

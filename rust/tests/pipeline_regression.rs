@@ -157,7 +157,8 @@ fn legacy_run(cfg: &ExperimentConfig) -> LegacyResult {
                             .then_with(|| a.4.cmp(&b.4))
                     });
                 }
-                let ids: HashSet<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+                let mut ids: Vec<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+                ids.sort_unstable();
                 // the engine prices the decision scan per *cell* (the
                 // distinct (query, window, state) triples with live
                 // PMs), while g() still regresses on the PM population

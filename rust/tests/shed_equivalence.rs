@@ -8,7 +8,6 @@
 //! downstream.  The same must hold between the single-threaded
 //! `Operator` and the `ShardedOperator`'s k-way cell merge.
 
-use std::collections::HashSet;
 
 use pspice::datasets::{mixed_queries, mixed_trace, BusGen, StockGen};
 use pspice::events::{DropMask, Event, EventStream};
@@ -76,7 +75,8 @@ fn reference_shed_lowest(op: &mut Operator, tables: &[UtilityTable], rho: usize)
             .then_with(|| a.3.cmp(&b.3))
             .then_with(|| a.4.cmp(&b.4))
     });
-    let ids: HashSet<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+    let mut ids: Vec<u64> = keyed[..rho].iter().map(|k| k.5).collect();
+    ids.sort_unstable();
     op.drop_pms(&ids)
 }
 

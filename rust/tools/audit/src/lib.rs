@@ -1,0 +1,1026 @@
+//! `pallas-audit`: token-level static auditor for the pSPICE
+//! reproduction's invariant catalog.
+//!
+//! The pipeline's headline guarantee is *bit-exact determinism*: the
+//! same trace and seed produce byte-identical results across shard
+//! counts, recovery paths, and machines.  That property is enforced by
+//! regression pins (`pipeline_regression`, `shed_equivalence`, the
+//! chaos zero-fault pins), but a pin only fires *after* someone writes
+//! the nondeterminism and lands it.  This tool rejects the usual
+//! sources lexically, before a test ever runs:
+//!
+//! * **det-hash** — `HashMap`/`HashSet` anywhere in a result-affecting
+//!   module.  Hash iteration order is seeded per-process; one
+//!   `for (k, v) in map` in a shedding decision silently breaks
+//!   equivalence.  Ordered containers (`BTreeMap`/`BTreeSet`) or sorted
+//!   slices are the sanctioned replacements.
+//! * **det-float-ord** — `partial_cmp` in a result-affecting module.
+//!   Float comparisons must use `total_cmp` (NaN-safe total order);
+//!   `partial_cmp().unwrap()` panics on NaN and
+//!   `unwrap_or(Equal)` makes sort order depend on the sort algorithm.
+//! * **det-rand** — unseeded randomness (`thread_rng`, `RandomState`,
+//!   `from_entropy`) in a result-affecting module.
+//! * **clock-wall** — `Instant::now`/`SystemTime` outside
+//!   `sim/clock.rs`.  Wall time must flow through the `Clock` plane;
+//!   instrumentation-only reads use `sim::WallTimer` or carry an
+//!   annotation (below).
+//! * **panic-path** — `unwrap`/`expect`/`panic!`/`unreachable!`/
+//!   `todo!`/`unimplemented!` in non-test `runtime/sharded/` code.  The
+//!   sharded coordinator must degrade worker faults into
+//!   `ShardFailure`s; a panic on the supervision path kills the whole
+//!   pipeline.
+//! * **alloc-hot** — allocating constructors (`Vec::new`, `collect`,
+//!   `format!`, …) inside a function marked `// audit: no-alloc`.  The
+//!   markers sit on the per-event and shedding hot paths whose
+//!   allocation-freedom the overhead benchmarks assume.
+//!
+//! Deliberate exceptions are annotated in source:
+//!
+//! ```text
+//! // audit:allow(wall-clock): wall throughput instrumentation only
+//! let wall_start = Instant::now();
+//! ```
+//!
+//! An allow covers the same line or sits in the contiguous comment
+//! block directly above the flagged line, and **must** carry a reason
+//! after the colon — a bare `audit:allow(key)` is itself reported as
+//! `bad-suppression`.  Allow keys: `hash-iter`, `float-ord`, `rand`,
+//! `wall-clock`, `panic`, `alloc`.
+//!
+//! The scan is lexical on purpose: no `syn`, no rustc plumbing, zero
+//! dependencies, so it runs in the offline image and in CI in
+//! milliseconds.  Comments and literal contents are stripped first,
+//! `#[cfg(test)]` regions are skipped by brace matching, and tokens
+//! match on identifier boundaries — so a mention of `HashMap` in a doc
+//! comment or a string is never a finding.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Result-affecting module prefixes (relative to the source root):
+/// everything here feeds the bit-exact pipeline results.
+const RESULT_SCOPES: &[&str] = &[
+    "operator/",
+    "windows/",
+    "shedding/",
+    "model/",
+    "nfa/",
+    "runtime/sharded/",
+];
+
+/// Individual result-affecting files outside the scoped directories.
+const RESULT_FILES: &[&str] = &["metrics/qor.rs"];
+
+/// The one place wall-clock reads are legitimate: the `Clock` plane.
+const CLOCK_EXEMPT: &[&str] = &["sim/clock.rs"];
+
+/// Panic-free scope: the sharded supervision/worker paths.
+const PANIC_SCOPE: &[&str] = &["runtime/sharded/"];
+
+const HASH_TOKENS: &[&str] = &["HashMap", "HashSet"];
+const RAND_TOKENS: &[&str] = &["thread_rng", "RandomState", "from_entropy"];
+const PANIC_TOKENS: &[&str] = &[
+    "unwrap",
+    "expect",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "VecDeque::new",
+    "String::new",
+    "String::from",
+    "Box::new",
+    "Arc::new",
+    "Rc::new",
+    "HashMap::new",
+    "HashSet::new",
+    "BTreeMap::new",
+    "BTreeSet::new",
+    "with_capacity",
+    "to_vec",
+    "to_string",
+    "to_owned",
+    "collect",
+    "vec!",
+    "format!",
+];
+
+/// Alloc tokens that are method-ish names: only flagged when invoked
+/// (followed by `(`) or turbofished (followed by `:`), so a field
+/// named `collect` or a doc mention never fires.
+const ALLOC_CALL_ONLY: &[&str] = &["collect", "with_capacity", "to_vec", "to_string", "to_owned"];
+
+/// The lint catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lint {
+    /// Hash container in a result-affecting module.
+    DetHash,
+    /// `partial_cmp` in a result-affecting module.
+    DetFloatOrd,
+    /// Unseeded randomness in a result-affecting module.
+    DetRand,
+    /// Wall-clock read outside the `Clock` plane.
+    ClockWall,
+    /// Panicking call on a sharded supervision path.
+    PanicPath,
+    /// Allocation inside an `audit: no-alloc` function.
+    AllocHot,
+    /// `audit:allow(..)` without a written reason.
+    BadSuppression,
+}
+
+impl Lint {
+    /// Stable lint id (used in JSON output and baseline keys).
+    pub fn id(self) -> &'static str {
+        match self {
+            Lint::DetHash => "det-hash",
+            Lint::DetFloatOrd => "det-float-ord",
+            Lint::DetRand => "det-rand",
+            Lint::ClockWall => "clock-wall",
+            Lint::PanicPath => "panic-path",
+            Lint::AllocHot => "alloc-hot",
+            Lint::BadSuppression => "bad-suppression",
+        }
+    }
+
+    /// The `audit:allow(<key>)` key that suppresses this lint.
+    pub fn allow_key(self) -> &'static str {
+        match self {
+            Lint::DetHash => "hash-iter",
+            Lint::DetFloatOrd => "float-ord",
+            Lint::DetRand => "rand",
+            Lint::ClockWall => "wall-clock",
+            Lint::PanicPath => "panic",
+            Lint::AllocHot => "alloc",
+            Lint::BadSuppression => "",
+        }
+    }
+
+    fn rationale(self) -> &'static str {
+        match self {
+            Lint::DetHash => {
+                "in a result-affecting module: hash iteration order is nondeterministic"
+            }
+            Lint::DetFloatOrd => {
+                "in a result-affecting module: float ordering must use total_cmp"
+            }
+            Lint::DetRand => "unseeded randomness in a result-affecting module",
+            Lint::ClockWall => {
+                "outside sim/clock.rs: wall time must flow through the Clock plane"
+            }
+            Lint::PanicPath => {
+                "on a sharded coordinator/worker path: must degrade to ShardFailure, never panic"
+            }
+            Lint::AllocHot => "inside an `audit: no-alloc` function",
+            Lint::BadSuppression => "",
+        }
+    }
+}
+
+/// One audit finding, anchored to a file and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which lint fired.
+    pub lint: Lint,
+    /// Human-readable rationale.
+    pub message: String,
+}
+
+impl Finding {
+    /// Baseline key: line numbers drift with unrelated edits, so
+    /// suppression keys are `file:lint` only.
+    pub fn key(&self) -> String {
+        format!("{}:{}", self.file, self.lint.id())
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.lint.id(),
+            self.message
+        )
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split `source` into parallel per-line `(code, comments)` vectors:
+/// `code` has comments and the *contents* of string/char literals
+/// blanked to spaces (delimiters kept), `comments` collects comment
+/// text per line.  Column positions in `code` line up with the source.
+fn strip(source: &str) -> (Vec<String>, Vec<String>) {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        Block,
+        Str,
+        RawStr,
+        Chr,
+    }
+    let cs: Vec<char> = source.chars().collect();
+    let n = cs.len();
+    let mut code: Vec<String> = Vec::new();
+    let mut comments: Vec<String> = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut mode = Mode::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    macro_rules! endline {
+        () => {{
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_comment));
+        }};
+    }
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            endline!();
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    // line comment: consume to EOL into the comment buffer
+                    let mut j = i;
+                    while j < n && cs[j] != '\n' {
+                        j += 1;
+                    }
+                    cur_comment.extend(&cs[i..j]);
+                    cur_code.extend(std::iter::repeat(' ').take(j - i));
+                    i = j;
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    mode = Mode::Block;
+                    block_depth = 1;
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    cur_code.push('"');
+                    i += 1;
+                } else if c == 'r' && (i == 0 || !is_ident(cs[i - 1])) {
+                    // raw string r"..." or r#"..."#
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        mode = Mode::RawStr;
+                        raw_hashes = h;
+                        cur_code.extend(std::iter::repeat(' ').take(j - i + 1));
+                        i = j + 1;
+                    } else {
+                        cur_code.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b'
+                    && i + 1 < n
+                    && cs[i + 1] == '"'
+                    && (i == 0 || !is_ident(cs[i - 1]))
+                {
+                    mode = Mode::Str;
+                    cur_code.push_str(" \"");
+                    i += 2;
+                } else if c == '\'' {
+                    // char literal vs. lifetime
+                    if i + 1 < n && cs[i + 1] == '\\' {
+                        mode = Mode::Chr;
+                        cur_code.push('\'');
+                        i += 1;
+                    } else if i + 2 < n && cs[i + 2] == '\'' {
+                        cur_code.push_str("'x'");
+                        i += 3;
+                    } else {
+                        cur_code.push('\''); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block => {
+                if c == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    block_depth -= 1;
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Code;
+                    }
+                    cur_code.push_str("  ");
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    block_depth += 1;
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    cur_code.push_str("  ");
+                    i += 2;
+                    // an escaped newline ends the physical line
+                    if i >= 1 && i - 1 < n && cs[i - 1] == '\n' {
+                        endline!();
+                    }
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    cur_code.push('"');
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        mode = Mode::Code;
+                        cur_code.extend(std::iter::repeat(' ').take(j - i));
+                        i = j;
+                    } else {
+                        cur_code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Chr => {
+                if c == '\\' {
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    cur_code.push('\'');
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    endline!();
+    (code, comments)
+}
+
+/// Byte offsets in `line` where `tok` occurs on identifier boundaries.
+/// Macro tokens (trailing `!`) must be followed by the bang.
+fn find_token(line: &str, tok: &str) -> Vec<usize> {
+    let bare = tok.trim_end_matches('!');
+    let is_macro = tok.ends_with('!');
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = line[start..].find(bare) {
+        let k = start + off;
+        start = k + 1;
+        let before_ok = k == 0 || !is_ident_byte(bytes[k - 1]);
+        let after = k + bare.len();
+        if is_macro {
+            if before_ok && after < bytes.len() && bytes[after] == b'!' {
+                out.push(k);
+            }
+            continue;
+        }
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// Match braces in `text` starting at the `{` at byte `open`; returns
+/// the byte offset of the closing `}` (or end of text).
+fn match_braces(text: &str, open: usize) -> usize {
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+fn line_of(text: &str, byte: usize) -> usize {
+    text.as_bytes()[..byte.min(text.len())]
+        .iter()
+        .filter(|&&b| b == b'\n')
+        .count()
+}
+
+/// 0-based inclusive line ranges covered by `#[cfg(test)]` items.
+fn test_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let text = code.join("\n");
+    let mut regions = Vec::new();
+    let mut idx = 0usize;
+    while let Some(off) = text[idx..].find("#[cfg(test)]") {
+        let k = idx + off;
+        match text[k..].find('{') {
+            Some(boff) => {
+                let b = k + boff;
+                let j = match_braces(&text, b);
+                regions.push((line_of(&text, k), line_of(&text, j)));
+                idx = j.max(k + 1);
+            }
+            None => break,
+        }
+    }
+    regions
+}
+
+fn in_regions(line_idx: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= line_idx && line_idx <= b)
+}
+
+/// Body line ranges (0-based inclusive) of functions marked with an
+/// `// audit: no-alloc` comment: the marker binds to the next `fn`.
+fn noalloc_regions(code: &[String], comments: &[String]) -> Vec<(usize, usize)> {
+    let text = code.join("\n");
+    let mut line_start = Vec::with_capacity(code.len() + 1);
+    line_start.push(0usize);
+    for l in code {
+        line_start.push(line_start.last().unwrap() + l.len() + 1);
+    }
+    let mut out = Vec::new();
+    for (i, cm) in comments.iter().enumerate() {
+        if !cm.contains("audit: no-alloc") {
+            continue;
+        }
+        // first `fn` token at or after the marker line
+        let mut pos = line_start[i];
+        let mut fn_at = None;
+        while let Some(off) = text[pos..].find("fn") {
+            let k = pos + off;
+            let bytes = text.as_bytes();
+            let before_ok = k == 0 || !is_ident_byte(bytes[k - 1]);
+            let after_ok = k + 2 >= bytes.len() || !is_ident_byte(bytes[k + 2]);
+            if before_ok && after_ok {
+                fn_at = Some(k);
+                break;
+            }
+            pos = k + 1;
+        }
+        let Some(k) = fn_at else { continue };
+        let Some(boff) = text[k..].find('{') else { continue };
+        let b = k + boff;
+        let j = match_braces(&text, b);
+        out.push((line_of(&text, b), line_of(&text, j)));
+    }
+    out
+}
+
+/// Does an `audit:allow(<key>)` cover line `line_idx` — on the same
+/// line or in the contiguous comment block directly above?  Returns
+/// `(found, has_reason)`.
+fn allows(code: &[String], comments: &[String], line_idx: usize, key: &str) -> (bool, bool) {
+    let marker = format!("audit:allow({key})");
+    let check = |li: usize| -> Option<bool> {
+        let cm = &comments[li];
+        let k = cm.find(&marker)?;
+        let rest = cm[k + marker.len()..].trim_start();
+        Some(rest.starts_with(':') && !rest[1..].trim().is_empty())
+    };
+    if let Some(r) = check(line_idx) {
+        return (true, r);
+    }
+    let mut li = line_idx;
+    // walk up through comment-only lines (blank code, non-empty comment)
+    while li > 0 {
+        li -= 1;
+        if !code[li].trim().is_empty() || comments[li].trim().is_empty() {
+            break;
+        }
+        if let Some(r) = check(li) {
+            return (true, r);
+        }
+    }
+    (false, false)
+}
+
+/// Scan one file's source.  `rel` is the `/`-separated path relative to
+/// the source root (it selects which scopes apply).
+pub fn scan_source(rel: &str, source: &str) -> Vec<Finding> {
+    let (code, comments) = strip(source);
+    debug_assert_eq!(code.len(), comments.len());
+    let tests = test_regions(&code);
+    let mut findings = Vec::new();
+
+    let emit = |lint: Lint, i: usize, tok: &str, findings: &mut Vec<Finding>| {
+        if in_regions(i, &tests) {
+            return;
+        }
+        let (found, reasoned) = allows(&code, &comments, i, lint.allow_key());
+        if found && reasoned {
+            return;
+        }
+        if found {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                lint: Lint::BadSuppression,
+                message: format!("audit:allow({}) without a written reason", lint.allow_key()),
+            });
+            return;
+        }
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: i + 1,
+            lint,
+            message: format!("`{tok}` {}", lint.rationale()),
+        });
+    };
+
+    let in_result =
+        RESULT_SCOPES.iter().any(|s| rel.starts_with(s)) || RESULT_FILES.contains(&rel);
+    let in_panic = PANIC_SCOPE.iter().any(|s| rel.starts_with(s));
+    let clock_exempt = CLOCK_EXEMPT.contains(&rel);
+
+    for (i, line) in code.iter().enumerate() {
+        if in_result {
+            for tok in HASH_TOKENS {
+                for _ in find_token(line, tok) {
+                    emit(Lint::DetHash, i, tok, &mut findings);
+                }
+            }
+            for _ in find_token(line, "partial_cmp") {
+                emit(Lint::DetFloatOrd, i, "partial_cmp", &mut findings);
+            }
+            for tok in RAND_TOKENS {
+                for _ in find_token(line, tok) {
+                    emit(Lint::DetRand, i, tok, &mut findings);
+                }
+            }
+        }
+        if !clock_exempt {
+            for k in find_token(line, "now") {
+                if line[..k].trim_end().ends_with("Instant::") {
+                    emit(Lint::ClockWall, i, "Instant::now", &mut findings);
+                }
+            }
+            for _ in find_token(line, "SystemTime") {
+                emit(Lint::ClockWall, i, "SystemTime", &mut findings);
+            }
+        }
+        if in_panic {
+            for tok in PANIC_TOKENS {
+                for k in find_token(line, tok) {
+                    if tok.ends_with('!') {
+                        emit(Lint::PanicPath, i, tok, &mut findings);
+                    } else {
+                        // bare unwrap/expect only as a call
+                        let after = k + tok.len();
+                        if line.as_bytes().get(after) == Some(&b'(') {
+                            emit(Lint::PanicPath, i, tok, &mut findings);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    for (a, b) in noalloc_regions(&code, &comments) {
+        for i in a..=b.min(code.len().saturating_sub(1)) {
+            if in_regions(i, &tests) {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                for k in find_token(&code[i], tok) {
+                    if ALLOC_CALL_ONLY.contains(tok) {
+                        let after = k + tok.len();
+                        match code[i].as_bytes().get(after) {
+                            Some(&b'(') | Some(&b':') => {}
+                            _ => continue,
+                        }
+                    }
+                    emit(Lint::AllocHot, i, tok, &mut findings);
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+/// Scan every `.rs` file under `root` (sorted walk, so output order is
+/// stable across machines).  Returns findings sorted by
+/// `(file, line, lint)`.
+pub fn scan_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = fs::read_to_string(p)?;
+        findings.extend(scan_source(&rel, &source));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint.id()).cmp(&(b.file.as_str(), b.line, b.lint.id()))
+    });
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Drop findings whose `file:lint` key appears in the baseline.  The
+/// committed baseline is required to be empty (ISSUE/CI policy); the
+/// mechanism exists so a future migration can land incrementally
+/// without weakening the gate for everything else.
+pub fn apply_baseline(findings: Vec<Finding>, baseline: &[String]) -> Vec<Finding> {
+    findings
+        .into_iter()
+        .filter(|f| !baseline.iter().any(|k| *k == f.key()))
+        .collect()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable report: `{"count": N, "findings": [...]}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"count\": {},\n", findings.len()));
+    out.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"lint\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.lint.id(),
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+/// Parse a baseline file: a JSON array of `"file:lint"` strings (the
+/// only JSON this zero-dependency tool needs to read).
+pub fn parse_baseline(text: &str) -> Result<Vec<String>, String> {
+    let t = text.trim();
+    let inner = t
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| "baseline must be a JSON array of strings".to_string())?;
+    let mut out = Vec::new();
+    let cs: Vec<char> = inner.chars().collect();
+    let mut i = 0usize;
+    loop {
+        while i < cs.len() && (cs[i].is_whitespace() || cs[i] == ',') {
+            i += 1;
+        }
+        if i >= cs.len() {
+            break;
+        }
+        if cs[i] != '"' {
+            return Err(format!("unexpected character {:?} in baseline", cs[i]));
+        }
+        i += 1;
+        let mut s = String::new();
+        while i < cs.len() && cs[i] != '"' {
+            if cs[i] == '\\' && i + 1 < cs.len() {
+                i += 1;
+                match cs[i] {
+                    'n' => s.push('\n'),
+                    't' => s.push('\t'),
+                    c => s.push(c),
+                }
+            } else {
+                s.push(cs[i]);
+            }
+            i += 1;
+        }
+        if i >= cs.len() {
+            return Err("unterminated string in baseline".to_string());
+        }
+        i += 1; // closing quote
+        out.push(s);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lints(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.lint.id()).collect()
+    }
+
+    #[test]
+    fn det_hash_fires_only_in_result_scope() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let in_scope = scan_source("operator/foo.rs", src);
+        assert!(in_scope.iter().all(|f| f.lint == Lint::DetHash));
+        assert_eq!(in_scope.len(), 3, "import + type + ctor all flagged");
+        assert_eq!(in_scope[0].line, 1);
+        let out_of_scope = scan_source("util/foo.rs", src);
+        assert!(out_of_scope.is_empty(), "util/ is not a result scope");
+    }
+
+    #[test]
+    fn qor_rs_is_a_result_file() {
+        let src = "use std::collections::HashSet;\n";
+        assert_eq!(lints(&scan_source("metrics/qor.rs", src)), ["det-hash"]);
+        assert!(scan_source("metrics/latency.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_ord_flags_partial_cmp() {
+        let src = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        assert_eq!(lints(&scan_source("model/foo.rs", src)), ["det-float-ord"]);
+        let ok = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert!(scan_source("model/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn rand_tokens_flagged_in_scope() {
+        let src = "fn f() { let r = thread_rng(); }\n";
+        assert_eq!(lints(&scan_source("shedding/foo.rs", src)), ["det-rand"]);
+    }
+
+    #[test]
+    fn clock_wall_everywhere_but_the_clock_plane() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(lints(&scan_source("harness/foo.rs", src)), ["clock-wall"]);
+        assert!(scan_source("sim/clock.rs", src).is_empty());
+        let st = "fn f() { let t = std::time::SystemTime::now(); }\n";
+        assert_eq!(lints(&scan_source("harness/foo.rs", st)), ["clock-wall"]);
+    }
+
+    #[test]
+    fn instant_now_split_across_whitespace_still_caught() {
+        let src = "fn f() { let t = Instant::  now(); }\n";
+        assert_eq!(lints(&scan_source("harness/foo.rs", src)), ["clock-wall"]);
+        // a method named now() on something else is not a wall read
+        let other = "fn f(c: &C) { let t = c.now(); }\n";
+        assert!(scan_source("harness/foo.rs", other).is_empty());
+    }
+
+    #[test]
+    fn panic_path_only_in_sharded_runtime() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(lints(&scan_source("runtime/sharded/foo.rs", src)), ["panic-path"]);
+        assert!(scan_source("operator/foo.rs", src).is_empty());
+        let mac = "fn f() { unreachable!(\"nope\") }\n";
+        assert_eq!(lints(&scan_source("runtime/sharded/foo.rs", mac)), ["panic-path"]);
+    }
+
+    #[test]
+    fn unwrap_without_call_parens_is_not_flagged() {
+        // e.g. unwrap_or_default, a field called unwrap, docs
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or_default() }\n";
+        assert!(scan_source("runtime/sharded/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "\
+fn live() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use std::collections::HashMap;\n\
+    #[test]\n\
+    fn t() { let _ = std::time::Instant::now(); }\n\
+}\n";
+        assert!(scan_source("operator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "\
+// HashMap iteration would be bad here; Instant::now too\n\
+/* block comment: partial_cmp */\n\
+fn f() -> &'static str { \"HashMap Instant::now partial_cmp\" }\n";
+        assert!(scan_source("operator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn identifier_boundaries_respected() {
+        // MyHashMapLike / hash_map_ish must not match
+        let src = "struct MyHashMapLike; fn f(x: MyHashMapLike) {}\n";
+        assert!(scan_source("operator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "\
+fn f() {\n\
+    // audit:allow(wall-clock): instrumentation only\n\
+    let t = std::time::Instant::now();\n\
+}\n";
+        assert!(scan_source("harness/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_in_wrapped_comment_block_suppresses() {
+        let src = "\
+fn f() {\n\
+    // audit:allow(wall-clock): a long reason that wraps\n\
+    // onto a second comment line before the code\n\
+    let t = std::time::Instant::now();\n\
+}\n";
+        assert!(scan_source("harness/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_bad_suppression() {
+        let src = "\
+fn f() {\n\
+    // audit:allow(wall-clock)\n\
+    let t = std::time::Instant::now();\n\
+}\n";
+        assert_eq!(lints(&scan_source("harness/foo.rs", src)), ["bad-suppression"]);
+    }
+
+    #[test]
+    fn allow_for_the_wrong_key_does_not_suppress() {
+        let src = "\
+fn f() {\n\
+    // audit:allow(panic): wrong key\n\
+    let t = std::time::Instant::now();\n\
+}\n";
+        assert_eq!(lints(&scan_source("harness/foo.rs", src)), ["clock-wall"]);
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_code_lines() {
+        let src = "\
+fn f() {\n\
+    // audit:allow(wall-clock): covers only the next line\n\
+    let a = std::time::Instant::now();\n\
+    let b = std::time::Instant::now();\n\
+}\n";
+        let f = scan_source("harness/foo.rs", src);
+        assert_eq!(lints(&f), ["clock-wall"]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn no_alloc_marker_bans_allocation_in_the_fn_body() {
+        let src = "\
+// audit: no-alloc\n\
+fn hot(xs: &[u32], out: &mut Vec<u32>) {\n\
+    let v: Vec<u32> = xs.iter().copied().collect();\n\
+    out.push(v.len() as u32);\n\
+}\n\
+fn cold(xs: &[u32]) -> Vec<u32> { xs.to_vec() }\n";
+        let f = scan_source("util/foo.rs", src);
+        assert_eq!(lints(&f), ["alloc-hot"], "collect flagged; cold fn untouched");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn no_alloc_allows_push_and_mem_take() {
+        let src = "\
+// audit: no-alloc\n\
+fn hot(out: &mut Vec<u32>, buf: &mut Vec<u32>) {\n\
+    let mut scratch = std::mem::take(buf);\n\
+    scratch.sort_unstable_by(|a, b| a.cmp(b));\n\
+    out.push(1);\n\
+    *buf = scratch;\n\
+}\n";
+        assert!(scan_source("util/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn no_alloc_respects_allow_annotations() {
+        let src = "\
+// audit: no-alloc\n\
+fn hot(xs: &[u32]) {\n\
+    // audit:allow(alloc): cold fallback path, measured on purpose\n\
+    let v = xs.to_vec();\n\
+    drop(v);\n\
+}\n";
+        assert!(scan_source("util/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn collect_as_plain_word_not_flagged() {
+        let src = "\
+// audit: no-alloc\n\
+fn hot(collector: &mut u32) {\n\
+    *collector += 1;\n\
+}\n";
+        assert!(scan_source("util/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_filtering() {
+        let empty = parse_baseline("[]\n").unwrap();
+        assert!(empty.is_empty());
+        let keys = parse_baseline("[\n  \"operator/foo.rs:det-hash\"\n]").unwrap();
+        assert_eq!(keys, ["operator/foo.rs:det-hash"]);
+        let findings = scan_source("operator/foo.rs", "use std::collections::HashMap;\n");
+        assert_eq!(findings.len(), 1);
+        assert!(apply_baseline(findings.clone(), &keys).is_empty());
+        assert_eq!(apply_baseline(findings, &empty).len(), 1);
+        assert!(parse_baseline("{\"not\": \"an array\"}").is_err());
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let f = scan_source("operator/foo.rs", "use std::collections::HashMap;\n");
+        let j = to_json(&f);
+        assert!(j.contains("\"count\": 1"));
+        assert!(j.contains("\"lint\": \"det-hash\""));
+        assert!(j.contains("\"file\": \"operator/foo.rs\""));
+        assert_eq!(to_json(&[]), "{\n  \"count\": 0,\n  \"findings\": []\n}\n");
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let src = "fn f() { let s = r#\"HashMap \"quoted\" partial_cmp\"#; \
+                   let c = '\\n'; let l: &'static str = s; }\n";
+        assert!(scan_source("operator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn finding_key_excludes_line_numbers() {
+        let f = scan_source("operator/foo.rs", "\n\nuse std::collections::HashMap;\n");
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].key(), "operator/foo.rs:det-hash");
+    }
+}

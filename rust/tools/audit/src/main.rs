@@ -1,0 +1,126 @@
+//! CLI for the invariant auditor.
+//!
+//! ```text
+//! cargo run -p pallas-audit                     # scan rust/src, human output
+//! cargo run -p pallas-audit -- --json           # machine-readable report
+//! cargo run -p pallas-audit -- --root path/src  # scan another tree
+//! cargo run -p pallas-audit -- --baseline b.json
+//! ```
+//!
+//! Exit codes: `0` clean, `1` unsuppressed findings, `2` usage or I/O
+//! error.  CI's `static-audit` job runs this with the committed (empty)
+//! baseline and fails the build on exit 1.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_audit::{apply_baseline, parse_baseline, scan_tree, to_json};
+
+struct Opts {
+    root: PathBuf,
+    json: bool,
+    baseline: Option<PathBuf>,
+}
+
+fn usage() -> &'static str {
+    "pallas-audit: static invariant scanner for the pSPICE reproduction\n\
+     \n\
+     usage: pallas-audit [--root DIR] [--baseline FILE.json] [--json]\n\
+     \n\
+     --root DIR        source tree to scan (default: the repo's rust/src)\n\
+     --baseline FILE   JSON array of \"file:lint\" keys to ignore\n\
+     --json            emit the machine-readable report on stdout\n"
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    // default root: rust/src relative to this crate's manifest
+    // (rust/tools/audit → ../../src), so `cargo run -p pallas-audit`
+    // does the right thing from anywhere in the workspace
+    let default_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let mut opts = Opts {
+        root: default_root,
+        json: false,
+        baseline: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let p = args.next().ok_or_else(|| "--root needs a path".to_string())?;
+                opts.root = PathBuf::from(p);
+            }
+            "--baseline" => {
+                let p = args
+                    .next()
+                    .ok_or_else(|| "--baseline needs a path".to_string())?;
+                opts.baseline = Some(PathBuf::from(p));
+            }
+            "--json" => opts.json = true,
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown argument: {other}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(msg) => {
+            if msg.is_empty() {
+                print!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("error: {msg}\n\n{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+
+    let baseline: Vec<String> = match &opts.baseline {
+        None => Vec::new(),
+        Some(p) => {
+            let text = match std::fs::read_to_string(p) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error: reading baseline {}: {e}", p.display());
+                    return ExitCode::from(2);
+                }
+            };
+            match parse_baseline(&text) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("error: parsing baseline {}: {e}", p.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let findings = match scan_tree(&opts.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: scanning {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let findings = apply_baseline(findings, &baseline);
+
+    if opts.json {
+        print!("{}", to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!(
+            "pallas-audit: {} finding{} in {}",
+            findings.len(),
+            if findings.len() == 1 { "" } else { "s" },
+            opts.root.display()
+        );
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

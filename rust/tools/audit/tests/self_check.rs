@@ -1,0 +1,153 @@
+//! Self-tests wiring the auditor to the real repository:
+//!
+//! 1. the committed baseline is empty and stays empty;
+//! 2. the live `rust/src` tree scans clean (zero unsuppressed
+//!    findings) — this runs under plain `cargo test`, so the invariant
+//!    gate fires in tier-1 CI, not just in the dedicated job;
+//! 3. an injected violation in a synthetic tree *is* caught, and the
+//!    binary exits non-zero on it — proof the CI gate fails red rather
+//!    than silently passing.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::Command;
+
+use pallas_audit::{parse_baseline, scan_tree};
+
+fn repo_src() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src")
+}
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("baseline.json")
+}
+
+#[test]
+fn committed_baseline_is_empty() {
+    let text = fs::read_to_string(baseline_path()).expect("baseline.json must exist");
+    let keys = parse_baseline(&text).expect("baseline.json must parse");
+    assert!(
+        keys.is_empty(),
+        "the committed baseline must stay empty: fix or annotate findings \
+         instead of baselining them (found {keys:?})"
+    );
+}
+
+#[test]
+fn repository_scans_clean() {
+    let findings = scan_tree(&repo_src()).expect("rust/src must be readable");
+    assert!(
+        findings.is_empty(),
+        "rust/src must have zero unsuppressed audit findings; either fix the \
+         code or add an `// audit:allow(<key>): <reason>` annotation:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// A scratch tree under the target dir (unique per test so parallel
+/// runs don't collide), cleaned up on drop.
+struct ScratchTree(PathBuf);
+
+impl ScratchTree {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-audit-selftest-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("operator")).expect("create scratch tree");
+        ScratchTree(dir)
+    }
+}
+
+impl Drop for ScratchTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn injected_hash_violation_is_caught() {
+    let tree = ScratchTree::new("lib");
+    fs::write(
+        tree.0.join("operator/fresh.rs"),
+        "use std::collections::HashMap;\n\
+         pub fn f() -> HashMap<u32, u32> { HashMap::new() }\n",
+    )
+    .expect("write injected violation");
+    // an innocent file next to it stays clean
+    fs::write(
+        tree.0.join("operator/clean.rs"),
+        "pub fn g(xs: &mut Vec<u32>) { xs.sort_unstable(); }\n",
+    )
+    .expect("write clean file");
+
+    let findings = scan_tree(&tree.0).expect("scan scratch tree");
+    assert!(
+        !findings.is_empty(),
+        "a fresh HashMap in operator/ must be flagged"
+    );
+    assert!(findings.iter().all(|f| f.lint.id() == "det-hash"));
+    assert!(findings.iter().all(|f| f.file == "operator/fresh.rs"));
+}
+
+#[test]
+fn binary_fails_red_on_injected_violation() {
+    let tree = ScratchTree::new("bin");
+    fs::write(
+        tree.0.join("operator/fresh.rs"),
+        "use std::collections::HashMap;\n",
+    )
+    .expect("write injected violation");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas-audit"))
+        .args(["--root"])
+        .arg(&tree.0)
+        .arg("--json")
+        .output()
+        .expect("run pallas-audit binary");
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "findings must exit 1 (stdout: {})",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"lint\": \"det-hash\""));
+    assert!(stdout.contains("operator/fresh.rs"));
+}
+
+#[test]
+fn binary_scans_the_real_tree_clean() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas-audit"))
+        .args(["--root"])
+        .arg(repo_src())
+        .args(["--baseline"])
+        .arg(baseline_path())
+        .output()
+        .expect("run pallas-audit binary");
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "rust/src must scan clean through the CLI (stdout: {})",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
+
+#[test]
+fn suppression_without_reason_fails_the_scan() {
+    let tree = ScratchTree::new("supp");
+    fs::write(
+        tree.0.join("operator/lazy.rs"),
+        "// audit:allow(hash-iter)\n\
+         use std::collections::HashSet;\n",
+    )
+    .expect("write reasonless suppression");
+    let findings = scan_tree(&tree.0).expect("scan scratch tree");
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].lint.id(), "bad-suppression");
+}

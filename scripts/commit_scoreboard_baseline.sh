@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Append CI's full-scale scoreboard ledger line to the committed
+# SCORECARD.jsonl — the one maintainer step the scoreboard-full job
+# cannot do itself (a CI bot must not write the append-only ledger;
+# see .github/workflows/ci.yml and EXPERIMENTS.md design note #5).
+#
+# Usage:
+#   scripts/commit_scoreboard_baseline.sh full_scorecard_line.jsonl
+#
+# where the argument is the `scoreboard-full-line` artifact downloaded
+# from a green `scoreboard-full` CI run on the commit being blessed.
+# The script validates the line (schema tag, non-smoke, single line,
+# parseable JSON, manifest hash present), refuses duplicates, appends
+# it, and leaves the git commit to the maintainer.
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+ledger="$repo_root/SCORECARD.jsonl"
+line_file="${1:?usage: $0 <full_scorecard_line.jsonl>}"
+
+[ -f "$line_file" ] || { echo "error: $line_file not found" >&2; exit 1; }
+
+lines=$(wc -l < "$line_file")
+if [ "$lines" -ne 1 ]; then
+    echo "error: expected exactly 1 ledger line in $line_file, got $lines" >&2
+    exit 1
+fi
+
+python3 - "$line_file" "$ledger" <<'EOF'
+import json, sys
+
+line_file, ledger = sys.argv[1], sys.argv[2]
+raw = open(line_file).read().strip()
+try:
+    entry = json.loads(raw)
+except json.JSONDecodeError as e:
+    sys.exit(f"error: artifact line is not valid JSON: {e}")
+
+schema = entry.get("schema")
+if schema != "pspice-scorecard-v1":
+    sys.exit(f"error: unknown schema tag {schema!r} (expected pspice-scorecard-v1)")
+if entry.get("smoke") is not False:
+    sys.exit("error: the committed baseline must be a FULL run (smoke: false); "
+             "this line is a smoke run")
+h = entry.get("manifest_hash", "")
+if not h.startswith("fnv1a:"):
+    sys.exit(f"error: malformed manifest_hash {h!r}")
+if not entry.get("cells"):
+    sys.exit("error: ledger line carries no cells")
+
+try:
+    existing = [json.loads(l) for l in open(ledger) if l.strip()]
+except FileNotFoundError:
+    existing = []
+for prev in existing:
+    if prev.get("manifest_hash") == h and prev.get("smoke") is False \
+            and prev.get("commit") == entry.get("commit"):
+        sys.exit(f"error: an identical baseline ({h} @ {entry.get('commit')}) "
+                 "is already committed")
+
+with open(ledger, "a") as f:
+    f.write(raw + "\n")
+print(f"appended full-grid baseline {h} (commit {entry.get('commit', '?')}, "
+      f"{len(entry['cells'])} cells) to SCORECARD.jsonl")
+print("next: git add SCORECARD.jsonl && git commit")
+EOF
